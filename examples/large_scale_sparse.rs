@@ -1,0 +1,49 @@
+//! Scalability demonstration on the RCV1-Large-style workload.
+//!
+//! This is the regime where the classical baselines hit the wall
+//! (Table II's asterisks): full-matrix exact-SVD SCC is infeasible; the
+//! partitioned pipeline streams through. The example sweeps matrix
+//! size, showing near-linear scaling of LAMC against the cubic-ish cost
+//! model of the classical baseline.
+//!
+//! ```text
+//! cargo run --release --example large_scale_sparse          # default sweep
+//! LAMC_ROWS=60000 cargo run --release --example large_scale_sparse
+//! ```
+
+use lamc::data::datasets;
+use lamc::harness::{estimated_flops, Method};
+use lamc::metrics::score_coclustering;
+use lamc::pipeline::{Lamc, LamcConfig};
+
+fn main() -> anyhow::Result<()> {
+    let sizes: Vec<usize> = match std::env::var("LAMC_ROWS") {
+        Ok(s) => vec![s.parse()?],
+        Err(_) => vec![5_000, 10_000, 20_000],
+    };
+
+    println!("{:<14} {:>10} {:>8} {:>9} {:>8} {:>8}  {}", "rows x cols", "nnz", "T_p", "time (s)", "NMI", "ARI", "SCC-exact est.");
+    for rows in sizes {
+        let ds = datasets::build("rcv1_large", Some(rows), 11).unwrap();
+        let lamc = Lamc::new(LamcConfig { k: 6, seed: 11, ..Default::default() });
+        let out = lamc.run(&ds.matrix)?;
+        let s = score_coclustering(&ds.row_labels, &out.row_labels, &ds.col_labels, &out.col_labels);
+        // What the classical baseline *would* cost (why it's starred).
+        let scc_flops = estimated_flops(Method::Scc, ds.matrix.rows(), ds.matrix.cols(), 6);
+        println!(
+            "{:<14} {:>10} {:>8} {:>9.3} {:>8.4} {:>8.4}  {:.2e} FLOPs ({})",
+            format!("{}x{}", ds.matrix.rows(), ds.matrix.cols()),
+            ds.matrix.nnz(),
+            out.plan.t_p,
+            out.elapsed_s,
+            s.nmi(),
+            s.ari(),
+            scc_flops,
+            if scc_flops > lamc::harness::budget_flops() { "infeasible: '*'" } else { "feasible" },
+        );
+    }
+    println!("\nMemory note: CSR storage keeps the 60000x2000 full dataset at ~");
+    println!("a few hundred MB; the dense equivalent would not fit the budget —");
+    println!("this is the 'Dependency on Sparse Matrices' challenge from §I.");
+    Ok(())
+}

@@ -1,0 +1,44 @@
+//! Topic discovery on a CLASSIC4-style document–term matrix.
+//!
+//! The workload the paper's intro motivates: co-clustering documents
+//! and terms simultaneously so each topic comes with its vocabulary.
+//! Compares the LAMC-PNMTF and LAMC-SCC atoms on the same corpus.
+//!
+//! ```text
+//! cargo run --release --example text_topics
+//! ```
+
+use lamc::data::datasets;
+use lamc::metrics::score_coclustering;
+use lamc::pipeline::{AtomKind, Lamc, LamcConfig};
+
+fn main() -> anyhow::Result<()> {
+    // A scaled CLASSIC4: 6000 documents x 1000 terms, ~1.5% non-zeros,
+    // 4 planted topics.
+    let ds = datasets::build("classic4", Some(6000), 7).unwrap();
+    println!(
+        "corpus: {} docs x {} terms, {:.2}% nnz, 4 topics\n",
+        ds.matrix.rows(),
+        ds.matrix.cols(),
+        100.0 * ds.matrix.nnz() as f64 / (ds.matrix.rows() * ds.matrix.cols()) as f64
+    );
+
+    for atom in [AtomKind::Scc, AtomKind::Pnmtf] {
+        let lamc = Lamc::new(LamcConfig { k: 4, atom, seed: 7, ..Default::default() });
+        let out = lamc.run(&ds.matrix)?;
+        let s = score_coclustering(&ds.row_labels, &out.row_labels, &ds.col_labels, &out.col_labels);
+        println!("LAMC-{atom:?}:");
+        println!("  plan      : {}x{} of {}x{} (T_p={})", out.plan.m, out.plan.n, out.plan.phi, out.plan.psi, out.plan.t_p);
+        println!("  topics    : {} found", out.k);
+        println!("  time      : {:.3} s ({})", out.elapsed_s, out.stats);
+        println!("  doc  NMI  : {:.4}  ARI {:.4}", s.row_nmi, s.row_ari);
+        println!("  term NMI  : {:.4}  ARI {:.4}", s.col_nmi, s.col_ari);
+
+        // Topic cards: document + vocabulary sizes per co-cluster.
+        for (i, c) in out.coclusters.iter().enumerate().take(6) {
+            println!("    topic {i}: {} docs, {} terms (consensus weight {})", c.rows.len(), c.cols.len(), c.weight);
+        }
+        println!();
+    }
+    Ok(())
+}

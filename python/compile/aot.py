@@ -1,0 +1,89 @@
+"""AOT lowering: JAX block graphs -> HLO text artifacts + manifest.
+
+Run once at build time (``make artifacts``); the rust runtime then loads
+``artifacts/*.hlo.txt`` through ``HloModuleProto::from_text_file`` and
+serves them forever. HLO *text* (never ``.serialize()``) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+that the image's xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts          # full variant set
+  python -m compile.aot --out-dir ../artifacts --quick  # small test set
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+KMAX = 8
+
+#: (name, kind, phi, psi, rank, iters). Shapes chosen to cover the
+#: partition planner's candidate grid: squares for dense workloads,
+#: tall rectangles for document-term blocks (phi >> psi).
+VARIANTS = [
+    ("scc_128", "scc_block", 128, 128, 6, 16),
+    ("scc_256", "scc_block", 256, 256, 6, 16),
+    ("scc_512", "scc_block", 512, 512, 6, 16),
+    ("scc_512x128", "scc_block", 512, 128, 6, 16),
+    ("scc_256x128", "scc_block", 256, 128, 6, 16),
+    ("pnmtf_128", "pnmtf_block", 128, 128, 8, 100),
+    ("pnmtf_256", "pnmtf_block", 256, 256, 8, 100),
+]
+
+QUICK_VARIANTS = [
+    ("scc_64", "scc_block", 64, 64, 4, 8),
+    ("pnmtf_64", "pnmtf_block", 64, 64, 8, 10),
+]
+
+
+def lower_to_hlo_text(fn, arg_specs) -> str:
+    """jit -> stablehlo -> XlaComputation -> HLO text (return_tuple)."""
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str, variants) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    for name, kind, phi, psi, rank, iters in variants:
+        fn, arg_specs = model.block_fn(kind, phi, psi, rank=rank, kmax=KMAX, iters=iters)
+        text = lower_to_hlo_text(fn, arg_specs)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {name:<14} {kind:<12} {phi:>4}x{psi:<4} -> {fname} ({len(text) / 1e6:.2f} MB)", flush=True)
+        rows.append((name, kind, phi, psi, rank, KMAX, iters, fname))
+
+    manifest = os.path.join(out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("name\tkind\tphi\tpsi\trank\tkmax\tkmeans_iters\tpath\n")
+        for r in rows:
+            f.write("\t".join(str(x) for x in r) + "\n")
+    print(f"wrote {manifest} ({len(rows)} artifacts)")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--out", default=None, help=argparse.SUPPRESS)  # legacy alias
+    parser.add_argument("--quick", action="store_true", help="emit the small test variants only")
+    args = parser.parse_args()
+    out_dir = args.out_dir
+    if args.out:  # legacy: --out path/model.hlo.txt
+        out_dir = os.path.dirname(args.out) or "."
+    emit(out_dir, QUICK_VARIANTS if args.quick else VARIANTS)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for the LAMC block co-clustering graph.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode is the correctness target
+on this image; real-TPU performance is estimated analytically from the
+BlockSpec tiling (DESIGN.md section Hardware-Adaptation / Perf).
+"""
+
+from .kmeans import kmeans_assign
+from .matmul import matmul
+from .normalize import bipartite_normalize
+
+__all__ = ["bipartite_normalize", "matmul", "kmeans_assign"]

@@ -1,0 +1,66 @@
+"""k-means assignment kernel: pairwise squared distances + masked argmin.
+
+Computes, for each embedding row ``z_i``, the nearest of ``kmax``
+centroids with clusters ``j ≥ k`` masked to +inf (the artifact supports
+any runtime ``k ≤ kmax`` from one compiled module).
+
+Uses the ``‖z−c‖² = ‖z‖² − 2 z·c + ‖c‖²`` expansion so the inner product
+is a single MXU-shaped ``(bm×l)·(l×kmax)`` dot per tile; the ``‖z‖²``
+term is dropped (constant per row — does not change the argmin) and
+added back by the caller only where the true distance is needed.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_kernel(z_ref, cent_ref, kmask_ref, lab_ref, dist_ref):
+    z = z_ref[...]                      # (bm, l)
+    cent = cent_ref[...]                # (kmax, l)
+    kmask = kmask_ref[...]              # (kmax,) 0/1 validity
+    dots = jnp.dot(z, cent.T, preferred_element_type=jnp.float32)  # (bm, kmax)
+    c2 = jnp.sum(cent * cent, axis=-1)  # (kmax,)
+    partial = c2[None, :] - 2.0 * dots  # ‖z‖² omitted: constant per row
+    masked = jnp.where(kmask[None, :] > 0, partial, jnp.inf)
+    lab_ref[...] = jnp.argmin(masked, axis=-1).astype(jnp.int32)
+    z2 = jnp.sum(z * z, axis=-1)
+    dist_ref[...] = jnp.min(masked, axis=-1) + z2
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def kmeans_assign(z, centroids, kmask, *, block_m: int = 256):
+    """Assign each row of ``z`` to its nearest valid centroid.
+
+    Args:
+      z: ``(n, l)`` embedding rows.
+      centroids: ``(kmax, l)``.
+      kmask: ``(kmax,)`` float mask, 1 for clusters ``< k`` else 0.
+
+    Returns:
+      ``(labels, sq_distances)`` with shapes ``(n,)``/``(n,)``.
+    """
+    n, l = z.shape
+    kmax = centroids.shape[0]
+    bm = min(block_m, n)
+    grid = (pl.cdiv(n, bm),)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, l), lambda i: (i, 0)),
+            pl.BlockSpec((kmax, l), lambda i: (0, 0)),
+            pl.BlockSpec((kmax,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(z, centroids, kmask)

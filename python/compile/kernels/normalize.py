@@ -1,0 +1,51 @@
+"""Bipartite spectral normalization kernel: ``A_n = diag(r) · A · diag(c)``.
+
+``r``/``c`` are the precomputed ``D^{-1/2}`` degree vectors. One fused
+elementwise pass, tiled so each grid step holds a ``(bm, bn)`` tile of A
+plus the matching vector slices in VMEM.
+
+TPU mapping: a 128×128 f32 tile is 64 KiB; with input + output + both
+vectors a grid step stays under 200 KiB of VMEM — comfortably
+double-bufferable against the ~16 MiB budget while the VPU does the two
+broadcast multiplies.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _normalize_kernel(a_ref, r_ref, c_ref, o_ref):
+    a = a_ref[...]
+    r = r_ref[...]
+    c = c_ref[...]
+    o_ref[...] = a * r[:, None] * c[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def bipartite_normalize(a, r, c, *, block_m: int = 128, block_n: int = 128):
+    """``a * r[:, None] * c[None, :]`` as a tiled Pallas kernel.
+
+    Args:
+      a: ``(m, n)`` block matrix.
+      r: ``(m,)`` row scaling (``D1^{-1/2}``).
+      c: ``(n,)`` column scaling (``D2^{-1/2}``).
+    """
+    m, n = a.shape
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    grid = (pl.cdiv(m, bm), pl.cdiv(n, bn))
+    return pl.pallas_call(
+        _normalize_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, r, c)

@@ -1,0 +1,230 @@
+"""Layer-2 JAX compute graphs: per-block co-clustering.
+
+Two graph families, one per atom method:
+
+* :func:`scc_block` — Dhillon-2001 spectral co-clustering of one
+  partition block: bipartite normalization (L1 kernel), randomized
+  subspace iteration with Newton-Schulz orthogonalization (L1 matmul
+  kernel), stacked embedding, masked k-means (L1 assignment kernel).
+* :func:`pnmtf_block` — non-negative matrix tri-factorization by
+  multiplicative updates, labels from factor argmax.
+
+Both are lowered AOT (``aot.py``) to HLO text executed by the rust
+runtime. Hard constraint discovered on this image (see DESIGN.md):
+the PJRT 0.5.1 loader rejects typed-FFI custom calls, so **nothing here
+may touch jnp.linalg.{qr,svd,cholesky} or triangular_solve** — all
+factorizations are expressed as matmuls (Newton-Schulz), which is also
+the natural MXU-friendly formulation on TPU.
+
+Artifact signature (shared by both graphs):
+  inputs : a f32[phi,psi], seed i32[1], k i32[1], init_idx i32[kmax],
+           dims i32[2]  (actual rows/cols before zero-padding)
+  outputs: (row_labels i32[phi], col_labels i32[psi], objective f32[1])
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import kernels
+
+_EPS = 1e-9
+
+
+def _inv_sqrt(d, eps=1e-12):
+    """d^{-1/2} with zero-degree entries (padding) mapped to 0."""
+    return jnp.where(d > eps, lax.rsqrt(jnp.maximum(d, eps)), 0.0)
+
+
+def newton_schulz_orthonormalize(y, iters: int = 12, ridge: float = 1e-6):
+    """Orthonormalize the columns of ``y`` using only matmuls.
+
+    Computes ``y @ (yᵀy)^{-1/2}`` via the Newton-Schulz iteration for the
+    inverse matrix square root. Replaces LAPACK QR, which cannot be
+    lowered for the PJRT 0.5.1 runtime, and maps onto the MXU as a chain
+    of small (l×l) matmuls.
+    """
+    l = y.shape[1]
+    g = jnp.dot(y.T, y, preferred_element_type=jnp.float32)
+    tr = jnp.trace(g) + ridge
+    gn = g / tr + ridge * jnp.eye(l, dtype=y.dtype)
+
+    def body(_, x):
+        t = x @ gn @ x
+        return 1.5 * x - 0.5 * (x @ t)
+
+    x = lax.fori_loop(0, iters, body, jnp.eye(l, dtype=y.dtype))
+    return y @ (x * lax.rsqrt(tr))
+
+
+def _validity_masks(phi, psi, dims):
+    rows_valid = (lax.iota(jnp.int32, phi) < dims[0]).astype(jnp.float32)
+    cols_valid = (lax.iota(jnp.int32, psi) < dims[1]).astype(jnp.float32)
+    return rows_valid, cols_valid
+
+
+def _masked_kmeans(z, valid, k, init_idx, kmax, iters):
+    """Lloyd iterations over ``z`` rows with padding + k masking.
+
+    Padded rows (``valid == 0``) participate in assignment (their labels
+    are cropped by the caller) but contribute nothing to centroid
+    updates or the inertia.
+    """
+    kmaskf = (lax.iota(jnp.int32, kmax) < k[0]).astype(jnp.float32)
+    cent0 = z[init_idx]  # (kmax, l) gather
+
+    def body(_, cent):
+        labels, _ = kernels.kmeans_assign(z, cent, kmaskf)
+        oh = jax.nn.one_hot(labels, kmax, dtype=jnp.float32) * valid[:, None]
+        counts = jnp.sum(oh, axis=0)
+        sums = jnp.dot(oh.T, z, preferred_element_type=jnp.float32)
+        return jnp.where(counts[:, None] > 0.5, sums / (counts[:, None] + _EPS), cent)
+
+    cent = lax.fori_loop(0, iters, body, cent0)
+    labels, dists = kernels.kmeans_assign(z, cent, kmaskf)
+    inertia = jnp.sum(dists * valid)
+    return labels, inertia
+
+
+def scc_block(a, seed, k, init_idx, dims, *, rank: int = 6, kmax: int = 8,
+              kmeans_iters: int = 16, power_iters: int = 4, ns_iters: int = 12):
+    """Spectral co-clustering of one zero-padded partition block."""
+    phi, psi = a.shape
+    rows_valid, cols_valid = _validity_masks(phi, psi, dims)
+    # Defensive: force padding to exact zero even if the host sent junk.
+    a = a * rows_valid[:, None] * cols_valid[None, :]
+
+    d1 = jnp.sum(a, axis=1)
+    d2 = jnp.sum(a, axis=0)
+    r = _inv_sqrt(d1)
+    c = _inv_sqrt(d2)
+    an = kernels.bipartite_normalize(a, r, c)
+
+    # Deflate the trivial leading singular pair (sigma_1 = 1,
+    # u1 = sqrt(d1)/||.||, v1 = sqrt(d2)/||.||): the remaining top
+    # subspace is exactly Dhillon's u_2..u_{l+1} / v_2..v_{l+1}.
+    s1 = jnp.sqrt(jnp.maximum(d1, 0.0))
+    s2 = jnp.sqrt(jnp.maximum(d2, 0.0))
+    u1 = s1 * lax.rsqrt(jnp.sum(s1 * s1) + _EPS)
+    v1 = s2 * lax.rsqrt(jnp.sum(s2 * s2) + _EPS)
+    ad = an - u1[:, None] * v1[None, :]
+
+    # Randomized subspace iteration for the top-`rank` left subspace.
+    key = jax.random.PRNGKey(seed[0])
+    g = jax.random.normal(key, (psi, rank), dtype=jnp.float32)
+    y = newton_schulz_orthonormalize(kernels.matmul(ad, g), iters=ns_iters)
+    adt = ad.T
+    for _ in range(power_iters):
+        w = newton_schulz_orthonormalize(kernels.matmul(adt, y), iters=ns_iters)
+        y = newton_schulz_orthonormalize(kernels.matmul(ad, w), iters=ns_iters)
+
+    # Right-side embedding ~ V Sigma; normalize columns to approximate V.
+    w = kernels.matmul(adt, y)
+    wnorm = lax.rsqrt(jnp.sum(w * w, axis=0) + _EPS)
+    w = w * wnorm[None, :]
+
+    # Dhillon's stacked embedding Z = [D1^{-1/2} U-hat ; D2^{-1/2} V-hat].
+    zu = y * r[:, None]
+    zv = w * c[:, None]
+    z = jnp.concatenate([zu, zv], axis=0)
+    valid = jnp.concatenate([rows_valid, cols_valid], axis=0)
+
+    labels, inertia = _masked_kmeans(z, valid, k, init_idx, kmax, kmeans_iters)
+    return (
+        labels[:phi].astype(jnp.int32),
+        labels[phi:].astype(jnp.int32),
+        inertia.reshape(1),
+    )
+
+
+def pnmtf_block(a, seed, k, init_idx, dims, *, rank: int = 8, kmax: int = 8,
+                iters: int = 30):
+    """Tri-factorization A ~ R S Cᵀ of one block by multiplicative updates.
+
+    ``rank`` is kept for signature parity with :func:`scc_block`; the
+    factor width is ``kmax`` with clusters >= k zero-masked (a zero
+    column stays zero under multiplicative updates).
+    """
+    phi, psi = a.shape
+    rows_valid, cols_valid = _validity_masks(phi, psi, dims)
+    a = a * rows_valid[:, None] * cols_valid[None, :]
+    kmaskf = (lax.iota(jnp.int32, kmax) < k[0]).astype(jnp.float32)
+
+    # PNMTF has no point-based init; fold init_idx into the PRNG stream
+    # so the input stays live (jit would otherwise prune the parameter,
+    # breaking the uniform 5-buffer artifact ABI the rust server uses).
+    key = jax.random.fold_in(jax.random.PRNGKey(seed[0]), init_idx[0])
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale = jnp.sqrt(jnp.sum(a * a) / (phi * psi) + _EPS)
+    r0 = jax.random.uniform(k1, (phi, kmax), minval=0.5, maxval=1.5) * scale
+    c0 = jax.random.uniform(k2, (psi, kmax), minval=0.5, maxval=1.5) * scale
+    s0 = jax.random.uniform(k3, (kmax, kmax), minval=0.5, maxval=1.5)
+    r0 = r0 * kmaskf[None, :] * rows_valid[:, None]
+    c0 = c0 * kmaskf[None, :] * cols_valid[:, None]
+    s0 = s0 * kmaskf[None, :] * kmaskf[:, None]
+
+    def body(_, rcs):
+        r, c, s = rcs
+        # R update
+        cst = jnp.dot(c, s.T, preferred_element_type=jnp.float32)
+        num_r = kernels.matmul(a, cst)
+        ctc = jnp.dot(c.T, c, preferred_element_type=jnp.float32)
+        den_r = r @ (s @ ctc @ s.T)
+        r = r * num_r / (den_r + _EPS)
+        # C update
+        rs = jnp.dot(r, s, preferred_element_type=jnp.float32)
+        num_c = kernels.matmul(a.T, rs)
+        rtr = jnp.dot(r.T, r, preferred_element_type=jnp.float32)
+        den_c = c @ (s.T @ rtr @ s)
+        c = c * num_c / (den_c + _EPS)
+        # S update
+        ac = kernels.matmul(a, c)
+        num_s = jnp.dot(r.T, ac, preferred_element_type=jnp.float32)
+        den_s = rtr @ s @ jnp.dot(c.T, c, preferred_element_type=jnp.float32)
+        s = s * num_s / (den_s + _EPS)
+        return (r, c, s)
+
+    r, c, s = lax.fori_loop(0, iters, body, (r0, c0, s0))
+
+    neg = jnp.float32(-1e30)
+    row_labels = jnp.argmax(jnp.where(kmaskf[None, :] > 0, r, neg), axis=1)
+    col_labels = jnp.argmax(jnp.where(kmaskf[None, :] > 0, c, neg), axis=1)
+
+    # ||A - R S Ct||^2 via the trace expansion (no phi x psi temp).
+    rs = jnp.dot(r, s, preferred_element_type=jnp.float32)
+    at_rs = kernels.matmul(a.T, rs)
+    cross = jnp.sum(at_rs * c)
+    ctc = jnp.dot(c.T, c, preferred_element_type=jnp.float32)
+    rst_rs = jnp.dot(rs.T, rs, preferred_element_type=jnp.float32)
+    recon2 = jnp.sum(rst_rs * ctc)
+    obj = jnp.maximum(jnp.sum(a * a) - 2.0 * cross + recon2, 0.0)
+
+    return (
+        row_labels.astype(jnp.int32),
+        col_labels.astype(jnp.int32),
+        obj.reshape(1),
+    )
+
+
+def block_fn(kind: str, phi: int, psi: int, *, rank: int, kmax: int, iters: int):
+    """Bind a block graph to static shapes for AOT lowering."""
+    if kind == "scc_block":
+        fn = functools.partial(scc_block, rank=rank, kmax=kmax, kmeans_iters=iters)
+    elif kind == "pnmtf_block":
+        fn = functools.partial(pnmtf_block, rank=rank, kmax=kmax, iters=iters)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+
+    def wrapped(a, seed, k, init_idx, dims):
+        return fn(a, seed, k, init_idx, dims)
+
+    arg_specs = (
+        jax.ShapeDtypeStruct((phi, psi), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.int32),
+        jax.ShapeDtypeStruct((kmax,), jnp.int32),
+        jax.ShapeDtypeStruct((2,), jnp.int32),
+    )
+    return wrapped, arg_specs

@@ -1,0 +1,65 @@
+"""AOT emission tests: HLO text validity + manifest integrity.
+
+The heavyweight check (rust loads + executes the HLO) lives in the rust
+integration suite; here we validate the python side of the contract.
+"""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def quick_dir():
+    with tempfile.TemporaryDirectory() as d:
+        aot.emit(d, aot.QUICK_VARIANTS)
+        yield d
+
+
+def test_emit_writes_all_variants(quick_dir):
+    names = {v[0] for v in aot.QUICK_VARIANTS}
+    for name in names:
+        path = os.path.join(quick_dir, f"{name}.hlo.txt")
+        assert os.path.exists(path), path
+        assert os.path.getsize(path) > 1000
+
+
+def test_manifest_schema(quick_dir):
+    manifest = os.path.join(quick_dir, "manifest.tsv")
+    with open(manifest) as f:
+        lines = f.read().strip().split("\n")
+    assert lines[0] == "name\tkind\tphi\tpsi\trank\tkmax\tkmeans_iters\tpath"
+    assert len(lines) == 1 + len(aot.QUICK_VARIANTS)
+    for line in lines[1:]:
+        cols = line.split("\t")
+        assert len(cols) == 8
+        assert cols[1] in ("scc_block", "pnmtf_block")
+        int(cols[2]), int(cols[3]), int(cols[4]), int(cols[5]), int(cols[6])
+        assert cols[7].endswith(".hlo.txt")
+
+
+def test_hlo_text_is_plain_hlo(quick_dir):
+    path = os.path.join(quick_dir, "scc_64.hlo.txt")
+    with open(path) as f:
+        text = f.read()
+    assert text.startswith("HloModule"), "must be HLO text, not proto bytes"
+    # The PJRT 0.5.1 loader rejects typed-FFI custom calls; the graphs
+    # must not contain any custom-call at all.
+    assert "custom-call" not in text, "graph leaked a custom-call (LAPACK?)"
+
+
+def test_lowering_is_deterministic():
+    fn, specs = model.block_fn("scc_block", 32, 32, rank=4, kmax=8, iters=4)
+    a = aot.lower_to_hlo_text(fn, specs)
+    b = aot.lower_to_hlo_text(fn, specs)
+    assert a == b
+
+
+def test_block_fn_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        model.block_fn("nope", 8, 8, rank=2, kmax=4, iters=2)

@@ -1,0 +1,154 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes/values; explicit cases pin the edge geometry
+(non-divisible tiles, single rows, masked clusters).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=1.0, nonneg=False):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(shape).astype(np.float32) * scale
+    if nonneg:
+        x = np.abs(x)
+    return jnp.asarray(x)
+
+
+# ---------------------------------------------------------------- normalize
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    n=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_normalize_matches_ref(m, n, seed):
+    a = rand((m, n), seed, nonneg=True)
+    r = rand((m,), seed + 1, nonneg=True)
+    c = rand((n,), seed + 2, nonneg=True)
+    got = kernels.bipartite_normalize(a, r, c)
+    want = ref.bipartite_normalize_ref(a, r, c)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(1, 1), (127, 129), (128, 128), (256, 64), (3, 500)])
+def test_normalize_edge_shapes(shape):
+    a = rand(shape, 7, nonneg=True)
+    r = rand((shape[0],), 8, nonneg=True)
+    c = rand((shape[1],), 9, nonneg=True)
+    np.testing.assert_allclose(
+        kernels.bipartite_normalize(a, r, c),
+        ref.bipartite_normalize_ref(a, r, c),
+        rtol=1e-6,
+    )
+
+
+def test_normalize_zero_rows_stay_zero():
+    a = jnp.ones((4, 4), jnp.float32)
+    r = jnp.array([1.0, 0.0, 1.0, 0.0], jnp.float32)
+    c = jnp.ones((4,), jnp.float32)
+    out = kernels.bipartite_normalize(a, r, c)
+    assert float(jnp.abs(out[1]).sum()) == 0.0
+    assert float(jnp.abs(out[3]).sum()) == 0.0
+
+
+def test_normalize_custom_block_sizes():
+    a = rand((200, 170), 11, nonneg=True)
+    r = rand((200,), 12, nonneg=True)
+    c = rand((170,), 13, nonneg=True)
+    for bm, bn in [(32, 32), (64, 128), (256, 256)]:
+        np.testing.assert_allclose(
+            kernels.bipartite_normalize(a, r, c, block_m=bm, block_n=bn),
+            ref.bipartite_normalize_ref(a, r, c),
+            rtol=1e-6,
+        )
+
+
+# ------------------------------------------------------------------ matmul
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 200),
+    n=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    a = rand((m, k), seed)
+    b = rand((k, n), seed + 1)
+    got = kernels.matmul(a, b)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 1), (129, 257, 6), (128, 128, 16), (500, 3, 2)])
+def test_matmul_edge_shapes(shape):
+    m, k, n = shape
+    a = rand((m, k), 21)
+    b = rand((k, n), 22)
+    np.testing.assert_allclose(kernels.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_identity():
+    a = rand((64, 64), 23)
+    eye = jnp.eye(64, dtype=jnp.float32)
+    np.testing.assert_allclose(kernels.matmul(a, eye), a, rtol=1e-6)
+
+
+def test_matmul_block_size_invariance():
+    a = rand((300, 90), 24)
+    b = rand((90, 8), 25)
+    want = ref.matmul_ref(a, b)
+    for bm in [16, 64, 128, 512]:
+        np.testing.assert_allclose(kernels.matmul(a, b, block_m=bm), want, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------- kmeans assign
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 300),
+    l=st.integers(1, 16),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kmeans_assign_matches_ref(n, l, k, seed):
+    kmax = 8
+    z = rand((n, l), seed)
+    cent = rand((kmax, l), seed + 1)
+    kmask = (jnp.arange(kmax) < k).astype(jnp.float32)
+    got_lab, got_d = kernels.kmeans_assign(z, cent, kmask)
+    want_lab, want_d = ref.kmeans_assign_ref(z, cent, kmask)
+    # Distances must agree; labels may differ only on exact ties.
+    np.testing.assert_allclose(got_d, want_d, rtol=1e-4, atol=1e-4)
+    ties = np.isclose(got_d, want_d, rtol=1e-4)
+    assert np.all((np.asarray(got_lab) == np.asarray(want_lab)) | ties)
+    assert int(jnp.max(got_lab)) < k
+
+
+def test_kmeans_assign_respects_mask():
+    z = jnp.zeros((5, 3), jnp.float32)
+    cent = jnp.stack([jnp.full((3,), 9.0), jnp.zeros(3), jnp.full((3,), 0.1)]).astype(jnp.float32)
+    cent = jnp.concatenate([cent, jnp.zeros((5, 3), jnp.float32)], axis=0)
+    # Only cluster 0 valid: everything must go there despite cluster 1
+    # being closer.
+    kmask = jnp.array([1, 0, 0, 0, 0, 0, 0, 0], jnp.float32)
+    lab, d = kernels.kmeans_assign(z, cent, kmask)
+    assert np.all(np.asarray(lab) == 0)
+    np.testing.assert_allclose(d, 9.0 * 9.0 * 3, rtol=1e-5)
+
+
+def test_kmeans_assign_exact_points():
+    z = jnp.array([[0.0, 0.0], [10.0, 0.0], [0.0, 10.0]], jnp.float32)
+    cent = jnp.concatenate([z, jnp.full((5, 2), 1e6, jnp.float32)], axis=0)
+    kmask = (jnp.arange(8) < 3).astype(jnp.float32)
+    lab, d = kernels.kmeans_assign(z, cent, kmask)
+    assert list(np.asarray(lab)) == [0, 1, 2]
+    np.testing.assert_allclose(d, 0.0, atol=1e-4)

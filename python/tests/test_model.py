@@ -1,0 +1,128 @@
+"""L2 model graph tests: structure recovery, masking, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+KMAX = 8
+
+
+def planted_block(phi, psi, k, seed=0, noise=0.05):
+    """Block with k diagonal co-clusters + ground-truth labels."""
+    rng = np.random.default_rng(seed)
+    rl = np.sort(rng.integers(0, k, phi))
+    cl = np.sort(rng.integers(0, k, psi))
+    a = np.full((phi, psi), 0.05, np.float32)
+    for t in range(k):
+        a[np.ix_(rl == t, cl == t)] = 1.0
+    a += noise * np.abs(rng.standard_normal((phi, psi)).astype(np.float32))
+    return jnp.asarray(a), rl, cl
+
+
+def args_for(phi, psi, k, seed=3):
+    return (
+        jnp.array([seed], jnp.int32),
+        jnp.array([k], jnp.int32),
+        jnp.arange(KMAX, dtype=jnp.int32) * max((phi + psi) // KMAX, 1),
+        jnp.array([phi, psi], jnp.int32),
+    )
+
+
+def agreement(pred, truth):
+    """Best-case label agreement via pairwise co-membership accuracy."""
+    pred = np.asarray(pred)
+    same_p = pred[:, None] == pred[None, :]
+    same_t = truth[:, None] == truth[None, :]
+    return float((same_p == same_t).mean())
+
+
+class TestSccBlock:
+    def test_recovers_planted_structure(self):
+        a, rl, cl = planted_block(96, 80, 3, seed=1)
+        seed, k, idx, dims = args_for(96, 80, 3)
+        row_lab, col_lab, inertia = model.scc_block(a, seed, k, idx, dims, rank=4, kmax=KMAX, kmeans_iters=12)
+        assert agreement(row_lab, rl) > 0.9
+        assert agreement(col_lab, cl) > 0.9
+        assert float(inertia[0]) >= 0.0
+
+    def test_labels_bounded_by_k(self):
+        a, _, _ = planted_block(64, 64, 2, seed=2)
+        seed, k, idx, dims = args_for(64, 64, 2)
+        row_lab, col_lab, _ = model.scc_block(a, seed, k, idx, dims, rank=4, kmax=KMAX)
+        assert int(jnp.max(row_lab)) < 2
+        assert int(jnp.max(col_lab)) < 2
+
+    def test_padding_is_inert(self):
+        # Same data, once exact and once zero-padded: labels on the
+        # real region must have identical co-membership structure.
+        a, rl, _ = planted_block(48, 40, 2, seed=3)
+        seed, k, idx, dims = args_for(48, 40, 2)
+        row_a, col_a, _ = model.scc_block(a, seed, k, idx, dims, rank=4, kmax=KMAX)
+        pad = jnp.zeros((64, 64), jnp.float32).at[:48, :40].set(a)
+        dims_p = jnp.array([48, 40], jnp.int32)
+        row_b, col_b, _ = model.scc_block(pad, seed, k, idx, dims_p, rank=4, kmax=KMAX)
+        assert agreement(np.asarray(row_b)[:48], np.asarray(row_a)) > 0.95
+        assert agreement(np.asarray(col_b)[:40], np.asarray(col_a)) > 0.95
+
+    def test_deterministic(self):
+        a, _, _ = planted_block(64, 64, 3, seed=4)
+        seed, k, idx, dims = args_for(64, 64, 3)
+        out1 = model.scc_block(a, seed, k, idx, dims, rank=4, kmax=KMAX)
+        out2 = model.scc_block(a, seed, k, idx, dims, rank=4, kmax=KMAX)
+        np.testing.assert_array_equal(out1[0], out2[0])
+        np.testing.assert_array_equal(out1[1], out2[1])
+
+    def test_outputs_finite_on_degenerate_input(self):
+        a = jnp.zeros((32, 32), jnp.float32)
+        seed, k, idx, dims = args_for(32, 32, 2)
+        row_lab, col_lab, inertia = model.scc_block(a, seed, k, idx, dims, rank=4, kmax=KMAX)
+        assert np.all(np.asarray(row_lab) >= 0)
+        assert np.isfinite(float(inertia[0]))
+
+
+class TestPnmtfBlock:
+    def test_recovers_planted_structure(self):
+        a, rl, cl = planted_block(80, 70, 3, seed=5)
+        seed, k, idx, dims = args_for(80, 70, 3)
+        row_lab, col_lab, obj = model.pnmtf_block(a, seed, k, idx, dims, kmax=KMAX, iters=200)
+        assert agreement(row_lab, rl) > 0.8
+        assert agreement(col_lab, cl) > 0.8
+        assert float(obj[0]) >= 0.0
+
+    def test_objective_decreases_with_iterations(self):
+        a, _, _ = planted_block(48, 48, 2, seed=6)
+        seed, k, idx, dims = args_for(48, 48, 2)
+        _, _, o_short = model.pnmtf_block(a, seed, k, idx, dims, kmax=KMAX, iters=2)
+        _, _, o_long = model.pnmtf_block(a, seed, k, idx, dims, kmax=KMAX, iters=200)
+        assert float(o_long[0]) <= float(o_short[0]) * 1.01
+
+    def test_labels_bounded_by_k(self):
+        a, _, _ = planted_block(40, 40, 2, seed=7)
+        seed, k, idx, dims = args_for(40, 40, 2)
+        row_lab, col_lab, _ = model.pnmtf_block(a, seed, k, idx, dims, kmax=KMAX, iters=15)
+        assert int(jnp.max(row_lab)) < 2
+        assert int(jnp.max(col_lab)) < 2
+
+
+class TestNewtonSchulz:
+    @pytest.mark.parametrize("shape", [(50, 3), (128, 8), (30, 1)])
+    def test_orthonormalizes(self, shape):
+        rng = np.random.default_rng(8)
+        y = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+        q = model.newton_schulz_orthonormalize(y, iters=16)
+        g = np.asarray(jnp.dot(q.T, q))
+        np.testing.assert_allclose(g, np.eye(shape[1]), atol=5e-2)
+
+    def test_preserves_column_space(self):
+        rng = np.random.default_rng(9)
+        y = jnp.asarray(rng.standard_normal((40, 4)).astype(np.float32))
+        q = np.asarray(model.newton_schulz_orthonormalize(y, iters=16))
+        # q columns must lie in span(y): residual of projection ~ 0.
+        yn = np.asarray(y)
+        proj = yn @ np.linalg.lstsq(yn, q, rcond=None)[0]
+        np.testing.assert_allclose(proj, q, atol=1e-3)

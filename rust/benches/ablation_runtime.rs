@@ -1,0 +1,67 @@
+//! Ablation A3: PJRT artifact route vs native Rust route, per-block.
+//!
+//! Measures the per-block latency of both execution routes on
+//! artifact-shaped blocks, plus the padding overhead of routing an
+//! odd-shaped block through the nearest larger artifact.
+
+use std::sync::Arc;
+
+use lamc::bench_util::{bench, Table};
+use lamc::cocluster::{AtomCocluster, SpectralCocluster};
+use lamc::data::synthetic::{planted_dense, PlantedConfig};
+use lamc::matrix::Matrix;
+use lamc::rng::Xoshiro256;
+use lamc::runtime::{Manifest, RuntimePool, RuntimePoolConfig};
+
+fn main() {
+    let Some(path) = lamc::runtime::find_manifest() else {
+        println!("SKIP: run `make artifacts` first");
+        return;
+    };
+    let manifest = Manifest::load(&path).unwrap();
+    let pool = RuntimePool::start(manifest, RuntimePoolConfig { servers: 1 }).unwrap();
+    let native = SpectralCocluster::default();
+
+    println!("== Ablation: execution route latency per block ==\n");
+    let mut table = Table::new(&["block", "route", "median", "notes"]);
+    for (r, c) in [(128usize, 128usize), (256, 256), (200, 190), (512, 512)] {
+        let ds = planted_dense(&PlantedConfig {
+            rows: r,
+            cols: c,
+            row_clusters: 4,
+            col_clusters: 4,
+            noise: 0.1,
+            signal: 1.5,
+            seed: 7001,
+            ..Default::default()
+        });
+        let block = ds.matrix.to_dense();
+
+        if let Some(spec) = pool.spec_for("scc_block", r, c, 4) {
+            let pool2 = Arc::clone(&pool);
+            let spec2 = Arc::clone(&spec);
+            let block2 = block.clone();
+            let t = bench(1, 5, move || {
+                pool2.execute(Arc::clone(&spec2), block2.clone(), 4, 7).unwrap();
+            });
+            let pad = (spec.phi * spec.psi) as f64 / (r * c) as f64;
+            table.row(&[
+                format!("{r}x{c}"),
+                format!("pjrt ({})", spec.name),
+                t.format(),
+                format!("pad factor {pad:.2}"),
+            ]);
+        }
+
+        let m = Matrix::Dense(block.clone());
+        let t = bench(1, 5, || {
+            let mut rng = Xoshiro256::seed_from(7);
+            native.cocluster(&m, 4, &mut rng);
+        });
+        table.row(&[format!("{r}x{c}"), "native".into(), t.format(), String::new()]);
+    }
+    println!("{}", table.render());
+    println!("Note: the pjrt route runs the AOT-compiled JAX/Pallas graph (interpret-mode");
+    println!("Pallas on CPU); on a real TPU the same artifact lowers to MXU kernels —");
+    println!("see DESIGN.md §Hardware-Adaptation for the roofline estimate.");
+}

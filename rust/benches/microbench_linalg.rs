@@ -1,0 +1,71 @@
+//! Microbenchmarks of the linalg substrate (the native-route hot path).
+//!
+//! Used by the §Perf iteration loop: changes to the GEMM/SVD/QR kernels
+//! are accepted only when these medians improve.
+
+use lamc::bench_util::{bench, Table};
+use lamc::linalg::{jacobi_svd, matmul, matmul_at_b, qr_thin, randomized_svd};
+use lamc::matrix::{CsrMatrix, DenseMatrix, Matrix};
+use lamc::rng::Xoshiro256;
+
+fn main() {
+    let mut rng = Xoshiro256::seed_from(0xBE7C);
+    println!("== linalg microbenches (LAMC_THREADS={}) ==\n", lamc::linalg::matmul_threads());
+    let mut table = Table::new(&["op", "shape", "median", "GFLOP/s"]);
+
+    // GEMM square.
+    for n in [128usize, 256, 512, 1024] {
+        let a = DenseMatrix::randn(n, n, &mut rng);
+        let b = DenseMatrix::randn(n, n, &mut rng);
+        let t = bench(1, 5, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / t.median_s / 1e9;
+        table.row(&["gemm".into(), format!("{n}x{n}x{n}"), t.format(), format!("{gflops:.2}")]);
+    }
+
+    // Skinny AtB (sketch contraction).
+    let a = DenseMatrix::randn(4096, 512, &mut rng);
+    let b = DenseMatrix::randn(4096, 8, &mut rng);
+    let t = bench(1, 5, || {
+        std::hint::black_box(matmul_at_b(&a, &b));
+    });
+    let gflops = 2.0 * 4096.0 * 512.0 * 8.0 / t.median_s / 1e9;
+    table.row(&["gemm AᵀB".into(), "4096x512x8".into(), t.format(), format!("{gflops:.2}")]);
+
+    // QR.
+    let a = DenseMatrix::randn(2048, 12, &mut rng);
+    let t = bench(1, 5, || {
+        std::hint::black_box(qr_thin(&a));
+    });
+    table.row(&["qr_thin".into(), "2048x12".into(), t.format(), "-".into()]);
+
+    // Randomized SVD dense + sparse.
+    let dense = Matrix::Dense(DenseMatrix::randn(1024, 512, &mut rng));
+    let t = bench(1, 3, || {
+        let mut r = Xoshiro256::seed_from(1);
+        std::hint::black_box(randomized_svd(&dense, 6, 6, 3, &mut r));
+    });
+    table.row(&["rsvd k=6".into(), "1024x512 dense".into(), t.format(), "-".into()]);
+
+    let mut trips = Vec::new();
+    let mut r2 = Xoshiro256::seed_from(2);
+    for _ in 0..(4096 * 80) {
+        trips.push((r2.next_below(4096), r2.next_below(1024), r2.next_f32()));
+    }
+    let sparse = Matrix::Sparse(CsrMatrix::from_triplets(4096, 1024, trips));
+    let t = bench(1, 3, || {
+        let mut r = Xoshiro256::seed_from(1);
+        std::hint::black_box(randomized_svd(&sparse, 6, 6, 3, &mut r));
+    });
+    table.row(&["rsvd k=6".into(), "4096x1024 2% nnz".into(), t.format(), "-".into()]);
+
+    // Exact Jacobi (the baseline's wall).
+    let a = DenseMatrix::randn(256, 256, &mut rng);
+    let t = bench(0, 3, || {
+        std::hint::black_box(jacobi_svd(&a, 30, 1e-10));
+    });
+    table.row(&["jacobi_svd".into(), "256x256".into(), t.format(), "-".into()]);
+
+    println!("{}", table.render());
+}

@@ -1,0 +1,137 @@
+//! Benchmark harness (criterion is not available offline — see DESIGN.md).
+//!
+//! Provides warmup + repeated timing with median/mean/min reporting and
+//! a tiny table printer used by the Table II/III reproduction benches.
+
+use std::time::Instant;
+
+/// Timing summary over repeated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub runs: usize,
+}
+
+impl Timing {
+    pub fn format(&self) -> String {
+        if self.median_s >= 1.0 {
+            format!("{:.3} s (min {:.3}, n={})", self.median_s, self.min_s, self.runs)
+        } else {
+            format!("{:.3} ms (min {:.3}, n={})", self.median_s * 1e3, self.min_s * 1e3, self.runs)
+        }
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `runs` measured runs.
+pub fn bench<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(runs.max(1));
+    for _ in 0..runs.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    Timing {
+        median_s: samples[n / 2],
+        mean_s: samples.iter().sum::<f64>() / n as f64,
+        min_s: samples[0],
+        max_s: samples[n - 1],
+        runs: n,
+    }
+}
+
+/// Time one run of `f`, returning (result, seconds).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed().as_secs_f64())
+}
+
+/// Fixed-width table printer for bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push_str(&widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_ordered_stats() {
+        let t = bench(1, 5, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(t.min_s <= t.median_s && t.median_s <= t.max_s);
+        assert_eq!(t.runs, 5);
+    }
+
+    #[test]
+    fn time_once_returns_result() {
+        let (v, s) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "2".into()]);
+        let out = t.render();
+        assert!(out.contains("long-name"));
+        assert_eq!(out.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_checks_arity() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

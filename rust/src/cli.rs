@@ -1,0 +1,144 @@
+//! Command-line argument parsing (dependency-free `clap` substitute).
+//!
+//! Grammar: `lamc <command> [--flag value]... [--switch]...`
+//! Commands and flags are declared by the binary; this module handles
+//! tokenizing, lookup, typed access, and usage errors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    /// `switch_names` lists flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, switch_names: &[&str]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if switch_names.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else {
+                    let v = iter
+                        .next()
+                        .with_context(|| format!("flag --{name} expects a value"))?;
+                    out.flags.insert(name.to_string(), v);
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(switch_names: &[&str]) -> Result<Self> {
+        Self::parse(std::env::args().skip(1), switch_names)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.flags.get(flag).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, flag: &str, default: &'a str) -> &'a str {
+        self.get(flag).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, flag: &str, default: usize) -> Result<usize> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{flag} = {v} is not an integer")),
+        }
+    }
+
+    pub fn get_f64(&self, flag: &str, default: f64) -> Result<f64> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{flag} = {v} is not a float")),
+        }
+    }
+
+    pub fn get_u64(&self, flag: &str, default: u64) -> Result<u64> {
+        match self.get(flag) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{flag} = {v} is not an integer")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error if any unknown flags were passed.
+    pub fn expect_flags(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string), &["verbose", "sparse"]).unwrap()
+    }
+
+    #[test]
+    fn full_grammar() {
+        let a = parse("run --dataset classic4 --k=4 --verbose extra");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get("dataset"), Some("classic4"));
+        assert_eq!(a.get_usize("k", 0).unwrap(), 4);
+        assert!(a.has("verbose"));
+        assert!(!a.has("sparse"));
+        assert_eq!(a.positional(), &["extra".to_string()]);
+    }
+
+    #[test]
+    fn defaults_and_types() {
+        let a = parse("bench --p 0.95");
+        assert_eq!(a.get_f64("p", 0.5).unwrap(), 0.95);
+        assert_eq!(a.get_f64("missing", 0.5).unwrap(), 0.5);
+        assert_eq!(a.get_u64("seed", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(["run".into(), "--k".into()], &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn bad_type_is_error() {
+        let a = parse("run --k nope");
+        assert!(a.get_usize("k", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = parse("run --k 3 --oops 1");
+        assert!(a.expect_flags(&["k"]).is_err());
+        assert!(a.expect_flags(&["k", "oops"]).is_ok());
+    }
+}

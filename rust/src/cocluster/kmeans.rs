@@ -1,0 +1,207 @@
+//! Lloyd's k-means with k-means++ seeding.
+//!
+//! Shared by the spectral atom (cluster the stacked embedding `Z`) and
+//! the hierarchical merger (cluster residual ids by profile similarity).
+
+use crate::matrix::DenseMatrix;
+use crate::rng::Xoshiro256;
+
+#[derive(Clone, Debug)]
+pub struct KmeansConfig {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Stop when relative inertia improvement drops below this.
+    pub tol: f64,
+    /// Independent restarts; best inertia wins.
+    pub restarts: usize,
+}
+
+impl Default for KmeansConfig {
+    fn default() -> Self {
+        Self { k: 4, max_iters: 50, tol: 1e-6, restarts: 3 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    pub labels: Vec<usize>,
+    pub centroids: DenseMatrix,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// Squared Euclidean distance between a point row and centroid row.
+#[inline]
+fn sqdist(p: &[f32], c: &[f32]) -> f64 {
+    p.iter().zip(c).map(|(&a, &b)| {
+        let d = a as f64 - b as f64;
+        d * d
+    }).sum()
+}
+
+/// k-means++ seeding (Arthur & Vassilvitskii 2007).
+fn seed_pp(points: &DenseMatrix, k: usize, rng: &mut Xoshiro256) -> DenseMatrix {
+    let n = points.rows();
+    let dim = points.cols();
+    let mut centroids = DenseMatrix::zeros(k, dim);
+    let first = rng.next_below(n);
+    centroids.row_mut(0).copy_from_slice(points.row(first));
+    let mut d2: Vec<f64> = (0..n).map(|i| sqdist(points.row(i), centroids.row(0))).collect();
+    for c in 1..k {
+        let idx = rng.sample_weighted(&d2);
+        centroids.row_mut(c).copy_from_slice(points.row(idx));
+        for i in 0..n {
+            let nd = sqdist(points.row(i), centroids.row(c));
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+        }
+    }
+    centroids
+}
+
+fn lloyd(points: &DenseMatrix, k: usize, cfg: &KmeansConfig, rng: &mut Xoshiro256) -> KmeansResult {
+    let n = points.rows();
+    let dim = points.cols();
+    let mut centroids = seed_pp(points, k, rng);
+    let mut labels = vec![0usize; n];
+    let mut inertia = f64::INFINITY;
+    let mut iterations = 0;
+    for it in 0..cfg.max_iters {
+        iterations = it + 1;
+        // Assign.
+        let mut new_inertia = 0.0f64;
+        for i in 0..n {
+            let p = points.row(i);
+            let (mut best, mut best_d) = (0usize, f64::INFINITY);
+            for c in 0..k {
+                let d = sqdist(p, centroids.row(c));
+                if d < best_d {
+                    best = c;
+                    best_d = d;
+                }
+            }
+            labels[i] = best;
+            new_inertia += best_d;
+        }
+        // Update.
+        let mut sums = DenseMatrix::zeros(k, dim);
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            counts[labels[i]] += 1;
+            let src = points.row(i);
+            let dst = sums.row_mut(labels[i]);
+            for t in 0..dim {
+                dst[t] += src[t];
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed empty cluster at the point farthest from its centroid.
+                let far = (0..n).max_by(|&a, &b| {
+                    sqdist(points.row(a), centroids.row(labels[a]))
+                        .partial_cmp(&sqdist(points.row(b), centroids.row(labels[b])))
+                        .unwrap()
+                }).unwrap();
+                centroids.row_mut(c).copy_from_slice(points.row(far));
+                continue;
+            }
+            let inv = 1.0 / counts[c] as f32;
+            let src = sums.row(c).to_vec();
+            let dst = centroids.row_mut(c);
+            for t in 0..dim {
+                dst[t] = src[t] * inv;
+            }
+        }
+        // Converged?
+        if inertia.is_finite() && (inertia - new_inertia).abs() <= cfg.tol * inertia.max(1e-30) {
+            inertia = new_inertia;
+            break;
+        }
+        inertia = new_inertia;
+    }
+    KmeansResult { labels, centroids, inertia, iterations }
+}
+
+/// Run k-means with restarts; returns the best run by inertia.
+pub fn kmeans(points: &DenseMatrix, cfg: &KmeansConfig, rng: &mut Xoshiro256) -> KmeansResult {
+    assert!(cfg.k >= 1, "k must be positive");
+    assert!(points.rows() >= cfg.k, "need at least k points, got {} for k={}", points.rows(), cfg.k);
+    let mut best: Option<KmeansResult> = None;
+    for _ in 0..cfg.restarts.max(1) {
+        let run = lloyd(points, cfg.k, cfg, rng);
+        if best.as_ref().map_or(true, |b| run.inertia < b.inertia) {
+            best = Some(run);
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(centers: &[(f32, f32)], per: usize, spread: f32, rng: &mut Xoshiro256) -> (DenseMatrix, Vec<usize>) {
+        let n = centers.len() * per;
+        let mut m = DenseMatrix::zeros(n, 2);
+        let mut truth = Vec::with_capacity(n);
+        for (c, &(cx, cy)) in centers.iter().enumerate() {
+            for i in 0..per {
+                let idx = c * per + i;
+                m.set(idx, 0, cx + spread * rng.next_normal() as f32);
+                m.set(idx, 1, cy + spread * rng.next_normal() as f32);
+                truth.push(c);
+            }
+        }
+        (m, truth)
+    }
+
+    #[test]
+    fn separable_blobs_recovered() {
+        let mut rng = Xoshiro256::seed_from(91);
+        let (pts, truth) = blobs(&[(0.0, 0.0), (10.0, 0.0), (0.0, 10.0)], 40, 0.4, &mut rng);
+        let out = kmeans(&pts, &KmeansConfig { k: 3, ..Default::default() }, &mut rng);
+        let nmi = crate::metrics::normalized_mutual_information(&truth, &out.labels);
+        assert!(nmi > 0.99, "nmi {nmi}");
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let mut rng = Xoshiro256::seed_from(92);
+        let (pts, _) = blobs(&[(0.0, 0.0), (5.0, 5.0)], 50, 1.0, &mut rng);
+        let i1 = kmeans(&pts, &KmeansConfig { k: 1, ..Default::default() }, &mut rng).inertia;
+        let i2 = kmeans(&pts, &KmeansConfig { k: 2, ..Default::default() }, &mut rng).inertia;
+        let i4 = kmeans(&pts, &KmeansConfig { k: 4, ..Default::default() }, &mut rng).inertia;
+        assert!(i1 > i2 && i2 > i4, "{i1} {i2} {i4}");
+    }
+
+    #[test]
+    fn k_equals_n_gives_zero_inertia() {
+        let mut rng = Xoshiro256::seed_from(93);
+        let (pts, _) = blobs(&[(0.0, 0.0), (9.0, 9.0), (0.0, 9.0), (9.0, 0.0)], 1, 0.0, &mut rng);
+        let out = kmeans(&pts, &KmeansConfig { k: 4, restarts: 5, ..Default::default() }, &mut rng);
+        assert!(out.inertia < 1e-9);
+    }
+
+    #[test]
+    fn labels_in_range_and_every_cluster_used_on_blobs() {
+        let mut rng = Xoshiro256::seed_from(94);
+        let (pts, _) = blobs(&[(0.0, 0.0), (8.0, 8.0)], 30, 0.5, &mut rng);
+        let out = kmeans(&pts, &KmeansConfig { k: 2, ..Default::default() }, &mut rng);
+        assert!(out.labels.iter().all(|&l| l < 2));
+        assert!(out.labels.contains(&0) && out.labels.contains(&1));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Xoshiro256::seed_from(95);
+        let mut r2 = Xoshiro256::seed_from(95);
+        let (pts, _) = blobs(&[(0.0, 0.0), (6.0, 6.0)], 25, 0.8, &mut r1);
+        let mut r1b = Xoshiro256::seed_from(96);
+        let mut r2b = Xoshiro256::seed_from(96);
+        let (pts2, _) = blobs(&[(0.0, 0.0), (6.0, 6.0)], 25, 0.8, &mut r2);
+        let a = kmeans(&pts, &KmeansConfig::default(), &mut r1b);
+        let b = kmeans(&pts2, &KmeansConfig::default(), &mut r2b);
+        assert_eq!(a.labels, b.labels);
+    }
+}

@@ -1,0 +1,73 @@
+//! Atom co-clustering algorithms.
+//!
+//! LAMC is atom-method agnostic (§IV-C.1 of the paper): any algorithm
+//! that maps a (sub)matrix to row + column labels can plug into the
+//! partition/merge framework. This module ships the two atoms the paper
+//! evaluates — spectral co-clustering ([`scc`], Dhillon 2001) and
+//! parallel non-negative matrix tri-factorization ([`pnmtf`], Chen et
+//! al. 2023 style) — plus the shared k-means engine.
+
+pub mod kmeans;
+pub mod pnmtf;
+pub mod scc;
+
+use crate::matrix::Matrix;
+use crate::rng::Xoshiro256;
+
+pub use kmeans::{kmeans, KmeansConfig, KmeansResult};
+pub use pnmtf::{Pnmtf, PnmtfConfig};
+pub use scc::{SpectralCocluster, SpectralConfig};
+
+/// Output of one co-clustering run: a label per row and per column.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoclusterResult {
+    pub row_labels: Vec<usize>,
+    pub col_labels: Vec<usize>,
+    /// Number of co-clusters the labels range over.
+    pub k: usize,
+    /// Algorithm-specific objective (inertia for SCC's k-means stage,
+    /// reconstruction error for PNMTF). Lower is better; used by the
+    /// merger to weight votes.
+    pub objective: f64,
+}
+
+impl CoclusterResult {
+    /// Basic structural validation (used by tests & the coordinator).
+    pub fn validate(&self, rows: usize, cols: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.row_labels.len() == rows, "row label count");
+        anyhow::ensure!(self.col_labels.len() == cols, "col label count");
+        anyhow::ensure!(
+            self.row_labels.iter().chain(&self.col_labels).all(|&l| l < self.k),
+            "label out of range"
+        );
+        Ok(())
+    }
+}
+
+/// An atom co-clusterer: matrix → co-clustering with `k` clusters.
+///
+/// Implementations must be deterministic given the `rng` stream so the
+/// whole pipeline is reproducible from one seed.
+pub trait AtomCocluster: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn cocluster(&self, a: &Matrix, k: usize, rng: &mut Xoshiro256) -> CoclusterResult;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_catches_bad_shapes() {
+        let r = CoclusterResult { row_labels: vec![0, 1], col_labels: vec![0], k: 2, objective: 0.0 };
+        assert!(r.validate(2, 1).is_ok());
+        assert!(r.validate(3, 1).is_err());
+        assert!(r.validate(2, 2).is_err());
+    }
+
+    #[test]
+    fn validate_catches_label_overflow() {
+        let r = CoclusterResult { row_labels: vec![0, 5], col_labels: vec![0], k: 2, objective: 0.0 };
+        assert!(r.validate(2, 1).is_err());
+    }
+}

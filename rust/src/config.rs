@@ -1,0 +1,171 @@
+//! Minimal configuration system (TOML-subset, dependency-free).
+//!
+//! Supports the subset the launcher needs: `key = value` pairs, `[section]`
+//! headers, strings, integers, floats, booleans, and `#` comments.
+//! Values are stored flat as `section.key` strings with typed getters.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed configuration: flat `section.key → raw value` map.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section header: {raw}", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected key = value: {raw}", lineno + 1);
+            };
+            let key = line[..eq].trim();
+            let mut value = line[eq + 1..].trim().to_string();
+            if value.len() >= 2 && ((value.starts_with('"') && value.ends_with('"')) || (value.starts_with('\'') && value.ends_with('\''))) {
+                value = value[1..value.len() - 1].to_string();
+            }
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            values.insert(full, value);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read config {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    /// Override / insert a raw value (CLI `--set section.key=value`).
+    pub fn set(&mut self, key: &str, value: &str) {
+        self.values.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.values
+            .get(key)
+            .map(|v| v.parse::<usize>().with_context(|| format!("{key} = {v} is not an integer")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.values
+            .get(key)
+            .map(|v| v.parse::<f64>().with_context(|| format!("{key} = {v} is not a float")))
+            .transpose()
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        self.values
+            .get(key)
+            .map(|v| match v.as_str() {
+                "true" | "yes" | "1" => Ok(true),
+                "false" | "no" | "0" => Ok(false),
+                other => bail!("{key} = {other} is not a boolean"),
+            })
+            .transpose()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    let mut quote = ' ';
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' | '\'' if !in_str => {
+                in_str = true;
+                quote = ch;
+            }
+            c if in_str && c == quote => in_str = false,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+seed = 42
+name = "lamc run"   # trailing comment
+
+[partition]
+p_thresh = 0.95
+max_samplings = 16
+use_lsh = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_usize("seed").unwrap(), Some(42));
+        assert_eq!(c.get_str("name"), Some("lamc run"));
+        assert_eq!(c.get_f64("partition.p_thresh").unwrap(), Some(0.95));
+        assert_eq!(c.get_usize("partition.max_samplings").unwrap(), Some(16));
+        assert_eq!(c.get_bool("partition.use_lsh").unwrap(), Some(true));
+    }
+
+    #[test]
+    fn missing_keys_are_none() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_str("nope"), None);
+        assert_eq!(c.get_usize("also.nope").unwrap(), None);
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let c = Config::parse("x = hello").unwrap();
+        assert!(c.get_usize("x").is_err());
+        assert!(c.get_bool("x").is_err());
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set("partition.p_thresh", "0.5");
+        assert_eq!(c.get_f64("partition.p_thresh").unwrap(), Some(0.5));
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("no equals here").is_err());
+        assert!(Config::parse("= novalue").is_err());
+    }
+
+    #[test]
+    fn hash_inside_quotes_kept() {
+        let c = Config::parse("tag = \"a#b\"").unwrap();
+        assert_eq!(c.get_str("tag"), Some("a#b"));
+    }
+}

@@ -1,0 +1,181 @@
+//! Execution routing: PJRT artifact route vs native Rust route.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cocluster::{AtomCocluster, CoclusterResult};
+use crate::matrix::DenseMatrix;
+use crate::rng::Xoshiro256;
+use crate::runtime::RuntimePool;
+
+/// A backend that co-clusters one gathered block.
+pub trait BlockExecutor: Send + Sync {
+    fn name(&self) -> &str;
+    fn execute(&self, block: &DenseMatrix, k: usize, seed: u64) -> Result<CoclusterResult>;
+}
+
+/// Native route: pure-Rust atom algorithm (SCC or PNMTF).
+pub struct NativeExecutor {
+    atom: Arc<dyn AtomCocluster>,
+}
+
+impl NativeExecutor {
+    pub fn new(atom: Arc<dyn AtomCocluster>) -> Self {
+        Self { atom }
+    }
+}
+
+impl BlockExecutor for NativeExecutor {
+    fn name(&self) -> &str {
+        "native"
+    }
+
+    fn execute(&self, block: &DenseMatrix, k: usize, seed: u64) -> Result<CoclusterResult> {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let m = crate::matrix::Matrix::Dense(block.clone());
+        Ok(self.atom.cocluster(&m, k, &mut rng))
+    }
+}
+
+/// PJRT route: AOT-compiled JAX/Pallas artifact via the runtime pool.
+pub struct PjrtExecutor {
+    pool: Arc<RuntimePool>,
+    /// Artifact kind this executor serves ("scc_block" / "pnmtf_block").
+    kind: String,
+}
+
+impl PjrtExecutor {
+    pub fn new(pool: Arc<RuntimePool>, kind: impl Into<String>) -> Self {
+        Self { pool, kind: kind.into() }
+    }
+
+    /// Does a compiled artifact fit this block without excessive padding?
+    /// `max_pad_factor` bounds padded-area / block-area: padding zeros
+    /// still cost FLOPs on the dense artifact graph.
+    pub fn fits(&self, rows: usize, cols: usize, k: usize, max_pad_factor: f64) -> bool {
+        match self.pool.spec_for(&self.kind, rows, cols, k) {
+            Some(spec) => {
+                let padded = (spec.phi * spec.psi) as f64;
+                let actual = (rows * cols).max(1) as f64;
+                padded / actual <= max_pad_factor
+            }
+            None => false,
+        }
+    }
+}
+
+impl BlockExecutor for PjrtExecutor {
+    fn name(&self) -> &str {
+        "pjrt"
+    }
+
+    fn execute(&self, block: &DenseMatrix, k: usize, seed: u64) -> Result<CoclusterResult> {
+        let spec = self
+            .pool
+            .spec_for(&self.kind, block.rows(), block.cols(), k)
+            .ok_or_else(|| anyhow::anyhow!("no artifact fits {}x{} k={k}", block.rows(), block.cols()))?;
+        self.pool.execute(spec, block.clone(), k, seed as i32)
+    }
+}
+
+/// Which backend a job was routed to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    Pjrt,
+    Native,
+}
+
+/// Routing policy: PJRT when available + fitting, else native; PJRT
+/// errors fall back to native (counted in [`super::Stats`]).
+pub struct Router {
+    pub native: NativeExecutor,
+    pub pjrt: Option<PjrtExecutor>,
+    /// Maximum tolerated padding blow-up on the PJRT route.
+    pub max_pad_factor: f64,
+}
+
+impl Router {
+    pub fn native_only(atom: Arc<dyn AtomCocluster>) -> Self {
+        Self { native: NativeExecutor::new(atom), pjrt: None, max_pad_factor: 1.7 }
+    }
+
+    pub fn with_runtime(atom: Arc<dyn AtomCocluster>, pool: Arc<RuntimePool>, kind: &str) -> Self {
+        Self {
+            native: NativeExecutor::new(atom),
+            pjrt: Some(PjrtExecutor::new(pool, kind)),
+            max_pad_factor: 1.7,
+        }
+    }
+
+    /// Decide the route for a block shape.
+    pub fn route(&self, rows: usize, cols: usize, k: usize) -> Route {
+        match &self.pjrt {
+            Some(p) if p.fits(rows, cols, k, self.max_pad_factor) => Route::Pjrt,
+            _ => Route::Native,
+        }
+    }
+
+    /// Execute with fallback; returns the result and the route that
+    /// actually produced it.
+    pub fn execute(&self, block: &DenseMatrix, k: usize, seed: u64, stats: &super::Stats) -> Result<CoclusterResult> {
+        use std::sync::atomic::Ordering;
+        match self.route(block.rows(), block.cols(), k) {
+            Route::Pjrt => {
+                let pjrt = self.pjrt.as_ref().unwrap();
+                match pjrt.execute(block, k, seed) {
+                    Ok(r) => {
+                        stats.blocks_pjrt.fetch_add(1, Ordering::Relaxed);
+                        Ok(r)
+                    }
+                    Err(e) => {
+                        crate::log_warn!("pjrt route failed ({e}); falling back to native");
+                        stats.pjrt_fallbacks.fetch_add(1, Ordering::Relaxed);
+                        stats.blocks_native.fetch_add(1, Ordering::Relaxed);
+                        self.native.execute(block, k, seed)
+                    }
+                }
+            }
+            Route::Native => {
+                stats.blocks_native.fetch_add(1, Ordering::Relaxed);
+                self.native.execute(block, k, seed)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cocluster::SpectralCocluster;
+    use crate::data::synthetic::{planted_dense, PlantedConfig};
+
+    #[test]
+    fn native_executor_runs_atom() {
+        let ds = planted_dense(&PlantedConfig { rows: 60, cols: 50, seed: 601, ..Default::default() });
+        let exec = NativeExecutor::new(Arc::new(SpectralCocluster::default()));
+        let out = exec.execute(&ds.matrix.to_dense(), 4, 7).unwrap();
+        out.validate(60, 50).unwrap();
+        assert_eq!(exec.name(), "native");
+    }
+
+    #[test]
+    fn native_executor_deterministic_by_seed() {
+        let ds = planted_dense(&PlantedConfig { rows: 40, cols: 40, seed: 602, ..Default::default() });
+        let exec = NativeExecutor::new(Arc::new(SpectralCocluster::default()));
+        let a = exec.execute(&ds.matrix.to_dense(), 3, 9).unwrap();
+        let b = exec.execute(&ds.matrix.to_dense(), 3, 9).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn router_without_pjrt_routes_native() {
+        let router = Router::native_only(Arc::new(SpectralCocluster::default()));
+        assert_eq!(router.route(256, 256, 4), Route::Native);
+        let stats = crate::coordinator::Stats::default();
+        let ds = planted_dense(&PlantedConfig { rows: 30, cols: 30, seed: 603, ..Default::default() });
+        router.execute(&ds.matrix.to_dense(), 2, 1, &stats).unwrap();
+        assert_eq!(stats.snapshot().blocks_native, 1);
+        assert_eq!(stats.snapshot().blocks_pjrt, 0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Worker-pool scheduler for block jobs.
+//!
+//! Pull-based load balancing: workers claim the next job index from an
+//! atomic counter, gather the block from the (shared, read-only) input
+//! matrix, execute via the [`Router`], and push the result into a
+//! channel the leader drains. Pull scheduling gives natural backpressure
+//! — a worker never holds more than one gathered block — and the atomic
+//! counter keeps long-tail blocks from serializing behind a static
+//! round-robin assignment.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::matrix::Matrix;
+use crate::partition::{BlockJob, SamplingRound};
+use crate::rng::{SplitMix64, Xoshiro256};
+
+use super::router::Router;
+use super::stats::Stats;
+
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Worker threads. 0 = available parallelism.
+    pub workers: usize,
+    /// Co-cluster count requested from each block.
+    pub k: usize,
+    /// Base seed; per-job seeds are derived deterministically from it
+    /// and the job's (round, grid) coordinates, so results do not depend
+    /// on worker interleaving.
+    pub seed: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self { workers: 0, k: 4, seed: 0x5EED }
+    }
+}
+
+impl SchedulerConfig {
+    pub fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        }
+    }
+}
+
+/// Deterministic per-job seed: independent of scheduling order.
+pub fn job_seed(base: u64, job: &BlockJob) -> u64 {
+    let mut sm = SplitMix64::new(
+        base ^ ((job.round as u64) << 40) ^ ((job.grid.0 as u64) << 20) ^ job.grid.1 as u64,
+    );
+    sm.next_u64()
+}
+
+/// Execute every job of every round; returns `(job, result)` pairs in a
+/// deterministic order (sorted by (round, grid)) regardless of worker
+/// interleaving.
+pub fn run_rounds(
+    matrix: &Matrix,
+    rounds: &[SamplingRound],
+    router: &Router,
+    cfg: &SchedulerConfig,
+    stats: &Stats,
+) -> Result<Vec<(BlockJob, crate::cocluster::CoclusterResult)>> {
+    let jobs: Vec<&BlockJob> = rounds.iter().flat_map(|r| r.jobs.iter()).collect();
+    if jobs.is_empty() {
+        return Ok(vec![]);
+    }
+    let workers = cfg.effective_workers().min(jobs.len());
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let jobs = &jobs;
+            let next = &next;
+            scope.spawn(move || {
+                loop {
+                    let idx = next.fetch_add(1, Ordering::Relaxed);
+                    if idx >= jobs.len() {
+                        break;
+                    }
+                    let job = jobs[idx];
+                    let t0 = Instant::now();
+                    let block = matrix.gather_block(&job.rows, &job.cols);
+                    stats.add_gather(t0.elapsed().as_nanos() as u64);
+
+                    let seed = job_seed(cfg.seed, job);
+                    let t1 = Instant::now();
+                    let result = router.execute(&block, cfg.k, seed, stats);
+                    stats.add_exec(t1.elapsed().as_nanos() as u64);
+                    stats.blocks_total.fetch_add(1, Ordering::Relaxed);
+
+                    // Leader never drops the receiver while workers run.
+                    let _ = tx.send((idx, result));
+                }
+            });
+        }
+        drop(tx);
+
+        let mut out: Vec<Option<(BlockJob, crate::cocluster::CoclusterResult)>> = (0..jobs.len()).map(|_| None).collect();
+        let mut first_err: Option<anyhow::Error> = None;
+        for (idx, result) in rx {
+            match result {
+                Ok(r) => out[idx] = Some((jobs[idx].clone(), r)),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(out.into_iter().flatten().collect())
+    })
+}
+
+/// Convenience used by tests/examples: run one atom over the whole
+/// matrix through the same scheduler machinery.
+pub fn run_whole(
+    matrix: &Matrix,
+    router: &Router,
+    cfg: &SchedulerConfig,
+    stats: &Stats,
+) -> Result<crate::cocluster::CoclusterResult> {
+    let job = BlockJob {
+        round: 0,
+        grid: (0, 0),
+        rows: (0..matrix.rows()).collect(),
+        cols: (0..matrix.cols()).collect(),
+    };
+    let round = SamplingRound { round: 0, jobs: vec![job] };
+    let mut results = run_rounds(matrix, &[round], router, cfg, stats)?;
+    anyhow::ensure!(results.len() == 1, "whole-matrix job vanished");
+    Ok(results.pop().unwrap().1)
+}
+
+/// Derive an RNG for leader-side stochastic stages (sampling) that is
+/// decoupled from per-job seeds.
+pub fn leader_rng(seed: u64) -> Xoshiro256 {
+    Xoshiro256::seed_from(seed ^ 0x1EADE12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cocluster::SpectralCocluster;
+    use crate::data::synthetic::{planted_dense, PlantedConfig};
+    use crate::partition::{sample_partition, PartitionPlan};
+    use std::sync::Arc;
+
+    fn setup() -> (Matrix, Vec<SamplingRound>) {
+        let ds = planted_dense(&PlantedConfig { rows: 120, cols: 100, seed: 701, ..Default::default() });
+        let plan = PartitionPlan { phi: 60, psi: 50, m: 2, n: 2, t_p: 2, certified_probability: 1.0, estimated_cost: 0.0 };
+        let mut rng = Xoshiro256::seed_from(17);
+        let rounds = sample_partition(120, 100, &plan, &mut rng);
+        (ds.matrix, rounds)
+    }
+
+    #[test]
+    fn all_jobs_complete() {
+        let (matrix, rounds) = setup();
+        let router = Router::native_only(Arc::new(SpectralCocluster::default()));
+        let stats = Stats::default();
+        let out = run_rounds(&matrix, &rounds, &router, &SchedulerConfig::default(), &stats).unwrap();
+        assert_eq!(out.len(), 8);
+        assert_eq!(stats.snapshot().blocks_total, 8);
+        for (job, result) in &out {
+            result.validate(job.rows.len(), job.cols.len()).unwrap();
+        }
+    }
+
+    #[test]
+    fn results_deterministic_across_worker_counts() {
+        let (matrix, rounds) = setup();
+        let router = Router::native_only(Arc::new(SpectralCocluster::default()));
+        let one = run_rounds(&matrix, &rounds, &router, &SchedulerConfig { workers: 1, ..Default::default() }, &Stats::default()).unwrap();
+        let many = run_rounds(&matrix, &rounds, &router, &SchedulerConfig { workers: 7, ..Default::default() }, &Stats::default()).unwrap();
+        assert_eq!(one.len(), many.len());
+        for ((ja, ra), (jb, rb)) in one.iter().zip(&many) {
+            assert_eq!(ja.grid, jb.grid);
+            assert_eq!(ja.round, jb.round);
+            assert_eq!(ra, rb, "job {:?} differs across worker counts", ja.grid);
+        }
+    }
+
+    #[test]
+    fn job_seed_depends_on_coordinates_not_order() {
+        let a = BlockJob { round: 0, grid: (0, 1), rows: vec![], cols: vec![] };
+        let b = BlockJob { round: 0, grid: (1, 0), rows: vec![], cols: vec![] };
+        let c = BlockJob { round: 1, grid: (0, 1), rows: vec![], cols: vec![] };
+        assert_ne!(job_seed(5, &a), job_seed(5, &b));
+        assert_ne!(job_seed(5, &a), job_seed(5, &c));
+        assert_eq!(job_seed(5, &a), job_seed(5, &a.clone()));
+    }
+
+    #[test]
+    fn empty_rounds_ok() {
+        let (matrix, _) = setup();
+        let router = Router::native_only(Arc::new(SpectralCocluster::default()));
+        let out = run_rounds(&matrix, &[], &router, &SchedulerConfig::default(), &Stats::default()).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn run_whole_matches_direct_atom() {
+        let (matrix, _) = setup();
+        let router = Router::native_only(Arc::new(SpectralCocluster::default()));
+        let cfg = SchedulerConfig { k: 4, seed: 99, ..Default::default() };
+        let via_sched = run_whole(&matrix, &router, &cfg, &Stats::default()).unwrap();
+        via_sched.validate(matrix.rows(), matrix.cols()).unwrap();
+    }
+}

@@ -1,0 +1,87 @@
+//! Coordinator telemetry: lock-free counters, snapshotted for reports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Live counters shared across workers.
+#[derive(Debug, Default)]
+pub struct Stats {
+    pub blocks_total: AtomicU64,
+    pub blocks_native: AtomicU64,
+    pub blocks_pjrt: AtomicU64,
+    /// PJRT failures that fell back to the native route.
+    pub pjrt_fallbacks: AtomicU64,
+    pub gather_ns: AtomicU64,
+    pub exec_ns: AtomicU64,
+    pub merge_ns: AtomicU64,
+}
+
+impl Stats {
+    pub fn add_gather(&self, ns: u64) {
+        self.gather_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn add_exec(&self, ns: u64) {
+        self.exec_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            blocks_total: self.blocks_total.load(Ordering::Relaxed),
+            blocks_native: self.blocks_native.load(Ordering::Relaxed),
+            blocks_pjrt: self.blocks_pjrt.load(Ordering::Relaxed),
+            pjrt_fallbacks: self.pjrt_fallbacks.load(Ordering::Relaxed),
+            gather_s: self.gather_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            exec_s: self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            merge_s: self.merge_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StatsSnapshot {
+    pub blocks_total: u64,
+    pub blocks_native: u64,
+    pub blocks_pjrt: u64,
+    pub pjrt_fallbacks: u64,
+    pub gather_s: f64,
+    pub exec_s: f64,
+    pub merge_s: f64,
+}
+
+impl std::fmt::Display for StatsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "blocks={} (native={}, pjrt={}, fallbacks={}) gather={:.3}s exec={:.3}s merge={:.3}s",
+            self.blocks_total, self.blocks_native, self.blocks_pjrt, self.pjrt_fallbacks,
+            self.gather_s, self.exec_s, self.merge_s
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let s = Stats::default();
+        s.blocks_total.fetch_add(3, Ordering::Relaxed);
+        s.blocks_native.fetch_add(2, Ordering::Relaxed);
+        s.blocks_pjrt.fetch_add(1, Ordering::Relaxed);
+        s.add_gather(1_500_000_000);
+        let snap = s.snapshot();
+        assert_eq!(snap.blocks_total, 3);
+        assert_eq!(snap.blocks_native, 2);
+        assert_eq!(snap.blocks_pjrt, 1);
+        assert!((snap.gather_s - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn display_is_informative() {
+        let snap = Stats::default().snapshot();
+        let text = format!("{snap}");
+        assert!(text.contains("blocks=0"));
+    }
+}

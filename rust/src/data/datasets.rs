@@ -1,0 +1,111 @@
+//! Named dataset builders mirroring the paper's evaluation corpora.
+//!
+//! Shapes and sparsity regimes match Table II's three workloads (scaled
+//! per DESIGN.md §4 where noted). Each returns a [`PlantedDataset`]
+//! carrying ground-truth row/column labels for Table III scoring.
+
+use super::synthetic::{planted_dense, planted_sparse, PlantedConfig, PlantedDataset};
+
+/// Descriptor used by the CLI/benches to enumerate workloads.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub rows: usize,
+    pub cols: usize,
+    pub sparse: bool,
+    pub row_clusters: usize,
+    pub col_clusters: usize,
+}
+
+pub const SPECS: &[DatasetSpec] = &[
+    DatasetSpec { name: "amazon1000", rows: 1000, cols: 1000, sparse: false, row_clusters: 5, col_clusters: 5 },
+    DatasetSpec { name: "classic4", rows: 18_000, cols: 1000, sparse: true, row_clusters: 4, col_clusters: 4 },
+    DatasetSpec { name: "rcv1_large", rows: 60_000, cols: 2000, sparse: true, row_clusters: 6, col_clusters: 6 },
+];
+
+/// Look up a spec by name.
+pub fn spec(name: &str) -> Option<&'static DatasetSpec> {
+    SPECS.iter().find(|s| s.name == name)
+}
+
+/// Build a dataset by spec name with an optional row-count override
+/// (used to scale experiments to a time budget).
+pub fn build(name: &str, scale_rows: Option<usize>, seed: u64) -> Option<PlantedDataset> {
+    let s = spec(name)?;
+    let rows = scale_rows.unwrap_or(s.rows);
+    // Row count scales for time-budgeted runs; the column space (the
+    // vocabulary, for text workloads) keeps its full width — shrinking
+    // it would change the per-row signal density, not just the size.
+    let cols = s.cols;
+    let cfg = PlantedConfig {
+        rows,
+        cols,
+        row_clusters: s.row_clusters,
+        col_clusters: s.col_clusters,
+        seed,
+        ..if s.sparse {
+            PlantedConfig { noise: 0.0, signal: 3.0, density: 0.03, ..Default::default() }
+        } else {
+            PlantedConfig { noise: 0.35, signal: 1.2, ..Default::default() }
+        }
+    };
+    Some(if s.sparse { planted_sparse(&cfg) } else { planted_dense(&cfg) })
+}
+
+/// Amazon-1000 equivalent: 1000×1000 dense review-feature matrix,
+/// 5 planted customer-behaviour co-clusters.
+pub fn amazon1000(seed: u64) -> PlantedDataset {
+    build("amazon1000", None, seed).unwrap()
+}
+
+/// CLASSIC4 equivalent: 18000×1000 sparse document–term matrix,
+/// 4 planted topics, ~1.5% density.
+pub fn classic4(seed: u64) -> PlantedDataset {
+    build("classic4", None, seed).unwrap()
+}
+
+/// RCV1-Large equivalent (scaled to this testbed): 60000×2000 sparse,
+/// 6 planted topic groups. Override rows via [`build`] to go bigger.
+pub fn rcv1_large(seed: u64) -> PlantedDataset {
+    build("rcv1_large", None, seed).unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_resolve() {
+        assert!(spec("amazon1000").is_some());
+        assert!(spec("classic4").is_some());
+        assert!(spec("rcv1_large").is_some());
+        assert!(spec("nope").is_none());
+    }
+
+    #[test]
+    fn amazon_is_dense_1000sq() {
+        let ds = amazon1000(7);
+        assert_eq!(ds.matrix.rows(), 1000);
+        assert_eq!(ds.matrix.cols(), 1000);
+        assert!(!ds.matrix.is_sparse());
+    }
+
+    #[test]
+    fn classic4_is_sparse_with_four_topics() {
+        let ds = build("classic4", Some(900), 7).unwrap();
+        assert!(ds.matrix.is_sparse());
+        assert_eq!(ds.config.row_clusters, 4);
+        let density = ds.matrix.nnz() as f64 / (ds.matrix.rows() as f64 * ds.matrix.cols() as f64);
+        assert!(density < 0.1, "density {density}");
+    }
+
+    #[test]
+    fn scaling_preserves_cluster_counts() {
+        let ds = build("rcv1_large", Some(1200), 7).unwrap();
+        assert_eq!(ds.matrix.rows(), 1200);
+        assert_eq!(ds.config.row_clusters, 6);
+        for c in 0..6 {
+            assert!(ds.row_labels.contains(&c));
+        }
+    }
+}

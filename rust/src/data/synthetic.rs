@@ -1,0 +1,227 @@
+//! Planted co-cluster generators.
+//!
+//! A planted dataset draws row labels `u ∈ {0..k}` and column labels
+//! `v ∈ {0..d}`, assigns each (row-cluster, col-cluster) cell a signal
+//! level, and then emits either dense Gaussian data around the cell means
+//! or sparse Bernoulli data with cell-dependent firing rates. Rows and
+//! columns are shuffled so no algorithm can exploit ordering.
+
+use crate::matrix::{CsrMatrix, DenseMatrix, Matrix};
+use crate::rng::Xoshiro256;
+
+/// Configuration for a planted co-cluster problem.
+#[derive(Clone, Debug)]
+pub struct PlantedConfig {
+    pub rows: usize,
+    pub cols: usize,
+    /// Number of row clusters (k in the paper).
+    pub row_clusters: usize,
+    /// Number of column clusters (d in the paper).
+    pub col_clusters: usize,
+    /// Dense: noise stddev around cell means. Sparse: background rate.
+    pub noise: f64,
+    /// Dense: separation between cell means. Sparse: in-block rate boost.
+    pub signal: f64,
+    /// Target density for sparse generation (fraction of nnz).
+    pub density: f64,
+    pub seed: u64,
+}
+
+impl Default for PlantedConfig {
+    fn default() -> Self {
+        Self {
+            rows: 200,
+            cols: 160,
+            row_clusters: 4,
+            col_clusters: 4,
+            noise: 0.3,
+            signal: 1.0,
+            density: 0.02,
+            seed: 0xC0C1,
+        }
+    }
+}
+
+/// A generated problem instance with ground truth.
+#[derive(Clone, Debug)]
+pub struct PlantedDataset {
+    pub matrix: Matrix,
+    pub row_labels: Vec<usize>,
+    pub col_labels: Vec<usize>,
+    pub config: PlantedConfig,
+}
+
+/// Balanced-but-jittered label assignment, then shuffled.
+fn draw_labels(n: usize, k: usize, rng: &mut Xoshiro256) -> Vec<usize> {
+    assert!(k >= 1 && n >= k, "need at least one item per cluster");
+    // Guarantee every cluster non-empty, then fill uniformly.
+    let mut labels: Vec<usize> = (0..k).collect();
+    labels.extend((k..n).map(|_| rng.next_below(k)));
+    rng.shuffle(&mut labels);
+    labels
+}
+
+/// Cell signal table: block-diagonal-dominant pattern (the visualizable
+/// structure in the paper's Fig. 1b), with off-diagonal cells at
+/// distinct low levels so column clusters are identifiable even when
+/// k ≠ d.
+fn cell_mean(ru: usize, cv: usize, k: usize, d: usize, signal: f64) -> f64 {
+    if ru % d.min(k) == cv % d.min(k) {
+        signal * (1.0 + 0.25 * ru as f64)
+    } else {
+        0.15 * signal * (((ru * 31 + cv * 17) % 7) as f64 / 7.0)
+    }
+}
+
+/// Dense planted problem: `a_ij ~ N(mean(u_i, v_j), noise²)`, shifted to
+/// be non-negative (co-clustering inputs are bipartite adjacency weights).
+pub fn planted_dense(config: &PlantedConfig) -> PlantedDataset {
+    let mut rng = Xoshiro256::seed_from(config.seed);
+    let row_labels = draw_labels(config.rows, config.row_clusters, &mut rng);
+    let col_labels = draw_labels(config.cols, config.col_clusters, &mut rng);
+    let mut m = DenseMatrix::zeros(config.rows, config.cols);
+    for i in 0..config.rows {
+        let ru = row_labels[i];
+        let row = m.row_mut(i);
+        for (j, x) in row.iter_mut().enumerate() {
+            let mean = cell_mean(ru, col_labels[j], config.row_clusters, config.col_clusters, config.signal);
+            let val = mean + config.noise * rng.next_normal();
+            *x = val.max(0.0) as f32;
+        }
+    }
+    PlantedDataset {
+        matrix: Matrix::Dense(m),
+        row_labels,
+        col_labels,
+        config: config.clone(),
+    }
+}
+
+/// Sparse planted problem: entry (i,j) is stored with probability
+/// `p_in` when (u_i, v_j) is a signal cell and `p_out` otherwise, with
+/// magnitudes ~ 1 + Exp-ish tail (Zipf-flavoured tf weights).
+pub fn planted_sparse(config: &PlantedConfig) -> PlantedDataset {
+    let mut rng = Xoshiro256::seed_from(config.seed);
+    let row_labels = draw_labels(config.rows, config.row_clusters, &mut rng);
+    let col_labels = draw_labels(config.cols, config.col_clusters, &mut rng);
+    // Split the density budget: signal cells get `signal`× the background
+    // rate. Compute rates so overall expected density ≈ config.density.
+    let k = config.row_clusters;
+    let d = config.col_clusters;
+    let diag_frac = 1.0 / d.min(k) as f64; // fraction of cells that carry signal
+    let boost = (config.signal.max(1.0)) * 8.0;
+    let p_out = config.density / (diag_frac * boost + (1.0 - diag_frac));
+    let p_in = (p_out * boost).min(0.9);
+    let mut triplets = Vec::with_capacity((config.rows as f64 * config.cols as f64 * config.density * 1.2) as usize);
+    for i in 0..config.rows {
+        let ru = row_labels[i];
+        for j in 0..config.cols {
+            let cv = col_labels[j];
+            let in_block = ru % d.min(k) == cv % d.min(k);
+            let p = if in_block { p_in } else { p_out };
+            if rng.next_f64() < p {
+                // tf-like magnitude: mostly 1, occasional heavier counts.
+                let mag = 1.0 + (-(1.0 - rng.next_f64()).ln() * 1.5).floor();
+                triplets.push((i, j, mag as f32));
+            }
+        }
+    }
+    let m = CsrMatrix::from_triplets(config.rows, config.cols, triplets);
+    PlantedDataset {
+        matrix: Matrix::Sparse(m),
+        row_labels,
+        col_labels,
+        config: config.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_shape_and_determinism() {
+        let cfg = PlantedConfig { rows: 50, cols: 40, seed: 1, ..Default::default() };
+        let a = planted_dense(&cfg);
+        let b = planted_dense(&cfg);
+        assert_eq!(a.matrix.rows(), 50);
+        assert_eq!(a.matrix.cols(), 40);
+        assert_eq!(a.row_labels, b.row_labels);
+        assert_eq!(a.matrix.to_dense().data(), b.matrix.to_dense().data());
+    }
+
+    #[test]
+    fn labels_cover_all_clusters() {
+        let cfg = PlantedConfig { rows: 30, cols: 30, row_clusters: 5, col_clusters: 3, ..Default::default() };
+        let ds = planted_dense(&cfg);
+        for c in 0..5 {
+            assert!(ds.row_labels.contains(&c));
+        }
+        for c in 0..3 {
+            assert!(ds.col_labels.contains(&c));
+        }
+    }
+
+    #[test]
+    fn dense_signal_blocks_have_higher_mean() {
+        let cfg = PlantedConfig { rows: 120, cols: 120, noise: 0.1, signal: 2.0, seed: 3, ..Default::default() };
+        let ds = planted_dense(&cfg);
+        let m = ds.matrix.to_dense();
+        let (mut in_sum, mut in_n, mut out_sum, mut out_n) = (0.0f64, 0usize, 0.0f64, 0usize);
+        for i in 0..120 {
+            for j in 0..120 {
+                let in_block = ds.row_labels[i] % 4 == ds.col_labels[j] % 4;
+                if in_block {
+                    in_sum += m.get(i, j) as f64;
+                    in_n += 1;
+                } else {
+                    out_sum += m.get(i, j) as f64;
+                    out_n += 1;
+                }
+            }
+        }
+        assert!(in_sum / in_n as f64 > 3.0 * (out_sum / out_n as f64));
+    }
+
+    #[test]
+    fn sparse_density_near_target() {
+        let cfg = PlantedConfig {
+            rows: 400,
+            cols: 300,
+            density: 0.05,
+            seed: 4,
+            ..Default::default()
+        };
+        let ds = planted_sparse(&cfg);
+        if let Matrix::Sparse(s) = &ds.matrix {
+            let d = s.density();
+            assert!((d - 0.05).abs() < 0.02, "density {d}");
+        } else {
+            panic!("expected sparse");
+        }
+    }
+
+    #[test]
+    fn sparse_in_block_rate_exceeds_background() {
+        let cfg = PlantedConfig { rows: 200, cols: 200, density: 0.05, seed: 5, ..Default::default() };
+        let ds = planted_sparse(&cfg);
+        let m = ds.matrix.to_dense();
+        let (mut in_nnz, mut in_n, mut out_nnz, mut out_n) = (0usize, 0usize, 0usize, 0usize);
+        for i in 0..200 {
+            for j in 0..200 {
+                let in_block = ds.row_labels[i] % 4 == ds.col_labels[j] % 4;
+                let nz = (m.get(i, j) != 0.0) as usize;
+                if in_block {
+                    in_nnz += nz;
+                    in_n += 1;
+                } else {
+                    out_nnz += nz;
+                    out_n += 1;
+                }
+            }
+        }
+        let rate_in = in_nnz as f64 / in_n as f64;
+        let rate_out = out_nnz as f64 / out_n as f64;
+        assert!(rate_in > 4.0 * rate_out, "in {rate_in} out {rate_out}");
+    }
+}

@@ -1,0 +1,53 @@
+//! # LAMC — Large-scale Adaptive Matrix Co-clustering
+//!
+//! Reproduction of *"Scalable Co-Clustering for Large-Scale Data through
+//! Dynamic Partitioning and Hierarchical Merging"* (Wu, Huang & Yan,
+//! IEEE SMC 2024) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: probabilistic partition
+//!   planning ([`partition`]), a leader/worker scheduler that fans block
+//!   co-clustering jobs out across threads and execution routes
+//!   ([`coordinator`]), and hierarchical co-cluster merging ([`merge`]).
+//! * **Layer 2** — a JAX compute graph per partition block (spectral
+//!   co-clustering embedding + k-means), AOT-lowered to HLO text at build
+//!   time and executed from Rust via PJRT ([`runtime`]).
+//! * **Layer 1** — Pallas kernels for the block hot-spots (bipartite
+//!   normalization, subspace-iteration matmuls, k-means assignment),
+//!   inlined into the Layer-2 HLO.
+//!
+//! Python never runs on the request path: `make artifacts` compiles the
+//! HLO once; the `lamc` binary and examples are self-contained after.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use lamc::data;
+//! use lamc::pipeline::{Lamc, LamcConfig};
+//!
+//! let ds = data::amazon1000(42);
+//! let result = Lamc::new(LamcConfig::default()).run(&ds.matrix).unwrap();
+//! let scores = lamc::metrics::score_coclustering(
+//!     &ds.row_labels, &result.row_labels,
+//!     &ds.col_labels, &result.col_labels);
+//! println!("NMI {:.4}  ARI {:.4}", scores.nmi(), scores.ari());
+//! ```
+
+pub mod bench_util;
+pub mod cli;
+pub mod cocluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod linalg;
+pub mod logging;
+pub mod matrix;
+pub mod merge;
+pub mod metrics;
+pub mod partition;
+pub mod pipeline;
+pub mod rng;
+pub mod runtime;
+pub mod testkit;
+
+pub use pipeline::{Lamc, LamcConfig, LamcResult};

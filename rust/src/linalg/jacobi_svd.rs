@@ -1,0 +1,162 @@
+//! Exact SVD via one-sided Jacobi rotations.
+//!
+//! This is the *baseline-faithful* factorization: classical spectral
+//! co-clustering (Dhillon 2001, as benchmarked in the paper's Table II)
+//! computes a full exact SVD of the normalized matrix, whose
+//! `O(M·N·min(M,N))`-per-sweep cost is precisely why full-matrix SCC
+//! cannot scale and why LAMC partitions. The production path uses
+//! [`super::svd::randomized_svd`]; this exact path exists so the
+//! benches compare against the method the paper actually measured.
+
+use crate::matrix::DenseMatrix;
+
+use super::svd::SvdResult;
+
+/// Exact thin SVD of `a` (m×n). Returns all `min(m,n)` triplets ordered
+/// by decreasing singular value. For `m < n` the transpose is factored
+/// and factors are swapped back.
+pub fn jacobi_svd(a: &DenseMatrix, max_sweeps: usize, tol: f64) -> SvdResult {
+    let (m, n) = (a.rows(), a.cols());
+    if m < n {
+        let t = jacobi_svd(&a.transpose(), max_sweeps, tol);
+        return SvdResult { u: t.v, s: t.s, v: t.u };
+    }
+    // Work on columns of W = A (f64), rotating pairs until orthogonal:
+    // afterwards W = U Σ and V accumulates the rotations.
+    let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for j in 0..n {
+        v[j * n + j] = 1.0;
+    }
+
+    let col_dot = |w: &[f64], p: usize, q: usize| -> f64 {
+        let mut acc = 0.0;
+        for i in 0..m {
+            acc += w[i * n + p] * w[i * n + q];
+        }
+        acc
+    };
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = col_dot(&w, p, q);
+                let app = col_dot(&w, p, p);
+                let aqq = col_dot(&w, q, q);
+                if apq.abs() <= tol * (app * aqq).sqrt() || apq == 0.0 {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wip = w[i * n + p];
+                    let wiq = w[i * n + q];
+                    w[i * n + p] = c * wip - s * wiq;
+                    w[i * n + q] = s * wip + c * wiq;
+                }
+                for i in 0..n {
+                    let vip = v[i * n + p];
+                    let viq = v[i * n + q];
+                    v[i * n + p] = c * vip - s * viq;
+                    v[i * n + q] = s * vip + c * viq;
+                }
+            }
+        }
+        if off < tol {
+            break;
+        }
+    }
+
+    // Extract Σ (column norms), U (normalized columns), sort descending.
+    let mut sigma: Vec<f64> = (0..n).map(|j| col_dot(&w, j, j).sqrt()).collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| sigma[j].partial_cmp(&sigma[i]).unwrap());
+    sigma = order.iter().map(|&j| sigma[j]).collect();
+
+    let mut u = DenseMatrix::zeros(m, n);
+    let mut vv = DenseMatrix::zeros(n, n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        let s = sigma[new_j];
+        let inv = if s > 1e-300 { 1.0 / s } else { 0.0 };
+        for i in 0..m {
+            u.set(i, new_j, (w[i * n + old_j] * inv) as f32);
+        }
+        for i in 0..n {
+            vv.set(i, new_j, v[i * n + old_j] as f32);
+        }
+    }
+    SvdResult { u, s: sigma.iter().map(|&x| x as f32).collect(), v: vv }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+    use crate::linalg::qr::orthonormality_defect;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn reconstructs_random_matrix() {
+        let mut rng = Xoshiro256::seed_from(901);
+        let a = DenseMatrix::randn(20, 12, &mut rng);
+        let svd = jacobi_svd(&a, 30, 1e-12);
+        let mut us = svd.u.clone();
+        for j in 0..12 {
+            for i in 0..20 {
+                us.set(i, j, us.get(i, j) * svd.s[j]);
+            }
+        }
+        let back = matmul(&us, &svd.v.transpose());
+        assert!(back.max_abs_diff(&a) < 1e-4, "err {}", back.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn factors_orthonormal() {
+        let mut rng = Xoshiro256::seed_from(902);
+        let a = DenseMatrix::randn(30, 10, &mut rng);
+        let svd = jacobi_svd(&a, 30, 1e-12);
+        assert!(orthonormality_defect(&svd.u) < 1e-5);
+        assert!(orthonormality_defect(&svd.v) < 1e-5);
+    }
+
+    #[test]
+    fn singular_values_sorted_and_match_randomized() {
+        let mut rng = Xoshiro256::seed_from(903);
+        let a = DenseMatrix::randn(40, 15, &mut rng);
+        let exact = jacobi_svd(&a, 40, 1e-12);
+        assert!(exact.s.windows(2).all(|w| w[0] >= w[1]));
+        let rnd = crate::linalg::randomized_svd(
+            &crate::matrix::Matrix::Dense(a),
+            5,
+            8,
+            4,
+            &mut rng,
+        );
+        for j in 0..5 {
+            assert!((exact.s[j] - rnd.s[j]).abs() < 0.05, "σ{j}: {} vs {}", exact.s[j], rnd.s[j]);
+        }
+    }
+
+    #[test]
+    fn wide_matrix_via_transpose() {
+        let mut rng = Xoshiro256::seed_from(904);
+        let a = DenseMatrix::randn(8, 25, &mut rng);
+        let svd = jacobi_svd(&a, 30, 1e-12);
+        assert_eq!(svd.u.rows(), 8);
+        assert_eq!(svd.v.rows(), 25);
+        assert!(orthonormality_defect(&svd.u) < 1e-5);
+    }
+
+    #[test]
+    fn known_diagonal_case() {
+        let a = DenseMatrix::from_rows(&[vec![3.0, 0.0], vec![0.0, 4.0], vec![0.0, 0.0]]);
+        let svd = jacobi_svd(&a, 20, 1e-14);
+        assert!((svd.s[0] - 4.0).abs() < 1e-6);
+        assert!((svd.s[1] - 3.0).abs() < 1e-6);
+    }
+}

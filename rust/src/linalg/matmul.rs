@@ -1,0 +1,235 @@
+//! Blocked, multi-threaded dense GEMM.
+//!
+//! `C = A·B` with i-k-j loop order (streams B rows, accumulates into a
+//! C row tile held in cache) plus row-band threading via `std::thread::scope`.
+//! This is the native-route hot path for dense workloads; the PJRT route
+//! offloads the same contraction to the compiled XLA artifact instead.
+
+use crate::matrix::DenseMatrix;
+
+/// Rows per parallel band. Bands are independent, so scoped threads write
+/// disjoint slices of C without synchronization.
+const BAND: usize = 64;
+
+/// Number of worker threads for the linalg layer. Defaults to available
+/// parallelism, clamped to 8 (diminishing returns on this memory-bound
+/// kernel beyond that), overridable via `LAMC_THREADS`.
+pub fn matmul_threads() -> usize {
+    if let Ok(s) = std::env::var("LAMC_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+}
+
+/// Single-band kernel: C[band] += A[band] · B with a K-blocked i-k-j
+/// order: the active B panel (KT rows of B) stays cache-resident across
+/// the whole row band instead of being evicted between consecutive A
+/// rows (perf log: EXPERIMENTS.md §Perf L3-1).
+fn gemm_band(a_band: &[f32], b: &DenseMatrix, c_band: &mut [f32], k_dim: usize, n_dim: usize) {
+    const KT: usize = 256; // B panel: 256 rows × N cols (≈1 MB at N=1024)
+    let rows = a_band.len() / k_dim;
+    for kb in (0..k_dim).step_by(KT) {
+        let k_hi = (kb + KT).min(k_dim);
+        for i in 0..rows {
+            let a_row = &a_band[i * k_dim + kb..i * k_dim + k_hi];
+            let c_row = &mut c_band[i * n_dim..(i + 1) * n_dim];
+            for (dk, &aik) in a_row.iter().enumerate() {
+                if aik == 0.0 {
+                    continue; // free sparsity win on padded blocks
+                }
+                let b_row = b.row(kb + dk);
+                // Autovectorizes: contiguous fused multiply-adds.
+                for j in 0..n_dim {
+                    c_row[j] += aik * b_row[j];
+                }
+            }
+        }
+    }
+}
+
+/// `C = A · B`.
+pub fn matmul(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.cols(), b.rows(), "matmul shape mismatch: {}x{} · {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut c = DenseMatrix::zeros(m, n);
+    let threads = matmul_threads();
+    // Small problems: skip thread setup.
+    if m * k * n < 64 * 64 * 64 || threads == 1 {
+        gemm_band(a.data(), b, c.data_mut(), k, n);
+        return c;
+    }
+    let bands: Vec<(usize, usize)> = (0..m)
+        .step_by(BAND)
+        .map(|lo| (lo, (lo + BAND).min(m)))
+        .collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let c_ptr = SendPtr(c.data_mut().as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(bands.len()) {
+            let bands = &bands;
+            let next = &next;
+            let c_ptr = &c_ptr;
+            scope.spawn(move || loop {
+                let idx = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if idx >= bands.len() {
+                    break;
+                }
+                let (lo, hi) = bands[idx];
+                let a_band = &a.data()[lo * k..hi * k];
+                // SAFETY: bands are disjoint row ranges of C.
+                let c_band = unsafe {
+                    std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n)
+                };
+                gemm_band(a_band, b, c_band, k, n);
+            });
+        }
+    });
+    c
+}
+
+/// `C = Aᵀ · B` without materializing Aᵀ (A is m×k ⇒ C is k×n, B m×n).
+pub fn matmul_at_b(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b shape mismatch");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let threads = matmul_threads();
+    if m * k * n < 64 * 64 * 64 || threads == 1 {
+        let mut c = DenseMatrix::zeros(k, n);
+        for i in 0..m {
+            let a_row = a.row(i);
+            let b_row = b.row(i);
+            for (t, &ait) in a_row.iter().enumerate() {
+                if ait == 0.0 {
+                    continue;
+                }
+                let c_row = c.row_mut(t);
+                for j in 0..n {
+                    c_row[j] += ait * b_row[j];
+                }
+            }
+        }
+        return c;
+    }
+    // Parallelize over input row bands with per-thread accumulators, then
+    // reduce. k and n are small (sketch widths) in our workloads, so the
+    // accumulator copies are cheap relative to streaming A.
+    let bands: Vec<(usize, usize)> = (0..m)
+        .step_by(BAND * 4)
+        .map(|lo| (lo, (lo + BAND * 4).min(m)))
+        .collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let partials = std::sync::Mutex::new(DenseMatrix::zeros(k, n));
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(bands.len()) {
+            let bands = &bands;
+            let next = &next;
+            let partials = &partials;
+            scope.spawn(move || {
+                let mut local = DenseMatrix::zeros(k, n);
+                loop {
+                    let idx = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if idx >= bands.len() {
+                        break;
+                    }
+                    let (lo, hi) = bands[idx];
+                    for i in lo..hi {
+                        let a_row = a.row(i);
+                        let b_row = b.row(i);
+                        for (t, &ait) in a_row.iter().enumerate() {
+                            if ait == 0.0 {
+                                continue;
+                            }
+                            let c_row = local.row_mut(t);
+                            for j in 0..n {
+                                c_row[j] += ait * b_row[j];
+                            }
+                        }
+                    }
+                }
+                let mut guard = partials.lock().unwrap();
+                for (dst, src) in guard.data_mut().iter_mut().zip(local.data()) {
+                    *dst += src;
+                }
+            });
+        }
+    });
+    partials.into_inner().unwrap()
+}
+
+/// Raw mutable pointer wrapper that is Sync for scoped disjoint writes.
+struct SendPtr(*mut f32);
+unsafe impl Sync for SendPtr {}
+unsafe impl Send for SendPtr {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn naive(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+        let mut c = DenseMatrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut acc = 0.0f64;
+                for k in 0..a.cols() {
+                    acc += a.get(i, k) as f64 * b.get(k, j) as f64;
+                }
+                c.set(i, j, acc as f32);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn small_matches_naive() {
+        let a = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = DenseMatrix::from_rows(&[vec![5.0, 6.0], vec![7.0, 8.0]]);
+        assert_eq!(matmul(&a, &b).data(), naive(&a, &b).data());
+    }
+
+    #[test]
+    fn random_rect_matches_naive() {
+        let mut rng = Xoshiro256::seed_from(41);
+        let a = DenseMatrix::randn(33, 47, &mut rng);
+        let b = DenseMatrix::randn(47, 29, &mut rng);
+        assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-3);
+    }
+
+    #[test]
+    fn large_threaded_matches_naive() {
+        let mut rng = Xoshiro256::seed_from(42);
+        let a = DenseMatrix::randn(150, 120, &mut rng);
+        let b = DenseMatrix::randn(120, 90, &mut rng);
+        assert!(matmul(&a, &b).max_abs_diff(&naive(&a, &b)) < 1e-2);
+    }
+
+    #[test]
+    fn at_b_matches_transpose_then_mul() {
+        let mut rng = Xoshiro256::seed_from(43);
+        let a = DenseMatrix::randn(70, 20, &mut rng);
+        let b = DenseMatrix::randn(70, 15, &mut rng);
+        let fast = matmul_at_b(&a, &b);
+        let slow = matmul(&a.transpose(), &b);
+        assert!(fast.max_abs_diff(&slow) < 1e-3);
+    }
+
+    #[test]
+    fn at_b_threaded_path() {
+        let mut rng = Xoshiro256::seed_from(44);
+        let a = DenseMatrix::randn(600, 32, &mut rng);
+        let b = DenseMatrix::randn(600, 24, &mut rng);
+        let fast = matmul_at_b(&a, &b);
+        let slow = matmul(&a.transpose(), &b);
+        assert!(fast.max_abs_diff(&slow) < 1e-2);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Xoshiro256::seed_from(45);
+        let a = DenseMatrix::randn(20, 20, &mut rng);
+        let e = DenseMatrix::eye(20);
+        assert!(matmul(&a, &e).max_abs_diff(&a) < 1e-6);
+        assert!(matmul(&e, &a).max_abs_diff(&a) < 1e-6);
+    }
+}

@@ -1,0 +1,40 @@
+//! Dense linear algebra substrate.
+//!
+//! The offline image carries no BLAS/LAPACK bindings, so LAMC implements
+//! the operations its algorithms need: a blocked, multi-threaded GEMM,
+//! Householder QR, and a randomized truncated SVD built on subspace
+//! iteration (Halko–Martinsson–Tropp). Everything accumulates in `f32`
+//! with blocked summation, which is adequate for the spectral embeddings
+//! used here (verified against f64 oracles in the test suites).
+
+pub mod jacobi_svd;
+pub mod matmul;
+pub mod qr;
+pub mod svd;
+
+pub use jacobi_svd::jacobi_svd;
+pub use matmul::{matmul, matmul_at_b, matmul_threads};
+pub use qr::qr_thin;
+pub use svd::{randomized_svd, SvdResult};
+
+/// Euclidean norm of a vector slice (f64 accumulation).
+pub fn norm2(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Dot product with f64 accumulation.
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_and_dot() {
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert!((dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]) - 32.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,164 @@
+//! Thin QR factorization via Householder reflections.
+//!
+//! Used to re-orthonormalize the sketch between subspace-iteration steps
+//! in [`super::svd`]; numerically stabler than Gram–Schmidt for the
+//! ill-conditioned sketches produced by power iterations on matrices with
+//! fast-decaying spectra.
+
+use crate::matrix::DenseMatrix;
+
+/// Thin QR: returns `Q` (m×k, orthonormal columns) and `R` (k×k, upper
+/// triangular) with `A = Q·R`. Requires `m ≥ k`.
+pub fn qr_thin(a: &DenseMatrix) -> (DenseMatrix, DenseMatrix) {
+    let (m, k) = (a.rows(), a.cols());
+    assert!(m >= k, "qr_thin requires tall matrix, got {m}x{k}");
+    // Work in f64 for stability; sketches are small (k ≤ ~32).
+    let mut w: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let mut taus = Vec::with_capacity(k);
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(k);
+
+    for j in 0..k {
+        // Householder vector for column j, rows j..m.
+        let mut norm2 = 0.0f64;
+        for i in j..m {
+            let x = w[i * k + j];
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt();
+        let x0 = w[j * k + j];
+        let alpha = if x0 >= 0.0 { -norm } else { norm };
+        let mut v = vec![0.0f64; m - j];
+        v[0] = x0 - alpha;
+        for i in (j + 1)..m {
+            v[i - j] = w[i * k + j];
+        }
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        let tau = if vnorm2 <= f64::EPSILON { 0.0 } else { 2.0 / vnorm2 };
+        // Apply H = I - tau v vᵀ to trailing columns j..k.
+        if tau != 0.0 {
+            for c in j..k {
+                let mut dot = 0.0f64;
+                for i in j..m {
+                    dot += v[i - j] * w[i * k + c];
+                }
+                let f = tau * dot;
+                for i in j..m {
+                    w[i * k + c] -= f * v[i - j];
+                }
+            }
+        }
+        taus.push(tau);
+        vs.push(v);
+    }
+
+    // R = upper triangle of transformed w.
+    let mut r = DenseMatrix::zeros(k, k);
+    for i in 0..k {
+        for j in i..k {
+            r.set(i, j, w[i * k + j] as f32);
+        }
+    }
+
+    // Q = H_0 H_1 ... H_{k-1} · [I_k; 0]: apply reflectors in reverse to
+    // the thin identity.
+    let mut q = vec![0.0f64; m * k];
+    for j in 0..k {
+        q[j * k + j] = 1.0;
+    }
+    for j in (0..k).rev() {
+        let tau = taus[j];
+        if tau == 0.0 {
+            continue;
+        }
+        let v = &vs[j];
+        for c in 0..k {
+            let mut dot = 0.0f64;
+            for i in j..m {
+                dot += v[i - j] * q[i * k + c];
+            }
+            let f = tau * dot;
+            for i in j..m {
+                q[i * k + c] -= f * v[i - j];
+            }
+        }
+    }
+    let q = DenseMatrix::from_vec(m, k, q.into_iter().map(|x| x as f32).collect());
+    (q, r)
+}
+
+/// Orthonormality defect `‖QᵀQ - I‖_max` (test/diagnostic helper).
+pub fn orthonormality_defect(q: &DenseMatrix) -> f64 {
+    let g = super::matmul::matmul_at_b(q, q);
+    let k = q.cols();
+    let mut worst = 0.0f64;
+    for i in 0..k {
+        for j in 0..k {
+            let want = if i == j { 1.0 } else { 0.0 };
+            worst = worst.max((g.get(i, j) as f64 - want).abs());
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::matmul;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn reconstructs_input() {
+        let mut rng = Xoshiro256::seed_from(51);
+        let a = DenseMatrix::randn(40, 8, &mut rng);
+        let (q, r) = qr_thin(&a);
+        let back = matmul(&q, &r);
+        assert!(back.max_abs_diff(&a) < 1e-4, "defect {}", back.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let mut rng = Xoshiro256::seed_from(52);
+        let a = DenseMatrix::randn(100, 12, &mut rng);
+        let (q, _) = qr_thin(&a);
+        assert!(orthonormality_defect(&q) < 1e-5);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Xoshiro256::seed_from(53);
+        let a = DenseMatrix::randn(30, 6, &mut rng);
+        let (_, r) = qr_thin(&a);
+        for i in 0..6 {
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn handles_rank_deficient_columns() {
+        // Two identical columns: QR must not produce NaNs.
+        let mut rng = Xoshiro256::seed_from(54);
+        let base = DenseMatrix::randn(20, 1, &mut rng);
+        let mut cols = DenseMatrix::zeros(20, 2);
+        for i in 0..20 {
+            cols.set(i, 0, base.get(i, 0));
+            cols.set(i, 1, base.get(i, 0));
+        }
+        let (q, r) = qr_thin(&cols);
+        assert!(q.data().iter().all(|x| x.is_finite()));
+        assert!(r.data().iter().all(|x| x.is_finite()));
+        // Reconstruction still holds.
+        assert!(matmul(&q, &r).max_abs_diff(&cols) < 1e-4);
+    }
+
+    #[test]
+    fn square_orthogonal_input_gives_identity_r_scale() {
+        let e = DenseMatrix::eye(5);
+        let (q, r) = qr_thin(&e);
+        assert!(orthonormality_defect(&q) < 1e-6);
+        for i in 0..5 {
+            assert!((r.get(i, i).abs() - 1.0).abs() < 1e-5);
+        }
+    }
+}

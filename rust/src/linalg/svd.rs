@@ -1,0 +1,221 @@
+//! Randomized truncated SVD via subspace (power) iteration.
+//!
+//! Halko–Martinsson–Tropp structure: sketch `Y = A·G`, a few power
+//! iterations with QR re-orthonormalization, then solve the small
+//! projected problem `B = QᵀA` by Jacobi SVD of `B·Bᵀ` (k×k). This gives
+//! the top-`k` singular triplets to the accuracy spectral co-clustering
+//! needs (embeddings, not high-precision factorizations).
+
+use crate::matrix::{ops, DenseMatrix, Matrix};
+use crate::rng::Xoshiro256;
+
+use super::matmul::{matmul, matmul_at_b};
+use super::qr::qr_thin;
+
+#[derive(Clone, Debug)]
+pub struct SvdResult {
+    /// Left singular vectors, m×k (columns ordered by decreasing σ).
+    pub u: DenseMatrix,
+    /// Singular values, length k, decreasing.
+    pub s: Vec<f32>,
+    /// Right singular vectors, n×k.
+    pub v: DenseMatrix,
+}
+
+/// Jacobi eigendecomposition of a small symmetric matrix (f64, in place).
+/// Returns (eigenvalues, eigenvectors as columns), unordered.
+fn jacobi_eigh(a: &mut Vec<f64>, n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    for _sweep in 0..64 {
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[i * n + j] * a[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-14 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[p * n + q];
+                if apq.abs() < 1e-18 {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for i in 0..n {
+                    let aip = a[i * n + p];
+                    let aiq = a[i * n + q];
+                    a[i * n + p] = c * aip - s * aiq;
+                    a[i * n + q] = s * aip + c * aiq;
+                }
+                for j in 0..n {
+                    let apj = a[p * n + j];
+                    let aqj = a[q * n + j];
+                    a[p * n + j] = c * apj - s * aqj;
+                    a[q * n + j] = s * apj + c * aqj;
+                }
+                for i in 0..n {
+                    let vip = v[i * n + p];
+                    let viq = v[i * n + q];
+                    v[i * n + p] = c * vip - s * viq;
+                    v[i * n + q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    let evals = (0..n).map(|i| a[i * n + i]).collect();
+    (evals, v)
+}
+
+/// Randomized truncated SVD of `a` (either storage format).
+///
+/// * `k` — number of singular triplets to return.
+/// * `oversample` — extra sketch columns (HMT recommend 5–10).
+/// * `power_iters` — power iterations `q`; 2–4 suffices for the spectral
+///   gaps in co-clustering workloads.
+pub fn randomized_svd(
+    a: &Matrix,
+    k: usize,
+    oversample: usize,
+    power_iters: usize,
+    rng: &mut Xoshiro256,
+) -> SvdResult {
+    let (m, n) = (a.rows(), a.cols());
+    let l = (k + oversample).min(m.min(n));
+    assert!(k <= l, "k={k} exceeds sketch width possible for {m}x{n}");
+
+    // Sketch the range of A.
+    let g = DenseMatrix::randn(n, l, rng);
+    let mut y = ops::matmul_dense(a, &g); // m×l
+    let (mut q, _) = qr_thin(&y);
+    for _ in 0..power_iters {
+        let z = ops::matmul_transpose_dense(a, &q); // n×l
+        let (qz, _) = qr_thin(&z);
+        y = ops::matmul_dense(a, &qz); // m×l
+        let (qy, _) = qr_thin(&y);
+        q = qy;
+    }
+
+    // Projected matrix B = Qᵀ A  (l×n): small eigenproblem on B Bᵀ (l×l).
+    let bt = ops::matmul_transpose_dense(a, &q); // n×l == Bᵀ
+    let mut bbt: Vec<f64> = {
+        let g = matmul_at_b(&bt, &bt); // l×l = B·Bᵀ
+        g.data().iter().map(|&x| x as f64).collect()
+    };
+    let (evals, evecs) = jacobi_eigh(&mut bbt, l);
+
+    // Order by decreasing eigenvalue, keep top-k.
+    let mut order: Vec<usize> = (0..l).collect();
+    order.sort_by(|&i, &j| evals[j].partial_cmp(&evals[i]).unwrap());
+    let order = &order[..k];
+
+    let mut s = Vec::with_capacity(k);
+    let mut w = DenseMatrix::zeros(l, k); // eigenvectors of BBᵀ, top-k as columns
+    for (col, &idx) in order.iter().enumerate() {
+        s.push(evals[idx].max(0.0).sqrt() as f32);
+        for i in 0..l {
+            w.set(i, col, evecs[i * l + idx] as f32);
+        }
+    }
+
+    // U = Q·W (m×k); V = Bᵀ·W·Σ⁻¹ (n×k).
+    let u = matmul(&q, &w);
+    let mut v = matmul(&bt, &w);
+    for j in 0..k {
+        let inv = if s[j] > 1e-12 { 1.0 / s[j] } else { 0.0 };
+        for i in 0..n {
+            v.set(i, j, v.get(i, j) * inv);
+        }
+    }
+    SvdResult { u, s, v }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthonormality_defect;
+
+    /// Build a rank-r matrix with known singular values.
+    fn low_rank(m: usize, n: usize, sigmas: &[f32], rng: &mut Xoshiro256) -> DenseMatrix {
+        let r = sigmas.len();
+        let (qu, _) = qr_thin(&DenseMatrix::randn(m, r, rng));
+        let (qv, _) = qr_thin(&DenseMatrix::randn(n, r, rng));
+        let mut scaled = qu.clone();
+        for j in 0..r {
+            for i in 0..m {
+                scaled.set(i, j, scaled.get(i, j) * sigmas[j]);
+            }
+        }
+        matmul(&scaled, &qv.transpose())
+    }
+
+    #[test]
+    fn recovers_singular_values() {
+        let mut rng = Xoshiro256::seed_from(61);
+        let a = low_rank(60, 45, &[10.0, 5.0, 2.0, 1.0], &mut rng);
+        let out = randomized_svd(&Matrix::Dense(a), 4, 6, 3, &mut rng);
+        let want = [10.0, 5.0, 2.0, 1.0];
+        for (got, want) in out.s.iter().zip(want) {
+            assert!((got - want).abs() < 0.05, "got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn factors_are_orthonormal() {
+        let mut rng = Xoshiro256::seed_from(62);
+        let a = low_rank(80, 50, &[8.0, 4.0, 2.0], &mut rng);
+        let out = randomized_svd(&Matrix::Dense(a), 3, 5, 3, &mut rng);
+        assert!(orthonormality_defect(&out.u) < 1e-3);
+        assert!(orthonormality_defect(&out.v) < 1e-3);
+    }
+
+    #[test]
+    fn reconstruction_error_small_for_exact_rank() {
+        let mut rng = Xoshiro256::seed_from(63);
+        let a = low_rank(50, 40, &[6.0, 3.0], &mut rng);
+        let out = randomized_svd(&Matrix::Dense(a.clone()), 2, 6, 3, &mut rng);
+        // A ≈ U Σ Vᵀ
+        let mut us = out.u.clone();
+        for j in 0..2 {
+            for i in 0..50 {
+                us.set(i, j, us.get(i, j) * out.s[j]);
+            }
+        }
+        let back = matmul(&us, &out.v.transpose());
+        let err = back.max_abs_diff(&a);
+        assert!(err < 1e-2, "reconstruction err {err}");
+    }
+
+    #[test]
+    fn sparse_and_dense_agree() {
+        let mut rng = Xoshiro256::seed_from(64);
+        let a = low_rank(40, 30, &[5.0, 2.5, 1.0], &mut rng);
+        let s = crate::matrix::CsrMatrix::from_dense(&a);
+        let mut rng1 = Xoshiro256::seed_from(99);
+        let mut rng2 = Xoshiro256::seed_from(99);
+        let out_d = randomized_svd(&Matrix::Dense(a), 3, 5, 3, &mut rng1);
+        let out_s = randomized_svd(&Matrix::Sparse(s), 3, 5, 3, &mut rng2);
+        for j in 0..3 {
+            assert!((out_d.s[j] - out_s.s[j]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn handles_k_larger_than_rank() {
+        let mut rng = Xoshiro256::seed_from(65);
+        let a = low_rank(30, 30, &[4.0], &mut rng);
+        let out = randomized_svd(&Matrix::Dense(a), 3, 4, 2, &mut rng);
+        assert!((out.s[0] - 4.0).abs() < 0.05);
+        assert!(out.s[1] < 0.05);
+        assert!(out.s.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,122 @@
+//! Leveled stderr logger (dependency-free).
+//!
+//! Controlled by `LAMC_LOG` (error|warn|info|debug|trace, default info).
+//! Timestamps are monotonic seconds since process start — enough for
+//! correlating scheduler events without pulling in a clock/tz stack.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn from_env() -> Level {
+        match std::env::var("LAMC_LOG").unwrap_or_default().to_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+static START: OnceLock<Instant> = OnceLock::new();
+
+/// Current log level (lazily read from the environment).
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        let l = Level::from_env();
+        LEVEL.store(l as u8, Ordering::Relaxed);
+        return l;
+    }
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level programmatically (CLI `-v`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Seconds since first log call.
+pub fn uptime() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if l <= level() {
+        eprintln!("[{:>9.3}] {} {}: {}", uptime(), l.tag(), module, msg);
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Info, module_path!(), format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Warn, module_path!(), format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Error, module_path!(), format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::logging::log($crate::logging::Level::Debug, module_path!(), format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn set_level_round_trips() {
+        set_level(Level::Debug);
+        assert_eq!(level(), Level::Debug);
+        set_level(Level::Info);
+        assert_eq!(level(), Level::Info);
+    }
+
+    #[test]
+    fn uptime_monotonic() {
+        let a = uptime();
+        let b = uptime();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,173 @@
+//! `lamc` — launcher for the LAMC co-clustering framework.
+//!
+//! Commands:
+//! * `run`      — run LAMC (or a baseline) on a named dataset, report
+//!                time + NMI/ARI against the planted ground truth.
+//! * `plan`     — show the partition plan the probabilistic model picks.
+//! * `datasets` — list available dataset specs.
+//! * `artifacts`— show the AOT artifact manifest the runtime would use.
+//!
+//! Examples:
+//! ```text
+//! lamc run --dataset amazon1000 --method lamc-scc --k 5
+//! lamc run --dataset classic4 --method pnmtf --rows 3000
+//! lamc plan --rows 18000 --cols 1000 --p-thresh 0.99
+//! ```
+
+use anyhow::{bail, Context, Result};
+use lamc::cli::Args;
+use lamc::data;
+use lamc::metrics::score_coclustering;
+use lamc::partition::{plan, PlannerConfig};
+use lamc::pipeline::{AtomKind, Lamc, LamcConfig};
+use lamc::runtime::{Manifest, RuntimePool, RuntimePoolConfig};
+
+const USAGE: &str = "\
+lamc — Large-scale Adaptive Matrix Co-clustering
+
+USAGE:
+  lamc run      --dataset <amazon1000|classic4|rcv1_large> [--method lamc-scc|lamc-pnmtf|scc|pnmtf]
+                [--k N] [--rows N] [--seed N] [--workers N] [--p-thresh F]
+                [--tau F] [--no-runtime] [--verbose]
+  lamc plan     --rows N --cols N [--p-thresh F] [--row-frac F] [--col-frac F]
+  lamc datasets
+  lamc artifacts
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["verbose", "no-runtime", "help"])?;
+    if args.has("verbose") {
+        lamc::logging::set_level(lamc::logging::Level::Debug);
+    }
+    if args.has("help") || args.command.is_none() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.command.as_deref().unwrap() {
+        "run" => cmd_run(&args),
+        "plan" => cmd_plan(&args),
+        "datasets" => cmd_datasets(),
+        "artifacts" => cmd_artifacts(),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    args.expect_flags(&["dataset", "method", "k", "rows", "seed", "workers", "p-thresh", "tau"])?;
+    let dataset = args.get("dataset").context("--dataset required")?;
+    let method = args.get_or("method", "lamc-scc").to_lowercase();
+    let seed = args.get_u64("seed", 42)?;
+    let rows = args.get("rows").map(|r| r.parse::<usize>()).transpose()?;
+
+    let spec = data::datasets::spec(dataset).with_context(|| format!("unknown dataset '{dataset}'"))?;
+    let k = args.get_usize("k", spec.row_clusters)?;
+    lamc::log_info!("building dataset {dataset} (rows={rows:?})");
+    let ds = data::datasets::build(dataset, rows, seed).unwrap();
+
+    let (atom, partitioned): (AtomKind, bool) = match method.as_str() {
+        "lamc-scc" => (AtomKind::Scc, true),
+        "lamc-pnmtf" => (AtomKind::Pnmtf, true),
+        "scc" => (AtomKind::Scc, false),
+        "pnmtf" => (AtomKind::Pnmtf, false),
+        other => bail!("unknown method '{other}'"),
+    };
+
+    let runtime = if partitioned && !args.has("no-runtime") {
+        match RuntimePool::from_default_manifest(RuntimePoolConfig::default()) {
+            Ok(pool) => {
+                lamc::log_info!("PJRT runtime online ({} artifacts)", pool.manifest().artifacts.len());
+                Some(pool)
+            }
+            Err(e) => {
+                lamc::log_warn!("PJRT runtime unavailable ({e}); native route only");
+                None
+            }
+        }
+    } else {
+        None
+    };
+
+    let mut config = LamcConfig {
+        k,
+        atom,
+        seed,
+        workers: args.get_usize("workers", 0)?,
+        runtime,
+        ..Default::default()
+    };
+    config.planner.p_thresh = args.get_f64("p-thresh", config.planner.p_thresh)?;
+    config.merge.tau = args.get_f64("tau", config.merge.tau)?;
+
+    let lamc = Lamc::new(config);
+    let out = if partitioned { lamc.run(&ds.matrix)? } else { lamc.run_baseline(&ds.matrix)? };
+
+    let scores = score_coclustering(&ds.row_labels, &out.row_labels, &ds.col_labels, &out.col_labels);
+    println!("method      : {method}");
+    println!("dataset     : {dataset} ({}x{}, {})", ds.matrix.rows(), ds.matrix.cols(), if ds.matrix.is_sparse() { "sparse" } else { "dense" });
+    println!("plan        : {}x{} blocks of {}x{}, T_p={}", out.plan.m, out.plan.n, out.plan.phi, out.plan.psi, out.plan.t_p);
+    println!("k (found)   : {}", out.k);
+    println!("time        : {:.3} s", out.elapsed_s);
+    println!("routes      : {}", out.stats);
+    println!("NMI         : {:.4} (rows {:.4} / cols {:.4})", scores.nmi(), scores.row_nmi, scores.col_nmi);
+    println!("ARI         : {:.4} (rows {:.4} / cols {:.4})", scores.ari(), scores.row_ari, scores.col_ari);
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    args.expect_flags(&["rows", "cols", "p-thresh", "row-frac", "col-frac", "workers"])?;
+    let rows = args.get_usize("rows", 0)?;
+    let cols = args.get_usize("cols", 0)?;
+    anyhow::ensure!(rows > 0 && cols > 0, "--rows and --cols required");
+    let mut cfg = PlannerConfig::default();
+    cfg.p_thresh = args.get_f64("p-thresh", cfg.p_thresh)?;
+    cfg.prior.row_fraction = args.get_f64("row-frac", cfg.prior.row_fraction)?;
+    cfg.prior.col_fraction = args.get_f64("col-frac", cfg.prior.col_fraction)?;
+    let workers = args.get_usize("workers", 0)?;
+    if workers > 0 {
+        cfg.workers = workers;
+    }
+    let p = plan(rows, cols, &cfg);
+    println!("matrix       : {rows} x {cols}");
+    println!("blocks       : {} x {} of {} x {}", p.m, p.n, p.phi, p.psi);
+    println!("samplings    : T_p = {}", p.t_p);
+    println!("certified P  : {:.6} (threshold {})", p.certified_probability, cfg.p_thresh);
+    println!("total jobs   : {}", p.total_blocks());
+    println!("est. cost    : {:.3e} (model units)", p.estimated_cost);
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("{:<12} {:>8} {:>6}  {:<6} {:>4} {:>4}", "name", "rows", "cols", "kind", "k", "d");
+    for s in data::datasets::SPECS {
+        println!(
+            "{:<12} {:>8} {:>6}  {:<6} {:>4} {:>4}",
+            s.name, s.rows, s.cols, if s.sparse { "sparse" } else { "dense" }, s.row_clusters, s.col_clusters
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let Some(path) = lamc::runtime::find_manifest() else {
+        println!("no artifact manifest found — run `make artifacts`");
+        return Ok(());
+    };
+    let manifest = Manifest::load(&path)?;
+    println!("manifest: {path:?}");
+    println!("{:<12} {:<12} {:>5} {:>5} {:>4} {:>4} {:>5}", "name", "kind", "phi", "psi", "rank", "kmax", "iters");
+    for a in &manifest.artifacts {
+        println!(
+            "{:<12} {:<12} {:>5} {:>5} {:>4} {:>4} {:>5}  {}",
+            a.name, a.kind, a.phi, a.psi, a.rank, a.kmax, a.iters,
+            if a.path.exists() { "ok" } else { "MISSING" }
+        );
+    }
+    Ok(())
+}

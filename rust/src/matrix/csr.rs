@@ -1,0 +1,333 @@
+//! Compressed Sparse Row matrix for the text workloads.
+//!
+//! CLASSIC4- and RCV1-style document–term matrices are ~1–2% dense;
+//! storing them densely at RCV1 scale would exceed the testbed budget,
+//! and the paper's sparse experiments (Table II, "up to 30%" headline)
+//! depend on sparsity-aware traversal.
+
+use super::dense::DenseMatrix;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    /// Row pointers, len = rows + 1.
+    indptr: Vec<usize>,
+    /// Column indices per stored entry, len = nnz. `u32` keeps RCV1-scale
+    /// index arrays half the size of `usize`.
+    indices: Vec<u32>,
+    /// Stored values, len = nnz.
+    values: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from raw CSR arrays (validates invariants).
+    pub fn new(rows: usize, cols: usize, indptr: Vec<usize>, indices: Vec<u32>, values: Vec<f32>) -> Self {
+        assert_eq!(indptr.len(), rows + 1, "indptr length");
+        assert_eq!(indices.len(), values.len(), "indices/values length");
+        assert_eq!(*indptr.last().unwrap_or(&0), indices.len(), "indptr tail");
+        debug_assert!(indptr.windows(2).all(|w| w[0] <= w[1]), "indptr monotone");
+        debug_assert!(indices.iter().all(|&j| (j as usize) < cols), "col index bound");
+        Self { rows, cols, indptr, indices, values }
+    }
+
+    /// Build from (row, col, value) triplets; duplicates are summed.
+    pub fn from_triplets(rows: usize, cols: usize, mut triplets: Vec<(usize, usize, f32)>) -> Self {
+        triplets.sort_unstable_by_key(|&(i, j, _)| (i, j));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices: Vec<u32> = Vec::with_capacity(triplets.len());
+        let mut values: Vec<f32> = Vec::with_capacity(triplets.len());
+        for (i, j, v) in triplets {
+            assert!(i < rows && j < cols, "triplet out of bounds");
+            if let (Some(&last_j), true) = (indices.last(), indptr[i + 1] > indptr[i]) {
+                if last_j as usize == j && indices.len() == indptr[i + 1] {
+                    // Same row (current row being filled) and same column.
+                    *values.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            indices.push(j as u32);
+            values.push(v);
+            indptr[i + 1] = indices.len();
+        }
+        // Forward-fill row pointers for empty rows.
+        for i in 1..=rows {
+            if indptr[i] < indptr[i - 1] {
+                indptr[i] = indptr[i - 1];
+            }
+        }
+        Self::new(rows, cols, indptr, indices, values)
+    }
+
+    /// Convert a dense matrix, dropping exact zeros.
+    pub fn from_dense(d: &DenseMatrix) -> Self {
+        let mut indptr = Vec::with_capacity(d.rows() + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for i in 0..d.rows() {
+            for (j, &v) in d.row(i).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(j as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Self { rows: d.rows(), cols: d.cols(), indptr, indices, values }
+    }
+
+    pub fn to_dense(&self) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let row = out.row_mut(i);
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                row[self.indices[idx] as usize] = self.values[idx];
+            }
+        }
+        out
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of stored entries.
+    pub fn density(&self) -> f64 {
+        if self.rows == 0 || self.cols == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+        }
+    }
+
+    /// Iterate the stored entries of row `i` as `(col, value)`.
+    #[inline]
+    pub fn row_iter(&self, i: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        self.indices[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(|(&j, &v)| (j as usize, v))
+    }
+
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|i| {
+                let lo = self.indptr[i];
+                let hi = self.indptr[i + 1];
+                self.values[lo..hi].iter().map(|&v| v as f64).sum()
+            })
+            .collect()
+    }
+
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut sums = vec![0.0f64; self.cols];
+        for (&j, &v) in self.indices.iter().zip(&self.values) {
+            sums[j as usize] += v as f64;
+        }
+        sums
+    }
+
+    pub fn frobenius(&self) -> f64 {
+        self.values.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Gather the dense block `A[rows, cols]` (arbitrary index order).
+    ///
+    /// Builds a column lookup once (O(N)), then streams each selected
+    /// row's non-zeros — O(sum nnz(row)) instead of O(|rows|·|cols|·log).
+    pub fn gather_block(&self, rows: &[usize], cols: &[usize]) -> DenseMatrix {
+        let mut col_pos: Vec<i32> = vec![-1; self.cols];
+        for (bj, &j) in cols.iter().enumerate() {
+            col_pos[j] = bj as i32;
+        }
+        let mut out = DenseMatrix::zeros(rows.len(), cols.len());
+        for (bi, &i) in rows.iter().enumerate() {
+            let dst = out.row_mut(bi);
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                let bj = col_pos[self.indices[idx] as usize];
+                if bj >= 0 {
+                    dst[bj as usize] = self.values[idx];
+                }
+            }
+        }
+        out
+    }
+
+    /// Sparse × dense: `Y = A · X` where `X` is `cols × k` dense, `Y` is
+    /// `rows × k`. The workhorse of sparse spectral co-clustering.
+    pub fn matmul_dense(&self, x: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.cols, x.rows(), "shape mismatch in csr·dense");
+        let k = x.cols();
+        let mut out = DenseMatrix::zeros(self.rows, k);
+        for i in 0..self.rows {
+            let dst = out.row_mut(i);
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                let v = self.values[idx];
+                let xr = x.row(self.indices[idx] as usize);
+                for t in 0..k {
+                    dst[t] += v * xr[t];
+                }
+            }
+        }
+        out
+    }
+
+    /// Transposed sparse × dense: `Y = Aᵀ · X` where `X` is `rows × k`.
+    pub fn matmul_transpose_dense(&self, x: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.rows, x.rows(), "shape mismatch in csrᵀ·dense");
+        let k = x.cols();
+        let mut out = DenseMatrix::zeros(self.cols, k);
+        for i in 0..self.rows {
+            let xr = x.row(i);
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                let v = self.values[idx];
+                let dst = out.row_mut(self.indices[idx] as usize);
+                for t in 0..k {
+                    dst[t] += v * xr[t];
+                }
+            }
+        }
+        out
+    }
+
+    /// Scale rows and columns: `B = diag(r) · A · diag(c)` (normalization).
+    pub fn scale_rows_cols(&self, r: &[f32], c: &[f32]) -> CsrMatrix {
+        assert_eq!(r.len(), self.rows);
+        assert_eq!(c.len(), self.cols);
+        let mut values = self.values.clone();
+        for i in 0..self.rows {
+            for idx in self.indptr[i]..self.indptr[i + 1] {
+                values[idx] *= r[i] * c[self.indices[idx] as usize];
+            }
+        }
+        CsrMatrix { rows: self.rows, cols: self.cols, indptr: self.indptr.clone(), indices: self.indices.clone(), values }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn sample() -> CsrMatrix {
+        // [[1, 0, 2],
+        //  [0, 0, 0],
+        //  [3, 4, 0]]
+        CsrMatrix::from_triplets(3, 3, vec![(0, 0, 1.0), (0, 2, 2.0), (2, 0, 3.0), (2, 1, 4.0)])
+    }
+
+    #[test]
+    fn triplets_round_trip_dense() {
+        let s = sample();
+        let d = s.to_dense();
+        assert_eq!(d.get(0, 2), 2.0);
+        assert_eq!(d.get(1, 1), 0.0);
+        assert_eq!(CsrMatrix::from_dense(&d), s);
+    }
+
+    #[test]
+    fn triplets_sum_duplicates() {
+        let s = CsrMatrix::from_triplets(1, 2, vec![(0, 1, 1.0), (0, 1, 2.5)]);
+        assert_eq!(s.nnz(), 1);
+        assert_eq!(s.to_dense().get(0, 1), 3.5);
+    }
+
+    #[test]
+    fn empty_rows_handled() {
+        let s = sample();
+        assert_eq!(s.row_iter(1).count(), 0);
+        assert_eq!(s.row_sums()[1], 0.0);
+    }
+
+    #[test]
+    fn sums_and_norm_match_dense() {
+        let s = sample();
+        let d = s.to_dense();
+        assert_eq!(s.row_sums(), d.row_sums());
+        assert_eq!(s.col_sums(), d.col_sums());
+        assert!((s.frobenius() - d.frobenius()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gather_block_matches_dense_gather() {
+        let mut rng = Xoshiro256::seed_from(12);
+        let mut trip = Vec::new();
+        for _ in 0..200 {
+            trip.push((rng.next_below(20), rng.next_below(15), rng.next_f32()));
+        }
+        let s = CsrMatrix::from_triplets(20, 15, trip);
+        let d = s.to_dense();
+        let rows = [7, 3, 19, 0];
+        let cols = [14, 2, 9];
+        assert_eq!(s.gather_block(&rows, &cols).data(), d.gather_block(&rows, &cols).data());
+    }
+
+    #[test]
+    fn matmul_dense_matches_naive() {
+        let mut rng = Xoshiro256::seed_from(13);
+        let mut trip = Vec::new();
+        for _ in 0..100 {
+            trip.push((rng.next_below(10), rng.next_below(12), rng.next_f32()));
+        }
+        let s = CsrMatrix::from_triplets(10, 12, trip);
+        let x = DenseMatrix::randn(12, 4, &mut rng);
+        let y = s.matmul_dense(&x);
+        let d = s.to_dense();
+        for i in 0..10 {
+            for t in 0..4 {
+                let want: f32 = (0..12).map(|j| d.get(i, j) * x.get(j, t)).sum();
+                assert!((y.get(i, t) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_transpose_matches_naive() {
+        let mut rng = Xoshiro256::seed_from(14);
+        let mut trip = Vec::new();
+        for _ in 0..100 {
+            trip.push((rng.next_below(10), rng.next_below(12), rng.next_f32()));
+        }
+        let s = CsrMatrix::from_triplets(10, 12, trip);
+        let x = DenseMatrix::randn(10, 3, &mut rng);
+        let y = s.matmul_transpose_dense(&x);
+        let d = s.to_dense();
+        for j in 0..12 {
+            for t in 0..3 {
+                let want: f32 = (0..10).map(|i| d.get(i, j) * x.get(i, t)).sum();
+                assert!((y.get(j, t) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn scale_rows_cols_matches_dense() {
+        let s = sample();
+        let r = [2.0f32, 1.0, 0.5];
+        let c = [1.0f32, 3.0, 2.0];
+        let scaled = s.scale_rows_cols(&r, &c).to_dense();
+        assert_eq!(scaled.get(0, 0), 2.0);
+        assert_eq!(scaled.get(0, 2), 8.0);
+        assert_eq!(scaled.get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn density_fraction() {
+        let s = sample();
+        assert!((s.density() - 4.0 / 9.0).abs() < 1e-12);
+    }
+}

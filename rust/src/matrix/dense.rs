@@ -1,0 +1,256 @@
+//! Row-major dense `f32` matrix.
+//!
+//! The dense substrate favours simplicity + cache-friendly row-major
+//! traversal; the compute-heavy kernels live in [`crate::linalg`] and are
+//! blocked/threaded there rather than here.
+
+use crate::rng::Xoshiro256;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>, // row-major, len == rows * cols
+}
+
+impl DenseMatrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from an owned row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from a slice of row vectors (test/ergonomic constructor).
+    pub fn from_rows(rows: &[Vec<f32>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |v| v.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    /// i.i.d. standard-normal entries (used by randomized sketching).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Xoshiro256) -> Self {
+        let data = (0..rows * cols).map(|_| rng.next_normal() as f32).collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Self {
+        let mut out = Self::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on larger matrices.
+        const B: usize = 64;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Gather submatrix `A[rows, cols]` in the given index order.
+    pub fn gather_block(&self, rows: &[usize], cols: &[usize]) -> DenseMatrix {
+        let mut out = DenseMatrix::zeros(rows.len(), cols.len());
+        for (bi, &i) in rows.iter().enumerate() {
+            let src = self.row(i);
+            let dst = out.row_mut(bi);
+            for (bj, &j) in cols.iter().enumerate() {
+                dst[bj] = src[j];
+            }
+        }
+        out
+    }
+
+    /// Row sums in f64 (degree vector `D1`).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows)
+            .map(|i| self.row(i).iter().map(|&x| x as f64).sum())
+            .collect()
+    }
+
+    /// Column sums in f64 (degree vector `D2`).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut sums = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            for (j, &x) in self.row(i).iter().enumerate() {
+                sums[j] += x as f64;
+            }
+        }
+        sums
+    }
+
+    /// Frobenius norm with f64 accumulation.
+    pub fn frobenius(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Elementwise maximum absolute difference (test helper).
+    pub fn max_abs_diff(&self, other: &Self) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Zero-pad (or truncate is forbidden — asserts growth) to shape
+    /// `(r, c)`; used to fit odd-sized partition blocks to a compiled
+    /// artifact's static shape.
+    pub fn pad_to(&self, r: usize, c: usize) -> DenseMatrix {
+        assert!(r >= self.rows && c >= self.cols, "pad_to cannot shrink");
+        let mut out = DenseMatrix::zeros(r, c);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Scale every entry in place.
+    pub fn scale(&mut self, s: f32) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let m = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 2);
+        assert_eq!(m.get(0, 1), 2.0);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer length mismatch")]
+    fn from_vec_checks_length() {
+        DenseMatrix::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256::seed_from(11);
+        let m = DenseMatrix::randn(37, 53, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn transpose_values() {
+        let m = DenseMatrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.get(2, 1), 6.0);
+        assert_eq!(t.get(0, 0), 1.0);
+    }
+
+    #[test]
+    fn sums_match_manual() {
+        let m = DenseMatrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.row_sums(), vec![3.0, 7.0]);
+        assert_eq!(m.col_sums(), vec![4.0, 6.0]);
+    }
+
+    #[test]
+    fn frobenius_pythagoras() {
+        let m = DenseMatrix::from_rows(&[vec![3.0, 0.0], vec![0.0, 4.0]]);
+        assert!((m.frobenius() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gather_block_orders_indices() {
+        let m = DenseMatrix::from_rows(&[
+            vec![0.0, 1.0, 2.0],
+            vec![3.0, 4.0, 5.0],
+            vec![6.0, 7.0, 8.0],
+        ]);
+        let b = m.gather_block(&[1, 0], &[2, 0]);
+        assert_eq!(b.data(), &[5.0, 3.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn pad_to_grows_with_zeros() {
+        let m = DenseMatrix::from_rows(&[vec![1.0], vec![2.0]]);
+        let p = m.pad_to(3, 2);
+        assert_eq!(p.get(0, 0), 1.0);
+        assert_eq!(p.get(1, 0), 2.0);
+        assert_eq!(p.get(2, 1), 0.0);
+        assert_eq!(p.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn eye_is_identity_under_gather() {
+        let e = DenseMatrix::eye(4);
+        assert_eq!(e.get(2, 2), 1.0);
+        assert_eq!(e.get(2, 3), 0.0);
+        assert_eq!(e.row_sums(), vec![1.0; 4]);
+    }
+}

@@ -1,0 +1,209 @@
+//! Matrix (de)serialization.
+//!
+//! A tiny self-describing binary format (`LAMC` magic + format tag) so
+//! generated datasets can be cached on disk between benchmark runs, plus
+//! a MatrixMarket-subset text reader for interoperability with external
+//! sparse datasets.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{CsrMatrix, DenseMatrix, Matrix};
+
+const MAGIC: &[u8; 4] = b"LAMC";
+const TAG_DENSE: u8 = 1;
+const TAG_CSR: u8 = 2;
+
+fn write_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    for &x in xs {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut buf = vec![0u8; n * 4];
+    r.read_exact(&mut buf)?;
+    Ok(buf.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+}
+
+/// Save any matrix to the LAMC binary format.
+pub fn save(matrix: &Matrix, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    w.write_all(MAGIC)?;
+    match matrix {
+        Matrix::Dense(d) => {
+            w.write_all(&[TAG_DENSE])?;
+            write_u64(&mut w, d.rows() as u64)?;
+            write_u64(&mut w, d.cols() as u64)?;
+            write_f32s(&mut w, d.data())?;
+        }
+        Matrix::Sparse(s) => {
+            w.write_all(&[TAG_CSR])?;
+            write_u64(&mut w, s.rows() as u64)?;
+            write_u64(&mut w, s.cols() as u64)?;
+            write_u64(&mut w, s.nnz() as u64)?;
+            // Re-derive CSR arrays through the public API to avoid
+            // exposing internals: stream triplets row-major.
+            for i in 0..s.rows() {
+                for (j, v) in s.row_iter(i) {
+                    write_u64(&mut w, i as u64)?;
+                    write_u64(&mut w, j as u64)?;
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a matrix saved by [`save`].
+pub fn load(path: &Path) -> Result<Matrix> {
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a LAMC matrix file: {path:?}");
+    }
+    let mut tag = [0u8; 1];
+    r.read_exact(&mut tag)?;
+    match tag[0] {
+        TAG_DENSE => {
+            let rows = read_u64(&mut r)? as usize;
+            let cols = read_u64(&mut r)? as usize;
+            let data = read_f32s(&mut r, rows * cols)?;
+            Ok(Matrix::Dense(DenseMatrix::from_vec(rows, cols, data)))
+        }
+        TAG_CSR => {
+            let rows = read_u64(&mut r)? as usize;
+            let cols = read_u64(&mut r)? as usize;
+            let nnz = read_u64(&mut r)? as usize;
+            let mut triplets = Vec::with_capacity(nnz);
+            for _ in 0..nnz {
+                let i = read_u64(&mut r)? as usize;
+                let j = read_u64(&mut r)? as usize;
+                let mut b = [0u8; 4];
+                r.read_exact(&mut b)?;
+                triplets.push((i, j, f32::from_le_bytes(b)));
+            }
+            Ok(Matrix::Sparse(CsrMatrix::from_triplets(rows, cols, triplets)))
+        }
+        t => bail!("unknown matrix tag {t}"),
+    }
+}
+
+/// Read a MatrixMarket `coordinate real general` file into CSR.
+///
+/// Supports the subset emitted by scipy's `mmwrite` for real sparse
+/// matrices; 1-based indices per the spec.
+pub fn read_matrix_market(path: &Path) -> Result<CsrMatrix> {
+    let r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut lines = r.lines();
+    let header = lines.next().context("empty MatrixMarket file")??;
+    if !header.starts_with("%%MatrixMarket matrix coordinate") {
+        bail!("unsupported MatrixMarket header: {header}");
+    }
+    let pattern = header.contains(" pattern");
+    let mut dims: Option<(usize, usize, usize)> = None;
+    let mut triplets = Vec::new();
+    for line in lines {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('%') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        if dims.is_none() {
+            let m: usize = parts.next().context("dims")?.parse()?;
+            let n: usize = parts.next().context("dims")?.parse()?;
+            let nnz: usize = parts.next().context("dims")?.parse()?;
+            dims = Some((m, n, nnz));
+            triplets.reserve(nnz);
+            continue;
+        }
+        let i: usize = parts.next().context("row")?.parse()?;
+        let j: usize = parts.next().context("col")?.parse()?;
+        let v: f32 = if pattern { 1.0 } else { parts.next().context("val")?.parse()? };
+        if i == 0 || j == 0 {
+            bail!("MatrixMarket indices are 1-based; got ({i},{j})");
+        }
+        triplets.push((i - 1, j - 1, v));
+    }
+    let (m, n, _) = dims.context("missing MatrixMarket size line")?;
+    Ok(CsrMatrix::from_triplets(m, n, triplets))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn dense_round_trip() {
+        let mut rng = Xoshiro256::seed_from(21);
+        let d = DenseMatrix::randn(13, 7, &mut rng);
+        let dir = std::env::temp_dir().join("lamc_io_test_dense");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.lamc");
+        save(&Matrix::Dense(d.clone()), &path).unwrap();
+        match load(&path).unwrap() {
+            Matrix::Dense(got) => assert_eq!(got, d),
+            _ => panic!("wrong tag"),
+        }
+    }
+
+    #[test]
+    fn sparse_round_trip() {
+        let s = CsrMatrix::from_triplets(4, 5, vec![(0, 1, 2.0), (3, 4, -1.5), (2, 0, 7.0)]);
+        let dir = std::env::temp_dir().join("lamc_io_test_sparse");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.lamc");
+        save(&Matrix::Sparse(s.clone()), &path).unwrap();
+        match load(&path).unwrap() {
+            Matrix::Sparse(got) => assert_eq!(got, s),
+            _ => panic!("wrong tag"),
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("lamc_io_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.lamc");
+        std::fs::write(&path, b"not a matrix").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn matrix_market_subset() {
+        let dir = std::env::temp_dir().join("lamc_io_test_mm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate real general\n% comment\n3 4 2\n1 2 5.0\n3 4 -1.0\n",
+        )
+        .unwrap();
+        let s = read_matrix_market(&path).unwrap();
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.cols(), 4);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.to_dense().get(0, 1), 5.0);
+        assert_eq!(s.to_dense().get(2, 3), -1.0);
+    }
+}

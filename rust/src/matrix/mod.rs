@@ -1,0 +1,150 @@
+//! Matrix substrates: dense row-major and CSR sparse storage.
+//!
+//! All co-clustering inputs are `M × N` matrices of `f32` (rows = features
+//! or documents, columns = samples or terms, matching the paper's
+//! formulation in §III-A). Dense storage backs the small/medium dense
+//! workloads (Amazon-1000); CSR backs the sparse text workloads
+//! (CLASSIC4, RCV1-Large) where densifying would not fit the testbed.
+
+pub mod csr;
+pub mod dense;
+pub mod io;
+pub mod ops;
+
+pub use csr::CsrMatrix;
+pub use dense::DenseMatrix;
+
+/// A matrix that can serve as co-clustering input: either storage format,
+/// unified behind the handful of accessors the algorithms need.
+#[derive(Clone, Debug)]
+pub enum Matrix {
+    Dense(DenseMatrix),
+    Sparse(CsrMatrix),
+}
+
+impl Matrix {
+    pub fn rows(&self) -> usize {
+        match self {
+            Matrix::Dense(m) => m.rows(),
+            Matrix::Sparse(m) => m.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Matrix::Dense(m) => m.cols(),
+            Matrix::Sparse(m) => m.cols(),
+        }
+    }
+
+    /// Number of stored non-zeros (dense counts all entries).
+    pub fn nnz(&self) -> usize {
+        match self {
+            Matrix::Dense(m) => m.rows() * m.cols(),
+            Matrix::Sparse(m) => m.nnz(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Matrix::Sparse(_))
+    }
+
+    /// Extract the dense submatrix `A[rows, cols]` (gather, not a view —
+    /// the partition sampler permutes indices so blocks are not contiguous).
+    pub fn gather_block(&self, rows: &[usize], cols: &[usize]) -> DenseMatrix {
+        match self {
+            Matrix::Dense(m) => m.gather_block(rows, cols),
+            Matrix::Sparse(m) => m.gather_block(rows, cols),
+        }
+    }
+
+    /// Row sums (degrees of the bipartite row vertices).
+    pub fn row_sums(&self) -> Vec<f64> {
+        match self {
+            Matrix::Dense(m) => m.row_sums(),
+            Matrix::Sparse(m) => m.row_sums(),
+        }
+    }
+
+    /// Column sums (degrees of the bipartite column vertices).
+    pub fn col_sums(&self) -> Vec<f64> {
+        match self {
+            Matrix::Dense(m) => m.col_sums(),
+            Matrix::Sparse(m) => m.col_sums(),
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius(&self) -> f64 {
+        match self {
+            Matrix::Dense(m) => m.frobenius(),
+            Matrix::Sparse(m) => m.frobenius(),
+        }
+    }
+
+    /// Force to dense (used by baselines that require dense input; callers
+    /// must check size budgets first — see `coordinator::limits`).
+    pub fn to_dense(&self) -> DenseMatrix {
+        match self {
+            Matrix::Dense(m) => m.clone(),
+            Matrix::Sparse(m) => m.to_dense(),
+        }
+    }
+
+    /// Approximate resident bytes of the storage.
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            Matrix::Dense(m) => m.rows() * m.cols() * std::mem::size_of::<f32>(),
+            Matrix::Sparse(m) => {
+                m.nnz() * (std::mem::size_of::<f32>() + std::mem::size_of::<u32>())
+                    + (m.rows() + 1) * std::mem::size_of::<usize>()
+            }
+        }
+    }
+}
+
+impl From<DenseMatrix> for Matrix {
+    fn from(m: DenseMatrix) -> Self {
+        Matrix::Dense(m)
+    }
+}
+
+impl From<CsrMatrix> for Matrix {
+    fn from(m: CsrMatrix) -> Self {
+        Matrix::Sparse(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enum_dispatch_matches_backends() {
+        let d = DenseMatrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 2.0]]);
+        let s = CsrMatrix::from_dense(&d);
+        let md: Matrix = d.clone().into();
+        let ms: Matrix = s.into();
+        assert_eq!(md.rows(), ms.rows());
+        assert_eq!(md.cols(), ms.cols());
+        assert_eq!(md.row_sums(), ms.row_sums());
+        assert_eq!(md.col_sums(), ms.col_sums());
+        assert!((md.frobenius() - ms.frobenius()).abs() < 1e-12);
+        assert_eq!(ms.nnz(), 2);
+        assert_eq!(md.nnz(), 4);
+    }
+
+    #[test]
+    fn gather_block_consistent_across_backends() {
+        let d = DenseMatrix::from_rows(&[
+            vec![1.0, 2.0, 3.0],
+            vec![4.0, 5.0, 6.0],
+            vec![7.0, 8.0, 9.0],
+        ]);
+        let s = CsrMatrix::from_dense(&d);
+        let bd = Matrix::from(d).gather_block(&[2, 0], &[1, 2]);
+        let bs = Matrix::from(s).gather_block(&[2, 0], &[1, 2]);
+        assert_eq!(bd.data(), bs.data());
+        assert_eq!(bd.data(), &[8.0, 9.0, 2.0, 3.0]);
+    }
+}

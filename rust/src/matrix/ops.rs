@@ -1,0 +1,169 @@
+//! Shared matrix operations used by multiple co-clustering algorithms.
+
+use super::{CsrMatrix, DenseMatrix, Matrix};
+
+/// Clamp used when inverting degree vectors: rows/columns that are all
+/// zero (padding, empty documents) get weight 0 rather than Inf, which
+/// drops them out of the spectral embedding instead of poisoning it.
+pub const DEGREE_EPS: f64 = 1e-12;
+
+/// `d → d^{-1/2}` with zero-degree protection.
+pub fn inv_sqrt_degrees(degrees: &[f64]) -> Vec<f32> {
+    degrees
+        .iter()
+        .map(|&d| if d > DEGREE_EPS { (1.0 / d.sqrt()) as f32 } else { 0.0 })
+        .collect()
+}
+
+/// Bipartite spectral normalization `A_n = D1^{-1/2} · A · D2^{-1/2}`
+/// (Dhillon 2001 §4), preserving the input's storage format.
+pub fn bipartite_normalize(a: &Matrix) -> (Matrix, Vec<f32>, Vec<f32>) {
+    let r = inv_sqrt_degrees(&a.row_sums());
+    let c = inv_sqrt_degrees(&a.col_sums());
+    let an = match a {
+        Matrix::Dense(d) => {
+            let mut out = d.clone();
+            for i in 0..out.rows() {
+                let ri = r[i];
+                for (j, x) in out.row_mut(i).iter_mut().enumerate() {
+                    *x *= ri * c[j];
+                }
+            }
+            Matrix::Dense(out)
+        }
+        Matrix::Sparse(s) => Matrix::Sparse(s.scale_rows_cols(&r, &c)),
+    };
+    (an, r, c)
+}
+
+/// `Y = A · X` for either storage format (`X` dense `cols×k`).
+pub fn matmul_dense(a: &Matrix, x: &DenseMatrix) -> DenseMatrix {
+    match a {
+        Matrix::Dense(d) => crate::linalg::matmul::matmul(d, x),
+        Matrix::Sparse(s) => s.matmul_dense(x),
+    }
+}
+
+/// `Y = Aᵀ · X` for either storage format (`X` dense `rows×k`).
+pub fn matmul_transpose_dense(a: &Matrix, x: &DenseMatrix) -> DenseMatrix {
+    match a {
+        Matrix::Dense(d) => crate::linalg::matmul::matmul_at_b(d, x),
+        Matrix::Sparse(s) => s.matmul_transpose_dense(x),
+    }
+}
+
+/// Vertically stack two dense matrices with equal column counts.
+pub fn vstack(top: &DenseMatrix, bottom: &DenseMatrix) -> DenseMatrix {
+    assert_eq!(top.cols(), bottom.cols(), "vstack column mismatch");
+    let mut data = Vec::with_capacity((top.rows() + bottom.rows()) * top.cols());
+    data.extend_from_slice(top.data());
+    data.extend_from_slice(bottom.data());
+    DenseMatrix::from_vec(top.rows() + bottom.rows(), top.cols(), data)
+}
+
+/// Scale each row `i` of `m` by `w[i]` in place.
+pub fn scale_rows_inplace(m: &mut DenseMatrix, w: &[f32]) {
+    assert_eq!(m.rows(), w.len());
+    for i in 0..m.rows() {
+        let wi = w[i];
+        for x in m.row_mut(i) {
+            *x *= wi;
+        }
+    }
+}
+
+/// Make a CSR copy of any matrix (used when a sparse pipeline receives a
+/// dense input).
+pub fn to_csr(a: &Matrix) -> CsrMatrix {
+    match a {
+        Matrix::Dense(d) => CsrMatrix::from_dense(d),
+        Matrix::Sparse(s) => s.clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn inv_sqrt_handles_zero() {
+        let out = inv_sqrt_degrees(&[4.0, 0.0, 1.0]);
+        assert_eq!(out, vec![0.5, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn normalize_dense_matches_manual() {
+        let a = DenseMatrix::from_rows(&[vec![1.0, 1.0], vec![1.0, 3.0]]);
+        let (an, r, c) = bipartite_normalize(&Matrix::Dense(a));
+        // row sums = [2,4]; col sums = [2,4]
+        assert!((r[0] - (0.5f32).sqrt()).abs() < 1e-6);
+        assert!((c[1] - 0.5).abs() < 1e-6);
+        let an = an.to_dense();
+        // an[1][1] = 3 / sqrt(4*4) = 0.75
+        assert!((an.get(1, 1) - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalize_sparse_matches_dense_path() {
+        let mut rng = Xoshiro256::seed_from(31);
+        let mut trip = Vec::new();
+        for _ in 0..60 {
+            trip.push((rng.next_below(8), rng.next_below(9), rng.next_f32() + 0.1));
+        }
+        let s = CsrMatrix::from_triplets(8, 9, trip);
+        let d = s.to_dense();
+        let (an_s, _, _) = bipartite_normalize(&Matrix::Sparse(s));
+        let (an_d, _, _) = bipartite_normalize(&Matrix::Dense(d));
+        assert!(an_s.to_dense().max_abs_diff(&an_d.to_dense()) < 1e-6);
+    }
+
+    #[test]
+    fn normalized_matrix_top_singular_value_is_one() {
+        // For a connected bipartite graph the leading singular value of
+        // A_n is exactly 1 with singular pair (D1^{1/2}1, D2^{1/2}1).
+        let mut rng = Xoshiro256::seed_from(32);
+        let mut a = DenseMatrix::randn(12, 10, &mut rng);
+        for x in a.data_mut() {
+            *x = x.abs() + 0.05;
+        }
+        let (an, _, _) = bipartite_normalize(&Matrix::Dense(a));
+        let an = an.to_dense();
+        // Power iteration for sigma_max.
+        let mut v = DenseMatrix::from_vec(10, 1, vec![1.0; 10]);
+        for _ in 0..200 {
+            let u = crate::linalg::matmul::matmul(&an, &v);
+            let mut w = crate::linalg::matmul::matmul_at_b(&an, &u);
+            let n = w.frobenius() as f32;
+            w.scale(1.0 / n);
+            v = w;
+        }
+        let u = crate::linalg::matmul::matmul(&an, &v);
+        let sigma = u.frobenius();
+        assert!((sigma - 1.0).abs() < 1e-3, "sigma {sigma}");
+    }
+
+    #[test]
+    fn vstack_shapes_and_values() {
+        let a = DenseMatrix::from_rows(&[vec![1.0, 2.0]]);
+        let b = DenseMatrix::from_rows(&[vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let v = vstack(&a, &b);
+        assert_eq!(v.rows(), 3);
+        assert_eq!(v.get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn matmul_dispatch_agrees() {
+        let mut rng = Xoshiro256::seed_from(33);
+        let d = DenseMatrix::randn(9, 7, &mut rng);
+        let s = CsrMatrix::from_dense(&d);
+        let x = DenseMatrix::randn(7, 3, &mut rng);
+        let yd = matmul_dense(&Matrix::Dense(d.clone()), &x);
+        let ys = matmul_dense(&Matrix::Sparse(s.clone()), &x);
+        assert!(yd.max_abs_diff(&ys) < 1e-4);
+        let xt = DenseMatrix::randn(9, 3, &mut rng);
+        let zd = matmul_transpose_dense(&Matrix::Dense(d), &xt);
+        let zs = matmul_transpose_dense(&Matrix::Sparse(s), &xt);
+        assert!(zd.max_abs_diff(&zs) < 1e-4);
+    }
+}

@@ -1,0 +1,164 @@
+//! Co-cluster value type used by the merging stage.
+
+/// A co-cluster over global indices, with per-id vote mass accumulated
+/// across merges. Freshly-detected atoms have vote 1.0 on every member.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cocluster {
+    /// Sorted global row ids.
+    pub rows: Vec<u32>,
+    /// Vote mass per row id (aligned with `rows`).
+    pub row_votes: Vec<f32>,
+    /// Sorted global column ids.
+    pub cols: Vec<u32>,
+    /// Vote mass per column id (aligned with `cols`).
+    pub col_votes: Vec<f32>,
+    /// Number of atom co-clusters merged into this one.
+    pub weight: f32,
+    /// Best (lowest) atom objective among members — a quality hint.
+    pub quality: f64,
+}
+
+impl Cocluster {
+    /// Build an atom co-cluster (vote 1 everywhere). Ids are sorted and
+    /// deduplicated defensively.
+    pub fn atom(mut rows: Vec<u32>, mut cols: Vec<u32>, quality: f64) -> Self {
+        rows.sort_unstable();
+        rows.dedup();
+        cols.sort_unstable();
+        cols.dedup();
+        let row_votes = vec![1.0; rows.len()];
+        let col_votes = vec![1.0; cols.len()];
+        Self { rows, row_votes, cols, col_votes, weight: 1.0, quality }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty() || self.cols.is_empty()
+    }
+
+    /// Area = |rows| · |cols| (used for tie-breaking and pruning).
+    pub fn area(&self) -> usize {
+        self.rows.len() * self.cols.len()
+    }
+
+    /// Merge two co-clusters: union of ids with vote accumulation.
+    pub fn merge(&self, other: &Cocluster) -> Cocluster {
+        let (rows, row_votes) = merge_voted(&self.rows, &self.row_votes, &other.rows, &other.row_votes);
+        let (cols, col_votes) = merge_voted(&self.cols, &self.col_votes, &other.cols, &other.col_votes);
+        Cocluster {
+            rows,
+            row_votes,
+            cols,
+            col_votes,
+            weight: self.weight + other.weight,
+            quality: self.quality.min(other.quality),
+        }
+    }
+
+    /// Drop ids whose vote share is below `min_vote` of the *strongest
+    /// vote on their side*. Keeps the co-cluster's consensus core.
+    ///
+    /// The per-side normalization matters: when co-clusters from blocks
+    /// in the same grid row merge, their row votes stack but their
+    /// column sets are disjoint by construction (each column id can vote
+    /// at most once per round on that side) — normalizing against the
+    /// total weight would wrongly purge every column.
+    pub fn prune(&mut self, min_vote: f32) {
+        let row_max = self.row_votes.iter().cloned().fold(0.0f32, f32::max);
+        let cut = min_vote * row_max;
+        let keep: Vec<usize> = (0..self.rows.len()).filter(|&i| self.row_votes[i] >= cut).collect();
+        self.rows = keep.iter().map(|&i| self.rows[i]).collect();
+        self.row_votes = keep.iter().map(|&i| self.row_votes[i]).collect();
+        let col_max = self.col_votes.iter().cloned().fold(0.0f32, f32::max);
+        let cut = min_vote * col_max;
+        let keep: Vec<usize> = (0..self.cols.len()).filter(|&i| self.col_votes[i] >= cut).collect();
+        self.cols = keep.iter().map(|&i| self.cols[i]).collect();
+        self.col_votes = keep.iter().map(|&i| self.col_votes[i]).collect();
+    }
+}
+
+/// Merge-join two sorted (ids, votes) lists, summing votes on overlap.
+fn merge_voted(a_ids: &[u32], a_votes: &[f32], b_ids: &[u32], b_votes: &[f32]) -> (Vec<u32>, Vec<f32>) {
+    let mut ids = Vec::with_capacity(a_ids.len() + b_ids.len());
+    let mut votes = Vec::with_capacity(a_ids.len() + b_ids.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a_ids.len() && j < b_ids.len() {
+        match a_ids[i].cmp(&b_ids[j]) {
+            std::cmp::Ordering::Less => {
+                ids.push(a_ids[i]);
+                votes.push(a_votes[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                ids.push(b_ids[j]);
+                votes.push(b_votes[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                ids.push(a_ids[i]);
+                votes.push(a_votes[i] + b_votes[j]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    ids.extend_from_slice(&a_ids[i..]);
+    votes.extend_from_slice(&a_votes[i..]);
+    ids.extend_from_slice(&b_ids[j..]);
+    votes.extend_from_slice(&b_votes[j..]);
+    (ids, votes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atom_sorts_and_dedups() {
+        let c = Cocluster::atom(vec![3, 1, 3, 2], vec![9, 9, 0], 0.5);
+        assert_eq!(c.rows, vec![1, 2, 3]);
+        assert_eq!(c.cols, vec![0, 9]);
+        assert_eq!(c.weight, 1.0);
+        assert_eq!(c.row_votes, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn merge_unions_and_accumulates() {
+        let a = Cocluster::atom(vec![1, 2, 3], vec![0, 1], 0.2);
+        let b = Cocluster::atom(vec![2, 3, 4], vec![1, 2], 0.1);
+        let m = a.merge(&b);
+        assert_eq!(m.rows, vec![1, 2, 3, 4]);
+        assert_eq!(m.row_votes, vec![1.0, 2.0, 2.0, 1.0]);
+        assert_eq!(m.cols, vec![0, 1, 2]);
+        assert_eq!(m.col_votes, vec![1.0, 2.0, 1.0]);
+        assert_eq!(m.weight, 2.0);
+        assert_eq!(m.quality, 0.1);
+    }
+
+    #[test]
+    fn merge_is_commutative() {
+        let a = Cocluster::atom(vec![1, 5], vec![2], 0.0);
+        let b = Cocluster::atom(vec![5, 9], vec![2, 3], 0.0);
+        assert_eq!(a.merge(&b), b.merge(&a));
+    }
+
+    #[test]
+    fn prune_keeps_consensus_core() {
+        let a = Cocluster::atom(vec![1, 2, 3], vec![0], 0.0);
+        let b = Cocluster::atom(vec![2, 3, 4], vec![0], 0.0);
+        let c = Cocluster::atom(vec![2, 3, 5], vec![0], 0.0);
+        let mut m = a.merge(&b).merge(&c);
+        m.prune(0.6); // need vote ≥ 1.8 of weight 3
+        assert_eq!(m.rows, vec![2, 3]);
+        assert_eq!(m.cols, vec![0]);
+    }
+
+    #[test]
+    fn area_and_empty() {
+        let c = Cocluster::atom(vec![1, 2], vec![7, 8, 9], 0.0);
+        assert_eq!(c.area(), 6);
+        assert!(!c.is_empty());
+        let mut e = c.clone();
+        e.prune(10.0);
+        assert!(e.is_empty());
+    }
+}

@@ -1,0 +1,122 @@
+//! Final label extraction from merged co-clusters.
+
+use super::cocluster_set::Cocluster;
+
+/// Assign every row/column id a final cluster label by maximum vote.
+///
+/// Each merged co-cluster becomes one label. An id belonging to several
+/// co-clusters takes the one where its vote mass (normalized by cluster
+/// weight, tie-broken by cluster area) is largest. Ids covered by no
+/// co-cluster get the label of the largest cluster (a deliberate,
+/// documented fallback: under the Theorem-1 guarantee such ids are rare
+/// noise, and NMI/ARI penalize them the same wherever they go).
+///
+/// Returns `(row_labels, col_labels, k)`.
+pub fn extract_labels(clusters: &[Cocluster], rows: usize, cols: usize) -> (Vec<usize>, Vec<usize>, usize) {
+    let k = clusters.len().max(1);
+    let mut row_best = vec![(f32::MIN, 0usize); rows];
+    let mut row_set = vec![false; rows];
+    let mut col_best = vec![(f32::MIN, 0usize); cols];
+    let mut col_set = vec![false; cols];
+
+    for (label, c) in clusters.iter().enumerate() {
+        let norm = 1.0 / c.weight.max(1.0);
+        for (&id, &v) in c.rows.iter().zip(&c.row_votes) {
+            let id = id as usize;
+            if id >= rows {
+                continue;
+            }
+            let score = v * norm;
+            if !row_set[id] || score > row_best[id].0 {
+                row_best[id] = (score, label);
+                row_set[id] = true;
+            }
+        }
+        for (&id, &v) in c.cols.iter().zip(&c.col_votes) {
+            let id = id as usize;
+            if id >= cols {
+                continue;
+            }
+            let score = v * norm;
+            if !col_set[id] || score > col_best[id].0 {
+                col_best[id] = (score, label);
+                col_set[id] = true;
+            }
+        }
+    }
+
+    // Fallback for uncovered ids: the largest cluster (label of max area),
+    // or 0 when there are no clusters at all.
+    let fallback = clusters
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, c)| c.area())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+
+    let row_labels = row_best
+        .iter()
+        .zip(&row_set)
+        .map(|(&(_, l), &set)| if set { l } else { fallback })
+        .collect();
+    let col_labels = col_best
+        .iter()
+        .zip(&col_set)
+        .map(|(&(_, l), &set)| if set { l } else { fallback })
+        .collect();
+    (row_labels, col_labels, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn atom(rows: &[u32], cols: &[u32]) -> Cocluster {
+        Cocluster::atom(rows.to_vec(), cols.to_vec(), 0.0)
+    }
+
+    #[test]
+    fn disjoint_clusters_label_directly() {
+        let clusters = vec![atom(&[0, 1], &[0]), atom(&[2, 3], &[1])];
+        let (r, c, k) = extract_labels(&clusters, 4, 2);
+        assert_eq!(k, 2);
+        assert_eq!(r, vec![0, 0, 1, 1]);
+        assert_eq!(c, vec![0, 1]);
+    }
+
+    #[test]
+    fn overlapping_id_takes_higher_vote() {
+        let mut a = atom(&[0, 1], &[0]);
+        a.weight = 2.0;
+        a.row_votes = vec![2.0, 0.5]; // id 1 weak in a
+        let b = atom(&[1, 2], &[1]); // id 1 full vote in b
+        let (r, _, _) = extract_labels(&[a, b], 3, 2);
+        assert_eq!(r[0], 0);
+        assert_eq!(r[1], 1, "weakly-voted id should defect to cluster b");
+        assert_eq!(r[2], 1);
+    }
+
+    #[test]
+    fn uncovered_ids_fall_back_to_largest() {
+        let clusters = vec![atom(&[0], &[0]), atom(&[1, 2, 3], &[1, 2])];
+        let (r, c, _) = extract_labels(&clusters, 5, 4);
+        assert_eq!(r[4], 1, "uncovered row → largest cluster");
+        assert_eq!(c[3], 1, "uncovered col → largest cluster");
+    }
+
+    #[test]
+    fn empty_cluster_list_is_single_cluster() {
+        let (r, c, k) = extract_labels(&[], 3, 2);
+        assert_eq!(k, 1);
+        assert_eq!(r, vec![0, 0, 0]);
+        assert_eq!(c, vec![0, 0]);
+    }
+
+    #[test]
+    fn labels_always_in_range() {
+        let clusters = vec![atom(&[0, 9], &[0]), atom(&[5], &[1, 3])];
+        let (r, c, k) = extract_labels(&clusters, 10, 4);
+        assert!(r.iter().all(|&l| l < k));
+        assert!(c.iter().all(|&l| l < k));
+    }
+}

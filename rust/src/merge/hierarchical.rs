@@ -1,0 +1,208 @@
+//! Hierarchical agglomeration of atom co-clusters.
+
+use super::cocluster_set::Cocluster;
+use super::similarity::{band_keys, minhash_signature, pair_similarity};
+
+#[derive(Clone, Debug)]
+pub struct MergeConfig {
+    /// Similarity threshold τ: merge a pair when mean row/col Jaccard ≥ τ.
+    pub tau: f64,
+    /// Hard cap on agglomeration levels (the paper's "pre-fixed number of
+    /// iterations"). 0 = auto: `ceil(log2(#clusters)) + 2`.
+    pub max_levels: usize,
+    /// Vote share below which an id is pruned from a merged co-cluster.
+    pub min_vote: f32,
+    /// Above this cluster count, candidate pairs come from minhash LSH
+    /// buckets instead of all-pairs.
+    pub lsh_threshold: usize,
+    /// Drop final co-clusters smaller than this many rows or cols.
+    pub min_size: usize,
+}
+
+impl Default for MergeConfig {
+    fn default() -> Self {
+        Self { tau: 0.35, max_levels: 0, min_vote: 0.34, lsh_threshold: 512, min_size: 2 }
+    }
+}
+
+/// One agglomeration level: find mergeable pairs, union them.
+/// Returns (clusters, merged_any).
+fn level(mut clusters: Vec<Cocluster>, cfg: &MergeConfig) -> (Vec<Cocluster>, bool) {
+    let n = clusters.len();
+    if n < 2 {
+        return (clusters, false);
+    }
+    // Candidate pair generation.
+    let candidate_pairs: Vec<(usize, usize)> = if n <= cfg.lsh_threshold {
+        (0..n).flat_map(|i| ((i + 1)..n).map(move |j| (i, j))).collect()
+    } else {
+        const H: usize = 16;
+        const BANDS: usize = 8;
+        let mut buckets: std::collections::HashMap<(usize, u64), Vec<usize>> = std::collections::HashMap::new();
+        for (idx, c) in clusters.iter().enumerate() {
+            let sig = minhash_signature::<H>(&c.rows, 0xC0C1);
+            for (b, key) in band_keys::<H>(&sig, BANDS).into_iter().enumerate() {
+                buckets.entry((b, key)).or_default().push(idx);
+            }
+        }
+        let mut pairs = std::collections::HashSet::new();
+        for members in buckets.values() {
+            if members.len() < 2 || members.len() > 64 {
+                continue; // skip degenerate mega-buckets
+            }
+            for (a, &i) in members.iter().enumerate() {
+                for &j in &members[a + 1..] {
+                    pairs.insert((i.min(j), i.max(j)));
+                }
+            }
+        }
+        pairs.into_iter().collect()
+    };
+
+    // Score pairs, sort by similarity descending, greedily union.
+    let mut scored: Vec<(f64, usize, usize)> = candidate_pairs
+        .into_iter()
+        .filter_map(|(i, j)| {
+            let s = pair_similarity(&clusters[i], &clusters[j]);
+            (s >= cfg.tau).then_some((s, i, j))
+        })
+        .collect();
+    scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    // Greedy matching: each cluster merges at most once per level — this
+    // is what makes the process hierarchical (binary merge tree) and
+    // bounds the level count logarithmically.
+    let mut taken = vec![false; n];
+    let mut merged: Vec<Cocluster> = Vec::new();
+    let mut any = false;
+    for (_, i, j) in scored {
+        if taken[i] || taken[j] {
+            continue;
+        }
+        taken[i] = true;
+        taken[j] = true;
+        merged.push(clusters[i].merge(&clusters[j]));
+        any = true;
+    }
+    for (idx, c) in clusters.drain(..).enumerate() {
+        if !taken[idx] {
+            merged.push(c);
+        }
+    }
+    (merged, any)
+}
+
+/// Merge atom co-clusters into the final consensus set.
+pub fn merge_coclusters(atoms: Vec<Cocluster>, cfg: &MergeConfig) -> Vec<Cocluster> {
+    let mut clusters: Vec<Cocluster> = atoms.into_iter().filter(|c| !c.is_empty()).collect();
+    let max_levels = if cfg.max_levels == 0 {
+        ((clusters.len().max(2) as f64).log2().ceil() as usize) + 2
+    } else {
+        cfg.max_levels
+    };
+    for _ in 0..max_levels {
+        let (next, merged_any) = level(clusters, cfg);
+        clusters = next;
+        if !merged_any {
+            break;
+        }
+    }
+    // Consensus pruning + minimum-size filter.
+    for c in &mut clusters {
+        c.prune(cfg.min_vote);
+    }
+    clusters.retain(|c| c.rows.len() >= cfg.min_size && c.cols.len() >= cfg.min_size);
+    // Deterministic order: by area descending then ids.
+    clusters.sort_by(|a, b| b.area().cmp(&a.area()).then_with(|| a.rows.cmp(&b.rows)));
+    clusters
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn atom(rows: &[u32], cols: &[u32]) -> Cocluster {
+        Cocluster::atom(rows.to_vec(), cols.to_vec(), 0.0)
+    }
+
+    #[test]
+    fn identical_atoms_collapse_to_one() {
+        let atoms = vec![atom(&[1, 2, 3], &[0, 1]); 5];
+        let out = merge_coclusters(atoms, &MergeConfig::default());
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].weight, 5.0);
+        assert_eq!(out[0].rows, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn disjoint_atoms_stay_separate() {
+        let atoms = vec![atom(&[1, 2], &[0, 1]), atom(&[10, 11], &[5, 6])];
+        let out = merge_coclusters(atoms, &MergeConfig::default());
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn noisy_views_of_same_cocluster_merge() {
+        // Three samplings saw overlapping fragments of rows 0..20.
+        let atoms = vec![
+            atom(&(0..18).collect::<Vec<u32>>(), &[0, 1, 2, 3]),
+            atom(&(2..20).collect::<Vec<u32>>(), &[0, 1, 2, 4]),
+            atom(&(1..19).collect::<Vec<u32>>(), &[0, 1, 3, 4]),
+        ];
+        let out = merge_coclusters(atoms, &MergeConfig::default());
+        assert_eq!(out.len(), 1, "{out:?}");
+        // Consensus core keeps the heavily-voted middle ids.
+        assert!(out[0].rows.contains(&10));
+        assert!(out[0].cols.contains(&0) && out[0].cols.contains(&1));
+    }
+
+    #[test]
+    fn threshold_one_only_merges_identical() {
+        let atoms = vec![
+            atom(&[1, 2, 3], &[0]),
+            atom(&[1, 2, 3], &[0]),
+            atom(&[1, 2, 4], &[0]),
+        ];
+        let cfg = MergeConfig { tau: 1.0, min_size: 1, ..Default::default() };
+        let out = merge_coclusters(atoms, &cfg);
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn min_size_filter_drops_fragments() {
+        let atoms = vec![atom(&[1], &[0]), atom(&[5, 6, 7], &[1, 2, 3])];
+        let out = merge_coclusters(atoms, &MergeConfig::default());
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rows, vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn terminates_on_chain_topology() {
+        // A chain a~b~c~d where ends are dissimilar: greedy binary
+        // merging must still terminate within the level cap.
+        let atoms = vec![
+            atom(&(0..10).collect::<Vec<u32>>(), &[0, 1]),
+            atom(&(4..14).collect::<Vec<u32>>(), &[0, 1]),
+            atom(&(8..18).collect::<Vec<u32>>(), &[0, 1]),
+            atom(&(12..22).collect::<Vec<u32>>(), &[0, 1]),
+        ];
+        let out = merge_coclusters(atoms, &MergeConfig { tau: 0.3, ..Default::default() });
+        assert!(!out.is_empty() && out.len() <= 2, "{}", out.len());
+    }
+
+    #[test]
+    fn lsh_path_matches_allpairs_semantics() {
+        // Build many copies of two distinct co-clusters; force the LSH
+        // path with a tiny threshold and check both survive as exactly
+        // two merged clusters.
+        let mut atoms = Vec::new();
+        for _ in 0..30 {
+            atoms.push(atom(&(0..40).collect::<Vec<u32>>(), &(0..10).collect::<Vec<u32>>()));
+            atoms.push(atom(&(100..140).collect::<Vec<u32>>(), &(50..60).collect::<Vec<u32>>()));
+        }
+        let cfg = MergeConfig { lsh_threshold: 4, ..Default::default() };
+        let out = merge_coclusters(atoms, &cfg);
+        assert_eq!(out.len(), 2, "{:?}", out.iter().map(|c| c.weight).collect::<Vec<_>>());
+        assert_eq!(out[0].weight + out[1].weight, 60.0);
+    }
+}

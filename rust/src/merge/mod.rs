@@ -1,0 +1,26 @@
+//! Hierarchical co-cluster merging (paper §IV-D).
+//!
+//! The paper specifies the merging stage only qualitatively ("iteratively
+//! combines the co-clusters from each submatrix … within a pre-fixed
+//! number of iterations"). The concrete design here — documented and
+//! ablated per DESIGN.md §5 — is consensus-style agglomeration:
+//!
+//! 1. every block job yields [`Cocluster`]s over *global* ids;
+//! 2. levels of pairwise agglomeration merge any two co-clusters whose
+//!    row/col Jaccard similarity reaches `τ`, accumulating per-id votes;
+//! 3. ids are pruned from a merged co-cluster when their vote share
+//!    drops below `min_vote` (removes per-sampling noise);
+//! 4. final labels are extracted by maximum vote ([`consensus`]).
+//!
+//! Levels terminate after `⌈log2 T_p⌉ + 2` rounds at the latest — the
+//! "pre-fixed number of iterations" the paper promises.
+
+pub mod cocluster_set;
+pub mod hierarchical;
+pub mod similarity;
+pub mod consensus;
+
+pub use cocluster_set::Cocluster;
+pub use consensus::extract_labels;
+pub use hierarchical::{merge_coclusters, MergeConfig};
+pub use similarity::{jaccard, pair_similarity};

@@ -1,0 +1,130 @@
+//! Co-cluster similarity + minhash bucketing for sub-quadratic merging.
+
+use super::cocluster_set::Cocluster;
+
+/// Jaccard similarity of two sorted id lists.
+pub fn jaccard(a: &[u32], b: &[u32]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    if a.is_empty() || b.is_empty() {
+        return 0.0;
+    }
+    let mut inter = 0usize;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    let union = a.len() + b.len() - inter;
+    inter as f64 / union as f64
+}
+
+/// Paper-aligned pair similarity: mean of row-set and column-set Jaccard.
+pub fn pair_similarity(a: &Cocluster, b: &Cocluster) -> f64 {
+    0.5 * (jaccard(&a.rows, &b.rows) + jaccard(&a.cols, &b.cols))
+}
+
+/// Minhash signature of a row-id set (for LSH bucketing). `H` hashes.
+pub fn minhash_signature<const H: usize>(ids: &[u32], seed: u64) -> [u64; H] {
+    let mut sig = [u64::MAX; H];
+    for &id in ids {
+        for (h, slot) in sig.iter_mut().enumerate() {
+            // SplitMix-style per-hash mixing; cheap and adequate for
+            // bucketing (not cryptographic).
+            let mut z = (id as u64).wrapping_add(seed).wrapping_add((h as u64) << 32).wrapping_mul(0x9E3779B97F4A7C15);
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z ^= z >> 27;
+            if z < *slot {
+                *slot = z;
+            }
+        }
+    }
+    sig
+}
+
+/// Bucket key: band of the minhash signature. Co-clusters sharing a band
+/// key are candidate merge pairs.
+pub fn band_keys<const H: usize>(sig: &[u64; H], bands: usize) -> Vec<u64> {
+    assert!(bands > 0 && H % bands == 0, "H must divide into bands");
+    let per = H / bands;
+    (0..bands)
+        .map(|b| {
+            let mut acc = 0xcbf29ce484222325u64; // FNV offset
+            for i in 0..per {
+                acc = (acc ^ sig[b * per + i]).wrapping_mul(0x100000001b3);
+            }
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn jaccard_basics() {
+        assert_eq!(jaccard(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(jaccard(&[1, 2], &[3, 4]), 0.0);
+        assert!((jaccard(&[1, 2, 3], &[2, 3, 4]) - 0.5).abs() < 1e-12);
+        assert_eq!(jaccard(&[], &[]), 1.0);
+        assert_eq!(jaccard(&[1], &[]), 0.0);
+    }
+
+    #[test]
+    fn pair_similarity_averages() {
+        let a = Cocluster::atom(vec![1, 2], vec![1, 2], 0.0);
+        let b = Cocluster::atom(vec![1, 2], vec![3, 4], 0.0);
+        assert!((pair_similarity(&a, &b) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn minhash_identical_sets_identical_sigs() {
+        let a = minhash_signature::<16>(&[5, 9, 100], 7);
+        let b = minhash_signature::<16>(&[100, 5, 9], 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn minhash_similarity_estimates_jaccard() {
+        let mut rng = Xoshiro256::seed_from(501);
+        let base: Vec<u32> = (0..400).map(|_| rng.next_below(10_000) as u32).collect();
+        let mut near = base.clone();
+        near.truncate(360);
+        near.extend((0..40).map(|_| rng.next_below(10_000) as u32 + 20_000));
+        let mut a = base.clone();
+        a.sort_unstable();
+        a.dedup();
+        let mut b = near;
+        b.sort_unstable();
+        b.dedup();
+        let true_j = jaccard(&a, &b);
+        const H: usize = 64;
+        let sa = minhash_signature::<H>(&a, 7);
+        let sb = minhash_signature::<H>(&b, 7);
+        let est = sa.iter().zip(&sb).filter(|(x, y)| x == y).count() as f64 / H as f64;
+        assert!((est - true_j).abs() < 0.2, "est {est} true {true_j}");
+    }
+
+    #[test]
+    fn band_keys_collide_for_similar_sets() {
+        let ids: Vec<u32> = (0..100).collect();
+        let mut near = ids.clone();
+        near[99] = 500;
+        let sa = minhash_signature::<16>(&ids, 3);
+        let sb = minhash_signature::<16>(&near, 3);
+        let ka = band_keys::<16>(&sa, 8);
+        let kb = band_keys::<16>(&sb, 8);
+        let shared = ka.iter().zip(&kb).filter(|(x, y)| x == y).count();
+        assert!(shared >= 4, "similar sets should share bands, got {shared}");
+    }
+}

@@ -1,0 +1,83 @@
+//! Adjusted Rand Index.
+
+use super::confusion::Contingency;
+
+fn comb2(n: usize) -> f64 {
+    let n = n as f64;
+    n * (n - 1.0) / 2.0
+}
+
+/// ARI (Hubert & Arabie 1985): Rand index corrected for chance;
+/// 1 = identical partitions, ~0 = independent, can be negative.
+pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
+    if a.is_empty() || a.len() == 1 {
+        return 1.0;
+    }
+    let c = Contingency::from_labels(a, b);
+    let sum_ij: f64 = c.counts.iter().flatten().map(|&nij| comb2(nij)).sum();
+    let sum_a: f64 = c.row_marginals.iter().map(|&m| comb2(m)).sum();
+    let sum_b: f64 = c.col_marginals.iter().map(|&m| comb2(m)).sum();
+    let total = comb2(c.n);
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-15 {
+        // Both partitions degenerate (all-singletons vs all-one-cluster
+        // agreement structure): define as 1 when identical index, else 0.
+        return if (sum_ij - expected).abs() < 1e-15 { 1.0 } else { 0.0 };
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn identical_scores_one() {
+        let a = [0, 1, 2, 0, 1, 2];
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relabeling_invariant() {
+        let a = [0, 0, 1, 1, 2, 2];
+        let b = [4, 4, 9, 9, 1, 1];
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_near_zero() {
+        let mut rng = Xoshiro256::seed_from(81);
+        let n = 20_000;
+        let a: Vec<usize> = (0..n).map(|_| rng.next_below(5)).collect();
+        let b: Vec<usize> = (0..n).map(|_| rng.next_below(5)).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari.abs() < 0.01, "ari {ari}");
+    }
+
+    #[test]
+    fn known_sklearn_value() {
+        // sklearn.metrics.adjusted_rand_score([0,0,1,1],[0,0,1,2]) == 0.5714285714...
+        let a = [0, 0, 1, 1];
+        let b = [0, 0, 1, 2];
+        let ari = adjusted_rand_index(&a, &b);
+        assert!((ari - 0.5714285714285714).abs() < 1e-12, "ari {ari}");
+    }
+
+    #[test]
+    fn anti_correlated_can_be_negative() {
+        // Checkerboard disagreement produces negative ARI.
+        let a = [0, 0, 0, 1, 1, 1];
+        let b = [0, 1, 2, 0, 1, 2];
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari < 0.0, "ari {ari}");
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = [0, 0, 1, 1, 2, 2, 0];
+        let b = [0, 1, 1, 2, 2, 0, 0];
+        assert!((adjusted_rand_index(&a, &b) - adjusted_rand_index(&b, &a)).abs() < 1e-12);
+    }
+}

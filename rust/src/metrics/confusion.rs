@@ -1,0 +1,86 @@
+//! Contingency (confusion) table shared by NMI and ARI.
+
+/// Dense contingency table between two label vectors over the same items.
+#[derive(Clone, Debug)]
+pub struct Contingency {
+    /// counts[i][j] = #items with true label i and predicted label j.
+    pub counts: Vec<Vec<usize>>,
+    /// Row marginals (per true label).
+    pub row_marginals: Vec<usize>,
+    /// Column marginals (per predicted label).
+    pub col_marginals: Vec<usize>,
+    /// Total item count.
+    pub n: usize,
+}
+
+impl Contingency {
+    /// Build from label vectors. Labels may be arbitrary `usize` values;
+    /// they are compacted to dense indices internally.
+    pub fn from_labels(a: &[usize], b: &[usize]) -> Self {
+        assert_eq!(a.len(), b.len(), "label vectors must align");
+        let map_a = compact(a);
+        let map_b = compact(b);
+        let ka = map_a.len();
+        let kb = map_b.len();
+        let mut counts = vec![vec![0usize; kb]; ka];
+        for (&x, &y) in a.iter().zip(b) {
+            counts[map_a[&x]][map_b[&y]] += 1;
+        }
+        let row_marginals: Vec<usize> = counts.iter().map(|r| r.iter().sum()).collect();
+        let mut col_marginals = vec![0usize; kb];
+        for row in &counts {
+            for (j, &c) in row.iter().enumerate() {
+                col_marginals[j] += c;
+            }
+        }
+        Self { counts, row_marginals, col_marginals, n: a.len() }
+    }
+}
+
+fn compact(labels: &[usize]) -> std::collections::HashMap<usize, usize> {
+    let mut map = std::collections::HashMap::new();
+    for &l in labels {
+        let next = map.len();
+        map.entry(l).or_insert(next);
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn marginals_sum_to_n() {
+        let a = [0, 0, 1, 2, 2, 2];
+        let b = [5, 5, 9, 9, 5, 5];
+        let c = Contingency::from_labels(&a, &b);
+        assert_eq!(c.n, 6);
+        assert_eq!(c.row_marginals.iter().sum::<usize>(), 6);
+        assert_eq!(c.col_marginals.iter().sum::<usize>(), 6);
+    }
+
+    #[test]
+    fn counts_match_manual() {
+        let a = [0, 0, 1, 1];
+        let b = [0, 1, 0, 1];
+        let c = Contingency::from_labels(&a, &b);
+        assert_eq!(c.counts, vec![vec![1, 1], vec![1, 1]]);
+    }
+
+    #[test]
+    fn non_contiguous_labels_are_compacted() {
+        let a = [100, 100, 7];
+        let b = [3, 3, 3];
+        let c = Contingency::from_labels(&a, &b);
+        assert_eq!(c.counts.len(), 2);
+        assert_eq!(c.counts[0].len(), 1);
+        assert_eq!(c.row_marginals, vec![2, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "align")]
+    fn mismatched_lengths_panic() {
+        Contingency::from_labels(&[0, 1], &[0]);
+    }
+}

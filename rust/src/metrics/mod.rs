@@ -1,0 +1,69 @@
+//! Clustering evaluation metrics (Table III of the paper).
+//!
+//! Normalized Mutual Information and Adjusted Rand Index over integer
+//! label vectors, plus a co-clustering aggregate that averages the row
+//! and column scores (the convention used when a single number is
+//! reported for a co-clustering, as in the paper's tables).
+
+mod ari;
+mod confusion;
+mod nmi;
+
+pub use ari::adjusted_rand_index;
+pub use confusion::Contingency;
+pub use nmi::normalized_mutual_information;
+
+/// Joint co-clustering scores: row-wise, column-wise, and their mean.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CoclusterScores {
+    pub row_nmi: f64,
+    pub col_nmi: f64,
+    pub row_ari: f64,
+    pub col_ari: f64,
+}
+
+impl CoclusterScores {
+    pub fn nmi(&self) -> f64 {
+        0.5 * (self.row_nmi + self.col_nmi)
+    }
+
+    pub fn ari(&self) -> f64 {
+        0.5 * (self.row_ari + self.col_ari)
+    }
+}
+
+/// Score predicted row/column labels against ground truth.
+pub fn score_coclustering(
+    true_rows: &[usize],
+    pred_rows: &[usize],
+    true_cols: &[usize],
+    pred_cols: &[usize],
+) -> CoclusterScores {
+    CoclusterScores {
+        row_nmi: normalized_mutual_information(true_rows, pred_rows),
+        col_nmi: normalized_mutual_information(true_cols, pred_cols),
+        row_ari: adjusted_rand_index(true_rows, pred_rows),
+        col_ari: adjusted_rand_index(true_cols, pred_cols),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregate_is_mean() {
+        let s = CoclusterScores { row_nmi: 1.0, col_nmi: 0.0, row_ari: 0.5, col_ari: 0.5 };
+        assert_eq!(s.nmi(), 0.5);
+        assert_eq!(s.ari(), 0.5);
+    }
+
+    #[test]
+    fn perfect_coclustering_scores_one() {
+        let rows = vec![0, 0, 1, 1, 2];
+        let cols = vec![1, 1, 0, 0];
+        let s = score_coclustering(&rows, &rows, &cols, &cols);
+        assert!((s.nmi() - 1.0).abs() < 1e-12);
+        assert!((s.ari() - 1.0).abs() < 1e-12);
+    }
+}

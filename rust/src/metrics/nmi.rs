@@ -1,0 +1,106 @@
+//! Normalized Mutual Information.
+
+use super::confusion::Contingency;
+
+/// NMI with arithmetic-mean normalization:
+/// `NMI = 2·I(A;B) / (H(A) + H(B))`, in `[0, 1]`.
+///
+/// Degenerate edge case: if both labelings are single-cluster (zero
+/// entropy on both sides) they are identical partitions — returns 1;
+/// if exactly one side is single-cluster, returns 0 (no information).
+pub fn normalized_mutual_information(a: &[usize], b: &[usize]) -> f64 {
+    if a.is_empty() {
+        return 1.0;
+    }
+    let c = Contingency::from_labels(a, b);
+    let n = c.n as f64;
+    let h_a = entropy(&c.row_marginals, n);
+    let h_b = entropy(&c.col_marginals, n);
+    if h_a == 0.0 && h_b == 0.0 {
+        return 1.0;
+    }
+    if h_a == 0.0 || h_b == 0.0 {
+        return 0.0;
+    }
+    let mut mi = 0.0f64;
+    for (i, row) in c.counts.iter().enumerate() {
+        for (j, &nij) in row.iter().enumerate() {
+            if nij == 0 {
+                continue;
+            }
+            let pij = nij as f64 / n;
+            let pi = c.row_marginals[i] as f64 / n;
+            let pj = c.col_marginals[j] as f64 / n;
+            mi += pij * (pij / (pi * pj)).ln();
+        }
+    }
+    // Clamp tiny negative round-off.
+    (2.0 * mi / (h_a + h_b)).clamp(0.0, 1.0)
+}
+
+fn entropy(marginals: &[usize], n: f64) -> f64 {
+    marginals
+        .iter()
+        .filter(|&&m| m > 0)
+        .map(|&m| {
+            let p = m as f64 / n;
+            -p * p.ln()
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn identical_labelings_score_one() {
+        let a = [0, 1, 2, 0, 1, 2, 2];
+        assert!((normalized_mutual_information(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relabeled_partition_scores_one() {
+        let a = [0, 0, 1, 1, 2, 2];
+        let b = [7, 7, 3, 3, 5, 5];
+        assert!((normalized_mutual_information(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_labelings_score_near_zero() {
+        let mut rng = Xoshiro256::seed_from(71);
+        let n = 20_000;
+        let a: Vec<usize> = (0..n).map(|_| rng.next_below(4)).collect();
+        let b: Vec<usize> = (0..n).map(|_| rng.next_below(4)).collect();
+        let nmi = normalized_mutual_information(&a, &b);
+        assert!(nmi < 0.01, "nmi {nmi}");
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = [0, 0, 1, 1, 2, 2, 0, 1];
+        let b = [0, 1, 1, 1, 2, 0, 0, 2];
+        let x = normalized_mutual_information(&a, &b);
+        let y = normalized_mutual_information(&b, &a);
+        assert!((x - y).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_single_cluster_cases() {
+        let single = [0usize; 5];
+        let multi = [0, 1, 2, 0, 1];
+        assert_eq!(normalized_mutual_information(&single, &single), 1.0);
+        assert_eq!(normalized_mutual_information(&single, &multi), 0.0);
+        assert_eq!(normalized_mutual_information(&multi, &single), 0.0);
+    }
+
+    #[test]
+    fn refinement_scores_between_zero_and_one() {
+        // b refines a: related but not identical.
+        let a = [0, 0, 0, 0, 1, 1, 1, 1];
+        let b = [0, 0, 1, 1, 2, 2, 3, 3];
+        let nmi = normalized_mutual_information(&a, &b);
+        assert!(nmi > 0.5 && nmi < 1.0, "nmi {nmi}");
+    }
+}

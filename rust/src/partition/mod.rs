@@ -1,0 +1,18 @@
+//! Large-matrix partitioning (paper §IV-B + Theorem 1).
+//!
+//! Three pieces:
+//! * [`prob_model`] — the probabilistic detection model: tail bounds on
+//!   how much of a co-cluster survives inside a block, the failure bound
+//!   `P(ω_k)`, and the `T_p` solver (Eqs. 1–4 / Theorem 1).
+//! * [`planner`] — enumerates block-size configurations, prices each via
+//!   a cost model, and picks the cheapest one meeting `P_thresh`.
+//! * [`sampler`] — materializes `T_p` random shuffled grid partitions as
+//!   block jobs over global row/column indices.
+
+pub mod planner;
+pub mod prob_model;
+pub mod sampler;
+
+pub use planner::{plan, PartitionPlan, PlannerConfig};
+pub use prob_model::{detection_probability, failure_bound, required_samplings, CoclusterPrior};
+pub use sampler::{sample_partition, BlockJob, SamplingRound};

@@ -1,0 +1,189 @@
+//! Partition planner (paper §IV-B.2): pick `(φ, ψ, m, n, T_p)`.
+//!
+//! Enumerates candidate block sizes, keeps configurations whose Theorem-1
+//! bound can reach `P_thresh`, prices each with an atom-cost model, and
+//! returns the cheapest. Candidate sizes include the shapes for which
+//! AOT-compiled PJRT artifacts exist (so the coordinator can route whole
+//! grids to the accelerator path) plus power-of-two fallbacks.
+
+use super::prob_model::{required_samplings, CoclusterPrior};
+
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    /// Target detection probability `P_thresh` (Eq. 4).
+    pub p_thresh: f64,
+    /// Prior on the smallest co-cluster that must be detected.
+    pub prior: CoclusterPrior,
+    /// Candidate block side lengths. Empty ⇒ defaults.
+    pub candidate_sizes: Vec<usize>,
+    /// Worker parallelism assumed by the cost model.
+    pub workers: usize,
+    /// Upper bound on T_p (guards against pathological priors).
+    pub max_samplings: usize,
+    /// Embedding rank used by the cost model (atom SVD width).
+    pub rank: usize,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        Self {
+            p_thresh: 0.95,
+            prior: CoclusterPrior::default(),
+            candidate_sizes: vec![],
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            max_samplings: 64,
+            rank: 6,
+        }
+    }
+}
+
+/// The chosen partition configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionPlan {
+    /// Block rows (φ) — last block of each round may be smaller.
+    pub phi: usize,
+    /// Block cols (ψ).
+    pub psi: usize,
+    /// Grid rows `m = ⌈M/φ⌉`.
+    pub m: usize,
+    /// Grid cols `n = ⌈N/ψ⌉`.
+    pub n: usize,
+    /// Number of shuffled re-partitions `T_p`.
+    pub t_p: usize,
+    /// Detection probability certified by Theorem 1 for this plan.
+    pub certified_probability: f64,
+    /// Cost-model estimate (arbitrary units, comparable across plans).
+    pub estimated_cost: f64,
+}
+
+impl PartitionPlan {
+    /// Total block jobs the plan will schedule.
+    pub fn total_blocks(&self) -> usize {
+        self.m * self.n * self.t_p
+    }
+
+    /// Trivial plan: no partitioning (whole matrix, one job). Used when
+    /// the matrix is already small enough for a direct atom run.
+    pub fn whole(rows: usize, cols: usize) -> Self {
+        Self { phi: rows, psi: cols, m: 1, n: 1, t_p: 1, certified_probability: 1.0, estimated_cost: 0.0 }
+    }
+}
+
+/// Atom cost model: spectral co-clustering on a `φ×ψ` block costs
+/// ~ `c · φ·ψ·rank` (subspace iteration) + `c' · (φ+ψ)·rank·k` (k-means);
+/// the grid runs `m·n·T_p` of these over `workers` lanes. Per-block
+/// scheduling overhead is charged too, so absurdly small blocks lose.
+fn plan_cost(phi: usize, psi: usize, m: usize, n: usize, t_p: usize, cfg: &PlannerConfig) -> f64 {
+    let per_block = (phi as f64) * (psi as f64) * (cfg.rank as f64)
+        + 2e3 * (phi + psi) as f64 * cfg.rank as f64
+        + 5e5; // fixed dispatch+gather overhead per block
+    let blocks = (m * n * t_p) as f64;
+    blocks * per_block / cfg.workers.max(1) as f64
+}
+
+/// Choose the cheapest feasible plan for an `M×N` matrix.
+///
+/// Falls back to [`PartitionPlan::whole`] when no candidate satisfies
+/// the probability constraint (e.g. the prior demands fragments bigger
+/// than any candidate block).
+pub fn plan(rows: usize, cols: usize, cfg: &PlannerConfig) -> PartitionPlan {
+    let default_sizes = [128usize, 192, 256, 384, 512, 768, 1024];
+    let candidates: &[usize] = if cfg.candidate_sizes.is_empty() { &default_sizes } else { &cfg.candidate_sizes };
+
+    let mut best: Option<PartitionPlan> = None;
+    for &phi in candidates {
+        if phi > rows {
+            continue;
+        }
+        for &psi in candidates {
+            if psi > cols {
+                continue;
+            }
+            let m = rows.div_ceil(phi);
+            let n = cols.div_ceil(psi);
+            if m * n < 2 {
+                continue; // not a partition
+            }
+            let Some(t_p) = required_samplings(&cfg.prior, phi, psi, m, n, cfg.p_thresh) else {
+                continue;
+            };
+            if t_p > cfg.max_samplings {
+                continue;
+            }
+            let cost = plan_cost(phi, psi, m, n, t_p, cfg);
+            let certified = super::prob_model::detection_probability(&cfg.prior, phi, psi, m, n, t_p);
+            let cand = PartitionPlan { phi, psi, m, n, t_p, certified_probability: certified, estimated_cost: cost };
+            if best.as_ref().map_or(true, |b| cand.estimated_cost < b.estimated_cost) {
+                best = Some(cand);
+            }
+        }
+    }
+    best.unwrap_or_else(|| PartitionPlan::whole(rows, cols))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_meets_probability_threshold() {
+        let cfg = PlannerConfig::default();
+        let p = plan(2000, 1500, &cfg);
+        assert!(p.certified_probability >= cfg.p_thresh, "{p:?}");
+        assert!(p.m >= 1 && p.n >= 1 && p.t_p >= 1);
+    }
+
+    #[test]
+    fn small_matrix_returns_whole_plan() {
+        // Blocks can't be larger than the matrix and a 1×1 grid is not a
+        // partition, so a tiny matrix falls back to the whole plan.
+        let p = plan(64, 64, &PlannerConfig::default());
+        assert_eq!(p, PartitionPlan::whole(64, 64));
+    }
+
+    #[test]
+    fn grid_covers_matrix() {
+        let p = plan(1000, 1000, &PlannerConfig::default());
+        assert!(p.m * p.phi >= 1000);
+        assert!(p.n * p.psi >= 1000);
+        assert!((p.m - 1) * p.phi < 1000, "no empty block rows");
+    }
+
+    #[test]
+    fn stricter_threshold_needs_no_fewer_samplings() {
+        let mut cfg = PlannerConfig::default();
+        cfg.candidate_sizes = vec![256];
+        cfg.p_thresh = 0.9;
+        let loose = plan(4000, 4000, &cfg);
+        cfg.p_thresh = 0.9999;
+        let strict = plan(4000, 4000, &cfg);
+        assert!(strict.t_p >= loose.t_p, "strict {strict:?} loose {loose:?}");
+    }
+
+    #[test]
+    fn respects_candidate_restriction() {
+        let cfg = PlannerConfig { candidate_sizes: vec![256], ..Default::default() };
+        let p = plan(3000, 3000, &cfg);
+        assert_eq!(p.phi, 256);
+        assert_eq!(p.psi, 256);
+    }
+
+    #[test]
+    fn cost_prefers_fewer_blocks_when_probability_equal() {
+        // With a generous prior, both coarse and fine grids certify; the
+        // planner should not pick pathologically tiny blocks (dispatch
+        // overhead dominates).
+        let cfg = PlannerConfig {
+            prior: CoclusterPrior { row_fraction: 0.4, col_fraction: 0.4, t_m: 4, t_n: 4 },
+            ..Default::default()
+        };
+        let p = plan(5000, 5000, &cfg);
+        assert!(p.phi >= 256, "planner picked tiny blocks: {p:?}");
+    }
+
+    #[test]
+    fn total_blocks_consistent() {
+        let p = plan(2048, 2048, &PlannerConfig::default());
+        assert_eq!(p.total_blocks(), p.m * p.n * p.t_p);
+    }
+}

@@ -1,0 +1,192 @@
+//! Theorem 1: probabilistic co-cluster detection model.
+//!
+//! Under a uniformly random row/column shuffle, the number of rows of a
+//! co-cluster `C_k` that land in one `φ×ψ` block is hypergeometric; the
+//! paper bounds the probability that a block holds fewer than `T_m` of
+//! them by the Hoeffding-style tail `exp(-2 s² φ)` with
+//! `s = M⁽ᵏ⁾/M − (T_m−1)/φ` (Eq. 12), and symmetrically for columns.
+//! The probability that *no* block in an `m×n` grid detects the
+//! co-cluster is then bounded by Eq. 2, and `T_p` independent shuffles
+//! drive the miss probability down geometrically (Eq. 3).
+
+/// Prior knowledge about the smallest co-cluster the run must detect:
+/// its relative row/column masses, plus the atom detector's minimum
+/// viable fragment (`T_m × T_n` entries inside one block).
+#[derive(Clone, Copy, Debug)]
+pub struct CoclusterPrior {
+    /// `M⁽ᵏ⁾ / M`: fraction of all rows belonging to the co-cluster.
+    pub row_fraction: f64,
+    /// `N⁽ᵏ⁾ / N`: fraction of all columns.
+    pub col_fraction: f64,
+    /// `T_m`: minimum rows of the co-cluster a block must capture for the
+    /// atom method to identify it.
+    pub t_m: usize,
+    /// `T_n`: minimum columns.
+    pub t_n: usize,
+}
+
+impl Default for CoclusterPrior {
+    fn default() -> Self {
+        // Detect co-clusters holding ≥10% of rows/cols, needing ≥8×8
+        // fragments — conservative for spectral atoms on text-scale data.
+        Self { row_fraction: 0.10, col_fraction: 0.10, t_m: 8, t_n: 8 }
+    }
+}
+
+/// `s⁽ᵏ⁾ = M⁽ᵏ⁾/M − (T_m−1)/φ` (Eq. 16). Negative ⇒ the block is too
+/// small to ever hold a viable fragment: the bound is vacuous.
+pub fn margin_rows(prior: &CoclusterPrior, phi: usize) -> f64 {
+    prior.row_fraction - (prior.t_m.saturating_sub(1)) as f64 / phi as f64
+}
+
+/// `t⁽ᵏ⁾ = N⁽ᵏ⁾/N − (T_n−1)/ψ` (Eq. 16).
+pub fn margin_cols(prior: &CoclusterPrior, psi: usize) -> f64 {
+    prior.col_fraction - (prior.t_n.saturating_sub(1)) as f64 / psi as f64
+}
+
+/// Failure bound for one shuffled grid partition (Eq. 2 / 17):
+/// `P(ω_k) ≤ exp{−2[φ·m·s² + ψ·n·t²]}`.
+///
+/// Returns 1.0 (vacuous bound) when either margin is non-positive.
+pub fn failure_bound(prior: &CoclusterPrior, phi: usize, psi: usize, m: usize, n: usize) -> f64 {
+    let s = margin_rows(prior, phi);
+    let t = margin_cols(prior, psi);
+    if s <= 0.0 || t <= 0.0 {
+        return 1.0;
+    }
+    let exponent = -2.0 * ((phi * m) as f64 * s * s + (psi * n) as f64 * t * t);
+    exponent.exp().min(1.0)
+}
+
+/// Detection probability after `T_p` independent samplings (Eq. 3):
+/// `P ≥ 1 − P(ω_k)^{T_p}`.
+pub fn detection_probability(prior: &CoclusterPrior, phi: usize, psi: usize, m: usize, n: usize, t_p: usize) -> f64 {
+    let w = failure_bound(prior, phi, psi, m, n);
+    1.0 - w.powi(t_p as i32)
+}
+
+/// Eq. 4 solver: smallest `T_p` with `1 − P(ω_k)^{T_p} ≥ P_thresh`.
+/// `None` when the bound is vacuous (`P(ω_k) = 1`): no number of
+/// samplings can certify detection for this configuration.
+pub fn required_samplings(prior: &CoclusterPrior, phi: usize, psi: usize, m: usize, n: usize, p_thresh: f64) -> Option<usize> {
+    assert!((0.0..1.0).contains(&p_thresh), "P_thresh must be in [0,1)");
+    let w = failure_bound(prior, phi, psi, m, n);
+    if w >= 1.0 {
+        return None;
+    }
+    if w <= 0.0 {
+        return Some(1);
+    }
+    // P(ω)^Tp ≤ 1 − P_thresh  ⇔  Tp ≥ ln(1−P_thresh)/ln(P(ω)).
+    let t = ((1.0 - p_thresh).ln() / w.ln()).ceil();
+    Some((t as usize).max(1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn prior() -> CoclusterPrior {
+        CoclusterPrior { row_fraction: 0.2, col_fraction: 0.2, t_m: 8, t_n: 8 }
+    }
+
+    #[test]
+    fn margins_match_formula() {
+        let p = prior();
+        assert!((margin_rows(&p, 100) - (0.2 - 7.0 / 100.0)).abs() < 1e-12);
+        assert!((margin_cols(&p, 70) - (0.2 - 7.0 / 70.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failure_bound_decreases_with_more_blocks() {
+        let p = prior();
+        let b1 = failure_bound(&p, 100, 100, 2, 2);
+        let b2 = failure_bound(&p, 100, 100, 4, 4);
+        assert!(b2 < b1, "{b2} vs {b1}");
+    }
+
+    #[test]
+    fn failure_bound_vacuous_for_tiny_blocks() {
+        let p = prior();
+        // φ = 20 ⇒ s = 0.2 − 7/20 < 0 ⇒ vacuous.
+        assert_eq!(failure_bound(&p, 20, 100, 4, 4), 1.0);
+    }
+
+    #[test]
+    fn detection_probability_monotone_in_tp() {
+        let p = prior();
+        let d1 = detection_probability(&p, 128, 128, 4, 4, 1);
+        let d3 = detection_probability(&p, 128, 128, 4, 4, 3);
+        let d9 = detection_probability(&p, 128, 128, 4, 4, 9);
+        assert!(d1 <= d3 && d3 <= d9);
+        assert!(d9 <= 1.0);
+    }
+
+    #[test]
+    fn required_samplings_achieves_threshold() {
+        let p = prior();
+        for &thresh in &[0.5, 0.9, 0.99, 0.999] {
+            let tp = required_samplings(&p, 64, 64, 4, 4, thresh);
+            if let Some(tp) = tp {
+                let achieved = detection_probability(&p, 64, 64, 4, 4, tp);
+                assert!(achieved >= thresh, "tp={tp} achieved={achieved} thresh={thresh}");
+                // Minimality: one fewer sampling must miss the threshold
+                // (unless tp == 1).
+                if tp > 1 {
+                    let under = detection_probability(&p, 64, 64, 4, 4, tp - 1);
+                    assert!(under < thresh, "tp not minimal");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn required_samplings_none_when_vacuous() {
+        let p = prior();
+        assert_eq!(required_samplings(&p, 10, 10, 4, 4, 0.9), None);
+    }
+
+    #[test]
+    fn bound_dominates_monte_carlo_miss_rate() {
+        // Empirical check of Theorem 1: simulate random shuffles and
+        // count how often a planted co-cluster has < T_m rows AND < T_n
+        // cols in every block. The theoretical bound must dominate.
+        use crate::rng::Xoshiro256;
+        let (m_total, n_total) = (200usize, 200usize);
+        let p = CoclusterPrior { row_fraction: 0.25, col_fraction: 0.25, t_m: 6, t_n: 6, };
+        let (phi, psi, m, n) = (50usize, 50usize, 4usize, 4usize);
+        let bound = failure_bound(&p, phi, psi, m, n);
+        let mut rng = Xoshiro256::seed_from(313);
+        let rows_in = (m_total as f64 * p.row_fraction) as usize;
+        let cols_in = (n_total as f64 * p.col_fraction) as usize;
+        let trials = 2000;
+        let mut misses = 0;
+        for _ in 0..trials {
+            let rp = rng.permutation(m_total);
+            let cp = rng.permutation(n_total);
+            // Count co-cluster members (ids < rows_in / cols_in) per block band.
+            let mut row_counts = vec![0usize; m];
+            for (pos, &id) in rp.iter().enumerate() {
+                if id < rows_in {
+                    row_counts[(pos / phi).min(m - 1)] += 1;
+                }
+            }
+            let mut col_counts = vec![0usize; n];
+            for (pos, &id) in cp.iter().enumerate() {
+                if id < cols_in {
+                    col_counts[(pos / psi).min(n - 1)] += 1;
+                }
+            }
+            let detected = row_counts.iter().any(|&r| r >= p.t_m)
+                && col_counts.iter().any(|&c| c >= p.t_n);
+            if !detected {
+                misses += 1;
+            }
+        }
+        let empirical = misses as f64 / trials as f64;
+        assert!(
+            empirical <= bound + 0.02,
+            "empirical miss {empirical} exceeds bound {bound}"
+        );
+    }
+}

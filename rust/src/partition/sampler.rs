@@ -1,0 +1,149 @@
+//! Shuffled grid-partition sampler.
+//!
+//! Each of the `T_p` sampling rounds draws independent uniform
+//! permutations of rows and columns, then cuts the permuted matrix into
+//! the planner's `m×n` grid. A [`BlockJob`] carries the *global* indices
+//! of its rows/columns so results can be mapped straight back without
+//! storing the permutations.
+
+use crate::rng::Xoshiro256;
+
+use super::planner::PartitionPlan;
+
+/// One block co-clustering job.
+#[derive(Clone, Debug)]
+pub struct BlockJob {
+    /// Sampling round this job belongs to (0-based).
+    pub round: usize,
+    /// Grid coordinates within the round.
+    pub grid: (usize, usize),
+    /// Global row ids covered by this block.
+    pub rows: Vec<usize>,
+    /// Global column ids covered by this block.
+    pub cols: Vec<usize>,
+}
+
+impl BlockJob {
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows.len(), self.cols.len())
+    }
+}
+
+/// All blocks of one sampling round.
+#[derive(Clone, Debug)]
+pub struct SamplingRound {
+    pub round: usize,
+    pub jobs: Vec<BlockJob>,
+}
+
+/// Materialize `T_p` rounds of shuffled grid partitions.
+///
+/// Every round covers every row and column exactly once (verified by the
+/// property tests): the union of a round's blocks is a partition of the
+/// index space, which is what makes the merge step's intra-round
+/// co-clusters disjoint.
+pub fn sample_partition(rows: usize, cols: usize, plan: &PartitionPlan, rng: &mut Xoshiro256) -> Vec<SamplingRound> {
+    let mut rounds = Vec::with_capacity(plan.t_p);
+    for round in 0..plan.t_p {
+        let rp = rng.permutation(rows);
+        let cp = rng.permutation(cols);
+        let mut jobs = Vec::with_capacity(plan.m * plan.n);
+        for bi in 0..plan.m {
+            let r_lo = bi * plan.phi;
+            let r_hi = ((bi + 1) * plan.phi).min(rows);
+            if r_lo >= r_hi {
+                continue;
+            }
+            for bj in 0..plan.n {
+                let c_lo = bj * plan.psi;
+                let c_hi = ((bj + 1) * plan.psi).min(cols);
+                if c_lo >= c_hi {
+                    continue;
+                }
+                jobs.push(BlockJob {
+                    round,
+                    grid: (bi, bj),
+                    rows: rp[r_lo..r_hi].to_vec(),
+                    cols: cp[c_lo..c_hi].to_vec(),
+                });
+            }
+        }
+        rounds.push(SamplingRound { round, jobs });
+    }
+    rounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::planner::{plan, PlannerConfig};
+
+    fn mkplan(phi: usize, psi: usize, m: usize, n: usize, t_p: usize) -> PartitionPlan {
+        PartitionPlan { phi, psi, m, n, t_p, certified_probability: 1.0, estimated_cost: 0.0 }
+    }
+
+    #[test]
+    fn each_round_partitions_index_space() {
+        let mut rng = Xoshiro256::seed_from(401);
+        let p = mkplan(30, 25, 4, 4, 3);
+        let rounds = sample_partition(100, 90, &p, &mut rng);
+        assert_eq!(rounds.len(), 3);
+        for round in &rounds {
+            let mut row_seen = vec![false; 100];
+            let mut col_count = vec![0usize; 90];
+            for job in &round.jobs {
+                for &r in &job.rows {
+                    assert!(!row_seen[r] || job.grid.1 != 0, "row duplicated across block-rows");
+                    row_seen[r] = true;
+                }
+                for &c in &job.cols {
+                    col_count[c] += 1;
+                }
+            }
+            assert!(row_seen.iter().all(|&s| s));
+            // Every column appears once per block-row (m times total).
+            assert!(col_count.iter().all(|&c| c == 4), "{col_count:?}");
+        }
+    }
+
+    #[test]
+    fn block_shapes_respect_plan() {
+        let mut rng = Xoshiro256::seed_from(402);
+        let p = mkplan(32, 32, 4, 4, 1);
+        let rounds = sample_partition(128, 128, &p, &mut rng);
+        for job in &rounds[0].jobs {
+            assert_eq!(job.shape(), (32, 32));
+        }
+        assert_eq!(rounds[0].jobs.len(), 16);
+    }
+
+    #[test]
+    fn ragged_tail_blocks_are_smaller() {
+        let mut rng = Xoshiro256::seed_from(403);
+        let p = mkplan(50, 40, 3, 3, 1);
+        let rounds = sample_partition(130, 100, &p, &mut rng);
+        let shapes: Vec<(usize, usize)> = rounds[0].jobs.iter().map(|j| j.shape()).collect();
+        // Last block-row has 130 − 2·50 = 30 rows; last block-col 100 − 2·40 = 20.
+        assert!(shapes.contains(&(30, 20)));
+        assert!(shapes.contains(&(50, 40)));
+    }
+
+    #[test]
+    fn rounds_use_different_permutations() {
+        let mut rng = Xoshiro256::seed_from(404);
+        let p = mkplan(50, 50, 2, 2, 2);
+        let rounds = sample_partition(100, 100, &p, &mut rng);
+        assert_ne!(rounds[0].jobs[0].rows, rounds[1].jobs[0].rows);
+    }
+
+    #[test]
+    fn planner_plan_produces_valid_jobs() {
+        let mut rng = Xoshiro256::seed_from(405);
+        let cfg = PlannerConfig::default();
+        let pl = plan(1000, 800, &cfg);
+        let rounds = sample_partition(1000, 800, &pl, &mut rng);
+        assert_eq!(rounds.len(), pl.t_p);
+        let blocks: usize = rounds.iter().map(|r| r.jobs.len()).sum();
+        assert_eq!(blocks, pl.total_blocks());
+    }
+}

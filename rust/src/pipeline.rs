@@ -1,0 +1,302 @@
+//! End-to-end LAMC pipeline: plan → sample → schedule → merge → label.
+//!
+//! This is the public entry point a downstream user calls (also the core
+//! of the `lamc` binary and the benches): everything from §IV of the
+//! paper composed behind one `run` method.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cocluster::{AtomCocluster, Pnmtf, SpectralCocluster};
+use crate::coordinator::{run_rounds, Router, SchedulerConfig, Stats, StatsSnapshot};
+use crate::matrix::Matrix;
+use crate::merge::{extract_labels, merge_coclusters, Cocluster, MergeConfig};
+use crate::partition::{plan, sample_partition, BlockJob, PartitionPlan, PlannerConfig};
+use crate::runtime::RuntimePool;
+
+/// Which atom algorithm runs inside each block.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AtomKind {
+    Scc,
+    Pnmtf,
+}
+
+impl AtomKind {
+    pub fn artifact_kind(&self) -> &'static str {
+        match self {
+            AtomKind::Scc => "scc_block",
+            AtomKind::Pnmtf => "pnmtf_block",
+        }
+    }
+
+    pub fn build(&self) -> Arc<dyn AtomCocluster> {
+        match self {
+            AtomKind::Scc => Arc::new(SpectralCocluster::default()),
+            AtomKind::Pnmtf => Arc::new(Pnmtf::default()),
+        }
+    }
+}
+
+impl std::str::FromStr for AtomKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_lowercase().as_str() {
+            "scc" => Ok(AtomKind::Scc),
+            "pnmtf" => Ok(AtomKind::Pnmtf),
+            other => anyhow::bail!("unknown atom '{other}' (want scc|pnmtf)"),
+        }
+    }
+}
+
+/// Full pipeline configuration.
+#[derive(Clone)]
+pub struct LamcConfig {
+    /// Target number of co-clusters.
+    pub k: usize,
+    pub atom: AtomKind,
+    /// Custom atom instance (e.g. exact-SVD SCC for the paper-faithful
+    /// baseline benches). When set, overrides `atom.build()` on the
+    /// native route; `atom` still selects the PJRT artifact kind.
+    pub atom_override: Option<Arc<dyn AtomCocluster>>,
+    pub planner: PlannerConfig,
+    pub merge: MergeConfig,
+    /// Worker threads (0 = auto).
+    pub workers: usize,
+    pub seed: u64,
+    /// Optional PJRT runtime; when set, blocks whose shape matches a
+    /// compiled artifact run on the XLA route.
+    pub runtime: Option<Arc<RuntimePool>>,
+}
+
+impl Default for LamcConfig {
+    fn default() -> Self {
+        Self {
+            k: 4,
+            atom: AtomKind::Scc,
+            atom_override: None,
+            planner: PlannerConfig::default(),
+            merge: MergeConfig::default(),
+            workers: 0,
+            seed: 0x1A3C,
+            runtime: None,
+        }
+    }
+}
+
+/// Pipeline output.
+#[derive(Clone, Debug)]
+pub struct LamcResult {
+    pub row_labels: Vec<usize>,
+    pub col_labels: Vec<usize>,
+    /// Number of final co-clusters.
+    pub k: usize,
+    /// The merged co-clusters themselves (consensus cores).
+    pub coclusters: Vec<Cocluster>,
+    pub plan: PartitionPlan,
+    pub stats: StatsSnapshot,
+    pub elapsed_s: f64,
+}
+
+/// The LAMC driver.
+pub struct Lamc {
+    pub config: LamcConfig,
+}
+
+impl Lamc {
+    pub fn new(config: LamcConfig) -> Self {
+        Self { config }
+    }
+
+    /// Convert one block's label vectors into global-id atom co-clusters.
+    ///
+    /// Label `t` pairs the block's rows labelled `t` with its columns
+    /// labelled `t` — the coupling produced by the shared embedding
+    /// k-means (SCC) / shared factor index (PNMTF).
+    pub fn block_to_atoms(job: &BlockJob, result: &crate::cocluster::CoclusterResult) -> Vec<Cocluster> {
+        let mut atoms = Vec::new();
+        for t in 0..result.k {
+            let rows: Vec<u32> = job
+                .rows
+                .iter()
+                .zip(&result.row_labels)
+                .filter_map(|(&gid, &l)| (l == t).then_some(gid as u32))
+                .collect();
+            let cols: Vec<u32> = job
+                .cols
+                .iter()
+                .zip(&result.col_labels)
+                .filter_map(|(&gid, &l)| (l == t).then_some(gid as u32))
+                .collect();
+            if !rows.is_empty() && !cols.is_empty() {
+                atoms.push(Cocluster::atom(rows, cols, result.objective));
+            }
+        }
+        atoms
+    }
+
+    /// Run the full pipeline on a matrix.
+    pub fn run(&self, matrix: &Matrix) -> Result<LamcResult> {
+        let t0 = Instant::now();
+        let cfg = &self.config;
+        let (rows, cols) = (matrix.rows(), matrix.cols());
+        anyhow::ensure!(rows > 0 && cols > 0, "empty matrix");
+
+        // 1. Plan: prefer artifact shapes as block-size candidates so
+        //    whole grids ride the PJRT route.
+        let mut planner = cfg.planner.clone();
+        if planner.candidate_sizes.is_empty() {
+            if let Some(pool) = &cfg.runtime {
+                let sizes = pool.manifest().candidate_sizes(cfg.atom.artifact_kind());
+                if !sizes.is_empty() {
+                    planner.candidate_sizes = sizes;
+                }
+            }
+        }
+        if planner.workers == 0 {
+            planner.workers = SchedulerConfig { workers: cfg.workers, ..Default::default() }.effective_workers();
+        }
+        let partition_plan = plan(rows, cols, &planner);
+        crate::log_info!(
+            "plan: {}x{} grid of {}x{} blocks, T_p={} (P={:.4}, {} blocks total)",
+            partition_plan.m, partition_plan.n, partition_plan.phi, partition_plan.psi,
+            partition_plan.t_p, partition_plan.certified_probability, partition_plan.total_blocks()
+        );
+
+        // 2. Sample shuffled partitions.
+        let mut rng = crate::coordinator::scheduler::leader_rng(cfg.seed);
+        let rounds = sample_partition(rows, cols, &partition_plan, &mut rng);
+
+        // 3. Schedule block jobs.
+        let atom = cfg.atom_override.clone().unwrap_or_else(|| cfg.atom.build());
+        let router = match &cfg.runtime {
+            Some(pool) => Router::with_runtime(atom, Arc::clone(pool), cfg.atom.artifact_kind()),
+            None => Router::native_only(atom),
+        };
+        let sched_cfg = SchedulerConfig { workers: cfg.workers, k: cfg.k, seed: cfg.seed };
+        let stats = Stats::default();
+        let results = run_rounds(matrix, &rounds, &router, &sched_cfg, &stats)?;
+
+        // 4. Hierarchical merge.
+        let t_merge = Instant::now();
+        let atoms: Vec<Cocluster> = results
+            .iter()
+            .flat_map(|(job, res)| Self::block_to_atoms(job, res))
+            .collect();
+        crate::log_info!("merging {} atom co-clusters", atoms.len());
+        let merged = merge_coclusters(atoms, &cfg.merge);
+        let (row_labels, col_labels, k) = extract_labels(&merged, rows, cols);
+        stats.merge_ns.store(t_merge.elapsed().as_nanos() as u64, std::sync::atomic::Ordering::Relaxed);
+
+        let snapshot = stats.snapshot();
+        crate::log_info!("done: k={k}, {snapshot}");
+        Ok(LamcResult {
+            row_labels,
+            col_labels,
+            k,
+            coclusters: merged,
+            plan: partition_plan,
+            stats: snapshot,
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Run the *baseline* (no partitioning): the atom directly on the
+    /// whole matrix. Used by the Table II/III benches as SCC / PNMTF.
+    pub fn run_baseline(&self, matrix: &Matrix) -> Result<LamcResult> {
+        let t0 = Instant::now();
+        let cfg = &self.config;
+        let atom = cfg.atom_override.clone().unwrap_or_else(|| cfg.atom.build());
+        let mut rng = crate::rng::Xoshiro256::seed_from(cfg.seed);
+        let res = atom.cocluster(matrix, cfg.k, &mut rng);
+        let plan = PartitionPlan::whole(matrix.rows(), matrix.cols());
+        Ok(LamcResult {
+            row_labels: res.row_labels,
+            col_labels: res.col_labels,
+            k: res.k,
+            coclusters: vec![],
+            plan,
+            stats: StatsSnapshot::default(),
+            elapsed_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cocluster::CoclusterResult;
+    use crate::data::synthetic::{planted_dense, PlantedConfig};
+    use crate::metrics::score_coclustering;
+    use crate::partition::prob_model::CoclusterPrior;
+
+    fn fast_config(k: usize) -> LamcConfig {
+        LamcConfig {
+            k,
+            planner: PlannerConfig {
+                candidate_sizes: vec![128, 192, 256],
+                prior: CoclusterPrior { row_fraction: 0.2, col_fraction: 0.2, t_m: 6, t_n: 6 },
+                max_samplings: 8,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn block_to_atoms_maps_global_ids() {
+        let job = BlockJob { round: 0, grid: (0, 0), rows: vec![10, 20, 30], cols: vec![5, 6] };
+        let res = CoclusterResult { row_labels: vec![0, 1, 0], col_labels: vec![1, 0], k: 2, objective: 0.5 };
+        let atoms = Lamc::block_to_atoms(&job, &res);
+        assert_eq!(atoms.len(), 2);
+        assert_eq!(atoms[0].rows, vec![10, 30]);
+        assert_eq!(atoms[0].cols, vec![6]);
+        assert_eq!(atoms[1].rows, vec![20]);
+        assert_eq!(atoms[1].cols, vec![5]);
+    }
+
+    #[test]
+    fn block_to_atoms_skips_row_only_clusters() {
+        let job = BlockJob { round: 0, grid: (0, 0), rows: vec![1, 2], cols: vec![3] };
+        let res = CoclusterResult { row_labels: vec![0, 1], col_labels: vec![0], k: 2, objective: 0.0 };
+        let atoms = Lamc::block_to_atoms(&job, &res);
+        assert_eq!(atoms.len(), 1, "label-1 cluster has no columns → dropped");
+    }
+
+    #[test]
+    fn end_to_end_recovers_planted_structure() {
+        let ds = planted_dense(&PlantedConfig {
+            rows: 500,
+            cols: 400,
+            row_clusters: 4,
+            col_clusters: 4,
+            noise: 0.15,
+            signal: 1.5,
+            seed: 801,
+            ..Default::default()
+        });
+        let lamc = Lamc::new(fast_config(4));
+        let out = lamc.run(&ds.matrix).unwrap();
+        assert!(out.plan.t_p >= 1);
+        let s = score_coclustering(&ds.row_labels, &out.row_labels, &ds.col_labels, &out.col_labels);
+        assert!(s.nmi() > 0.6, "nmi {} (k={})", s.nmi(), out.k);
+    }
+
+    #[test]
+    fn baseline_runs_whole_matrix() {
+        let ds = planted_dense(&PlantedConfig { rows: 100, cols: 80, seed: 802, ..Default::default() });
+        let lamc = Lamc::new(fast_config(4));
+        let out = lamc.run_baseline(&ds.matrix).unwrap();
+        assert_eq!(out.row_labels.len(), 100);
+        assert_eq!(out.plan, PartitionPlan::whole(100, 80));
+    }
+
+    #[test]
+    fn atom_kind_parsing() {
+        assert_eq!("scc".parse::<AtomKind>().unwrap(), AtomKind::Scc);
+        assert_eq!("PNMTF".parse::<AtomKind>().unwrap(), AtomKind::Pnmtf);
+        assert!("gmm".parse::<AtomKind>().is_err());
+    }
+}

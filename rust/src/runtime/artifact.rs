@@ -1,0 +1,144 @@
+//! Artifact manifest: what `python/compile/aot.py` emitted.
+//!
+//! Format: TSV with header, one row per compiled HLO module:
+//! `name  kind  phi  psi  rank  kmax  kmeans_iters  path`
+//! (paths relative to the manifest's directory). TSV keeps the rust side
+//! dependency-free — no JSON parser needed.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// One compiled block-co-clustering executable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Graph kind: "scc_block" (spectral) or "pnmtf_block".
+    pub kind: String,
+    /// Static block rows the module was lowered for.
+    pub phi: usize,
+    /// Static block cols.
+    pub psi: usize,
+    /// Embedding rank (spectral) / factor rank (pnmtf).
+    pub rank: usize,
+    /// Maximum k supported (runtime `k` input is masked up to this).
+    pub kmax: usize,
+    /// k-means / update iterations baked into the graph.
+    pub iters: usize,
+    /// Absolute path to the HLO text file.
+    pub path: PathBuf,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str, base: &Path) -> Result<Self> {
+        let mut artifacts = Vec::new();
+        let mut lines = text.lines().enumerate();
+        let Some((_, header)) = lines.next() else {
+            bail!("empty manifest");
+        };
+        let want = "name\tkind\tphi\tpsi\trank\tkmax\tkmeans_iters\tpath";
+        if header.trim() != want {
+            bail!("unexpected manifest header:\n  got  {header}\n  want {want}");
+        }
+        for (no, line) in lines {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 8 {
+                bail!("manifest line {}: expected 8 columns, got {}", no + 1, cols.len());
+            }
+            let parse = |s: &str, what: &str| -> Result<usize> {
+                s.parse::<usize>().with_context(|| format!("manifest line {}: bad {what}: {s}", no + 1))
+            };
+            artifacts.push(ArtifactSpec {
+                name: cols[0].to_string(),
+                kind: cols[1].to_string(),
+                phi: parse(cols[2], "phi")?,
+                psi: parse(cols[3], "psi")?,
+                rank: parse(cols[4], "rank")?,
+                kmax: parse(cols[5], "kmax")?,
+                iters: parse(cols[6], "kmeans_iters")?,
+                path: base.join(cols[7]),
+            });
+        }
+        Ok(Self { artifacts })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read manifest {path:?}"))?;
+        let base = path.parent().unwrap_or(Path::new("."));
+        Self::parse(&text, base)
+    }
+
+    /// Find the smallest artifact of `kind` that fits an `r×c` block
+    /// (block is zero-padded up to the artifact's static shape).
+    pub fn best_fit(&self, kind: &str, r: usize, c: usize, k: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.phi >= r && a.psi >= c && a.kmax >= k)
+            .min_by_key(|a| a.phi * a.psi)
+    }
+
+    /// Block shapes available for `kind` — fed to the partition planner
+    /// as preferred candidate sizes so whole grids hit the PJRT route.
+    pub fn candidate_sizes(&self, kind: &str) -> Vec<usize> {
+        let mut sizes: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == kind)
+            .flat_map(|a| [a.phi, a.psi])
+            .collect();
+        sizes.sort_unstable();
+        sizes.dedup();
+        sizes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name\tkind\tphi\tpsi\trank\tkmax\tkmeans_iters\tpath\n\
+scc_256\tscc_block\t256\t256\t6\t8\t16\tscc_256.hlo.txt\n\
+scc_512\tscc_block\t512\t512\t6\t8\t16\tscc_512.hlo.txt\n\
+pnmtf_256\tpnmtf_block\t256\t256\t8\t8\t30\tpnmtf_256.hlo.txt\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[0].phi, 256);
+        assert_eq!(m.artifacts[0].path, Path::new("/tmp/a/scc_256.hlo.txt"));
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_fitting() {
+        let m = Manifest::parse(SAMPLE, Path::new("")).unwrap();
+        assert_eq!(m.best_fit("scc_block", 200, 256, 4).unwrap().name, "scc_256");
+        assert_eq!(m.best_fit("scc_block", 300, 100, 4).unwrap().name, "scc_512");
+        assert!(m.best_fit("scc_block", 600, 600, 4).is_none());
+        assert!(m.best_fit("scc_block", 10, 10, 99).is_none());
+    }
+
+    #[test]
+    fn candidate_sizes_deduped_sorted() {
+        let m = Manifest::parse(SAMPLE, Path::new("")).unwrap();
+        assert_eq!(m.candidate_sizes("scc_block"), vec![256, 512]);
+        assert_eq!(m.candidate_sizes("pnmtf_block"), vec![256]);
+    }
+
+    #[test]
+    fn rejects_bad_header_and_columns() {
+        assert!(Manifest::parse("nope\n", Path::new("")).is_err());
+        let bad = "name\tkind\tphi\tpsi\trank\tkmax\tkmeans_iters\tpath\nx\tonly-two\n";
+        assert!(Manifest::parse(bad, Path::new("")).is_err());
+    }
+}

@@ -1,0 +1,41 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Layer-2/-1 computations are lowered once at build time
+//! (`make artifacts` → `artifacts/*.hlo.txt` + `artifacts/manifest.tsv`)
+//! and served from here on the request path — Python is never invoked.
+//!
+//! Threading model: the `xla` crate's `PjRtClient` is `Rc`-backed (not
+//! `Send`), so the pool spawns dedicated **server threads**, each owning
+//! its own CPU client and lazily-compiled executables. Callers submit
+//! [`server::ExecRequest`]s over a channel and block on a per-request
+//! reply channel. XLA's CPU executor is internally multithreaded, so a
+//! small number of servers saturates the machine.
+
+pub mod artifact;
+pub mod pool;
+pub mod server;
+
+pub use artifact::{ArtifactSpec, Manifest};
+pub use pool::{RuntimePool, RuntimePoolConfig};
+
+/// Default location of the artifact manifest relative to the repo root.
+pub const DEFAULT_MANIFEST: &str = "artifacts/manifest.tsv";
+
+/// Locate the artifacts directory: `LAMC_ARTIFACTS` env override, else
+/// walk up from the current dir looking for `artifacts/manifest.tsv`.
+pub fn find_manifest() -> Option<std::path::PathBuf> {
+    if let Ok(p) = std::env::var("LAMC_ARTIFACTS") {
+        let p = std::path::PathBuf::from(p).join("manifest.tsv");
+        return p.exists().then_some(p);
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join(DEFAULT_MANIFEST);
+        if cand.exists() {
+            return Some(cand);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}

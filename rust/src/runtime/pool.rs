@@ -1,0 +1,109 @@
+//! Runtime pool: a handle that fans [`ExecRequest`]s out to PJRT server
+//! threads and exposes a blocking `execute` API usable from any worker.
+
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::cocluster::CoclusterResult;
+use crate::matrix::DenseMatrix;
+
+use super::artifact::{ArtifactSpec, Manifest};
+use super::server::{serve, ExecRequest};
+
+#[derive(Clone, Debug)]
+pub struct RuntimePoolConfig {
+    /// Dedicated PJRT server threads. XLA's CPU executor is itself
+    /// multithreaded, so 1–2 servers usually saturate a workstation.
+    pub servers: usize,
+}
+
+impl Default for RuntimePoolConfig {
+    fn default() -> Self {
+        Self { servers: 2 }
+    }
+}
+
+/// Shared, cloneable handle to the PJRT server threads.
+///
+/// Dropping the last handle closes the request channel, which shuts the
+/// servers down; `JoinHandle`s are detached (server loops hold no state
+/// that needs flushing).
+pub struct RuntimePool {
+    manifest: Manifest,
+    specs: Vec<Arc<ArtifactSpec>>,
+    tx: mpsc::Sender<ExecRequest>,
+}
+
+impl RuntimePool {
+    /// Spin up servers for every artifact in the manifest.
+    pub fn start(manifest: Manifest, config: RuntimePoolConfig) -> Result<Arc<Self>> {
+        anyhow::ensure!(!manifest.artifacts.is_empty(), "manifest has no artifacts");
+        for a in &manifest.artifacts {
+            anyhow::ensure!(a.path.exists(), "artifact file missing: {:?} (run `make artifacts`)", a.path);
+        }
+        let (tx, rx) = mpsc::channel::<ExecRequest>();
+        let shared_rx = Arc::new(Mutex::new(rx));
+        for i in 0..config.servers.max(1) {
+            let queue = Arc::clone(&shared_rx);
+            std::thread::Builder::new()
+                .name(format!("pjrt-server-{i}"))
+                .spawn(move || serve(queue))
+                .context("spawn pjrt server")?;
+        }
+        let specs = manifest.artifacts.iter().cloned().map(Arc::new).collect();
+        Ok(Arc::new(Self { manifest, specs, tx }))
+    }
+
+    /// Convenience: locate the manifest on disk and start.
+    pub fn from_default_manifest(config: RuntimePoolConfig) -> Result<Arc<Self>> {
+        let path = super::find_manifest().context("artifacts/manifest.tsv not found (run `make artifacts`)")?;
+        let manifest = Manifest::load(&path)?;
+        Self::start(manifest, config)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Find the best-fitting artifact spec for a block, if any.
+    pub fn spec_for(&self, kind: &str, rows: usize, cols: usize, k: usize) -> Option<Arc<ArtifactSpec>> {
+        let spec = self.manifest.best_fit(kind, rows, cols, k)?;
+        self.specs.iter().find(|s| s.name == spec.name).cloned()
+    }
+
+    /// Execute a block co-clustering on the PJRT route (blocking).
+    pub fn execute(&self, spec: Arc<ArtifactSpec>, block: DenseMatrix, k: usize, seed: i32) -> Result<CoclusterResult> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(ExecRequest { spec, block, k, seed, reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("runtime pool is shut down"))?;
+        reply_rx.recv().context("pjrt server dropped the reply channel")?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn start_rejects_empty_manifest() {
+        let m = Manifest::default();
+        assert!(RuntimePool::start(m, RuntimePoolConfig::default()).is_err());
+    }
+
+    #[test]
+    fn start_rejects_missing_files() {
+        let m = Manifest::parse(
+            "name\tkind\tphi\tpsi\trank\tkmax\tkmeans_iters\tpath\nx\tscc_block\t8\t8\t2\t4\t4\tdoes_not_exist.hlo.txt\n",
+            Path::new("/nonexistent"),
+        )
+        .unwrap();
+        let err = match RuntimePool::start(m, RuntimePoolConfig::default()) {
+            Err(e) => e,
+            Ok(_) => panic!("expected missing-file error"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

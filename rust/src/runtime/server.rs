@@ -1,0 +1,137 @@
+//! PJRT server thread: owns a (non-`Send`) client + compiled executables.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::cocluster::CoclusterResult;
+use crate::matrix::DenseMatrix;
+
+use super::artifact::ArtifactSpec;
+
+/// A block-co-clustering request for the PJRT route.
+pub struct ExecRequest {
+    pub spec: Arc<ArtifactSpec>,
+    /// The gathered block (r ≤ φ, c ≤ ψ); the server zero-pads.
+    pub block: DenseMatrix,
+    /// Number of co-clusters to extract (≤ spec.kmax).
+    pub k: usize,
+    /// PRNG seed for the in-graph sketch + k-means init.
+    pub seed: i32,
+    /// Reply channel.
+    pub reply: mpsc::Sender<Result<CoclusterResult>>,
+}
+
+/// Shared FIFO the servers pull from.
+pub type SharedQueue = Arc<std::sync::Mutex<mpsc::Receiver<ExecRequest>>>;
+
+/// Server main loop: compile-on-first-use cache keyed by artifact name.
+pub fn serve(queue: SharedQueue) {
+    // Client creation can fail only on catastrophic PJRT issues; in that
+    // case every request gets the error forwarded.
+    let client = xla::PjRtClient::cpu();
+    let mut executables: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    loop {
+        let req = {
+            let guard = queue.lock().unwrap();
+            match guard.recv() {
+                Ok(r) => r,
+                Err(_) => return, // pool dropped the sender: shut down
+            }
+        };
+        let result = match &client {
+            Ok(c) => execute(c, &mut executables, &req),
+            Err(e) => Err(anyhow::anyhow!("PJRT client init failed: {e}")),
+        };
+        // Receiver may have given up (timeout); ignore send errors.
+        let _ = req.reply.send(result);
+    }
+}
+
+fn get_executable<'a>(
+    client: &xla::PjRtClient,
+    cache: &'a mut HashMap<String, xla::PjRtLoadedExecutable>,
+    spec: &ArtifactSpec,
+) -> Result<&'a xla::PjRtLoadedExecutable> {
+    if !cache.contains_key(&spec.name) {
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("load HLO {:?}: {e}", spec.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {}: {e}", spec.name))?;
+        cache.insert(spec.name.clone(), exe);
+    }
+    Ok(cache.get(&spec.name).unwrap())
+}
+
+fn execute(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    req: &ExecRequest,
+) -> Result<CoclusterResult> {
+    let spec = &req.spec;
+    let (r, c) = (req.block.rows(), req.block.cols());
+    anyhow::ensure!(r <= spec.phi && c <= spec.psi, "block {r}x{c} exceeds artifact {}x{}", spec.phi, spec.psi);
+    anyhow::ensure!(req.k >= 1 && req.k <= spec.kmax, "k={} outside artifact kmax={}", req.k, spec.kmax);
+
+    let exe = get_executable(client, cache, spec)?;
+
+    let padded = if r == spec.phi && c == spec.psi {
+        req.block.clone()
+    } else {
+        req.block.pad_to(spec.phi, spec.psi)
+    };
+    let a = xla::Literal::vec1(padded.data())
+        .reshape(&[spec.phi as i64, spec.psi as i64])
+        .map_err(|e| anyhow::anyhow!("reshape block literal: {e}"))?;
+    let seed = xla::Literal::vec1(&[req.seed]);
+    let k_lit = xla::Literal::vec1(&[req.k as i32]);
+    // Centroid init indices into the stacked embedding [rows; cols]:
+    // strided picks across real (non-padding) rows and cols, seed-rotated.
+    let mut init = Vec::with_capacity(spec.kmax);
+    let offset = (req.seed.unsigned_abs() as usize) % r.max(1);
+    for t in 0..spec.kmax {
+        let idx = if t % 2 == 0 {
+            // row-side pick
+            (offset + t * r / spec.kmax.max(1)) % r.max(1)
+        } else {
+            // col-side pick, offset past the φ row slots
+            spec.phi + ((offset + t * c / spec.kmax.max(1)) % c.max(1))
+        };
+        init.push(idx as i32);
+    }
+    let init_lit = xla::Literal::vec1(&init);
+    // Actual (unpadded) block dims: the graph masks padding out of the
+    // embedding, centroid updates and the objective.
+    let dims = xla::Literal::vec1(&[r as i32, c as i32]);
+
+    let mut result = exe
+        .execute::<xla::Literal>(&[a, seed, k_lit, init_lit, dims])
+        .map_err(|e| anyhow::anyhow!("execute {}: {e}", spec.name))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+    let parts = result
+        .decompose_tuple()
+        .map_err(|e| anyhow::anyhow!("decompose result tuple: {e}"))?;
+    anyhow::ensure!(parts.len() == 3, "artifact returned {} outputs, want 3", parts.len());
+    let row_labels_full: Vec<i32> = parts[0].to_vec().map_err(|e| anyhow::anyhow!("row labels: {e}"))?;
+    let col_labels_full: Vec<i32> = parts[1].to_vec().map_err(|e| anyhow::anyhow!("col labels: {e}"))?;
+    let inertia: Vec<f32> = parts[2].to_vec().map_err(|e| anyhow::anyhow!("inertia: {e}"))?;
+
+    // Crop padding; clamp defensively so a buggy artifact cannot poison
+    // downstream label arrays.
+    let k = req.k;
+    let row_labels = row_labels_full[..r].iter().map(|&l| (l.max(0) as usize).min(k - 1)).collect();
+    let col_labels = col_labels_full[..c].iter().map(|&l| (l.max(0) as usize).min(k - 1)).collect();
+    Ok(CoclusterResult {
+        row_labels,
+        col_labels,
+        k,
+        objective: inertia.first().copied().unwrap_or(f32::NAN) as f64,
+    })
+}

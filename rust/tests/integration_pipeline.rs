@@ -1,0 +1,140 @@
+//! Integration: the full LAMC pipeline over planted datasets.
+
+use lamc::data::synthetic::{planted_dense, planted_sparse, PlantedConfig};
+use lamc::metrics::score_coclustering;
+use lamc::partition::prob_model::CoclusterPrior;
+use lamc::partition::PlannerConfig;
+use lamc::pipeline::{AtomKind, Lamc, LamcConfig};
+
+fn fast_planner() -> PlannerConfig {
+    PlannerConfig {
+        candidate_sizes: vec![128, 192, 256],
+        prior: CoclusterPrior { row_fraction: 0.18, col_fraction: 0.18, t_m: 6, t_n: 6 },
+        max_samplings: 8,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn lamc_scc_recovers_dense_structure() {
+    let ds = planted_dense(&PlantedConfig {
+        rows: 600,
+        cols: 500,
+        row_clusters: 4,
+        col_clusters: 4,
+        noise: 0.15,
+        signal: 1.5,
+        seed: 1001,
+        ..Default::default()
+    });
+    let lamc = Lamc::new(LamcConfig { k: 4, planner: fast_planner(), ..Default::default() });
+    let out = lamc.run(&ds.matrix).unwrap();
+    let s = score_coclustering(&ds.row_labels, &out.row_labels, &ds.col_labels, &out.col_labels);
+    assert!(s.nmi() > 0.7, "nmi {} (k={}, plan {:?})", s.nmi(), out.k, out.plan);
+    assert!(s.ari() > 0.5, "ari {}", s.ari());
+    // Partitioning actually happened.
+    assert!(out.plan.total_blocks() > 1);
+    assert_eq!(out.stats.blocks_total as usize, out.plan.total_blocks());
+}
+
+#[test]
+fn lamc_scc_recovers_sparse_structure() {
+    let ds = planted_sparse(&PlantedConfig {
+        rows: 900,
+        cols: 600,
+        row_clusters: 4,
+        col_clusters: 4,
+        density: 0.06,
+        signal: 3.0,
+        seed: 1002,
+        ..Default::default()
+    });
+    let lamc = Lamc::new(LamcConfig { k: 4, planner: fast_planner(), ..Default::default() });
+    let out = lamc.run(&ds.matrix).unwrap();
+    let s = score_coclustering(&ds.row_labels, &out.row_labels, &ds.col_labels, &out.col_labels);
+    assert!(s.nmi() > 0.55, "nmi {}", s.nmi());
+}
+
+#[test]
+fn lamc_pnmtf_runs_end_to_end() {
+    let ds = planted_dense(&PlantedConfig {
+        rows: 400,
+        cols: 300,
+        row_clusters: 3,
+        col_clusters: 3,
+        noise: 0.1,
+        signal: 1.5,
+        seed: 1003,
+        ..Default::default()
+    });
+    let lamc = Lamc::new(LamcConfig {
+        k: 3,
+        atom: AtomKind::Pnmtf,
+        planner: fast_planner(),
+        ..Default::default()
+    });
+    let out = lamc.run(&ds.matrix).unwrap();
+    let s = score_coclustering(&ds.row_labels, &out.row_labels, &ds.col_labels, &out.col_labels);
+    assert!(s.nmi() > 0.35, "nmi {}", s.nmi());
+}
+
+#[test]
+fn lamc_quality_tracks_baseline_on_dense() {
+    // The paper's Table III: LAMC trades little quality for its speedup.
+    let ds = planted_dense(&PlantedConfig {
+        rows: 500,
+        cols: 400,
+        row_clusters: 4,
+        col_clusters: 4,
+        noise: 0.15,
+        signal: 1.5,
+        seed: 1004,
+        ..Default::default()
+    });
+    let lamc = Lamc::new(LamcConfig { k: 4, planner: fast_planner(), ..Default::default() });
+    let part = lamc.run(&ds.matrix).unwrap();
+    let base = lamc.run_baseline(&ds.matrix).unwrap();
+    let s_part = score_coclustering(&ds.row_labels, &part.row_labels, &ds.col_labels, &part.col_labels);
+    let s_base = score_coclustering(&ds.row_labels, &base.row_labels, &ds.col_labels, &base.col_labels);
+    assert!(
+        s_part.nmi() > s_base.nmi() - 0.25,
+        "partitioned quality collapsed: {} vs baseline {}",
+        s_part.nmi(),
+        s_base.nmi()
+    );
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let ds = planted_dense(&PlantedConfig { rows: 300, cols: 300, seed: 1005, ..Default::default() });
+    let cfg = LamcConfig { k: 4, planner: fast_planner(), seed: 77, ..Default::default() };
+    let a = Lamc::new(cfg.clone()).run(&ds.matrix).unwrap();
+    let b = Lamc::new(cfg).run(&ds.matrix).unwrap();
+    assert_eq!(a.row_labels, b.row_labels);
+    assert_eq!(a.col_labels, b.col_labels);
+    assert_eq!(a.k, b.k);
+}
+
+#[test]
+fn label_shapes_always_match_input() {
+    for (rows, cols) in [(150, 90), (301, 299), (128, 512)] {
+        let ds = planted_dense(&PlantedConfig { rows, cols, seed: 1006, ..Default::default() });
+        let out = Lamc::new(LamcConfig { k: 4, planner: fast_planner(), ..Default::default() })
+            .run(&ds.matrix)
+            .unwrap();
+        assert_eq!(out.row_labels.len(), rows);
+        assert_eq!(out.col_labels.len(), cols);
+        assert!(out.row_labels.iter().all(|&l| l < out.k));
+        assert!(out.col_labels.iter().all(|&l| l < out.k));
+    }
+}
+
+#[test]
+fn small_matrix_falls_back_to_whole_plan() {
+    let ds = planted_dense(&PlantedConfig { rows: 80, cols: 80, seed: 1007, ..Default::default() });
+    let out = Lamc::new(LamcConfig { k: 3, planner: fast_planner(), ..Default::default() })
+        .run(&ds.matrix)
+        .unwrap();
+    assert_eq!(out.plan.total_blocks(), 1, "tiny input should not partition");
+    assert_eq!(out.row_labels.len(), 80);
+}

@@ -1,0 +1,147 @@
+//! Integration: PJRT runtime against the real AOT artifacts.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a loud message) when the manifest is absent so `cargo test`
+//! stays usable on a fresh checkout.
+
+use std::sync::Arc;
+
+use lamc::data::synthetic::{planted_dense, PlantedConfig};
+use lamc::matrix::Matrix;
+use lamc::metrics::score_coclustering;
+use lamc::partition::prob_model::CoclusterPrior;
+use lamc::partition::PlannerConfig;
+use lamc::pipeline::{AtomKind, Lamc, LamcConfig};
+use lamc::runtime::{Manifest, RuntimePool, RuntimePoolConfig};
+
+fn pool() -> Option<Arc<RuntimePool>> {
+    let Some(path) = lamc::runtime::find_manifest() else {
+        eprintln!("SKIP: artifacts/manifest.tsv not found — run `make artifacts`");
+        return None;
+    };
+    let manifest = Manifest::load(&path).expect("manifest parses");
+    Some(RuntimePool::start(manifest, RuntimePoolConfig { servers: 2 }).expect("pool starts"))
+}
+
+fn planted_block(rows: usize, cols: usize, k: usize, seed: u64) -> (lamc::matrix::DenseMatrix, Vec<usize>, Vec<usize>) {
+    let ds = planted_dense(&PlantedConfig {
+        rows,
+        cols,
+        row_clusters: k,
+        col_clusters: k,
+        noise: 0.1,
+        signal: 1.5,
+        seed,
+        ..Default::default()
+    });
+    (ds.matrix.to_dense(), ds.row_labels, ds.col_labels)
+}
+
+#[test]
+fn every_artifact_loads_and_executes() {
+    let Some(pool) = pool() else { return };
+    for spec in &pool.manifest().artifacts.clone() {
+        let spec = pool.spec_for(&spec.kind, spec.phi, spec.psi, 2).expect("spec self-fit");
+        let (block, _, _) = planted_block(spec.phi, spec.psi, 2, 2001);
+        let out = pool.execute(Arc::clone(&spec), block, 2, 7).unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+        out.validate(spec.phi, spec.psi).unwrap();
+        eprintln!("artifact {} ok (objective {:.4})", spec.name, out.objective);
+    }
+}
+
+#[test]
+fn scc_artifact_recovers_planted_block() {
+    let Some(pool) = pool() else { return };
+    let spec = pool.spec_for("scc_block", 256, 256, 4).expect("scc_256 exists");
+    let (block, rl, cl) = planted_block(256, 256, 4, 2002);
+    let out = pool.execute(spec, block, 4, 11).expect("execute");
+    let s = score_coclustering(&rl, &out.row_labels, &cl, &out.col_labels);
+    assert!(s.nmi() > 0.75, "pjrt scc nmi {}", s.nmi());
+}
+
+#[test]
+fn padded_execution_matches_exact_region() {
+    // A 200x190 block padded into the 256x256 artifact must cluster the
+    // real region as well as the native route does.
+    let Some(pool) = pool() else { return };
+    let spec = pool.spec_for("scc_block", 200, 190, 3).expect("fit");
+    let (block, rl, cl) = planted_block(200, 190, 3, 2003);
+    let out = pool.execute(spec, block.clone(), 3, 13).expect("execute");
+    out.validate(200, 190).unwrap();
+    let s = score_coclustering(&rl, &out.row_labels, &cl, &out.col_labels);
+    assert!(s.nmi() > 0.8, "padded pjrt nmi {}", s.nmi());
+}
+
+#[test]
+fn pjrt_and_native_routes_agree_on_quality() {
+    let Some(pool) = pool() else { return };
+    let spec = pool.spec_for("scc_block", 256, 256, 4).expect("fit");
+    let (block, rl, cl) = planted_block(256, 256, 4, 2004);
+    let pjrt = pool.execute(spec, block.clone(), 4, 17).expect("pjrt");
+    let native = {
+        use lamc::cocluster::AtomCocluster;
+        let mut rng = lamc::rng::Xoshiro256::seed_from(17);
+        lamc::cocluster::SpectralCocluster::default().cocluster(&Matrix::Dense(block), 4, &mut rng)
+    };
+    let s_pjrt = score_coclustering(&rl, &pjrt.row_labels, &cl, &pjrt.col_labels);
+    let s_native = score_coclustering(&rl, &native.row_labels, &cl, &native.col_labels);
+    assert!(
+        (s_pjrt.nmi() - s_native.nmi()).abs() < 0.15,
+        "route quality diverged: pjrt {} native {}",
+        s_pjrt.nmi(),
+        s_native.nmi()
+    );
+}
+
+#[test]
+fn pnmtf_artifact_recovers_planted_block() {
+    let Some(pool) = pool() else { return };
+    let spec = pool.spec_for("pnmtf_block", 128, 128, 3).expect("pnmtf_128 exists");
+    let (block, rl, cl) = planted_block(128, 128, 3, 2005);
+    let out = pool.execute(spec, block, 3, 19).expect("execute");
+    let s = score_coclustering(&rl, &out.row_labels, &cl, &out.col_labels);
+    assert!(s.nmi() > 0.5, "pjrt pnmtf nmi {}", s.nmi());
+}
+
+#[test]
+fn full_pipeline_on_pjrt_route() {
+    let Some(pool) = pool() else { return };
+    let ds = planted_dense(&PlantedConfig {
+        rows: 700,
+        cols: 600,
+        row_clusters: 4,
+        col_clusters: 4,
+        noise: 0.15,
+        signal: 1.5,
+        seed: 2006,
+        ..Default::default()
+    });
+    let lamc = Lamc::new(LamcConfig {
+        k: 4,
+        atom: AtomKind::Scc,
+        runtime: Some(pool),
+        planner: PlannerConfig {
+            prior: CoclusterPrior { row_fraction: 0.18, col_fraction: 0.18, t_m: 6, t_n: 6 },
+            max_samplings: 6,
+            ..Default::default()
+        },
+        ..Default::default()
+    });
+    let out = lamc.run(&ds.matrix).unwrap();
+    assert!(out.stats.blocks_pjrt > 0, "no blocks took the PJRT route: {}", out.stats);
+    assert_eq!(out.stats.pjrt_fallbacks, 0, "pjrt route had failures: {}", out.stats);
+    let s = score_coclustering(&ds.row_labels, &out.row_labels, &ds.col_labels, &out.col_labels);
+    assert!(s.nmi() > 0.6, "pjrt pipeline nmi {}", s.nmi());
+}
+
+#[test]
+fn invalid_requests_are_rejected_not_crashed() {
+    let Some(pool) = pool() else { return };
+    let spec = pool.spec_for("scc_block", 128, 128, 2).expect("fit");
+    // Block bigger than the artifact.
+    let (big, _, _) = planted_block(spec.phi + 1, 10, 2, 2007);
+    assert!(pool.execute(Arc::clone(&spec), big, 2, 1).is_err());
+    // k over kmax.
+    let (ok, _, _) = planted_block(64, 64, 2, 2008);
+    assert!(pool.execute(spec, ok, 99, 1).is_err());
+}

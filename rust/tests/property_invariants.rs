@@ -1,0 +1,429 @@
+//! Property-based tests over the library's core invariants (testkit).
+
+use lamc::cocluster::{AtomCocluster, SpectralCocluster};
+use lamc::matrix::{CsrMatrix, DenseMatrix, Matrix};
+use lamc::merge::{extract_labels, jaccard, merge_coclusters, Cocluster, MergeConfig};
+use lamc::metrics::{adjusted_rand_index, normalized_mutual_information};
+use lamc::partition::prob_model::{detection_probability, failure_bound, required_samplings, CoclusterPrior};
+use lamc::partition::{sample_partition, PartitionPlan};
+use lamc::rng::Xoshiro256;
+use lamc::testkit::{check, default_cases, in_range};
+
+#[test]
+fn prop_csr_dense_round_trip() {
+    check(
+        "csr↔dense round trip",
+        default_cases(),
+        |rng| {
+            let (m, n) = (rng.next_range(1, 40), rng.next_range(1, 40));
+            let nnz = rng.next_below(m * n + 1);
+            let trip: Vec<(usize, usize, f32)> = (0..nnz)
+                .map(|_| (rng.next_below(m), rng.next_below(n), rng.next_f32() + 0.01))
+                .collect();
+            (m, n, trip)
+        },
+        |(m, n, trip)| {
+            let s = CsrMatrix::from_triplets(*m, *n, trip.clone());
+            let back = CsrMatrix::from_dense(&s.to_dense());
+            if back != s {
+                return Err("round trip changed the matrix".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_matmul_matches_f64_oracle() {
+    check(
+        "blocked matmul vs f64 oracle",
+        24,
+        |rng| {
+            let (m, k, n) = (rng.next_range(1, 60), rng.next_range(1, 60), rng.next_range(1, 20));
+            (DenseMatrix::randn(m, k, rng), DenseMatrix::randn(k, n, rng))
+        },
+        |(a, b)| {
+            let fast = lamc::linalg::matmul(a, b);
+            for i in 0..a.rows() {
+                for j in 0..b.cols() {
+                    let want: f64 = (0..a.cols()).map(|t| a.get(i, t) as f64 * b.get(t, j) as f64).sum();
+                    if (fast.get(i, j) as f64 - want).abs() > 1e-3 {
+                        return Err(format!("({i},{j}): {} vs {want}", fast.get(i, j)));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_qr_orthonormal_and_reconstructs() {
+    check(
+        "householder QR invariants",
+        24,
+        |rng| {
+            let k = rng.next_range(1, 12);
+            let m = rng.next_range(k, 80);
+            DenseMatrix::randn(m, k, rng)
+        },
+        |a| {
+            let (q, r) = lamc::linalg::qr_thin(a);
+            let defect = lamc::linalg::qr::orthonormality_defect(&q);
+            if defect > 1e-4 {
+                return Err(format!("orthonormality defect {defect}"));
+            }
+            let back = lamc::linalg::matmul(&q, &r);
+            let err = back.max_abs_diff(a);
+            if err > 1e-3 {
+                return Err(format!("reconstruction error {err}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_metrics_axioms() {
+    check(
+        "NMI/ARI axioms",
+        default_cases(),
+        |rng| {
+            let n = rng.next_range(2, 200);
+            let k = rng.next_range(1, 6);
+            let a: Vec<usize> = (0..n).map(|_| rng.next_below(k)).collect();
+            let b: Vec<usize> = (0..n).map(|_| rng.next_below(k)).collect();
+            (a, b)
+        },
+        |(a, b)| {
+            let nmi = normalized_mutual_information(a, b);
+            in_range(nmi, 0.0, 1.0, "nmi")?;
+            let ari = adjusted_rand_index(a, b);
+            in_range(ari, -1.0, 1.0, "ari")?;
+            // Symmetry.
+            if (nmi - normalized_mutual_information(b, a)).abs() > 1e-12 {
+                return Err("nmi asymmetric".into());
+            }
+            if (ari - adjusted_rand_index(b, a)).abs() > 1e-12 {
+                return Err("ari asymmetric".into());
+            }
+            // Self-agreement.
+            if (normalized_mutual_information(a, a) - 1.0).abs() > 1e-12 {
+                return Err("nmi(a,a) != 1".into());
+            }
+            if (adjusted_rand_index(a, a) - 1.0).abs() > 1e-12 {
+                return Err("ari(a,a) != 1".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_metrics_relabel_invariant() {
+    check(
+        "metrics invariant under label permutation",
+        default_cases(),
+        |rng| {
+            let n = rng.next_range(4, 120);
+            let k = rng.next_range(2, 5);
+            let a: Vec<usize> = (0..n).map(|_| rng.next_below(k)).collect();
+            let b: Vec<usize> = (0..n).map(|_| rng.next_below(k)).collect();
+            let perm = rng.permutation(k);
+            let b_perm: Vec<usize> = b.iter().map(|&l| perm[l]).collect();
+            (a, b, b_perm)
+        },
+        |(a, b, b_perm)| {
+            if (normalized_mutual_information(a, b) - normalized_mutual_information(a, b_perm)).abs() > 1e-12 {
+                return Err("nmi not relabel-invariant".into());
+            }
+            if (adjusted_rand_index(a, b) - adjusted_rand_index(a, b_perm)).abs() > 1e-12 {
+                return Err("ari not relabel-invariant".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_partition_rounds_cover_exactly() {
+    check(
+        "every sampling round is a partition of the index space",
+        32,
+        |rng| {
+            let rows = rng.next_range(10, 300);
+            let cols = rng.next_range(10, 300);
+            let phi = rng.next_range(3, rows);
+            let psi = rng.next_range(3, cols);
+            let plan = PartitionPlan {
+                phi,
+                psi,
+                m: rows.div_ceil(phi),
+                n: cols.div_ceil(psi),
+                t_p: rng.next_range(1, 3),
+                certified_probability: 1.0,
+                estimated_cost: 0.0,
+            };
+            let mut sub = rng.split();
+            let rounds = sample_partition(rows, cols, &plan, &mut sub);
+            (rows, cols, plan, rounds)
+        },
+        |(rows, cols, plan, rounds)| {
+            if rounds.len() != plan.t_p {
+                return Err("wrong round count".into());
+            }
+            for round in rounds {
+                let mut row_hits = vec![0usize; *rows];
+                let mut col_hits = vec![0usize; *cols];
+                for job in &round.jobs {
+                    for &r in &job.rows {
+                        row_hits[r] += 1;
+                    }
+                    for &c in &job.cols {
+                        col_hits[c] += 1;
+                    }
+                }
+                // Each row id appears once per block-column band.
+                if row_hits.iter().any(|&h| h != plan.n.min(cols.div_ceil(plan.psi))) {
+                    return Err(format!("row coverage {:?}", row_hits.iter().take(5).collect::<Vec<_>>()));
+                }
+                if col_hits.iter().any(|&h| h != plan.m.min(rows.div_ceil(plan.phi))) {
+                    return Err("col coverage wrong".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_theorem1_bound_dominates_monte_carlo() {
+    // The paper's central claim (Theorem 1): the analytic failure bound
+    // dominates the empirical miss rate of random shuffling.
+    check(
+        "Thm 1 bound ≥ empirical miss rate",
+        8,
+        |rng| {
+            let total = 150 + rng.next_below(100);
+            let frac = 0.15 + 0.2 * rng.next_f64();
+            let phi = 30 + rng.next_below(40);
+            (total, frac, phi, rng.split())
+        },
+        |(total, frac, phi, rng)| {
+            let prior = CoclusterPrior { row_fraction: *frac, col_fraction: *frac, t_m: 5, t_n: 5 };
+            let m = total.div_ceil(*phi);
+            let bound = failure_bound(&prior, *phi, *phi, m, m);
+            let members = (*total as f64 * frac) as usize;
+            let mut rng = rng.clone();
+            let trials = 600;
+            let mut misses = 0;
+            for _ in 0..trials {
+                let perm = rng.permutation(*total);
+                let mut band_counts = vec![0usize; m];
+                for (pos, &id) in perm.iter().enumerate() {
+                    if id < members {
+                        band_counts[(pos / phi).min(m - 1)] += 1;
+                    }
+                }
+                let col_perm = rng.permutation(*total);
+                let mut col_counts = vec![0usize; m];
+                for (pos, &id) in col_perm.iter().enumerate() {
+                    if id < members {
+                        col_counts[(pos / phi).min(m - 1)] += 1;
+                    }
+                }
+                let detected = band_counts.iter().any(|&x| x >= prior.t_m)
+                    && col_counts.iter().any(|&x| x >= prior.t_n);
+                if !detected {
+                    misses += 1;
+                }
+            }
+            let empirical = misses as f64 / trials as f64;
+            if empirical > bound + 0.03 {
+                return Err(format!("empirical {empirical} > bound {bound}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_required_samplings_is_minimal_and_sufficient() {
+    check(
+        "Eq. 4 T_p solver minimal + sufficient",
+        default_cases(),
+        |rng| {
+            let prior = CoclusterPrior {
+                row_fraction: 0.1 + 0.3 * rng.next_f64(),
+                col_fraction: 0.1 + 0.3 * rng.next_f64(),
+                t_m: rng.next_range(2, 10),
+                t_n: rng.next_range(2, 10),
+            };
+            let phi = rng.next_range(40, 300);
+            let psi = rng.next_range(40, 300);
+            let (m, n) = (rng.next_range(2, 8), rng.next_range(2, 8));
+            let p = 0.5 + 0.49 * rng.next_f64();
+            (prior, phi, psi, m, n, p)
+        },
+        |(prior, phi, psi, m, n, p)| {
+            match required_samplings(prior, *phi, *psi, *m, *n, *p) {
+                None => Ok(()), // vacuous bound: nothing to check
+                Some(tp) => {
+                    let achieved = detection_probability(prior, *phi, *psi, *m, *n, tp);
+                    if achieved < *p {
+                        return Err(format!("tp={tp} gives {achieved} < {p}"));
+                    }
+                    if tp > 1 {
+                        let under = detection_probability(prior, *phi, *psi, *m, *n, tp - 1);
+                        if under >= *p {
+                            return Err(format!("tp={tp} not minimal"));
+                        }
+                    }
+                    Ok(())
+                }
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_merge_output_labels_total_and_bounded() {
+    check(
+        "merge + extract covers every id with a bounded label",
+        32,
+        |rng| {
+            let rows = rng.next_range(10, 120);
+            let cols = rng.next_range(10, 120);
+            let n_atoms = rng.next_range(1, 30);
+            let atoms: Vec<Cocluster> = (0..n_atoms)
+                .map(|_| {
+                    let nr = rng.next_range(1, rows);
+                    let nc = rng.next_range(1, cols);
+                    Cocluster::atom(
+                        rng.sample_indices(rows, nr).into_iter().map(|x| x as u32).collect(),
+                        rng.sample_indices(cols, nc).into_iter().map(|x| x as u32).collect(),
+                        rng.next_f64(),
+                    )
+                })
+                .collect();
+            (rows, cols, atoms)
+        },
+        |(rows, cols, atoms)| {
+            let merged = merge_coclusters(atoms.clone(), &MergeConfig::default());
+            let (rl, cl, k) = extract_labels(&merged, *rows, *cols);
+            if rl.len() != *rows || cl.len() != *cols {
+                return Err("label length".into());
+            }
+            if rl.iter().chain(cl.iter()).any(|&l| l >= k) {
+                return Err("label out of range".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_merge_idempotent_on_merged_output() {
+    check(
+        "merging already-merged clusters at τ=1 is identity-sized",
+        16,
+        |rng| {
+            let n_atoms = rng.next_range(2, 20);
+            let atoms: Vec<Cocluster> = (0..n_atoms)
+                .map(|_| {
+                    let base = rng.next_below(4) * 50;
+                    let nr = rng.next_range(3, 20);
+                    let nc = rng.next_range(3, 20);
+                    Cocluster::atom(
+                        (0..nr).map(|i| (base + i) as u32).collect(),
+                        (0..nc).map(|i| (base + i) as u32).collect(),
+                        0.0,
+                    )
+                })
+                .collect();
+            atoms
+        },
+        |atoms| {
+            let cfg = MergeConfig::default();
+            let once = merge_coclusters(atoms.clone(), &cfg);
+            let strict = MergeConfig { tau: 1.0, ..cfg };
+            let twice = merge_coclusters(once.clone(), &strict);
+            if twice.len() > once.len() {
+                return Err(format!("re-merge grew: {} -> {}", once.len(), twice.len()));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_jaccard_bounds_and_identity() {
+    check(
+        "jaccard axioms",
+        default_cases(),
+        |rng| {
+            let n = rng.next_range(0, 50);
+            let mut a: Vec<u32> = (0..n).map(|_| rng.next_below(100) as u32).collect();
+            a.sort_unstable();
+            a.dedup();
+            let m = rng.next_range(0, 50);
+            let mut b: Vec<u32> = (0..m).map(|_| rng.next_below(100) as u32).collect();
+            b.sort_unstable();
+            b.dedup();
+            (a, b)
+        },
+        |(a, b)| {
+            let j = jaccard(a, b);
+            in_range(j, 0.0, 1.0, "jaccard")?;
+            if (jaccard(a, a) - 1.0).abs() > 1e-12 {
+                return Err("jaccard(a,a) != 1".into());
+            }
+            if (j - jaccard(b, a)).abs() > 1e-12 {
+                return Err("jaccard asymmetric".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_scc_permutation_equivariance() {
+    // Permuting rows of the input permutes the row labels identically
+    // (up to the same RNG stream). This is the invariant the shuffled
+    // partition sampler relies on.
+    check(
+        "SCC equivariant under row permutation",
+        6,
+        |rng| {
+            let ds = lamc::data::synthetic::planted_dense(&lamc::data::synthetic::PlantedConfig {
+                rows: 60,
+                cols: 50,
+                row_clusters: 3,
+                col_clusters: 3,
+                noise: 0.05,
+                signal: 2.0,
+                seed: rng.next_u64(),
+                ..Default::default()
+            });
+            let perm = rng.permutation(60);
+            (ds, perm, rng.next_u64())
+        },
+        |(ds, perm, seed)| {
+            let scc = SpectralCocluster::default();
+            let dense = ds.matrix.to_dense();
+            let mut rng1 = Xoshiro256::seed_from(*seed);
+            let base = scc.cocluster(&ds.matrix, 3, &mut rng1);
+            let permuted = dense.gather_block(perm, &(0..50).collect::<Vec<_>>());
+            let mut rng2 = Xoshiro256::seed_from(*seed);
+            let shuffled = scc.cocluster(&Matrix::Dense(permuted), 3, &mut rng2);
+            // Same partition structure: NMI between base labels pulled
+            // through the permutation and shuffled labels must be 1.
+            let pulled: Vec<usize> = perm.iter().map(|&i| base.row_labels[i]).collect();
+            let nmi = normalized_mutual_information(&pulled, &shuffled.row_labels);
+            if nmi < 0.95 {
+                return Err(format!("row-permutation broke SCC: nmi {nmi}"));
+            }
+            Ok(())
+        },
+    );
+}
