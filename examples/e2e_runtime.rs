@@ -13,7 +13,7 @@
 //! truth; run is recorded in EXPERIMENTS.md §E2E.
 //!
 //! ```text
-//! make artifacts && cargo run --release --example e2e_runtime
+//! make artifacts && cargo run --release --features pjrt --example e2e_runtime
 //! ```
 
 use lamc::data;

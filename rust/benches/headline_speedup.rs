@@ -24,8 +24,8 @@ fn main() {
     let rows = ((1000.0 * scale) as usize).max(300);
     let ds = datasets::build("amazon1000", Some(rows), 7).unwrap();
     eprintln!("dense workload {}x{}", ds.matrix.rows(), ds.matrix.cols());
-    let scc = run_method(Method::Scc, &ds, 5, 7, f64::MAX, None).unwrap();
-    let lamc_scc = run_method(Method::LamcScc, &ds, 5, 7, f64::MAX, None).unwrap();
+    let scc = run_method(Method::Scc, &ds, 5, 7, f64::MAX).unwrap();
+    let lamc_scc = run_method(Method::LamcScc, &ds, 5, 7, f64::MAX).unwrap();
     let (t_scc, t_lamc) = (scc.time_s.unwrap(), lamc_scc.time_s.unwrap());
     println!("dense  ({}x{}):", ds.matrix.rows(), ds.matrix.cols());
     println!("  SCC       : {t_scc:>9.3} s  (NMI {})", scc.nmi_cell());
@@ -36,8 +36,8 @@ fn main() {
     let rows = ((18_000.0 * scale * 0.5) as usize).max(2000);
     let ds = datasets::build("classic4", Some(rows), 7).unwrap();
     eprintln!("sparse workload {}x{}", ds.matrix.rows(), ds.matrix.cols());
-    let pnmtf = run_method(Method::Pnmtf, &ds, 4, 7, f64::MAX, None).unwrap();
-    let lamc_pnmtf = run_method(Method::LamcPnmtf, &ds, 4, 7, f64::MAX, None).unwrap();
+    let pnmtf = run_method(Method::Pnmtf, &ds, 4, 7, f64::MAX).unwrap();
+    let lamc_pnmtf = run_method(Method::LamcPnmtf, &ds, 4, 7, f64::MAX).unwrap();
     let (t_p, t_lp) = (pnmtf.time_s.unwrap(), lamc_pnmtf.time_s.unwrap());
     println!("\nsparse ({}x{}, {:.2}% nnz):", ds.matrix.rows(), ds.matrix.cols(),
              100.0 * ds.matrix.nnz() as f64 / (ds.matrix.rows() * ds.matrix.cols()) as f64);

@@ -34,7 +34,7 @@ fn main() {
             let outcome = if gate > budget {
                 None
             } else {
-                run_method(method, &ds, spec.row_clusters, 42, f64::MAX, None).ok()
+                run_method(method, &ds, spec.row_clusters, 42, f64::MAX).ok()
             };
             match outcome {
                 Some(o) => cells.push(o.time_cell()),

@@ -9,7 +9,8 @@
 //!
 //! This is the native (pure-Rust) route; the PJRT route executes the
 //! same computation from the AOT-compiled JAX artifact (see
-//! `python/compile/model.py` and [`crate::runtime`]).
+//! `python/compile/model.py` and the `runtime` module behind the
+//! `pjrt` cargo feature).
 
 use crate::matrix::{ops, Matrix};
 use crate::linalg::randomized_svd;

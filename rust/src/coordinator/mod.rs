@@ -1,15 +1,19 @@
 //! Layer-3 coordinator: routing, scheduling, and telemetry.
 //!
-//! The coordinator owns the request path of LAMC: it takes the partition
+//! The coordinator owns the request path of LAMC (paper §IV-C: parallel
+//! co-clustering of the partitioned submatrices): it takes the partition
 //! planner's block jobs, routes each to an execution backend (the PJRT
-//! artifact route when a compiled shape fits, the native Rust route
-//! otherwise), fans them out over a worker pool with pull-based load
-//! balancing, and collects per-route telemetry.
+//! artifact route when a compiled shape fits and the `pjrt` feature is
+//! enabled, the native Rust route otherwise), fans them out over a
+//! worker pool with pull-based load balancing, and collects per-route
+//! telemetry.
 
 pub mod router;
 pub mod scheduler;
 pub mod stats;
 
-pub use router::{BlockExecutor, NativeExecutor, PjrtExecutor, Route, Router};
+#[cfg(feature = "pjrt")]
+pub use router::PjrtExecutor;
+pub use router::{BlockExecutor, NativeExecutor, Route, Router};
 pub use scheduler::{run_rounds, SchedulerConfig};
 pub use stats::{Stats, StatsSnapshot};

@@ -1,4 +1,10 @@
 //! Execution routing: PJRT artifact route vs native Rust route.
+//!
+//! Implements the execution side of paper §IV-C (parallel block
+//! co-clustering): each partition block is dispatched either to the
+//! AOT-compiled XLA artifact (`pjrt` feature) or to the pure-Rust atom.
+//! Without the `pjrt` feature the [`Router`] degenerates to the
+//! [`NativeExecutor`] with no behavioural difference besides speed.
 
 use std::sync::Arc;
 
@@ -7,6 +13,7 @@ use anyhow::Result;
 use crate::cocluster::{AtomCocluster, CoclusterResult};
 use crate::matrix::DenseMatrix;
 use crate::rng::Xoshiro256;
+#[cfg(feature = "pjrt")]
 use crate::runtime::RuntimePool;
 
 /// A backend that co-clusters one gathered block.
@@ -39,12 +46,14 @@ impl BlockExecutor for NativeExecutor {
 }
 
 /// PJRT route: AOT-compiled JAX/Pallas artifact via the runtime pool.
+#[cfg(feature = "pjrt")]
 pub struct PjrtExecutor {
     pool: Arc<RuntimePool>,
     /// Artifact kind this executor serves ("scc_block" / "pnmtf_block").
     kind: String,
 }
 
+#[cfg(feature = "pjrt")]
 impl PjrtExecutor {
     pub fn new(pool: Arc<RuntimePool>, kind: impl Into<String>) -> Self {
         Self { pool, kind: kind.into() }
@@ -65,6 +74,7 @@ impl PjrtExecutor {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl BlockExecutor for PjrtExecutor {
     fn name(&self) -> &str {
         "pjrt"
@@ -87,9 +97,11 @@ pub enum Route {
 }
 
 /// Routing policy: PJRT when available + fitting, else native; PJRT
-/// errors fall back to native (counted in [`super::Stats`]).
+/// errors fall back to native (counted in [`super::Stats`]). Built
+/// without the `pjrt` feature, every job takes the native route.
 pub struct Router {
     pub native: NativeExecutor,
+    #[cfg(feature = "pjrt")]
     pub pjrt: Option<PjrtExecutor>,
     /// Maximum tolerated padding blow-up on the PJRT route.
     pub max_pad_factor: f64,
@@ -97,9 +109,15 @@ pub struct Router {
 
 impl Router {
     pub fn native_only(atom: Arc<dyn AtomCocluster>) -> Self {
-        Self { native: NativeExecutor::new(atom), pjrt: None, max_pad_factor: 1.7 }
+        Self {
+            native: NativeExecutor::new(atom),
+            #[cfg(feature = "pjrt")]
+            pjrt: None,
+            max_pad_factor: 1.7,
+        }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn with_runtime(atom: Arc<dyn AtomCocluster>, pool: Arc<RuntimePool>, kind: &str) -> Self {
         Self {
             native: NativeExecutor::new(atom),
@@ -109,11 +127,15 @@ impl Router {
     }
 
     /// Decide the route for a block shape.
+    #[cfg_attr(not(feature = "pjrt"), allow(unused_variables))]
     pub fn route(&self, rows: usize, cols: usize, k: usize) -> Route {
-        match &self.pjrt {
-            Some(p) if p.fits(rows, cols, k, self.max_pad_factor) => Route::Pjrt,
-            _ => Route::Native,
+        #[cfg(feature = "pjrt")]
+        if let Some(p) = &self.pjrt {
+            if p.fits(rows, cols, k, self.max_pad_factor) {
+                return Route::Pjrt;
+            }
         }
+        Route::Native
     }
 
     /// Execute with fallback; returns the result and the route that
@@ -121,6 +143,7 @@ impl Router {
     pub fn execute(&self, block: &DenseMatrix, k: usize, seed: u64, stats: &super::Stats) -> Result<CoclusterResult> {
         use std::sync::atomic::Ordering;
         match self.route(block.rows(), block.cols(), k) {
+            #[cfg(feature = "pjrt")]
             Route::Pjrt => {
                 let pjrt = self.pjrt.as_ref().unwrap();
                 match pjrt.execute(block, k, seed) {
@@ -136,6 +159,8 @@ impl Router {
                     }
                 }
             }
+            #[cfg(not(feature = "pjrt"))]
+            Route::Pjrt => unreachable!("pjrt route cannot be chosen without the `pjrt` feature"),
             Route::Native => {
                 stats.blocks_native.fetch_add(1, Ordering::Relaxed);
                 self.native.execute(block, k, seed)

@@ -1,4 +1,5 @@
-//! Worker-pool scheduler for block jobs.
+//! Worker-pool scheduler for block jobs (paper §IV-C: the leader/worker
+//! structure that co-clusters the partitioned submatrices in parallel).
 //!
 //! Pull-based load balancing: workers claim the next job index from an
 //! atomic counter, gather the block from the (shared, read-only) input

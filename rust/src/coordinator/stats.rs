@@ -1,4 +1,6 @@
-//! Coordinator telemetry: lock-free counters, snapshotted for reports.
+//! Coordinator telemetry: lock-free counters, snapshotted for reports
+//! (feeds the Table II time breakdowns — gather vs execute vs merge —
+//! and the per-route block counts of the §V evaluation).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

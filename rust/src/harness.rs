@@ -15,7 +15,6 @@ use crate::cocluster::{Pnmtf, SpectralCocluster, SpectralConfig};
 use crate::data::synthetic::PlantedDataset;
 use crate::metrics::{score_coclustering, CoclusterScores};
 use crate::pipeline::{AtomKind, Lamc, LamcConfig};
-use crate::runtime::RuntimePool;
 
 /// The methods of Tables II/III.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -115,13 +114,17 @@ pub fn budget_flops() -> f64 {
 }
 
 /// Run one method on one dataset under a budget.
+///
+/// Always uses the native execution route: the benches compare the
+/// *algorithms* (partitioned vs full-matrix), not the execution backends.
+/// Route comparisons live in `benches/ablation_runtime.rs` (`pjrt`
+/// feature), which drives the runtime through [`LamcConfig`] directly.
 pub fn run_method(
     method: Method,
     ds: &PlantedDataset,
     k: usize,
     seed: u64,
     budget: f64,
-    runtime: Option<Arc<RuntimePool>>,
 ) -> Result<MethodOutcome> {
     let (rows, cols) = (ds.matrix.rows(), ds.matrix.cols());
     let est = estimated_flops(method, rows, cols, k);
@@ -135,7 +138,7 @@ pub fn run_method(
         });
     }
 
-    let base_cfg = LamcConfig { k, seed, runtime, ..Default::default() };
+    let base_cfg = LamcConfig { k, seed, ..Default::default() };
     let out = match method {
         Method::Scc => {
             // Paper-faithful classical SCC: exact Jacobi SVD, whole matrix.
@@ -181,7 +184,7 @@ mod tests {
     fn budget_gates_expensive_methods() {
         let ds = planted_dense(&PlantedConfig { rows: 120, cols: 100, seed: 4001, ..Default::default() });
         // Tiny budget: everything but DeepCC would still exceed it.
-        let out = run_method(Method::Scc, &ds, 3, 1, 1.0, None).unwrap();
+        let out = run_method(Method::Scc, &ds, 3, 1, 1.0).unwrap();
         assert!(out.time_s.is_none());
         assert_eq!(out.time_cell(), "*");
         assert_eq!(out.nmi_cell(), "*");
@@ -190,7 +193,7 @@ mod tests {
     #[test]
     fn deepcc_always_starred() {
         let ds = planted_dense(&PlantedConfig { rows: 50, cols: 50, seed: 4002, ..Default::default() });
-        let out = run_method(Method::DeepCC, &ds, 3, 1, f64::MAX, None).unwrap();
+        let out = run_method(Method::DeepCC, &ds, 3, 1, f64::MAX).unwrap();
         assert!(out.time_s.is_none(), "DeepCC must be infeasible (matches the paper)");
     }
 
@@ -201,7 +204,7 @@ mod tests {
             noise: 0.1, signal: 1.5, seed: 4003, ..Default::default()
         });
         for method in [Method::Scc, Method::Pnmtf, Method::LamcScc, Method::LamcPnmtf] {
-            let out = run_method(method, &ds, 3, 5, f64::MAX, None).unwrap();
+            let out = run_method(method, &ds, 3, 5, f64::MAX).unwrap();
             assert!(out.time_s.is_some(), "{method:?}");
             let s = out.scores.unwrap();
             assert!(s.nmi() > 0.3, "{method:?} nmi {}", s.nmi());

@@ -14,12 +14,16 @@
 //! lamc plan --rows 18000 --cols 1000 --p-thresh 0.99
 //! ```
 
+#![allow(unknown_lints)]
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::{bail, Context, Result};
 use lamc::cli::Args;
 use lamc::data;
 use lamc::metrics::score_coclustering;
 use lamc::partition::{plan, PlannerConfig};
 use lamc::pipeline::{AtomKind, Lamc, LamcConfig};
+#[cfg(feature = "pjrt")]
 use lamc::runtime::{Manifest, RuntimePool, RuntimePoolConfig};
 
 const USAGE: &str = "\
@@ -79,6 +83,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         other => bail!("unknown method '{other}'"),
     };
 
+    #[cfg(feature = "pjrt")]
     let runtime = if partitioned && !args.has("no-runtime") {
         match RuntimePool::from_default_manifest(RuntimePoolConfig::default()) {
             Ok(pool) => {
@@ -99,6 +104,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         atom,
         seed,
         workers: args.get_usize("workers", 0)?,
+        #[cfg(feature = "pjrt")]
         runtime,
         ..Default::default()
     };
@@ -154,6 +160,15 @@ fn cmd_datasets() -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_artifacts() -> Result<()> {
+    println!("this binary was built without the `pjrt` feature — no artifact runtime.");
+    println!("rebuild with `cargo build --release --features pjrt` (requires the xla");
+    println!("crate; see rust/Cargo.toml) to load AOT artifacts.");
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_artifacts() -> Result<()> {
     let Some(path) = lamc::runtime::find_manifest() else {
         println!("no artifact manifest found — run `make artifacts`");

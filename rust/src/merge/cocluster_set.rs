@@ -1,4 +1,5 @@
-//! Co-cluster value type used by the merging stage.
+//! Co-cluster value type used by the merging stage (paper §IV-D: the
+//! units the hierarchical merge combines, carrying per-id vote mass).
 
 /// A co-cluster over global indices, with per-id vote mass accumulated
 /// across merges. Freshly-detected atoms have vote 1.0 on every member.

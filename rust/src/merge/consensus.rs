@@ -1,4 +1,6 @@
-//! Final label extraction from merged co-clusters.
+//! Final label extraction from merged co-clusters (paper §IV-D output
+//! stage: one row/column labeling from the merged consensus set, as
+//! scored in Table III).
 
 use super::cocluster_set::Cocluster;
 

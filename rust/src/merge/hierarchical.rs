@@ -1,4 +1,6 @@
-//! Hierarchical agglomeration of atom co-clusters.
+//! Hierarchical agglomeration of atom co-clusters (paper §IV-D: the
+//! hierarchical co-cluster merging algorithm — pairwise agglomeration
+//! levels within a pre-fixed iteration bound).
 
 use super::cocluster_set::Cocluster;
 use super::similarity::{band_keys, minhash_signature, pair_similarity};

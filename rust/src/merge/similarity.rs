@@ -1,4 +1,6 @@
-//! Co-cluster similarity + minhash bucketing for sub-quadratic merging.
+//! Co-cluster similarity + minhash bucketing for sub-quadratic merging
+//! (paper §IV-D: the similarity criterion deciding which co-clusters
+//! from different submatrices/samplings refer to the same structure).
 
 use super::cocluster_set::Cocluster;
 

@@ -1,4 +1,5 @@
-//! Theorem 1: probabilistic co-cluster detection model.
+//! Theorem 1: probabilistic co-cluster detection model (paper §III
+//! problem formulation + §IV-B.1, Eqs. 1–4).
 //!
 //! Under a uniformly random row/column shuffle, the number of rows of a
 //! co-cluster `C_k` that land in one `φ×ψ` block is hypergeometric; the

@@ -1,4 +1,5 @@
-//! Shuffled grid-partition sampler.
+//! Shuffled grid-partition sampler (paper §IV-B.3: `T_p` independent
+//! random re-partitions of the shuffled matrix).
 //!
 //! Each of the `T_p` sampling rounds draws independent uniform
 //! permutations of rows and columns, then cuts the permuted matrix into

@@ -14,6 +14,7 @@ use crate::coordinator::{run_rounds, Router, SchedulerConfig, Stats, StatsSnapsh
 use crate::matrix::Matrix;
 use crate::merge::{extract_labels, merge_coclusters, Cocluster, MergeConfig};
 use crate::partition::{plan, sample_partition, BlockJob, PartitionPlan, PlannerConfig};
+#[cfg(feature = "pjrt")]
 use crate::runtime::RuntimePool;
 
 /// Which atom algorithm runs inside each block.
@@ -67,7 +68,9 @@ pub struct LamcConfig {
     pub workers: usize,
     pub seed: u64,
     /// Optional PJRT runtime; when set, blocks whose shape matches a
-    /// compiled artifact run on the XLA route.
+    /// compiled artifact run on the XLA route. Only available with the
+    /// `pjrt` cargo feature — the default build always routes native.
+    #[cfg(feature = "pjrt")]
     pub runtime: Option<Arc<RuntimePool>>,
 }
 
@@ -81,6 +84,7 @@ impl Default for LamcConfig {
             merge: MergeConfig::default(),
             workers: 0,
             seed: 0x1A3C,
+            #[cfg(feature = "pjrt")]
             runtime: None,
         }
     }
@@ -147,6 +151,7 @@ impl Lamc {
         // 1. Plan: prefer artifact shapes as block-size candidates so
         //    whole grids ride the PJRT route.
         let mut planner = cfg.planner.clone();
+        #[cfg(feature = "pjrt")]
         if planner.candidate_sizes.is_empty() {
             if let Some(pool) = &cfg.runtime {
                 let sizes = pool.manifest().candidate_sizes(cfg.atom.artifact_kind());
@@ -171,10 +176,13 @@ impl Lamc {
 
         // 3. Schedule block jobs.
         let atom = cfg.atom_override.clone().unwrap_or_else(|| cfg.atom.build());
+        #[cfg(feature = "pjrt")]
         let router = match &cfg.runtime {
             Some(pool) => Router::with_runtime(atom, Arc::clone(pool), cfg.atom.artifact_kind()),
             None => Router::native_only(atom),
         };
+        #[cfg(not(feature = "pjrt"))]
+        let router = Router::native_only(atom);
         let sched_cfg = SchedulerConfig { workers: cfg.workers, k: cfg.k, seed: cfg.seed };
         let stats = Stats::default();
         let results = run_rounds(matrix, &rounds, &router, &sched_cfg, &stats)?;

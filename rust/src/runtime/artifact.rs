@@ -1,4 +1,5 @@
-//! Artifact manifest: what `python/compile/aot.py` emitted.
+//! Artifact manifest: what `python/compile/aot.py` emitted — the static
+//! block shapes the §IV-C parallel co-clustering stage can offload.
 //!
 //! Format: TSV with header, one row per compiled HLO module:
 //! `name  kind  phi  psi  rank  kmax  kmeans_iters  path`

@@ -1,4 +1,6 @@
-//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! (the accelerated execution backend for the paper's §IV-C parallel
+//! block co-clustering; compiled only with the `pjrt` cargo feature).
 //!
 //! Layer-2/-1 computations are lowered once at build time
 //! (`make artifacts` → `artifacts/*.hlo.txt` + `artifacts/manifest.tsv`)

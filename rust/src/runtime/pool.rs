@@ -1,5 +1,6 @@
 //! Runtime pool: a handle that fans [`ExecRequest`]s out to PJRT server
-//! threads and exposes a blocking `execute` API usable from any worker.
+//! threads and exposes a blocking `execute` API usable from any worker
+//! of the §IV-C scheduler.
 
 use std::sync::{mpsc, Arc, Mutex};
 

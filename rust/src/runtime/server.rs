@@ -1,4 +1,5 @@
-//! PJRT server thread: owns a (non-`Send`) client + compiled executables.
+//! PJRT server thread: owns a (non-`Send`) client + compiled executables
+//! and serves one §IV-C block co-clustering request at a time.
 
 use std::collections::HashMap;
 use std::sync::mpsc;

@@ -5,7 +5,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 use lamc::cocluster::{AtomCocluster, CoclusterResult, SpectralCocluster};
-use lamc::coordinator::{run_rounds, BlockExecutor, NativeExecutor, Router, SchedulerConfig, Stats};
+use lamc::coordinator::{run_rounds, BlockExecutor, Router, SchedulerConfig, Stats};
 use lamc::data::synthetic::{planted_dense, PlantedConfig};
 use lamc::matrix::{DenseMatrix, Matrix};
 use lamc::partition::{sample_partition, PartitionPlan};
@@ -113,12 +113,7 @@ fn results_independent_of_worker_count() {
 #[test]
 fn executor_errors_propagate() {
     let ds = planted_dense(&PlantedConfig { rows: 100, cols: 100, seed: 3004, ..Default::default() });
-    // Router whose *native* route fails: build one manually.
-    let router = Router {
-        native: NativeExecutor::new(Arc::new(SpectralCocluster::default())),
-        pjrt: None,
-        max_pad_factor: 1.7,
-    };
+    let router = Router::native_only(Arc::new(SpectralCocluster::default()));
     // Directly exercise the failing executor through the trait.
     let failing = FailingExecutor;
     assert!(failing.execute(&ds.matrix.to_dense(), 2, 0).is_err());
