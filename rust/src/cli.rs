@@ -6,7 +6,21 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
+
+/// A bad invocation (unknown command/flag, missing value): the binary
+/// prints usage to stderr and exits non-zero when it sees one of these,
+/// instead of treating it like a runtime failure.
+#[derive(Debug)]
+pub struct UsageError(pub String);
+
+impl std::fmt::Display for UsageError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for UsageError {}
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
@@ -32,7 +46,7 @@ impl Args {
                 } else {
                     let v = iter
                         .next()
-                        .with_context(|| format!("flag --{name} expects a value"))?;
+                        .ok_or_else(|| UsageError(format!("flag --{name} expects a value")))?;
                     out.flags.insert(name.to_string(), v);
                 }
             } else if out.command.is_none() {
@@ -85,11 +99,12 @@ impl Args {
         &self.positional
     }
 
-    /// Error if any unknown flags were passed.
+    /// Error ([`UsageError`]) if any unknown flags were passed.
     pub fn expect_flags(&self, known: &[&str]) -> Result<()> {
         for k in self.flags.keys() {
             if !known.contains(&k.as_str()) {
-                bail!("unknown flag --{k} (known: {})", known.join(", "));
+                let known = if known.is_empty() { "none".to_string() } else { known.join(", ") };
+                return Err(UsageError(format!("unknown flag --{k} (known: {known})")).into());
             }
         }
         Ok(())
@@ -140,5 +155,14 @@ mod tests {
         let a = parse("run --k 3 --oops 1");
         assert!(a.expect_flags(&["k"]).is_err());
         assert!(a.expect_flags(&["k", "oops"]).is_ok());
+    }
+
+    #[test]
+    fn usage_errors_are_typed() {
+        let a = parse("run --k 3 --oops 1");
+        let err = a.expect_flags(&["k"]).unwrap_err();
+        assert!(err.is::<UsageError>(), "unknown flag must be a UsageError");
+        let err = Args::parse(["run".into(), "--k".into()], &[]).unwrap_err();
+        assert!(err.is::<UsageError>(), "missing value must be a UsageError");
     }
 }

@@ -3,14 +3,21 @@
 //!
 //! Pull-based load balancing: workers claim the next job index from an
 //! atomic counter, gather the block from the (shared, read-only) input
-//! matrix, execute via the [`Router`], and push the result into a
-//! channel the leader drains. Pull scheduling gives natural backpressure
+//! matrix, execute via the [`Router`], and write the result into a
+//! slot the leader collects. Pull scheduling gives natural backpressure
 //! — a worker never holds more than one gathered block — and the atomic
 //! counter keeps long-tail blocks from serializing behind a static
 //! round-robin assignment.
+//!
+//! Execution happens on the persistent process-wide
+//! [`crate::service::WorkerPool`] (plus the calling thread): threads are
+//! spawned once and amortized across every `run_rounds` call, instead of
+//! the per-call `thread::scope` workers earlier versions used. Results
+//! stay deterministic and (round, grid)-ordered regardless of pool size
+//! or interleaving with concurrent service requests.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -18,13 +25,16 @@ use anyhow::Result;
 use crate::matrix::Matrix;
 use crate::partition::{BlockJob, SamplingRound};
 use crate::rng::{SplitMix64, Xoshiro256};
+use crate::service::WorkerPool;
 
 use super::router::Router;
 use super::stats::Stats;
 
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
-    /// Worker threads. 0 = available parallelism.
+    /// Concurrency cap: how many claim loops (calling thread + shared
+    /// pool threads) may process this call's jobs. 0 = available
+    /// parallelism. Never affects results, only speed.
     pub workers: usize,
     /// Co-cluster count requested from each block.
     pub k: usize,
@@ -72,56 +82,42 @@ pub fn run_rounds(
     if jobs.is_empty() {
         return Ok(vec![]);
     }
-    let workers = cfg.effective_workers().min(jobs.len());
-    let next = AtomicUsize::new(0);
-    let (tx, rx) = mpsc::channel();
+    let concurrency = cfg.effective_workers().min(jobs.len());
+    let slots: Mutex<Vec<Option<Result<crate::cocluster::CoclusterResult>>>> =
+        Mutex::new((0..jobs.len()).map(|_| None).collect());
 
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let tx = tx.clone();
-            let jobs = &jobs;
-            let next = &next;
-            scope.spawn(move || {
-                loop {
-                    let idx = next.fetch_add(1, Ordering::Relaxed);
-                    if idx >= jobs.len() {
-                        break;
-                    }
-                    let job = jobs[idx];
-                    let t0 = Instant::now();
-                    let block = matrix.gather_block(&job.rows, &job.cols);
-                    stats.add_gather(t0.elapsed().as_nanos() as u64);
+    WorkerPool::global().run_jobs(concurrency, jobs.len(), |idx| {
+        let job = jobs[idx];
+        let t0 = Instant::now();
+        let block = matrix.gather_block(&job.rows, &job.cols);
+        stats.add_gather(t0.elapsed().as_nanos() as u64);
 
-                    let seed = job_seed(cfg.seed, job);
-                    let t1 = Instant::now();
-                    let result = router.execute(&block, cfg.k, seed, stats);
-                    stats.add_exec(t1.elapsed().as_nanos() as u64);
-                    stats.blocks_total.fetch_add(1, Ordering::Relaxed);
+        let seed = job_seed(cfg.seed, job);
+        let t1 = Instant::now();
+        let result = router.execute(&block, cfg.k, seed, stats);
+        stats.add_exec(t1.elapsed().as_nanos() as u64);
+        stats.blocks_total.fetch_add(1, Ordering::Relaxed);
 
-                    // Leader never drops the receiver while workers run.
-                    let _ = tx.send((idx, result));
-                }
-            });
-        }
-        drop(tx);
+        // Per-job lock is negligible next to gather + co-clustering.
+        slots.lock().unwrap()[idx] = Some(result);
+    });
 
-        let mut out: Vec<Option<(BlockJob, crate::cocluster::CoclusterResult)>> = (0..jobs.len()).map(|_| None).collect();
-        let mut first_err: Option<anyhow::Error> = None;
-        for (idx, result) in rx {
-            match result {
-                Ok(r) => out[idx] = Some((jobs[idx].clone(), r)),
-                Err(e) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
+    let mut out = Vec::with_capacity(jobs.len());
+    let mut first_err: Option<anyhow::Error> = None;
+    for (idx, slot) in slots.into_inner().unwrap().into_iter().enumerate() {
+        match slot.expect("run_jobs processed every index") {
+            Ok(r) => out.push((jobs[idx].clone(), r)),
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
                 }
             }
         }
-        if let Some(e) = first_err {
-            return Err(e);
-        }
-        Ok(out.into_iter().flatten().collect())
-    })
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    Ok(out)
 }
 
 /// Convenience used by tests/examples: run one atom over the whole
@@ -201,6 +197,35 @@ mod tests {
         assert_ne!(job_seed(5, &a), job_seed(5, &b));
         assert_ne!(job_seed(5, &a), job_seed(5, &c));
         assert_eq!(job_seed(5, &a), job_seed(5, &a.clone()));
+    }
+
+    #[test]
+    fn concurrent_calls_share_the_pool() {
+        // Two run_rounds calls racing on the global pool must not cross
+        // results or lose jobs (the service issues exactly this pattern).
+        let (matrix, rounds) = setup();
+        let matrix = Arc::new(matrix);
+        let rounds = Arc::new(rounds);
+        let mut handles = Vec::new();
+        for seed in [3u64, 4] {
+            let matrix = Arc::clone(&matrix);
+            let rounds = Arc::clone(&rounds);
+            handles.push(std::thread::spawn(move || {
+                let router = Router::native_only(Arc::new(SpectralCocluster::default()));
+                let cfg = SchedulerConfig { seed, ..Default::default() };
+                run_rounds(&matrix, &rounds, &router, &cfg, &Stats::default()).unwrap()
+            }));
+        }
+        let a = handles.remove(0).join().unwrap();
+        let b = handles.remove(0).join().unwrap();
+        assert_eq!(a.len(), 8);
+        assert_eq!(b.len(), 8);
+        // Different base seeds → different per-job seeds → (generically)
+        // different results; identical job coordinates in both.
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.0.grid, y.0.grid);
+            assert_eq!(x.0.round, y.0.round);
+        }
     }
 
     #[test]

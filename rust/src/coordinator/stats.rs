@@ -15,6 +15,12 @@ pub struct Stats {
     pub gather_ns: AtomicU64,
     pub exec_ns: AtomicU64,
     pub merge_ns: AtomicU64,
+    /// Service result-cache hits (whole jobs answered without running
+    /// the pipeline). Only the long-lived service path bumps these; a
+    /// one-shot batch run reports zeros.
+    pub cache_hits: AtomicU64,
+    /// Service result-cache misses (jobs that ran the pipeline).
+    pub cache_misses: AtomicU64,
 }
 
 impl Stats {
@@ -35,6 +41,8 @@ impl Stats {
             gather_s: self.gather_ns.load(Ordering::Relaxed) as f64 / 1e9,
             exec_s: self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9,
             merge_s: self.merge_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
         }
     }
 }
@@ -49,15 +57,17 @@ pub struct StatsSnapshot {
     pub gather_s: f64,
     pub exec_s: f64,
     pub merge_s: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
 }
 
 impl std::fmt::Display for StatsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "blocks={} (native={}, pjrt={}, fallbacks={}) gather={:.3}s exec={:.3}s merge={:.3}s",
+            "blocks={} (native={}, pjrt={}, fallbacks={}) gather={:.3}s exec={:.3}s merge={:.3}s cache={}h/{}m",
             self.blocks_total, self.blocks_native, self.blocks_pjrt, self.pjrt_fallbacks,
-            self.gather_s, self.exec_s, self.merge_s
+            self.gather_s, self.exec_s, self.merge_s, self.cache_hits, self.cache_misses
         )
     }
 }
@@ -85,5 +95,16 @@ mod tests {
         let snap = Stats::default().snapshot();
         let text = format!("{snap}");
         assert!(text.contains("blocks=0"));
+        assert!(text.contains("cache=0h/0m"));
+    }
+
+    #[test]
+    fn cache_counters_snapshot() {
+        let s = Stats::default();
+        s.cache_hits.fetch_add(2, Ordering::Relaxed);
+        s.cache_misses.fetch_add(1, Ordering::Relaxed);
+        let snap = s.snapshot();
+        assert_eq!(snap.cache_hits, 2);
+        assert_eq!(snap.cache_misses, 1);
     }
 }

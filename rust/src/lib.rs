@@ -6,8 +6,10 @@
 //!
 //! * **Layer 3 (this crate)** — the coordinator: probabilistic partition
 //!   planning ([`partition`]), a leader/worker scheduler that fans block
-//!   co-clustering jobs out across threads and execution routes
-//!   ([`coordinator`]), and hierarchical co-cluster merging ([`merge`]).
+//!   co-clustering jobs out across a persistent thread pool and execution
+//!   routes ([`coordinator`]), hierarchical co-cluster merging
+//!   ([`merge`]), and a long-lived TCP serving layer with a job queue and
+//!   result cache ([`service`]).
 //! * **Layer 2** — a JAX compute graph per partition block (spectral
 //!   co-clustering embedding + k-means), AOT-lowered to HLO text at build
 //!   time and executed from Rust via PJRT (the `runtime` module, compiled
@@ -86,6 +88,7 @@ pub mod pipeline;
 pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod service;
 pub mod testkit;
 
 pub use pipeline::{Lamc, LamcConfig, LamcResult};

@@ -4,15 +4,26 @@
 //! * `run`      — run LAMC (or a baseline) on a named dataset, report
 //!                time + NMI/ARI against the planted ground truth.
 //! * `plan`     — show the partition plan the probabilistic model picks.
+//! * `serve`    — run the long-lived co-clustering service (TCP).
+//! * `submit`   — submit a job to a running service.
+//! * `status`   — query a job's state (or server-wide stats) on a
+//!                running service.
 //! * `datasets` — list available dataset specs.
 //! * `artifacts`— show the AOT artifact manifest the runtime would use.
+//! * `version`  — print the crate version.
 //!
 //! Examples:
 //! ```text
 //! lamc run --dataset amazon1000 --method lamc-scc --k 5
 //! lamc run --dataset classic4 --method pnmtf --rows 3000
 //! lamc plan --rows 18000 --cols 1000 --p-thresh 0.99
+//! lamc serve --addr 127.0.0.1:4666
+//! lamc submit --addr 127.0.0.1:4666 --matrix amazon1000 --k 5 --wait
+//! lamc status --addr 127.0.0.1:4666 --id 1
 //! ```
+//!
+//! Unknown commands or flags print the usage to stderr and exit
+//! non-zero.
 
 #![allow(unknown_lints)]
 #![allow(clippy::field_reassign_with_default)]
@@ -25,6 +36,7 @@ use lamc::partition::{plan, PlannerConfig};
 use lamc::pipeline::{AtomKind, Lamc, LamcConfig};
 #[cfg(feature = "pjrt")]
 use lamc::runtime::{Manifest, RuntimePool, RuntimePoolConfig};
+use lamc::service::{JobSpec, ServiceClient, ServiceConfig, ServiceManager, ServiceServer};
 
 const USAGE: &str = "\
 lamc — Large-scale Adaptive Matrix Co-clustering
@@ -34,19 +46,31 @@ USAGE:
                 [--k N] [--rows N] [--seed N] [--workers N] [--p-thresh F]
                 [--tau F] [--no-runtime] [--verbose]
   lamc plan     --rows N --cols N [--p-thresh F] [--row-frac F] [--col-frac F]
+  lamc serve    [--addr HOST:PORT] [--runners N] [--queue N] [--cache-mb N]
+                [--datasets a,b] [--seed N] [--verbose]
+  lamc submit   [--addr HOST:PORT] --matrix NAME [--method M] [--k N] [--seed N]
+                [--p-thresh F] [--tau F] [--workers N] [--wait] [--timeout SECS]
+  lamc status   [--addr HOST:PORT] [--id N]
   lamc datasets
   lamc artifacts
+  lamc version
 ";
+
+const DEFAULT_ADDR: &str = "127.0.0.1:4666";
 
 fn main() {
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
+        if e.is::<lamc::cli::UsageError>() {
+            eprintln!("{USAGE}");
+            std::process::exit(2);
+        }
         std::process::exit(1);
     }
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["verbose", "no-runtime", "help"])?;
+    let args = Args::from_env(&["verbose", "no-runtime", "help", "wait"])?;
     if args.has("verbose") {
         lamc::logging::set_level(lamc::logging::Level::Debug);
     }
@@ -57,10 +81,102 @@ fn run() -> Result<()> {
     match args.command.as_deref().unwrap() {
         "run" => cmd_run(&args),
         "plan" => cmd_plan(&args),
-        "datasets" => cmd_datasets(),
-        "artifacts" => cmd_artifacts(),
-        other => bail!("unknown command '{other}'\n{USAGE}"),
+        "serve" => cmd_serve(&args),
+        "submit" => cmd_submit(&args),
+        "status" => cmd_status(&args),
+        "datasets" => cmd_datasets(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "version" => cmd_version(&args),
+        other => Err(lamc::cli::UsageError(format!("unknown command '{other}'")).into()),
     }
+}
+
+fn cmd_version(args: &Args) -> Result<()> {
+    args.expect_flags(&[])?;
+    println!("lamc {}", env!("CARGO_PKG_VERSION"));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_flags(&["addr", "runners", "queue", "cache-mb", "datasets", "seed"])?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let config = ServiceConfig {
+        runners: args.get_usize("runners", 2)?.max(1),
+        queue_capacity: args.get_usize("queue", 64)?.max(1),
+        cache_capacity_bytes: args.get_usize("cache-mb", 64)? << 20,
+    };
+    let seed = args.get_u64("seed", 42)?;
+    let manager = ServiceManager::new(config);
+    if let Some(names) = args.get("datasets") {
+        for name in names.split(',').filter(|n| !n.is_empty()) {
+            let (r, c) = manager.load_dataset(name, name, None, seed)?;
+            println!("loaded dataset {name}: {r} x {c}");
+        }
+    }
+    let server = ServiceServer::spawn(addr, manager)?;
+    println!("lamc service listening on {}", server.addr());
+    println!("submit with: lamc submit --addr {} --matrix <name>", server.addr());
+    // Blocks until a SHUTDOWN request stops the accept loop.
+    let manager = server.join();
+    println!("shutdown requested; draining queued jobs");
+    manager.shutdown();
+    Ok(())
+}
+
+fn job_spec_from_args(args: &Args) -> Result<JobSpec> {
+    let defaults = JobSpec::default();
+    Ok(JobSpec {
+        matrix: args.get("matrix").context("--matrix required")?.to_string(),
+        method: args.get_or("method", &defaults.method).to_string(),
+        k: args.get_usize("k", defaults.k)?,
+        seed: args.get_u64("seed", defaults.seed)?,
+        p_thresh: args.get_f64("p-thresh", defaults.p_thresh)?,
+        tau: args.get_f64("tau", defaults.tau)?,
+        workers: args.get_usize("workers", defaults.workers)?,
+    })
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    args.expect_flags(&["addr", "matrix", "method", "k", "seed", "p-thresh", "tau", "workers", "timeout"])?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let spec = job_spec_from_args(args)?;
+    let mut client = ServiceClient::connect(addr)?;
+    let id = client.submit(&spec)?;
+    println!("submitted job {id} (matrix={}, method={}, k={})", spec.matrix, spec.method, spec.k);
+    if args.has("wait") {
+        let timeout = std::time::Duration::from_secs(args.get_u64("timeout", 600)?);
+        let out = client.wait(id, timeout)?;
+        println!("job {id} done: k={} rows={} cols={} cached={}", out.k, out.row_labels.len(), out.col_labels.len(), out.cached);
+    } else {
+        println!("poll with: lamc status --addr {addr} --id {id}");
+    }
+    Ok(())
+}
+
+fn cmd_status(args: &Args) -> Result<()> {
+    args.expect_flags(&["addr", "id"])?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let mut client = ServiceClient::connect(addr)?;
+    match args.get("id") {
+        Some(_) => {
+            let id = args.get_u64("id", 0)?;
+            let s = client.status(id)?;
+            print!("job {id}: {}", s.state.as_str());
+            if s.cached {
+                print!(" (cached)");
+            }
+            if let Some(e) = s.error {
+                print!(" error={e}");
+            }
+            println!();
+        }
+        None => {
+            for (k, v) in client.stats()? {
+                println!("{k:<22} {v}");
+            }
+        }
+    }
+    Ok(())
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -149,7 +265,8 @@ fn cmd_plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_datasets() -> Result<()> {
+fn cmd_datasets(args: &Args) -> Result<()> {
+    args.expect_flags(&[])?;
     println!("{:<12} {:>8} {:>6}  {:<6} {:>4} {:>4}", "name", "rows", "cols", "kind", "k", "d");
     for s in data::datasets::SPECS {
         println!(
@@ -161,7 +278,8 @@ fn cmd_datasets() -> Result<()> {
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_artifacts() -> Result<()> {
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    args.expect_flags(&[])?;
     println!("this binary was built without the `pjrt` feature — no artifact runtime.");
     println!("rebuild with `cargo build --release --features pjrt` (requires the xla");
     println!("crate; see rust/Cargo.toml) to load AOT artifacts.");
@@ -169,7 +287,8 @@ fn cmd_artifacts() -> Result<()> {
 }
 
 #[cfg(feature = "pjrt")]
-fn cmd_artifacts() -> Result<()> {
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    args.expect_flags(&[])?;
     let Some(path) = lamc::runtime::find_manifest() else {
         println!("no artifact manifest found — run `make artifacts`");
         return Ok(());

@@ -91,6 +91,38 @@ impl Matrix {
         }
     }
 
+    /// Content fingerprint: a 64-bit hash over shape, storage kind and
+    /// every stored entry, mixed with `rng::SplitMix64`. Two matrices
+    /// with equal fingerprints are (with overwhelming probability) equal
+    /// in content, which is what the service's result cache keys on —
+    /// see `service::cache`. Dense and sparse storage of the same values
+    /// hash differently by design: they take different execution paths.
+    pub fn fingerprint(&self) -> u64 {
+        use crate::rng::mix64 as mix;
+        match self {
+            Matrix::Dense(m) => {
+                let mut h = mix(0x4C41_4D43_0000_0001, m.rows() as u64);
+                h = mix(h, m.cols() as u64);
+                for &x in m.data() {
+                    h = mix(h, x.to_bits() as u64);
+                }
+                h
+            }
+            Matrix::Sparse(m) => {
+                let mut h = mix(0x4C41_4D43_0000_0002, m.rows() as u64);
+                h = mix(h, m.cols() as u64);
+                h = mix(h, m.nnz() as u64);
+                for i in 0..m.rows() {
+                    for (j, v) in m.row_iter(i) {
+                        h = mix(h, ((i as u64) << 32) ^ j as u64);
+                        h = mix(h, v.to_bits() as u64);
+                    }
+                }
+                h
+            }
+        }
+    }
+
     /// Approximate resident bytes of the storage.
     pub fn storage_bytes(&self) -> usize {
         match self {
@@ -132,6 +164,24 @@ mod tests {
         assert!((md.frobenius() - ms.frobenius()).abs() < 1e-12);
         assert_eq!(ms.nnz(), 2);
         assert_eq!(md.nnz(), 4);
+    }
+
+    #[test]
+    fn fingerprint_detects_content_changes() {
+        let base = DenseMatrix::from_rows(&[vec![1.0, 0.0], vec![0.0, 2.0]]);
+        let same = Matrix::from(base.clone()).fingerprint();
+        assert_eq!(same, Matrix::from(base.clone()).fingerprint(), "deterministic");
+
+        let mut bumped = base.clone();
+        bumped.set(1, 1, 2.5);
+        assert_ne!(same, Matrix::from(bumped).fingerprint(), "value change");
+
+        let wide = DenseMatrix::from_vec(1, 4, vec![1.0, 0.0, 0.0, 2.0]);
+        assert_ne!(same, Matrix::from(wide).fingerprint(), "shape change");
+
+        let sparse = Matrix::from(CsrMatrix::from_dense(&base));
+        assert_ne!(same, sparse.fingerprint(), "storage kind is part of the key");
+        assert_eq!(sparse.fingerprint(), Matrix::from(CsrMatrix::from_dense(&base)).fingerprint());
     }
 
     #[test]

@@ -213,20 +213,38 @@ impl Lamc {
 
     /// Run the *baseline* (no partitioning): the atom directly on the
     /// whole matrix. Used by the Table II/III benches as SCC / PNMTF.
+    ///
+    /// The result is shape-compatible with [`Lamc::run`]: `coclusters`
+    /// holds the atom co-clusters of the single whole-matrix job (via
+    /// [`Lamc::block_to_atoms`]) and `stats` reflects the one executed
+    /// block, so callers and the harness can treat both paths uniformly.
     pub fn run_baseline(&self, matrix: &Matrix) -> Result<LamcResult> {
         let t0 = Instant::now();
         let cfg = &self.config;
         let atom = cfg.atom_override.clone().unwrap_or_else(|| cfg.atom.build());
+        let stats = Stats::default();
         let mut rng = crate::rng::Xoshiro256::seed_from(cfg.seed);
+        let t_exec = Instant::now();
         let res = atom.cocluster(matrix, cfg.k, &mut rng);
+        stats.add_exec(t_exec.elapsed().as_nanos() as u64);
+        stats.blocks_total.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        stats.blocks_native.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+
+        let job = BlockJob {
+            round: 0,
+            grid: (0, 0),
+            rows: (0..matrix.rows()).collect(),
+            cols: (0..matrix.cols()).collect(),
+        };
+        let coclusters = Self::block_to_atoms(&job, &res);
         let plan = PartitionPlan::whole(matrix.rows(), matrix.cols());
         Ok(LamcResult {
             row_labels: res.row_labels,
             col_labels: res.col_labels,
             k: res.k,
-            coclusters: vec![],
+            coclusters,
             plan,
-            stats: StatsSnapshot::default(),
+            stats: stats.snapshot(),
             elapsed_s: t0.elapsed().as_secs_f64(),
         })
     }
@@ -299,6 +317,16 @@ mod tests {
         let out = lamc.run_baseline(&ds.matrix).unwrap();
         assert_eq!(out.row_labels.len(), 100);
         assert_eq!(out.plan, PartitionPlan::whole(100, 80));
+        // Baseline results are shape-compatible with the pipeline's:
+        // atom co-clusters present (with global ids) and stats counted.
+        assert!(!out.coclusters.is_empty(), "baseline must derive co-clusters");
+        for c in &out.coclusters {
+            assert!(c.rows.iter().all(|&r| (r as usize) < 100));
+            assert!(c.cols.iter().all(|&j| (j as usize) < 80));
+        }
+        assert_eq!(out.stats.blocks_total, 1);
+        assert_eq!(out.stats.blocks_native, 1);
+        assert!(out.stats.exec_s > 0.0);
     }
 
     #[test]

@@ -35,6 +35,26 @@ impl SplitMix64 {
     }
 }
 
+/// Mix one word into a running SplitMix64 hash chain. This is the
+/// shared primitive behind content fingerprints and canonical config
+/// hashes (`Matrix::fingerprint`, the service cache key): any change to
+/// the absorption scheme must happen here so the two halves of a cache
+/// key can never silently diverge.
+#[inline]
+pub fn mix64(state: u64, word: u64) -> u64 {
+    SplitMix64::new(state ^ word).next_u64()
+}
+
+/// Hash a string into the chain, length-prefixed so adjacent fields
+/// cannot alias (`"ab" + "c"` vs `"a" + "bc"`).
+pub fn mix64_str(state: u64, s: &str) -> u64 {
+    let mut h = mix64(state, s.len() as u64);
+    for b in s.as_bytes() {
+        h = mix64(h, *b as u64);
+    }
+    h
+}
+
 /// xoshiro256** — fast, high-quality 256-bit-state generator.
 ///
 /// Reference: Blackman & Vigna, "Scrambled linear pseudorandom number
@@ -188,6 +208,15 @@ mod tests {
         // First output for seed 0 is the finalizer of 0x9E3779B97F4A7C15.
         let mut sm = SplitMix64::new(0);
         assert_eq!(sm.next_u64(), 0xE220A8397B1DCDAF);
+    }
+
+    #[test]
+    fn mix64_chain_separates_inputs() {
+        assert_eq!(mix64(1, 2), mix64(1, 2), "deterministic");
+        assert_ne!(mix64(1, 2), mix64(2, 1), "order matters");
+        assert_ne!(mix64_str(0, "ab"), mix64_str(0, "a"), "length-prefixed");
+        // Field boundaries cannot alias.
+        assert_ne!(mix64_str(mix64_str(0, "ab"), "c"), mix64_str(mix64_str(0, "a"), "bc"));
     }
 
     #[test]

@@ -1,0 +1,205 @@
+//! Byte-bounded LRU cache for finished co-clustering results.
+//!
+//! Repeated-analysis workloads re-cluster the same matrix under the same
+//! configuration many times (parameter sweeps, dashboards, retries); the
+//! service answers those from memory. Keys combine a content hash of the
+//! input matrix (`Matrix::fingerprint`, SplitMix64-mixed) with a
+//! canonical hash of the job configuration, so any change to either the
+//! data or the requested clustering invalidates the entry.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Cache key: (matrix content hash, canonical config hash).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub matrix: u64,
+    pub config: u64,
+}
+
+/// A finished job's labelling, shared between the job table and cache.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobOutput {
+    pub row_labels: Vec<usize>,
+    pub col_labels: Vec<usize>,
+    /// Number of final co-clusters.
+    pub k: usize,
+    /// Wall-clock seconds of the run that produced this result.
+    pub elapsed_s: f64,
+}
+
+impl JobOutput {
+    /// Approximate resident bytes (used for the cache's byte budget).
+    pub fn approx_bytes(&self) -> usize {
+        (self.row_labels.len() + self.col_labels.len()) * std::mem::size_of::<usize>() + 64
+    }
+}
+
+struct Entry {
+    value: Arc<JobOutput>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct CacheInner {
+    map: HashMap<CacheKey, Entry>,
+    bytes: usize,
+    tick: u64,
+}
+
+/// Thread-safe LRU result cache bounded by total payload bytes.
+///
+/// Hit/miss accounting deliberately lives with the caller (the service
+/// manager counts into `coordinator::Stats`, the type that already
+/// carries run telemetry) — the cache itself only tracks what nobody
+/// else can observe: evictions and resident bytes.
+pub struct ResultCache {
+    inner: Mutex<CacheInner>,
+    capacity_bytes: usize,
+    evictions: AtomicU64,
+}
+
+impl ResultCache {
+    pub fn new(capacity_bytes: usize) -> Self {
+        Self {
+            inner: Mutex::new(CacheInner { map: HashMap::new(), bytes: 0, tick: 0 }),
+            capacity_bytes,
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a result, refreshing its recency.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<JobOutput>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                Some(Arc::clone(&e.value))
+            }
+            None => None,
+        }
+    }
+
+    /// Insert a result, evicting least-recently-used entries until the
+    /// byte budget holds. Values larger than the whole budget are not
+    /// cached at all.
+    pub fn put(&self, key: CacheKey, value: Arc<JobOutput>) {
+        let bytes = value.approx_bytes();
+        if bytes > self.capacity_bytes {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(old) = inner.map.insert(key, Entry { value, bytes, last_used: tick }) {
+            inner.bytes -= old.bytes;
+        }
+        inner.bytes += bytes;
+        while inner.bytes > self.capacity_bytes {
+            // O(n) LRU scan: entry counts stay small because the budget
+            // is on bytes and each entry is a whole labelling.
+            let Some((&victim, _)) = inner
+                .map
+                .iter()
+                .filter(|(k2, _)| **k2 != key)
+                .min_by_key(|(_, e)| e.last_used)
+            else {
+                break;
+            };
+            let e = inner.map.remove(&victim).unwrap();
+            inner.bytes -= e.bytes;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Current payload bytes held.
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn output(n: usize) -> Arc<JobOutput> {
+        Arc::new(JobOutput { row_labels: vec![0; n], col_labels: vec![1; n], k: 2, elapsed_s: 0.1 })
+    }
+
+    fn key(m: u64, c: u64) -> CacheKey {
+        CacheKey { matrix: m, config: c }
+    }
+
+    #[test]
+    fn get_after_put_round_trips() {
+        let cache = ResultCache::new(1 << 20);
+        assert!(cache.get(&key(1, 1)).is_none());
+        cache.put(key(1, 1), output(10));
+        let got = cache.get(&key(1, 1)).unwrap();
+        assert_eq!(got.k, 2);
+        assert_eq!(got.row_labels.len(), 10);
+    }
+
+    #[test]
+    fn either_key_half_invalidates() {
+        let cache = ResultCache::new(1 << 20);
+        cache.put(key(1, 1), output(4));
+        assert!(cache.get(&key(2, 1)).is_none(), "different matrix");
+        assert!(cache.get(&key(1, 2)).is_none(), "different config");
+        assert!(cache.get(&key(1, 1)).is_some());
+    }
+
+    #[test]
+    fn lru_eviction_respects_recency() {
+        let one = output(100).approx_bytes();
+        let cache = ResultCache::new(one * 2 + 1);
+        cache.put(key(1, 0), output(100));
+        cache.put(key(2, 0), output(100));
+        // Touch 1 so 2 becomes the LRU victim.
+        assert!(cache.get(&key(1, 0)).is_some());
+        cache.put(key(3, 0), output(100));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.get(&key(1, 0)).is_some());
+        assert!(cache.get(&key(2, 0)).is_none(), "LRU entry evicted");
+        assert!(cache.get(&key(3, 0)).is_some());
+        assert_eq!(cache.evictions(), 1);
+        assert!(cache.bytes() <= cache.capacity_bytes());
+    }
+
+    #[test]
+    fn oversized_values_are_not_cached() {
+        let cache = ResultCache::new(64);
+        cache.put(key(1, 0), output(10_000));
+        assert!(cache.is_empty());
+        assert_eq!(cache.bytes(), 0);
+    }
+
+    #[test]
+    fn reinsert_replaces_bytes() {
+        let cache = ResultCache::new(1 << 20);
+        cache.put(key(1, 0), output(100));
+        let b1 = cache.bytes();
+        cache.put(key(1, 0), output(50));
+        assert!(cache.bytes() < b1);
+        assert_eq!(cache.len(), 1);
+    }
+}

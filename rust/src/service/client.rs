@@ -1,0 +1,173 @@
+//! Blocking TCP client for the service line protocol.
+//!
+//! One [`ServiceClient`] wraps one connection; requests are serialized
+//! on it (the protocol is strict request–response). The `lamc submit` /
+//! `lamc status` CLI commands and the integration tests are the two
+//! in-tree users.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::manager::{JobSpec, JobState};
+use super::protocol;
+
+/// A job's status as reported by `STATUS`.
+#[derive(Clone, Debug)]
+pub struct StatusReply {
+    pub id: u64,
+    pub state: JobState,
+    pub cached: bool,
+    pub error: Option<String>,
+}
+
+/// A job's labelling as reported by `RESULT`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResultReply {
+    pub id: u64,
+    pub k: usize,
+    pub row_labels: Vec<usize>,
+    pub col_labels: Vec<usize>,
+    pub cached: bool,
+}
+
+pub struct ServiceClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl ServiceClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connect to lamc service")?;
+        let reader = BufReader::new(stream.try_clone().context("clone stream")?);
+        Ok(Self { reader, writer: stream })
+    }
+
+    fn send_line(&mut self, line: &str) -> Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn read_line(&mut self) -> Result<String> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            bail!("server closed the connection");
+        }
+        Ok(line)
+    }
+
+    /// One-line request → one-line response; returns the text after `OK`.
+    fn roundtrip(&mut self, line: &str) -> Result<String> {
+        self.send_line(line)?;
+        let reply = self.read_line()?;
+        Ok(protocol::check_ok(&reply)?.to_string())
+    }
+
+    fn kv_reply(&mut self, line: &str) -> Result<BTreeMap<String, String>> {
+        let rest = self.roundtrip(line)?;
+        let tokens: Vec<&str> = rest.split_whitespace().collect();
+        protocol::kv_pairs(&tokens)
+    }
+
+    /// Submit a job; returns its id.
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<u64> {
+        let line = protocol::encode_submit(spec)?;
+        let map = self.kv_reply(&line)?;
+        map.get("id").context("missing id in reply")?.parse().context("bad id in reply")
+    }
+
+    pub fn status(&mut self, id: u64) -> Result<StatusReply> {
+        let map = self.kv_reply(&format!("STATUS id={id}"))?;
+        Ok(StatusReply {
+            id,
+            state: map.get("state").context("missing state")?.parse()?,
+            cached: map.get("cached").map(|v| v == "true").unwrap_or(false),
+            error: map.get("error").cloned(),
+        })
+    }
+
+    /// Fetch a finished job's labels (errors while the job is queued or
+    /// running — use [`ServiceClient::wait`] to block until done).
+    pub fn result(&mut self, id: u64) -> Result<ResultReply> {
+        self.send_line(&format!("RESULT id={id}"))?;
+        let header = self.read_line()?;
+        let rest = protocol::check_ok(&header)?.to_string();
+        let tokens: Vec<&str> = rest.split_whitespace().collect();
+        let map = protocol::kv_pairs(&tokens)?;
+        let k: usize = map.get("k").context("missing k")?.parse()?;
+        let cached = map.get("cached").map(|v| v == "true").unwrap_or(false);
+
+        let rows_line = self.read_line()?;
+        let row_labels = protocol::decode_labels(
+            rows_line.strip_prefix("ROWS").context("expected ROWS line")?,
+        )?;
+        let cols_line = self.read_line()?;
+        let col_labels = protocol::decode_labels(
+            cols_line.strip_prefix("COLS").context("expected COLS line")?,
+        )?;
+        let end = self.read_line()?;
+        if end.trim() != "END" {
+            bail!("expected END terminator, got '{}'", end.trim());
+        }
+        Ok(ResultReply { id, k, row_labels, col_labels, cached })
+    }
+
+    /// Poll `STATUS` until the job is done (then fetch the result) or
+    /// failed (then error), up to `timeout`.
+    pub fn wait(&mut self, id: u64, timeout: Duration) -> Result<ResultReply> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let status = self.status(id)?;
+            match status.state {
+                JobState::Done => return self.result(id),
+                JobState::Failed => {
+                    bail!("job {id} failed: {}", status.error.unwrap_or_else(|| "unknown".into()))
+                }
+                _ if Instant::now() >= deadline => bail!("timed out waiting for job {id}"),
+                _ => std::thread::sleep(Duration::from_millis(10)),
+            }
+        }
+    }
+
+    /// Fetch the server's counters as a key→value map.
+    pub fn stats(&mut self) -> Result<BTreeMap<String, String>> {
+        self.kv_reply("STATS")
+    }
+
+    /// Load a built-in dataset spec under a name; returns (rows, cols).
+    pub fn load_dataset(&mut self, name: &str, dataset: &str, rows: Option<usize>, seed: u64) -> Result<(usize, usize)> {
+        protocol::ensure_token("name", name)?;
+        protocol::ensure_token("dataset", dataset)?;
+        let mut line = format!("LOAD name={name} dataset={dataset} seed={seed}");
+        if let Some(r) = rows {
+            line.push_str(&format!(" rows={r}"));
+        }
+        let map = self.kv_reply(&line)?;
+        let r: usize = map.get("rows").context("missing rows")?.parse()?;
+        let c: usize = map.get("cols").context("missing cols")?.parse()?;
+        Ok((r, c))
+    }
+
+    /// Load a matrix file on the server; returns (rows, cols). The path
+    /// must be space-free (a line-protocol limitation, see docs/SERVICE.md).
+    pub fn load_file(&mut self, name: &str, path: &str) -> Result<(usize, usize)> {
+        protocol::ensure_token("name", name)?;
+        protocol::ensure_token("path", path)?;
+        let map = self.kv_reply(&format!("LOAD name={name} path={path}"))?;
+        let r: usize = map.get("rows").context("missing rows")?.parse()?;
+        let c: usize = map.get("cols").context("missing cols")?.parse()?;
+        Ok((r, c))
+    }
+
+    /// Ask the server to stop accepting connections.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.roundtrip("SHUTDOWN")?;
+        Ok(())
+    }
+}

@@ -1,0 +1,711 @@
+//! The long-lived co-clustering service core.
+//!
+//! A [`ServiceManager`] owns everything the batch pipeline used to
+//! re-create per call: a registry of loaded matrices (with memoized
+//! content fingerprints), a bounded job queue for backpressure, a small
+//! crew of runner threads that drive jobs through `pipeline::Lamc` (whose
+//! block jobs execute on the shared persistent
+//! [`WorkerPool`](super::WorkerPool)), and a byte-bounded LRU
+//! [`ResultCache`](super::ResultCache) so an identical re-submission is
+//! answered without touching the pipeline at all.
+
+use std::collections::{HashMap, VecDeque};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::Stats;
+use crate::matrix::Matrix;
+use crate::pipeline::{AtomKind, Lamc, LamcConfig};
+use crate::rng::{mix64 as mix, mix64_str as mix_str};
+
+use super::cache::{CacheKey, JobOutput, ResultCache};
+
+/// One co-clustering request: which matrix, which method, which knobs.
+///
+/// This is the wire-visible, cache-canonical subset of
+/// [`LamcConfig`]: every field either changes the result (and therefore
+/// the cache key) or is the `workers` concurrency cap, which is included
+/// conservatively because the partition planner's cost model reads it.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    /// Name of a registered matrix (see [`ServiceManager::register`]).
+    pub matrix: String,
+    /// `lamc-scc` | `lamc-pnmtf` (partitioned) or `scc` | `pnmtf`
+    /// (whole-matrix baseline).
+    pub method: String,
+    /// Target co-cluster count.
+    pub k: usize,
+    pub seed: u64,
+    /// Partition planner detection-probability threshold.
+    pub p_thresh: f64,
+    /// Merge similarity threshold τ.
+    pub tau: f64,
+    /// Concurrency cap for the block scheduler (0 = auto).
+    pub workers: usize,
+}
+
+impl Default for JobSpec {
+    fn default() -> Self {
+        Self {
+            matrix: String::new(),
+            method: "lamc-scc".to_string(),
+            k: 4,
+            seed: 42,
+            p_thresh: 0.95,
+            tau: 0.35,
+            workers: 0,
+        }
+    }
+}
+
+impl JobSpec {
+    /// Is this a partitioned (LAMC) run, as opposed to a whole-matrix
+    /// baseline? Errors on unknown methods.
+    pub fn partitioned(&self) -> Result<bool> {
+        match self.method.as_str() {
+            "lamc-scc" | "lamc-pnmtf" => Ok(true),
+            "scc" | "pnmtf" => Ok(false),
+            other => bail!("unknown method '{other}' (want lamc-scc|lamc-pnmtf|scc|pnmtf)"),
+        }
+    }
+
+    fn atom(&self) -> Result<AtomKind> {
+        self.method.trim_start_matches("lamc-").parse()
+    }
+
+    /// The full pipeline configuration this spec denotes. Exposed so
+    /// callers (and tests) can reproduce a service run exactly.
+    pub fn lamc_config(&self) -> Result<LamcConfig> {
+        let mut cfg = LamcConfig {
+            k: self.k,
+            atom: self.atom()?,
+            seed: self.seed,
+            workers: self.workers,
+            ..Default::default()
+        };
+        cfg.planner.p_thresh = self.p_thresh;
+        cfg.merge.tau = self.tau;
+        Ok(cfg)
+    }
+
+    /// Canonical config hash: the second half of the result-cache key.
+    /// Two specs hash equal iff every result-relevant field matches
+    /// (`matrix` is deliberately excluded — the matrix side of the key
+    /// is the content fingerprint, so a renamed or reloaded-but-equal
+    /// matrix still hits).
+    pub fn config_hash(&self) -> u64 {
+        let mut h = mix(0x4C41_4D43_5350_4543, self.k as u64);
+        h = mix_str(h, &self.method);
+        h = mix(h, self.seed);
+        h = mix(h, self.p_thresh.to_bits());
+        h = mix(h, self.tau.to_bits());
+        h = mix(h, self.workers as u64);
+        h
+    }
+}
+
+/// Lifecycle of a submitted job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+        }
+    }
+}
+
+impl std::str::FromStr for JobState {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "queued" => Ok(JobState::Queued),
+            "running" => Ok(JobState::Running),
+            "done" => Ok(JobState::Done),
+            "failed" => Ok(JobState::Failed),
+            other => bail!("unknown job state '{other}'"),
+        }
+    }
+}
+
+/// A job's full record (cheap to clone: the result is shared).
+#[derive(Clone, Debug)]
+pub struct JobRecord {
+    pub id: u64,
+    pub spec: JobSpec,
+    pub state: JobState,
+    /// Was the result served from the cache instead of a pipeline run?
+    pub cached: bool,
+    pub error: Option<String>,
+    pub result: Option<Arc<JobOutput>>,
+}
+
+/// Bounded MPMC queue (Mutex + Condvar): the service's backpressure
+/// point. `try_push` rejects when full; `push` blocks; `pop` blocks
+/// until an item or close (then drains remaining items before `None`).
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueInner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct QueueInner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Why a non-blocking enqueue was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueRejection {
+    Full,
+    Closed,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "queue capacity must be positive");
+        Self {
+            inner: Mutex::new(QueueInner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Non-blocking enqueue; the item is returned on rejection.
+    pub fn try_push(&self, item: T) -> std::result::Result<(), (T, QueueRejection)> {
+        let mut q = self.inner.lock().unwrap();
+        if q.closed {
+            return Err((item, QueueRejection::Closed));
+        }
+        if q.items.len() >= self.capacity {
+            return Err((item, QueueRejection::Full));
+        }
+        q.items.push_back(item);
+        drop(q);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking enqueue: waits for space. Returns the item back if the
+    /// queue closes while waiting.
+    pub fn push(&self, item: T) -> std::result::Result<(), T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if q.closed {
+                return Err(item);
+            }
+            if q.items.len() < self.capacity {
+                q.items.push_back(item);
+                drop(q);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            q = self.not_full.wait(q).unwrap();
+        }
+    }
+
+    /// Blocking dequeue; `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut q = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = q.items.pop_front() {
+                drop(q);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if q.closed {
+                return None;
+            }
+            q = self.not_empty.wait(q).unwrap();
+        }
+    }
+
+    /// Close the queue: pending `pop`s drain then return `None`; pushes
+    /// are rejected from now on.
+    pub fn close(&self) {
+        let mut q = self.inner.lock().unwrap();
+        q.closed = true;
+        drop(q);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+/// Service sizing knobs.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Job-runner threads draining the queue. 0 is allowed (nothing
+    /// drains — useful for tests and manual stepping).
+    pub runners: usize,
+    /// Bounded queue capacity: submissions beyond this are rejected.
+    pub queue_capacity: usize,
+    /// Result-cache byte budget.
+    pub cache_capacity_bytes: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { runners: 2, queue_capacity: 64, cache_capacity_bytes: 64 << 20 }
+    }
+}
+
+struct MatrixEntry {
+    matrix: Arc<Matrix>,
+    /// Content hash, computed once at registration.
+    fingerprint: u64,
+}
+
+struct Inner {
+    matrices: RwLock<HashMap<String, MatrixEntry>>,
+    jobs: RwLock<HashMap<u64, JobRecord>>,
+    queue: BoundedQueue<u64>,
+    cache: ResultCache,
+    /// Service-wide telemetry: cache hit/miss counters plus aggregated
+    /// per-run block/time counters from every pipeline execution.
+    stats: Stats,
+    next_id: AtomicU64,
+}
+
+/// Handle to the service core. Cloning shares the same service; the
+/// runner threads live until [`ServiceManager::shutdown`].
+#[derive(Clone)]
+pub struct ServiceManager {
+    inner: Arc<Inner>,
+    runners: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl ServiceManager {
+    pub fn new(config: ServiceConfig) -> Self {
+        let inner = Arc::new(Inner {
+            matrices: RwLock::new(HashMap::new()),
+            jobs: RwLock::new(HashMap::new()),
+            queue: BoundedQueue::new(config.queue_capacity),
+            cache: ResultCache::new(config.cache_capacity_bytes),
+            stats: Stats::default(),
+            next_id: AtomicU64::new(1),
+        });
+        let mut handles = Vec::with_capacity(config.runners);
+        for i in 0..config.runners {
+            let inner = Arc::clone(&inner);
+            let handle = std::thread::Builder::new()
+                .name(format!("lamc-runner-{i}"))
+                .spawn(move || {
+                    while let Some(id) = inner.queue.pop() {
+                        run_job(&inner, id);
+                    }
+                })
+                .expect("spawn job runner");
+            handles.push(handle);
+        }
+        Self { inner, runners: Arc::new(Mutex::new(handles)) }
+    }
+
+    /// Register a matrix under a name (replacing any previous binding).
+    /// Computes and memoizes the content fingerprint.
+    pub fn register(&self, name: &str, matrix: Matrix) -> u64 {
+        let fingerprint = matrix.fingerprint();
+        let entry = MatrixEntry { matrix: Arc::new(matrix), fingerprint };
+        self.inner.matrices.write().unwrap().insert(name.to_string(), entry);
+        fingerprint
+    }
+
+    /// Register a named dataset spec (`amazon1000`, `classic4`,
+    /// `rcv1_large`) built by the synthetic generators.
+    pub fn load_dataset(&self, name: &str, dataset: &str, rows: Option<usize>, seed: u64) -> Result<(usize, usize)> {
+        let ds = crate::data::datasets::build(dataset, rows, seed)
+            .with_context(|| format!("unknown dataset '{dataset}'"))?;
+        let shape = (ds.matrix.rows(), ds.matrix.cols());
+        self.register(name, ds.matrix);
+        Ok(shape)
+    }
+
+    /// Register a matrix loaded from disk: the LAMC binary format, or
+    /// MatrixMarket when the path ends in `.mtx`.
+    pub fn load_file(&self, name: &str, path: &Path) -> Result<(usize, usize)> {
+        let matrix = if path.extension().and_then(|e| e.to_str()) == Some("mtx") {
+            Matrix::Sparse(crate::matrix::io::read_matrix_market(path)?)
+        } else {
+            crate::matrix::io::load(path)?
+        };
+        let shape = (matrix.rows(), matrix.cols());
+        self.register(name, matrix);
+        Ok(shape)
+    }
+
+    /// Names of registered matrices (sorted).
+    pub fn matrix_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.inner.matrices.read().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    fn lookup_matrix(&self, name: &str) -> Result<(Arc<Matrix>, u64)> {
+        if let Some(e) = self.inner.matrices.read().unwrap().get(name) {
+            return Ok((Arc::clone(&e.matrix), e.fingerprint));
+        }
+        // Lazy auto-load: a matrix named after a built-in dataset spec is
+        // generated on first reference (default seed 42, full size).
+        if crate::data::datasets::spec(name).is_some() {
+            crate::log_info!("auto-loading dataset '{name}' (seed 42)");
+            self.load_dataset(name, name, None, 42)?;
+            if let Some(e) = self.inner.matrices.read().unwrap().get(name) {
+                return Ok((Arc::clone(&e.matrix), e.fingerprint));
+            }
+        }
+        bail!("no matrix named '{name}' is loaded")
+    }
+
+    /// Submit a job. Validates the spec and matrix, then enqueues with
+    /// backpressure: a full queue rejects immediately (the client should
+    /// retry later) rather than buffering unboundedly.
+    pub fn submit(&self, spec: JobSpec) -> Result<u64> {
+        spec.partitioned()?; // validate method early
+        spec.lamc_config()?;
+        anyhow::ensure!(spec.k >= 1, "k must be ≥ 1");
+        self.lookup_matrix(&spec.matrix)?; // validate (and auto-load) matrix
+        let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let record = JobRecord {
+            id,
+            spec,
+            state: JobState::Queued,
+            cached: false,
+            error: None,
+            result: None,
+        };
+        self.inner.jobs.write().unwrap().insert(id, record);
+        if let Err((_, why)) = self.inner.queue.try_push(id) {
+            self.inner.jobs.write().unwrap().remove(&id);
+            match why {
+                QueueRejection::Full => bail!(
+                    "job queue full ({} pending); retry later",
+                    self.inner.queue.capacity()
+                ),
+                QueueRejection::Closed => bail!("service is shutting down"),
+            }
+        }
+        Ok(id)
+    }
+
+    /// Snapshot one job's record.
+    pub fn job(&self, id: u64) -> Option<JobRecord> {
+        self.inner.jobs.read().unwrap().get(&id).cloned()
+    }
+
+    /// Counts of jobs per state: (queued, running, done, failed).
+    pub fn job_counts(&self) -> (usize, usize, usize, usize) {
+        let jobs = self.inner.jobs.read().unwrap();
+        let mut c = (0, 0, 0, 0);
+        for j in jobs.values() {
+            match j.state {
+                JobState::Queued => c.0 += 1,
+                JobState::Running => c.1 += 1,
+                JobState::Done => c.2 += 1,
+                JobState::Failed => c.3 += 1,
+            }
+        }
+        c
+    }
+
+    /// Service-wide telemetry (cache counters + aggregated block stats).
+    pub fn stats(&self) -> &Stats {
+        &self.inner.stats
+    }
+
+    pub fn cache(&self) -> &ResultCache {
+        &self.inner.cache
+    }
+
+    /// Block until a job leaves the queue/running states, polling every
+    /// few milliseconds; `None` on timeout or unknown id.
+    pub fn wait(&self, id: u64, timeout: std::time::Duration) -> Option<JobRecord> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let record = self.job(id)?;
+            match record.state {
+                JobState::Done | JobState::Failed => return Some(record),
+                _ if std::time::Instant::now() >= deadline => return None,
+                _ => std::thread::sleep(std::time::Duration::from_millis(5)),
+            }
+        }
+    }
+
+    /// Stop accepting work, drain queued jobs, and join the runners.
+    /// Idempotent; also called on drop of the last handle.
+    pub fn shutdown(&self) {
+        self.inner.queue.close();
+        let handles = std::mem::take(&mut *self.runners.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServiceManager {
+    fn drop(&mut self) {
+        // Only the last handle tears the service down. `Arc::into_inner`
+        // yields `Some` for exactly one of any set of racing droppers,
+        // unlike a strong_count check (which two simultaneous drops could
+        // both read as 2, leaking the runner threads).
+        let runners = std::mem::replace(&mut self.runners, Arc::new(Mutex::new(Vec::new())));
+        if let Some(mutex) = Arc::into_inner(runners) {
+            self.inner.queue.close();
+            for h in mutex.into_inner().unwrap() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn set_state(inner: &Inner, id: u64, f: impl FnOnce(&mut JobRecord)) {
+    if let Some(r) = inner.jobs.write().unwrap().get_mut(&id) {
+        f(r);
+    }
+}
+
+/// Execute one job end to end: cache probe → (maybe) pipeline → record.
+fn run_job(inner: &Inner, id: u64) {
+    let Some(record) = inner.jobs.read().unwrap().get(&id).cloned() else {
+        return;
+    };
+    set_state(inner, id, |r| r.state = JobState::Running);
+
+    let outcome = execute_spec(inner, &record.spec);
+    match outcome {
+        Ok((output, cached)) => set_state(inner, id, |r| {
+            r.state = JobState::Done;
+            r.cached = cached;
+            r.result = Some(output);
+        }),
+        Err(e) => set_state(inner, id, |r| {
+            r.state = JobState::Failed;
+            r.error = Some(format!("{e:#}"));
+        }),
+    }
+}
+
+/// Returns the job output and whether it came from the cache.
+fn execute_spec(inner: &Inner, spec: &JobSpec) -> Result<(Arc<JobOutput>, bool)> {
+    let (matrix, fingerprint) = {
+        let matrices = inner.matrices.read().unwrap();
+        let e = matrices
+            .get(&spec.matrix)
+            .with_context(|| format!("matrix '{}' disappeared before the job ran", spec.matrix))?;
+        (Arc::clone(&e.matrix), e.fingerprint)
+    };
+    let key = CacheKey { matrix: fingerprint, config: spec.config_hash() };
+    if let Some(hit) = inner.cache.get(&key) {
+        inner.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+        return Ok((hit, true));
+    }
+    inner.stats.cache_misses.fetch_add(1, Ordering::Relaxed);
+
+    let lamc = Lamc::new(spec.lamc_config()?);
+    let result = if spec.partitioned()? { lamc.run(&matrix)? } else { lamc.run_baseline(&matrix)? };
+
+    // Fold the run's telemetry into the service-wide counters.
+    let s = &result.stats;
+    inner.stats.blocks_total.fetch_add(s.blocks_total, Ordering::Relaxed);
+    inner.stats.blocks_native.fetch_add(s.blocks_native, Ordering::Relaxed);
+    inner.stats.blocks_pjrt.fetch_add(s.blocks_pjrt, Ordering::Relaxed);
+    inner.stats.pjrt_fallbacks.fetch_add(s.pjrt_fallbacks, Ordering::Relaxed);
+    inner.stats.add_gather((s.gather_s * 1e9) as u64);
+    inner.stats.add_exec((s.exec_s * 1e9) as u64);
+    inner.stats.merge_ns.fetch_add((s.merge_s * 1e9) as u64, Ordering::Relaxed);
+
+    let output = Arc::new(JobOutput {
+        row_labels: result.row_labels,
+        col_labels: result.col_labels,
+        k: result.k,
+        elapsed_s: result.elapsed_s,
+    });
+    inner.cache.put(key, Arc::clone(&output));
+    Ok((output, false))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{planted_dense, PlantedConfig};
+    use std::time::Duration;
+
+    fn small_matrix(seed: u64) -> Matrix {
+        planted_dense(&PlantedConfig {
+            rows: 60,
+            cols: 50,
+            row_clusters: 3,
+            col_clusters: 3,
+            noise: 0.1,
+            signal: 1.5,
+            seed,
+            ..Default::default()
+        })
+        .matrix
+    }
+
+    #[test]
+    fn queue_rejects_when_full_and_recovers() {
+        let q = BoundedQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        let (item, why) = q.try_push(3).unwrap_err();
+        assert_eq!(item, 3);
+        assert_eq!(why, QueueRejection::Full);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok(), "space freed by pop");
+    }
+
+    #[test]
+    fn queue_blocking_push_waits_for_space() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(10u64).unwrap();
+        let q2 = Arc::clone(&q);
+        let pusher = std::thread::spawn(move || q2.push(11).is_ok());
+        // Give the pusher time to block on the full queue.
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.len(), 1, "pusher is blocked, not buffered");
+        assert_eq!(q.pop(), Some(10));
+        assert!(pusher.join().unwrap(), "push completed after pop");
+        assert_eq!(q.pop(), Some(11));
+    }
+
+    #[test]
+    fn queue_close_drains_then_ends() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).unwrap();
+        q.close();
+        assert_eq!(q.try_push(2).unwrap_err().1, QueueRejection::Closed);
+        assert_eq!(q.pop(), Some(1), "closed queue still drains");
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn submit_backpressure_without_runners() {
+        // runners: 0 ⇒ nothing drains; the bounded queue is the limit.
+        let mgr = ServiceManager::new(ServiceConfig {
+            runners: 0,
+            queue_capacity: 2,
+            cache_capacity_bytes: 1 << 20,
+        });
+        mgr.register("m", small_matrix(1));
+        let spec = |seed| JobSpec { matrix: "m".into(), seed, ..Default::default() };
+        mgr.submit(spec(1)).unwrap();
+        mgr.submit(spec(2)).unwrap();
+        let err = mgr.submit(spec(3)).unwrap_err().to_string();
+        assert!(err.contains("queue full"), "{err}");
+        // The rejected job left no orphan record behind.
+        let (queued, running, done, failed) = mgr.job_counts();
+        assert_eq!((queued, running, done, failed), (2, 0, 0, 0));
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn jobs_run_to_done_and_cache_hits_second_submission() {
+        let mgr = ServiceManager::new(ServiceConfig {
+            runners: 1,
+            queue_capacity: 8,
+            cache_capacity_bytes: 8 << 20,
+        });
+        mgr.register("m", small_matrix(2));
+        let spec = JobSpec { matrix: "m".into(), k: 3, seed: 9, ..Default::default() };
+        let a = mgr.submit(spec.clone()).unwrap();
+        let ra = mgr.wait(a, Duration::from_secs(120)).expect("job a finished");
+        assert_eq!(ra.state, JobState::Done);
+        assert!(!ra.cached);
+        let b = mgr.submit(spec).unwrap();
+        let rb = mgr.wait(b, Duration::from_secs(120)).expect("job b finished");
+        assert_eq!(rb.state, JobState::Done);
+        assert!(rb.cached, "identical spec must be a cache hit");
+        let out_a = ra.result.unwrap();
+        let out_b = rb.result.unwrap();
+        assert_eq!(out_a.row_labels, out_b.row_labels);
+        assert_eq!(out_a.col_labels, out_b.col_labels);
+        let snap = mgr.stats().snapshot();
+        assert_eq!(snap.cache_hits, 1);
+        assert_eq!(snap.cache_misses, 1);
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn failed_jobs_report_errors() {
+        let mgr = ServiceManager::new(ServiceConfig {
+            runners: 1,
+            queue_capacity: 4,
+            cache_capacity_bytes: 1 << 20,
+        });
+        // Unknown matrix fails at submit time.
+        let err = mgr.submit(JobSpec { matrix: "ghost".into(), ..Default::default() }).unwrap_err();
+        assert!(err.to_string().contains("no matrix named"), "{err}");
+        // Unknown method fails at submit time too.
+        mgr.register("m", small_matrix(3));
+        let err = mgr
+            .submit(JobSpec { matrix: "m".into(), method: "magic".into(), ..Default::default() })
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown method"), "{err}");
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn config_hash_separates_specs() {
+        let base = JobSpec { matrix: "m".into(), ..Default::default() };
+        let same = JobSpec { matrix: "renamed".into(), ..base.clone() };
+        assert_eq!(base.config_hash(), same.config_hash(), "matrix name not in config hash");
+        for changed in [
+            JobSpec { k: 5, ..base.clone() },
+            JobSpec { seed: 43, ..base.clone() },
+            JobSpec { method: "pnmtf".into(), ..base.clone() },
+            JobSpec { p_thresh: 0.9, ..base.clone() },
+            JobSpec { tau: 0.5, ..base.clone() },
+            JobSpec { workers: 2, ..base.clone() },
+        ] {
+            assert_ne!(base.config_hash(), changed.config_hash(), "{changed:?}");
+        }
+    }
+
+    #[test]
+    fn baseline_methods_run_through_the_service() {
+        let mgr = ServiceManager::new(ServiceConfig {
+            runners: 1,
+            queue_capacity: 4,
+            cache_capacity_bytes: 1 << 20,
+        });
+        mgr.register("m", small_matrix(4));
+        let id = mgr
+            .submit(JobSpec { matrix: "m".into(), method: "scc".into(), k: 3, ..Default::default() })
+            .unwrap();
+        let r = mgr.wait(id, Duration::from_secs(120)).unwrap();
+        assert_eq!(r.state, JobState::Done, "error: {:?}", r.error);
+        let out = r.result.unwrap();
+        assert_eq!(out.row_labels.len(), 60);
+        assert_eq!(out.col_labels.len(), 50);
+        mgr.shutdown();
+    }
+}

@@ -1,0 +1,41 @@
+//! Long-lived co-clustering service: persistent worker pool, job queue,
+//! result cache, and a dependency-free TCP line protocol.
+//!
+//! The paper's leader/worker design (§IV-C) originally lived inside a
+//! one-shot batch call — every `pipeline::Lamc::run` re-created its
+//! worker threads and nothing survived between requests. This module
+//! turns that pipeline into a service for repeated and concurrent
+//! co-clustering requests over the same (or different) matrices:
+//!
+//! * [`WorkerPool`] — long-lived block-execution threads fed by a job
+//!   channel; `coordinator::run_rounds` executes on the shared global
+//!   pool, so thread startup is amortized across every request (batch
+//!   CLI runs included).
+//! * [`ServiceManager`] — owns a named-matrix registry (with memoized
+//!   `Matrix::fingerprint` content hashes), a bounded job queue for
+//!   backpressure, runner threads, and per-job `Queued → Running →
+//!   Done/Failed` state.
+//! * [`ResultCache`] — byte-bounded LRU keyed by (matrix fingerprint,
+//!   canonical config hash): an identical re-submission is answered
+//!   without running the pipeline, with hit/miss counters surfaced
+//!   through `coordinator::Stats`.
+//! * [`protocol`] / [`ServiceServer`] / [`ServiceClient`] — a
+//!   `SUBMIT`/`STATUS`/`RESULT`/`STATS`/`LOAD`/`SHUTDOWN` line protocol
+//!   over `std::net`, thread-per-connection, with a blocking client.
+//!
+//! Wire format and operational knobs are documented in
+//! `docs/SERVICE.md`; the `lamc serve` / `lamc submit` / `lamc status`
+//! CLI commands are thin wrappers over these types.
+
+pub mod cache;
+pub mod client;
+pub mod manager;
+pub mod pool;
+pub mod protocol;
+pub mod server;
+
+pub use cache::{CacheKey, JobOutput, ResultCache};
+pub use client::{ResultReply, ServiceClient, StatusReply};
+pub use manager::{BoundedQueue, JobRecord, JobSpec, JobState, QueueRejection, ServiceConfig, ServiceManager};
+pub use pool::WorkerPool;
+pub use server::ServiceServer;

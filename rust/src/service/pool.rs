@@ -1,0 +1,316 @@
+//! Persistent worker pool: long-lived threads fed by a job channel.
+//!
+//! Extracted from the per-call `thread::scope` workers the scheduler used
+//! to spawn (paper §IV-C leader/worker structure): thread startup is now
+//! amortized across requests, which matters once the pipeline runs as a
+//! long-lived service handling many small co-clustering jobs instead of
+//! one batch call.
+//!
+//! Two layers of API:
+//!
+//! * [`WorkerPool::submit`] — fire-and-forget `'static` tasks (the job
+//!   channel proper).
+//! * [`WorkerPool::run_jobs`] — a scoped fork/join: call a borrowed
+//!   closure once per job index from up to `concurrency` claim loops.
+//!   The **calling thread always participates** as one of the loops, so
+//!   progress is guaranteed even when every pool thread is busy (and
+//!   nested `run_jobs` calls cannot deadlock). The call blocks until all
+//!   job indices have been processed, which is what makes lending
+//!   non-`'static` borrows to pool threads sound.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Shared injector queue the workers pull from.
+struct Injector {
+    queue: Mutex<InjectorState>,
+    ready: Condvar,
+}
+
+struct InjectorState {
+    tasks: VecDeque<Task>,
+    closed: bool,
+}
+
+impl Injector {
+    fn push(&self, task: Task) {
+        let mut st = self.queue.lock().unwrap();
+        if st.closed {
+            return; // pool shutting down: drop the task
+        }
+        st.tasks.push_back(task);
+        drop(st);
+        self.ready.notify_one();
+    }
+
+    /// Block until a task is available or the pool closes.
+    fn pop(&self) -> Option<Task> {
+        let mut st = self.queue.lock().unwrap();
+        loop {
+            if let Some(t) = st.tasks.pop_front() {
+                return Some(t);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        let mut st = self.queue.lock().unwrap();
+        st.closed = true;
+        st.tasks.clear();
+        drop(st);
+        self.ready.notify_all();
+    }
+}
+
+/// A pool of long-lived worker threads.
+///
+/// Dropping the pool closes the job channel and joins every worker.
+/// The process-wide pool behind [`WorkerPool::global`] is never dropped.
+pub struct WorkerPool {
+    injector: Arc<Injector>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` threads (0 = available parallelism).
+    pub fn new(workers: usize) -> Self {
+        let workers = if workers > 0 {
+            workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        };
+        let injector = Arc::new(Injector {
+            queue: Mutex::new(InjectorState { tasks: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let injector = Arc::clone(&injector);
+            let handle = std::thread::Builder::new()
+                .name(format!("lamc-worker-{i}"))
+                .spawn(move || {
+                    while let Some(task) = injector.pop() {
+                        // A panicking task must not take the worker down:
+                        // the pool outlives any single request.
+                        let _ = catch_unwind(AssertUnwindSafe(task));
+                    }
+                })
+                .expect("spawn pool worker");
+            handles.push(handle);
+        }
+        Self { injector, handles: Mutex::new(handles), workers }
+    }
+
+    /// The process-wide pool (sized to available parallelism), created on
+    /// first use and alive for the rest of the process. This is what
+    /// `coordinator::run_rounds` executes on.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| WorkerPool::new(0))
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Enqueue a fire-and-forget task.
+    pub fn submit(&self, task: Task) {
+        self.injector.push(task);
+    }
+
+    /// Run `f(idx)` for every `idx in 0..jobs`, spread over up to
+    /// `concurrency` claim loops (the calling thread plus up to
+    /// `concurrency - 1` pool threads). Blocks until every index has been
+    /// processed. Panics from `f` are re-raised on the calling thread
+    /// after all jobs finish.
+    pub fn run_jobs<F>(&self, concurrency: usize, jobs: usize, f: F)
+    where
+        F: Fn(usize) + Send + Sync,
+    {
+        if jobs == 0 {
+            return;
+        }
+        // Lifetime erasure: the closure is lent to pool threads as a raw
+        // pointer. Soundness argument at the dereference in `claim_loop`:
+        // a successful claim implies this function is still blocked in
+        // the wait loop below, so the pointee is alive. Helper tasks that
+        // start after all jobs are done observe an exhausted counter and
+        // exit without ever dereferencing.
+        let f_ref: &(dyn Fn(usize) + Send + Sync) = &f;
+        let ctx = Arc::new(ScopeCtx {
+            f: f_ref as *const (dyn Fn(usize) + Send + Sync),
+            next: AtomicUsize::new(0),
+            jobs,
+            state: Mutex::new(ScopeState { done: 0, panicked: false }),
+            finished: Condvar::new(),
+        });
+
+        let helpers = concurrency.saturating_sub(1).min(jobs.saturating_sub(1));
+        for _ in 0..helpers {
+            let ctx = Arc::clone(&ctx);
+            self.submit(Box::new(move || claim_loop(&ctx)));
+        }
+        // The caller is always one of the claim loops.
+        claim_loop(&ctx);
+
+        let mut st = ctx.state.lock().unwrap();
+        while st.done < jobs {
+            st = ctx.finished.wait(st).unwrap();
+        }
+        let panicked = st.panicked;
+        drop(st);
+        if panicked {
+            panic!("worker pool job panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.injector.close();
+        let handles = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+struct ScopeCtx {
+    f: *const (dyn Fn(usize) + Send + Sync),
+    next: AtomicUsize,
+    jobs: usize,
+    state: Mutex<ScopeState>,
+    finished: Condvar,
+}
+
+// SAFETY: the raw closure pointer is only dereferenced under the claim
+// protocol documented in `claim_loop`; the pointee is `Sync`, so shared
+// calls from several threads are fine.
+unsafe impl Send for ScopeCtx {}
+unsafe impl Sync for ScopeCtx {}
+
+struct ScopeState {
+    done: usize,
+    panicked: bool,
+}
+
+/// Claim job indices until the counter is exhausted. Every claimed index
+/// is marked done even if `f` panics, so the scope's completion latch
+/// always releases.
+fn claim_loop(ctx: &ScopeCtx) {
+    loop {
+        let idx = ctx.next.fetch_add(1, Ordering::Relaxed);
+        if idx >= ctx.jobs {
+            return;
+        }
+        // SAFETY: `idx < jobs` means this index has not been marked done,
+        // so `run_jobs` is still blocked in its wait loop and the borrowed
+        // closure behind `ctx.f` is alive.
+        let f = unsafe { &*ctx.f };
+        let outcome = catch_unwind(AssertUnwindSafe(|| f(idx)));
+        let mut st = ctx.state.lock().unwrap();
+        st.done += 1;
+        if outcome.is_err() {
+            st.panicked = true;
+        }
+        if st.done == ctx.jobs {
+            drop(st);
+            ctx.finished.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_job_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        pool.run_jobs(4, 100, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn caller_participates_with_zero_concurrency() {
+        let pool = WorkerPool::new(1);
+        let count = AtomicU64::new(0);
+        // concurrency 0/1 still completes: the caller is a claim loop.
+        pool.run_jobs(0, 10, |_| {
+            count.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn nested_run_jobs_does_not_deadlock() {
+        let pool = WorkerPool::new(2);
+        let count = Arc::new(AtomicU64::new(0));
+        let inner_count = Arc::clone(&count);
+        pool.run_jobs(2, 4, move |_| {
+            // Nested scope on the same (possibly saturated) pool.
+            WorkerPool::global().run_jobs(2, 3, |_| {
+                inner_count.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn borrowed_state_is_visible_after_return() {
+        let pool = WorkerPool::new(3);
+        let out = Mutex::new(vec![0usize; 50]);
+        pool.run_jobs(3, 50, |i| {
+            out.lock().unwrap()[i] = i * i;
+        });
+        let out = out.into_inner().unwrap();
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i * i));
+    }
+
+    #[test]
+    fn panicking_job_propagates_after_completion() {
+        let pool = WorkerPool::new(2);
+        let count = Arc::new(AtomicU64::new(0));
+        let seen = Arc::clone(&count);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_jobs(2, 8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+                seen.fetch_add(1, Ordering::SeqCst);
+            });
+        }));
+        assert!(result.is_err());
+        // All non-panicking jobs still ran: the latch waits for all 8.
+        assert_eq!(count.load(Ordering::SeqCst), 7);
+        // The pool survives the panic and keeps serving.
+        let ok = AtomicU64::new(0);
+        pool.run_jobs(2, 5, |_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_sized() {
+        let a = WorkerPool::global();
+        let b = WorkerPool::global();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.workers() >= 1);
+    }
+}

@@ -1,0 +1,312 @@
+//! Dependency-free TCP line protocol for the co-clustering service.
+//!
+//! Framing: every request is one `\n`-terminated line — a verb followed
+//! by space-separated `key=value` pairs. Every response starts with a
+//! line beginning `OK` or `ERR <message>`; the `RESULT` verb's success
+//! response additionally carries the two label vectors and a terminator:
+//!
+//! ```text
+//! → SUBMIT matrix=planted k=3 seed=7 method=lamc-scc
+//! ← OK id=1
+//! → STATUS id=1
+//! ← OK id=1 state=done cached=false
+//! → RESULT id=1
+//! ← OK id=1 k=3 rows=96 cols=80 cached=false
+//! ← ROWS 0,1,2,0,…
+//! ← COLS 1,0,2,1,…
+//! ← END
+//! → STATS
+//! ← OK jobs_done=1 cache_hits=0 cache_misses=1 …
+//! → SHUTDOWN
+//! ← OK shutting-down
+//! ```
+//!
+//! Values must not contain spaces or newlines (names are identifiers,
+//! numbers are numbers); `LOAD` paths are the one field where this
+//! bites, and the parser rejects offending requests rather than
+//! truncating them. See `docs/SERVICE.md` for the full contract.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::manager::JobSpec;
+
+/// A parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Submit(JobSpec),
+    Status { id: u64 },
+    Result { id: u64 },
+    Stats,
+    /// Load a matrix into the registry: from a named dataset spec or a
+    /// file path (exactly one of `dataset`/`path` must be given).
+    Load { name: String, dataset: Option<String>, path: Option<String>, rows: Option<usize>, seed: u64 },
+    Shutdown,
+}
+
+/// Split `k=v` tokens into a map, rejecting malformed tokens.
+pub fn kv_pairs(tokens: &[&str]) -> Result<BTreeMap<String, String>> {
+    let mut map = BTreeMap::new();
+    for t in tokens {
+        let (k, v) = t
+            .split_once('=')
+            .with_context(|| format!("expected key=value, got '{t}'"))?;
+        if k.is_empty() || v.is_empty() {
+            bail!("empty key or value in '{t}'");
+        }
+        map.insert(k.to_string(), v.to_string());
+    }
+    Ok(map)
+}
+
+fn get_u64(map: &BTreeMap<String, String>, key: &str) -> Result<Option<u64>> {
+    map.get(key)
+        .map(|v| v.parse::<u64>().with_context(|| format!("{key}={v} is not an integer")))
+        .transpose()
+}
+
+fn get_usize(map: &BTreeMap<String, String>, key: &str) -> Result<Option<usize>> {
+    map.get(key)
+        .map(|v| v.parse::<usize>().with_context(|| format!("{key}={v} is not an integer")))
+        .transpose()
+}
+
+fn get_f64(map: &BTreeMap<String, String>, key: &str) -> Result<Option<f64>> {
+    map.get(key)
+        .map(|v| v.parse::<f64>().with_context(|| format!("{key}={v} is not a float")))
+        .transpose()
+}
+
+fn require_id(map: &BTreeMap<String, String>) -> Result<u64> {
+    get_u64(map, "id")?.context("missing id=")
+}
+
+fn check_known(map: &BTreeMap<String, String>, known: &[&str]) -> Result<()> {
+    for k in map.keys() {
+        if !known.contains(&k.as_str()) {
+            bail!("unknown field '{k}' (known: {})", known.join(", "));
+        }
+    }
+    Ok(())
+}
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request> {
+    let line = line.trim();
+    let mut tokens = line.split_whitespace();
+    let verb = tokens.next().context("empty request")?;
+    let rest: Vec<&str> = tokens.collect();
+    match verb {
+        "SUBMIT" => {
+            let map = kv_pairs(&rest)?;
+            check_known(&map, &["matrix", "method", "k", "seed", "p-thresh", "tau", "workers"])?;
+            let defaults = JobSpec::default();
+            let spec = JobSpec {
+                matrix: map.get("matrix").context("missing matrix=")?.clone(),
+                method: map.get("method").cloned().unwrap_or(defaults.method),
+                k: get_usize(&map, "k")?.unwrap_or(defaults.k),
+                seed: get_u64(&map, "seed")?.unwrap_or(defaults.seed),
+                p_thresh: get_f64(&map, "p-thresh")?.unwrap_or(defaults.p_thresh),
+                tau: get_f64(&map, "tau")?.unwrap_or(defaults.tau),
+                workers: get_usize(&map, "workers")?.unwrap_or(defaults.workers),
+            };
+            Ok(Request::Submit(spec))
+        }
+        "STATUS" => {
+            let map = kv_pairs(&rest)?;
+            check_known(&map, &["id"])?;
+            Ok(Request::Status { id: require_id(&map)? })
+        }
+        "RESULT" => {
+            let map = kv_pairs(&rest)?;
+            check_known(&map, &["id"])?;
+            Ok(Request::Result { id: require_id(&map)? })
+        }
+        "STATS" => {
+            if !rest.is_empty() {
+                bail!("STATS takes no fields");
+            }
+            Ok(Request::Stats)
+        }
+        "LOAD" => {
+            let map = kv_pairs(&rest)?;
+            check_known(&map, &["name", "dataset", "path", "rows", "seed"])?;
+            let name = map.get("name").context("missing name=")?.clone();
+            let dataset = map.get("dataset").cloned();
+            let path = map.get("path").cloned();
+            if dataset.is_some() == path.is_some() {
+                bail!("LOAD needs exactly one of dataset= or path=");
+            }
+            Ok(Request::Load {
+                name,
+                dataset,
+                path,
+                rows: get_usize(&map, "rows")?,
+                seed: get_u64(&map, "seed")?.unwrap_or(42),
+            })
+        }
+        "SHUTDOWN" => {
+            if !rest.is_empty() {
+                bail!("SHUTDOWN takes no fields");
+            }
+            Ok(Request::Shutdown)
+        }
+        other => bail!("unknown verb '{other}' (want SUBMIT|STATUS|RESULT|STATS|LOAD|SHUTDOWN)"),
+    }
+}
+
+/// Validate a string destined for a `key=value` field: whitespace would
+/// split the token and a newline would split the *frame* (injecting a
+/// second request — e.g. a smuggled `SHUTDOWN` — and desyncing every
+/// later reply on the connection), so both are rejected at encode time.
+pub fn ensure_token(field: &str, value: &str) -> Result<()> {
+    if value.is_empty() {
+        bail!("{field} must not be empty");
+    }
+    if value.chars().any(|c| c.is_whitespace() || c.is_control()) {
+        bail!("{field} must not contain whitespace or control characters: {value:?}");
+    }
+    Ok(())
+}
+
+/// Encode a SUBMIT line for a spec (the client side of `parse_request`).
+/// Errors if a field would break the line framing.
+pub fn encode_submit(spec: &JobSpec) -> Result<String> {
+    ensure_token("matrix", &spec.matrix)?;
+    ensure_token("method", &spec.method)?;
+    Ok(format!(
+        "SUBMIT matrix={} method={} k={} seed={} p-thresh={} tau={} workers={}",
+        spec.matrix, spec.method, spec.k, spec.seed, spec.p_thresh, spec.tau, spec.workers
+    ))
+}
+
+/// Encode a label vector as the payload of a `ROWS`/`COLS` line.
+pub fn encode_labels(labels: &[usize]) -> String {
+    let mut out = String::with_capacity(labels.len() * 2);
+    for (i, l) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&l.to_string());
+    }
+    out
+}
+
+/// Decode a `ROWS`/`COLS` payload back into labels.
+pub fn decode_labels(s: &str) -> Result<Vec<usize>> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Ok(vec![]);
+    }
+    s.split(',')
+        .map(|t| t.parse::<usize>().with_context(|| format!("bad label '{t}'")))
+        .collect()
+}
+
+/// First line of an error response.
+pub fn err_line(msg: &str) -> String {
+    // Newlines would break framing; flatten them.
+    format!("ERR {}", msg.replace('\n', "; "))
+}
+
+/// Split a response line into (ok, rest). `Err` if it is an ERR line.
+pub fn check_ok(line: &str) -> Result<&str> {
+    let line = line.trim_end();
+    if let Some(rest) = line.strip_prefix("OK") {
+        return Ok(rest.trim_start());
+    }
+    if let Some(msg) = line.strip_prefix("ERR") {
+        bail!("server error: {}", msg.trim_start());
+    }
+    bail!("malformed response line: '{line}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_round_trip() {
+        let spec = JobSpec {
+            matrix: "planted".into(),
+            method: "lamc-pnmtf".into(),
+            k: 5,
+            seed: 99,
+            p_thresh: 0.9,
+            tau: 0.4,
+            workers: 3,
+        };
+        let line = encode_submit(&spec).unwrap();
+        match parse_request(&line).unwrap() {
+            Request::Submit(parsed) => assert_eq!(parsed, spec),
+            other => panic!("wrong parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_defaults_apply() {
+        match parse_request("SUBMIT matrix=m").unwrap() {
+            Request::Submit(s) => {
+                assert_eq!(s.method, "lamc-scc");
+                assert_eq!(s.k, 4);
+                assert_eq!(s.seed, 42);
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn simple_verbs() {
+        assert_eq!(parse_request("STATUS id=7").unwrap(), Request::Status { id: 7 });
+        assert_eq!(parse_request("RESULT id=1").unwrap(), Request::Result { id: 1 });
+        assert_eq!(parse_request("STATS").unwrap(), Request::Stats);
+        assert_eq!(parse_request("SHUTDOWN\n").unwrap(), Request::Shutdown);
+    }
+
+    #[test]
+    fn load_requires_exactly_one_source() {
+        assert!(parse_request("LOAD name=x dataset=amazon1000").is_ok());
+        assert!(parse_request("LOAD name=x path=/tmp/m.lamc rows=100").is_ok());
+        assert!(parse_request("LOAD name=x").is_err());
+        assert!(parse_request("LOAD name=x dataset=a path=b").is_err());
+    }
+
+    #[test]
+    fn malformed_requests_error() {
+        assert!(parse_request("").is_err());
+        assert!(parse_request("FROBNICATE").is_err());
+        assert!(parse_request("SUBMIT").is_err(), "matrix is required");
+        assert!(parse_request("SUBMIT matrix=m k=abc").is_err());
+        assert!(parse_request("SUBMIT matrix=m bogus=1").is_err(), "unknown field");
+        assert!(parse_request("STATUS").is_err(), "id required");
+        assert!(parse_request("STATS extra=1").is_err());
+    }
+
+    #[test]
+    fn encode_rejects_frame_breaking_fields() {
+        let inject = JobSpec { matrix: "x\nSHUTDOWN".into(), ..JobSpec::default() };
+        assert!(encode_submit(&inject).is_err(), "newline would smuggle a second request");
+        let spaced = JobSpec { matrix: "a b".into(), ..JobSpec::default() };
+        assert!(encode_submit(&spaced).is_err(), "space would split the token");
+        assert!(ensure_token("name", "ok-name_1.2").is_ok());
+        assert!(ensure_token("name", "").is_err());
+    }
+
+    #[test]
+    fn label_codec_round_trip() {
+        let labels = vec![0usize, 3, 1, 1, 2, 0];
+        assert_eq!(decode_labels(&encode_labels(&labels)).unwrap(), labels);
+        assert_eq!(decode_labels("").unwrap(), Vec::<usize>::new());
+        assert!(decode_labels("1,x,2").is_err());
+    }
+
+    #[test]
+    fn response_line_helpers() {
+        assert_eq!(check_ok("OK id=3\n").unwrap(), "id=3");
+        assert_eq!(check_ok("OK").unwrap(), "");
+        assert!(check_ok("ERR boom").is_err());
+        assert!(check_ok("??").is_err());
+        assert!(!err_line("a\nb").contains('\n'));
+    }
+}

@@ -1,0 +1,232 @@
+//! Always-on TCP front end for the service: thread-per-connection over
+//! `std::net`, one request–response exchange per protocol line.
+//!
+//! The accept loop runs on a dedicated thread; each connection gets its
+//! own handler thread (the same structure as the pjrt-gated
+//! `runtime/server.rs`, but serving the public line protocol instead of
+//! PJRT executions, and compiled unconditionally). `SHUTDOWN` stops the
+//! accept loop; in-flight jobs are drained by
+//! [`ServiceManager::shutdown`], which the binary calls after `join`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::manager::{JobState, ServiceManager};
+use super::protocol::{self, Request};
+
+/// A running TCP server bound to a local address.
+pub struct ServiceServer {
+    addr: SocketAddr,
+    manager: ServiceManager,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl ServiceServer {
+    /// Bind and start serving in the background. Pass port 0 for an
+    /// ephemeral port; the bound address is available via
+    /// [`ServiceServer::addr`].
+    pub fn spawn(addr: impl ToSocketAddrs, manager: ServiceManager) -> Result<Self> {
+        let listener = TcpListener::bind(addr).context("bind service listener")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_stop = Arc::clone(&stop);
+        let accept_manager = manager.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("lamc-accept".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if accept_stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let manager = accept_manager.clone();
+                    let stop = Arc::clone(&accept_stop);
+                    // Handler threads are detached: they end when the
+                    // client hangs up, and hold only Arc'd state.
+                    let _ = std::thread::Builder::new()
+                        .name("lamc-conn".into())
+                        .spawn(move || handle_connection(stream, manager, stop, addr));
+                }
+            })
+            .context("spawn accept thread")?;
+        crate::log_info!("service listening on {addr}");
+        Ok(Self { addr, manager, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound socket address (useful with an ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The manager this server fronts.
+    pub fn manager(&self) -> &ServiceManager {
+        &self.manager
+    }
+
+    /// Block until the accept loop exits (i.e. until a `SHUTDOWN`
+    /// request arrives or [`ServiceServer::shutdown`] is called from
+    /// another thread).
+    pub fn join(mut self) -> ServiceManager {
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        self.manager.clone()
+    }
+
+    /// Stop accepting connections (does not touch in-flight jobs).
+    pub fn shutdown(&self) {
+        request_stop(&self.stop, self.addr);
+    }
+}
+
+impl Drop for ServiceServer {
+    fn drop(&mut self) {
+        request_stop(&self.stop, self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Flag the accept loop to stop and poke it awake with a throwaway
+/// connection (accept() has no timeout in std).
+fn request_stop(stop: &AtomicBool, addr: SocketAddr) {
+    if stop.swap(true, Ordering::SeqCst) {
+        return; // already stopping
+    }
+    let _ = TcpStream::connect(addr);
+}
+
+/// Longest accepted request line. Requests are a verb plus a handful of
+/// short fields; the cap exists so a peer streaming bytes without a
+/// newline cannot grow the buffer without bound.
+const MAX_REQUEST_LINE_BYTES: u64 = 64 * 1024;
+
+fn handle_connection(stream: TcpStream, manager: ServiceManager, stop: Arc<AtomicBool>, addr: SocketAddr) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match (&mut reader).take(MAX_REQUEST_LINE_BYTES).read_line(&mut line) {
+            Ok(0) | Err(_) => return, // client hung up (or sent bad UTF-8)
+            Ok(n) => {
+                if n as u64 == MAX_REQUEST_LINE_BYTES && !line.ends_with('\n') {
+                    // Overlong request: reject and drop the connection
+                    // rather than resynchronizing mid-stream.
+                    let reply = format!("{}\n", protocol::err_line("request line too long"));
+                    let _ = writer.write_all(reply.as_bytes());
+                    return;
+                }
+            }
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match protocol::parse_request(&line) {
+            Ok(req) => {
+                let is_shutdown = matches!(req, Request::Shutdown);
+                let reply = respond(&manager, req);
+                if is_shutdown {
+                    let _ = writer.write_all(reply.as_bytes());
+                    let _ = writer.flush();
+                    crate::log_info!("shutdown requested by {peer}");
+                    request_stop(&stop, addr);
+                    return;
+                }
+                reply
+            }
+            Err(e) => format!("{}\n", protocol::err_line(&format!("{e:#}"))),
+        };
+        if writer.write_all(reply.as_bytes()).and_then(|_| writer.flush()).is_err() {
+            return;
+        }
+    }
+}
+
+/// Execute one request against the manager; returns the full response
+/// (one or more `\n`-terminated lines).
+fn respond(manager: &ServiceManager, req: Request) -> String {
+    match handle(manager, req) {
+        Ok(lines) => lines,
+        Err(e) => format!("{}\n", protocol::err_line(&format!("{e:#}"))),
+    }
+}
+
+fn handle(manager: &ServiceManager, req: Request) -> Result<String> {
+    match req {
+        Request::Submit(spec) => {
+            let id = manager.submit(spec)?;
+            Ok(format!("OK id={id}\n"))
+        }
+        Request::Status { id } => {
+            let record = manager.job(id).with_context(|| format!("no job with id {id}"))?;
+            let mut line = format!("OK id={id} state={} cached={}", record.state.as_str(), record.cached);
+            if let Some(e) = &record.error {
+                line.push_str(&format!(" error={}", e.replace([' ', '\n'], "_")));
+            }
+            line.push('\n');
+            Ok(line)
+        }
+        Request::Result { id } => {
+            let record = manager.job(id).with_context(|| format!("no job with id {id}"))?;
+            match record.state {
+                JobState::Done => {}
+                JobState::Failed => anyhow::bail!(
+                    "job {id} failed: {}",
+                    record.error.as_deref().unwrap_or("unknown error")
+                ),
+                other => anyhow::bail!("job {id} is still {}", other.as_str()),
+            }
+            let out = record.result.context("done job missing result")?;
+            Ok(format!(
+                "OK id={id} k={} rows={} cols={} cached={}\nROWS {}\nCOLS {}\nEND\n",
+                out.k,
+                out.row_labels.len(),
+                out.col_labels.len(),
+                record.cached,
+                protocol::encode_labels(&out.row_labels),
+                protocol::encode_labels(&out.col_labels),
+            ))
+        }
+        Request::Stats => {
+            let (queued, running, done, failed) = manager.job_counts();
+            let snap = manager.stats().snapshot();
+            let cache = manager.cache();
+            Ok(format!(
+                "OK jobs_queued={queued} jobs_running={running} jobs_done={done} jobs_failed={failed} \
+                 cache_hits={} cache_misses={} cache_entries={} cache_bytes={} cache_capacity_bytes={} \
+                 blocks_total={} blocks_native={} blocks_pjrt={} matrices={}\n",
+                snap.cache_hits,
+                snap.cache_misses,
+                cache.len(),
+                cache.bytes(),
+                cache.capacity_bytes(),
+                snap.blocks_total,
+                snap.blocks_native,
+                snap.blocks_pjrt,
+                manager.matrix_names().len(),
+            ))
+        }
+        Request::Load { name, dataset, path, rows, seed } => {
+            let (r, c) = match (dataset, path) {
+                (Some(ds), None) => manager.load_dataset(&name, &ds, rows, seed)?,
+                (None, Some(p)) => manager.load_file(&name, &PathBuf::from(p))?,
+                _ => unreachable!("parser enforces exactly one source"),
+            };
+            Ok(format!("OK name={name} rows={r} cols={c}\n"))
+        }
+        Request::Shutdown => Ok("OK shutting-down\n".to_string()),
+    }
+}

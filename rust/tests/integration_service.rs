@@ -1,0 +1,176 @@
+//! Integration: the long-lived service end to end over real TCP.
+//!
+//! Drives a `ServiceServer` on an ephemeral port with blocking
+//! `ServiceClient`s: submission, polling, result retrieval, the result
+//! cache (an identical second submission must be a hit with identical
+//! labels and no extra pipeline work), concurrent clients with
+//! independent seeds, and protocol-level error handling.
+
+use std::time::Duration;
+
+use lamc::data::synthetic::{planted_dense, PlantedConfig};
+use lamc::pipeline::Lamc;
+use lamc::service::{JobSpec, ServiceClient, ServiceConfig, ServiceManager, ServiceServer};
+
+fn planted(seed: u64) -> lamc::matrix::Matrix {
+    planted_dense(&PlantedConfig {
+        rows: 96,
+        cols: 80,
+        row_clusters: 3,
+        col_clusters: 3,
+        noise: 0.1,
+        signal: 1.5,
+        seed,
+        ..Default::default()
+    })
+    .matrix
+}
+
+fn spawn_service(runners: usize) -> (ServiceServer, ServiceManager) {
+    let manager = ServiceManager::new(ServiceConfig {
+        runners,
+        queue_capacity: 16,
+        cache_capacity_bytes: 16 << 20,
+    });
+    manager.register("planted", planted(11));
+    let server = ServiceServer::spawn("127.0.0.1:0", manager.clone()).expect("bind ephemeral port");
+    (server, manager)
+}
+
+const WAIT: Duration = Duration::from_secs(180);
+
+#[test]
+fn tcp_round_trip_second_submission_hits_cache() {
+    let (server, manager) = spawn_service(1);
+    let mut client = ServiceClient::connect(server.addr()).unwrap();
+    let spec = JobSpec { matrix: "planted".into(), k: 3, seed: 7, ..Default::default() };
+
+    let id1 = client.submit(&spec).unwrap();
+    let out1 = client.wait(id1, WAIT).unwrap();
+    assert_eq!(out1.row_labels.len(), 96);
+    assert_eq!(out1.col_labels.len(), 80);
+    assert!(!out1.cached, "first run computes");
+
+    let stats1 = client.stats().unwrap();
+    assert_eq!(stats1["cache_hits"], "0");
+    assert_eq!(stats1["cache_misses"], "1");
+    let blocks_after_first: u64 = stats1["blocks_total"].parse().unwrap();
+    assert!(blocks_after_first > 0, "pipeline ran blocks");
+
+    // Identical resubmission: a distinct job id, served from cache.
+    let id2 = client.submit(&spec).unwrap();
+    assert_ne!(id1, id2);
+    let out2 = client.wait(id2, WAIT).unwrap();
+    assert!(out2.cached, "second identical submission must hit the cache");
+    assert_eq!(out1.row_labels, out2.row_labels, "cached labels identical");
+    assert_eq!(out1.col_labels, out2.col_labels);
+    assert_eq!(out1.k, out2.k);
+
+    let stats2 = client.stats().unwrap();
+    assert_eq!(stats2["cache_hits"], "1", "hit counter incremented");
+    assert_eq!(stats2["cache_misses"], "1");
+    assert_eq!(
+        stats2["blocks_total"].parse::<u64>().unwrap(),
+        blocks_after_first,
+        "cache hit must not re-run the pipeline"
+    );
+    assert_eq!(stats2["jobs_done"], "2");
+
+    // STATUS agrees with the result path.
+    let status = client.status(id2).unwrap();
+    assert_eq!(status.state, lamc::service::JobState::Done);
+    assert!(status.cached);
+
+    client.shutdown().unwrap();
+    server.join();
+    manager.shutdown();
+}
+
+#[test]
+fn different_config_misses_cache() {
+    let (server, manager) = spawn_service(1);
+    let mut client = ServiceClient::connect(server.addr()).unwrap();
+    let spec = JobSpec { matrix: "planted".into(), k: 3, seed: 7, ..Default::default() };
+    let a = client.submit(&spec).unwrap();
+    client.wait(a, WAIT).unwrap();
+    // Same matrix, different seed: must not be served from the cache.
+    let b = client.submit(&JobSpec { seed: 8, ..spec }).unwrap();
+    let out = client.wait(b, WAIT).unwrap();
+    assert!(!out.cached);
+    let stats = client.stats().unwrap();
+    assert_eq!(stats["cache_hits"], "0");
+    assert_eq!(stats["cache_misses"], "2");
+    client.shutdown().unwrap();
+    server.join();
+    manager.shutdown();
+}
+
+#[test]
+fn concurrent_clients_get_independent_deterministic_results() {
+    let (server, manager) = spawn_service(2);
+    let addr = server.addr();
+
+    // Two clients race jobs with different seeds through the shared
+    // worker pool and runner crew.
+    let mut handles = Vec::new();
+    for seed in [101u64, 202] {
+        handles.push(std::thread::spawn(move || {
+            let mut client = ServiceClient::connect(addr).unwrap();
+            let spec = JobSpec { matrix: "planted".into(), k: 3, seed, ..Default::default() };
+            let id = client.submit(&spec).unwrap();
+            (spec, client.wait(id, WAIT).unwrap())
+        }));
+    }
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    // Each service answer must equal a fresh local run of the exact
+    // configuration the service used (per-job seeds are scheduling-order
+    // independent, so concurrency cannot leak between the two jobs).
+    let matrix = planted(11);
+    for (spec, reply) in &results {
+        let local = Lamc::new(spec.lamc_config().unwrap()).run(&matrix).unwrap();
+        assert_eq!(&local.row_labels, &reply.row_labels, "seed {}", spec.seed);
+        assert_eq!(&local.col_labels, &reply.col_labels, "seed {}", spec.seed);
+        assert_eq!(local.k, reply.k);
+    }
+
+    client_shutdown(addr);
+    server.join();
+    manager.shutdown();
+}
+
+fn client_shutdown(addr: std::net::SocketAddr) {
+    let mut client = ServiceClient::connect(addr).unwrap();
+    client.shutdown().unwrap();
+}
+
+#[test]
+fn protocol_errors_are_reported_not_fatal() {
+    let (server, manager) = spawn_service(1);
+    let mut client = ServiceClient::connect(server.addr()).unwrap();
+
+    // Unknown matrix → ERR, connection stays usable.
+    let err = client
+        .submit(&JobSpec { matrix: "ghost".into(), ..Default::default() })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no matrix named"), "{err}");
+
+    // Unknown job id → ERR.
+    assert!(client.status(999).is_err());
+    assert!(client.result(999).is_err());
+
+    // LOAD a small dataset over the wire, then submit against it.
+    let (rows, cols) = client.load_dataset("tiny", "classic4", Some(300), 5).unwrap();
+    assert_eq!((rows, cols), (300, 1000));
+    let id = client
+        .submit(&JobSpec { matrix: "tiny".into(), k: 4, ..Default::default() })
+        .unwrap();
+    let out = client.wait(id, WAIT).unwrap();
+    assert_eq!(out.row_labels.len(), 300);
+    assert_eq!(out.col_labels.len(), 1000);
+
+    client.shutdown().unwrap();
+    server.join();
+    manager.shutdown();
+}
