@@ -36,7 +36,9 @@ pub fn bench<F: FnMut()>(warmup: usize, runs: usize, mut f: F) -> Timing {
         f();
         samples.push(t.elapsed().as_secs_f64());
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // NaN-safe total order: a NaN sample (e.g. from a zero-duration
+    // division in a caller) must not panic the whole bench run.
+    samples.sort_by(f64::total_cmp);
     let n = samples.len();
     Timing {
         median_s: samples[n / 2],

@@ -22,10 +22,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::matrix::Matrix;
 use crate::partition::{BlockJob, SamplingRound};
 use crate::rng::{SplitMix64, Xoshiro256};
 use crate::service::WorkerPool;
+use crate::store::MatrixView;
 
 use super::router::Router;
 use super::stats::Stats;
@@ -71,13 +71,20 @@ pub fn job_seed(base: u64, job: &BlockJob) -> u64 {
 /// Execute every job of every round; returns `(job, result)` pairs in a
 /// deterministic order (sorted by (round, grid)) regardless of worker
 /// interleaving.
-pub fn run_rounds(
-    matrix: &Matrix,
+///
+/// `matrix` is anything that views as a [`MatrixView`]: a borrowed
+/// in-memory [`crate::matrix::Matrix`] (gathers copy from RAM, as
+/// before) or a store-backed handle (each worker's gather reads only the
+/// row bands its block touches, so peak memory is workers × block size
+/// rather than matrix size).
+pub fn run_rounds<'a>(
+    matrix: impl Into<MatrixView<'a>>,
     rounds: &[SamplingRound],
     router: &Router,
     cfg: &SchedulerConfig,
     stats: &Stats,
 ) -> Result<Vec<(BlockJob, crate::cocluster::CoclusterResult)>> {
+    let matrix: MatrixView<'a> = matrix.into();
     let jobs: Vec<&BlockJob> = rounds.iter().flat_map(|r| r.jobs.iter()).collect();
     if jobs.is_empty() {
         return Ok(vec![]);
@@ -92,11 +99,19 @@ pub fn run_rounds(
         let block = matrix.gather_block(&job.rows, &job.cols);
         stats.add_gather(t0.elapsed().as_nanos() as u64);
 
-        let seed = job_seed(cfg.seed, job);
-        let t1 = Instant::now();
-        let result = router.execute(&block, cfg.k, seed, stats);
-        stats.add_exec(t1.elapsed().as_nanos() as u64);
-        stats.blocks_total.fetch_add(1, Ordering::Relaxed);
+        let result = match block {
+            Ok(block) => {
+                let seed = job_seed(cfg.seed, job);
+                let t1 = Instant::now();
+                let result = router.execute(&block, cfg.k, seed, stats);
+                stats.add_exec(t1.elapsed().as_nanos() as u64);
+                stats.blocks_total.fetch_add(1, Ordering::Relaxed);
+                result
+            }
+            // Gather failure (store I/O or checksum): the job carries
+            // the error to the leader, which reports the first one.
+            Err(e) => Err(e),
+        };
 
         // Per-job lock is negligible next to gather + co-clustering.
         slots.lock().unwrap()[idx] = Some(result);
@@ -122,12 +137,13 @@ pub fn run_rounds(
 
 /// Convenience used by tests/examples: run one atom over the whole
 /// matrix through the same scheduler machinery.
-pub fn run_whole(
-    matrix: &Matrix,
+pub fn run_whole<'a>(
+    matrix: impl Into<MatrixView<'a>>,
     router: &Router,
     cfg: &SchedulerConfig,
     stats: &Stats,
 ) -> Result<crate::cocluster::CoclusterResult> {
+    let matrix: MatrixView<'a> = matrix.into();
     let job = BlockJob {
         round: 0,
         grid: (0, 0),
@@ -151,6 +167,7 @@ mod tests {
     use super::*;
     use crate::cocluster::SpectralCocluster;
     use crate::data::synthetic::{planted_dense, PlantedConfig};
+    use crate::matrix::Matrix;
     use crate::partition::{sample_partition, PartitionPlan};
     use std::sync::Arc;
 
@@ -213,7 +230,7 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 let router = Router::native_only(Arc::new(SpectralCocluster::default()));
                 let cfg = SchedulerConfig { seed, ..Default::default() };
-                run_rounds(&matrix, &rounds, &router, &cfg, &Stats::default()).unwrap()
+                run_rounds(matrix.as_ref(), &rounds, &router, &cfg, &Stats::default()).unwrap()
             }));
         }
         let a = handles.remove(0).join().unwrap();

@@ -8,8 +8,9 @@
 //!   planning ([`partition`]), a leader/worker scheduler that fans block
 //!   co-clustering jobs out across a persistent thread pool and execution
 //!   routes ([`coordinator`]), hierarchical co-cluster merging
-//!   ([`merge`]), and a long-lived TCP serving layer with a job queue and
-//!   result cache ([`service`]).
+//!   ([`merge`]), a chunked on-disk matrix store for out-of-core inputs
+//!   ([`store`]), and a long-lived TCP serving layer with a job queue
+//!   and result cache ([`service`]).
 //! * **Layer 2** — a JAX compute graph per partition block (spectral
 //!   co-clustering embedding + k-means), AOT-lowered to HLO text at build
 //!   time and executed from Rust via PJRT (the `runtime` module, compiled
@@ -89,6 +90,7 @@ pub mod rng;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod service;
+pub mod store;
 pub mod testkit;
 
 pub use pipeline::{Lamc, LamcConfig, LamcResult};

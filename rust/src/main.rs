@@ -4,10 +4,18 @@
 //! * `run`      — run LAMC (or a baseline) on a named dataset, report
 //!                time + NMI/ARI against the planted ground truth.
 //! * `plan`     — show the partition plan the probabilistic model picks.
+//! * `pack`     — convert a dataset or matrix file into a LAMC2 chunked
+//!                store for out-of-core runs.
+//! * `ingest`   — stream rows from stdin into a LAMC2 store.
+//! * `inspect`  — print (and optionally checksum-verify) a store's
+//!                self-description.
 //! * `serve`    — run the long-lived co-clustering service (TCP).
 //! * `submit`   — submit a job to a running service.
 //! * `status`   — query a job's state (or server-wide stats) on a
 //!                running service.
+//! * `load`     — load a dataset, matrix file or store on a running
+//!                service.
+//! * `shutdown` — ask a running service to stop accepting connections.
 //! * `datasets` — list available dataset specs.
 //! * `artifacts`— show the AOT artifact manifest the runtime would use.
 //! * `version`  — print the crate version.
@@ -15,10 +23,12 @@
 //! Examples:
 //! ```text
 //! lamc run --dataset amazon1000 --method lamc-scc --k 5
-//! lamc run --dataset classic4 --method pnmtf --rows 3000
 //! lamc plan --rows 18000 --cols 1000 --p-thresh 0.99
-//! lamc serve --addr 127.0.0.1:4666
-//! lamc submit --addr 127.0.0.1:4666 --matrix amazon1000 --k 5 --wait
+//! lamc pack --dataset rcv1_large --output rcv1.lamc2
+//! lamc inspect --store rcv1.lamc2 --verify
+//! lamc serve --addr 127.0.0.1:4666 --store-root /var/lib/lamc
+//! lamc load --addr 127.0.0.1:4666 --name rcv1 --store rcv1.lamc2
+//! lamc submit --addr 127.0.0.1:4666 --matrix rcv1 --k 6 --wait
 //! lamc status --addr 127.0.0.1:4666 --id 1
 //! ```
 //!
@@ -27,6 +37,9 @@
 
 #![allow(unknown_lints)]
 #![allow(clippy::field_reassign_with_default)]
+
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 use lamc::cli::Args;
@@ -37,6 +50,7 @@ use lamc::pipeline::{AtomKind, Lamc, LamcConfig};
 #[cfg(feature = "pjrt")]
 use lamc::runtime::{Manifest, RuntimePool, RuntimePoolConfig};
 use lamc::service::{JobSpec, ServiceClient, ServiceConfig, ServiceManager, ServiceServer};
+use lamc::store::{ChunkWriter, Layout, StoreReader, StoreSummary, DEFAULT_CHUNK_ROWS};
 
 const USAGE: &str = "\
 lamc — Large-scale Adaptive Matrix Co-clustering
@@ -46,11 +60,20 @@ USAGE:
                 [--k N] [--rows N] [--seed N] [--workers N] [--p-thresh F]
                 [--tau F] [--no-runtime] [--verbose]
   lamc plan     --rows N --cols N [--p-thresh F] [--row-frac F] [--col-frac F]
+  lamc pack     (--dataset NAME [--rows N] [--seed N] | --input FILE.lamc|.mtx)
+                --output FILE.lamc2 [--chunk-rows N]
+  lamc ingest   --output FILE.lamc2 --cols N [--format dense|sparse]
+                [--chunk-rows N]   (rows on stdin; see docs/STORE.md)
+  lamc inspect  --store FILE.lamc2 [--verify]
   lamc serve    [--addr HOST:PORT] [--runners N] [--queue N] [--cache-mb N]
-                [--datasets a,b] [--seed N] [--verbose]
+                [--store-root DIR] [--cache-disk-mb N] [--stores name=file.lamc2,...]
+                [--datasets a,b] [--seed N] [--job-ttl SECS|0=keep] [--verbose]
   lamc submit   [--addr HOST:PORT] --matrix NAME [--method M] [--k N] [--seed N]
                 [--p-thresh F] [--tau F] [--workers N] [--wait] [--timeout SECS]
   lamc status   [--addr HOST:PORT] [--id N]
+  lamc load     [--addr HOST:PORT] --name NAME
+                (--dataset D [--rows N] [--seed N] | --path FILE | --store FILE.lamc2)
+  lamc shutdown [--addr HOST:PORT]
   lamc datasets
   lamc artifacts
   lamc version
@@ -70,7 +93,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["verbose", "no-runtime", "help", "wait"])?;
+    let args = Args::from_env(&["verbose", "no-runtime", "help", "wait", "verify"])?;
     if args.has("verbose") {
         lamc::logging::set_level(lamc::logging::Level::Debug);
     }
@@ -81,14 +104,165 @@ fn run() -> Result<()> {
     match args.command.as_deref().unwrap() {
         "run" => cmd_run(&args),
         "plan" => cmd_plan(&args),
+        "pack" => cmd_pack(&args),
+        "ingest" => cmd_ingest(&args),
+        "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "submit" => cmd_submit(&args),
         "status" => cmd_status(&args),
+        "load" => cmd_load(&args),
+        "shutdown" => cmd_shutdown(&args),
         "datasets" => cmd_datasets(&args),
         "artifacts" => cmd_artifacts(&args),
         "version" => cmd_version(&args),
         other => Err(lamc::cli::UsageError(format!("unknown command '{other}'")).into()),
     }
+}
+
+fn print_summary(s: &StoreSummary) {
+    println!("store       : {:?}", s.path);
+    println!("layout      : {}", s.layout.as_str());
+    println!("shape       : {} x {} ({} stored entries)", s.rows, s.cols, s.nnz);
+    println!("chunks      : {} bands of {} rows", s.chunks, s.chunk_rows);
+    println!("fingerprint : {:016x}", s.fingerprint);
+    println!("file size   : {} bytes", s.file_bytes);
+}
+
+fn cmd_pack(args: &Args) -> Result<()> {
+    args.expect_flags(&["dataset", "input", "output", "rows", "seed", "chunk-rows"])?;
+    let output = PathBuf::from(args.get("output").context("--output required")?);
+    let chunk_rows = args.get_usize("chunk-rows", DEFAULT_CHUNK_ROWS)?;
+    let matrix = match (args.get("dataset"), args.get("input")) {
+        (Some(name), None) => {
+            let rows = args.get("rows").map(|r| r.parse::<usize>()).transpose()?;
+            let seed = args.get_u64("seed", 42)?;
+            data::datasets::build(name, rows, seed)
+                .with_context(|| format!("unknown dataset '{name}'"))?
+                .matrix
+        }
+        (None, Some(file)) => {
+            let path = Path::new(file);
+            if path.extension().and_then(|e| e.to_str()) == Some("mtx") {
+                lamc::matrix::Matrix::Sparse(lamc::matrix::io::read_matrix_market(path)?)
+            } else {
+                lamc::matrix::io::load(path)?
+            }
+        }
+        _ => {
+            return Err(lamc::cli::UsageError(
+                "pack needs exactly one of --dataset or --input".into(),
+            )
+            .into())
+        }
+    };
+    let summary = lamc::store::pack_matrix(&matrix, &output, chunk_rows)?;
+    print_summary(&summary);
+    Ok(())
+}
+
+/// Stream rows from stdin into a store. Dense format: one row per line,
+/// whitespace-separated values. Sparse format: one row per line of
+/// `col:value` tokens (possibly none). Blank lines and `#` comments are
+/// skipped. This is the out-of-core ingest path: the matrix is never
+/// resident — only the current row band is.
+fn cmd_ingest(args: &Args) -> Result<()> {
+    args.expect_flags(&["output", "cols", "format", "chunk-rows"])?;
+    let output = PathBuf::from(args.get("output").context("--output required")?);
+    let cols = args.get_usize("cols", 0)?;
+    anyhow::ensure!(cols > 0, "--cols required (row width is fixed up front)");
+    let chunk_rows = args.get_usize("chunk-rows", DEFAULT_CHUNK_ROWS)?;
+    let layout = match args.get_or("format", "dense") {
+        "dense" => Layout::Dense,
+        "sparse" => Layout::Csr,
+        other => bail!("unknown --format '{other}' (want dense|sparse)"),
+    };
+    let mut writer = ChunkWriter::create(&output, layout, cols, chunk_rows)?;
+    let stdin = std::io::stdin();
+    let mut dense_row: Vec<f32> = Vec::with_capacity(cols);
+    let mut sparse_row: Vec<(u32, f32)> = Vec::new();
+    for (lineno, line) in stdin.lock().lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parse = || -> Result<()> {
+            match layout {
+                Layout::Dense => {
+                    dense_row.clear();
+                    for tok in line.split_whitespace() {
+                        dense_row.push(tok.parse::<f32>()?);
+                    }
+                    writer.append_dense_row(&dense_row)
+                }
+                Layout::Csr => {
+                    sparse_row.clear();
+                    for tok in line.split_whitespace() {
+                        let (j, v) = tok.split_once(':').context("want col:value")?;
+                        sparse_row.push((j.parse::<u32>()?, v.parse::<f32>()?));
+                    }
+                    writer.append_sparse_row(&sparse_row)
+                }
+            }
+        };
+        parse().with_context(|| format!("stdin line {}", lineno + 1))?;
+    }
+    let summary = writer.finish()?;
+    print_summary(&summary);
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    args.expect_flags(&["store"])?;
+    let path = PathBuf::from(args.get("store").context("--store required")?);
+    let reader = StoreReader::open(&path)?;
+    let h = reader.header();
+    println!("store       : {path:?}");
+    println!("layout      : {}", h.layout.as_str());
+    println!("shape       : {} x {} ({} stored entries)", h.rows, h.cols, h.nnz);
+    println!("chunks      : {} bands of {} rows", h.n_chunks, h.chunk_rows);
+    println!("fingerprint : {:016x}", h.fingerprint);
+    if args.has("verify") {
+        reader.verify()?;
+        println!(
+            "verify      : OK ({} chunks, {} payload bytes checksummed)",
+            reader.chunks_read(),
+            reader.bytes_read()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_load(args: &Args) -> Result<()> {
+    args.expect_flags(&["addr", "name", "dataset", "path", "store", "rows", "seed"])?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let name = args.get("name").context("--name required")?;
+    let mut client = ServiceClient::connect(addr)?;
+    let (rows, cols) = match (args.get("dataset"), args.get("path"), args.get("store")) {
+        (Some(ds), None, None) => {
+            let rows = args.get("rows").map(|r| r.parse::<usize>()).transpose()?;
+            client.load_dataset(name, ds, rows, args.get_u64("seed", 42)?)?
+        }
+        (None, Some(p), None) => client.load_file(name, p)?,
+        (None, None, Some(s)) => client.load_store(name, s)?,
+        _ => {
+            return Err(lamc::cli::UsageError(
+                "load needs exactly one of --dataset, --path or --store".into(),
+            )
+            .into())
+        }
+    };
+    println!("loaded '{name}': {rows} x {cols}");
+    Ok(())
+}
+
+fn cmd_shutdown(args: &Args) -> Result<()> {
+    args.expect_flags(&["addr"])?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let mut client = ServiceClient::connect(addr)?;
+    client.shutdown()?;
+    println!("shutdown requested at {addr}");
+    Ok(())
 }
 
 fn cmd_version(args: &Args) -> Result<()> {
@@ -98,12 +272,30 @@ fn cmd_version(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    args.expect_flags(&["addr", "runners", "queue", "cache-mb", "datasets", "seed"])?;
+    args.expect_flags(&[
+        "addr", "runners", "queue", "cache-mb", "cache-disk-mb", "datasets", "seed",
+        "store-root", "stores", "job-ttl",
+    ])?;
     let addr = args.get_or("addr", DEFAULT_ADDR);
+    let defaults = ServiceConfig::default();
+    // Absent: default retention. 0: disable the sweep (keep records for
+    // the server's lifetime). N: sweep finished records after N seconds.
+    let job_ttl = match args.get("job-ttl") {
+        None => defaults.job_ttl,
+        Some(_) => match args.get_u64("job-ttl", 0)? {
+            0 => None,
+            secs => Some(std::time::Duration::from_secs(secs)),
+        },
+    };
     let config = ServiceConfig {
         runners: args.get_usize("runners", 2)?.max(1),
         queue_capacity: args.get_usize("queue", 64)?.max(1),
         cache_capacity_bytes: args.get_usize("cache-mb", 64)? << 20,
+        store_root: args.get("store-root").map(PathBuf::from),
+        cache_disk_capacity_bytes: args
+            .get_usize("cache-disk-mb", defaults.cache_disk_capacity_bytes >> 20)?
+            << 20,
+        job_ttl,
     };
     let seed = args.get_u64("seed", 42)?;
     let manager = ServiceManager::new(config);
@@ -111,6 +303,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         for name in names.split(',').filter(|n| !n.is_empty()) {
             let (r, c) = manager.load_dataset(name, name, None, seed)?;
             println!("loaded dataset {name}: {r} x {c}");
+        }
+    }
+    if let Some(stores) = args.get("stores") {
+        for binding in stores.split(',').filter(|b| !b.is_empty()) {
+            let (name, file) = binding
+                .split_once('=')
+                .with_context(|| format!("--stores wants name=file, got '{binding}'"))?;
+            let (r, c) = manager.register_store(name, Path::new(file))?;
+            println!("registered store {name}: {r} x {c} (disk-resident)");
         }
     }
     let server = ServiceServer::spawn(addr, manager)?;

@@ -39,11 +39,17 @@ impl CsrMatrix {
         let mut values: Vec<f32> = Vec::with_capacity(triplets.len());
         for (i, j, v) in triplets {
             assert!(i < rows && j < cols, "triplet out of bounds");
-            if let (Some(&last_j), true) = (indices.last(), indptr[i + 1] > indptr[i]) {
-                if last_j as usize == j && indices.len() == indptr[i + 1] {
-                    // Same row (current row being filled) and same column.
-                    *values.last_mut().unwrap() += v;
-                    continue;
+            if indptr[i + 1] > indptr[i] && indices.len() == indptr[i + 1] {
+                // The current row is the one being filled; a repeated
+                // column folds into its last stored entry. Guarded
+                // accumulate: both accessors are `Some` here by the
+                // checks above, but a panicking unwrap would turn a
+                // future refactor slip into a crash on user data.
+                if let (Some(&last_j), Some(last_v)) = (indices.last(), values.last_mut()) {
+                    if last_j as usize == j {
+                        *last_v += v;
+                        continue;
+                    }
                 }
             }
             indices.push(j as u32);

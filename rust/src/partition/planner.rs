@@ -121,6 +121,13 @@ pub fn plan(rows: usize, cols: usize, cfg: &PlannerConfig) -> PartitionPlan {
     best.unwrap_or_else(|| PartitionPlan::whole(rows, cols))
 }
 
+/// [`plan`] for a [`crate::store::MatrixView`]: the planner only ever
+/// needs the dimensions, so a store-backed matrix is planned without
+/// touching a single chunk payload.
+pub fn plan_view(matrix: crate::store::MatrixView<'_>, cfg: &PlannerConfig) -> PartitionPlan {
+    plan(matrix.rows(), matrix.cols(), cfg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

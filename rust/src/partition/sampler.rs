@@ -74,6 +74,18 @@ pub fn sample_partition(rows: usize, cols: usize, plan: &PartitionPlan, rng: &mu
     rounds
 }
 
+/// [`sample_partition`] for a [`crate::store::MatrixView`]: sampling
+/// draws index permutations only, so a store-backed matrix is sampled
+/// without reading any data — the scheduler's per-block gathers are the
+/// first (and only) place chunk payloads are touched.
+pub fn sample_partition_view(
+    matrix: crate::store::MatrixView<'_>,
+    plan: &PartitionPlan,
+    rng: &mut Xoshiro256,
+) -> Vec<SamplingRound> {
+    sample_partition(matrix.rows(), matrix.cols(), plan, rng)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -11,11 +11,11 @@ use anyhow::Result;
 
 use crate::cocluster::{AtomCocluster, Pnmtf, SpectralCocluster};
 use crate::coordinator::{run_rounds, Router, SchedulerConfig, Stats, StatsSnapshot};
-use crate::matrix::Matrix;
 use crate::merge::{extract_labels, merge_coclusters, Cocluster, MergeConfig};
-use crate::partition::{plan, sample_partition, BlockJob, PartitionPlan, PlannerConfig};
+use crate::partition::{plan_view, sample_partition_view, BlockJob, PartitionPlan, PlannerConfig};
 #[cfg(feature = "pjrt")]
 use crate::runtime::RuntimePool;
+use crate::store::MatrixView;
 
 /// Which atom algorithm runs inside each block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -141,8 +141,13 @@ impl Lamc {
         atoms
     }
 
-    /// Run the full pipeline on a matrix.
-    pub fn run(&self, matrix: &Matrix) -> Result<LamcResult> {
+    /// Run the full pipeline on a matrix — in-memory (`&Matrix`, as
+    /// before) or store-backed (`&MatrixRef` / `&StoreReader`): block
+    /// gathers then stream row-band tiles from disk instead of copying
+    /// from RAM, with byte-identical labels for equal content, seed and
+    /// config (asserted by `tests/integration_store.rs`).
+    pub fn run<'a>(&self, matrix: impl Into<MatrixView<'a>>) -> Result<LamcResult> {
+        let matrix: MatrixView<'a> = matrix.into();
         let t0 = Instant::now();
         let cfg = &self.config;
         let (rows, cols) = (matrix.rows(), matrix.cols());
@@ -163,16 +168,17 @@ impl Lamc {
         if planner.workers == 0 {
             planner.workers = SchedulerConfig { workers: cfg.workers, ..Default::default() }.effective_workers();
         }
-        let partition_plan = plan(rows, cols, &planner);
+        let partition_plan = plan_view(matrix, &planner);
         crate::log_info!(
             "plan: {}x{} grid of {}x{} blocks, T_p={} (P={:.4}, {} blocks total)",
             partition_plan.m, partition_plan.n, partition_plan.phi, partition_plan.psi,
             partition_plan.t_p, partition_plan.certified_probability, partition_plan.total_blocks()
         );
 
-        // 2. Sample shuffled partitions.
+        // 2. Sample shuffled partitions (index permutations only — no
+        //    data is read here, wherever the matrix lives).
         let mut rng = crate::coordinator::scheduler::leader_rng(cfg.seed);
-        let rounds = sample_partition(rows, cols, &partition_plan, &mut rng);
+        let rounds = sample_partition_view(matrix, &partition_plan, &mut rng);
 
         // 3. Schedule block jobs.
         let atom = cfg.atom_override.clone().unwrap_or_else(|| cfg.atom.build());
@@ -218,14 +224,20 @@ impl Lamc {
     /// holds the atom co-clusters of the single whole-matrix job (via
     /// [`Lamc::block_to_atoms`]) and `stats` reflects the one executed
     /// block, so callers and the harness can treat both paths uniformly.
-    pub fn run_baseline(&self, matrix: &Matrix) -> Result<LamcResult> {
+    ///
+    /// Unlike the partitioned path, the baseline needs the whole matrix
+    /// at once: a store-backed input is materialized into RAM first
+    /// (this is exactly the memory wall the partitioned path avoids).
+    pub fn run_baseline<'a>(&self, matrix: impl Into<MatrixView<'a>>) -> Result<LamcResult> {
+        let matrix: MatrixView<'a> = matrix.into();
         let t0 = Instant::now();
         let cfg = &self.config;
         let atom = cfg.atom_override.clone().unwrap_or_else(|| cfg.atom.build());
         let stats = Stats::default();
         let mut rng = crate::rng::Xoshiro256::seed_from(cfg.seed);
+        let whole = matrix.materialize()?;
         let t_exec = Instant::now();
-        let res = atom.cocluster(matrix, cfg.k, &mut rng);
+        let res = atom.cocluster(&whole, cfg.k, &mut rng);
         stats.add_exec(t_exec.elapsed().as_nanos() as u64);
         stats.blocks_total.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         stats.blocks_native.fetch_add(1, std::sync::atomic::Ordering::Relaxed);

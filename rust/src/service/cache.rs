@@ -1,15 +1,32 @@
-//! Byte-bounded LRU cache for finished co-clustering results.
+//! Byte-bounded LRU cache for finished co-clustering results, with
+//! optional spill-to-disk persistence.
 //!
 //! Repeated-analysis workloads re-cluster the same matrix under the same
 //! configuration many times (parameter sweeps, dashboards, retries); the
 //! service answers those from memory. Keys combine a content hash of the
-//! input matrix (`Matrix::fingerprint`, SplitMix64-mixed) with a
-//! canonical hash of the job configuration, so any change to either the
-//! data or the requested clustering invalidates the entry.
+//! input matrix (`Matrix::fingerprint` or the store header fingerprint,
+//! SplitMix64-mixed) with a canonical hash of the job configuration, so
+//! any change to either the data or the requested clustering
+//! invalidates the entry.
+//!
+//! With a persistence directory configured (the service's
+//! `--store-root`), every insert is also written to
+//! `<dir>/<matrix>-<config>.lamcres` and a memory miss falls through to
+//! disk — so cached results survive a `ServiceManager` restart. The
+//! memory tier stays byte-bounded; the disk tier is the durable record
+//! (eviction from memory never deletes a spilled file). Disk entries
+//! are checksummed; a damaged file is treated as a miss, never an error.
 
 use std::collections::HashMap;
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::store::checksum_bytes;
 
 /// Cache key: (matrix content hash, canonical config hash).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -36,6 +53,9 @@ impl JobOutput {
     }
 }
 
+/// Magic of a spilled result file.
+const RESULT_MAGIC: &[u8; 8] = b"LAMCRES1";
+
 struct Entry {
     value: Arc<JobOutput>,
     bytes: usize,
@@ -48,16 +68,33 @@ struct CacheInner {
     tick: u64,
 }
 
-/// Thread-safe LRU result cache bounded by total payload bytes.
+/// Thread-safe LRU result cache bounded by total payload bytes, with an
+/// optional disk tier.
 ///
 /// Hit/miss accounting deliberately lives with the caller (the service
 /// manager counts into `coordinator::Stats`, the type that already
 /// carries run telemetry) — the cache itself only tracks what nobody
-/// else can observe: evictions and resident bytes.
+/// else can observe: evictions, resident bytes, disk loads/spill
+/// failures.
 pub struct ResultCache {
     inner: Mutex<CacheInner>,
     capacity_bytes: usize,
     evictions: AtomicU64,
+    persist_dir: Option<PathBuf>,
+    /// Disk-tier byte budget; 0 = unbounded (no pruning).
+    disk_capacity_bytes: usize,
+    /// Entries answered from the disk tier after a memory miss.
+    disk_hits: AtomicU64,
+    /// Spilled files pruned to keep the disk tier inside its budget.
+    disk_evictions: AtomicU64,
+    /// Spill/load failures (I/O or checksum); never fatal.
+    persist_errors: AtomicU64,
+    tmp_counter: AtomicU64,
+    /// Bytes spilled since the last directory prune; pruning re-scans
+    /// the directory only once this passes a fraction of the budget
+    /// (seeded to `u64::MAX` so the first spill always prunes — the
+    /// directory may already be over budget from a previous life).
+    spilled_since_prune: AtomicU64,
 }
 
 impl ResultCache {
@@ -66,27 +103,148 @@ impl ResultCache {
             inner: Mutex::new(CacheInner { map: HashMap::new(), bytes: 0, tick: 0 }),
             capacity_bytes,
             evictions: AtomicU64::new(0),
+            persist_dir: None,
+            disk_capacity_bytes: 0,
+            disk_hits: AtomicU64::new(0),
+            disk_evictions: AtomicU64::new(0),
+            persist_errors: AtomicU64::new(0),
+            tmp_counter: AtomicU64::new(0),
+            spilled_since_prune: AtomicU64::new(u64::MAX),
         }
     }
 
-    /// Look up a result, refreshing its recency.
-    pub fn get(&self, key: &CacheKey) -> Option<Arc<JobOutput>> {
-        let mut inner = self.inner.lock().unwrap();
-        inner.tick += 1;
-        let tick = inner.tick;
-        match inner.map.get_mut(key) {
-            Some(e) => {
-                e.last_used = tick;
-                Some(Arc::clone(&e.value))
+    /// A cache whose entries also spill to `dir` and are read back after
+    /// a restart. If `dir` cannot be created, persistence is disabled
+    /// (with a warning) rather than failing service startup.
+    ///
+    /// `disk_capacity_bytes` bounds the spill directory: after each
+    /// spill, the oldest `.lamcres` files are pruned until the directory
+    /// fits the budget again, so a long-lived config-sweep workload
+    /// cannot fill the disk. 0 = unbounded (caller opts out explicitly).
+    pub fn with_persistence(capacity_bytes: usize, dir: PathBuf, disk_capacity_bytes: usize) -> Self {
+        let mut cache = Self::new(capacity_bytes);
+        match std::fs::create_dir_all(&dir) {
+            Ok(()) => {
+                // Sweep tmp files orphaned by a crash mid-spill in a
+                // previous life — they are invisible to the `.lamcres`
+                // pruner and would otherwise accumulate forever.
+                if let Ok(entries) = std::fs::read_dir(&dir) {
+                    for entry in entries.flatten() {
+                        let name = entry.file_name();
+                        if name.to_string_lossy().starts_with(".tmp-") {
+                            let _ = std::fs::remove_file(entry.path());
+                        }
+                    }
+                }
+                cache.persist_dir = Some(dir);
+                cache.disk_capacity_bytes = disk_capacity_bytes;
             }
-            None => None,
+            Err(e) => {
+                crate::log_warn!("result-cache persistence disabled: cannot create {dir:?}: {e}");
+            }
+        }
+        cache
+    }
+
+    /// Where entries spill, when persistence is on.
+    pub fn persist_dir(&self) -> Option<&Path> {
+        self.persist_dir.as_deref()
+    }
+
+    /// Look up a result, refreshing its recency. A memory miss falls
+    /// through to the disk tier (when configured), promoting any spilled
+    /// entry back into memory.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<JobOutput>> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.map.get_mut(key) {
+                e.last_used = tick;
+                return Some(Arc::clone(&e.value));
+            }
+        }
+        let dir = self.persist_dir.as_ref()?;
+        let path = entry_path(dir, key);
+        if !path.exists() {
+            return None;
+        }
+        match read_output(&path) {
+            Ok(output) => {
+                self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                let output = Arc::new(output);
+                self.insert_memory(*key, Arc::clone(&output));
+                Some(output)
+            }
+            Err(e) => {
+                self.persist_errors.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!("ignoring damaged cache spill {path:?}: {e:#}");
+                None
+            }
         }
     }
 
-    /// Insert a result, evicting least-recently-used entries until the
-    /// byte budget holds. Values larger than the whole budget are not
-    /// cached at all.
+    /// Insert a result, evicting least-recently-used memory entries
+    /// until the byte budget holds, and spilling to disk when
+    /// persistence is on. Values larger than the whole memory budget
+    /// skip the memory tier but still spill.
     pub fn put(&self, key: CacheKey, value: Arc<JobOutput>) {
+        self.insert_memory(key, Arc::clone(&value));
+        if let Some(dir) = &self.persist_dir {
+            if let Err(e) = self.spill(dir, &key, &value) {
+                self.persist_errors.fetch_add(1, Ordering::Relaxed);
+                crate::log_warn!("result-cache spill failed for {key:?}: {e:#}");
+            }
+            self.prune_disk(dir);
+        }
+    }
+
+    /// Keep the spill directory inside its byte budget by deleting the
+    /// oldest `.lamcres` files first (mtime order — spill recency, which
+    /// rename refreshes on re-computation). Best-effort: I/O errors are
+    /// skipped, never raised. The directory re-scan is amortized: it
+    /// only runs once enough new bytes have spilled to matter (1/16 of
+    /// the budget), not on every insert.
+    fn prune_disk(&self, dir: &Path) {
+        if self.disk_capacity_bytes == 0 {
+            return;
+        }
+        let threshold = (self.disk_capacity_bytes as u64 / 16).max(1);
+        if self.spilled_since_prune.load(Ordering::Relaxed) < threshold {
+            return;
+        }
+        self.spilled_since_prune.store(0, Ordering::Relaxed);
+        let Ok(entries) = std::fs::read_dir(dir) else {
+            return;
+        };
+        let mut files: Vec<(std::time::SystemTime, u64, PathBuf)> = Vec::new();
+        let mut total = 0u64;
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("lamcres") {
+                continue;
+            }
+            let Ok(meta) = entry.metadata() else { continue };
+            let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            total += meta.len();
+            files.push((mtime, meta.len(), path));
+        }
+        if total <= self.disk_capacity_bytes as u64 {
+            return;
+        }
+        files.sort_by(|a, b| a.0.cmp(&b.0));
+        for (_, len, path) in files {
+            if total <= self.disk_capacity_bytes as u64 {
+                break;
+            }
+            if std::fs::remove_file(&path).is_ok() {
+                total -= len;
+                self.disk_evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn insert_memory(&self, key: CacheKey, value: Arc<JobOutput>) {
         let bytes = value.approx_bytes();
         if bytes > self.capacity_bytes {
             return;
@@ -115,8 +273,51 @@ impl ResultCache {
         }
     }
 
+    /// Write-then-rename so a crash mid-write can never leave a
+    /// half-written file under the final name.
+    fn spill(&self, dir: &Path, key: &CacheKey, value: &JobOutput) -> Result<()> {
+        let tmp = dir.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            self.tmp_counter.fetch_add(1, Ordering::Relaxed)
+        ));
+        let result = write_output(&tmp, value)
+            .and_then(|()| {
+                let path = entry_path(dir, key);
+                std::fs::rename(&tmp, &path).with_context(|| format!("rename into {path:?}"))
+            });
+        if result.is_err() {
+            // Never leave a half-written tmp behind: it is invisible to
+            // the `.lamcres` pruner and would accumulate forever.
+            let _ = std::fs::remove_file(&tmp);
+        } else {
+            // Track new bytes so prune_disk knows when a re-scan is due.
+            // Saturating (not wrapping) add: the counter is seeded to
+            // u64::MAX so the first spill of a process always prunes.
+            let bytes = (4 + value.row_labels.len() + value.col_labels.len()) as u64 * 8 + 16;
+            let prev = self.spilled_since_prune.load(Ordering::Relaxed);
+            self.spilled_since_prune.store(prev.saturating_add(bytes), Ordering::Relaxed);
+        }
+        result
+    }
+
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Entries served from the disk tier (restart survivors).
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits.load(Ordering::Relaxed)
+    }
+
+    /// Spilled files pruned to keep the disk tier inside its budget.
+    pub fn disk_evictions(&self) -> u64 {
+        self.disk_evictions.load(Ordering::Relaxed)
+    }
+
+    /// Spill/load failures so far (damaged files, full disk, …).
+    pub fn persist_errors(&self) -> u64 {
+        self.persist_errors.load(Ordering::Relaxed)
     }
 
     pub fn len(&self) -> usize {
@@ -127,7 +328,7 @@ impl ResultCache {
         self.len() == 0
     }
 
-    /// Current payload bytes held.
+    /// Current payload bytes held in memory.
     pub fn bytes(&self) -> usize {
         self.inner.lock().unwrap().bytes
     }
@@ -135,6 +336,68 @@ impl ResultCache {
     pub fn capacity_bytes(&self) -> usize {
         self.capacity_bytes
     }
+}
+
+fn entry_path(dir: &Path, key: &CacheKey) -> PathBuf {
+    dir.join(format!("{:016x}-{:016x}.lamcres", key.matrix, key.config))
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Serialize: magic, then a checksummed body of
+/// `k, elapsed_bits, n_rows, n_cols, rows…, cols…` as LE `u64`s.
+fn write_output(path: &Path, out: &JobOutput) -> Result<()> {
+    let mut body =
+        Vec::with_capacity((4 + out.row_labels.len() + out.col_labels.len()) * 8);
+    push_u64(&mut body, out.k as u64);
+    push_u64(&mut body, out.elapsed_s.to_bits());
+    push_u64(&mut body, out.row_labels.len() as u64);
+    push_u64(&mut body, out.col_labels.len() as u64);
+    for &l in out.row_labels.iter().chain(&out.col_labels) {
+        push_u64(&mut body, l as u64);
+    }
+    let mut f = File::create(path).with_context(|| format!("create {path:?}"))?;
+    f.write_all(RESULT_MAGIC)?;
+    f.write_all(&checksum_bytes(&body).to_le_bytes())?;
+    f.write_all(&body)?;
+    f.sync_data()?;
+    Ok(())
+}
+
+fn read_output(path: &Path) -> Result<JobOutput> {
+    let mut f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != RESULT_MAGIC {
+        bail!("bad result magic");
+    }
+    let mut ck = [0u8; 8];
+    f.read_exact(&mut ck)?;
+    let want = u64::from_le_bytes(ck);
+    let mut body = Vec::new();
+    f.read_to_end(&mut body)?;
+    if checksum_bytes(&body) != want {
+        bail!("result checksum mismatch");
+    }
+    if body.len() < 32 || body.len() % 8 != 0 {
+        bail!("result body has {} bytes", body.len());
+    }
+    let word = |i: usize| {
+        let b = &body[i * 8..i * 8 + 8];
+        u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+    };
+    let k = word(0) as usize;
+    let elapsed_s = f64::from_bits(word(1));
+    let n_rows = word(2) as usize;
+    let n_cols = word(3) as usize;
+    if body.len() != (4 + n_rows + n_cols) * 8 {
+        bail!("result body length does not match label counts");
+    }
+    let row_labels = (0..n_rows).map(|i| word(4 + i) as usize).collect();
+    let col_labels = (0..n_cols).map(|i| word(4 + n_rows + i) as usize).collect();
+    Ok(JobOutput { row_labels, col_labels, k, elapsed_s })
 }
 
 #[cfg(test)]
@@ -147,6 +410,13 @@ mod tests {
 
     fn key(m: u64, c: u64) -> CacheKey {
         CacheKey { matrix: m, config: c }
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("lamc_cache_tests").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
     }
 
     #[test]
@@ -201,5 +471,102 @@ mod tests {
         cache.put(key(1, 0), output(50));
         assert!(cache.bytes() < b1);
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn spilled_entries_survive_a_new_cache() {
+        let dir = tmp_dir("survive");
+        let value = Arc::new(JobOutput {
+            row_labels: vec![0, 2, 1],
+            col_labels: vec![1, 0],
+            k: 3,
+            elapsed_s: 1.25,
+        });
+        {
+            let cache = ResultCache::with_persistence(1 << 20, dir.clone(), 0);
+            cache.put(key(7, 9), Arc::clone(&value));
+        } // old cache dropped — simulated restart
+        let cache = ResultCache::with_persistence(1 << 20, dir, 0);
+        assert!(cache.is_empty(), "memory tier starts cold");
+        let got = cache.get(&key(7, 9)).expect("disk tier answers");
+        assert_eq!(&*got, &*value);
+        assert_eq!(cache.disk_hits(), 1);
+        // Promoted into memory: the next get is a memory hit.
+        cache.get(&key(7, 9)).unwrap();
+        assert_eq!(cache.disk_hits(), 1, "second get served from memory");
+        assert!(cache.get(&key(7, 8)).is_none(), "other keys still miss");
+    }
+
+    #[test]
+    fn damaged_spill_is_a_miss_not_an_error() {
+        let dir = tmp_dir("damaged");
+        let cache = ResultCache::with_persistence(1 << 20, dir.clone(), 0);
+        cache.put(key(1, 1), output(5));
+        // Corrupt the spilled file.
+        let path = super::entry_path(&dir, &key(1, 1));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let fresh = ResultCache::with_persistence(1 << 20, dir, 0);
+        assert!(fresh.get(&key(1, 1)).is_none());
+        assert_eq!(fresh.persist_errors(), 1);
+    }
+
+    #[test]
+    fn memory_eviction_keeps_disk_tier() {
+        let dir = tmp_dir("evict_keep");
+        let one = output(100).approx_bytes();
+        let cache = ResultCache::with_persistence(one + 1, dir, 0);
+        cache.put(key(1, 0), output(100));
+        cache.put(key(2, 0), output(100)); // evicts key 1 from memory
+        assert_eq!(cache.len(), 1);
+        // …but key 1 comes back from disk.
+        assert!(cache.get(&key(1, 0)).is_some());
+        assert_eq!(cache.disk_hits(), 1);
+    }
+
+    #[test]
+    fn disk_tier_is_pruned_to_its_budget() {
+        let dir = tmp_dir("prune");
+        // Budget fits roughly two spilled files of this size.
+        let spilled = (4 + 100 + 100) * 8 + 16;
+        let cache = ResultCache::with_persistence(1 << 20, dir.clone(), spilled * 2 + 8);
+        for i in 0..6u64 {
+            cache.put(key(i, 0), output(100));
+            // Keep mtimes distinguishable on coarse-granularity filesystems.
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        assert!(cache.disk_evictions() > 0, "old spills pruned");
+        let total: u64 = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.path().extension().and_then(|x| x.to_str()) == Some("lamcres"))
+            .map(|e| e.metadata().unwrap().len())
+            .sum();
+        assert!(total <= (spilled * 2 + 8) as u64, "disk tier within budget ({total} B)");
+        // The newest spill survives pruning.
+        assert!(cache.get(&key(5, 0)).is_some());
+    }
+
+    #[test]
+    fn unbounded_disk_tier_keeps_everything() {
+        let dir = tmp_dir("no_prune");
+        let cache = ResultCache::with_persistence(1 << 20, dir.clone(), 0);
+        for i in 0..4u64 {
+            cache.put(key(i, 0), output(50));
+        }
+        assert_eq!(cache.disk_evictions(), 0);
+        let n = std::fs::read_dir(&dir).unwrap().flatten().count();
+        assert_eq!(n, 4);
+    }
+
+    #[test]
+    fn output_codec_round_trips_empty_labels() {
+        let dir = tmp_dir("empty");
+        let path = dir.join("x.lamcres");
+        let out = JobOutput { row_labels: vec![], col_labels: vec![], k: 0, elapsed_s: 0.0 };
+        write_output(&path, &out).unwrap();
+        assert_eq!(read_output(&path).unwrap(), out);
     }
 }

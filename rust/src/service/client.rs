@@ -6,7 +6,7 @@
 //! in-tree users.
 
 use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
@@ -37,13 +37,17 @@ pub struct ResultReply {
 pub struct ServiceClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Auto-negotiated result framing: starts optimistic (binary
+    /// `RESULTB`); a server that answers "unknown verb" downgrades this
+    /// connection to the text `RESULT` path permanently.
+    binary_results: bool,
 }
 
 impl ServiceClient {
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
         let stream = TcpStream::connect(addr).context("connect to lamc service")?;
         let reader = BufReader::new(stream.try_clone().context("clone stream")?);
-        Ok(Self { reader, writer: stream })
+        Ok(Self { reader, writer: stream, binary_results: true })
     }
 
     fn send_line(&mut self, line: &str) -> Result<()> {
@@ -94,12 +98,43 @@ impl ServiceClient {
 
     /// Fetch a finished job's labels (errors while the job is queued or
     /// running — use [`ServiceClient::wait`] to block until done).
+    ///
+    /// Tries the binary `RESULTB` framing first — length-prefixed `u32`
+    /// labels with a checksum, no line-length ceiling — and falls back
+    /// to the text `RESULT` protocol against servers that predate it.
     pub fn result(&mut self, id: u64) -> Result<ResultReply> {
+        if self.binary_results {
+            match self.result_binary(id) {
+                Ok(reply) => return Ok(reply),
+                Err(e) if e.to_string().contains("unknown verb") => {
+                    // Legacy server: downgrade once, then use text.
+                    self.binary_results = false;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        self.result_text(id)
+    }
+
+    /// One header line, then `4·(rows+cols)+8` bytes of labels+checksum.
+    fn result_binary(&mut self, id: u64) -> Result<ResultReply> {
+        self.send_line(&format!("RESULTB id={id}"))?;
+        let header = self.read_line()?;
+        let map = Self::header_map(&header)?;
+        let k: usize = map.get("k").context("missing k")?.parse()?;
+        let rows: usize = map.get("rows").context("missing rows")?.parse()?;
+        let cols: usize = map.get("cols").context("missing cols")?.parse()?;
+        let cached = map.get("cached").map(|v| v == "true").unwrap_or(false);
+        let mut payload = vec![0u8; (rows + cols) * 4 + 8];
+        self.reader.read_exact(&mut payload).context("read binary result payload")?;
+        let (row_labels, col_labels) = protocol::decode_labels_binary(&payload, rows, cols)?;
+        Ok(ResultReply { id, k, row_labels, col_labels, cached })
+    }
+
+    fn result_text(&mut self, id: u64) -> Result<ResultReply> {
         self.send_line(&format!("RESULT id={id}"))?;
         let header = self.read_line()?;
-        let rest = protocol::check_ok(&header)?.to_string();
-        let tokens: Vec<&str> = rest.split_whitespace().collect();
-        let map = protocol::kv_pairs(&tokens)?;
+        let map = Self::header_map(&header)?;
         let k: usize = map.get("k").context("missing k")?.parse()?;
         let cached = map.get("cached").map(|v| v == "true").unwrap_or(false);
 
@@ -116,6 +151,12 @@ impl ServiceClient {
             bail!("expected END terminator, got '{}'", end.trim());
         }
         Ok(ResultReply { id, k, row_labels, col_labels, cached })
+    }
+
+    fn header_map(header: &str) -> Result<BTreeMap<String, String>> {
+        let rest = protocol::check_ok(header)?.to_string();
+        let tokens: Vec<&str> = rest.split_whitespace().collect();
+        protocol::kv_pairs(&tokens)
     }
 
     /// Poll `STATUS` until the job is done (then fetch the result) or
@@ -160,6 +201,18 @@ impl ServiceClient {
         protocol::ensure_token("name", name)?;
         protocol::ensure_token("path", path)?;
         let map = self.kv_reply(&format!("LOAD name={name} path={path}"))?;
+        let r: usize = map.get("rows").context("missing rows")?.parse()?;
+        let c: usize = map.get("cols").context("missing cols")?.parse()?;
+        Ok((r, c))
+    }
+
+    /// Register a LAMC2 store file on the server as a disk-resident
+    /// matrix (jobs against it stream tiles out-of-core); returns
+    /// (rows, cols). Space-free path, as with [`ServiceClient::load_file`].
+    pub fn load_store(&mut self, name: &str, path: &str) -> Result<(usize, usize)> {
+        protocol::ensure_token("name", name)?;
+        protocol::ensure_token("store", path)?;
+        let map = self.kv_reply(&format!("LOAD name={name} store={path}"))?;
         let r: usize = map.get("rows").context("missing rows")?.parse()?;
         let c: usize = map.get("cols").context("missing cols")?.parse()?;
         Ok((r, c))

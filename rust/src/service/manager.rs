@@ -10,10 +10,11 @@
 //! answered without touching the pipeline at all.
 
 use std::collections::{HashMap, VecDeque};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -21,6 +22,7 @@ use crate::coordinator::Stats;
 use crate::matrix::Matrix;
 use crate::pipeline::{AtomKind, Lamc, LamcConfig};
 use crate::rng::{mix64 as mix, mix64_str as mix_str};
+use crate::store::MatrixRef;
 
 use super::cache::{CacheKey, JobOutput, ResultCache};
 
@@ -152,6 +154,8 @@ pub struct JobRecord {
     pub cached: bool,
     pub error: Option<String>,
     pub result: Option<Arc<JobOutput>>,
+    /// When the job reached `Done`/`Failed` — the TTL sweep's clock.
+    pub finished_at: Option<Instant>,
 }
 
 /// Bounded MPMC queue (Mutex + Condvar): the service's backpressure
@@ -267,19 +271,40 @@ pub struct ServiceConfig {
     pub runners: usize,
     /// Bounded queue capacity: submissions beyond this are rejected.
     pub queue_capacity: usize,
-    /// Result-cache byte budget.
+    /// Result-cache byte budget (memory tier).
     pub cache_capacity_bytes: usize,
+    /// Durable state directory. When set, finished results spill to
+    /// `<root>/results` and survive a manager restart (`ResultCache`'s
+    /// disk tier). `lamc serve --store-root` sets this.
+    pub store_root: Option<PathBuf>,
+    /// Byte budget for the spill directory (disk tier): oldest spills
+    /// are pruned past it, so a config-sweep workload cannot fill the
+    /// disk. 0 = unbounded. Ignored without `store_root`.
+    pub cache_disk_capacity_bytes: usize,
+    /// Retention for finished (`Done`/`Failed`) job records. The sweep
+    /// runs on every submission, so a long-lived server's job map stays
+    /// bounded by its recent traffic instead of growing forever.
+    /// `None` keeps records until shutdown.
+    pub job_ttl: Option<Duration>,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        Self { runners: 2, queue_capacity: 64, cache_capacity_bytes: 64 << 20 }
+        Self {
+            runners: 2,
+            queue_capacity: 64,
+            cache_capacity_bytes: 64 << 20,
+            store_root: None,
+            cache_disk_capacity_bytes: 512 << 20,
+            job_ttl: Some(Duration::from_secs(3600)),
+        }
     }
 }
 
 struct MatrixEntry {
-    matrix: Arc<Matrix>,
-    /// Content hash, computed once at registration.
+    matrix: MatrixRef,
+    /// Content hash, computed once at registration (O(1) for
+    /// store-backed matrices: it comes from the store header).
     fingerprint: u64,
 }
 
@@ -292,6 +317,7 @@ struct Inner {
     /// per-run block/time counters from every pipeline execution.
     stats: Stats,
     next_id: AtomicU64,
+    job_ttl: Option<Duration>,
 }
 
 /// Handle to the service core. Cloning shares the same service; the
@@ -304,13 +330,22 @@ pub struct ServiceManager {
 
 impl ServiceManager {
     pub fn new(config: ServiceConfig) -> Self {
+        let cache = match &config.store_root {
+            Some(root) => ResultCache::with_persistence(
+                config.cache_capacity_bytes,
+                root.join("results"),
+                config.cache_disk_capacity_bytes,
+            ),
+            None => ResultCache::new(config.cache_capacity_bytes),
+        };
         let inner = Arc::new(Inner {
             matrices: RwLock::new(HashMap::new()),
             jobs: RwLock::new(HashMap::new()),
             queue: BoundedQueue::new(config.queue_capacity),
-            cache: ResultCache::new(config.cache_capacity_bytes),
+            cache,
             stats: Stats::default(),
             next_id: AtomicU64::new(1),
+            job_ttl: config.job_ttl,
         });
         let mut handles = Vec::with_capacity(config.runners);
         for i in 0..config.runners {
@@ -328,13 +363,31 @@ impl ServiceManager {
         Self { inner, runners: Arc::new(Mutex::new(handles)) }
     }
 
-    /// Register a matrix under a name (replacing any previous binding).
-    /// Computes and memoizes the content fingerprint.
+    /// Register an in-memory matrix under a name (replacing any previous
+    /// binding). Computes and memoizes the content fingerprint.
     pub fn register(&self, name: &str, matrix: Matrix) -> u64 {
+        self.register_ref(name, MatrixRef::in_mem(matrix))
+    }
+
+    /// Register a matrix handle — in-memory or store-backed — under a
+    /// name. Store-backed registration is O(1): the fingerprint comes
+    /// from the store header, never a payload scan.
+    pub fn register_ref(&self, name: &str, matrix: MatrixRef) -> u64 {
         let fingerprint = matrix.fingerprint();
-        let entry = MatrixEntry { matrix: Arc::new(matrix), fingerprint };
+        let entry = MatrixEntry { matrix, fingerprint };
         self.inner.matrices.write().unwrap().insert(name.to_string(), entry);
         fingerprint
+    }
+
+    /// Register a LAMC2 store file as a disk-resident matrix: the
+    /// pipeline will stream row-band tiles from it instead of holding
+    /// the matrix in RAM. Returns (rows, cols).
+    pub fn register_store(&self, name: &str, path: &Path) -> Result<(usize, usize)> {
+        let matrix = MatrixRef::open_store(path)?;
+        let shape = (matrix.rows(), matrix.cols());
+        self.register_ref(name, matrix);
+        crate::log_info!("registered store {path:?} as '{name}' ({} x {})", shape.0, shape.1);
+        Ok(shape)
     }
 
     /// Register a named dataset spec (`amazon1000`, `classic4`,
@@ -347,17 +400,25 @@ impl ServiceManager {
         Ok(shape)
     }
 
-    /// Register a matrix loaded from disk: the LAMC binary format, or
-    /// MatrixMarket when the path ends in `.mtx`.
+    /// Register a matrix loaded from disk: a LAMC2 store (kept
+    /// disk-resident), MatrixMarket when the path ends in `.mtx`, or the
+    /// LAMC binary format otherwise (both materialized into RAM).
     pub fn load_file(&self, name: &str, path: &Path) -> Result<(usize, usize)> {
-        let matrix = if path.extension().and_then(|e| e.to_str()) == Some("mtx") {
-            Matrix::Sparse(crate::matrix::io::read_matrix_market(path)?)
-        } else {
-            crate::matrix::io::load(path)?
-        };
-        let shape = (matrix.rows(), matrix.cols());
-        self.register(name, matrix);
-        Ok(shape)
+        match path.extension().and_then(|e| e.to_str()) {
+            Some("lamc2") => self.register_store(name, path),
+            Some("mtx") => {
+                let matrix = Matrix::Sparse(crate::matrix::io::read_matrix_market(path)?);
+                let shape = (matrix.rows(), matrix.cols());
+                self.register(name, matrix);
+                Ok(shape)
+            }
+            _ => {
+                let matrix = crate::matrix::io::load(path)?;
+                let shape = (matrix.rows(), matrix.cols());
+                self.register(name, matrix);
+                Ok(shape)
+            }
+        }
     }
 
     /// Names of registered matrices (sorted).
@@ -367,9 +428,9 @@ impl ServiceManager {
         names
     }
 
-    fn lookup_matrix(&self, name: &str) -> Result<(Arc<Matrix>, u64)> {
+    fn lookup_matrix(&self, name: &str) -> Result<(MatrixRef, u64)> {
         if let Some(e) = self.inner.matrices.read().unwrap().get(name) {
-            return Ok((Arc::clone(&e.matrix), e.fingerprint));
+            return Ok((e.matrix.clone(), e.fingerprint));
         }
         // Lazy auto-load: a matrix named after a built-in dataset spec is
         // generated on first reference (default seed 42, full size).
@@ -377,7 +438,7 @@ impl ServiceManager {
             crate::log_info!("auto-loading dataset '{name}' (seed 42)");
             self.load_dataset(name, name, None, 42)?;
             if let Some(e) = self.inner.matrices.read().unwrap().get(name) {
-                return Ok((Arc::clone(&e.matrix), e.fingerprint));
+                return Ok((e.matrix.clone(), e.fingerprint));
             }
         }
         bail!("no matrix named '{name}' is loaded")
@@ -387,6 +448,9 @@ impl ServiceManager {
     /// backpressure: a full queue rejects immediately (the client should
     /// retry later) rather than buffering unboundedly.
     pub fn submit(&self, spec: JobSpec) -> Result<u64> {
+        // Keep the job map bounded before growing it: every submission
+        // sweeps finished records past their TTL.
+        self.sweep_jobs();
         spec.partitioned()?; // validate method early
         spec.lamc_config()?;
         anyhow::ensure!(spec.k >= 1, "k must be ≥ 1");
@@ -399,6 +463,7 @@ impl ServiceManager {
             cached: false,
             error: None,
             result: None,
+            finished_at: None,
         };
         self.inner.jobs.write().unwrap().insert(id, record);
         if let Err((_, why)) = self.inner.queue.try_push(id) {
@@ -432,6 +497,23 @@ impl ServiceManager {
             }
         }
         c
+    }
+
+    /// Drop finished (`Done`/`Failed`) job records older than the
+    /// configured TTL; queued and running jobs are never touched.
+    /// Returns how many records were removed. Called automatically on
+    /// every submission; exposed for explicit maintenance and tests.
+    pub fn sweep_jobs(&self) -> usize {
+        let Some(ttl) = self.inner.job_ttl else {
+            return 0;
+        };
+        let mut jobs = self.inner.jobs.write().unwrap();
+        let before = jobs.len();
+        jobs.retain(|_, r| match r.finished_at {
+            Some(at) => at.elapsed() <= ttl,
+            None => true,
+        });
+        before - jobs.len()
     }
 
     /// Service-wide telemetry (cache counters + aggregated block stats).
@@ -503,10 +585,12 @@ fn run_job(inner: &Inner, id: u64) {
             r.state = JobState::Done;
             r.cached = cached;
             r.result = Some(output);
+            r.finished_at = Some(Instant::now());
         }),
         Err(e) => set_state(inner, id, |r| {
             r.state = JobState::Failed;
             r.error = Some(format!("{e:#}"));
+            r.finished_at = Some(Instant::now());
         }),
     }
 }
@@ -518,7 +602,7 @@ fn execute_spec(inner: &Inner, spec: &JobSpec) -> Result<(Arc<JobOutput>, bool)>
         let e = matrices
             .get(&spec.matrix)
             .with_context(|| format!("matrix '{}' disappeared before the job ran", spec.matrix))?;
-        (Arc::clone(&e.matrix), e.fingerprint)
+        (e.matrix.clone(), e.fingerprint)
     };
     let key = CacheKey { matrix: fingerprint, config: spec.config_hash() };
     if let Some(hit) = inner.cache.get(&key) {
@@ -614,6 +698,7 @@ mod tests {
             runners: 0,
             queue_capacity: 2,
             cache_capacity_bytes: 1 << 20,
+            ..Default::default()
         });
         mgr.register("m", small_matrix(1));
         let spec = |seed| JobSpec { matrix: "m".into(), seed, ..Default::default() };
@@ -633,6 +718,7 @@ mod tests {
             runners: 1,
             queue_capacity: 8,
             cache_capacity_bytes: 8 << 20,
+            ..Default::default()
         });
         mgr.register("m", small_matrix(2));
         let spec = JobSpec { matrix: "m".into(), k: 3, seed: 9, ..Default::default() };
@@ -660,6 +746,7 @@ mod tests {
             runners: 1,
             queue_capacity: 4,
             cache_capacity_bytes: 1 << 20,
+            ..Default::default()
         });
         // Unknown matrix fails at submit time.
         let err = mgr.submit(JobSpec { matrix: "ghost".into(), ..Default::default() }).unwrap_err();
@@ -691,11 +778,54 @@ mod tests {
     }
 
     #[test]
+    fn ttl_sweep_drops_finished_records_only() {
+        let mgr = ServiceManager::new(ServiceConfig {
+            runners: 1,
+            queue_capacity: 8,
+            cache_capacity_bytes: 1 << 20,
+            job_ttl: Some(Duration::ZERO), // everything finished is stale
+            ..Default::default()
+        });
+        mgr.register("m", small_matrix(5));
+        let done = mgr.submit(JobSpec { matrix: "m".into(), k: 3, ..Default::default() }).unwrap();
+        assert_eq!(mgr.wait(done, Duration::from_secs(120)).unwrap().state, JobState::Done);
+        // The finished record is swept; nothing queued/running is.
+        assert_eq!(mgr.sweep_jobs(), 1);
+        assert!(mgr.job(done).is_none(), "finished record dropped after TTL");
+        assert_eq!(mgr.job_counts(), (0, 0, 0, 0));
+        // Submission triggers the sweep implicitly too.
+        let a = mgr.submit(JobSpec { matrix: "m".into(), k: 3, seed: 1, ..Default::default() }).unwrap();
+        mgr.wait(a, Duration::from_secs(120)).unwrap();
+        let b = mgr.submit(JobSpec { matrix: "m".into(), k: 3, seed: 2, ..Default::default() }).unwrap();
+        assert!(mgr.job(a).is_none(), "a was finished and stale at b's submission");
+        mgr.wait(b, Duration::from_secs(120)).unwrap();
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn no_ttl_keeps_finished_records() {
+        let mgr = ServiceManager::new(ServiceConfig {
+            runners: 1,
+            queue_capacity: 4,
+            cache_capacity_bytes: 1 << 20,
+            job_ttl: None,
+            ..Default::default()
+        });
+        mgr.register("m", small_matrix(6));
+        let id = mgr.submit(JobSpec { matrix: "m".into(), k: 3, ..Default::default() }).unwrap();
+        mgr.wait(id, Duration::from_secs(120)).unwrap();
+        assert_eq!(mgr.sweep_jobs(), 0);
+        assert!(mgr.job(id).is_some());
+        mgr.shutdown();
+    }
+
+    #[test]
     fn baseline_methods_run_through_the_service() {
         let mgr = ServiceManager::new(ServiceConfig {
             runners: 1,
             queue_capacity: 4,
             cache_capacity_bytes: 1 << 20,
+            ..Default::default()
         });
         mgr.register("m", small_matrix(4));
         let id = mgr

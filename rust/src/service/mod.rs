@@ -11,17 +11,25 @@
 //!   channel; `coordinator::run_rounds` executes on the shared global
 //!   pool, so thread startup is amortized across every request (batch
 //!   CLI runs included).
-//! * [`ServiceManager`] — owns a named-matrix registry (with memoized
-//!   `Matrix::fingerprint` content hashes), a bounded job queue for
-//!   backpressure, runner threads, and per-job `Queued → Running →
-//!   Done/Failed` state.
+//! * [`ServiceManager`] — owns a named-matrix registry of
+//!   [`MatrixRef`](crate::store::MatrixRef) handles (in-memory matrices
+//!   with memoized `Matrix::fingerprint` hashes, or disk-resident LAMC2
+//!   stores whose fingerprint is read from the header in O(1)), a
+//!   bounded job queue for backpressure, runner threads, per-job
+//!   `Queued → Running → Done/Failed` state, and a TTL sweep that keeps
+//!   the job map bounded on long-lived servers.
 //! * [`ResultCache`] — byte-bounded LRU keyed by (matrix fingerprint,
 //!   canonical config hash): an identical re-submission is answered
 //!   without running the pipeline, with hit/miss counters surfaced
-//!   through `coordinator::Stats`.
+//!   through `coordinator::Stats`. With a `--store-root` configured,
+//!   entries spill to disk and survive a restart.
 //! * [`protocol`] / [`ServiceServer`] / [`ServiceClient`] — a
-//!   `SUBMIT`/`STATUS`/`RESULT`/`STATS`/`LOAD`/`SHUTDOWN` line protocol
-//!   over `std::net`, thread-per-connection, with a blocking client.
+//!   `SUBMIT`/`STATUS`/`RESULT`/`RESULTB`/`STATS`/`LOAD`/`SHUTDOWN`
+//!   protocol over `std::net`, thread-per-connection, with a blocking
+//!   client. Control verbs are text lines; `RESULTB` answers with a
+//!   length-prefixed binary label block (no line-length ceiling) and
+//!   clients fall back to text `RESULT` against older servers; `LOAD`
+//!   accepts `dataset=`, `path=` or `store=` sources.
 //!
 //! Wire format and operational knobs are documented in
 //! `docs/SERVICE.md`; the `lamc serve` / `lamc submit` / `lamc status`

@@ -38,10 +38,25 @@ pub enum Request {
     Submit(JobSpec),
     Status { id: u64 },
     Result { id: u64 },
+    /// Binary result framing (`RESULTB`): the success response is one
+    /// `OK` header line followed by a length-prefixed binary block (see
+    /// [`encode_labels_binary`]) instead of `ROWS`/`COLS` text lines —
+    /// RCV1-scale label vectors ship in 4 bytes per label with no line
+    /// length ceiling. Clients auto-negotiate: an old server answers
+    /// `ERR unknown verb…` and the client falls back to `RESULT`.
+    ResultBinary { id: u64 },
     Stats,
-    /// Load a matrix into the registry: from a named dataset spec or a
-    /// file path (exactly one of `dataset`/`path` must be given).
-    Load { name: String, dataset: Option<String>, path: Option<String>, rows: Option<usize>, seed: u64 },
+    /// Load a matrix into the registry: from a named dataset spec, a
+    /// matrix file path, or a LAMC2 store (kept disk-resident). Exactly
+    /// one of `dataset`/`path`/`store` must be given.
+    Load {
+        name: String,
+        dataset: Option<String>,
+        path: Option<String>,
+        store: Option<String>,
+        rows: Option<usize>,
+        seed: u64,
+    },
     Shutdown,
 }
 
@@ -123,6 +138,11 @@ pub fn parse_request(line: &str) -> Result<Request> {
             check_known(&map, &["id"])?;
             Ok(Request::Result { id: require_id(&map)? })
         }
+        "RESULTB" => {
+            let map = kv_pairs(&rest)?;
+            check_known(&map, &["id"])?;
+            Ok(Request::ResultBinary { id: require_id(&map)? })
+        }
         "STATS" => {
             if !rest.is_empty() {
                 bail!("STATS takes no fields");
@@ -131,17 +151,20 @@ pub fn parse_request(line: &str) -> Result<Request> {
         }
         "LOAD" => {
             let map = kv_pairs(&rest)?;
-            check_known(&map, &["name", "dataset", "path", "rows", "seed"])?;
+            check_known(&map, &["name", "dataset", "path", "store", "rows", "seed"])?;
             let name = map.get("name").context("missing name=")?.clone();
             let dataset = map.get("dataset").cloned();
             let path = map.get("path").cloned();
-            if dataset.is_some() == path.is_some() {
-                bail!("LOAD needs exactly one of dataset= or path=");
+            let store = map.get("store").cloned();
+            let sources = [dataset.is_some(), path.is_some(), store.is_some()];
+            if sources.iter().filter(|&&s| s).count() != 1 {
+                bail!("LOAD needs exactly one of dataset=, path= or store=");
             }
             Ok(Request::Load {
                 name,
                 dataset,
                 path,
+                store,
                 rows: get_usize(&map, "rows")?,
                 seed: get_u64(&map, "seed")?.unwrap_or(42),
             })
@@ -152,7 +175,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
             }
             Ok(Request::Shutdown)
         }
-        other => bail!("unknown verb '{other}' (want SUBMIT|STATUS|RESULT|STATS|LOAD|SHUTDOWN)"),
+        other => bail!("unknown verb '{other}' (want SUBMIT|STATUS|RESULT|RESULTB|STATS|LOAD|SHUTDOWN)"),
     }
 }
 
@@ -191,6 +214,42 @@ pub fn encode_labels(labels: &[usize]) -> String {
         out.push_str(&l.to_string());
     }
     out
+}
+
+/// Encode both label vectors as the binary `RESULTB` payload:
+/// `u32` LE per label (row labels then column labels), then a trailing
+/// `u64` LE checksum over the label bytes. The header line's `rows=` /
+/// `cols=` counts are the length prefix, so there is no terminator and
+/// no line-length ceiling — a 10M-row labelling is 40 MB of payload
+/// instead of an unbounded comma-separated text line.
+pub fn encode_labels_binary(row_labels: &[usize], col_labels: &[usize]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity((row_labels.len() + col_labels.len()) * 4 + 8);
+    for &l in row_labels.iter().chain(col_labels) {
+        let l32 = u32::try_from(l).map_err(|_| anyhow::anyhow!("label {l} exceeds u32 range"))?;
+        out.extend_from_slice(&l32.to_le_bytes());
+    }
+    let ck = crate::store::checksum_bytes(&out);
+    out.extend_from_slice(&ck.to_le_bytes());
+    Ok(out)
+}
+
+/// Decode a `RESULTB` payload (`rows`/`cols` from the header line).
+pub fn decode_labels_binary(bytes: &[u8], rows: usize, cols: usize) -> Result<(Vec<usize>, Vec<usize>)> {
+    let want = (rows + cols) * 4 + 8;
+    if bytes.len() != want {
+        bail!("binary result payload has {} bytes, want {want}", bytes.len());
+    }
+    let (labels, ck) = bytes.split_at(bytes.len() - 8);
+    if crate::store::checksum_bytes(labels) != u64::from_le_bytes(ck.try_into().unwrap()) {
+        bail!("binary result payload failed its checksum");
+    }
+    let decode = |range: std::ops::Range<usize>| -> Vec<usize> {
+        labels[range.start * 4..range.end * 4]
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]) as usize)
+            .collect()
+    };
+    Ok((decode(0..rows), decode(rows..rows + cols)))
 }
 
 /// Decode a `ROWS`/`COLS` payload back into labels.
@@ -260,6 +319,7 @@ mod tests {
     fn simple_verbs() {
         assert_eq!(parse_request("STATUS id=7").unwrap(), Request::Status { id: 7 });
         assert_eq!(parse_request("RESULT id=1").unwrap(), Request::Result { id: 1 });
+        assert_eq!(parse_request("RESULTB id=2").unwrap(), Request::ResultBinary { id: 2 });
         assert_eq!(parse_request("STATS").unwrap(), Request::Stats);
         assert_eq!(parse_request("SHUTDOWN\n").unwrap(), Request::Shutdown);
     }
@@ -268,8 +328,11 @@ mod tests {
     fn load_requires_exactly_one_source() {
         assert!(parse_request("LOAD name=x dataset=amazon1000").is_ok());
         assert!(parse_request("LOAD name=x path=/tmp/m.lamc rows=100").is_ok());
+        assert!(parse_request("LOAD name=x store=/tmp/m.lamc2").is_ok());
         assert!(parse_request("LOAD name=x").is_err());
         assert!(parse_request("LOAD name=x dataset=a path=b").is_err());
+        assert!(parse_request("LOAD name=x dataset=a store=b").is_err());
+        assert!(parse_request("LOAD name=x path=a store=b").is_err());
     }
 
     #[test]
@@ -299,6 +362,31 @@ mod tests {
         assert_eq!(decode_labels(&encode_labels(&labels)).unwrap(), labels);
         assert_eq!(decode_labels("").unwrap(), Vec::<usize>::new());
         assert!(decode_labels("1,x,2").is_err());
+    }
+
+    #[test]
+    fn binary_label_codec_round_trip() {
+        let rows = vec![0usize, 3, 1, 1, 2, 0, 7];
+        let cols = vec![2usize, 2, 0];
+        let bytes = encode_labels_binary(&rows, &cols).unwrap();
+        assert_eq!(bytes.len(), (rows.len() + cols.len()) * 4 + 8);
+        let (r2, c2) = decode_labels_binary(&bytes, rows.len(), cols.len()).unwrap();
+        assert_eq!(r2, rows);
+        assert_eq!(c2, cols);
+        // Empty labellings frame fine too.
+        let empty = encode_labels_binary(&[], &[]).unwrap();
+        assert_eq!(decode_labels_binary(&empty, 0, 0).unwrap(), (vec![], vec![]));
+    }
+
+    #[test]
+    fn binary_label_codec_rejects_damage() {
+        let bytes = encode_labels_binary(&[1, 2, 3], &[0]).unwrap();
+        // Length mismatch against the header counts.
+        assert!(decode_labels_binary(&bytes, 3, 2).is_err());
+        // Bit flip fails the checksum.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0x01;
+        assert!(decode_labels_binary(&bad, 3, 1).is_err());
     }
 
     #[test]

@@ -139,7 +139,7 @@ fn handle_connection(stream: TcpStream, manager: ServiceManager, stop: Arc<Atomi
                 let is_shutdown = matches!(req, Request::Shutdown);
                 let reply = respond(&manager, req);
                 if is_shutdown {
-                    let _ = writer.write_all(reply.as_bytes());
+                    let _ = reply.write_to(&mut writer);
                     let _ = writer.flush();
                     crate::log_info!("shutdown requested by {peer}");
                     request_stop(&stop, addr);
@@ -147,28 +147,63 @@ fn handle_connection(stream: TcpStream, manager: ServiceManager, stop: Arc<Atomi
                 }
                 reply
             }
-            Err(e) => format!("{}\n", protocol::err_line(&format!("{e:#}"))),
+            Err(e) => Reply::err(&e),
         };
-        if writer.write_all(reply.as_bytes()).and_then(|_| writer.flush()).is_err() {
+        if reply.write_to(&mut writer).and_then(|_| writer.flush()).is_err() {
             return;
         }
     }
 }
 
-/// Execute one request against the manager; returns the full response
-/// (one or more `\n`-terminated lines).
-fn respond(manager: &ServiceManager, req: Request) -> String {
-    match handle(manager, req) {
-        Ok(lines) => lines,
-        Err(e) => format!("{}\n", protocol::err_line(&format!("{e:#}"))),
+/// A response frame: text lines, optionally followed by a binary block
+/// (the `RESULTB` payload — its length prefix lives in the header line).
+enum Reply {
+    Text(String),
+    Binary { header: String, payload: Vec<u8> },
+}
+
+impl Reply {
+    fn err(e: &anyhow::Error) -> Reply {
+        Reply::Text(format!("{}\n", protocol::err_line(&format!("{e:#}"))))
+    }
+
+    fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        match self {
+            Reply::Text(s) => w.write_all(s.as_bytes()),
+            Reply::Binary { header, payload } => {
+                w.write_all(header.as_bytes())?;
+                w.write_all(payload)
+            }
+        }
     }
 }
 
-fn handle(manager: &ServiceManager, req: Request) -> Result<String> {
+/// Execute one request against the manager; returns the full response.
+fn respond(manager: &ServiceManager, req: Request) -> Reply {
+    match handle(manager, req) {
+        Ok(reply) => reply,
+        Err(e) => Reply::err(&e),
+    }
+}
+
+/// Fetch a finished job's record or explain why it has no result yet.
+fn finished_job(manager: &ServiceManager, id: u64) -> Result<super::manager::JobRecord> {
+    let record = manager.job(id).with_context(|| format!("no job with id {id}"))?;
+    match record.state {
+        JobState::Done => Ok(record),
+        JobState::Failed => anyhow::bail!(
+            "job {id} failed: {}",
+            record.error.as_deref().unwrap_or("unknown error")
+        ),
+        other => anyhow::bail!("job {id} is still {}", other.as_str()),
+    }
+}
+
+fn handle(manager: &ServiceManager, req: Request) -> Result<Reply> {
     match req {
         Request::Submit(spec) => {
             let id = manager.submit(spec)?;
-            Ok(format!("OK id={id}\n"))
+            Ok(Reply::Text(format!("OK id={id}\n")))
         }
         Request::Status { id } => {
             let record = manager.job(id).with_context(|| format!("no job with id {id}"))?;
@@ -177,20 +212,12 @@ fn handle(manager: &ServiceManager, req: Request) -> Result<String> {
                 line.push_str(&format!(" error={}", e.replace([' ', '\n'], "_")));
             }
             line.push('\n');
-            Ok(line)
+            Ok(Reply::Text(line))
         }
         Request::Result { id } => {
-            let record = manager.job(id).with_context(|| format!("no job with id {id}"))?;
-            match record.state {
-                JobState::Done => {}
-                JobState::Failed => anyhow::bail!(
-                    "job {id} failed: {}",
-                    record.error.as_deref().unwrap_or("unknown error")
-                ),
-                other => anyhow::bail!("job {id} is still {}", other.as_str()),
-            }
+            let record = finished_job(manager, id)?;
             let out = record.result.context("done job missing result")?;
-            Ok(format!(
+            Ok(Reply::Text(format!(
                 "OK id={id} k={} rows={} cols={} cached={}\nROWS {}\nCOLS {}\nEND\n",
                 out.k,
                 out.row_labels.len(),
@@ -198,35 +225,52 @@ fn handle(manager: &ServiceManager, req: Request) -> Result<String> {
                 record.cached,
                 protocol::encode_labels(&out.row_labels),
                 protocol::encode_labels(&out.col_labels),
-            ))
+            )))
+        }
+        Request::ResultBinary { id } => {
+            let record = finished_job(manager, id)?;
+            let out = record.result.context("done job missing result")?;
+            let payload = protocol::encode_labels_binary(&out.row_labels, &out.col_labels)?;
+            Ok(Reply::Binary {
+                header: format!(
+                    "OK id={id} k={} rows={} cols={} cached={}\n",
+                    out.k,
+                    out.row_labels.len(),
+                    out.col_labels.len(),
+                    record.cached,
+                ),
+                payload,
+            })
         }
         Request::Stats => {
             let (queued, running, done, failed) = manager.job_counts();
             let snap = manager.stats().snapshot();
             let cache = manager.cache();
-            Ok(format!(
+            Ok(Reply::Text(format!(
                 "OK jobs_queued={queued} jobs_running={running} jobs_done={done} jobs_failed={failed} \
                  cache_hits={} cache_misses={} cache_entries={} cache_bytes={} cache_capacity_bytes={} \
-                 blocks_total={} blocks_native={} blocks_pjrt={} matrices={}\n",
+                 cache_disk_hits={} blocks_total={} blocks_native={} blocks_pjrt={} matrices={}\n",
                 snap.cache_hits,
                 snap.cache_misses,
                 cache.len(),
                 cache.bytes(),
                 cache.capacity_bytes(),
+                cache.disk_hits(),
                 snap.blocks_total,
                 snap.blocks_native,
                 snap.blocks_pjrt,
                 manager.matrix_names().len(),
-            ))
+            )))
         }
-        Request::Load { name, dataset, path, rows, seed } => {
-            let (r, c) = match (dataset, path) {
-                (Some(ds), None) => manager.load_dataset(&name, &ds, rows, seed)?,
-                (None, Some(p)) => manager.load_file(&name, &PathBuf::from(p))?,
+        Request::Load { name, dataset, path, store, rows, seed } => {
+            let (r, c) = match (dataset, path, store) {
+                (Some(ds), None, None) => manager.load_dataset(&name, &ds, rows, seed)?,
+                (None, Some(p), None) => manager.load_file(&name, &PathBuf::from(p))?,
+                (None, None, Some(s)) => manager.register_store(&name, &PathBuf::from(s))?,
                 _ => unreachable!("parser enforces exactly one source"),
             };
-            Ok(format!("OK name={name} rows={r} cols={c}\n"))
+            Ok(Reply::Text(format!("OK name={name} rows={r} cols={c}\n")))
         }
-        Request::Shutdown => Ok("OK shutting-down\n".to_string()),
+        Request::Shutdown => Ok(Reply::Text("OK shutting-down\n".to_string())),
     }
 }

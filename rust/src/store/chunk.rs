@@ -1,0 +1,904 @@
+//! Streaming writer and random-access reader for LAMC2 stores.
+//!
+//! [`ChunkWriter`] is the ingest side: rows arrive one at a time
+//! (`append_dense_row` / `append_sparse_row`), are buffered into the
+//! current row band, and each band is sealed — encoded, checksummed,
+//! written, fsynced — the moment it fills. Peak writer memory is one
+//! band, never the matrix; total row count need not be known up front
+//! (the self-description lives in the footer, written by `finish`).
+//!
+//! [`StoreReader`] is the serving side: `tile(rows, cols)` gathers an
+//! arbitrary-order submatrix by reading **only the row bands the
+//! requested rows touch**, verifying each band's checksum before use.
+//! An optional byte-bounded LRU of decoded bands absorbs the re-reads a
+//! partitioned co-clustering round generates; with the cache disabled,
+//! peak reader memory is one decoded band plus the gathered tile.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::matrix::{CsrMatrix, DenseMatrix, Matrix};
+
+use super::format::{
+    checksum_bytes, decode_footer, encode_footer, store_fingerprint, ChunkMeta, Layout,
+    StoreError, StoreHeader, DEFAULT_CHUNK_ROWS, FOOTER_MAGIC, MAGIC, TRAILER_BYTES,
+};
+
+/// Default byte budget for the decoded-band cache of [`StoreReader::open`].
+pub const DEFAULT_CACHE_BYTES: usize = 64 << 20;
+
+/// What a finished ingest produced (printed by `lamc pack` / `ingest`).
+#[derive(Clone, Debug)]
+pub struct StoreSummary {
+    pub path: PathBuf,
+    pub layout: Layout,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: u64,
+    pub chunks: usize,
+    pub chunk_rows: usize,
+    pub fingerprint: u64,
+    /// Total file size, footer included.
+    pub file_bytes: u64,
+}
+
+/// Streaming row-append writer. See the module docs for the protocol.
+pub struct ChunkWriter {
+    path: PathBuf,
+    file: BufWriter<File>,
+    layout: Layout,
+    cols: usize,
+    chunk_rows: usize,
+    /// Bytes written so far (leading magic included) = next chunk offset.
+    offset: u64,
+    index: Vec<ChunkMeta>,
+    // Current (open) band.
+    dense_buf: Vec<f32>,
+    indptr: Vec<u64>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+    rows_in_chunk: usize,
+    total_rows: usize,
+    total_nnz: u64,
+}
+
+impl ChunkWriter {
+    /// Create a store file and start an ingest. `cols` is fixed up
+    /// front (every row must have this width); the row count is not.
+    pub fn create(path: &Path, layout: Layout, cols: usize, chunk_rows: usize) -> Result<Self> {
+        ensure!(cols > 0, "store needs at least one column");
+        ensure!(chunk_rows > 0, "chunk height must be positive");
+        let mut file = BufWriter::new(
+            File::create(path).with_context(|| format!("create store {path:?}"))?,
+        );
+        file.write_all(MAGIC)?;
+        Ok(Self {
+            path: path.to_path_buf(),
+            file,
+            layout,
+            cols,
+            chunk_rows,
+            offset: MAGIC.len() as u64,
+            index: Vec::new(),
+            dense_buf: Vec::new(),
+            indptr: vec![0],
+            indices: Vec::new(),
+            values: Vec::new(),
+            rows_in_chunk: 0,
+            total_rows: 0,
+            total_nnz: 0,
+        })
+    }
+
+    /// Create with the default band height.
+    pub fn create_default(path: &Path, layout: Layout, cols: usize) -> Result<Self> {
+        Self::create(path, layout, cols, DEFAULT_CHUNK_ROWS)
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.layout
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Rows appended so far.
+    pub fn rows(&self) -> usize {
+        self.total_rows
+    }
+
+    /// Append one dense row (`row.len()` must equal `cols`).
+    pub fn append_dense_row(&mut self, row: &[f32]) -> Result<()> {
+        ensure!(self.layout == Layout::Dense, "append_dense_row on a {} store", self.layout.as_str());
+        ensure!(row.len() == self.cols, "row has {} values, store has {} columns", row.len(), self.cols);
+        self.dense_buf.extend_from_slice(row);
+        self.total_nnz += self.cols as u64;
+        self.row_done()
+    }
+
+    /// Append one sparse row as `(col, value)` entries. Entries may be
+    /// in any order but must not repeat a column.
+    pub fn append_sparse_row(&mut self, entries: &[(u32, f32)]) -> Result<()> {
+        ensure!(self.layout == Layout::Csr, "append_sparse_row on a {} store", self.layout.as_str());
+        let mut sorted: Vec<(u32, f32)> = entries.to_vec();
+        sorted.sort_unstable_by_key(|&(j, _)| j);
+        // Validate the whole row before touching writer state, so a
+        // rejected row leaves the ingest resumable.
+        for pair in sorted.windows(2) {
+            ensure!(pair[0].0 != pair[1].0, "duplicate column {} in sparse row", pair[0].0);
+        }
+        if let Some(&(j, _)) = sorted.last() {
+            ensure!((j as usize) < self.cols, "column {} out of bounds (cols = {})", j, self.cols);
+        }
+        for &(j, v) in &sorted {
+            self.indices.push(j);
+            self.values.push(v);
+        }
+        self.indptr.push(self.indices.len() as u64);
+        self.total_nnz += sorted.len() as u64;
+        self.row_done()
+    }
+
+    fn row_done(&mut self) -> Result<()> {
+        self.rows_in_chunk += 1;
+        self.total_rows += 1;
+        if self.rows_in_chunk == self.chunk_rows {
+            self.seal_chunk()?;
+        }
+        Ok(())
+    }
+
+    /// Encode, checksum, write and fsync the open band.
+    fn seal_chunk(&mut self) -> Result<()> {
+        if self.rows_in_chunk == 0 {
+            return Ok(());
+        }
+        let (payload, chunk_nnz) = match self.layout {
+            Layout::Dense => {
+                let mut payload = Vec::with_capacity(self.dense_buf.len() * 4);
+                for &v in &self.dense_buf {
+                    payload.extend_from_slice(&v.to_le_bytes());
+                }
+                let nnz = self.dense_buf.len() as u64;
+                self.dense_buf.clear();
+                (payload, nnz)
+            }
+            Layout::Csr => {
+                let nnz = self.indices.len() as u64;
+                let mut payload =
+                    Vec::with_capacity(self.indptr.len() * 8 + self.indices.len() * 8);
+                for &p in &self.indptr {
+                    payload.extend_from_slice(&p.to_le_bytes());
+                }
+                for &j in &self.indices {
+                    payload.extend_from_slice(&j.to_le_bytes());
+                }
+                for &v in &self.values {
+                    payload.extend_from_slice(&v.to_le_bytes());
+                }
+                self.indptr.clear();
+                self.indptr.push(0);
+                self.indices.clear();
+                self.values.clear();
+                (payload, nnz)
+            }
+        };
+        let meta = ChunkMeta {
+            offset: self.offset,
+            len: payload.len() as u64,
+            row_lo: self.total_rows - self.rows_in_chunk,
+            rows: self.rows_in_chunk,
+            nnz: chunk_nnz,
+            checksum: checksum_bytes(&payload),
+        };
+        self.file.write_all(&payload)?;
+        // Durability point: a sealed band survives a crash of the
+        // ingesting process (the footer won't, and the reader reports
+        // that as Truncated — re-ingest resumes from scratch).
+        self.file.flush()?;
+        self.file.get_ref().sync_data().with_context(|| format!("fsync {:?}", self.path))?;
+        self.offset += meta.len;
+        self.index.push(meta);
+        self.rows_in_chunk = 0;
+        Ok(())
+    }
+
+    /// Seal any partial band, write the footer, and fsync the file.
+    pub fn finish(mut self) -> Result<StoreSummary> {
+        self.seal_chunk()?;
+        let fingerprint = store_fingerprint(
+            self.layout,
+            self.total_rows,
+            self.cols,
+            self.total_nnz,
+            self.index.iter().map(|e| e.checksum),
+        );
+        let header = StoreHeader {
+            layout: self.layout,
+            rows: self.total_rows,
+            cols: self.cols,
+            nnz: self.total_nnz,
+            chunk_rows: self.chunk_rows,
+            n_chunks: self.index.len(),
+            fingerprint,
+        };
+        let footer = encode_footer(&header, &self.index);
+        self.file.write_all(&footer)?;
+        self.file.write_all(&(footer.len() as u64).to_le_bytes())?;
+        self.file.write_all(&checksum_bytes(&footer).to_le_bytes())?;
+        self.file.write_all(FOOTER_MAGIC)?;
+        self.file.flush()?;
+        self.file.get_ref().sync_all().with_context(|| format!("fsync {:?}", self.path))?;
+        Ok(StoreSummary {
+            path: self.path.clone(),
+            layout: self.layout,
+            rows: self.total_rows,
+            cols: self.cols,
+            nnz: self.total_nnz,
+            chunks: self.index.len(),
+            chunk_rows: self.chunk_rows,
+            fingerprint,
+            file_bytes: self.offset + footer.len() as u64 + TRAILER_BYTES,
+        })
+    }
+}
+
+/// Pack an in-memory matrix into a store file (the `lamc pack` core).
+pub fn pack_matrix(matrix: &Matrix, path: &Path, chunk_rows: usize) -> Result<StoreSummary> {
+    match matrix {
+        Matrix::Dense(d) => {
+            let mut w = ChunkWriter::create(path, Layout::Dense, d.cols(), chunk_rows)?;
+            for i in 0..d.rows() {
+                w.append_dense_row(d.row(i))?;
+            }
+            w.finish()
+        }
+        Matrix::Sparse(s) => {
+            let mut w = ChunkWriter::create(path, Layout::Csr, s.cols(), chunk_rows)?;
+            let mut row: Vec<(u32, f32)> = Vec::new();
+            for i in 0..s.rows() {
+                row.clear();
+                row.extend(s.row_iter(i).map(|(j, v)| (j as u32, v)));
+                w.append_sparse_row(&row)?;
+            }
+            w.finish()
+        }
+    }
+}
+
+/// One decoded row band.
+enum DecodedChunk {
+    Dense { values: Vec<f32> },
+    Csr { indptr: Vec<u64>, indices: Vec<u32>, values: Vec<f32> },
+}
+
+impl DecodedChunk {
+    fn resident_bytes(&self) -> usize {
+        match self {
+            DecodedChunk::Dense { values } => values.len() * 4,
+            DecodedChunk::Csr { indptr, indices, values } => {
+                indptr.len() * 8 + indices.len() * 4 + values.len() * 4
+            }
+        }
+    }
+}
+
+struct CacheSlot {
+    chunk: Arc<DecodedChunk>,
+    bytes: usize,
+    last_used: u64,
+}
+
+struct ChunkCache {
+    map: HashMap<usize, CacheSlot>,
+    bytes: usize,
+    tick: u64,
+}
+
+/// Random-access reader over a finished store file.
+///
+/// Thread-safe: `tile` may be called concurrently from the scheduler's
+/// worker pool (reads are serialized on an internal file handle; decode
+/// and gather run in parallel).
+pub struct StoreReader {
+    path: PathBuf,
+    header: StoreHeader,
+    index: Vec<ChunkMeta>,
+    file: Mutex<File>,
+    cache: Mutex<ChunkCache>,
+    cache_budget: usize,
+    // Telemetry: how much of the file the workload actually touched.
+    chunks_read: AtomicU64,
+    bytes_read: AtomicU64,
+    cache_hits: AtomicU64,
+    tiles_served: AtomicU64,
+}
+
+impl StoreReader {
+    /// Open with the default decoded-band cache budget.
+    pub fn open(path: &Path) -> Result<Self> {
+        Self::open_with_cache(path, DEFAULT_CACHE_BYTES)
+    }
+
+    /// Open with an explicit cache budget (0 disables caching: every
+    /// tile re-reads its bands from disk — the strictest RSS bound).
+    pub fn open_with_cache(path: &Path, cache_budget: usize) -> Result<Self> {
+        let mut file = File::open(path).with_context(|| format!("open store {path:?}"))?;
+        let file_len = file.metadata()?.len();
+
+        if file_len < MAGIC.len() as u64 {
+            return Err(StoreError::NotAStore(path.to_path_buf()).into());
+        }
+        let mut magic = [0u8; 8];
+        file.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(StoreError::NotAStore(path.to_path_buf()).into());
+        }
+        if file_len < MAGIC.len() as u64 + TRAILER_BYTES {
+            return Err(StoreError::Truncated {
+                path: path.to_path_buf(),
+                detail: format!("{file_len} bytes is too short for a footer"),
+            }
+            .into());
+        }
+
+        let mut trailer = [0u8; TRAILER_BYTES as usize];
+        file.seek(SeekFrom::End(-(TRAILER_BYTES as i64)))?;
+        file.read_exact(&mut trailer)?;
+        if &trailer[16..24] != FOOTER_MAGIC {
+            return Err(StoreError::Truncated {
+                path: path.to_path_buf(),
+                detail: "footer magic missing (ingest died before finish, or partial copy)".into(),
+            }
+            .into());
+        }
+        let footer_len = u64::from_le_bytes(trailer[0..8].try_into().unwrap());
+        let footer_checksum = u64::from_le_bytes(trailer[8..16].try_into().unwrap());
+        let payload_end = match (file_len - TRAILER_BYTES).checked_sub(footer_len) {
+            Some(end) if end >= MAGIC.len() as u64 => end,
+            _ => {
+                return Err(StoreError::Truncated {
+                    path: path.to_path_buf(),
+                    detail: format!("footer length {footer_len} exceeds file size {file_len}"),
+                }
+                .into())
+            }
+        };
+        let mut footer = vec![0u8; footer_len as usize];
+        file.seek(SeekFrom::Start(payload_end))?;
+        file.read_exact(&mut footer)?;
+        if checksum_bytes(&footer) != footer_checksum {
+            return Err(StoreError::Corrupt {
+                path: path.to_path_buf(),
+                detail: "footer checksum mismatch".into(),
+            }
+            .into());
+        }
+        let (header, index) = decode_footer(&footer, payload_end, path)?;
+
+        Ok(Self {
+            path: path.to_path_buf(),
+            header,
+            index,
+            file: Mutex::new(file),
+            cache: Mutex::new(ChunkCache { map: HashMap::new(), bytes: 0, tick: 0 }),
+            cache_budget,
+            chunks_read: AtomicU64::new(0),
+            bytes_read: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            tiles_served: AtomicU64::new(0),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn header(&self) -> &StoreHeader {
+        &self.header
+    }
+
+    pub fn rows(&self) -> usize {
+        self.header.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.header.cols
+    }
+
+    /// Stored entries (dense stores count every entry).
+    pub fn nnz(&self) -> usize {
+        self.header.nnz as usize
+    }
+
+    pub fn layout(&self) -> Layout {
+        self.header.layout
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.header.layout == Layout::Csr
+    }
+
+    pub fn chunk_rows(&self) -> usize {
+        self.header.chunk_rows
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.header.n_chunks
+    }
+
+    /// O(1) content fingerprint from the header — see
+    /// [`store_fingerprint`](super::format::store_fingerprint).
+    pub fn fingerprint(&self) -> u64 {
+        self.header.fingerprint
+    }
+
+    /// Bands read from disk so far (checksum-verified decodes).
+    pub fn chunks_read(&self) -> u64 {
+        self.chunks_read.load(Ordering::Relaxed)
+    }
+
+    /// Payload bytes read from disk so far.
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes_read.load(Ordering::Relaxed)
+    }
+
+    /// Band requests answered from the decoded-band cache.
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Tiles gathered so far.
+    pub fn tiles_served(&self) -> u64 {
+        self.tiles_served.load(Ordering::Relaxed)
+    }
+
+    /// Read, verify and decode band `idx` (cache-aware).
+    fn load_chunk(&self, idx: usize) -> Result<Arc<DecodedChunk>> {
+        if self.cache_budget > 0 {
+            let mut cache = self.cache.lock().unwrap();
+            cache.tick += 1;
+            let tick = cache.tick;
+            if let Some(slot) = cache.map.get_mut(&idx) {
+                slot.last_used = tick;
+                self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Arc::clone(&slot.chunk));
+            }
+        }
+
+        let meta = self.index[idx];
+        let mut payload = vec![0u8; meta.len as usize];
+        {
+            let mut file = self.file.lock().unwrap();
+            file.seek(SeekFrom::Start(meta.offset))?;
+            file.read_exact(&mut payload).map_err(|e| StoreError::Truncated {
+                path: self.path.clone(),
+                detail: format!("chunk {idx} short read: {e}"),
+            })?;
+        }
+        self.chunks_read.fetch_add(1, Ordering::Relaxed);
+        self.bytes_read.fetch_add(meta.len, Ordering::Relaxed);
+        if checksum_bytes(&payload) != meta.checksum {
+            return Err(StoreError::Corrupt {
+                path: self.path.clone(),
+                detail: format!("chunk {idx} checksum mismatch"),
+            }
+            .into());
+        }
+        let chunk = Arc::new(self.decode_chunk(idx, &meta, &payload)?);
+
+        if self.cache_budget > 0 {
+            let bytes = chunk.resident_bytes();
+            if bytes <= self.cache_budget {
+                let mut cache = self.cache.lock().unwrap();
+                cache.tick += 1;
+                let tick = cache.tick;
+                let slot = CacheSlot { chunk: Arc::clone(&chunk), bytes, last_used: tick };
+                if let Some(old) = cache.map.insert(idx, slot) {
+                    cache.bytes -= old.bytes;
+                }
+                cache.bytes += bytes;
+                while cache.bytes > self.cache_budget {
+                    let Some((&victim, _)) = cache
+                        .map
+                        .iter()
+                        .filter(|(k, _)| **k != idx)
+                        .min_by_key(|(_, s)| s.last_used)
+                    else {
+                        break;
+                    };
+                    let old = cache.map.remove(&victim).unwrap();
+                    cache.bytes -= old.bytes;
+                }
+            }
+        }
+        Ok(chunk)
+    }
+
+    fn decode_chunk(&self, idx: usize, meta: &ChunkMeta, payload: &[u8]) -> Result<DecodedChunk> {
+        let corrupt = |detail: String| -> anyhow::Error {
+            StoreError::Corrupt { path: self.path.clone(), detail }.into()
+        };
+        let cols = self.header.cols;
+        match self.header.layout {
+            Layout::Dense => {
+                let want = meta.rows * cols * 4;
+                if payload.len() != want {
+                    return Err(corrupt(format!(
+                        "dense chunk {idx} has {} bytes, want {want}",
+                        payload.len()
+                    )));
+                }
+                let values = payload
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                Ok(DecodedChunk::Dense { values })
+            }
+            Layout::Csr => {
+                let nnz = meta.nnz as usize;
+                let ptr_bytes = (meta.rows + 1) * 8;
+                let want = ptr_bytes + nnz * 8;
+                if payload.len() != want {
+                    return Err(corrupt(format!(
+                        "csr chunk {idx} has {} bytes, want {want}",
+                        payload.len()
+                    )));
+                }
+                let indptr: Vec<u64> = payload[..ptr_bytes]
+                    .chunks_exact(8)
+                    .map(|b| u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+                    .collect();
+                if indptr[0] != 0
+                    || *indptr.last().unwrap() != nnz as u64
+                    || indptr.windows(2).any(|w| w[0] > w[1])
+                {
+                    return Err(corrupt(format!("csr chunk {idx} row pointers are inconsistent")));
+                }
+                let indices: Vec<u32> = payload[ptr_bytes..ptr_bytes + nnz * 4]
+                    .chunks_exact(4)
+                    .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                if indices.iter().any(|&j| j as usize >= cols) {
+                    return Err(corrupt(format!("csr chunk {idx} has a column index out of bounds")));
+                }
+                let values: Vec<f32> = payload[ptr_bytes + nnz * 4..]
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect();
+                Ok(DecodedChunk::Csr { indptr, indices, values })
+            }
+        }
+    }
+
+    /// Gather the dense submatrix `A[rows, cols]` (arbitrary index
+    /// order, global ids) — bit-identical to `Matrix::gather_block` on
+    /// the matrix the store was packed from, reading only the row bands
+    /// the requested rows cover.
+    pub fn tile(&self, rows: &[usize], cols: &[usize]) -> Result<DenseMatrix> {
+        for &i in rows {
+            ensure!(i < self.header.rows, "row {i} out of bounds ({} rows)", self.header.rows);
+        }
+        for &j in cols {
+            ensure!(j < self.header.cols, "col {j} out of bounds ({} cols)", self.header.cols);
+        }
+        let h = self.header.chunk_rows;
+        // Group requested rows by band so each touched band loads once.
+        let mut by_chunk: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
+        for (bi, &gid) in rows.iter().enumerate() {
+            by_chunk.entry(gid / h).or_default().push((bi, gid % h));
+        }
+
+        let mut out = DenseMatrix::zeros(rows.len(), cols.len());
+        // Column lookup shared across bands (CSR scatter).
+        let mut col_pos: Vec<i32> = Vec::new();
+        if self.header.layout == Layout::Csr {
+            col_pos = vec![-1; self.header.cols];
+            for (bj, &j) in cols.iter().enumerate() {
+                col_pos[j] = bj as i32;
+            }
+        }
+
+        for (&cidx, picks) in &by_chunk {
+            let chunk = self.load_chunk(cidx)?;
+            match &*chunk {
+                DecodedChunk::Dense { values } => {
+                    let w = self.header.cols;
+                    for &(bi, local) in picks {
+                        let src = &values[local * w..(local + 1) * w];
+                        let dst = out.row_mut(bi);
+                        for (bj, &j) in cols.iter().enumerate() {
+                            dst[bj] = src[j];
+                        }
+                    }
+                }
+                DecodedChunk::Csr { indptr, indices, values } => {
+                    for &(bi, local) in picks {
+                        let dst = out.row_mut(bi);
+                        for t in indptr[local] as usize..indptr[local + 1] as usize {
+                            let bj = col_pos[indices[t] as usize];
+                            if bj >= 0 {
+                                dst[bj as usize] = values[t];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        self.tiles_served.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
+    }
+
+    /// Materialize the whole matrix (baselines and `lamc inspect
+    /// --verify` use this; the partitioned pipeline never does).
+    pub fn read_all(&self) -> Result<Matrix> {
+        match self.header.layout {
+            Layout::Dense => {
+                let mut data = Vec::with_capacity(self.header.rows * self.header.cols);
+                for idx in 0..self.index.len() {
+                    let chunk = self.load_chunk(idx)?;
+                    match &*chunk {
+                        DecodedChunk::Dense { values } => data.extend_from_slice(values),
+                        DecodedChunk::Csr { .. } => bail!("dense store decoded a csr chunk"),
+                    }
+                }
+                Ok(Matrix::Dense(DenseMatrix::from_vec(self.header.rows, self.header.cols, data)))
+            }
+            Layout::Csr => {
+                let mut indptr: Vec<usize> = Vec::with_capacity(self.header.rows + 1);
+                indptr.push(0);
+                let mut all_indices: Vec<u32> = Vec::with_capacity(self.header.nnz as usize);
+                let mut all_values: Vec<f32> = Vec::with_capacity(self.header.nnz as usize);
+                for idx in 0..self.index.len() {
+                    let chunk = self.load_chunk(idx)?;
+                    match &*chunk {
+                        DecodedChunk::Csr { indptr: rel, indices, values } => {
+                            let base = all_indices.len();
+                            for &p in &rel[1..] {
+                                indptr.push(base + p as usize);
+                            }
+                            all_indices.extend_from_slice(indices);
+                            all_values.extend_from_slice(values);
+                        }
+                        DecodedChunk::Dense { .. } => bail!("csr store decoded a dense chunk"),
+                    }
+                }
+                Ok(Matrix::Sparse(CsrMatrix::new(
+                    self.header.rows,
+                    self.header.cols,
+                    indptr,
+                    all_indices,
+                    all_values,
+                )))
+            }
+        }
+    }
+
+    /// Re-read and checksum-verify every band (`lamc inspect --verify`).
+    pub fn verify(&self) -> Result<()> {
+        for idx in 0..self.index.len() {
+            self.load_chunk(idx)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for StoreReader {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StoreReader")
+            .field("path", &self.path)
+            .field("layout", &self.header.layout)
+            .field("rows", &self.header.rows)
+            .field("cols", &self.header.cols)
+            .field("n_chunks", &self.header.n_chunks)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("lamc_store_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn random_dense(rows: usize, cols: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Xoshiro256::seed_from(seed);
+        DenseMatrix::randn(rows, cols, &mut rng)
+    }
+
+    fn random_sparse(rows: usize, cols: usize, nnz: usize, seed: u64) -> CsrMatrix {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let mut trip = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            trip.push((rng.next_below(rows), rng.next_below(cols), rng.next_f32() + 0.01));
+        }
+        CsrMatrix::from_triplets(rows, cols, trip)
+    }
+
+    #[test]
+    fn dense_pack_read_all_round_trip() {
+        let d = random_dense(37, 11, 1);
+        let path = tmp("dense_rt.lamc2");
+        let summary = pack_matrix(&Matrix::Dense(d.clone()), &path, 8).unwrap();
+        assert_eq!(summary.rows, 37);
+        assert_eq!(summary.chunks, 5, "37 rows / 8-row bands");
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!((r.rows(), r.cols()), (37, 11));
+        assert_eq!(r.fingerprint(), summary.fingerprint);
+        match r.read_all().unwrap() {
+            Matrix::Dense(got) => assert_eq!(got, d),
+            _ => panic!("layout mismatch"),
+        }
+    }
+
+    #[test]
+    fn sparse_pack_read_all_round_trip() {
+        let s = random_sparse(50, 23, 300, 2);
+        let path = tmp("sparse_rt.lamc2");
+        pack_matrix(&Matrix::Sparse(s.clone()), &path, 7).unwrap();
+        let r = StoreReader::open(&path).unwrap();
+        assert!(r.is_sparse());
+        assert_eq!(r.nnz(), s.nnz());
+        match r.read_all().unwrap() {
+            Matrix::Sparse(got) => assert_eq!(got, s),
+            _ => panic!("layout mismatch"),
+        }
+    }
+
+    #[test]
+    fn tile_matches_gather_block_randomized() {
+        let mut rng = Xoshiro256::seed_from(3);
+        for (case, matrix) in [
+            Matrix::Dense(random_dense(41, 17, 31)),
+            Matrix::Sparse(random_sparse(41, 17, 200, 32)),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let path = tmp(&format!("tile_{case}.lamc2"));
+            pack_matrix(&matrix, &path, 6).unwrap();
+            let r = StoreReader::open(&path).unwrap();
+            for _ in 0..20 {
+                let nr = rng.next_range(1, 15);
+                let nc = rng.next_range(1, 12);
+                let rows = rng.sample_indices(41, nr);
+                let cols = rng.sample_indices(17, nc);
+                let want = matrix.gather_block(&rows, &cols);
+                let got = r.tile(&rows, &cols).unwrap();
+                assert_eq!(got.data(), want.data(), "case {case} rows {rows:?} cols {cols:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn contiguous_tile_touches_only_covering_bands() {
+        let d = random_dense(64, 9, 4);
+        let path = tmp("touch.lamc2");
+        pack_matrix(&Matrix::Dense(d), &path, 16).unwrap();
+        // Cache disabled: every band access is a disk read we can count.
+        let r = StoreReader::open_with_cache(&path, 0).unwrap();
+        assert_eq!(r.n_chunks(), 4);
+        // Rows 16..32 live entirely in band 1.
+        let rows: Vec<usize> = (16..32).collect();
+        let cols: Vec<usize> = (0..9).collect();
+        r.tile(&rows, &cols).unwrap();
+        assert_eq!(r.chunks_read(), 1, "one band covers rows 16..32");
+        // Rows 10..20 straddle bands 0 and 1.
+        let rows: Vec<usize> = (10..20).collect();
+        r.tile(&rows, &cols).unwrap();
+        assert_eq!(r.chunks_read(), 3, "two more bands");
+        assert_eq!(r.cache_hits(), 0);
+    }
+
+    #[test]
+    fn cache_absorbs_repeated_tiles() {
+        let d = random_dense(32, 8, 5);
+        let path = tmp("cache.lamc2");
+        pack_matrix(&Matrix::Dense(d), &path, 8).unwrap();
+        let r = StoreReader::open(&path).unwrap(); // default budget ≫ file
+        let rows: Vec<usize> = (0..32).collect();
+        let cols: Vec<usize> = (0..8).collect();
+        r.tile(&rows, &cols).unwrap();
+        r.tile(&rows, &cols).unwrap();
+        assert_eq!(r.chunks_read(), 4, "second pass served from cache");
+        assert_eq!(r.cache_hits(), 4);
+    }
+
+    #[test]
+    fn corrupted_chunk_is_a_typed_error() {
+        let d = random_dense(20, 5, 6);
+        let path = tmp("corrupt.lamc2");
+        pack_matrix(&Matrix::Dense(d), &path, 8).unwrap();
+        // Flip one payload byte (inside chunk 0, right after the magic).
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[12] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let r = StoreReader::open_with_cache(&path, 0).unwrap();
+        let err = r.tile(&[0], &[0]).unwrap_err();
+        let store_err = err.downcast_ref::<StoreError>().expect("typed error");
+        assert!(matches!(store_err, StoreError::Corrupt { .. }), "{store_err}");
+        // Untouched bands still read fine.
+        assert!(r.tile(&[15], &[0]).is_ok());
+    }
+
+    #[test]
+    fn truncated_store_is_a_typed_error() {
+        let d = random_dense(20, 5, 7);
+        let path = tmp("trunc.lamc2");
+        pack_matrix(&Matrix::Dense(d), &path, 8).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 40]).unwrap();
+        let err = StoreReader::open(&path).unwrap_err();
+        let store_err = err.downcast_ref::<StoreError>().expect("typed error");
+        assert!(matches!(store_err, StoreError::Truncated { .. }), "{store_err}");
+    }
+
+    #[test]
+    fn non_store_is_a_typed_error() {
+        let path = tmp("not_a_store.lamc2");
+        std::fs::write(&path, b"definitely not a matrix store").unwrap();
+        let err = StoreReader::open(&path).unwrap_err();
+        let store_err = err.downcast_ref::<StoreError>().expect("typed error");
+        assert!(matches!(store_err, StoreError::NotAStore(_)), "{store_err}");
+    }
+
+    #[test]
+    fn streaming_ingest_partial_last_band() {
+        let path = tmp("stream.lamc2");
+        let mut w = ChunkWriter::create(&path, Layout::Dense, 3, 4).unwrap();
+        for i in 0..10 {
+            w.append_dense_row(&[i as f32, 0.0, -(i as f32)]).unwrap();
+        }
+        let summary = w.finish().unwrap();
+        assert_eq!(summary.rows, 10);
+        assert_eq!(summary.chunks, 3, "4 + 4 + 2");
+        let r = StoreReader::open(&path).unwrap();
+        let tile = r.tile(&[9, 0], &[0, 2]).unwrap();
+        assert_eq!(tile.data(), &[9.0, -9.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn writer_rejects_bad_rows() {
+        let path = tmp("bad_rows.lamc2");
+        let mut w = ChunkWriter::create(&path, Layout::Dense, 3, 4).unwrap();
+        assert!(w.append_dense_row(&[1.0, 2.0]).is_err(), "wrong width");
+        assert!(w.append_sparse_row(&[(0, 1.0)]).is_err(), "wrong layout");
+        let path2 = tmp("bad_rows2.lamc2");
+        let mut w2 = ChunkWriter::create(&path2, Layout::Csr, 3, 4).unwrap();
+        assert!(w2.append_sparse_row(&[(7, 1.0)]).is_err(), "col out of bounds");
+        assert!(w2.append_sparse_row(&[(1, 1.0), (1, 2.0)]).is_err(), "duplicate col");
+        assert!(w2.append_sparse_row(&[(2, 1.0), (0, 2.0)]).is_ok(), "unsorted ok");
+        let s = w2.finish().unwrap();
+        assert_eq!(s.nnz, 2);
+    }
+
+    #[test]
+    fn empty_sparse_rows_round_trip() {
+        let path = tmp("empty_rows.lamc2");
+        let mut w = ChunkWriter::create(&path, Layout::Csr, 4, 2).unwrap();
+        w.append_sparse_row(&[]).unwrap();
+        w.append_sparse_row(&[(3, 2.5)]).unwrap();
+        w.append_sparse_row(&[]).unwrap();
+        w.finish().unwrap();
+        let r = StoreReader::open(&path).unwrap();
+        match r.read_all().unwrap() {
+            Matrix::Sparse(s) => {
+                assert_eq!(s.nnz(), 1);
+                assert_eq!(s.to_dense().get(1, 3), 2.5);
+            }
+            _ => panic!("layout"),
+        }
+    }
+}

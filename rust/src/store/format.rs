@@ -1,0 +1,396 @@
+//! On-disk layout of the LAMC2 chunked matrix store.
+//!
+//! A store file is a single self-describing artifact:
+//!
+//! ```text
+//! ┌──────────────┬────────────┬────────────┬───┬────────────┬───────────────────────────┐
+//! │ magic LAMC2  │ chunk 0    │ chunk 1    │ … │ chunk n-1  │ footer                    │
+//! │ (8 bytes)    │ (payload)  │ (payload)  │   │ (payload)  │ header + index + trailer  │
+//! └──────────────┴────────────┴────────────┴───┴────────────┴───────────────────────────┘
+//! ```
+//!
+//! Chunks are fixed-height **row bands**: chunk `i` holds rows
+//! `[i·chunk_rows, min((i+1)·chunk_rows, rows))` in the matrix's own
+//! storage order (dense row-major or CSR). The footer — written last,
+//! which is what makes streaming ingest possible — carries the header
+//! (dims, layout, chunk height, content fingerprint) and one
+//! [`ChunkMeta`] index entry per chunk (offset, length, row range,
+//! stored-entry count, checksum). The trailer is `footer_len : u64`,
+//! `footer_checksum : u64`, then the 8-byte footer magic, so a reader
+//! finds the footer by seeking from the end.
+//!
+//! All integers are little-endian `u64`s; values are `f32` LE; CSR
+//! column indices are `u32` LE (matching [`crate::matrix::CsrMatrix`]).
+//! Checksums chain [`crate::rng::mix64`] over 8-byte words — the same
+//! primitive behind `Matrix::fingerprint`, so the whole stack shares one
+//! hashing scheme.
+//!
+//! Failure taxonomy is typed ([`StoreError`]): a reader distinguishes
+//! "not a store at all", "store cut short" (e.g. an ingest that died
+//! before `finish`), and "store damaged" (checksum/structure mismatch),
+//! so callers can react differently to each (see `docs/STORE.md`).
+
+use std::path::{Path, PathBuf};
+
+use crate::rng::mix64 as mix;
+
+/// Leading file magic (8 bytes).
+pub const MAGIC: &[u8; 8] = b"LAMC2\0\0\0";
+/// Trailing footer magic (8 bytes).
+pub const FOOTER_MAGIC: &[u8; 8] = b"LAMC2FTR";
+/// Current format version.
+pub const VERSION: u64 = 1;
+/// Default row-band height for writers that don't specify one.
+pub const DEFAULT_CHUNK_ROWS: usize = 256;
+
+/// Bytes of the fixed trailer: `footer_len`, `footer_checksum`, magic.
+pub const TRAILER_BYTES: u64 = 24;
+/// Bytes of one encoded header (8 words).
+const HEADER_WORDS: usize = 8;
+/// Bytes of one encoded index entry (6 words).
+const ENTRY_WORDS: usize = 6;
+
+/// Storage layout of the chunk payloads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// Row-major dense `f32`: payload is `rows·cols` values.
+    Dense,
+    /// CSR band: payload is `(rows+1)` relative `u64` row pointers, then
+    /// `nnz` `u32` column indices, then `nnz` `f32` values.
+    Csr,
+}
+
+impl Layout {
+    pub fn tag(self) -> u64 {
+        match self {
+            Layout::Dense => 1,
+            Layout::Csr => 2,
+        }
+    }
+
+    pub fn from_tag(tag: u64) -> Option<Layout> {
+        match tag {
+            1 => Some(Layout::Dense),
+            2 => Some(Layout::Csr),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Layout::Dense => "dense",
+            Layout::Csr => "csr",
+        }
+    }
+}
+
+/// Decoded store header (the self-description part of the footer).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoreHeader {
+    pub layout: Layout,
+    pub rows: usize,
+    pub cols: usize,
+    /// Stored entries across all chunks (dense: `rows·cols`).
+    pub nnz: u64,
+    /// Row-band height; every chunk but the last holds exactly this many rows.
+    pub chunk_rows: usize,
+    pub n_chunks: usize,
+    /// Content fingerprint over (layout, dims, nnz, per-chunk checksums).
+    /// O(1) to read back — registering a store-backed matrix never
+    /// re-scans the data (unlike `Matrix::fingerprint`).
+    pub fingerprint: u64,
+}
+
+/// Index entry for one chunk.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkMeta {
+    /// Byte offset of the payload from the start of the file.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub len: u64,
+    /// First global row covered by this chunk.
+    pub row_lo: usize,
+    /// Rows in this chunk (`chunk_rows` except possibly the last).
+    pub rows: usize,
+    /// Stored entries in this chunk.
+    pub nnz: u64,
+    /// `checksum_bytes` of the payload.
+    pub checksum: u64,
+}
+
+/// Typed store failures. Returned inside `anyhow::Error` so callers can
+/// `downcast_ref::<StoreError>()` and branch on the kind.
+#[derive(Debug)]
+pub enum StoreError {
+    /// The file does not start with the LAMC2 magic (or is too short to).
+    NotAStore(PathBuf),
+    /// The file starts like a store but ends before a valid footer —
+    /// typical of an ingest that died before `finish()` or a partial copy.
+    Truncated { path: PathBuf, detail: String },
+    /// Structure or checksum mismatch: the file is complete but damaged.
+    Corrupt { path: PathBuf, detail: String },
+    /// Footer declares a format version this build cannot read.
+    UnsupportedVersion { path: PathBuf, version: u64 },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::NotAStore(p) => write!(f, "not a LAMC2 store: {p:?}"),
+            StoreError::Truncated { path, detail } => {
+                write!(f, "truncated LAMC2 store {path:?}: {detail}")
+            }
+            StoreError::Corrupt { path, detail } => {
+                write!(f, "corrupt LAMC2 store {path:?}: {detail}")
+            }
+            StoreError::UnsupportedVersion { path, version } => {
+                write!(f, "LAMC2 store {path:?} has unsupported version {version}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+/// Checksum a byte slice: a [`mix`] chain over the length and each
+/// little-endian 8-byte word (zero-padded tail). Deterministic across
+/// platforms; sensitive to any bit flip and to length changes.
+pub fn checksum_bytes(bytes: &[u8]) -> u64 {
+    let mut h = mix(0x4C41_4D43_4353_554D, bytes.len() as u64);
+    let mut words = bytes.chunks_exact(8);
+    for w in words.by_ref() {
+        h = mix(h, u64::from_le_bytes([w[0], w[1], w[2], w[3], w[4], w[5], w[6], w[7]]));
+    }
+    let rem = words.remainder();
+    if !rem.is_empty() {
+        let mut tail = [0u8; 8];
+        tail[..rem.len()].copy_from_slice(rem);
+        h = mix(h, u64::from_le_bytes(tail));
+    }
+    h
+}
+
+/// Store content fingerprint: layout, dims, nnz, and every chunk
+/// checksum, chained in order. Cheap to compute at `finish()` (the
+/// writer already has the chunk checksums) and O(1) to read back from
+/// the header. Deliberately *not* the same chain as
+/// `Matrix::fingerprint`: in-memory and store-backed registrations take
+/// different execution paths, and the cache key reflects that (the same
+/// argument that separates dense from CSR fingerprints).
+pub fn store_fingerprint(
+    layout: Layout,
+    rows: usize,
+    cols: usize,
+    nnz: u64,
+    chunk_checksums: impl IntoIterator<Item = u64>,
+) -> u64 {
+    let mut h = mix(0x4C41_4D43_0000_0005, layout.tag());
+    h = mix(h, rows as u64);
+    h = mix(h, cols as u64);
+    h = mix(h, nnz);
+    for c in chunk_checksums {
+        h = mix(h, c);
+    }
+    h
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn word(bytes: &[u8], i: usize) -> u64 {
+    let b = &bytes[i * 8..i * 8 + 8];
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Encode the footer body (header words then index entries).
+pub fn encode_footer(header: &StoreHeader, index: &[ChunkMeta]) -> Vec<u8> {
+    debug_assert_eq!(header.n_chunks, index.len());
+    let mut out = Vec::with_capacity((HEADER_WORDS + ENTRY_WORDS * index.len()) * 8);
+    push_u64(&mut out, VERSION);
+    push_u64(&mut out, header.layout.tag());
+    push_u64(&mut out, header.rows as u64);
+    push_u64(&mut out, header.cols as u64);
+    push_u64(&mut out, header.chunk_rows as u64);
+    push_u64(&mut out, header.nnz);
+    push_u64(&mut out, index.len() as u64);
+    push_u64(&mut out, header.fingerprint);
+    for e in index {
+        push_u64(&mut out, e.offset);
+        push_u64(&mut out, e.len);
+        push_u64(&mut out, e.row_lo as u64);
+        push_u64(&mut out, e.rows as u64);
+        push_u64(&mut out, e.nnz);
+        push_u64(&mut out, e.checksum);
+    }
+    out
+}
+
+/// Decode and validate a footer body read back from disk.
+///
+/// `payload_end` is the byte offset where the footer starts (i.e. where
+/// chunk payloads must end); chunk extents are checked against it.
+pub fn decode_footer(
+    bytes: &[u8],
+    payload_end: u64,
+    path: &Path,
+) -> Result<(StoreHeader, Vec<ChunkMeta>), StoreError> {
+    let corrupt = |detail: String| StoreError::Corrupt { path: path.to_path_buf(), detail };
+    if bytes.len() < HEADER_WORDS * 8 || bytes.len() % 8 != 0 {
+        return Err(corrupt(format!("footer body has {} bytes", bytes.len())));
+    }
+    let version = word(bytes, 0);
+    if version != VERSION {
+        return Err(StoreError::UnsupportedVersion { path: path.to_path_buf(), version });
+    }
+    let layout = Layout::from_tag(word(bytes, 1))
+        .ok_or_else(|| corrupt(format!("unknown layout tag {}", word(bytes, 1))))?;
+    let rows = word(bytes, 2) as usize;
+    let cols = word(bytes, 3) as usize;
+    let chunk_rows = word(bytes, 4) as usize;
+    let nnz = word(bytes, 5);
+    let n_chunks = word(bytes, 6) as usize;
+    let fingerprint = word(bytes, 7);
+
+    if bytes.len() != (HEADER_WORDS + ENTRY_WORDS * n_chunks) * 8 {
+        return Err(corrupt(format!(
+            "footer declares {n_chunks} chunks but body has {} bytes",
+            bytes.len()
+        )));
+    }
+    if chunk_rows == 0 && n_chunks > 0 {
+        return Err(corrupt("zero chunk height with chunks present".into()));
+    }
+
+    let mut index = Vec::with_capacity(n_chunks);
+    let mut covered_rows = 0usize;
+    let mut covered_nnz = 0u64;
+    for i in 0..n_chunks {
+        let base = HEADER_WORDS + ENTRY_WORDS * i;
+        let e = ChunkMeta {
+            offset: word(bytes, base),
+            len: word(bytes, base + 1),
+            row_lo: word(bytes, base + 2) as usize,
+            rows: word(bytes, base + 3) as usize,
+            nnz: word(bytes, base + 4),
+            checksum: word(bytes, base + 5),
+        };
+        if e.offset < MAGIC.len() as u64 || e.offset.saturating_add(e.len) > payload_end {
+            return Err(corrupt(format!(
+                "chunk {i} extent [{}, {}) escapes payload region [8, {payload_end})",
+                e.offset,
+                e.offset.saturating_add(e.len)
+            )));
+        }
+        if e.row_lo != i * chunk_rows || e.rows == 0 || e.rows > chunk_rows {
+            return Err(corrupt(format!(
+                "chunk {i} covers rows [{}, {}) — not a {chunk_rows}-row band",
+                e.row_lo,
+                e.row_lo + e.rows
+            )));
+        }
+        covered_rows += e.rows;
+        covered_nnz += e.nnz;
+        index.push(e);
+    }
+    if covered_rows != rows {
+        return Err(corrupt(format!("chunks cover {covered_rows} rows, header says {rows}")));
+    }
+    if covered_nnz != nnz {
+        return Err(corrupt(format!("chunks hold {covered_nnz} entries, header says {nnz}")));
+    }
+
+    Ok((StoreHeader { layout, rows, cols, nnz, chunk_rows, n_chunks, fingerprint }, index))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header(n_chunks: usize) -> (StoreHeader, Vec<ChunkMeta>) {
+        let mut index = Vec::new();
+        let mut offset = 8u64;
+        for i in 0..n_chunks {
+            index.push(ChunkMeta {
+                offset,
+                len: 40,
+                row_lo: i * 2,
+                rows: 2,
+                nnz: 10,
+                checksum: 0xABC0 + i as u64,
+            });
+            offset += 40;
+        }
+        let h = StoreHeader {
+            layout: Layout::Csr,
+            rows: n_chunks * 2,
+            cols: 7,
+            nnz: 10 * n_chunks as u64,
+            chunk_rows: 2,
+            n_chunks,
+            fingerprint: store_fingerprint(
+                Layout::Csr,
+                n_chunks * 2,
+                7,
+                10 * n_chunks as u64,
+                index.iter().map(|e| e.checksum),
+            ),
+        };
+        (h, index)
+    }
+
+    #[test]
+    fn footer_round_trip() {
+        let (h, index) = header(3);
+        let bytes = encode_footer(&h, &index);
+        let (h2, index2) = decode_footer(&bytes, 8 + 3 * 40, Path::new("/t")).unwrap();
+        assert_eq!(h, h2);
+        assert_eq!(index, index2);
+    }
+
+    #[test]
+    fn decode_rejects_bad_extents() {
+        let (h, mut index) = header(2);
+        index[1].len = 1 << 40; // escapes the payload region
+        let bytes = encode_footer(&h, &index);
+        let err = decode_footer(&bytes, 8 + 2 * 40, Path::new("/t")).unwrap_err();
+        assert!(matches!(err, StoreError::Corrupt { .. }), "{err}");
+    }
+
+    #[test]
+    fn decode_rejects_row_coverage_mismatch() {
+        let (mut h, index) = header(2);
+        h.rows = 99;
+        let bytes = encode_footer(&h, &index);
+        let err = decode_footer(&bytes, 8 + 2 * 40, Path::new("/t")).unwrap_err();
+        assert!(matches!(err, StoreError::Corrupt { .. }), "{err}");
+    }
+
+    #[test]
+    fn decode_rejects_future_version() {
+        let (h, index) = header(1);
+        let mut bytes = encode_footer(&h, &index);
+        bytes[..8].copy_from_slice(&999u64.to_le_bytes());
+        let err = decode_footer(&bytes, 8 + 40, Path::new("/t")).unwrap_err();
+        assert!(matches!(err, StoreError::UnsupportedVersion { version: 999, .. }), "{err}");
+    }
+
+    #[test]
+    fn checksum_sensitivity() {
+        let a = checksum_bytes(b"hello world");
+        assert_eq!(a, checksum_bytes(b"hello world"), "deterministic");
+        assert_ne!(a, checksum_bytes(b"hello worlc"), "bit flip");
+        assert_ne!(a, checksum_bytes(b"hello world\0"), "length change");
+        assert_ne!(checksum_bytes(b""), checksum_bytes(b"\0"), "padding not confusable");
+    }
+
+    #[test]
+    fn fingerprint_covers_every_input() {
+        let base = store_fingerprint(Layout::Dense, 4, 5, 20, [1, 2]);
+        assert_ne!(base, store_fingerprint(Layout::Csr, 4, 5, 20, [1, 2]));
+        assert_ne!(base, store_fingerprint(Layout::Dense, 5, 4, 20, [1, 2]));
+        assert_ne!(base, store_fingerprint(Layout::Dense, 4, 5, 21, [1, 2]));
+        assert_ne!(base, store_fingerprint(Layout::Dense, 4, 5, 20, [2, 1]));
+        assert_eq!(base, store_fingerprint(Layout::Dense, 4, 5, 20, vec![1, 2]));
+    }
+}

@@ -1,0 +1,39 @@
+//! `lamc::store` — chunked on-disk matrix store and out-of-core views.
+//!
+//! Every earlier path in the repo materialized the full input matrix in
+//! RAM before the partition planner (paper §IV-B.2) ever ran, capping
+//! practical scale far below what the Theorem-1 sampling model targets.
+//! This module removes that cap: matrices live on disk in a
+//! self-describing chunked format and the pipeline streams **row-band
+//! tiles** — submatrix extraction (§IV-B) only ever needs the bands a
+//! block's rows touch, never the whole matrix.
+//!
+//! Pieces:
+//!
+//! * [`format`] — the versioned LAMC2 layout: leading magic, fixed-height
+//!   row-band chunks (dense or CSR payloads), and a trailing footer with
+//!   dims, per-chunk checksums (`rng::mix64` chains) and an O(1) content
+//!   fingerprint. Failures are typed ([`StoreError`]): not-a-store vs
+//!   truncated vs corrupt.
+//! * [`chunk`] — [`ChunkWriter`], a streaming row-append ingester
+//!   (bands sealed + fsynced as they fill; row count unknown until
+//!   `finish`), and [`StoreReader`], random access via
+//!   `tile(rows, cols)` that reads only the touched bands, with an
+//!   optional byte-bounded decoded-band cache.
+//! * [`view`] — [`MatrixRef`] / [`MatrixView`]: location-transparent
+//!   handles adopted by `pipeline::run`, `coordinator::run_rounds` and
+//!   the partition planner/sampler, so the same co-clustering code
+//!   serves in-memory and out-of-core inputs with byte-identical
+//!   results.
+//!
+//! The `lamc pack` / `lamc ingest` / `lamc inspect` CLI commands and the
+//! service's `LOAD name=… store=…` verb are thin wrappers over these
+//! types; `docs/STORE.md` documents the format and the RSS expectations.
+
+pub mod chunk;
+pub mod format;
+pub mod view;
+
+pub use chunk::{pack_matrix, ChunkWriter, StoreReader, StoreSummary, DEFAULT_CACHE_BYTES};
+pub use format::{checksum_bytes, Layout, StoreError, StoreHeader, DEFAULT_CHUNK_ROWS};
+pub use view::{MatrixRef, MatrixView};

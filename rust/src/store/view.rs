@@ -1,0 +1,255 @@
+//! Location-transparent matrix handles: in-memory or store-backed.
+//!
+//! [`MatrixRef`] is the owning handle the service registry and
+//! long-lived callers hold (cheap to clone — both arms are `Arc`s).
+//! [`MatrixView`] is the borrowed, `Copy` form the pipeline and
+//! scheduler actually consume; every entry point that used to take
+//! `&Matrix` now takes `impl Into<MatrixView<'_>>`, so existing
+//! `run(&matrix)` call sites compile unchanged while `run(&matrix_ref)`
+//! transparently streams tiles from disk.
+//!
+//! The one behavioural difference between the arms is *where bytes
+//! live*: `gather_block` on a stored view reads only the row bands the
+//! block touches (see [`StoreReader::tile`]), so peak memory for a
+//! partitioned run is bounded by (workers × block size) + the reader's
+//! band cache, not by matrix size.
+
+use std::borrow::Cow;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::matrix::{DenseMatrix, Matrix};
+
+use super::chunk::StoreReader;
+
+/// Owning handle to a matrix, wherever it lives.
+#[derive(Clone, Debug)]
+pub enum MatrixRef {
+    /// Fully materialized in RAM.
+    InMem(Arc<Matrix>),
+    /// Resident on disk in a LAMC2 store; tiles stream in on demand.
+    Stored(Arc<StoreReader>),
+}
+
+impl MatrixRef {
+    pub fn in_mem(matrix: Matrix) -> Self {
+        MatrixRef::InMem(Arc::new(matrix))
+    }
+
+    pub fn stored(reader: StoreReader) -> Self {
+        MatrixRef::Stored(Arc::new(reader))
+    }
+
+    /// Open a LAMC2 store file as a matrix handle.
+    pub fn open_store(path: &Path) -> Result<Self> {
+        Ok(MatrixRef::stored(StoreReader::open(path)?))
+    }
+
+    /// Borrow as the `Copy` view the pipeline consumes.
+    pub fn view(&self) -> MatrixView<'_> {
+        match self {
+            MatrixRef::InMem(m) => MatrixView::Mem(m),
+            MatrixRef::Stored(r) => MatrixView::Stored(r),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.view().rows()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.view().cols()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.view().nnz()
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        self.view().is_sparse()
+    }
+
+    /// Content fingerprint. In-memory: a full `Matrix::fingerprint`
+    /// scan. Stored: the O(1) header fingerprint — registering a huge
+    /// store never touches its payload.
+    pub fn fingerprint(&self) -> u64 {
+        self.view().fingerprint()
+    }
+
+    /// "memory" or "store" (logging / STATS).
+    pub fn location(&self) -> &'static str {
+        self.view().location()
+    }
+}
+
+impl From<Matrix> for MatrixRef {
+    fn from(m: Matrix) -> Self {
+        MatrixRef::in_mem(m)
+    }
+}
+
+impl From<StoreReader> for MatrixRef {
+    fn from(r: StoreReader) -> Self {
+        MatrixRef::stored(r)
+    }
+}
+
+/// Borrowed, `Copy` view over a matrix in either location.
+#[derive(Clone, Copy, Debug)]
+pub enum MatrixView<'a> {
+    Mem(&'a Matrix),
+    Stored(&'a StoreReader),
+}
+
+impl<'a> MatrixView<'a> {
+    pub fn rows(&self) -> usize {
+        match self {
+            MatrixView::Mem(m) => m.rows(),
+            MatrixView::Stored(r) => r.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            MatrixView::Mem(m) => m.cols(),
+            MatrixView::Stored(r) => r.cols(),
+        }
+    }
+
+    /// Stored entries (dense counts every entry).
+    pub fn nnz(&self) -> usize {
+        match self {
+            MatrixView::Mem(m) => m.nnz(),
+            MatrixView::Stored(r) => r.nnz(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        match self {
+            MatrixView::Mem(m) => m.is_sparse(),
+            MatrixView::Stored(r) => r.is_sparse(),
+        }
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        match self {
+            MatrixView::Mem(m) => m.fingerprint(),
+            MatrixView::Stored(r) => r.fingerprint(),
+        }
+    }
+
+    pub fn location(&self) -> &'static str {
+        match self {
+            MatrixView::Mem(_) => "memory",
+            MatrixView::Stored(_) => "store",
+        }
+    }
+
+    /// Gather the dense submatrix `A[rows, cols]` (global ids, arbitrary
+    /// order). Identical output for both arms over equal content; only
+    /// the stored arm can fail (I/O, checksum).
+    pub fn gather_block(&self, rows: &[usize], cols: &[usize]) -> Result<DenseMatrix> {
+        match self {
+            MatrixView::Mem(m) => Ok(m.gather_block(rows, cols)),
+            MatrixView::Stored(r) => r.tile(rows, cols),
+        }
+    }
+
+    /// The whole matrix: borrowed when in memory, materialized from disk
+    /// when stored (only the whole-matrix baselines need this).
+    pub fn materialize(&self) -> Result<Cow<'a, Matrix>> {
+        match *self {
+            MatrixView::Mem(m) => Ok(Cow::Borrowed(m)),
+            MatrixView::Stored(r) => Ok(Cow::Owned(r.read_all()?)),
+        }
+    }
+}
+
+impl<'a> From<&'a Matrix> for MatrixView<'a> {
+    fn from(m: &'a Matrix) -> Self {
+        MatrixView::Mem(m)
+    }
+}
+
+impl<'a> From<&'a StoreReader> for MatrixView<'a> {
+    fn from(r: &'a StoreReader) -> Self {
+        MatrixView::Stored(r)
+    }
+}
+
+impl<'a> From<&'a MatrixRef> for MatrixView<'a> {
+    fn from(r: &'a MatrixRef) -> Self {
+        r.view()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+    use crate::store::chunk::pack_matrix;
+
+    fn stored_copy(matrix: &Matrix, name: &str) -> StoreReader {
+        let dir = std::env::temp_dir().join("lamc_view_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        pack_matrix(matrix, &path, 5).unwrap();
+        StoreReader::open(&path).unwrap()
+    }
+
+    #[test]
+    fn both_arms_agree_on_shape_and_gather() {
+        let mut rng = Xoshiro256::seed_from(41);
+        let matrix = Matrix::Dense(DenseMatrix::randn(23, 13, &mut rng));
+        let reader = stored_copy(&matrix, "agree.lamc2");
+        let mem: MatrixView = (&matrix).into();
+        let disk: MatrixView = (&reader).into();
+        assert_eq!(mem.rows(), disk.rows());
+        assert_eq!(mem.cols(), disk.cols());
+        assert_eq!(mem.nnz(), disk.nnz());
+        assert_eq!(mem.is_sparse(), disk.is_sparse());
+        let rows = [19, 2, 7];
+        let cols = [12, 0, 3, 4];
+        assert_eq!(
+            mem.gather_block(&rows, &cols).unwrap().data(),
+            disk.gather_block(&rows, &cols).unwrap().data(),
+        );
+    }
+
+    #[test]
+    fn materialize_round_trips_stored_content() {
+        let mut rng = Xoshiro256::seed_from(42);
+        let matrix = Matrix::Dense(DenseMatrix::randn(11, 7, &mut rng));
+        let reader = stored_copy(&matrix, "materialize.lamc2");
+        let view: MatrixView = (&reader).into();
+        match &*view.materialize().unwrap() {
+            Matrix::Dense(got) => match &matrix {
+                Matrix::Dense(want) => assert_eq!(got, want),
+                _ => unreachable!(),
+            },
+            _ => panic!("layout changed"),
+        }
+    }
+
+    #[test]
+    fn matrix_ref_is_cheap_to_clone_and_fingerprints() {
+        let mut rng = Xoshiro256::seed_from(43);
+        let matrix = Matrix::Dense(DenseMatrix::randn(9, 4, &mut rng));
+        let mem_fp = matrix.fingerprint();
+        let reader = stored_copy(&matrix, "refs.lamc2");
+        let stored_fp = reader.fingerprint();
+        let a = MatrixRef::in_mem(matrix);
+        let b = a.clone();
+        assert_eq!(a.fingerprint(), mem_fp);
+        assert_eq!(b.fingerprint(), mem_fp);
+        let c = MatrixRef::stored(reader);
+        assert_eq!(c.fingerprint(), stored_fp);
+        assert_eq!(c.location(), "store");
+        assert_eq!(a.location(), "memory");
+        // Same content, different location ⇒ different execution path ⇒
+        // deliberately different fingerprint (mirrors dense-vs-CSR).
+        assert_ne!(mem_fp, stored_fp);
+    }
+}

@@ -31,6 +31,7 @@ fn spawn_service(runners: usize) -> (ServiceServer, ServiceManager) {
         runners,
         queue_capacity: 16,
         cache_capacity_bytes: 16 << 20,
+        ..Default::default()
     });
     manager.register("planted", planted(11));
     let server = ServiceServer::spawn("127.0.0.1:0", manager.clone()).expect("bind ephemeral port");

@@ -1,0 +1,243 @@
+//! Integration: the chunked store end to end — on-disk round trips, the
+//! out-of-core pipeline path, ingest-then-serve over TCP, and result
+//! persistence across a service restart.
+//!
+//! The two headline assertions (this PR's acceptance criteria):
+//!
+//! 1. `pipeline::run` on a store-backed matrix produces **byte-identical
+//!    co-cluster labels** to the in-memory path for the same seed and
+//!    config, while reading only row-band chunks (never `read_all`).
+//! 2. Result-cache contents survive a `ServiceManager` restart when a
+//!    store root is configured.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use lamc::data::synthetic::{planted_dense, planted_sparse, PlantedConfig};
+use lamc::matrix::Matrix;
+use lamc::pipeline::{Lamc, LamcConfig};
+use lamc::rng::Xoshiro256;
+use lamc::service::{JobSpec, ServiceClient, ServiceConfig, ServiceManager, ServiceServer};
+use lamc::store::{pack_matrix, MatrixRef, StoreReader};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("lamc_integration_store").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn planted(seed: u64, sparse: bool) -> Matrix {
+    let cfg = PlantedConfig {
+        rows: 300,
+        cols: 240,
+        row_clusters: 3,
+        col_clusters: 3,
+        noise: 0.1,
+        signal: 1.5,
+        density: 0.05,
+        seed,
+    };
+    if sparse { planted_sparse(&cfg).matrix } else { planted_dense(&cfg).matrix }
+}
+
+fn fast_config(k: usize, seed: u64) -> LamcConfig {
+    let mut cfg = LamcConfig { k, seed, ..Default::default() };
+    cfg.planner.candidate_sizes = vec![96, 128];
+    cfg.planner.max_samplings = 6;
+    cfg
+}
+
+#[test]
+fn store_backed_pipeline_matches_in_memory_bit_for_bit() {
+    for (case, sparse) in [("dense", false), ("sparse", true)] {
+        let dir = tmp_dir(&format!("pipeline_{case}"));
+        let matrix = planted(901, sparse);
+        let path = dir.join("m.lamc2");
+        pack_matrix(&matrix, &path, 64).unwrap();
+        let stored = MatrixRef::open_store(&path).unwrap();
+
+        let lamc = Lamc::new(fast_config(3, 0x5101));
+        let in_mem = lamc.run(&matrix).unwrap();
+        let out_of_core = lamc.run(&stored).unwrap();
+
+        assert_eq!(in_mem.row_labels, out_of_core.row_labels, "{case}: row labels");
+        assert_eq!(in_mem.col_labels, out_of_core.col_labels, "{case}: col labels");
+        assert_eq!(in_mem.k, out_of_core.k, "{case}: k");
+        assert_eq!(in_mem.plan, out_of_core.plan, "{case}: partition plan");
+
+        // The out-of-core run streamed tiles; it never materialized the
+        // matrix (tiles_served counts gathers, and the bands read are
+        // exactly the store's bands, possibly repeatedly — bounded by
+        // the reader's cache, not matrix size).
+        match &stored {
+            MatrixRef::Stored(reader) => {
+                assert!(reader.tiles_served() > 0, "{case}: blocks streamed from disk");
+                assert!(
+                    reader.chunks_read() + reader.cache_hits() >= reader.tiles_served(),
+                    "{case}: every tile touched at least one band"
+                );
+            }
+            MatrixRef::InMem(_) => unreachable!(),
+        }
+    }
+}
+
+#[test]
+fn store_backed_baseline_matches_in_memory() {
+    let dir = tmp_dir("baseline");
+    let matrix = planted(902, false);
+    let path = dir.join("m.lamc2");
+    pack_matrix(&matrix, &path, 64).unwrap();
+    let stored = MatrixRef::open_store(&path).unwrap();
+    let lamc = Lamc::new(fast_config(3, 0x5102));
+    let a = lamc.run_baseline(&matrix).unwrap();
+    let b = lamc.run_baseline(&stored).unwrap();
+    assert_eq!(a.row_labels, b.row_labels);
+    assert_eq!(a.col_labels, b.col_labels);
+}
+
+#[test]
+fn random_tiles_equal_in_memory_slices_property() {
+    // Property sweep across layouts, band heights and seeds: a store
+    // tile must equal the in-memory gather for arbitrary index sets.
+    let mut rng = Xoshiro256::seed_from(777);
+    for sparse in [false, true] {
+        for chunk_rows in [5, 32, 512] {
+            let dir = tmp_dir(&format!("prop_{sparse}_{chunk_rows}"));
+            let matrix = planted(900 + chunk_rows as u64, sparse);
+            let path = dir.join("m.lamc2");
+            pack_matrix(&matrix, &path, chunk_rows).unwrap();
+            let reader = StoreReader::open(&path).unwrap();
+            for _ in 0..10 {
+                let nr = 1 + rng.next_below(40);
+                let nc = 1 + rng.next_below(30);
+                let rows = rng.sample_indices(matrix.rows(), nr);
+                let cols = rng.sample_indices(matrix.cols(), nc);
+                assert_eq!(
+                    reader.tile(&rows, &cols).unwrap().data(),
+                    matrix.gather_block(&rows, &cols).data(),
+                    "sparse={sparse} chunk_rows={chunk_rows}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ingest_then_serve_through_tcp() {
+    let dir = tmp_dir("serve");
+    let matrix = planted(903, false);
+    let store_path = dir.join("planted.lamc2");
+    pack_matrix(&matrix, &store_path, 64).unwrap();
+
+    let manager = ServiceManager::new(ServiceConfig {
+        runners: 1,
+        queue_capacity: 8,
+        cache_capacity_bytes: 8 << 20,
+        ..Default::default()
+    });
+    let server = ServiceServer::spawn("127.0.0.1:0", manager.clone()).unwrap();
+    let mut client = ServiceClient::connect(server.addr()).unwrap();
+
+    // LOAD the store over the wire, then submit against it.
+    let (rows, cols) = client
+        .load_store("planted", store_path.to_str().unwrap())
+        .unwrap();
+    assert_eq!((rows, cols), (300, 240));
+
+    let spec = JobSpec { matrix: "planted".into(), k: 3, seed: 904, ..Default::default() };
+    let id = client.submit(&spec).unwrap();
+    let reply = client.wait(id, Duration::from_secs(180)).unwrap();
+    assert_eq!(reply.row_labels.len(), 300);
+    assert_eq!(reply.col_labels.len(), 240);
+
+    // The service answer (shipped over the binary RESULTB framing) must
+    // equal a local in-memory run of the identical configuration.
+    let local = Lamc::new(spec.lamc_config().unwrap()).run(&matrix).unwrap();
+    assert_eq!(local.row_labels, reply.row_labels);
+    assert_eq!(local.col_labels, reply.col_labels);
+    assert_eq!(local.k, reply.k);
+
+    client.shutdown().unwrap();
+    server.join();
+    manager.shutdown();
+}
+
+#[test]
+fn cache_persists_across_manager_restart() {
+    let root = tmp_dir("restart_root");
+    let matrix = planted(905, false);
+    let spec = JobSpec { matrix: "m".into(), k: 3, seed: 906, ..Default::default() };
+
+    let config = || ServiceConfig {
+        runners: 1,
+        queue_capacity: 8,
+        cache_capacity_bytes: 8 << 20,
+        store_root: Some(root.clone()),
+        ..Default::default()
+    };
+
+    // First life: compute and (implicitly) spill the result.
+    let first_labels = {
+        let mgr = ServiceManager::new(config());
+        mgr.register("m", matrix.clone());
+        let id = mgr.submit(spec.clone()).unwrap();
+        let record = mgr.wait(id, Duration::from_secs(180)).expect("job finished");
+        assert_eq!(record.state, lamc::service::JobState::Done);
+        assert!(!record.cached, "first run computes");
+        mgr.shutdown();
+        record.result.unwrap()
+    };
+
+    // Second life: same store root, fresh process state. The identical
+    // submission must be served from the persisted cache — no pipeline.
+    let mgr = ServiceManager::new(config());
+    mgr.register("m", matrix);
+    let id = mgr.submit(spec).unwrap();
+    let record = mgr.wait(id, Duration::from_secs(180)).expect("job finished");
+    assert_eq!(record.state, lamc::service::JobState::Done);
+    assert!(record.cached, "restart survivor must be a cache hit");
+    let out = record.result.unwrap();
+    assert_eq!(out.row_labels, first_labels.row_labels);
+    assert_eq!(out.col_labels, first_labels.col_labels);
+    assert_eq!(out.k, first_labels.k);
+    let snap = mgr.stats().snapshot();
+    assert_eq!(snap.cache_hits, 1);
+    assert_eq!(snap.blocks_total, 0, "no block ever executed in the second life");
+    assert_eq!(mgr.cache().disk_hits(), 1);
+    mgr.shutdown();
+}
+
+#[test]
+fn store_registration_uses_header_fingerprint_for_caching() {
+    // Two registrations of the same store file — e.g. before and after a
+    // restart, or under different names — must produce the same cache
+    // key, without scanning payloads.
+    let dir = tmp_dir("fingerprint");
+    let matrix = planted(907, true);
+    let path = dir.join("m.lamc2");
+    let summary = pack_matrix(&matrix, &path, 32).unwrap();
+
+    let mgr = ServiceManager::new(ServiceConfig {
+        runners: 1,
+        queue_capacity: 8,
+        cache_capacity_bytes: 8 << 20,
+        ..Default::default()
+    });
+    let fp_a = {
+        mgr.register_store("a", &path).unwrap();
+        MatrixRef::open_store(&path).unwrap().fingerprint()
+    };
+    assert_eq!(fp_a, summary.fingerprint, "registration fingerprint comes from the header");
+
+    // Same content under two names: the second submission hits the
+    // cache because the matrix half of the key is the content hash.
+    mgr.register_store("b", &path).unwrap();
+    let spec = |name: &str| JobSpec { matrix: name.into(), k: 3, seed: 908, ..Default::default() };
+    let a = mgr.submit(spec("a")).unwrap();
+    assert!(!mgr.wait(a, Duration::from_secs(180)).unwrap().cached);
+    let b = mgr.submit(spec("b")).unwrap();
+    assert!(mgr.wait(b, Duration::from_secs(180)).unwrap().cached, "same store, same key");
+    mgr.shutdown();
+}
