@@ -80,6 +80,15 @@ fn main() -> anyhow::Result<()> {
             cache_budget as f64 / 1e6,
             matrix_bytes as f64 / 1e6,
         );
+        // The high-water mark shows how much of the budget the run
+        // actually used (the ByteLru enforces the ceiling itself; the
+        // interesting number is how hard the bound was pressed).
+        println!(
+            "band cache peaked at {:.1} MB of its {:.1} MB budget ({} evictions)",
+            reader.cache_peak_bytes() as f64 / 1e6,
+            cache_budget as f64 / 1e6,
+            reader.cache_evictions(),
+        );
     }
     Ok(())
 }

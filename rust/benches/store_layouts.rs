@@ -1,0 +1,56 @@
+//! Row-band (LAMC2) vs tiled (LAMC3) store layouts under the three
+//! access shapes the pipeline generates: row-heavy blocks, column-heavy
+//! blocks, and square planner tiles. Reports wall time per gather and —
+//! the number the layout actually controls — payload bytes off disk.
+//!
+//! Run: `cargo bench --bench store_layouts` (plain `main()`, prints a
+//! table; see docs/BENCHMARKS.md for the harness conventions).
+
+use lamc::bench_util::{bench, Table};
+use lamc::matrix::{DenseMatrix, Matrix};
+use lamc::rng::Xoshiro256;
+use lamc::store::{pack_matrix, pack_matrix_tiled, StoreReader};
+
+fn main() {
+    let rows = 2048usize;
+    let cols = 1024usize;
+    let mut rng = Xoshiro256::seed_from(0x57031);
+    println!("== store layouts: {rows} x {cols} dense, 256-row bands vs 256x128 tiles ==\n");
+    let matrix = Matrix::Dense(DenseMatrix::randn(rows, cols, &mut rng));
+
+    let dir = std::env::temp_dir().join("lamc_bench_store_layouts");
+    std::fs::create_dir_all(&dir).unwrap();
+    let band_path = dir.join("m.lamc2");
+    let tiled_path = dir.join("m.lamc3");
+    pack_matrix(&matrix, &band_path, 256).unwrap();
+    pack_matrix_tiled(&matrix, &tiled_path, 256, 128).unwrap();
+
+    // Caches off: the point is bytes touched, not cache residency.
+    let shapes: [(&str, usize, usize); 3] = [
+        ("row-heavy (16 x 512)", 16, 512),
+        ("square (128 x 128)", 128, 128),
+        ("col-heavy (1024 x 32)", 1024, 32),
+    ];
+
+    let mut table = Table::new(&["access shape", "layout", "median", "payload bytes/gather"]);
+    for (name, nr, nc) in shapes {
+        for (layout, path) in [("lamc2", &band_path), ("lamc3", &tiled_path)] {
+            let reader = StoreReader::open_with_cache(path, 0).unwrap();
+            let mut qrng = Xoshiro256::seed_from(7);
+            let t = bench(1, 5, || {
+                let r = qrng.sample_indices(rows, nr);
+                let c = qrng.sample_indices(cols, nc);
+                std::hint::black_box(reader.tile(&r, &c).unwrap());
+            });
+            let per_gather = reader.bytes_read() / reader.tiles_served().max(1);
+            table.row(&[
+                name.to_string(),
+                layout.to_string(),
+                t.format(),
+                format!("{per_gather}"),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    println!("(lamc3 wins where the access is narrower than the matrix; lamc2 wins\n row-heavy shapes by avoiding per-tile seek/decode overhead)");
+}

@@ -1,0 +1,325 @@
+//! The one byte-bounded LRU behind every cache in the stack.
+//!
+//! Three subsystems need the same policy — keep the hottest entries
+//! resident while the total payload stays under a byte budget, evicting
+//! the least-recently-used first:
+//!
+//! * the service's result cache ([`crate::service`], finished labellings
+//!   keyed by `(matrix fingerprint, config hash)`),
+//! * the store reader's decoded-chunk cache ([`crate::store`], row bands
+//!   and tiles re-read across co-clustering rounds),
+//! * the result cache's disk-spill pruner (spilled `.lamcres` files,
+//!   oldest-first by spill recency).
+//!
+//! Each used to carry its own copy of the eviction loop; [`ByteLru`] is
+//! the single shared implementation. It is deliberately *not*
+//! thread-safe — every caller already serializes access behind its own
+//! `Mutex`, and hit/miss accounting stays with the caller (only the
+//! caller knows what a miss costs); the LRU itself tracks what nobody
+//! else can observe: resident bytes, the high-water mark, and evictions.
+//!
+//! Recency is a monotonic tick per entry plus a `BTreeMap` from tick to
+//! key, so lookup stays O(1) expected and eviction is O(log n) — flat
+//! enough for every caller, from a result cache holding tens of
+//! labellings to a spill-directory replay over a hundred thousand
+//! files, without `unsafe` or hand-rolled linked lists.
+
+use std::collections::{BTreeMap, HashMap};
+use std::hash::Hash;
+
+struct Slot<V> {
+    value: V,
+    bytes: usize,
+    last_used: u64,
+}
+
+/// What [`ByteLru::insert`] displaced.
+///
+/// `evicted` holds entries pushed out to make room (oldest first);
+/// `replaced` is the previous value under the same key (not an
+/// eviction — the key stayed resident); `rejected` is the new value
+/// itself when it exceeds the whole budget and was never admitted.
+#[derive(Debug)]
+pub struct Insertion<K, V> {
+    pub evicted: Vec<(K, V)>,
+    pub replaced: Option<V>,
+    pub rejected: Option<V>,
+}
+
+impl<K, V> Insertion<K, V> {
+    fn empty() -> Self {
+        Insertion { evicted: Vec::new(), replaced: None, rejected: None }
+    }
+}
+
+/// A byte-bounded least-recently-used map.
+///
+/// Entries carry an explicit byte weight (the value's resident size as
+/// the caller measures it). `insert` keeps the total weight at or under
+/// `capacity`, evicting stale entries — never the key just inserted —
+/// and returning everything it displaced so the caller can count, drop,
+/// or delete (the disk pruner turns evictions into `remove_file`s).
+///
+/// A value larger than the entire capacity is rejected rather than
+/// admitted-then-evicted; capacity 0 therefore disables the cache.
+pub struct ByteLru<K, V> {
+    map: HashMap<K, Slot<V>>,
+    /// Recency index: `last_used` tick → key. Ticks are unique (one
+    /// counter, bumped per touch), so the smallest tick is the LRU
+    /// entry and eviction is a `pop_first`.
+    order: BTreeMap<u64, K>,
+    capacity: usize,
+    bytes: usize,
+    peak_bytes: usize,
+    tick: u64,
+    evictions: u64,
+}
+
+impl<K: Eq + Hash + Clone, V> ByteLru<K, V> {
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            map: HashMap::new(),
+            order: BTreeMap::new(),
+            capacity,
+            bytes: 0,
+            peak_bytes: 0,
+            tick: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Byte budget this cache holds its entries under.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current resident payload bytes.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// High-water mark of [`bytes`](Self::bytes) over the cache's
+    /// lifetime — the proof a bounded-memory pass actually stayed
+    /// bounded (the repack memory-guard test asserts on this).
+    pub fn peak_bytes(&self) -> usize {
+        self.peak_bytes
+    }
+
+    /// Entries evicted to keep the budget (rejections and same-key
+    /// replacements are not evictions).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn contains(&self, key: &K) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Look up and refresh recency.
+    pub fn get(&mut self, key: &K) -> Option<&V> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(key) {
+            Some(slot) => {
+                self.order.remove(&slot.last_used);
+                self.order.insert(tick, key.clone());
+                slot.last_used = tick;
+                Some(&slot.value)
+            }
+            None => None,
+        }
+    }
+
+    /// Look up without touching recency.
+    pub fn peek(&self, key: &K) -> Option<&V> {
+        self.map.get(key).map(|s| &s.value)
+    }
+
+    /// Remove an entry, returning its value. Not an eviction.
+    pub fn remove(&mut self, key: &K) -> Option<V> {
+        self.map.remove(key).map(|slot| {
+            self.order.remove(&slot.last_used);
+            self.bytes -= slot.bytes;
+            slot.value
+        })
+    }
+
+    /// Insert `value` under `key` with an explicit byte weight, evicting
+    /// least-recently-used entries until the budget holds. See
+    /// [`Insertion`] for what comes back out.
+    pub fn insert(&mut self, key: K, value: V, bytes: usize) -> Insertion<K, V> {
+        let mut out = Insertion::empty();
+        if bytes > self.capacity {
+            out.rejected = Some(value);
+            return out;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(old) = self.map.insert(key.clone(), Slot { value, bytes, last_used: tick }) {
+            self.order.remove(&old.last_used);
+            self.bytes -= old.bytes;
+            out.replaced = Some(old.value);
+        }
+        self.order.insert(tick, key);
+        self.bytes += bytes;
+        while self.bytes > self.capacity {
+            // The smallest tick is the LRU entry. It can never be the
+            // key just inserted (which holds the newest tick) while the
+            // loop runs: if everything else were already evicted, the
+            // new entry alone fits (oversized values were rejected
+            // above) and the loop condition fails first.
+            let Some((_, victim)) = self.order.pop_first() else {
+                break;
+            };
+            let slot = self.map.remove(&victim).unwrap();
+            self.bytes -= slot.bytes;
+            self.evictions += 1;
+            out.evicted.push((victim, slot.value));
+        }
+        self.peak_bytes = self.peak_bytes.max(self.bytes);
+        out
+    }
+}
+
+impl<K, V> std::fmt::Debug for ByteLru<K, V> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ByteLru")
+            .field("len", &self.map.len())
+            .field("bytes", &self.bytes)
+            .field("capacity", &self.capacity)
+            .field("evictions", &self.evictions)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eviction_order_is_least_recently_used() {
+        let mut lru: ByteLru<&str, u32> = ByteLru::new(30);
+        assert!(lru.insert("a", 1, 10).evicted.is_empty());
+        assert!(lru.insert("b", 2, 10).evicted.is_empty());
+        assert!(lru.insert("c", 3, 10).evicted.is_empty());
+        // Touch "a" so "b" becomes the oldest.
+        assert_eq!(lru.get(&"a"), Some(&1));
+        let ins = lru.insert("d", 4, 10);
+        assert_eq!(ins.evicted.len(), 1);
+        assert_eq!(ins.evicted[0], ("b", 2));
+        assert!(lru.contains(&"a"), "recently touched survives");
+        assert!(lru.contains(&"c"));
+        assert!(lru.contains(&"d"));
+        assert_eq!(lru.evictions(), 1);
+    }
+
+    #[test]
+    fn multi_entry_eviction_drains_oldest_first() {
+        let mut lru: ByteLru<u32, u32> = ByteLru::new(30);
+        lru.insert(1, 1, 10);
+        lru.insert(2, 2, 10);
+        lru.insert(3, 3, 10);
+        // A 30-byte value needs every older entry gone.
+        let ins = lru.insert(4, 4, 30);
+        assert_eq!(ins.evicted, vec![(1, 1), (2, 2), (3, 3)], "oldest first");
+        assert_eq!(lru.len(), 1);
+        assert_eq!(lru.bytes(), 30);
+        assert_eq!(lru.evictions(), 3);
+    }
+
+    #[test]
+    fn byte_accounting_on_insert_update_remove() {
+        let mut lru: ByteLru<&str, u32> = ByteLru::new(100);
+        lru.insert("a", 1, 40);
+        assert_eq!(lru.bytes(), 40);
+        // Same-key update replaces the old weight, not adds to it.
+        let ins = lru.insert("a", 2, 25);
+        assert_eq!(ins.replaced, Some(1));
+        assert!(ins.evicted.is_empty());
+        assert_eq!(lru.bytes(), 25);
+        assert_eq!(lru.len(), 1);
+        assert_eq!(lru.remove(&"a"), Some(2));
+        assert_eq!(lru.bytes(), 0);
+        assert!(lru.is_empty());
+        assert_eq!(lru.evictions(), 0, "updates and removes are not evictions");
+    }
+
+    #[test]
+    fn oversized_value_is_rejected_not_admitted() {
+        let mut lru: ByteLru<&str, u32> = ByteLru::new(64);
+        lru.insert("small", 1, 10);
+        let ins = lru.insert("huge", 2, 65);
+        assert_eq!(ins.rejected, Some(2));
+        assert!(ins.evicted.is_empty(), "resident entries untouched");
+        assert!(lru.contains(&"small"));
+        assert_eq!(lru.bytes(), 10);
+        assert_eq!(lru.evictions(), 0);
+    }
+
+    #[test]
+    fn zero_capacity_disables_the_cache() {
+        let mut lru: ByteLru<u32, u32> = ByteLru::new(0);
+        let ins = lru.insert(1, 1, 1);
+        assert_eq!(ins.rejected, Some(1));
+        assert!(lru.is_empty());
+        assert_eq!(lru.bytes(), 0);
+        // Even a zero-weight entry fits a zero budget: bytes <= capacity.
+        let ins = lru.insert(2, 2, 0);
+        assert!(ins.rejected.is_none());
+        assert_eq!(lru.len(), 1);
+    }
+
+    #[test]
+    fn tiny_capacity_holds_exactly_one_entry() {
+        let mut lru: ByteLru<u32, u32> = ByteLru::new(1);
+        assert!(lru.insert(1, 10, 1).evicted.is_empty());
+        let ins = lru.insert(2, 20, 1);
+        assert_eq!(ins.evicted, vec![(1, 10)]);
+        assert_eq!(lru.len(), 1);
+        assert_eq!(lru.bytes(), 1);
+    }
+
+    #[test]
+    fn peek_does_not_refresh_recency() {
+        let mut lru: ByteLru<&str, u32> = ByteLru::new(20);
+        lru.insert("a", 1, 10);
+        lru.insert("b", 2, 10);
+        assert_eq!(lru.peek(&"a"), Some(&1));
+        // "a" is still the oldest: it goes, not "b".
+        let ins = lru.insert("c", 3, 10);
+        assert_eq!(ins.evicted, vec![("a", 1)]);
+    }
+
+    #[test]
+    fn peak_bytes_is_a_high_water_mark() {
+        let mut lru: ByteLru<u32, u32> = ByteLru::new(100);
+        lru.insert(1, 1, 60);
+        lru.insert(2, 2, 30);
+        assert_eq!(lru.peak_bytes(), 90);
+        lru.remove(&1);
+        assert_eq!(lru.bytes(), 30);
+        assert_eq!(lru.peak_bytes(), 90, "peak survives shrinking");
+        // Inserts that evict never push the peak past capacity.
+        lru.insert(3, 3, 80);
+        assert!(lru.peak_bytes() <= 110);
+    }
+
+    #[test]
+    fn counters_track_every_eviction() {
+        let mut lru: ByteLru<u32, u32> = ByteLru::new(10);
+        for i in 0..5u32 {
+            lru.insert(i, i, 10);
+        }
+        assert_eq!(lru.evictions(), 4, "each insert evicted its predecessor");
+        assert_eq!(lru.len(), 1);
+        assert!(lru.contains(&4));
+    }
+}

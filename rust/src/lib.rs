@@ -73,6 +73,7 @@
 )]
 
 pub mod bench_util;
+pub mod cache;
 pub mod cli;
 pub mod cocluster;
 pub mod config;

@@ -4,9 +4,13 @@
 //! * `run`      — run LAMC (or a baseline) on a named dataset, report
 //!                time + NMI/ARI against the planted ground truth.
 //! * `plan`     — show the partition plan the probabilistic model picks.
-//! * `pack`     — convert a dataset or matrix file into a LAMC2 chunked
-//!                store for out-of-core runs.
-//! * `ingest`   — stream rows from stdin into a LAMC2 store.
+//! * `pack`     — convert a dataset or matrix file into a chunked store
+//!                (row-band LAMC2, or tiled LAMC3 with `--chunk-cols`)
+//!                for out-of-core runs.
+//! * `ingest`   — stream rows from stdin into a store.
+//! * `repack`   — re-chunk an existing store (row-band ↔ tiled, new
+//!                band/tile extents) store-to-store, without
+//!                materializing the matrix.
 //! * `inspect`  — print (and optionally checksum-verify) a store's
 //!                self-description.
 //! * `serve`    — run the long-lived co-clustering service (TCP).
@@ -25,7 +29,8 @@
 //! lamc run --dataset amazon1000 --method lamc-scc --k 5
 //! lamc plan --rows 18000 --cols 1000 --p-thresh 0.99
 //! lamc pack --dataset rcv1_large --output rcv1.lamc2
-//! lamc inspect --store rcv1.lamc2 --verify
+//! lamc repack --store rcv1.lamc2 --output rcv1.lamc3 --chunk-cols 256
+//! lamc inspect --store rcv1.lamc3 --verify
 //! lamc serve --addr 127.0.0.1:4666 --store-root /var/lib/lamc
 //! lamc load --addr 127.0.0.1:4666 --name rcv1 --store rcv1.lamc2
 //! lamc submit --addr 127.0.0.1:4666 --matrix rcv1 --k 6 --wait
@@ -61,10 +66,12 @@ USAGE:
                 [--tau F] [--no-runtime] [--verbose]
   lamc plan     --rows N --cols N [--p-thresh F] [--row-frac F] [--col-frac F]
   lamc pack     (--dataset NAME [--rows N] [--seed N] | --input FILE.lamc|.mtx)
-                --output FILE.lamc2 [--chunk-rows N]
-  lamc ingest   --output FILE.lamc2 --cols N [--format dense|sparse]
-                [--chunk-rows N]   (rows on stdin; see docs/STORE.md)
-  lamc inspect  --store FILE.lamc2 [--verify]
+                --output FILE [--chunk-rows N] [--chunk-cols N (tiled LAMC3)]
+  lamc ingest   --output FILE --cols N [--format dense|sparse]
+                [--chunk-rows N] [--chunk-cols N]   (rows on stdin; see docs/STORE.md)
+  lamc repack   --store FILE --output FILE [--chunk-rows N]
+                [--chunk-cols N|0 (0 = row-band)] [--cache-mb N]
+  lamc inspect  --store FILE [--verify]
   lamc serve    [--addr HOST:PORT] [--runners N] [--queue N] [--cache-mb N]
                 [--store-root DIR] [--cache-disk-mb N] [--stores name=file.lamc2,...]
                 [--datasets a,b] [--seed N] [--job-ttl SECS|0=keep] [--verbose]
@@ -106,6 +113,7 @@ fn run() -> Result<()> {
         "plan" => cmd_plan(&args),
         "pack" => cmd_pack(&args),
         "ingest" => cmd_ingest(&args),
+        "repack" => cmd_repack(&args),
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "submit" => cmd_submit(&args),
@@ -119,19 +127,44 @@ fn run() -> Result<()> {
     }
 }
 
+/// The self-description lines shared by `pack`/`ingest`/`repack`
+/// summaries and `inspect` — one printer so the two can never diverge
+/// (CI greps this text).
+#[allow(clippy::too_many_arguments)]
+fn print_store_description(
+    tiled: bool,
+    layout: Layout,
+    rows: usize,
+    cols: usize,
+    nnz: u64,
+    chunks: usize,
+    chunk_rows: usize,
+    chunk_cols: usize,
+) {
+    println!("format      : {}", if tiled { "lamc3 (tiled)" } else { "lamc2 (row-band)" });
+    println!("layout      : {}", layout.as_str());
+    println!("shape       : {rows} x {cols} ({nnz} stored entries)");
+    if tiled {
+        println!("chunks      : {chunks} tiles of {chunk_rows} x {chunk_cols}");
+    } else {
+        println!("chunks      : {chunks} bands of {chunk_rows} rows");
+    }
+}
+
 fn print_summary(s: &StoreSummary) {
     println!("store       : {:?}", s.path);
-    println!("layout      : {}", s.layout.as_str());
-    println!("shape       : {} x {} ({} stored entries)", s.rows, s.cols, s.nnz);
-    println!("chunks      : {} bands of {} rows", s.chunks, s.chunk_rows);
+    print_store_description(
+        s.tiled, s.layout, s.rows, s.cols, s.nnz, s.chunks, s.chunk_rows, s.chunk_cols,
+    );
     println!("fingerprint : {:016x}", s.fingerprint);
     println!("file size   : {} bytes", s.file_bytes);
 }
 
 fn cmd_pack(args: &Args) -> Result<()> {
-    args.expect_flags(&["dataset", "input", "output", "rows", "seed", "chunk-rows"])?;
+    args.expect_flags(&["dataset", "input", "output", "rows", "seed", "chunk-rows", "chunk-cols"])?;
     let output = PathBuf::from(args.get("output").context("--output required")?);
     let chunk_rows = args.get_usize("chunk-rows", DEFAULT_CHUNK_ROWS)?;
+    let chunk_cols = args.get_usize("chunk-cols", 0)?;
     let matrix = match (args.get("dataset"), args.get("input")) {
         (Some(name), None) => {
             let rows = args.get("rows").map(|r| r.parse::<usize>()).transpose()?;
@@ -155,8 +188,42 @@ fn cmd_pack(args: &Args) -> Result<()> {
             .into())
         }
     };
-    let summary = lamc::store::pack_matrix(&matrix, &output, chunk_rows)?;
+    let summary = if chunk_cols > 0 {
+        lamc::store::pack_matrix_tiled(&matrix, &output, chunk_rows, chunk_cols)?
+    } else {
+        lamc::store::pack_matrix(&matrix, &output, chunk_rows)?
+    };
     print_summary(&summary);
+    Ok(())
+}
+
+/// Re-chunk a store into a new geometry, streaming band by band —
+/// `--chunk-cols N` produces a tiled (LAMC3) store, `0` (or absent,
+/// when the source is row-band) a row-band one. Band/tile extents
+/// default to the source's.
+fn cmd_repack(args: &Args) -> Result<()> {
+    args.expect_flags(&["store", "output", "chunk-rows", "chunk-cols", "cache-mb"])?;
+    let store = PathBuf::from(args.get("store").context("--store required")?);
+    let output = PathBuf::from(args.get("output").context("--output required")?);
+    let cache_budget = args.get_usize("cache-mb", 0)? << 20;
+    let reader = StoreReader::open_with_cache(&store, cache_budget)?;
+    let h = reader.header();
+    let chunk_rows = args.get_usize("chunk-rows", h.chunk_rows)?;
+    let chunk_cols = match args.get("chunk-cols") {
+        Some(_) => match args.get_usize("chunk-cols", 0)? {
+            0 => None,
+            w => Some(w),
+        },
+        None if h.is_tiled() => Some(h.chunk_cols),
+        None => None,
+    };
+    let summary = lamc::store::repack_reader(&reader, &output, chunk_rows, chunk_cols)?;
+    print_summary(&summary);
+    println!(
+        "source      : {} chunks read, {} payload bytes streamed",
+        reader.chunks_read(),
+        reader.bytes_read()
+    );
     Ok(())
 }
 
@@ -166,17 +233,22 @@ fn cmd_pack(args: &Args) -> Result<()> {
 /// skipped. This is the out-of-core ingest path: the matrix is never
 /// resident — only the current row band is.
 fn cmd_ingest(args: &Args) -> Result<()> {
-    args.expect_flags(&["output", "cols", "format", "chunk-rows"])?;
+    args.expect_flags(&["output", "cols", "format", "chunk-rows", "chunk-cols"])?;
     let output = PathBuf::from(args.get("output").context("--output required")?);
     let cols = args.get_usize("cols", 0)?;
     anyhow::ensure!(cols > 0, "--cols required (row width is fixed up front)");
     let chunk_rows = args.get_usize("chunk-rows", DEFAULT_CHUNK_ROWS)?;
+    let chunk_cols = args.get_usize("chunk-cols", 0)?;
     let layout = match args.get_or("format", "dense") {
         "dense" => Layout::Dense,
         "sparse" => Layout::Csr,
         other => bail!("unknown --format '{other}' (want dense|sparse)"),
     };
-    let mut writer = ChunkWriter::create(&output, layout, cols, chunk_rows)?;
+    let mut writer = if chunk_cols > 0 {
+        ChunkWriter::create_tiled(&output, layout, cols, chunk_rows, chunk_cols)?
+    } else {
+        ChunkWriter::create(&output, layout, cols, chunk_rows)?
+    };
     let stdin = std::io::stdin();
     let mut dense_row: Vec<f32> = Vec::with_capacity(cols);
     let mut sparse_row: Vec<(u32, f32)> = Vec::new();
@@ -218,9 +290,12 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     let reader = StoreReader::open(&path)?;
     let h = reader.header();
     println!("store       : {path:?}");
-    println!("layout      : {}", h.layout.as_str());
-    println!("shape       : {} x {} ({} stored entries)", h.rows, h.cols, h.nnz);
-    println!("chunks      : {} bands of {} rows", h.n_chunks, h.chunk_rows);
+    print_store_description(
+        h.is_tiled(), h.layout, h.rows, h.cols, h.nnz, h.n_chunks, h.chunk_rows, h.chunk_cols,
+    );
+    if h.is_tiled() {
+        println!("grid        : {} x {} tile grid", h.n_row_bands(), h.n_col_bands());
+    }
     println!("fingerprint : {:016x}", h.fingerprint);
     if args.has("verify") {
         reader.verify()?;

@@ -17,7 +17,6 @@
 //! (eviction from memory never deletes a spilled file). Disk entries
 //! are checksummed; a damaged file is treated as a miss, never an error.
 
-use std::collections::HashMap;
 use std::fs::File;
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
@@ -26,6 +25,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
+use crate::cache::ByteLru;
 use crate::store::checksum_bytes;
 
 /// Cache key: (matrix content hash, canonical config hash).
@@ -56,20 +56,10 @@ impl JobOutput {
 /// Magic of a spilled result file.
 const RESULT_MAGIC: &[u8; 8] = b"LAMCRES1";
 
-struct Entry {
-    value: Arc<JobOutput>,
-    bytes: usize,
-    last_used: u64,
-}
-
-struct CacheInner {
-    map: HashMap<CacheKey, Entry>,
-    bytes: usize,
-    tick: u64,
-}
-
 /// Thread-safe LRU result cache bounded by total payload bytes, with an
-/// optional disk tier.
+/// optional disk tier. The memory tier is a shared [`ByteLru`] — the
+/// same eviction policy the store reader's chunk cache and the
+/// disk-spill pruner use.
 ///
 /// Hit/miss accounting deliberately lives with the caller (the service
 /// manager counts into `coordinator::Stats`, the type that already
@@ -77,9 +67,7 @@ struct CacheInner {
 /// else can observe: evictions, resident bytes, disk loads/spill
 /// failures.
 pub struct ResultCache {
-    inner: Mutex<CacheInner>,
-    capacity_bytes: usize,
-    evictions: AtomicU64,
+    inner: Mutex<ByteLru<CacheKey, Arc<JobOutput>>>,
     persist_dir: Option<PathBuf>,
     /// Disk-tier byte budget; 0 = unbounded (no pruning).
     disk_capacity_bytes: usize,
@@ -100,9 +88,7 @@ pub struct ResultCache {
 impl ResultCache {
     pub fn new(capacity_bytes: usize) -> Self {
         Self {
-            inner: Mutex::new(CacheInner { map: HashMap::new(), bytes: 0, tick: 0 }),
-            capacity_bytes,
-            evictions: AtomicU64::new(0),
+            inner: Mutex::new(ByteLru::new(capacity_bytes)),
             persist_dir: None,
             disk_capacity_bytes: 0,
             disk_hits: AtomicU64::new(0),
@@ -157,11 +143,8 @@ impl ResultCache {
     pub fn get(&self, key: &CacheKey) -> Option<Arc<JobOutput>> {
         {
             let mut inner = self.inner.lock().unwrap();
-            inner.tick += 1;
-            let tick = inner.tick;
-            if let Some(e) = inner.map.get_mut(key) {
-                e.last_used = tick;
-                return Some(Arc::clone(&e.value));
+            if let Some(value) = inner.get(key) {
+                return Some(Arc::clone(value));
             }
         }
         let dir = self.persist_dir.as_ref()?;
@@ -205,6 +188,11 @@ impl ResultCache {
     /// skipped, never raised. The directory re-scan is amortized: it
     /// only runs once enough new bytes have spilled to matter (1/16 of
     /// the budget), not on every insert.
+    ///
+    /// The eviction decision is the shared [`ByteLru`]'s: files replay
+    /// into a budget-bounded LRU in mtime order (oldest first), so
+    /// whatever the LRU displaces — including any single file larger
+    /// than the whole budget — is exactly the set to delete.
     fn prune_disk(&self, dir: &Path) {
         if self.disk_capacity_bytes == 0 {
             return;
@@ -233,12 +221,15 @@ impl ResultCache {
             return;
         }
         files.sort_by(|a, b| a.0.cmp(&b.0));
-        for (_, len, path) in files {
-            if total <= self.disk_capacity_bytes as u64 {
-                break;
-            }
+        let mut lru: ByteLru<usize, PathBuf> = ByteLru::new(self.disk_capacity_bytes);
+        let mut doomed: Vec<PathBuf> = Vec::new();
+        for (i, (_, len, path)) in files.into_iter().enumerate() {
+            let ins = lru.insert(i, path, len as usize);
+            doomed.extend(ins.evicted.into_iter().map(|(_, p)| p));
+            doomed.extend(ins.rejected);
+        }
+        for path in doomed {
             if std::fs::remove_file(&path).is_ok() {
-                total -= len;
                 self.disk_evictions.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -246,31 +237,9 @@ impl ResultCache {
 
     fn insert_memory(&self, key: CacheKey, value: Arc<JobOutput>) {
         let bytes = value.approx_bytes();
-        if bytes > self.capacity_bytes {
-            return;
-        }
-        let mut inner = self.inner.lock().unwrap();
-        inner.tick += 1;
-        let tick = inner.tick;
-        if let Some(old) = inner.map.insert(key, Entry { value, bytes, last_used: tick }) {
-            inner.bytes -= old.bytes;
-        }
-        inner.bytes += bytes;
-        while inner.bytes > self.capacity_bytes {
-            // O(n) LRU scan: entry counts stay small because the budget
-            // is on bytes and each entry is a whole labelling.
-            let Some((&victim, _)) = inner
-                .map
-                .iter()
-                .filter(|(k2, _)| **k2 != key)
-                .min_by_key(|(_, e)| e.last_used)
-            else {
-                break;
-            };
-            let e = inner.map.remove(&victim).unwrap();
-            inner.bytes -= e.bytes;
-            self.evictions.fetch_add(1, Ordering::Relaxed);
-        }
+        // The shared LRU rejects values over the whole budget and evicts
+        // stale entries past it; the displaced `Arc`s drop here.
+        let _ = self.inner.lock().unwrap().insert(key, value, bytes);
     }
 
     /// Write-then-rename so a crash mid-write can never leave a
@@ -302,7 +271,7 @@ impl ResultCache {
     }
 
     pub fn evictions(&self) -> u64 {
-        self.evictions.load(Ordering::Relaxed)
+        self.inner.lock().unwrap().evictions()
     }
 
     /// Entries served from the disk tier (restart survivors).
@@ -321,7 +290,7 @@ impl ResultCache {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.inner.lock().unwrap().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -330,11 +299,11 @@ impl ResultCache {
 
     /// Current payload bytes held in memory.
     pub fn bytes(&self) -> usize {
-        self.inner.lock().unwrap().bytes
+        self.inner.lock().unwrap().bytes()
     }
 
     pub fn capacity_bytes(&self) -> usize {
-        self.capacity_bytes
+        self.inner.lock().unwrap().capacity()
     }
 }
 

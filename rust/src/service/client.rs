@@ -206,7 +206,7 @@ impl ServiceClient {
         Ok((r, c))
     }
 
-    /// Register a LAMC2 store file on the server as a disk-resident
+    /// Register a LAMC2/LAMC3 store file on the server as a disk-resident
     /// matrix (jobs against it stream tiles out-of-core); returns
     /// (rows, cols). Space-free path, as with [`ServiceClient::load_file`].
     pub fn load_store(&mut self, name: &str, path: &str) -> Result<(usize, usize)> {

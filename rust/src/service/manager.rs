@@ -379,9 +379,9 @@ impl ServiceManager {
         fingerprint
     }
 
-    /// Register a LAMC2 store file as a disk-resident matrix: the
-    /// pipeline will stream row-band tiles from it instead of holding
-    /// the matrix in RAM. Returns (rows, cols).
+    /// Register a LAMC2/LAMC3 store file as a disk-resident matrix: the
+    /// pipeline will stream chunk-backed tiles from it instead of
+    /// holding the matrix in RAM. Returns (rows, cols).
     pub fn register_store(&self, name: &str, path: &Path) -> Result<(usize, usize)> {
         let matrix = MatrixRef::open_store(path)?;
         let shape = (matrix.rows(), matrix.cols());
@@ -400,12 +400,12 @@ impl ServiceManager {
         Ok(shape)
     }
 
-    /// Register a matrix loaded from disk: a LAMC2 store (kept
+    /// Register a matrix loaded from disk: a LAMC2/LAMC3 store (kept
     /// disk-resident), MatrixMarket when the path ends in `.mtx`, or the
     /// LAMC binary format otherwise (both materialized into RAM).
     pub fn load_file(&self, name: &str, path: &Path) -> Result<(usize, usize)> {
         match path.extension().and_then(|e| e.to_str()) {
-            Some("lamc2") => self.register_store(name, path),
+            Some("lamc2") | Some("lamc3") => self.register_store(name, path),
             Some("mtx") => {
                 let matrix = Matrix::Sparse(crate::matrix::io::read_matrix_market(path)?);
                 let shape = (matrix.rows(), matrix.cols());

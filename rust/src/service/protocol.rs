@@ -47,7 +47,7 @@ pub enum Request {
     ResultBinary { id: u64 },
     Stats,
     /// Load a matrix into the registry: from a named dataset spec, a
-    /// matrix file path, or a LAMC2 store (kept disk-resident). Exactly
+    /// matrix file path, or a LAMC2/LAMC3 store (kept disk-resident). Exactly
     /// one of `dataset`/`path`/`store` must be given.
     Load {
         name: String,

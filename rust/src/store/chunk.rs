@@ -1,20 +1,28 @@
-//! Streaming writer and random-access reader for LAMC2 stores.
+//! Streaming writer and random-access reader for LAMC2/LAMC3 stores.
 //!
 //! [`ChunkWriter`] is the ingest side: rows arrive one at a time
 //! (`append_dense_row` / `append_sparse_row`), are buffered into the
 //! current row band, and each band is sealed — encoded, checksummed,
-//! written, fsynced — the moment it fills. Peak writer memory is one
-//! band, never the matrix; total row count need not be known up front
-//! (the self-description lives in the footer, written by `finish`).
+//! written, fsynced — the moment it fills. In tiled (LAMC3) mode the
+//! band is split into column tiles as it seals, so tiled ingest is
+//! exactly as streaming as row-band ingest: peak writer memory is one
+//! band, never the matrix, and total row count need not be known up
+//! front (the self-description lives in the footer, written by
+//! `finish`).
 //!
 //! [`StoreReader`] is the serving side: `tile(rows, cols)` gathers an
-//! arbitrary-order submatrix by reading **only the row bands the
-//! requested rows touch**, verifying each band's checksum before use.
-//! An optional byte-bounded LRU of decoded bands absorbs the re-reads a
-//! partitioned co-clustering round generates; with the cache disabled,
-//! peak reader memory is one decoded band plus the gathered tile.
+//! arbitrary-order submatrix by reading **only the chunks the requested
+//! rows *and columns* intersect**, verifying each chunk's checksum
+//! before use. On a row-band store that is every band the rows touch;
+//! on a tiled store a column-heavy query skips the column bands it
+//! doesn't need — strictly fewer bytes off disk for the planner's
+//! submatrix access pattern. A byte-bounded [`ByteLru`] of decoded
+//! chunks (the same LRU the service result cache uses) absorbs the
+//! re-reads a partitioned co-clustering round generates; with the cache
+//! disabled, peak reader memory is one decoded chunk plus the gathered
+//! tile.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::fs::File;
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
@@ -23,17 +31,20 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, ensure, Context, Result};
 
+use crate::cache::ByteLru;
 use crate::matrix::{CsrMatrix, DenseMatrix, Matrix};
 
 use super::format::{
     checksum_bytes, decode_footer, encode_footer, store_fingerprint, ChunkMeta, Layout,
-    StoreError, StoreHeader, DEFAULT_CHUNK_ROWS, FOOTER_MAGIC, MAGIC, TRAILER_BYTES,
+    StoreError, StoreHeader, DEFAULT_CHUNK_ROWS, FOOTER_MAGIC, FOOTER_MAGIC_TILED, MAGIC,
+    MAGIC_TILED, TRAILER_BYTES, VERSION, VERSION_TILED,
 };
 
-/// Default byte budget for the decoded-band cache of [`StoreReader::open`].
+/// Default byte budget for the decoded-chunk cache of [`StoreReader::open`].
 pub const DEFAULT_CACHE_BYTES: usize = 64 << 20;
 
-/// What a finished ingest produced (printed by `lamc pack` / `ingest`).
+/// What a finished ingest produced (printed by `lamc pack` / `ingest` /
+/// `repack`).
 #[derive(Clone, Debug)]
 pub struct StoreSummary {
     pub path: PathBuf,
@@ -43,6 +54,10 @@ pub struct StoreSummary {
     pub nnz: u64,
     pub chunks: usize,
     pub chunk_rows: usize,
+    /// Column-band width (`cols` for a row-band store).
+    pub chunk_cols: usize,
+    /// Tiled (LAMC3) vs row-band (LAMC2).
+    pub tiled: bool,
     pub fingerprint: u64,
     /// Total file size, footer included.
     pub file_bytes: u64,
@@ -55,6 +70,8 @@ pub struct ChunkWriter {
     layout: Layout,
     cols: usize,
     chunk_rows: usize,
+    /// `Some(width)` writes the tiled (LAMC3) grid; `None` row bands.
+    chunk_cols: Option<usize>,
     /// Bytes written so far (leading magic included) = next chunk offset.
     offset: u64,
     index: Vec<ChunkMeta>,
@@ -66,24 +83,52 @@ pub struct ChunkWriter {
     rows_in_chunk: usize,
     total_rows: usize,
     total_nnz: u64,
+    /// `repack` carries the source fingerprint forward so re-chunking
+    /// the same content never changes its identity.
+    fingerprint_override: Option<u64>,
 }
 
 impl ChunkWriter {
-    /// Create a store file and start an ingest. `cols` is fixed up
-    /// front (every row must have this width); the row count is not.
+    /// Create a row-band (LAMC2) store file and start an ingest. `cols`
+    /// is fixed up front (every row must have this width); the row
+    /// count is not.
     pub fn create(path: &Path, layout: Layout, cols: usize, chunk_rows: usize) -> Result<Self> {
+        Self::create_inner(path, layout, cols, chunk_rows, None)
+    }
+
+    /// Create a tiled (LAMC3) store: chunks form a `chunk_rows` ×
+    /// `chunk_cols` grid of tiles, sealed band by band.
+    pub fn create_tiled(
+        path: &Path,
+        layout: Layout,
+        cols: usize,
+        chunk_rows: usize,
+        chunk_cols: usize,
+    ) -> Result<Self> {
+        ensure!(chunk_cols > 0, "tile width must be positive");
+        Self::create_inner(path, layout, cols, chunk_rows, Some(chunk_cols))
+    }
+
+    fn create_inner(
+        path: &Path,
+        layout: Layout,
+        cols: usize,
+        chunk_rows: usize,
+        chunk_cols: Option<usize>,
+    ) -> Result<Self> {
         ensure!(cols > 0, "store needs at least one column");
         ensure!(chunk_rows > 0, "chunk height must be positive");
         let mut file = BufWriter::new(
             File::create(path).with_context(|| format!("create store {path:?}"))?,
         );
-        file.write_all(MAGIC)?;
+        file.write_all(if chunk_cols.is_some() { MAGIC_TILED } else { MAGIC })?;
         Ok(Self {
             path: path.to_path_buf(),
             file,
             layout,
             cols,
             chunk_rows,
+            chunk_cols,
             offset: MAGIC.len() as u64,
             index: Vec::new(),
             dense_buf: Vec::new(),
@@ -93,12 +138,21 @@ impl ChunkWriter {
             rows_in_chunk: 0,
             total_rows: 0,
             total_nnz: 0,
+            fingerprint_override: None,
         })
     }
 
-    /// Create with the default band height.
+    /// Create with the default band height (row-band layout).
     pub fn create_default(path: &Path, layout: Layout, cols: usize) -> Result<Self> {
         Self::create(path, layout, cols, DEFAULT_CHUNK_ROWS)
+    }
+
+    /// Stamp the footer with this fingerprint instead of computing one
+    /// from the chunk checksums. `repack` uses it to preserve content
+    /// identity across re-chunking (the payload bytes differ; the
+    /// matrix does not).
+    pub fn set_fingerprint(&mut self, fingerprint: u64) {
+        self.fingerprint_override = Some(fingerprint);
     }
 
     pub fn layout(&self) -> Layout {
@@ -150,82 +204,142 @@ impl ChunkWriter {
         self.rows_in_chunk += 1;
         self.total_rows += 1;
         if self.rows_in_chunk == self.chunk_rows {
-            self.seal_chunk()?;
+            self.seal_band()?;
         }
         Ok(())
     }
 
-    /// Encode, checksum, write and fsync the open band.
-    fn seal_chunk(&mut self) -> Result<()> {
+    /// Encode the open band as dense column tiles:
+    /// `(col_lo, tile_cols, payload, nnz)` per tile, one tile spanning
+    /// the whole width in row-band mode. Each value is copied once.
+    fn encode_dense_tiles(&self, tile_width: usize) -> Vec<(usize, usize, Vec<u8>, u64)> {
+        let mut out = Vec::new();
+        let mut col_lo = 0usize;
+        while col_lo < self.cols {
+            let tile_cols = tile_width.min(self.cols - col_lo);
+            let mut payload = Vec::with_capacity(self.rows_in_chunk * tile_cols * 4);
+            for r in 0..self.rows_in_chunk {
+                let row = &self.dense_buf[r * self.cols..(r + 1) * self.cols];
+                for &v in &row[col_lo..col_lo + tile_cols] {
+                    payload.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            out.push((col_lo, tile_cols, payload, (self.rows_in_chunk * tile_cols) as u64));
+            col_lo += tile_cols;
+        }
+        out
+    }
+
+    /// Encode the open band as CSR column tiles in **one pass over the
+    /// band's entries** — each entry is bucketed into its column band,
+    /// so sealing costs O(band nnz + rows·tiles), not O(nnz·tiles).
+    /// Tile-relative encoding: pointers restart at 0, column indices
+    /// are offsets from the tile's `col_lo`.
+    fn encode_csr_tiles(&self, tile_width: usize) -> Vec<(usize, usize, Vec<u8>, u64)> {
+        let n_tiles = self.cols.div_ceil(tile_width);
+        let mut ptrs: Vec<Vec<u64>> = (0..n_tiles)
+            .map(|_| {
+                let mut v = Vec::with_capacity(self.rows_in_chunk + 1);
+                v.push(0u64);
+                v
+            })
+            .collect();
+        let mut idx: Vec<Vec<u32>> = vec![Vec::new(); n_tiles];
+        let mut val: Vec<Vec<f32>> = vec![Vec::new(); n_tiles];
+        for r in 0..self.rows_in_chunk {
+            for t in self.indptr[r] as usize..self.indptr[r + 1] as usize {
+                let j = self.indices[t] as usize;
+                let tb = j / tile_width;
+                idx[tb].push((j - tb * tile_width) as u32);
+                val[tb].push(self.values[t]);
+            }
+            for tb in 0..n_tiles {
+                ptrs[tb].push(idx[tb].len() as u64);
+            }
+        }
+        let mut out = Vec::with_capacity(n_tiles);
+        for tb in 0..n_tiles {
+            let col_lo = tb * tile_width;
+            let tile_cols = tile_width.min(self.cols - col_lo);
+            let nnz = idx[tb].len() as u64;
+            let mut payload = Vec::with_capacity(ptrs[tb].len() * 8 + idx[tb].len() * 8);
+            for &p in &ptrs[tb] {
+                payload.extend_from_slice(&p.to_le_bytes());
+            }
+            for &j in &idx[tb] {
+                payload.extend_from_slice(&j.to_le_bytes());
+            }
+            for &v in &val[tb] {
+                payload.extend_from_slice(&v.to_le_bytes());
+            }
+            out.push((col_lo, tile_cols, payload, nnz));
+        }
+        out
+    }
+
+    /// Encode, checksum, write and fsync the open band — as one chunk in
+    /// row-band mode, as a row of column tiles in tiled mode.
+    fn seal_band(&mut self) -> Result<()> {
         if self.rows_in_chunk == 0 {
             return Ok(());
         }
-        let (payload, chunk_nnz) = match self.layout {
-            Layout::Dense => {
-                let mut payload = Vec::with_capacity(self.dense_buf.len() * 4);
-                for &v in &self.dense_buf {
-                    payload.extend_from_slice(&v.to_le_bytes());
-                }
-                let nnz = self.dense_buf.len() as u64;
-                self.dense_buf.clear();
-                (payload, nnz)
-            }
-            Layout::Csr => {
-                let nnz = self.indices.len() as u64;
-                let mut payload =
-                    Vec::with_capacity(self.indptr.len() * 8 + self.indices.len() * 8);
-                for &p in &self.indptr {
-                    payload.extend_from_slice(&p.to_le_bytes());
-                }
-                for &j in &self.indices {
-                    payload.extend_from_slice(&j.to_le_bytes());
-                }
-                for &v in &self.values {
-                    payload.extend_from_slice(&v.to_le_bytes());
-                }
-                self.indptr.clear();
-                self.indptr.push(0);
-                self.indices.clear();
-                self.values.clear();
-                (payload, nnz)
-            }
+        let row_lo = self.total_rows - self.rows_in_chunk;
+        let tile_width = self.chunk_cols.unwrap_or(self.cols);
+        let tiles = match self.layout {
+            Layout::Dense => self.encode_dense_tiles(tile_width),
+            Layout::Csr => self.encode_csr_tiles(tile_width),
         };
-        let meta = ChunkMeta {
-            offset: self.offset,
-            len: payload.len() as u64,
-            row_lo: self.total_rows - self.rows_in_chunk,
-            rows: self.rows_in_chunk,
-            nnz: chunk_nnz,
-            checksum: checksum_bytes(&payload),
-        };
-        self.file.write_all(&payload)?;
+        for (col_lo, tile_cols, payload, chunk_nnz) in tiles {
+            let meta = ChunkMeta {
+                offset: self.offset,
+                len: payload.len() as u64,
+                row_lo,
+                rows: self.rows_in_chunk,
+                col_lo,
+                cols: tile_cols,
+                nnz: chunk_nnz,
+                checksum: checksum_bytes(&payload),
+            };
+            self.file.write_all(&payload)?;
+            self.offset += meta.len;
+            self.index.push(meta);
+        }
         // Durability point: a sealed band survives a crash of the
         // ingesting process (the footer won't, and the reader reports
         // that as Truncated — re-ingest resumes from scratch).
         self.file.flush()?;
         self.file.get_ref().sync_data().with_context(|| format!("fsync {:?}", self.path))?;
-        self.offset += meta.len;
-        self.index.push(meta);
+        // Reset the band buffers.
+        self.dense_buf.clear();
+        self.indptr.clear();
+        self.indptr.push(0);
+        self.indices.clear();
+        self.values.clear();
         self.rows_in_chunk = 0;
         Ok(())
     }
 
     /// Seal any partial band, write the footer, and fsync the file.
     pub fn finish(mut self) -> Result<StoreSummary> {
-        self.seal_chunk()?;
-        let fingerprint = store_fingerprint(
-            self.layout,
-            self.total_rows,
-            self.cols,
-            self.total_nnz,
-            self.index.iter().map(|e| e.checksum),
-        );
+        self.seal_band()?;
+        let fingerprint = self.fingerprint_override.unwrap_or_else(|| {
+            store_fingerprint(
+                self.layout,
+                self.total_rows,
+                self.cols,
+                self.total_nnz,
+                self.index.iter().map(|e| e.checksum),
+            )
+        });
+        let tiled = self.chunk_cols.is_some();
         let header = StoreHeader {
+            version: if tiled { VERSION_TILED } else { VERSION },
             layout: self.layout,
             rows: self.total_rows,
             cols: self.cols,
             nnz: self.total_nnz,
             chunk_rows: self.chunk_rows,
+            chunk_cols: self.chunk_cols.unwrap_or(self.cols),
             n_chunks: self.index.len(),
             fingerprint,
         };
@@ -233,7 +347,7 @@ impl ChunkWriter {
         self.file.write_all(&footer)?;
         self.file.write_all(&(footer.len() as u64).to_le_bytes())?;
         self.file.write_all(&checksum_bytes(&footer).to_le_bytes())?;
-        self.file.write_all(FOOTER_MAGIC)?;
+        self.file.write_all(if tiled { FOOTER_MAGIC_TILED } else { FOOTER_MAGIC })?;
         self.file.flush()?;
         self.file.get_ref().sync_all().with_context(|| format!("fsync {:?}", self.path))?;
         Ok(StoreSummary {
@@ -244,37 +358,61 @@ impl ChunkWriter {
             nnz: self.total_nnz,
             chunks: self.index.len(),
             chunk_rows: self.chunk_rows,
+            chunk_cols: header.chunk_cols,
+            tiled,
             fingerprint,
             file_bytes: self.offset + footer.len() as u64 + TRAILER_BYTES,
         })
     }
 }
 
-/// Pack an in-memory matrix into a store file (the `lamc pack` core).
+/// Pack an in-memory matrix into a row-band store file (the `lamc pack`
+/// core).
 pub fn pack_matrix(matrix: &Matrix, path: &Path, chunk_rows: usize) -> Result<StoreSummary> {
+    let writer = ChunkWriter::create(path, layout_of(matrix), matrix.cols(), chunk_rows)?;
+    pack_into(matrix, writer)
+}
+
+/// Pack an in-memory matrix into a tiled (LAMC3) store file.
+pub fn pack_matrix_tiled(
+    matrix: &Matrix,
+    path: &Path,
+    chunk_rows: usize,
+    chunk_cols: usize,
+) -> Result<StoreSummary> {
+    let writer =
+        ChunkWriter::create_tiled(path, layout_of(matrix), matrix.cols(), chunk_rows, chunk_cols)?;
+    pack_into(matrix, writer)
+}
+
+fn layout_of(matrix: &Matrix) -> Layout {
+    match matrix {
+        Matrix::Dense(_) => Layout::Dense,
+        Matrix::Sparse(_) => Layout::Csr,
+    }
+}
+
+fn pack_into(matrix: &Matrix, mut w: ChunkWriter) -> Result<StoreSummary> {
     match matrix {
         Matrix::Dense(d) => {
-            let mut w = ChunkWriter::create(path, Layout::Dense, d.cols(), chunk_rows)?;
             for i in 0..d.rows() {
                 w.append_dense_row(d.row(i))?;
             }
-            w.finish()
         }
         Matrix::Sparse(s) => {
-            let mut w = ChunkWriter::create(path, Layout::Csr, s.cols(), chunk_rows)?;
             let mut row: Vec<(u32, f32)> = Vec::new();
             for i in 0..s.rows() {
                 row.clear();
                 row.extend(s.row_iter(i).map(|(j, v)| (j as u32, v)));
                 w.append_sparse_row(&row)?;
             }
-            w.finish()
         }
     }
+    w.finish()
 }
 
-/// One decoded row band.
-enum DecodedChunk {
+/// One decoded chunk (a row band or a tile).
+pub(crate) enum DecodedChunk {
     Dense { values: Vec<f32> },
     Csr { indptr: Vec<u64>, indices: Vec<u32>, values: Vec<f32> },
 }
@@ -290,19 +428,7 @@ impl DecodedChunk {
     }
 }
 
-struct CacheSlot {
-    chunk: Arc<DecodedChunk>,
-    bytes: usize,
-    last_used: u64,
-}
-
-struct ChunkCache {
-    map: HashMap<usize, CacheSlot>,
-    bytes: usize,
-    tick: u64,
-}
-
-/// Random-access reader over a finished store file.
+/// Random-access reader over a finished store file (either version).
 ///
 /// Thread-safe: `tile` may be called concurrently from the scheduler's
 /// worker pool (reads are serialized on an internal file handle; decode
@@ -312,7 +438,7 @@ pub struct StoreReader {
     header: StoreHeader,
     index: Vec<ChunkMeta>,
     file: Mutex<File>,
-    cache: Mutex<ChunkCache>,
+    cache: Mutex<ByteLru<usize, Arc<DecodedChunk>>>,
     cache_budget: usize,
     // Telemetry: how much of the file the workload actually touched.
     chunks_read: AtomicU64,
@@ -322,13 +448,13 @@ pub struct StoreReader {
 }
 
 impl StoreReader {
-    /// Open with the default decoded-band cache budget.
+    /// Open with the default decoded-chunk cache budget.
     pub fn open(path: &Path) -> Result<Self> {
         Self::open_with_cache(path, DEFAULT_CACHE_BYTES)
     }
 
     /// Open with an explicit cache budget (0 disables caching: every
-    /// tile re-reads its bands from disk — the strictest RSS bound).
+    /// tile re-reads its chunks from disk — the strictest RSS bound).
     pub fn open_with_cache(path: &Path, cache_budget: usize) -> Result<Self> {
         let mut file = File::open(path).with_context(|| format!("open store {path:?}"))?;
         let file_len = file.metadata()?.len();
@@ -338,9 +464,13 @@ impl StoreReader {
         }
         let mut magic = [0u8; 8];
         file.read_exact(&mut magic)?;
-        if &magic != MAGIC {
+        let magic_version = if &magic == MAGIC {
+            VERSION
+        } else if &magic == MAGIC_TILED {
+            VERSION_TILED
+        } else {
             return Err(StoreError::NotAStore(path.to_path_buf()).into());
-        }
+        };
         if file_len < MAGIC.len() as u64 + TRAILER_BYTES {
             return Err(StoreError::Truncated {
                 path: path.to_path_buf(),
@@ -352,10 +482,23 @@ impl StoreReader {
         let mut trailer = [0u8; TRAILER_BYTES as usize];
         file.seek(SeekFrom::End(-(TRAILER_BYTES as i64)))?;
         file.read_exact(&mut trailer)?;
-        if &trailer[16..24] != FOOTER_MAGIC {
+        if &trailer[16..24] != FOOTER_MAGIC && &trailer[16..24] != FOOTER_MAGIC_TILED {
             return Err(StoreError::Truncated {
                 path: path.to_path_buf(),
                 detail: "footer magic missing (ingest died before finish, or partial copy)".into(),
+            }
+            .into());
+        }
+        // The trailer is outside the footer checksum's coverage, so its
+        // magic must be checked against the leading magic explicitly — a
+        // LAMC2 file ending in the LAMC3 trailer (or vice versa) is
+        // damage, not a valid store.
+        let want_footer_magic =
+            if magic_version == VERSION { FOOTER_MAGIC } else { FOOTER_MAGIC_TILED };
+        if &trailer[16..24] != want_footer_magic {
+            return Err(StoreError::Corrupt {
+                path: path.to_path_buf(),
+                detail: "trailer magic does not match the store's leading magic".into(),
             }
             .into());
         }
@@ -382,13 +525,23 @@ impl StoreReader {
             .into());
         }
         let (header, index) = decode_footer(&footer, payload_end, path)?;
+        if header.version != magic_version {
+            return Err(StoreError::Corrupt {
+                path: path.to_path_buf(),
+                detail: format!(
+                    "leading magic says version {magic_version}, footer says {}",
+                    header.version
+                ),
+            }
+            .into());
+        }
 
         Ok(Self {
             path: path.to_path_buf(),
             header,
             index,
             file: Mutex::new(file),
-            cache: Mutex::new(ChunkCache { map: HashMap::new(), bytes: 0, tick: 0 }),
+            cache: Mutex::new(ByteLru::new(cache_budget)),
             cache_budget,
             chunks_read: AtomicU64::new(0),
             bytes_read: AtomicU64::new(0),
@@ -426,8 +579,18 @@ impl StoreReader {
         self.header.layout == Layout::Csr
     }
 
+    /// Tiled (LAMC3) vs row-band (LAMC2) geometry.
+    pub fn is_tiled(&self) -> bool {
+        self.header.is_tiled()
+    }
+
     pub fn chunk_rows(&self) -> usize {
         self.header.chunk_rows
+    }
+
+    /// Column-band width (the full width on a row-band store).
+    pub fn chunk_cols(&self) -> usize {
+        self.header.chunk_cols
     }
 
     pub fn n_chunks(&self) -> usize {
@@ -440,7 +603,7 @@ impl StoreReader {
         self.header.fingerprint
     }
 
-    /// Bands read from disk so far (checksum-verified decodes).
+    /// Chunks read from disk so far (checksum-verified decodes).
     pub fn chunks_read(&self) -> u64 {
         self.chunks_read.load(Ordering::Relaxed)
     }
@@ -450,7 +613,7 @@ impl StoreReader {
         self.bytes_read.load(Ordering::Relaxed)
     }
 
-    /// Band requests answered from the decoded-band cache.
+    /// Chunk requests answered from the decoded-chunk cache.
     pub fn cache_hits(&self) -> u64 {
         self.cache_hits.load(Ordering::Relaxed)
     }
@@ -460,16 +623,37 @@ impl StoreReader {
         self.tiles_served.load(Ordering::Relaxed)
     }
 
-    /// Read, verify and decode band `idx` (cache-aware).
-    fn load_chunk(&self, idx: usize) -> Result<Arc<DecodedChunk>> {
+    /// High-water mark of decoded bytes resident in the chunk cache —
+    /// proof the reader respected its byte bound over a whole pass.
+    pub fn cache_peak_bytes(&self) -> usize {
+        self.cache.lock().unwrap().peak_bytes()
+    }
+
+    /// Chunks evicted from the decoded-chunk cache so far.
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache.lock().unwrap().evictions()
+    }
+
+    /// Pin every column tile of row band `rb` (decoded, column order) —
+    /// the shared band-stitching step behind `read_all` and `repack`.
+    /// A row-band store yields exactly one (band-wide) tile.
+    pub(crate) fn band_tiles(&self, rb: usize) -> Result<Vec<(ChunkMeta, Arc<DecodedChunk>)>> {
+        let n_col_bands = self.header.n_col_bands();
+        let mut tiles = Vec::with_capacity(n_col_bands);
+        for cb in 0..n_col_bands {
+            let idx = rb * n_col_bands + cb;
+            tiles.push((self.index[idx], self.load_chunk(idx)?));
+        }
+        Ok(tiles)
+    }
+
+    /// Read, verify and decode chunk `idx` (cache-aware).
+    pub(crate) fn load_chunk(&self, idx: usize) -> Result<Arc<DecodedChunk>> {
         if self.cache_budget > 0 {
             let mut cache = self.cache.lock().unwrap();
-            cache.tick += 1;
-            let tick = cache.tick;
-            if let Some(slot) = cache.map.get_mut(&idx) {
-                slot.last_used = tick;
+            if let Some(chunk) = cache.get(&idx) {
                 self.cache_hits.fetch_add(1, Ordering::Relaxed);
-                return Ok(Arc::clone(&slot.chunk));
+                return Ok(Arc::clone(chunk));
             }
         }
 
@@ -496,28 +680,9 @@ impl StoreReader {
 
         if self.cache_budget > 0 {
             let bytes = chunk.resident_bytes();
-            if bytes <= self.cache_budget {
-                let mut cache = self.cache.lock().unwrap();
-                cache.tick += 1;
-                let tick = cache.tick;
-                let slot = CacheSlot { chunk: Arc::clone(&chunk), bytes, last_used: tick };
-                if let Some(old) = cache.map.insert(idx, slot) {
-                    cache.bytes -= old.bytes;
-                }
-                cache.bytes += bytes;
-                while cache.bytes > self.cache_budget {
-                    let Some((&victim, _)) = cache
-                        .map
-                        .iter()
-                        .filter(|(k, _)| **k != idx)
-                        .min_by_key(|(_, s)| s.last_used)
-                    else {
-                        break;
-                    };
-                    let old = cache.map.remove(&victim).unwrap();
-                    cache.bytes -= old.bytes;
-                }
-            }
+            // Evicted/rejected Arcs drop here; live borrows elsewhere
+            // keep their chunks alive independently of the cache.
+            let _ = self.cache.lock().unwrap().insert(idx, Arc::clone(&chunk), bytes);
         }
         Ok(chunk)
     }
@@ -526,14 +691,21 @@ impl StoreReader {
         let corrupt = |detail: String| -> anyhow::Error {
             StoreError::Corrupt { path: self.path.clone(), detail }.into()
         };
-        let cols = self.header.cols;
+        // The chunk's own width: a tile's column count, or the full
+        // matrix width on a row-band store.
+        let cols = meta.cols;
+        // All size arithmetic is checked: a checksum-valid but crafted
+        // footer must surface as Corrupt, never as an overflow panic
+        // (the same threat model decode_footer guards against).
         match self.header.layout {
             Layout::Dense => {
-                let want = meta.rows * cols * 4;
-                if payload.len() != want {
+                let want = meta.rows.checked_mul(cols).and_then(|v| v.checked_mul(4));
+                if want != Some(payload.len()) {
                     return Err(corrupt(format!(
-                        "dense chunk {idx} has {} bytes, want {want}",
-                        payload.len()
+                        "dense chunk {idx} has {} bytes, want {} x {} x 4",
+                        payload.len(),
+                        meta.rows,
+                        cols
                     )));
                 }
                 let values = payload
@@ -544,8 +716,12 @@ impl StoreReader {
             }
             Layout::Csr => {
                 let nnz = meta.nnz as usize;
-                let ptr_bytes = (meta.rows + 1) * 8;
-                let want = ptr_bytes + nnz * 8;
+                let ptrs = meta.rows.checked_add(1).and_then(|v| v.checked_mul(8));
+                let total =
+                    ptrs.and_then(|p| nnz.checked_mul(8).and_then(|e| p.checked_add(e)));
+                let (Some(ptr_bytes), Some(want)) = (ptrs, total) else {
+                    return Err(corrupt(format!("csr chunk {idx} dimensions overflow")));
+                };
                 if payload.len() != want {
                     return Err(corrupt(format!(
                         "csr chunk {idx} has {} bytes, want {want}",
@@ -580,8 +756,9 @@ impl StoreReader {
 
     /// Gather the dense submatrix `A[rows, cols]` (arbitrary index
     /// order, global ids) — bit-identical to `Matrix::gather_block` on
-    /// the matrix the store was packed from, reading only the row bands
-    /// the requested rows cover.
+    /// the matrix the store was packed from, reading only the chunks
+    /// that intersect the requested rows **and** columns (on a tiled
+    /// store, a narrow column selection skips whole column bands).
     pub fn tile(&self, rows: &[usize], cols: &[usize]) -> Result<DenseMatrix> {
         for &i in rows {
             ensure!(i < self.header.rows, "row {i} out of bounds ({} rows)", self.header.rows);
@@ -590,14 +767,23 @@ impl StoreReader {
             ensure!(j < self.header.cols, "col {j} out of bounds ({} cols)", self.header.cols);
         }
         let h = self.header.chunk_rows;
-        // Group requested rows by band so each touched band loads once.
-        let mut by_chunk: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
+        // `.max(1)` guards a hand-crafted empty store whose header
+        // carries a zero extent (decode allows it only with no chunks).
+        let w = self.header.chunk_cols.max(1);
+        let n_col_bands = self.header.n_col_bands();
+        // Group requested rows by row band and columns by column band so
+        // each intersecting chunk loads once.
+        let mut by_row_band: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
         for (bi, &gid) in rows.iter().enumerate() {
-            by_chunk.entry(gid / h).or_default().push((bi, gid % h));
+            by_row_band.entry(gid / h).or_default().push((bi, gid % h));
+        }
+        let mut by_col_band: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
+        for (bj, &j) in cols.iter().enumerate() {
+            by_col_band.entry(j / w).or_default().push((bj, j));
         }
 
         let mut out = DenseMatrix::zeros(rows.len(), cols.len());
-        // Column lookup shared across bands (CSR scatter).
+        // Column lookup shared across chunks (CSR scatter).
         let mut col_pos: Vec<i32> = Vec::new();
         if self.header.layout == Layout::Csr {
             col_pos = vec![-1; self.header.cols];
@@ -606,26 +792,30 @@ impl StoreReader {
             }
         }
 
-        for (&cidx, picks) in &by_chunk {
-            let chunk = self.load_chunk(cidx)?;
-            match &*chunk {
-                DecodedChunk::Dense { values } => {
-                    let w = self.header.cols;
-                    for &(bi, local) in picks {
-                        let src = &values[local * w..(local + 1) * w];
-                        let dst = out.row_mut(bi);
-                        for (bj, &j) in cols.iter().enumerate() {
-                            dst[bj] = src[j];
+        for (&rb, row_picks) in &by_row_band {
+            for (&cb, col_picks) in &by_col_band {
+                let cidx = rb * n_col_bands + cb;
+                let meta = self.index[cidx];
+                let chunk = self.load_chunk(cidx)?;
+                match &*chunk {
+                    DecodedChunk::Dense { values } => {
+                        let tw = meta.cols;
+                        for &(bi, local) in row_picks {
+                            let src = &values[local * tw..(local + 1) * tw];
+                            let dst = out.row_mut(bi);
+                            for &(bj, j) in col_picks {
+                                dst[bj] = src[j - meta.col_lo];
+                            }
                         }
                     }
-                }
-                DecodedChunk::Csr { indptr, indices, values } => {
-                    for &(bi, local) in picks {
-                        let dst = out.row_mut(bi);
-                        for t in indptr[local] as usize..indptr[local + 1] as usize {
-                            let bj = col_pos[indices[t] as usize];
-                            if bj >= 0 {
-                                dst[bj as usize] = values[t];
+                    DecodedChunk::Csr { indptr, indices, values } => {
+                        for &(bi, local) in row_picks {
+                            let dst = out.row_mut(bi);
+                            for t in indptr[local] as usize..indptr[local + 1] as usize {
+                                let bj = col_pos[meta.col_lo + indices[t] as usize];
+                                if bj >= 0 {
+                                    dst[bj as usize] = values[t];
+                                }
                             }
                         }
                     }
@@ -641,33 +831,57 @@ impl StoreReader {
     pub fn read_all(&self) -> Result<Matrix> {
         match self.header.layout {
             Layout::Dense => {
-                let mut data = Vec::with_capacity(self.header.rows * self.header.cols);
+                let (rows, cols) = (self.header.rows, self.header.cols);
+                // Checked: a crafted header must error, not overflow.
+                let n = rows.checked_mul(cols).ok_or_else(|| StoreError::Corrupt {
+                    path: self.path.clone(),
+                    detail: format!("{rows} x {cols} dense store overflows"),
+                })?;
+                let mut data = vec![0f32; n];
                 for idx in 0..self.index.len() {
+                    let meta = self.index[idx];
                     let chunk = self.load_chunk(idx)?;
                     match &*chunk {
-                        DecodedChunk::Dense { values } => data.extend_from_slice(values),
+                        DecodedChunk::Dense { values } => {
+                            for lr in 0..meta.rows {
+                                let dst = (meta.row_lo + lr) * cols + meta.col_lo;
+                                data[dst..dst + meta.cols]
+                                    .copy_from_slice(&values[lr * meta.cols..(lr + 1) * meta.cols]);
+                            }
+                        }
                         DecodedChunk::Csr { .. } => bail!("dense store decoded a csr chunk"),
                     }
                 }
-                Ok(Matrix::Dense(DenseMatrix::from_vec(self.header.rows, self.header.cols, data)))
+                Ok(Matrix::Dense(DenseMatrix::from_vec(rows, cols, data)))
             }
             Layout::Csr => {
-                let mut indptr: Vec<usize> = Vec::with_capacity(self.header.rows + 1);
+                let n_row_bands = self.header.n_row_bands();
+                // Capacity hints are clamped: header-declared sizes are
+                // untrusted until each chunk's payload validates, and a
+                // hint must never be the thing that aborts.
+                let rows_hint = self.header.rows.saturating_add(1).min(1 << 24);
+                let nnz_hint = (self.header.nnz as usize).min(1 << 24);
+                let mut indptr: Vec<usize> = Vec::with_capacity(rows_hint);
                 indptr.push(0);
-                let mut all_indices: Vec<u32> = Vec::with_capacity(self.header.nnz as usize);
-                let mut all_values: Vec<f32> = Vec::with_capacity(self.header.nnz as usize);
-                for idx in 0..self.index.len() {
-                    let chunk = self.load_chunk(idx)?;
-                    match &*chunk {
-                        DecodedChunk::Csr { indptr: rel, indices, values } => {
-                            let base = all_indices.len();
-                            for &p in &rel[1..] {
-                                indptr.push(base + p as usize);
+                let mut all_indices: Vec<u32> = Vec::with_capacity(nnz_hint);
+                let mut all_values: Vec<f32> = Vec::with_capacity(nnz_hint);
+                for rb in 0..n_row_bands {
+                    // Walking a band's tiles in column-band order per row
+                    // yields globally sorted column indices.
+                    let tiles = self.band_tiles(rb)?;
+                    let band_rows = tiles[0].0.rows;
+                    for lr in 0..band_rows {
+                        for (meta, chunk) in &tiles {
+                            let DecodedChunk::Csr { indptr: rel, indices, values } = &**chunk
+                            else {
+                                bail!("csr store decoded a dense chunk")
+                            };
+                            for t in rel[lr] as usize..rel[lr + 1] as usize {
+                                all_indices.push(meta.col_lo as u32 + indices[t]);
+                                all_values.push(values[t]);
                             }
-                            all_indices.extend_from_slice(indices);
-                            all_values.extend_from_slice(values);
                         }
-                        DecodedChunk::Dense { .. } => bail!("csr store decoded a dense chunk"),
+                        indptr.push(all_indices.len());
                     }
                 }
                 Ok(Matrix::Sparse(CsrMatrix::new(
@@ -681,7 +895,7 @@ impl StoreReader {
         }
     }
 
-    /// Re-read and checksum-verify every band (`lamc inspect --verify`).
+    /// Re-read and checksum-verify every chunk (`lamc inspect --verify`).
     pub fn verify(&self) -> Result<()> {
         for idx in 0..self.index.len() {
             self.load_chunk(idx)?;
@@ -694,6 +908,7 @@ impl std::fmt::Debug for StoreReader {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("StoreReader")
             .field("path", &self.path)
+            .field("version", &self.header.version)
             .field("layout", &self.header.layout)
             .field("rows", &self.header.rows)
             .field("cols", &self.header.cols)
@@ -734,6 +949,7 @@ mod tests {
         let summary = pack_matrix(&Matrix::Dense(d.clone()), &path, 8).unwrap();
         assert_eq!(summary.rows, 37);
         assert_eq!(summary.chunks, 5, "37 rows / 8-row bands");
+        assert!(!summary.tiled);
         let r = StoreReader::open(&path).unwrap();
         assert_eq!((r.rows(), r.cols()), (37, 11));
         assert_eq!(r.fingerprint(), summary.fingerprint);
@@ -758,6 +974,36 @@ mod tests {
     }
 
     #[test]
+    fn tiled_dense_pack_read_all_round_trip() {
+        let d = random_dense(37, 11, 21);
+        let path = tmp("dense_rt.lamc3");
+        let summary = pack_matrix_tiled(&Matrix::Dense(d.clone()), &path, 8, 4).unwrap();
+        assert!(summary.tiled);
+        assert_eq!(summary.chunks, 5 * 3, "5 row bands x 3 col bands");
+        let r = StoreReader::open(&path).unwrap();
+        assert!(r.is_tiled());
+        assert_eq!((r.chunk_rows(), r.chunk_cols()), (8, 4));
+        match r.read_all().unwrap() {
+            Matrix::Dense(got) => assert_eq!(got, d),
+            _ => panic!("layout mismatch"),
+        }
+    }
+
+    #[test]
+    fn tiled_sparse_pack_read_all_round_trip() {
+        let s = random_sparse(50, 23, 300, 22);
+        let path = tmp("sparse_rt.lamc3");
+        let summary = pack_matrix_tiled(&Matrix::Sparse(s.clone()), &path, 7, 6).unwrap();
+        assert_eq!(summary.nnz as usize, s.nnz(), "tiling never drops entries");
+        let r = StoreReader::open(&path).unwrap();
+        assert!(r.is_tiled() && r.is_sparse());
+        match r.read_all().unwrap() {
+            Matrix::Sparse(got) => assert_eq!(got, s),
+            _ => panic!("layout mismatch"),
+        }
+    }
+
+    #[test]
     fn tile_matches_gather_block_randomized() {
         let mut rng = Xoshiro256::seed_from(3);
         for (case, matrix) in [
@@ -767,17 +1013,22 @@ mod tests {
         .into_iter()
         .enumerate()
         {
-            let path = tmp(&format!("tile_{case}.lamc2"));
-            pack_matrix(&matrix, &path, 6).unwrap();
-            let r = StoreReader::open(&path).unwrap();
+            let band_path = tmp(&format!("tile_{case}.lamc2"));
+            let tiled_path = tmp(&format!("tile_{case}.lamc3"));
+            pack_matrix(&matrix, &band_path, 6).unwrap();
+            pack_matrix_tiled(&matrix, &tiled_path, 6, 5).unwrap();
+            let band = StoreReader::open(&band_path).unwrap();
+            let tiled = StoreReader::open(&tiled_path).unwrap();
             for _ in 0..20 {
                 let nr = rng.next_range(1, 15);
                 let nc = rng.next_range(1, 12);
                 let rows = rng.sample_indices(41, nr);
                 let cols = rng.sample_indices(17, nc);
                 let want = matrix.gather_block(&rows, &cols);
-                let got = r.tile(&rows, &cols).unwrap();
-                assert_eq!(got.data(), want.data(), "case {case} rows {rows:?} cols {cols:?}");
+                let got_band = band.tile(&rows, &cols).unwrap();
+                let got_tiled = tiled.tile(&rows, &cols).unwrap();
+                assert_eq!(got_band.data(), want.data(), "case {case} rows {rows:?} cols {cols:?}");
+                assert_eq!(got_tiled.data(), want.data(), "case {case} rows {rows:?} cols {cols:?}");
             }
         }
     }
@@ -787,7 +1038,7 @@ mod tests {
         let d = random_dense(64, 9, 4);
         let path = tmp("touch.lamc2");
         pack_matrix(&Matrix::Dense(d), &path, 16).unwrap();
-        // Cache disabled: every band access is a disk read we can count.
+        // Cache disabled: every chunk access is a disk read we can count.
         let r = StoreReader::open_with_cache(&path, 0).unwrap();
         assert_eq!(r.n_chunks(), 4);
         // Rows 16..32 live entirely in band 1.
@@ -803,6 +1054,33 @@ mod tests {
     }
 
     #[test]
+    fn column_heavy_query_reads_fewer_bytes_on_tiled_store() {
+        // The acceptance shape: all rows, few columns. The row-band
+        // store must decode full bands; the tiled store reads one
+        // column band per row band — strictly fewer payload bytes.
+        let d = Matrix::Dense(random_dense(64, 32, 9));
+        let band_path = tmp("colheavy.lamc2");
+        let tiled_path = tmp("colheavy.lamc3");
+        pack_matrix(&d, &band_path, 16).unwrap();
+        pack_matrix_tiled(&d, &tiled_path, 16, 8).unwrap();
+        let band = StoreReader::open_with_cache(&band_path, 0).unwrap();
+        let tiled = StoreReader::open_with_cache(&tiled_path, 0).unwrap();
+        let rows: Vec<usize> = (0..64).collect();
+        let cols: Vec<usize> = (0..4).collect(); // inside column band 0
+        let a = band.tile(&rows, &cols).unwrap();
+        let b = tiled.tile(&rows, &cols).unwrap();
+        assert_eq!(a.data(), b.data());
+        assert!(
+            tiled.bytes_read() < band.bytes_read(),
+            "tiled read {} bytes, row-band {}",
+            tiled.bytes_read(),
+            band.bytes_read()
+        );
+        assert_eq!(band.bytes_read(), 64 * 32 * 4, "row bands decode the full width");
+        assert_eq!(tiled.bytes_read(), 64 * 8 * 4, "tiles decode one column band");
+    }
+
+    #[test]
     fn cache_absorbs_repeated_tiles() {
         let d = random_dense(32, 8, 5);
         let path = tmp("cache.lamc2");
@@ -814,6 +1092,7 @@ mod tests {
         r.tile(&rows, &cols).unwrap();
         assert_eq!(r.chunks_read(), 4, "second pass served from cache");
         assert_eq!(r.cache_hits(), 4);
+        assert!(r.cache_peak_bytes() <= DEFAULT_CACHE_BYTES);
     }
 
     #[test]
@@ -870,6 +1149,24 @@ mod tests {
     }
 
     #[test]
+    fn streaming_tiled_ingest_partial_edges() {
+        // 10 rows x 5 cols in 4x2 tiles: 3 row bands (last short), 3 col
+        // bands (last short) = 9 tiles.
+        let path = tmp("stream.lamc3");
+        let mut w = ChunkWriter::create_tiled(&path, Layout::Dense, 5, 4, 2).unwrap();
+        for i in 0..10 {
+            let i = i as f32;
+            w.append_dense_row(&[i, 10.0 + i, 20.0 + i, 30.0 + i, 40.0 + i]).unwrap();
+        }
+        let summary = w.finish().unwrap();
+        assert_eq!(summary.chunks, 9);
+        let r = StoreReader::open(&path).unwrap();
+        // Pick cells across tile boundaries, arbitrary order.
+        let tile = r.tile(&[9, 0, 4], &[4, 0, 3]).unwrap();
+        assert_eq!(tile.data(), &[49.0, 9.0, 39.0, 40.0, 0.0, 30.0, 44.0, 4.0, 34.0]);
+    }
+
+    #[test]
     fn writer_rejects_bad_rows() {
         let path = tmp("bad_rows.lamc2");
         let mut w = ChunkWriter::create(&path, Layout::Dense, 3, 4).unwrap();
@@ -897,6 +1194,25 @@ mod tests {
             Matrix::Sparse(s) => {
                 assert_eq!(s.nnz(), 1);
                 assert_eq!(s.to_dense().get(1, 3), 2.5);
+            }
+            _ => panic!("layout"),
+        }
+    }
+
+    #[test]
+    fn empty_sparse_rows_round_trip_tiled() {
+        let path = tmp("empty_rows.lamc3");
+        let mut w = ChunkWriter::create_tiled(&path, Layout::Csr, 4, 2, 2).unwrap();
+        w.append_sparse_row(&[]).unwrap();
+        w.append_sparse_row(&[(3, 2.5), (0, -1.0)]).unwrap();
+        w.append_sparse_row(&[]).unwrap();
+        w.finish().unwrap();
+        let r = StoreReader::open(&path).unwrap();
+        match r.read_all().unwrap() {
+            Matrix::Sparse(s) => {
+                assert_eq!(s.nnz(), 2);
+                assert_eq!(s.to_dense().get(1, 3), 2.5);
+                assert_eq!(s.to_dense().get(1, 0), -1.0);
             }
             _ => panic!("layout"),
         }

@@ -1,29 +1,40 @@
-//! On-disk layout of the LAMC2 chunked matrix store.
+//! On-disk layout of the LAMC chunked matrix store (row-band **LAMC2**
+//! and tiled **LAMC3**).
 //!
 //! A store file is a single self-describing artifact:
 //!
 //! ```text
 //! ┌──────────────┬────────────┬────────────┬───┬────────────┬───────────────────────────┐
-//! │ magic LAMC2  │ chunk 0    │ chunk 1    │ … │ chunk n-1  │ footer                    │
+//! │ magic        │ chunk 0    │ chunk 1    │ … │ chunk n-1  │ footer                    │
 //! │ (8 bytes)    │ (payload)  │ (payload)  │   │ (payload)  │ header + index + trailer  │
 //! └──────────────┴────────────┴────────────┴───┴────────────┴───────────────────────────┘
 //! ```
 //!
-//! Chunks are fixed-height **row bands**: chunk `i` holds rows
-//! `[i·chunk_rows, min((i+1)·chunk_rows, rows))` in the matrix's own
-//! storage order (dense row-major or CSR). The footer — written last,
-//! which is what makes streaming ingest possible — carries the header
-//! (dims, layout, chunk height, content fingerprint) and one
-//! [`ChunkMeta`] index entry per chunk (offset, length, row range,
-//! stored-entry count, checksum). The trailer is `footer_len : u64`,
-//! `footer_checksum : u64`, then the 8-byte footer magic, so a reader
-//! finds the footer by seeking from the end.
+//! Two chunk geometries share that envelope:
+//!
+//! * **LAMC2 (version 1), row bands** — chunk `i` holds rows
+//!   `[i·chunk_rows, min((i+1)·chunk_rows, rows))` across *all* columns.
+//! * **LAMC3 (version 2), tiles** — chunks form a row-band × col-band
+//!   grid: chunk `i` is the tile at row band `i / n_col_bands`, column
+//!   band `i % n_col_bands` (row-band-major order), holding that band's
+//!   rows restricted to columns `[col_lo, col_lo + cols)`. A
+//!   column-heavy read touches only the column bands it needs instead
+//!   of decoding whole rows — the access shape the paper's dynamic
+//!   partition planner (§IV-B) generates.
+//!
+//! The footer — written last, which is what makes streaming ingest
+//! possible — carries the header (dims, layout, chunk grid, content
+//! fingerprint) and one [`ChunkMeta`] index entry per chunk (offset,
+//! length, row/col range, stored-entry count, checksum). The trailer is
+//! `footer_len : u64`, `footer_checksum : u64`, then the 8-byte footer
+//! magic, so a reader finds the footer by seeking from the end.
 //!
 //! All integers are little-endian `u64`s; values are `f32` LE; CSR
-//! column indices are `u32` LE (matching [`crate::matrix::CsrMatrix`]).
-//! Checksums chain [`crate::rng::mix64`] over 8-byte words — the same
-//! primitive behind `Matrix::fingerprint`, so the whole stack shares one
-//! hashing scheme.
+//! column indices are `u32` LE (matching [`crate::matrix::CsrMatrix`]),
+//! stored **tile-relative** in LAMC3 so every tile is independently
+//! decodable. Checksums chain [`crate::rng::mix64`] over 8-byte words —
+//! the same primitive behind `Matrix::fingerprint`, so the whole stack
+//! shares one hashing scheme.
 //!
 //! Failure taxonomy is typed ([`StoreError`]): a reader distinguishes
 //! "not a store at all", "store cut short" (e.g. an ingest that died
@@ -34,29 +45,43 @@ use std::path::{Path, PathBuf};
 
 use crate::rng::mix64 as mix;
 
-/// Leading file magic (8 bytes).
+/// Leading file magic of a row-band (version 1) store.
 pub const MAGIC: &[u8; 8] = b"LAMC2\0\0\0";
-/// Trailing footer magic (8 bytes).
+/// Leading file magic of a tiled (version 2) store.
+pub const MAGIC_TILED: &[u8; 8] = b"LAMC3\0\0\0";
+/// Trailing footer magic of a row-band store.
 pub const FOOTER_MAGIC: &[u8; 8] = b"LAMC2FTR";
-/// Current format version.
+/// Trailing footer magic of a tiled store.
+pub const FOOTER_MAGIC_TILED: &[u8; 8] = b"LAMC3FTR";
+/// Format version of the row-band layout.
 pub const VERSION: u64 = 1;
-/// Default row-band height for writers that don't specify one.
+/// Format version of the tiled layout.
+pub const VERSION_TILED: u64 = 2;
+/// Default row-band height for writers that don't specify one. (There
+/// is deliberately no tiled counterpart: a useful tile width tracks the
+/// planner's block width ψ, so every tiled writer must choose one.)
 pub const DEFAULT_CHUNK_ROWS: usize = 256;
 
 /// Bytes of the fixed trailer: `footer_len`, `footer_checksum`, magic.
 pub const TRAILER_BYTES: u64 = 24;
-/// Bytes of one encoded header (8 words).
-const HEADER_WORDS: usize = 8;
-/// Bytes of one encoded index entry (6 words).
-const ENTRY_WORDS: usize = 6;
+/// Words of a version-1 encoded header.
+const HEADER_WORDS_V1: usize = 8;
+/// Words of a version-2 encoded header (adds `chunk_cols`).
+const HEADER_WORDS_V2: usize = 9;
+/// Words of a version-1 index entry.
+const ENTRY_WORDS_V1: usize = 6;
+/// Words of a version-2 index entry (adds `col_lo`, `cols`).
+const ENTRY_WORDS_V2: usize = 8;
 
 /// Storage layout of the chunk payloads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Layout {
-    /// Row-major dense `f32`: payload is `rows·cols` values.
+    /// Row-major dense `f32`: payload is `rows·cols` values (the
+    /// chunk's own `rows`/`cols`, i.e. the tile shape in LAMC3).
     Dense,
-    /// CSR band: payload is `(rows+1)` relative `u64` row pointers, then
-    /// `nnz` `u32` column indices, then `nnz` `f32` values.
+    /// CSR chunk: payload is `(rows+1)` relative `u64` row pointers,
+    /// then `nnz` `u32` column indices (chunk-relative), then `nnz`
+    /// `f32` values.
     Csr,
 }
 
@@ -87,21 +112,54 @@ impl Layout {
 /// Decoded store header (the self-description part of the footer).
 #[derive(Clone, Debug, PartialEq)]
 pub struct StoreHeader {
+    /// [`VERSION`] (row bands) or [`VERSION_TILED`] (tiles).
+    pub version: u64,
     pub layout: Layout,
     pub rows: usize,
     pub cols: usize,
     /// Stored entries across all chunks (dense: `rows·cols`).
     pub nnz: u64,
-    /// Row-band height; every chunk but the last holds exactly this many rows.
+    /// Row-band height; every band but the last spans exactly this many rows.
     pub chunk_rows: usize,
+    /// Column-band width. Row-band stores carry `cols` here (one column
+    /// band spanning the whole width), so grid arithmetic never branches
+    /// on version.
+    pub chunk_cols: usize,
     pub n_chunks: usize,
-    /// Content fingerprint over (layout, dims, nnz, per-chunk checksums).
+    /// Content fingerprint over (layout, dims, nnz, per-chunk checksums)
+    /// — or, for a repacked store, the source store's fingerprint
+    /// carried over verbatim (same content, different chunking).
     /// O(1) to read back — registering a store-backed matrix never
     /// re-scans the data (unlike `Matrix::fingerprint`).
     pub fingerprint: u64,
 }
 
-/// Index entry for one chunk.
+impl StoreHeader {
+    /// Is this the tiled (LAMC3) geometry?
+    pub fn is_tiled(&self) -> bool {
+        self.version == VERSION_TILED
+    }
+
+    /// Row bands in the chunk grid.
+    pub fn n_row_bands(&self) -> usize {
+        if self.rows == 0 || self.chunk_rows == 0 {
+            0
+        } else {
+            self.rows.div_ceil(self.chunk_rows)
+        }
+    }
+
+    /// Column bands per row band (1 for row-band stores).
+    pub fn n_col_bands(&self) -> usize {
+        if self.cols == 0 || self.chunk_cols == 0 {
+            1
+        } else {
+            self.cols.div_ceil(self.chunk_cols)
+        }
+    }
+}
+
+/// Index entry for one chunk (a row band in LAMC2, a tile in LAMC3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ChunkMeta {
     /// Byte offset of the payload from the start of the file.
@@ -110,8 +168,12 @@ pub struct ChunkMeta {
     pub len: u64,
     /// First global row covered by this chunk.
     pub row_lo: usize,
-    /// Rows in this chunk (`chunk_rows` except possibly the last).
+    /// Rows in this chunk (`chunk_rows` except possibly the last band).
     pub rows: usize,
+    /// First global column covered by this chunk (0 in LAMC2).
+    pub col_lo: usize,
+    /// Columns in this chunk (the full width in LAMC2).
+    pub cols: usize,
     /// Stored entries in this chunk.
     pub nnz: u64,
     /// `checksum_bytes` of the payload.
@@ -122,7 +184,7 @@ pub struct ChunkMeta {
 /// `downcast_ref::<StoreError>()` and branch on the kind.
 #[derive(Debug)]
 pub enum StoreError {
-    /// The file does not start with the LAMC2 magic (or is too short to).
+    /// The file does not start with a LAMC store magic (or is too short to).
     NotAStore(PathBuf),
     /// The file starts like a store but ends before a valid footer —
     /// typical of an ingest that died before `finish()` or a partial copy.
@@ -136,15 +198,15 @@ pub enum StoreError {
 impl std::fmt::Display for StoreError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            StoreError::NotAStore(p) => write!(f, "not a LAMC2 store: {p:?}"),
+            StoreError::NotAStore(p) => write!(f, "not a LAMC store: {p:?}"),
             StoreError::Truncated { path, detail } => {
-                write!(f, "truncated LAMC2 store {path:?}: {detail}")
+                write!(f, "truncated LAMC store {path:?}: {detail}")
             }
             StoreError::Corrupt { path, detail } => {
-                write!(f, "corrupt LAMC2 store {path:?}: {detail}")
+                write!(f, "corrupt LAMC store {path:?}: {detail}")
             }
             StoreError::UnsupportedVersion { path, version } => {
-                write!(f, "LAMC2 store {path:?} has unsupported version {version}")
+                write!(f, "LAMC store {path:?} has unsupported version {version}")
             }
         }
     }
@@ -176,7 +238,9 @@ pub fn checksum_bytes(bytes: &[u8]) -> u64 {
 /// the header. Deliberately *not* the same chain as
 /// `Matrix::fingerprint`: in-memory and store-backed registrations take
 /// different execution paths, and the cache key reflects that (the same
-/// argument that separates dense from CSR fingerprints).
+/// argument that separates dense from CSR fingerprints). `repack`
+/// carries the source fingerprint forward instead of recomputing, so
+/// re-chunking never invalidates result-cache entries.
 pub fn store_fingerprint(
     layout: Layout,
     rows: usize,
@@ -203,15 +267,27 @@ fn word(bytes: &[u8], i: usize) -> u64 {
     u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
 }
 
-/// Encode the footer body (header words then index entries).
+/// Encode the footer body (header words then index entries). Version 1
+/// emits the exact LAMC2 byte layout (row-band fields only); version 2
+/// adds `chunk_cols` to the header and `col_lo`/`cols` to each entry.
 pub fn encode_footer(header: &StoreHeader, index: &[ChunkMeta]) -> Vec<u8> {
     debug_assert_eq!(header.n_chunks, index.len());
-    let mut out = Vec::with_capacity((HEADER_WORDS + ENTRY_WORDS * index.len()) * 8);
-    push_u64(&mut out, VERSION);
+    debug_assert!(header.version == VERSION || header.version == VERSION_TILED);
+    let tiled = header.version == VERSION_TILED;
+    let (header_words, entry_words) = if tiled {
+        (HEADER_WORDS_V2, ENTRY_WORDS_V2)
+    } else {
+        (HEADER_WORDS_V1, ENTRY_WORDS_V1)
+    };
+    let mut out = Vec::with_capacity((header_words + entry_words * index.len()) * 8);
+    push_u64(&mut out, header.version);
     push_u64(&mut out, header.layout.tag());
     push_u64(&mut out, header.rows as u64);
     push_u64(&mut out, header.cols as u64);
     push_u64(&mut out, header.chunk_rows as u64);
+    if tiled {
+        push_u64(&mut out, header.chunk_cols as u64);
+    }
     push_u64(&mut out, header.nnz);
     push_u64(&mut out, index.len() as u64);
     push_u64(&mut out, header.fingerprint);
@@ -220,6 +296,10 @@ pub fn encode_footer(header: &StoreHeader, index: &[ChunkMeta]) -> Vec<u8> {
         push_u64(&mut out, e.len);
         push_u64(&mut out, e.row_lo as u64);
         push_u64(&mut out, e.rows as u64);
+        if tiled {
+            push_u64(&mut out, e.col_lo as u64);
+            push_u64(&mut out, e.cols as u64);
+        }
         push_u64(&mut out, e.nnz);
         push_u64(&mut out, e.checksum);
     }
@@ -236,44 +316,100 @@ pub fn decode_footer(
     path: &Path,
 ) -> Result<(StoreHeader, Vec<ChunkMeta>), StoreError> {
     let corrupt = |detail: String| StoreError::Corrupt { path: path.to_path_buf(), detail };
-    if bytes.len() < HEADER_WORDS * 8 || bytes.len() % 8 != 0 {
+    if bytes.len() < HEADER_WORDS_V1 * 8 || bytes.len() % 8 != 0 {
         return Err(corrupt(format!("footer body has {} bytes", bytes.len())));
     }
     let version = word(bytes, 0);
-    if version != VERSION {
+    if version != VERSION && version != VERSION_TILED {
         return Err(StoreError::UnsupportedVersion { path: path.to_path_buf(), version });
+    }
+    let tiled = version == VERSION_TILED;
+    let (header_words, entry_words) = if tiled {
+        (HEADER_WORDS_V2, ENTRY_WORDS_V2)
+    } else {
+        (HEADER_WORDS_V1, ENTRY_WORDS_V1)
+    };
+    if bytes.len() < header_words * 8 {
+        return Err(corrupt(format!("footer body has {} bytes", bytes.len())));
     }
     let layout = Layout::from_tag(word(bytes, 1))
         .ok_or_else(|| corrupt(format!("unknown layout tag {}", word(bytes, 1))))?;
     let rows = word(bytes, 2) as usize;
     let cols = word(bytes, 3) as usize;
     let chunk_rows = word(bytes, 4) as usize;
-    let nnz = word(bytes, 5);
-    let n_chunks = word(bytes, 6) as usize;
-    let fingerprint = word(bytes, 7);
+    let mut w = 5;
+    let chunk_cols = if tiled {
+        w += 1;
+        word(bytes, 5) as usize
+    } else {
+        cols
+    };
+    let nnz = word(bytes, w);
+    let n_chunks = word(bytes, w + 1) as usize;
+    let fingerprint = word(bytes, w + 2);
 
-    if bytes.len() != (HEADER_WORDS + ENTRY_WORDS * n_chunks) * 8 {
+    // Bound n_chunks by what the body could possibly hold before doing
+    // size arithmetic with it (a crafted count must not overflow).
+    if n_chunks > bytes.len() / (entry_words * 8)
+        || bytes.len() != (header_words + entry_words * n_chunks) * 8
+    {
         return Err(corrupt(format!(
             "footer declares {n_chunks} chunks but body has {} bytes",
             bytes.len()
         )));
     }
-    if chunk_rows == 0 && n_chunks > 0 {
-        return Err(corrupt("zero chunk height with chunks present".into()));
+    if (chunk_rows == 0 || (tiled && chunk_cols == 0)) && n_chunks > 0 {
+        return Err(corrupt("zero chunk extent with chunks present".into()));
+    }
+
+    let header = StoreHeader {
+        version,
+        layout,
+        rows,
+        cols,
+        nnz,
+        chunk_rows,
+        chunk_cols,
+        n_chunks,
+        fingerprint,
+    };
+    let n_col_bands = header.n_col_bands();
+    // checked_mul: crafted dims must not overflow the grid arithmetic.
+    if tiled && n_chunks > 0 && header.n_row_bands().checked_mul(n_col_bands) != Some(n_chunks) {
+        return Err(corrupt(format!(
+            "tiled footer declares {n_chunks} chunks for a {}x{} grid",
+            header.n_row_bands(),
+            n_col_bands
+        )));
     }
 
     let mut index = Vec::with_capacity(n_chunks);
     let mut covered_rows = 0usize;
     let mut covered_nnz = 0u64;
     for i in 0..n_chunks {
-        let base = HEADER_WORDS + ENTRY_WORDS * i;
-        let e = ChunkMeta {
-            offset: word(bytes, base),
-            len: word(bytes, base + 1),
-            row_lo: word(bytes, base + 2) as usize,
-            rows: word(bytes, base + 3) as usize,
-            nnz: word(bytes, base + 4),
-            checksum: word(bytes, base + 5),
+        let base = header_words + entry_words * i;
+        let e = if tiled {
+            ChunkMeta {
+                offset: word(bytes, base),
+                len: word(bytes, base + 1),
+                row_lo: word(bytes, base + 2) as usize,
+                rows: word(bytes, base + 3) as usize,
+                col_lo: word(bytes, base + 4) as usize,
+                cols: word(bytes, base + 5) as usize,
+                nnz: word(bytes, base + 6),
+                checksum: word(bytes, base + 7),
+            }
+        } else {
+            ChunkMeta {
+                offset: word(bytes, base),
+                len: word(bytes, base + 1),
+                row_lo: word(bytes, base + 2) as usize,
+                rows: word(bytes, base + 3) as usize,
+                col_lo: 0,
+                cols,
+                nnz: word(bytes, base + 4),
+                checksum: word(bytes, base + 5),
+            }
         };
         if e.offset < MAGIC.len() as u64 || e.offset.saturating_add(e.len) > payload_end {
             return Err(corrupt(format!(
@@ -282,15 +418,47 @@ pub fn decode_footer(
                 e.offset.saturating_add(e.len)
             )));
         }
-        if e.row_lo != i * chunk_rows || e.rows == 0 || e.rows > chunk_rows {
-            return Err(corrupt(format!(
-                "chunk {i} covers rows [{}, {}) — not a {chunk_rows}-row band",
-                e.row_lo,
-                e.row_lo + e.rows
-            )));
+        if tiled {
+            // Exact grid check: tile i sits at row band i / n_col_bands,
+            // column band i % n_col_bands, in row-band-major order.
+            let rb = i / n_col_bands;
+            let cb = i % n_col_bands;
+            let want_row_lo = rb * chunk_rows;
+            let want_col_lo = cb * chunk_cols;
+            let want_rows = chunk_rows.min(rows.saturating_sub(want_row_lo));
+            let want_cols = chunk_cols.min(cols.saturating_sub(want_col_lo));
+            if e.row_lo != want_row_lo
+                || e.rows != want_rows
+                || e.col_lo != want_col_lo
+                || e.cols != want_cols
+                || e.rows == 0
+                || e.cols == 0
+            {
+                return Err(corrupt(format!(
+                    "tile {i} covers rows [{}, {}) cols [{}, {}) — not grid cell ({rb}, {cb})",
+                    e.row_lo,
+                    e.row_lo.saturating_add(e.rows),
+                    e.col_lo,
+                    e.col_lo.saturating_add(e.cols)
+                )));
+            }
+            // Count each row band's height once (at its first tile).
+            if cb == 0 {
+                covered_rows = covered_rows.saturating_add(e.rows);
+            }
+        } else {
+            if Some(e.row_lo) != i.checked_mul(chunk_rows) || e.rows == 0 || e.rows > chunk_rows {
+                return Err(corrupt(format!(
+                    "chunk {i} covers rows [{}, {}) — not a {chunk_rows}-row band",
+                    e.row_lo,
+                    e.row_lo.saturating_add(e.rows)
+                )));
+            }
+            covered_rows = covered_rows.saturating_add(e.rows);
         }
-        covered_rows += e.rows;
-        covered_nnz += e.nnz;
+        // Saturating accumulators: a crafted footer must fail the
+        // coverage comparisons below, never wrap or panic here.
+        covered_nnz = covered_nnz.saturating_add(e.nnz);
         index.push(e);
     }
     if covered_rows != rows {
@@ -300,7 +468,7 @@ pub fn decode_footer(
         return Err(corrupt(format!("chunks hold {covered_nnz} entries, header says {nnz}")));
     }
 
-    Ok((StoreHeader { layout, rows, cols, nnz, chunk_rows, n_chunks, fingerprint }, index))
+    Ok((header, index))
 }
 
 #[cfg(test)]
@@ -316,17 +484,21 @@ mod tests {
                 len: 40,
                 row_lo: i * 2,
                 rows: 2,
+                col_lo: 0,
+                cols: 7,
                 nnz: 10,
                 checksum: 0xABC0 + i as u64,
             });
             offset += 40;
         }
         let h = StoreHeader {
+            version: VERSION,
             layout: Layout::Csr,
             rows: n_chunks * 2,
             cols: 7,
             nnz: 10 * n_chunks as u64,
             chunk_rows: 2,
+            chunk_cols: 7,
             n_chunks,
             fingerprint: store_fingerprint(
                 Layout::Csr,
@@ -339,6 +511,54 @@ mod tests {
         (h, index)
     }
 
+    /// A 2×2 tile grid over a 5×5 dense matrix (3-row / 3-col bands).
+    fn tiled_header() -> (StoreHeader, Vec<ChunkMeta>) {
+        let mut index = Vec::new();
+        let mut offset = 8u64;
+        let grid = [
+            (0usize, 3usize, 0usize, 3usize),
+            (0, 3, 3, 2),
+            (3, 2, 0, 3),
+            (3, 2, 3, 2),
+        ];
+        for (i, &(row_lo, rows, col_lo, cols)) in grid.iter().enumerate() {
+            let nnz = (rows * cols) as u64;
+            index.push(ChunkMeta {
+                offset,
+                len: nnz * 4,
+                row_lo,
+                rows,
+                col_lo,
+                cols,
+                nnz,
+                checksum: 0xF00 + i as u64,
+            });
+            offset += nnz * 4;
+        }
+        let h = StoreHeader {
+            version: VERSION_TILED,
+            layout: Layout::Dense,
+            rows: 5,
+            cols: 5,
+            nnz: 25,
+            chunk_rows: 3,
+            chunk_cols: 3,
+            n_chunks: 4,
+            fingerprint: store_fingerprint(
+                Layout::Dense,
+                5,
+                5,
+                25,
+                index.iter().map(|e| e.checksum),
+            ),
+        };
+        (h, index)
+    }
+
+    fn payload_end(index: &[ChunkMeta]) -> u64 {
+        index.last().map(|e| e.offset + e.len).unwrap_or(8)
+    }
+
     #[test]
     fn footer_round_trip() {
         let (h, index) = header(3);
@@ -346,6 +566,47 @@ mod tests {
         let (h2, index2) = decode_footer(&bytes, 8 + 3 * 40, Path::new("/t")).unwrap();
         assert_eq!(h, h2);
         assert_eq!(index, index2);
+    }
+
+    #[test]
+    fn tiled_footer_round_trip() {
+        let (h, index) = tiled_header();
+        let bytes = encode_footer(&h, &index);
+        let (h2, index2) = decode_footer(&bytes, payload_end(&index), Path::new("/t")).unwrap();
+        assert_eq!(h, h2);
+        assert_eq!(index, index2);
+        assert!(h2.is_tiled());
+        assert_eq!((h2.n_row_bands(), h2.n_col_bands()), (2, 2));
+    }
+
+    #[test]
+    fn tiled_footer_rejects_grid_violations() {
+        let (h, mut index) = tiled_header();
+        index[1].col_lo = 2; // tile (0,1) must start at column 3
+        let bytes = encode_footer(&h, &index);
+        let err = decode_footer(&bytes, payload_end(&index), Path::new("/t")).unwrap_err();
+        assert!(matches!(err, StoreError::Corrupt { .. }), "{err}");
+    }
+
+    #[test]
+    fn tiled_footer_rejects_wrong_chunk_count() {
+        let (mut h, mut index) = tiled_header();
+        index.pop();
+        h.n_chunks = 3;
+        let bytes = encode_footer(&h, &index);
+        let err = decode_footer(&bytes, payload_end(&index), Path::new("/t")).unwrap_err();
+        assert!(matches!(err, StoreError::Corrupt { .. }), "{err}");
+    }
+
+    #[test]
+    fn v1_decode_fills_implicit_column_band() {
+        let (h, index) = header(2);
+        let bytes = encode_footer(&h, &index);
+        let (h2, index2) = decode_footer(&bytes, 8 + 2 * 40, Path::new("/t")).unwrap();
+        assert!(!h2.is_tiled());
+        assert_eq!(h2.chunk_cols, h2.cols, "one column band spans the width");
+        assert_eq!(h2.n_col_bands(), 1);
+        assert!(index2.iter().all(|e| e.col_lo == 0 && e.cols == 7));
     }
 
     #[test]
@@ -373,6 +634,18 @@ mod tests {
         bytes[..8].copy_from_slice(&999u64.to_le_bytes());
         let err = decode_footer(&bytes, 8 + 40, Path::new("/t")).unwrap_err();
         assert!(matches!(err, StoreError::UnsupportedVersion { version: 999, .. }), "{err}");
+    }
+
+    #[test]
+    fn v1_encoding_is_byte_stable() {
+        // LAMC2 files written before the tiled layout existed must keep
+        // decoding: version 1 encodes exactly the historical byte layout
+        // (8 header words, 6 entry words — no column fields).
+        let (h, index) = header(2);
+        let bytes = encode_footer(&h, &index);
+        assert_eq!(bytes.len(), (8 + 6 * 2) * 8);
+        let (h2, _) = decode_footer(&bytes, 8 + 2 * 40, Path::new("/t")).unwrap();
+        assert_eq!(h2.version, VERSION);
     }
 
     #[test]

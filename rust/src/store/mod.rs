@@ -4,36 +4,48 @@
 //! RAM before the partition planner (paper §IV-B.2) ever ran, capping
 //! practical scale far below what the Theorem-1 sampling model targets.
 //! This module removes that cap: matrices live on disk in a
-//! self-describing chunked format and the pipeline streams **row-band
-//! tiles** — submatrix extraction (§IV-B) only ever needs the bands a
-//! block's rows touch, never the whole matrix.
+//! self-describing chunked format and the pipeline streams **submatrix
+//! tiles** — submatrix extraction (§IV-B) only ever needs the chunks a
+//! block's rows and columns touch, never the whole matrix.
 //!
 //! Pieces:
 //!
-//! * [`format`] — the versioned LAMC2 layout: leading magic, fixed-height
-//!   row-band chunks (dense or CSR payloads), and a trailing footer with
-//!   dims, per-chunk checksums (`rng::mix64` chains) and an O(1) content
-//!   fingerprint. Failures are typed ([`StoreError`]): not-a-store vs
-//!   truncated vs corrupt.
+//! * [`format`] — the versioned layouts: **LAMC2** (fixed-height row
+//!   bands) and **LAMC3** (a row-band × col-band tile grid, so
+//!   column-heavy planner access stops decoding full rows). Both share
+//!   the envelope: leading magic, dense or CSR chunk payloads, and a
+//!   trailing footer with dims, per-chunk checksums (`rng::mix64`
+//!   chains) and an O(1) content fingerprint. Failures are typed
+//!   ([`StoreError`]): not-a-store vs truncated vs corrupt.
 //! * [`chunk`] — [`ChunkWriter`], a streaming row-append ingester
-//!   (bands sealed + fsynced as they fill; row count unknown until
-//!   `finish`), and [`StoreReader`], random access via
-//!   `tile(rows, cols)` that reads only the touched bands, with an
-//!   optional byte-bounded decoded-band cache.
+//!   (bands sealed + fsynced as they fill — split into column tiles on
+//!   the fly in tiled mode; row count unknown until `finish`), and
+//!   [`StoreReader`], random access via `tile(rows, cols)` that reads
+//!   only the intersecting chunks of either layout, with a byte-bounded
+//!   decoded-chunk cache backed by the shared [`crate::cache::ByteLru`].
+//! * [`repack`](mod@crate::store::repack) — store-to-store re-chunking
+//!   (row-band ↔ tiled, new band/tile extents) that streams one band at
+//!   a time and preserves the content fingerprint, so a repacked store
+//!   keeps its result-cache identity.
 //! * [`view`] — [`MatrixRef`] / [`MatrixView`]: location-transparent
 //!   handles adopted by `pipeline::run`, `coordinator::run_rounds` and
 //!   the partition planner/sampler, so the same co-clustering code
 //!   serves in-memory and out-of-core inputs with byte-identical
 //!   results.
 //!
-//! The `lamc pack` / `lamc ingest` / `lamc inspect` CLI commands and the
-//! service's `LOAD name=… store=…` verb are thin wrappers over these
-//! types; `docs/STORE.md` documents the format and the RSS expectations.
+//! The `lamc pack` / `lamc ingest` / `lamc inspect` / `lamc repack` CLI
+//! commands and the service's `LOAD name=… store=…` verb are thin
+//! wrappers over these types; `docs/STORE.md` documents both formats
+//! and the RSS expectations.
 
 pub mod chunk;
 pub mod format;
+pub mod repack;
 pub mod view;
 
-pub use chunk::{pack_matrix, ChunkWriter, StoreReader, StoreSummary, DEFAULT_CACHE_BYTES};
+pub use chunk::{
+    pack_matrix, pack_matrix_tiled, ChunkWriter, StoreReader, StoreSummary, DEFAULT_CACHE_BYTES,
+};
 pub use format::{checksum_bytes, Layout, StoreError, StoreHeader, DEFAULT_CHUNK_ROWS};
+pub use repack::{repack, repack_reader, RepackOptions};
 pub use view::{MatrixRef, MatrixView};

@@ -1,0 +1,240 @@
+//! Store-to-store repacking: change a store's chunk geometry —
+//! row-band (LAMC2) ↔ tiled (LAMC3), or different band/tile extents —
+//! **without ever materializing the matrix**.
+//!
+//! The pass is a single sequential sweep: source chunks decode one row
+//! band at a time (every column tile of the band is pinned while its
+//! rows drain), rows replay through a fresh [`ChunkWriter`], and the
+//! writer seals-and-fsyncs output bands as they fill. Peak memory is
+//! one source row band + one destination row band + whatever the
+//! reader's byte-bounded chunk cache holds (which this sweep never
+//! needs — every source chunk is read exactly once).
+//!
+//! The destination keeps the source's **content fingerprint** verbatim:
+//! the bytes on disk change, the matrix does not, so a repacked store
+//! hits the same service result-cache entries as its source
+//! (`tests/integration_store.rs` asserts this end to end).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::chunk::{ChunkWriter, DecodedChunk, StoreReader, StoreSummary};
+use super::format::{Layout, DEFAULT_CHUNK_ROWS};
+
+/// How to re-chunk. `chunk_cols: None` produces a row-band (LAMC2)
+/// store; `Some(width)` produces a tiled (LAMC3) store.
+#[derive(Clone, Copy, Debug)]
+pub struct RepackOptions {
+    /// Output row-band height.
+    pub chunk_rows: usize,
+    /// Output column-band width (`None` = row bands).
+    pub chunk_cols: Option<usize>,
+    /// Byte budget for the source reader's decoded-chunk cache. The
+    /// sweep reads every chunk exactly once, so 0 (no cache) is the
+    /// tightest-memory choice and costs no extra I/O.
+    pub cache_budget: usize,
+}
+
+impl Default for RepackOptions {
+    fn default() -> Self {
+        RepackOptions { chunk_rows: DEFAULT_CHUNK_ROWS, chunk_cols: None, cache_budget: 0 }
+    }
+}
+
+/// Repack the store at `src` into `dst` with a new chunk geometry.
+/// Streaming both ways; fingerprint preserved. See the module docs.
+pub fn repack(src: &Path, dst: &Path, opts: &RepackOptions) -> Result<StoreSummary> {
+    let reader = StoreReader::open_with_cache(src, opts.cache_budget)?;
+    repack_reader(&reader, dst, opts.chunk_rows, opts.chunk_cols)
+}
+
+/// Repack through an already-open reader (the reader's cache budget is
+/// whatever it was opened with).
+pub fn repack_reader(
+    reader: &StoreReader,
+    dst: &Path,
+    chunk_rows: usize,
+    chunk_cols: Option<usize>,
+) -> Result<StoreSummary> {
+    let header = reader.header();
+    let mut writer = match chunk_cols {
+        Some(w) => ChunkWriter::create_tiled(dst, header.layout, header.cols, chunk_rows, w)?,
+        None => ChunkWriter::create(dst, header.layout, header.cols, chunk_rows)?,
+    };
+    // Same content, same identity: carry the source fingerprint forward
+    // instead of recomputing over the new chunk checksums.
+    writer.set_fingerprint(header.fingerprint);
+
+    let n_row_bands = header.n_row_bands();
+    let layout = header.layout;
+    let mut dense_row: Vec<f32> = Vec::with_capacity(header.cols);
+    let mut sparse_row: Vec<(u32, f32)> = Vec::new();
+    for rb in 0..n_row_bands {
+        // Pin this band's tiles (a row-band store has exactly one) so
+        // the sweep is independent of the reader's cache policy.
+        let tiles = reader.band_tiles(rb)?;
+        let band_rows = tiles[0].0.rows;
+        for lr in 0..band_rows {
+            match layout {
+                Layout::Dense => {
+                    dense_row.clear();
+                    for (meta, chunk) in &tiles {
+                        let DecodedChunk::Dense { values } = &**chunk else {
+                            bail!("dense store decoded a csr chunk")
+                        };
+                        dense_row.extend_from_slice(&values[lr * meta.cols..(lr + 1) * meta.cols]);
+                    }
+                    writer.append_dense_row(&dense_row)?;
+                }
+                Layout::Csr => {
+                    sparse_row.clear();
+                    for (meta, chunk) in &tiles {
+                        let DecodedChunk::Csr { indptr, indices, values } = &**chunk else {
+                            bail!("csr store decoded a dense chunk")
+                        };
+                        for t in indptr[lr] as usize..indptr[lr + 1] as usize {
+                            sparse_row.push((meta.col_lo as u32 + indices[t], values[t]));
+                        }
+                    }
+                    writer.append_sparse_row(&sparse_row)?;
+                }
+            }
+        }
+    }
+    writer.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{CsrMatrix, DenseMatrix, Matrix};
+    use crate::rng::Xoshiro256;
+    use crate::store::chunk::{pack_matrix, pack_matrix_tiled};
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("lamc_repack_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn dense(seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::seed_from(seed);
+        Matrix::Dense(DenseMatrix::randn(43, 19, &mut rng))
+    }
+
+    fn sparse(seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let mut trip = Vec::new();
+        for _ in 0..350 {
+            trip.push((rng.next_below(43), rng.next_below(19), rng.next_f32() + 0.01));
+        }
+        Matrix::Sparse(CsrMatrix::from_triplets(43, 19, trip))
+    }
+
+    fn read_back(path: &Path) -> Matrix {
+        StoreReader::open(path).unwrap().read_all().unwrap()
+    }
+
+    fn assert_same(a: &Matrix, b: &Matrix) {
+        match (a, b) {
+            (Matrix::Dense(x), Matrix::Dense(y)) => assert_eq!(x, y),
+            (Matrix::Sparse(x), Matrix::Sparse(y)) => {
+                assert_eq!(x.nnz(), y.nnz());
+                assert_eq!(x.to_dense().data(), y.to_dense().data());
+            }
+            _ => panic!("layout changed across repack"),
+        }
+    }
+
+    #[test]
+    fn band_to_tiled_and_back_preserves_content_and_fingerprint() {
+        for (name, matrix) in [("dense", dense(11)), ("sparse", sparse(12))] {
+            let a = tmp(&format!("{name}_a.lamc2"));
+            let b = tmp(&format!("{name}_b.lamc3"));
+            let c = tmp(&format!("{name}_c.lamc2"));
+            let s0 = pack_matrix(&matrix, &a, 8).unwrap();
+            let s1 = repack(
+                &a,
+                &b,
+                &RepackOptions { chunk_rows: 5, chunk_cols: Some(4), cache_budget: 0 },
+            )
+            .unwrap();
+            assert!(s1.tiled);
+            assert_eq!(s1.fingerprint, s0.fingerprint, "{name}: identity survives re-tiling");
+            assert_eq!(s1.nnz, s0.nnz, "{name}: no entries invented or dropped");
+            let s2 = repack(
+                &b,
+                &c,
+                &RepackOptions { chunk_rows: 16, chunk_cols: None, cache_budget: 0 },
+            )
+            .unwrap();
+            assert!(!s2.tiled);
+            assert_eq!(s2.fingerprint, s0.fingerprint);
+            assert_same(&matrix, &read_back(&a));
+            assert_same(&matrix, &read_back(&b));
+            assert_same(&matrix, &read_back(&c));
+        }
+    }
+
+    #[test]
+    fn rechunking_band_heights_streams_every_chunk_once() {
+        let matrix = dense(13);
+        let a = tmp("rechunk_a.lamc2");
+        let b = tmp("rechunk_b.lamc2");
+        pack_matrix(&matrix, &a, 4).unwrap();
+        let reader = StoreReader::open_with_cache(&a, 0).unwrap();
+        repack_reader(&reader, &b, 32, None).unwrap();
+        assert_eq!(
+            reader.chunks_read() as usize,
+            reader.n_chunks(),
+            "sequential sweep reads each source chunk exactly once"
+        );
+        assert_same(&matrix, &read_back(&b));
+    }
+
+    #[test]
+    fn tiled_to_tiled_regrid() {
+        let matrix = sparse(14);
+        let a = tmp("regrid_a.lamc3");
+        let b = tmp("regrid_b.lamc3");
+        pack_matrix_tiled(&matrix, &a, 6, 3).unwrap();
+        let s = repack(
+            &a,
+            &b,
+            &RepackOptions { chunk_rows: 9, chunk_cols: Some(7), cache_budget: 0 },
+        )
+        .unwrap();
+        assert_eq!((s.chunk_rows, s.chunk_cols), (9, 7));
+        assert_same(&matrix, &read_back(&b));
+    }
+
+    #[test]
+    fn explicit_zero_entries_survive_repack() {
+        // Repack must preserve the stored-entry structure, not just the
+        // dense view: an explicitly stored 0.0 stays an entry.
+        let path_a = tmp("zeros_a.lamc2");
+        let path_b = tmp("zeros_b.lamc3");
+        let mut w = ChunkWriter::create(&path_a, Layout::Csr, 5, 2).unwrap();
+        w.append_sparse_row(&[(1, 0.0), (3, 2.0)]).unwrap();
+        w.append_sparse_row(&[]).unwrap();
+        w.append_sparse_row(&[(0, -1.0)]).unwrap();
+        w.finish().unwrap();
+        let s = repack(
+            &path_a,
+            &path_b,
+            &RepackOptions { chunk_rows: 1, chunk_cols: Some(2), cache_budget: 0 },
+        )
+        .unwrap();
+        assert_eq!(s.nnz, 3, "explicit zero kept");
+        match read_back(&path_b) {
+            Matrix::Sparse(got) => {
+                assert_eq!(got.nnz(), 3);
+                assert_eq!(got.to_dense().get(0, 3), 2.0);
+                assert_eq!(got.to_dense().get(2, 0), -1.0);
+            }
+            _ => panic!("layout"),
+        }
+    }
+}

@@ -29,7 +29,8 @@ use super::chunk::StoreReader;
 pub enum MatrixRef {
     /// Fully materialized in RAM.
     InMem(Arc<Matrix>),
-    /// Resident on disk in a LAMC2 store; tiles stream in on demand.
+    /// Resident on disk in a LAMC2/LAMC3 store; tiles stream in on
+    /// demand (reading only the chunks each block intersects).
     Stored(Arc<StoreReader>),
 }
 
@@ -42,7 +43,7 @@ impl MatrixRef {
         MatrixRef::Stored(Arc::new(reader))
     }
 
-    /// Open a LAMC2 store file as a matrix handle.
+    /// Open a LAMC2/LAMC3 store file as a matrix handle.
     pub fn open_store(path: &Path) -> Result<Self> {
         Ok(MatrixRef::stored(StoreReader::open(path)?))
     }
