@@ -7,12 +7,16 @@
 //! than the matrix. Peak memory is therefore bounded by
 //!
 //! ```text
-//!   band cache budget  +  workers × (block bytes)  +  labels
+//!   band cache budget  +  prefetch budget  +  workers × (block bytes)  +  labels
 //! ```
 //!
 //! independent of matrix size: scale `LAMC_ROWS` up 100× and the bound
 //! does not move (only the run gets longer). That is the §IV-B promise —
-//! submatrix extraction only ever needs row/column tiles.
+//! submatrix extraction only ever needs row/column tiles. The prefetch
+//! pool is the background prefetcher's separately budgeted cache: the
+//! scheduler hands the reader each upcoming round's chunk plan, so
+//! band decodes overlap co-clustering instead of blocking gathers
+//! (see docs/STORE.md § Prefetch).
 //!
 //! ```text
 //! cargo run --release --example out_of_core
@@ -27,8 +31,10 @@ fn main() -> anyhow::Result<()> {
     let rows: usize = std::env::var("LAMC_ROWS").ok().and_then(|s| s.parse().ok()).unwrap_or(12_000);
     let cols = 400usize;
     let k = 4usize;
-    // The knob this example is about: a band cache far below matrix size.
+    // The knobs this example is about: a band cache far below matrix
+    // size, plus a bounded pool for the background prefetcher.
     let cache_budget = 4 << 20; // 4 MB
+    let prefetch_budget = 2 << 20; // 2 MB
     let matrix_bytes = rows * cols * 4;
 
     let dir = std::env::temp_dir().join("lamc_out_of_core_example");
@@ -57,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- Serve: the pipeline streams tiles; RAM stays bounded. --------
-    let reader = StoreReader::open_with_cache(&path, cache_budget)?;
+    let reader = StoreReader::open_with_budgets(&path, cache_budget, prefetch_budget)?;
     assert!(
         matrix_bytes > cache_budget,
         "this example wants the matrix ({matrix_bytes} B) larger than the band cache ({cache_budget} B)"
@@ -76,8 +82,15 @@ fn main() -> anyhow::Result<()> {
             reader.cache_hits(),
         );
         println!(
-            "peak resident bound: {:.1} MB cache + workers x block tiles (matrix itself: {:.1} MB, never loaded)",
+            "prefetch: {} bands fetched ahead, {} consumed by gathers, {} bytes wasted",
+            reader.prefetch_issued(),
+            reader.prefetch_hits(),
+            reader.prefetch_wasted_bytes(),
+        );
+        println!(
+            "peak resident bound: {:.1} MB cache + {:.1} MB prefetch pool + workers x block tiles (matrix itself: {:.1} MB, never loaded)",
             cache_budget as f64 / 1e6,
+            prefetch_budget as f64 / 1e6,
             matrix_bytes as f64 / 1e6,
         );
         // The high-water mark shows how much of the budget the run

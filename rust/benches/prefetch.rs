@@ -1,0 +1,158 @@
+//! Prefetch on/off: does overlapping chunk I/O with compute make a
+//! store-backed `Lamc::run` measurably faster?
+//!
+//! The shape is the store's worst case (and the paper's target access
+//! pattern): a **col-heavy** grid — ψ-wide blocks much narrower than
+//! the matrix — over a row-band (LAMC2) store, so every gather decodes
+//! full-width bands. With prefetch off, each band's first touch blocks
+//! a worker: decode serializes in front of co-clustering. With prefetch
+//! on, the scheduler hands the reader each round's plan up front and a
+//! background thread decodes bands while blocks compute.
+//!
+//! The atom is a fixed-cost probe (a few arithmetic passes per block,
+//! deterministic labels) sized so compute and decode are the same order
+//! of magnitude — the regime where overlap pays. SCC-dominated runs see
+//! a smaller *relative* win (compute dwarfs I/O); the absolute
+//! I/O-hiding is the same. One worker thread is used so the comparison
+//! is overlap vs no-overlap, not core-count noise.
+//!
+//! Run: `cargo bench --bench prefetch [-- --json OUT.json]` — the JSON
+//! mode is what CI's perf-smoke job records as `BENCH_5.json` (schema
+//! in docs/BENCHMARKS.md).
+
+use std::sync::Arc;
+
+use lamc::bench_util::{bench, json_arg_path, Table};
+use lamc::cocluster::{AtomCocluster, CoclusterResult};
+use lamc::matrix::{DenseMatrix, Matrix};
+use lamc::partition::{CoclusterPrior, PlannerConfig};
+use lamc::rng::Xoshiro256;
+use lamc::store::{pack_matrix, StoreReader};
+use lamc::{Lamc, LamcConfig};
+
+const ROWS: usize = 2048;
+const COLS: usize = 4096;
+const CHUNK_ROWS: usize = 256;
+const HOT_BUDGET: usize = 256 << 20;
+const PREFETCH_BUDGET: usize = 64 << 20;
+
+/// Fixed-cost probe atom: `passes` fused multiply-add sweeps over the
+/// block, deterministic labels. Calibrates compute against decode so
+/// the bench isolates the I/O pipeline, not SCC's linear algebra.
+struct ProbeAtom {
+    passes: usize,
+}
+
+impl AtomCocluster for ProbeAtom {
+    fn name(&self) -> &'static str {
+        "probe"
+    }
+
+    fn cocluster(&self, a: &Matrix, k: usize, _rng: &mut Xoshiro256) -> CoclusterResult {
+        let mut acc = 0f32;
+        if let Matrix::Dense(d) = a {
+            for _ in 0..self.passes {
+                for &v in d.data() {
+                    acc = acc.mul_add(0.999_9, v);
+                }
+            }
+        }
+        let k = k.max(1);
+        CoclusterResult {
+            row_labels: (0..a.rows()).map(|i| i % k).collect(),
+            col_labels: (0..a.cols()).map(|j| j % k).collect(),
+            k,
+            // Keeps the passes observable so they cannot be elided.
+            objective: std::hint::black_box(acc) as f64,
+        }
+    }
+}
+
+fn config() -> LamcConfig {
+    LamcConfig {
+        k: 4,
+        atom_override: Some(Arc::new(ProbeAtom { passes: 6 })),
+        planner: PlannerConfig {
+            // ψ = 256 of 4096 columns: every block is col-heavy
+            // relative to the full-width row bands it decodes.
+            candidate_sizes: vec![256],
+            // Generous prior: certifies with few samplings, so the
+            // bench measures the I/O pipeline, not T_p.
+            prior: CoclusterPrior { row_fraction: 0.5, col_fraction: 0.5, t_m: 2, t_n: 2 },
+            max_samplings: 4,
+            ..Default::default()
+        },
+        workers: 1,
+        seed: 0xBE7C,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    println!(
+        "== prefetch on/off: {ROWS} x {COLS} dense, lamc2 {CHUNK_ROWS}-row bands, col-heavy psi=256 grid ==\n"
+    );
+    let mut rng = Xoshiro256::seed_from(0x9E7F);
+    let matrix = Matrix::Dense(DenseMatrix::randn(ROWS, COLS, &mut rng));
+    let dir = std::env::temp_dir().join("lamc_bench_prefetch");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m.lamc2");
+    pack_matrix(&matrix, &path, CHUNK_ROWS).unwrap();
+
+    let lamc = Lamc::new(config());
+    let mut table = Table::new(&["prefetch", "median", "speedup"]);
+    let mut medians = Vec::new();
+    let mut plan_line = String::new();
+    for (label, prefetch_budget) in [("off", 0usize), ("on", PREFETCH_BUDGET)] {
+        // A fresh reader per run: timing covers cold caches every time
+        // (a warm hot-cache run would measure nothing but compute).
+        let t = bench(1, 3, || {
+            let reader = StoreReader::open_with_budgets(&path, HOT_BUDGET, prefetch_budget).unwrap();
+            let out = lamc.run(&reader).unwrap();
+            std::hint::black_box(out.k);
+        });
+        medians.push((label, t));
+        let speedup = medians[0].1.median_s / t.median_s;
+        table.row(&[label.to_string(), t.format(), format!("{speedup:.2}x")]);
+    }
+    // One instrumented run for the counters the JSON records.
+    let reader = StoreReader::open_with_budgets(&path, HOT_BUDGET, PREFETCH_BUDGET).unwrap();
+    let out = lamc.run(&reader).unwrap();
+    plan_line.push_str(&format!(
+        "{}x{} blocks of {}x{}, T_p={}",
+        out.plan.m, out.plan.n, out.plan.phi, out.plan.psi, out.plan.t_p
+    ));
+    let io = reader.io_counters();
+
+    println!("{}", table.render());
+    println!("plan: {plan_line}");
+    println!(
+        "instrumented run: prefetch_issued={} prefetch_hits={} prefetch_wasted_bytes={} chunks_read={}",
+        io.prefetch_issued, io.prefetch_hits, io.prefetch_wasted_bytes, io.chunks_read
+    );
+
+    if let Some(json_out) = json_arg_path() {
+        let (off, on) = (medians[0].1, medians[1].1);
+        let json = format!(
+            "{{\n  \"bench\": \"prefetch\",\n  \"rows\": {ROWS},\n  \"cols\": {COLS},\n  \
+             \"store\": \"lamc2 row-band, {CHUNK_ROWS}-row bands\",\n  \
+             \"shape\": \"col-heavy (psi=256 of {COLS} cols)\",\n  \"plan\": \"{plan_line}\",\n  \
+             \"prefetch_off\": {{\"median_s\": {:.6}, \"min_s\": {:.6}, \"runs\": {}}},\n  \
+             \"prefetch_on\": {{\"median_s\": {:.6}, \"min_s\": {:.6}, \"runs\": {}}},\n  \
+             \"speedup\": {:.4},\n  \
+             \"prefetch_issued\": {},\n  \"prefetch_hits\": {},\n  \"prefetch_wasted_bytes\": {}\n}}\n",
+            off.median_s,
+            off.min_s,
+            off.runs,
+            on.median_s,
+            on.min_s,
+            on.runs,
+            off.median_s / on.median_s,
+            io.prefetch_issued,
+            io.prefetch_hits,
+            io.prefetch_wasted_bytes,
+        );
+        std::fs::write(&json_out, json).unwrap();
+        println!("wrote {json_out:?}");
+    }
+}

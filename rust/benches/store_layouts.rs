@@ -3,10 +3,12 @@
 //! blocks, and square planner tiles. Reports wall time per gather and —
 //! the number the layout actually controls — payload bytes off disk.
 //!
-//! Run: `cargo bench --bench store_layouts` (plain `main()`, prints a
-//! table; see docs/BENCHMARKS.md for the harness conventions).
+//! Run: `cargo bench --bench store_layouts [-- --json OUT.json]`
+//! (plain `main()`, prints a table; `--json` additionally writes the
+//! machine-readable form CI's perf-smoke job folds into `BENCH_5.json`
+//! — schema in docs/BENCHMARKS.md).
 
-use lamc::bench_util::{bench, Table};
+use lamc::bench_util::{bench, json_arg_path, Table};
 use lamc::matrix::{DenseMatrix, Matrix};
 use lamc::rng::Xoshiro256;
 use lamc::store::{pack_matrix, pack_matrix_tiled, StoreReader};
@@ -33,6 +35,7 @@ fn main() {
     ];
 
     let mut table = Table::new(&["access shape", "layout", "median", "payload bytes/gather"]);
+    let mut records: Vec<String> = Vec::new();
     for (name, nr, nc) in shapes {
         for (layout, path) in [("lamc2", &band_path), ("lamc3", &tiled_path)] {
             let reader = StoreReader::open_with_cache(path, 0).unwrap();
@@ -49,8 +52,22 @@ fn main() {
                 t.format(),
                 format!("{per_gather}"),
             ]);
+            records.push(format!(
+                "    {{\"shape\": \"{name}\", \"layout\": \"{layout}\", \"median_s\": {:.6}, \"payload_bytes_per_gather\": {per_gather}}}",
+                t.median_s
+            ));
         }
     }
     println!("{}", table.render());
     println!("(lamc3 wins where the access is narrower than the matrix; lamc2 wins\n row-heavy shapes by avoiding per-tile seek/decode overhead)");
+
+    if let Some(json_out) = json_arg_path() {
+        let json = format!(
+            "{{\n  \"bench\": \"store_layouts\",\n  \"rows\": {rows},\n  \"cols\": {cols},\n  \
+             \"band_store\": \"256-row bands\",\n  \"tiled_store\": \"256x128 tiles\",\n  \"gathers\": [\n{}\n  ]\n}}\n",
+            records.join(",\n")
+        );
+        std::fs::write(&json_out, json).unwrap();
+        println!("wrote {json_out:?}");
+    }
 }

@@ -56,6 +56,19 @@ pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
     (out, t.elapsed().as_secs_f64())
 }
 
+/// The `--json PATH` argument of a bench invocation, if present. Every
+/// other argument is ignored — `cargo bench` appends its own flags
+/// (e.g. `--bench`) to harness-less bench binaries.
+pub fn json_arg_path() -> Option<std::path::PathBuf> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--json" {
+            return args.next().map(Into::into);
+        }
+    }
+    None
+}
+
 /// Fixed-width table printer for bench reports.
 pub struct Table {
     headers: Vec<String>,

@@ -152,6 +152,18 @@ impl<K: Eq + Hash + Clone, V> ByteLru<K, V> {
         })
     }
 
+    /// Forcibly evict the least-recently-used entry, returning it (and
+    /// counting it as an eviction). The store prefetcher uses this to
+    /// push out stale never-consumed chunks when a plan has moved on —
+    /// the one caller that needs to reclaim room *without* inserting.
+    pub fn pop_lru(&mut self) -> Option<(K, V)> {
+        let (_, key) = self.order.pop_first()?;
+        let slot = self.map.remove(&key).expect("order index out of sync");
+        self.bytes -= slot.bytes;
+        self.evictions += 1;
+        Some((key, slot.value))
+    }
+
     /// Insert `value` under `key` with an explicit byte weight, evicting
     /// least-recently-used entries until the budget holds. See
     /// [`Insertion`] for what comes back out.
@@ -310,6 +322,21 @@ mod tests {
         // Inserts that evict never push the peak past capacity.
         lru.insert(3, 3, 80);
         assert!(lru.peak_bytes() <= 110);
+    }
+
+    #[test]
+    fn pop_lru_evicts_oldest_and_counts() {
+        let mut lru: ByteLru<&str, u32> = ByteLru::new(100);
+        lru.insert("a", 1, 10);
+        lru.insert("b", 2, 20);
+        assert_eq!(lru.get(&"a"), Some(&1), "refresh a: b is now oldest");
+        assert_eq!(lru.pop_lru(), Some(("b", 2)));
+        assert_eq!(lru.bytes(), 10);
+        assert_eq!(lru.evictions(), 1, "forced pops are evictions");
+        assert_eq!(lru.pop_lru(), Some(("a", 1)));
+        assert_eq!(lru.pop_lru(), None);
+        assert!(lru.is_empty());
+        assert_eq!(lru.bytes(), 0);
     }
 
     #[test]

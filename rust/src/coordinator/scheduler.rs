@@ -77,6 +77,15 @@ pub fn job_seed(base: u64, job: &BlockJob) -> u64 {
 /// before) or a store-backed handle (each worker's gather reads only the
 /// row bands its block touches, so peak memory is workers × block size
 /// rather than matrix size).
+///
+/// Rounds execute as successive waves, and the leader hands the store's
+/// background prefetcher round `r+1`'s chunk plan *before dispatching
+/// round `r`* — the whole job grid is known up front, so disk I/O for
+/// the next round overlaps the current round's co-clustering instead of
+/// serializing in front of it (a no-op for in-memory matrices). Results
+/// never depend on prefetch; only wall-clock does. The store I/O the
+/// call generated (chunks/bytes read, cache and prefetch hits) is
+/// folded into `stats` as a per-run delta.
 pub fn run_rounds<'a>(
     matrix: impl Into<MatrixView<'a>>,
     rounds: &[SamplingRound],
@@ -89,11 +98,11 @@ pub fn run_rounds<'a>(
     if jobs.is_empty() {
         return Ok(vec![]);
     }
-    let concurrency = cfg.effective_workers().min(jobs.len());
     let slots: Mutex<Vec<Option<Result<crate::cocluster::CoclusterResult>>>> =
         Mutex::new((0..jobs.len()).map(|_| None).collect());
 
-    WorkerPool::global().run_jobs(concurrency, jobs.len(), |idx| {
+    // One claim-loop body shared by both dispatch shapes below.
+    let run_one = |idx: usize| {
         let job = jobs[idx];
         let t0 = Instant::now();
         let block = matrix.gather_block(&job.rows, &job.cols);
@@ -115,7 +124,40 @@ pub fn run_rounds<'a>(
 
         // Per-job lock is negligible next to gather + co-clustering.
         slots.lock().unwrap()[idx] = Some(result);
-    });
+    };
+
+    if !matrix.prefetch_enabled() {
+        // Nothing to prefetch (in-memory matrix, or a reader with
+        // prefetch disabled): keep the flat single-wave dispatch —
+        // workers stay busy across round boundaries instead of idling
+        // behind each round's straggler.
+        let concurrency = cfg.effective_workers().min(jobs.len());
+        WorkerPool::global().run_jobs(concurrency, jobs.len(), &run_one);
+    } else {
+        // Store-backed with a live prefetcher: rounds execute as waves
+        // so the leader can hand the prefetcher round r+1's plan before
+        // dispatching round r. Warm round 0 while its own wave spins up
+        // (intra-round overlap)…
+        matrix.prefetch_plan(&rounds[..1]);
+        let mut base = 0usize;
+        for (r, round) in rounds.iter().enumerate() {
+            // …then stream round r+1's chunks while round r computes.
+            if r + 1 < rounds.len() {
+                matrix.prefetch_plan(&rounds[r + 1..r + 2]);
+            }
+            if round.jobs.is_empty() {
+                continue;
+            }
+            let concurrency = cfg.effective_workers().min(round.jobs.len());
+            let offset = base;
+            WorkerPool::global().run_jobs(concurrency, round.jobs.len(), |i| run_one(offset + i));
+            base += round.jobs.len();
+        }
+    }
+
+    // Fold the store I/O this reader accumulated (watermarked claim, so
+    // concurrent runs sharing the reader never double-count).
+    stats.add_io(&matrix.take_io_delta());
 
     let mut out = Vec::with_capacity(jobs.len());
     let mut first_err: Option<anyhow::Error> = None;

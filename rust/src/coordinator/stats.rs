@@ -21,6 +21,19 @@ pub struct Stats {
     pub cache_hits: AtomicU64,
     /// Service result-cache misses (jobs that ran the pipeline).
     pub cache_misses: AtomicU64,
+    /// Store-reader I/O folded in per run (all zero for in-memory
+    /// inputs): chunks decoded off disk, payload bytes read, and
+    /// decoded-chunk cache hits — the counters that used to be visible
+    /// only on the `StoreReader` itself, invisible through the service.
+    pub store_chunks_read: AtomicU64,
+    pub store_bytes_read: AtomicU64,
+    pub store_cache_hits: AtomicU64,
+    /// Background-prefetch telemetry (see `store::prefetch`): chunks
+    /// pulled ahead of the compute wave, chunk requests answered by a
+    /// prefetched chunk, and prefetched bytes evicted unconsumed.
+    pub prefetch_issued: AtomicU64,
+    pub prefetch_hits: AtomicU64,
+    pub prefetch_wasted_bytes: AtomicU64,
 }
 
 impl Stats {
@@ -30,6 +43,17 @@ impl Stats {
 
     pub fn add_exec(&self, ns: u64) {
         self.exec_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Fold a store-reader counter delta (`IoCounters::delta_since`)
+    /// into this run's telemetry.
+    pub fn add_io(&self, io: &crate::store::IoCounters) {
+        self.store_chunks_read.fetch_add(io.chunks_read, Ordering::Relaxed);
+        self.store_bytes_read.fetch_add(io.bytes_read, Ordering::Relaxed);
+        self.store_cache_hits.fetch_add(io.cache_hits, Ordering::Relaxed);
+        self.prefetch_issued.fetch_add(io.prefetch_issued, Ordering::Relaxed);
+        self.prefetch_hits.fetch_add(io.prefetch_hits, Ordering::Relaxed);
+        self.prefetch_wasted_bytes.fetch_add(io.prefetch_wasted_bytes, Ordering::Relaxed);
     }
 
     pub fn snapshot(&self) -> StatsSnapshot {
@@ -43,6 +67,12 @@ impl Stats {
             merge_s: self.merge_ns.load(Ordering::Relaxed) as f64 / 1e9,
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            store_chunks_read: self.store_chunks_read.load(Ordering::Relaxed),
+            store_bytes_read: self.store_bytes_read.load(Ordering::Relaxed),
+            store_cache_hits: self.store_cache_hits.load(Ordering::Relaxed),
+            prefetch_issued: self.prefetch_issued.load(Ordering::Relaxed),
+            prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
+            prefetch_wasted_bytes: self.prefetch_wasted_bytes.load(Ordering::Relaxed),
         }
     }
 }
@@ -59,6 +89,12 @@ pub struct StatsSnapshot {
     pub merge_s: f64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    pub store_chunks_read: u64,
+    pub store_bytes_read: u64,
+    pub store_cache_hits: u64,
+    pub prefetch_issued: u64,
+    pub prefetch_hits: u64,
+    pub prefetch_wasted_bytes: u64,
 }
 
 impl std::fmt::Display for StatsSnapshot {
@@ -68,7 +104,22 @@ impl std::fmt::Display for StatsSnapshot {
             "blocks={} (native={}, pjrt={}, fallbacks={}) gather={:.3}s exec={:.3}s merge={:.3}s cache={}h/{}m",
             self.blocks_total, self.blocks_native, self.blocks_pjrt, self.pjrt_fallbacks,
             self.gather_s, self.exec_s, self.merge_s, self.cache_hits, self.cache_misses
-        )
+        )?;
+        // Store-backed runs only: keep in-memory output unchanged. A
+        // fully cache-served run still counts as store-backed.
+        if self.store_chunks_read > 0 || self.store_cache_hits > 0 || self.prefetch_issued > 0 {
+            write!(
+                f,
+                " io={}c/{}B({}h) prefetch={}i/{}h/{}wB",
+                self.store_chunks_read,
+                self.store_bytes_read,
+                self.store_cache_hits,
+                self.prefetch_issued,
+                self.prefetch_hits,
+                self.prefetch_wasted_bytes
+            )?;
+        }
+        Ok(())
     }
 }
 
@@ -96,6 +147,29 @@ mod tests {
         let text = format!("{snap}");
         assert!(text.contains("blocks=0"));
         assert!(text.contains("cache=0h/0m"));
+    }
+
+    #[test]
+    fn io_counters_fold_into_snapshot() {
+        let s = Stats::default();
+        s.add_io(&crate::store::IoCounters {
+            chunks_read: 4,
+            bytes_read: 1024,
+            cache_hits: 7,
+            prefetch_issued: 3,
+            prefetch_hits: 2,
+            prefetch_wasted_bytes: 256,
+        });
+        let snap = s.snapshot();
+        assert_eq!(snap.store_chunks_read, 4);
+        assert_eq!(snap.store_bytes_read, 1024);
+        assert_eq!(snap.store_cache_hits, 7);
+        assert_eq!(snap.prefetch_issued, 3);
+        assert_eq!(snap.prefetch_hits, 2);
+        assert_eq!(snap.prefetch_wasted_bytes, 256);
+        let text = format!("{snap}");
+        assert!(text.contains("io=4c/1024B(7h)"), "{text}");
+        assert!(text.contains("prefetch=3i/2h/256wB"), "{text}");
     }
 
     #[test]

@@ -66,11 +66,13 @@ USAGE:
                 [--tau F] [--no-runtime] [--verbose]
   lamc plan     --rows N --cols N [--p-thresh F] [--row-frac F] [--col-frac F]
   lamc pack     (--dataset NAME [--rows N] [--seed N] | --input FILE.lamc|.mtx)
-                --output FILE [--chunk-rows N] [--chunk-cols N (tiled LAMC3)]
-  lamc ingest   --output FILE --cols N [--format dense|sparse]
-                [--chunk-rows N] [--chunk-cols N]   (rows on stdin; see docs/STORE.md)
+                --output FILE [--chunk-rows N]
+                [--chunk-cols N|auto (tiled LAMC3; auto = planner dry-run psi)]
+  lamc ingest   --output FILE --cols N [--format dense|sparse] [--chunk-rows N]
+                [--chunk-cols N|auto] [--rows-hint N (required by auto)]
+                (rows on stdin; see docs/STORE.md)
   lamc repack   --store FILE --output FILE [--chunk-rows N]
-                [--chunk-cols N|0 (0 = row-band)] [--cache-mb N]
+                [--chunk-cols N|0|auto (0 = row-band)] [--cache-mb N]
   lamc inspect  --store FILE [--verify]
   lamc serve    [--addr HOST:PORT] [--runners N] [--queue N] [--cache-mb N]
                 [--store-root DIR] [--cache-disk-mb N] [--stores name=file.lamc2,...]
@@ -160,11 +162,32 @@ fn print_summary(s: &StoreSummary) {
     println!("file size   : {} bytes", s.file_bytes);
 }
 
+/// Resolve a `--chunk-cols` value against known matrix dims: a tile
+/// width, `auto` (ψ from a planner dry run on the dims — LAMC3 tiles
+/// aligned with the column spans the pipeline will gather), or absent
+/// (0 = row-band layout). `auto` collapsing to ≥ `cols` means the
+/// planner would not partition: one full-width band, i.e. row-band.
+fn resolve_chunk_cols(args: &Args, rows: usize, cols: usize) -> Result<usize> {
+    match args.get("chunk-cols") {
+        None => Ok(0),
+        Some("auto") => {
+            let psi = lamc::partition::auto_chunk_cols(rows, cols);
+            if psi >= cols {
+                println!("chunk-cols  : auto -> row-band (planner keeps {rows} x {cols} whole)");
+                Ok(0)
+            } else {
+                println!("chunk-cols  : auto -> {psi} (planner dry-run psi for {rows} x {cols})");
+                Ok(psi)
+            }
+        }
+        Some(_) => args.get_usize("chunk-cols", 0),
+    }
+}
+
 fn cmd_pack(args: &Args) -> Result<()> {
     args.expect_flags(&["dataset", "input", "output", "rows", "seed", "chunk-rows", "chunk-cols"])?;
     let output = PathBuf::from(args.get("output").context("--output required")?);
     let chunk_rows = args.get_usize("chunk-rows", DEFAULT_CHUNK_ROWS)?;
-    let chunk_cols = args.get_usize("chunk-cols", 0)?;
     let matrix = match (args.get("dataset"), args.get("input")) {
         (Some(name), None) => {
             let rows = args.get("rows").map(|r| r.parse::<usize>()).transpose()?;
@@ -188,6 +211,7 @@ fn cmd_pack(args: &Args) -> Result<()> {
             .into())
         }
     };
+    let chunk_cols = resolve_chunk_cols(args, matrix.rows(), matrix.cols())?;
     let summary = if chunk_cols > 0 {
         lamc::store::pack_matrix_tiled(&matrix, &output, chunk_rows, chunk_cols)?
     } else {
@@ -210,6 +234,12 @@ fn cmd_repack(args: &Args) -> Result<()> {
     let h = reader.header();
     let chunk_rows = args.get_usize("chunk-rows", h.chunk_rows)?;
     let chunk_cols = match args.get("chunk-cols") {
+        // `auto`: ψ dry run on the source header dims (rows are known
+        // here, unlike ingest — the store is self-describing).
+        Some("auto") => match resolve_chunk_cols(args, h.rows, h.cols)? {
+            0 => None,
+            w => Some(w),
+        },
         Some(_) => match args.get_usize("chunk-cols", 0)? {
             0 => None,
             w => Some(w),
@@ -233,12 +263,26 @@ fn cmd_repack(args: &Args) -> Result<()> {
 /// skipped. This is the out-of-core ingest path: the matrix is never
 /// resident — only the current row band is.
 fn cmd_ingest(args: &Args) -> Result<()> {
-    args.expect_flags(&["output", "cols", "format", "chunk-rows", "chunk-cols"])?;
+    args.expect_flags(&["output", "cols", "format", "chunk-rows", "chunk-cols", "rows-hint"])?;
     let output = PathBuf::from(args.get("output").context("--output required")?);
     let cols = args.get_usize("cols", 0)?;
     anyhow::ensure!(cols > 0, "--cols required (row width is fixed up front)");
     let chunk_rows = args.get_usize("chunk-rows", DEFAULT_CHUNK_ROWS)?;
-    let chunk_cols = args.get_usize("chunk-cols", 0)?;
+    // `auto` needs both dims for the planner dry run, but a streaming
+    // ingest doesn't know its row count until the stream ends — the
+    // caller supplies an estimate via --rows-hint (ψ is insensitive to
+    // modest error: the planner quantizes to candidate block sizes).
+    let chunk_cols = match args.get("chunk-cols") {
+        Some("auto") => {
+            let rows_hint = args.get_usize("rows-hint", 0)?;
+            anyhow::ensure!(
+                rows_hint > 0,
+                "--chunk-cols auto on ingest needs --rows-hint N (row count is unknown until the stream ends)"
+            );
+            resolve_chunk_cols(args, rows_hint, cols)?
+        }
+        _ => args.get_usize("chunk-cols", 0)?,
+    };
     let layout = match args.get_or("format", "dense") {
         "dense" => Layout::Dense,
         "sparse" => Layout::Csr,
@@ -297,12 +341,26 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         println!("grid        : {} x {} tile grid", h.n_row_bands(), h.n_col_bands());
     }
     println!("fingerprint : {:016x}", h.fingerprint);
+    // What `--chunk-cols auto` would pick for these dims, and whether
+    // this store's tiles already align with the planner's column spans.
+    let psi = lamc::partition::auto_chunk_cols(h.rows, h.cols);
+    if psi < h.cols {
+        let aligned = h.is_tiled() && h.chunk_cols == psi;
+        println!(
+            "auto psi    : {psi}{}",
+            if aligned { " (tile width aligned)" } else { " (repack --chunk-cols auto to align)" }
+        );
+    }
     if args.has("verify") {
         reader.verify()?;
+        let io = reader.io_counters();
         println!(
             "verify      : OK ({} chunks, {} payload bytes checksummed)",
-            reader.chunks_read(),
-            reader.bytes_read()
+            io.chunks_read, io.bytes_read
+        );
+        println!(
+            "io counters : cache_hits={} prefetch_issued={} prefetch_hits={} prefetch_wasted_bytes={}",
+            io.cache_hits, io.prefetch_issued, io.prefetch_hits, io.prefetch_wasted_bytes
         );
     }
     Ok(())

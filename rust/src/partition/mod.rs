@@ -13,6 +13,6 @@ pub mod planner;
 pub mod prob_model;
 pub mod sampler;
 
-pub use planner::{plan, plan_view, PartitionPlan, PlannerConfig};
+pub use planner::{auto_chunk_cols, plan, plan_view, PartitionPlan, PlannerConfig};
 pub use prob_model::{detection_probability, failure_bound, required_samplings, CoclusterPrior};
 pub use sampler::{sample_partition, sample_partition_view, BlockJob, SamplingRound};

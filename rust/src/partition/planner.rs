@@ -128,6 +128,18 @@ pub fn plan_view(matrix: crate::store::MatrixView<'_>, cfg: &PlannerConfig) -> P
     plan(matrix.rows(), matrix.cols(), cfg)
 }
 
+/// ψ from a planner dry run on the dimensions alone — what
+/// `lamc pack/ingest/repack --chunk-cols auto` sizes LAMC3 tiles to,
+/// so tile boundaries align with the column spans the partitioned
+/// pipeline will actually gather (a ψ-wide block then intersects one
+/// column band instead of straddling several partially-read tiles).
+///
+/// Returns `cols` when the planner would not partition a matrix this
+/// size (1×1 grid): one full-width band, i.e. the row-band layout.
+pub fn auto_chunk_cols(rows: usize, cols: usize) -> usize {
+    plan(rows, cols, &PlannerConfig::default()).psi
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -186,6 +198,16 @@ mod tests {
         };
         let p = plan(5000, 5000, &cfg);
         assert!(p.phi >= 256, "planner picked tiny blocks: {p:?}");
+    }
+
+    #[test]
+    fn auto_chunk_cols_tracks_the_dry_run_psi() {
+        // Large matrix: auto tile width is the planner's ψ.
+        let p = plan(2000, 1500, &PlannerConfig::default());
+        assert_eq!(auto_chunk_cols(2000, 1500), p.psi);
+        assert!(auto_chunk_cols(2000, 1500) < 1500, "partitioned ⇒ narrower than the matrix");
+        // Tiny matrix: whole plan ⇒ full width (row-band geometry).
+        assert_eq!(auto_chunk_cols(64, 64), 64);
     }
 
     #[test]

@@ -236,6 +236,10 @@ impl Lamc {
         let stats = Stats::default();
         let mut rng = crate::rng::Xoshiro256::seed_from(cfg.seed);
         let whole = matrix.materialize()?;
+        // Materializing a stored matrix is real I/O — surface it like
+        // the partitioned path does (watermarked claim, never
+        // double-counted across concurrent runs on a shared reader).
+        stats.add_io(&matrix.take_io_delta());
         let t_exec = Instant::now();
         let res = atom.cocluster(&whole, cfg.k, &mut rng);
         stats.add_exec(t_exec.elapsed().as_nanos() as u64);

@@ -623,6 +623,17 @@ fn execute_spec(inner: &Inner, spec: &JobSpec) -> Result<(Arc<JobOutput>, bool)>
     inner.stats.add_gather((s.gather_s * 1e9) as u64);
     inner.stats.add_exec((s.exec_s * 1e9) as u64);
     inner.stats.merge_ns.fetch_add((s.merge_s * 1e9) as u64, Ordering::Relaxed);
+    // Store I/O + prefetch telemetry (zero for in-memory matrices):
+    // without this fold the reader counters were invisible through the
+    // service — STATS reported cache hit/miss but no real disk I/O.
+    inner.stats.add_io(&crate::store::IoCounters {
+        chunks_read: s.store_chunks_read,
+        bytes_read: s.store_bytes_read,
+        cache_hits: s.store_cache_hits,
+        prefetch_issued: s.prefetch_issued,
+        prefetch_hits: s.prefetch_hits,
+        prefetch_wasted_bytes: s.prefetch_wasted_bytes,
+    });
 
     let output = Arc::new(JobOutput {
         row_labels: result.row_labels,

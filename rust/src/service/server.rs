@@ -249,7 +249,9 @@ fn handle(manager: &ServiceManager, req: Request) -> Result<Reply> {
             Ok(Reply::Text(format!(
                 "OK jobs_queued={queued} jobs_running={running} jobs_done={done} jobs_failed={failed} \
                  cache_hits={} cache_misses={} cache_entries={} cache_bytes={} cache_capacity_bytes={} \
-                 cache_disk_hits={} blocks_total={} blocks_native={} blocks_pjrt={} matrices={}\n",
+                 cache_disk_hits={} blocks_total={} blocks_native={} blocks_pjrt={} matrices={} \
+                 store_chunks_read={} store_bytes_read={} store_cache_hits={} \
+                 prefetch_issued={} prefetch_hits={} prefetch_wasted_bytes={}\n",
                 snap.cache_hits,
                 snap.cache_misses,
                 cache.len(),
@@ -260,6 +262,12 @@ fn handle(manager: &ServiceManager, req: Request) -> Result<Reply> {
                 snap.blocks_native,
                 snap.blocks_pjrt,
                 manager.matrix_names().len(),
+                snap.store_chunks_read,
+                snap.store_bytes_read,
+                snap.store_cache_hits,
+                snap.prefetch_issued,
+                snap.prefetch_hits,
+                snap.prefetch_wasted_bytes,
             )))
         }
         Request::Load { name, dataset, path, store, rows, seed } => {

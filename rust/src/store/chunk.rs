@@ -21,27 +21,43 @@
 //! re-reads a partitioned co-clustering round generates; with the cache
 //! disabled, peak reader memory is one decoded chunk plus the gathered
 //! tile.
+//!
+//! The reader can also warm itself *ahead* of the compute wave: feed it
+//! the scheduler's upcoming rounds via [`StoreReader::prefetch_plan`]
+//! and a background thread (see [`super::prefetch`]) streams the chunks
+//! those rounds will touch into a **separately budgeted** prefetch
+//! cache, so warming the next round can never evict the current round's
+//! hot chunks. A shared single-flight registry keeps the prefetcher and
+//! a concurrent gather from ever decoding the same chunk twice.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashSet};
 use std::fs::File;
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::cache::ByteLru;
 use crate::matrix::{CsrMatrix, DenseMatrix, Matrix};
+use crate::partition::SamplingRound;
 
 use super::format::{
     checksum_bytes, decode_footer, encode_footer, store_fingerprint, ChunkMeta, Layout,
     StoreError, StoreHeader, DEFAULT_CHUNK_ROWS, FOOTER_MAGIC, FOOTER_MAGIC_TILED, MAGIC,
     MAGIC_TILED, TRAILER_BYTES, VERSION, VERSION_TILED,
 };
+use super::prefetch::{plan_chunks, Prefetcher};
 
 /// Default byte budget for the decoded-chunk cache of [`StoreReader::open`].
 pub const DEFAULT_CACHE_BYTES: usize = 64 << 20;
+
+/// Default byte budget for the prefetch cache of [`StoreReader::open`]
+/// (a *separate* pool: prefetched chunks never compete with the hot
+/// decoded-chunk cache for residency).
+pub const DEFAULT_PREFETCH_BYTES: usize = 32 << 20;
 
 /// What a finished ingest produced (printed by `lamc pack` / `ingest` /
 /// `repack`).
@@ -418,7 +434,7 @@ pub(crate) enum DecodedChunk {
 }
 
 impl DecodedChunk {
-    fn resident_bytes(&self) -> usize {
+    pub(crate) fn resident_bytes(&self) -> usize {
         match self {
             DecodedChunk::Dense { values } => values.len() * 4,
             DecodedChunk::Csr { indptr, indices, values } => {
@@ -428,34 +444,143 @@ impl DecodedChunk {
     }
 }
 
+/// Point-in-time copy of a reader's I/O + prefetch counters.
+///
+/// `coordinator::run_rounds` claims these per run via
+/// [`StoreReader::take_io_delta`] and folds the delta into that run's
+/// [`crate::coordinator::Stats`], which is how reader telemetry reaches
+/// the service `STATS` verb and `lamc status` (all zeros for in-memory
+/// matrices).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IoCounters {
+    /// Chunks read + decoded from disk (checksum-verified).
+    pub chunks_read: u64,
+    /// Payload bytes read from disk.
+    pub bytes_read: u64,
+    /// Chunk requests answered from the hot decoded-chunk cache.
+    pub cache_hits: u64,
+    /// Chunks the background prefetcher pulled into the prefetch cache.
+    pub prefetch_issued: u64,
+    /// Chunk requests answered by consuming a prefetched chunk.
+    pub prefetch_hits: u64,
+    /// Bytes prefetched but pushed out before anything consumed them —
+    /// the plan diverged from actual access (0 on a matching plan).
+    pub prefetch_wasted_bytes: u64,
+}
+
+impl IoCounters {
+    /// Counter-wise `self - before` (saturating, so a racing background
+    /// prefetch can never produce an underflowed delta).
+    pub fn delta_since(&self, before: &IoCounters) -> IoCounters {
+        IoCounters {
+            chunks_read: self.chunks_read.saturating_sub(before.chunks_read),
+            bytes_read: self.bytes_read.saturating_sub(before.bytes_read),
+            cache_hits: self.cache_hits.saturating_sub(before.cache_hits),
+            prefetch_issued: self.prefetch_issued.saturating_sub(before.prefetch_issued),
+            prefetch_hits: self.prefetch_hits.saturating_sub(before.prefetch_hits),
+            prefetch_wasted_bytes: self
+                .prefetch_wasted_bytes
+                .saturating_sub(before.prefetch_wasted_bytes),
+        }
+    }
+}
+
+/// The reader state shared with the background prefetcher thread:
+/// the two decoded-chunk caches, the single-flight registry, and every
+/// I/O counter. Lives behind an `Arc` so the prefetcher can outlast any
+/// one borrow of the reader (it still ends when the reader drops).
+pub(crate) struct ReaderShared {
+    /// Hot decoded-chunk cache: filled by demand loads and by promoting
+    /// consumed prefetched chunks. The prefetcher never inserts here.
+    pub(crate) hot: Mutex<ByteLru<usize, Arc<DecodedChunk>>>,
+    pub(crate) hot_budget: usize,
+    /// Prefetch cache: filled only by the prefetcher, drained by the
+    /// first consumer of each chunk (entries move to `hot` on use).
+    pub(crate) prefetched: Mutex<ByteLru<usize, Arc<DecodedChunk>>>,
+    /// Paired with `prefetched`: signalled when consumption frees room,
+    /// so a throttled prefetcher wakes instead of polling.
+    pub(crate) prefetch_room: Condvar,
+    pub(crate) prefetch_budget: usize,
+    /// Single-flight registry: chunk ids currently being read+decoded
+    /// (by a gather *or* the prefetcher). A second party waits on
+    /// `inflight_done` instead of duplicating the decode.
+    pub(crate) inflight: Mutex<HashSet<usize>>,
+    pub(crate) inflight_done: Condvar,
+    /// Watermark for [`StoreReader::take_io_delta`]: the counter values
+    /// already claimed by a run. Serialized so concurrent runs sharing
+    /// this reader partition the counter stream instead of each
+    /// claiming the other's reads (aggregates stay exact).
+    io_reported: Mutex<IoCounters>,
+    // Telemetry: how much of the file the workload actually touched.
+    pub(crate) chunks_read: AtomicU64,
+    pub(crate) bytes_read: AtomicU64,
+    pub(crate) cache_hits: AtomicU64,
+    pub(crate) prefetch_issued: AtomicU64,
+    pub(crate) prefetch_hits: AtomicU64,
+    pub(crate) prefetch_wasted_bytes: AtomicU64,
+}
+
+impl ReaderShared {
+    fn new(hot_budget: usize, prefetch_budget: usize) -> Self {
+        Self {
+            hot: Mutex::new(ByteLru::new(hot_budget)),
+            hot_budget,
+            prefetched: Mutex::new(ByteLru::new(prefetch_budget)),
+            prefetch_room: Condvar::new(),
+            prefetch_budget,
+            inflight: Mutex::new(HashSet::new()),
+            inflight_done: Condvar::new(),
+            io_reported: Mutex::new(IoCounters::default()),
+            chunks_read: AtomicU64::new(0),
+            bytes_read: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            prefetch_issued: AtomicU64::new(0),
+            prefetch_hits: AtomicU64::new(0),
+            prefetch_wasted_bytes: AtomicU64::new(0),
+        }
+    }
+}
+
 /// Random-access reader over a finished store file (either version).
 ///
 /// Thread-safe: `tile` may be called concurrently from the scheduler's
 /// worker pool (reads are serialized on an internal file handle; decode
-/// and gather run in parallel).
+/// and gather run in parallel). [`StoreReader::prefetch_plan`] feeds a
+/// lazily spawned background thread that warms the prefetch cache from
+/// its *own* file handle, so prefetch I/O never contends the gathers'.
 pub struct StoreReader {
     path: PathBuf,
     header: StoreHeader,
-    index: Vec<ChunkMeta>,
+    index: Arc<Vec<ChunkMeta>>,
     file: Mutex<File>,
-    cache: Mutex<ByteLru<usize, Arc<DecodedChunk>>>,
-    cache_budget: usize,
-    // Telemetry: how much of the file the workload actually touched.
-    chunks_read: AtomicU64,
-    bytes_read: AtomicU64,
-    cache_hits: AtomicU64,
+    shared: Arc<ReaderShared>,
+    prefetcher: Mutex<Option<Prefetcher>>,
     tiles_served: AtomicU64,
 }
 
 impl StoreReader {
-    /// Open with the default decoded-chunk cache budget.
+    /// Open with the default decoded-chunk and prefetch cache budgets.
     pub fn open(path: &Path) -> Result<Self> {
-        Self::open_with_cache(path, DEFAULT_CACHE_BYTES)
+        Self::open_with_budgets(path, DEFAULT_CACHE_BYTES, DEFAULT_PREFETCH_BYTES)
     }
 
     /// Open with an explicit cache budget (0 disables caching: every
     /// tile re-reads its chunks from disk — the strictest RSS bound).
+    /// The prefetch budget follows the cache budget, capped at
+    /// [`DEFAULT_PREFETCH_BYTES`] (so 0 disables prefetch too).
     pub fn open_with_cache(path: &Path, cache_budget: usize) -> Result<Self> {
+        Self::open_with_budgets(path, cache_budget, cache_budget.min(DEFAULT_PREFETCH_BYTES))
+    }
+
+    /// Open with explicit hot-cache and prefetch byte budgets. The two
+    /// pools are accounted separately: prefetched chunks can never evict
+    /// the hot cache, and vice versa. `prefetch_budget` 0 makes
+    /// [`StoreReader::prefetch_plan`] a no-op.
+    pub fn open_with_budgets(
+        path: &Path,
+        cache_budget: usize,
+        prefetch_budget: usize,
+    ) -> Result<Self> {
         let mut file = File::open(path).with_context(|| format!("open store {path:?}"))?;
         let file_len = file.metadata()?.len();
 
@@ -539,13 +664,10 @@ impl StoreReader {
         Ok(Self {
             path: path.to_path_buf(),
             header,
-            index,
+            index: Arc::new(index),
             file: Mutex::new(file),
-            cache: Mutex::new(ByteLru::new(cache_budget)),
-            cache_budget,
-            chunks_read: AtomicU64::new(0),
-            bytes_read: AtomicU64::new(0),
-            cache_hits: AtomicU64::new(0),
+            shared: Arc::new(ReaderShared::new(cache_budget, prefetch_budget)),
+            prefetcher: Mutex::new(None),
             tiles_served: AtomicU64::new(0),
         })
     }
@@ -603,19 +725,63 @@ impl StoreReader {
         self.header.fingerprint
     }
 
-    /// Chunks read from disk so far (checksum-verified decodes).
+    /// Chunks read from disk so far (checksum-verified decodes, demand
+    /// loads and prefetches alike).
     pub fn chunks_read(&self) -> u64 {
-        self.chunks_read.load(Ordering::Relaxed)
+        self.shared.chunks_read.load(Ordering::Relaxed)
     }
 
     /// Payload bytes read from disk so far.
     pub fn bytes_read(&self) -> u64 {
-        self.bytes_read.load(Ordering::Relaxed)
+        self.shared.bytes_read.load(Ordering::Relaxed)
     }
 
-    /// Chunk requests answered from the decoded-chunk cache.
+    /// Chunk requests answered from the hot decoded-chunk cache.
     pub fn cache_hits(&self) -> u64 {
-        self.cache_hits.load(Ordering::Relaxed)
+        self.shared.cache_hits.load(Ordering::Relaxed)
+    }
+
+    /// Chunks the background prefetcher pulled in so far.
+    pub fn prefetch_issued(&self) -> u64 {
+        self.shared.prefetch_issued.load(Ordering::Relaxed)
+    }
+
+    /// Chunk requests answered by consuming a prefetched chunk.
+    pub fn prefetch_hits(&self) -> u64 {
+        self.shared.prefetch_hits.load(Ordering::Relaxed)
+    }
+
+    /// Prefetched bytes that were pushed out before anything consumed
+    /// them. Stays 0 while the plan matches actual access.
+    pub fn prefetch_wasted_bytes(&self) -> u64 {
+        self.shared.prefetch_wasted_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of every I/O + prefetch counter.
+    pub fn io_counters(&self) -> IoCounters {
+        IoCounters {
+            chunks_read: self.chunks_read(),
+            bytes_read: self.bytes_read(),
+            cache_hits: self.cache_hits(),
+            prefetch_issued: self.prefetch_issued(),
+            prefetch_hits: self.prefetch_hits(),
+            prefetch_wasted_bytes: self.prefetch_wasted_bytes(),
+        }
+    }
+
+    /// Claim the counter increments since the last claim (a watermarked
+    /// delta). `run_rounds`/`run_baseline` call this once per run to
+    /// fold reader I/O into their `Stats`: concurrent runs sharing one
+    /// reader *partition* the counter stream between them — each
+    /// increment is attributed to exactly one run, so the service-wide
+    /// aggregate stays exact (a before/after snapshot per run would
+    /// double-count the other run's reads inside its window).
+    pub fn take_io_delta(&self) -> IoCounters {
+        let mut last = self.shared.io_reported.lock().unwrap();
+        let now = self.io_counters();
+        let delta = now.delta_since(&last);
+        *last = now;
+        delta
     }
 
     /// Tiles gathered so far.
@@ -623,15 +789,56 @@ impl StoreReader {
         self.tiles_served.load(Ordering::Relaxed)
     }
 
-    /// High-water mark of decoded bytes resident in the chunk cache —
-    /// proof the reader respected its byte bound over a whole pass.
+    /// High-water mark of decoded bytes resident in the hot chunk cache
+    /// — proof the reader respected its byte bound over a whole pass.
     pub fn cache_peak_bytes(&self) -> usize {
-        self.cache.lock().unwrap().peak_bytes()
+        self.shared.hot.lock().unwrap().peak_bytes()
     }
 
-    /// Chunks evicted from the decoded-chunk cache so far.
+    /// Chunks evicted from the hot decoded-chunk cache so far.
     pub fn cache_evictions(&self) -> u64 {
-        self.cache.lock().unwrap().evictions()
+        self.shared.hot.lock().unwrap().evictions()
+    }
+
+    /// Queue the chunks these upcoming sampling rounds will touch for
+    /// background prefetch (in job order, deduplicated). Returns
+    /// immediately; a lazily spawned prefetcher thread streams the
+    /// chunks into the prefetch cache from its own file handle. A no-op
+    /// when the prefetch budget is 0. Purely advisory: results, errors
+    /// and `tile` semantics are byte-identical with or without it.
+    pub fn prefetch_plan(&self, rounds: &[SamplingRound]) {
+        if self.shared.prefetch_budget == 0 || self.index.is_empty() {
+            return;
+        }
+        let chunks = plan_chunks(&self.header, rounds);
+        if chunks.is_empty() {
+            return;
+        }
+        let mut guard = self.prefetcher.lock().unwrap();
+        guard
+            .get_or_insert_with(|| {
+                Prefetcher::spawn(
+                    self.path.clone(),
+                    self.header.layout,
+                    Arc::clone(&self.index),
+                    Arc::clone(&self.shared),
+                )
+            })
+            .send(chunks);
+    }
+
+    /// True when no queued prefetch work remains (every planned chunk
+    /// has been fetched or skipped). Trivially true before the first
+    /// [`StoreReader::prefetch_plan`] call.
+    pub fn prefetch_idle(&self) -> bool {
+        self.prefetcher.lock().unwrap().as_ref().map_or(true, |p| p.idle())
+    }
+
+    /// Can [`StoreReader::prefetch_plan`] ever do anything on this
+    /// reader? False with a zero prefetch budget or an empty store —
+    /// callers (the scheduler) skip prefetch-shaped dispatch entirely.
+    pub fn prefetch_enabled(&self) -> bool {
+        self.shared.prefetch_budget > 0 && !self.index.is_empty()
     }
 
     /// Pin every column tile of row band `rb` (decoded, column order) —
@@ -647,49 +854,97 @@ impl StoreReader {
         Ok(tiles)
     }
 
-    /// Read, verify and decode chunk `idx` (cache-aware).
-    pub(crate) fn load_chunk(&self, idx: usize) -> Result<Arc<DecodedChunk>> {
-        if self.cache_budget > 0 {
-            let mut cache = self.cache.lock().unwrap();
-            if let Some(chunk) = cache.get(&idx) {
-                self.cache_hits.fetch_add(1, Ordering::Relaxed);
-                return Ok(Arc::clone(chunk));
+    /// One pass over both caches: a hot hit refreshes recency; a
+    /// prefetch hit consumes the entry (promoting it into the hot
+    /// cache, which is what frees prefetch-budget room).
+    fn cached_chunk(&self, idx: usize) -> Option<Arc<DecodedChunk>> {
+        let sh = &*self.shared;
+        if sh.hot_budget > 0 {
+            if let Some(chunk) = sh.hot.lock().unwrap().get(&idx) {
+                sh.cache_hits.fetch_add(1, Ordering::Relaxed);
+                return Some(Arc::clone(chunk));
             }
         }
-
-        let meta = self.index[idx];
-        let mut payload = vec![0u8; meta.len as usize];
-        {
-            let mut file = self.file.lock().unwrap();
-            file.seek(SeekFrom::Start(meta.offset))?;
-            file.read_exact(&mut payload).map_err(|e| StoreError::Truncated {
-                path: self.path.clone(),
-                detail: format!("chunk {idx} short read: {e}"),
-            })?;
-        }
-        self.chunks_read.fetch_add(1, Ordering::Relaxed);
-        self.bytes_read.fetch_add(meta.len, Ordering::Relaxed);
-        if checksum_bytes(&payload) != meta.checksum {
-            return Err(StoreError::Corrupt {
-                path: self.path.clone(),
-                detail: format!("chunk {idx} checksum mismatch"),
+        if sh.prefetch_budget > 0 {
+            let taken = sh.prefetched.lock().unwrap().remove(&idx);
+            if let Some(chunk) = taken {
+                sh.prefetch_hits.fetch_add(1, Ordering::Relaxed);
+                // Consumption freed prefetch-budget room.
+                sh.prefetch_room.notify_all();
+                if sh.hot_budget > 0 {
+                    let bytes = chunk.resident_bytes();
+                    let _ = sh.hot.lock().unwrap().insert(idx, Arc::clone(&chunk), bytes);
+                }
+                return Some(chunk);
             }
-            .into());
         }
-        let chunk = Arc::new(self.decode_chunk(idx, &meta, &payload)?);
-
-        if self.cache_budget > 0 {
-            let bytes = chunk.resident_bytes();
-            // Evicted/rejected Arcs drop here; live borrows elsewhere
-            // keep their chunks alive independently of the cache.
-            let _ = self.cache.lock().unwrap().insert(idx, Arc::clone(&chunk), bytes);
-        }
-        Ok(chunk)
+        None
     }
 
-    fn decode_chunk(&self, idx: usize, meta: &ChunkMeta, payload: &[u8]) -> Result<DecodedChunk> {
+    /// Read, verify and decode chunk `idx` (cache- and prefetch-aware).
+    pub(crate) fn load_chunk(&self, idx: usize) -> Result<Arc<DecodedChunk>> {
+        let sh = &*self.shared;
+        // Single-flight: if the prefetcher (or another gather) is
+        // already decoding this chunk, wait for it rather than decoding
+        // the same payload twice — then re-probe the caches.
+        loop {
+            if let Some(chunk) = self.cached_chunk(idx) {
+                return Ok(chunk);
+            }
+            let mut inflight = sh.inflight.lock().unwrap();
+            if !inflight.contains(&idx) {
+                inflight.insert(idx);
+                break;
+            }
+            // Timed wait: re-checks the registry even on a missed
+            // notify (the holder may have errored out).
+            let (guard, _) = sh
+                .inflight_done
+                .wait_timeout(inflight, Duration::from_millis(5))
+                .unwrap();
+            drop(guard);
+        }
+
+        let result = self.read_and_decode(idx).map(Arc::new);
+        // Publish to the cache BEFORE clearing the in-flight entry:
+        // a waiter that wakes in between must find the chunk resident,
+        // or it would re-register and decode the same payload again.
+        if let Ok(chunk) = &result {
+            if sh.hot_budget > 0 {
+                let bytes = chunk.resident_bytes();
+                // Evicted/rejected Arcs drop here; live borrows
+                // elsewhere keep their chunks alive independently.
+                let _ = sh.hot.lock().unwrap().insert(idx, Arc::clone(chunk), bytes);
+            }
+        }
+        sh.inflight.lock().unwrap().remove(&idx);
+        sh.inflight_done.notify_all();
+        result
+    }
+
+    /// The demand-load path: read chunk `idx` off the shared file
+    /// handle, verify its checksum, and decode it.
+    fn read_and_decode(&self, idx: usize) -> Result<DecodedChunk> {
+        let meta = self.index[idx];
+        let payload = {
+            let mut file = self.file.lock().unwrap();
+            read_verified_payload(&mut file, &self.path, idx, &meta, &self.shared)?
+        };
+        Self::decode_chunk_payload(&self.path, self.header.layout, idx, &meta, &payload)
+    }
+
+    /// Decode one verified chunk payload into its in-memory form.
+    /// Shared by the reader's demand path and the background prefetcher
+    /// (which decodes on its own thread, off its own file handle).
+    pub(crate) fn decode_chunk_payload(
+        path: &Path,
+        layout: Layout,
+        idx: usize,
+        meta: &ChunkMeta,
+        payload: &[u8],
+    ) -> Result<DecodedChunk> {
         let corrupt = |detail: String| -> anyhow::Error {
-            StoreError::Corrupt { path: self.path.clone(), detail }.into()
+            StoreError::Corrupt { path: path.to_path_buf(), detail }.into()
         };
         // The chunk's own width: a tile's column count, or the full
         // matrix width on a row-band store.
@@ -697,7 +952,7 @@ impl StoreReader {
         // All size arithmetic is checked: a checksum-valid but crafted
         // footer must surface as Corrupt, never as an overflow panic
         // (the same threat model decode_footer guards against).
-        match self.header.layout {
+        match layout {
             Layout::Dense => {
                 let want = meta.rows.checked_mul(cols).and_then(|v| v.checked_mul(4));
                 if want != Some(payload.len()) {
@@ -904,6 +1159,36 @@ impl StoreReader {
     }
 }
 
+/// Read chunk `idx`'s payload off `file` and verify its checksum,
+/// bumping the shared I/O counters on a successful read. The one
+/// read-verify implementation behind both the demand path (the
+/// reader's shared file handle) and the prefetcher (its own handle) —
+/// only the error disposition differs at the call sites.
+pub(crate) fn read_verified_payload(
+    file: &mut File,
+    path: &Path,
+    idx: usize,
+    meta: &ChunkMeta,
+    shared: &ReaderShared,
+) -> Result<Vec<u8>> {
+    let mut payload = vec![0u8; meta.len as usize];
+    file.seek(SeekFrom::Start(meta.offset))?;
+    file.read_exact(&mut payload).map_err(|e| StoreError::Truncated {
+        path: path.to_path_buf(),
+        detail: format!("chunk {idx} short read: {e}"),
+    })?;
+    shared.chunks_read.fetch_add(1, Ordering::Relaxed);
+    shared.bytes_read.fetch_add(meta.len, Ordering::Relaxed);
+    if checksum_bytes(&payload) != meta.checksum {
+        return Err(StoreError::Corrupt {
+            path: path.to_path_buf(),
+            detail: format!("chunk {idx} checksum mismatch"),
+        }
+        .into());
+    }
+    Ok(payload)
+}
+
 impl std::fmt::Debug for StoreReader {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("StoreReader")
@@ -1093,6 +1378,71 @@ mod tests {
         assert_eq!(r.chunks_read(), 4, "second pass served from cache");
         assert_eq!(r.cache_hits(), 4);
         assert!(r.cache_peak_bytes() <= DEFAULT_CACHE_BYTES);
+    }
+
+    fn one_round(rows: Vec<usize>, cols: Vec<usize>) -> Vec<SamplingRound> {
+        let job = crate::partition::BlockJob { round: 0, grid: (0, 0), rows, cols };
+        vec![SamplingRound { round: 0, jobs: vec![job] }]
+    }
+
+    fn wait_prefetch_idle(r: &StoreReader) {
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        while !r.prefetch_idle() {
+            assert!(std::time::Instant::now() < deadline, "prefetch never drained");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn prefetch_warms_then_serves_tiles() {
+        let d = random_dense(40, 12, 50);
+        let path = tmp("prefetch_warm.lamc2");
+        pack_matrix(&Matrix::Dense(d), &path, 8).unwrap();
+        let r = StoreReader::open_with_budgets(&path, 1 << 20, 1 << 20).unwrap();
+        // Rows 0 and 20 live in bands 0 and 2: a two-chunk plan.
+        r.prefetch_plan(&one_round(vec![0, 20], vec![1, 5]));
+        wait_prefetch_idle(&r);
+        assert_eq!(r.prefetch_issued(), 2, "bands 0 and 2 fetched ahead");
+        let tile = r.tile(&[0, 20], &[1, 5]).unwrap();
+        assert_eq!(tile.data().len(), 4);
+        assert_eq!(r.prefetch_hits(), 2, "both chunk requests consumed prefetched chunks");
+        assert_eq!(r.prefetch_wasted_bytes(), 0, "plan matched access exactly");
+        // The consumed chunks were promoted: a repeat tile is all hot hits.
+        r.tile(&[0, 20], &[1, 5]).unwrap();
+        assert_eq!(r.cache_hits(), 2);
+        assert_eq!(r.chunks_read(), 2, "no demand load ever touched the disk");
+    }
+
+    #[test]
+    fn prefetch_results_identical_and_planless_chunks_still_load() {
+        let d = random_dense(30, 9, 51);
+        let path = tmp("prefetch_equiv.lamc2");
+        pack_matrix(&Matrix::Dense(d), &path, 8).unwrap();
+        let plain = StoreReader::open_with_budgets(&path, 1 << 20, 0).unwrap();
+        let warmed = StoreReader::open_with_budgets(&path, 1 << 20, 1 << 20).unwrap();
+        // Plan covers band 0 only; the tile also needs bands 1..4 —
+        // those fall back to the demand path transparently.
+        warmed.prefetch_plan(&one_round(vec![0], vec![0]));
+        wait_prefetch_idle(&warmed);
+        let rows: Vec<usize> = (0..30).collect();
+        let cols: Vec<usize> = (0..9).collect();
+        let a = plain.tile(&rows, &cols).unwrap();
+        let b = warmed.tile(&rows, &cols).unwrap();
+        assert_eq!(a.data(), b.data(), "prefetch is advisory: bytes identical");
+        assert_eq!(warmed.prefetch_hits(), 1);
+        assert_eq!(warmed.chunks_read(), plain.chunks_read(), "same total disk reads");
+    }
+
+    #[test]
+    fn zero_prefetch_budget_disables_planning() {
+        let d = random_dense(20, 5, 52);
+        let path = tmp("prefetch_off.lamc2");
+        pack_matrix(&Matrix::Dense(d), &path, 8).unwrap();
+        let r = StoreReader::open_with_cache(&path, 0).unwrap();
+        r.prefetch_plan(&one_round(vec![0, 19], vec![0]));
+        assert!(r.prefetch_idle(), "no thread ever spawns");
+        assert_eq!(r.prefetch_issued(), 0);
+        assert_eq!(r.chunks_read(), 0);
     }
 
     #[test]

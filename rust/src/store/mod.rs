@@ -23,6 +23,11 @@
 //!   [`StoreReader`], random access via `tile(rows, cols)` that reads
 //!   only the intersecting chunks of either layout, with a byte-bounded
 //!   decoded-chunk cache backed by the shared [`crate::cache::ByteLru`].
+//! * [`prefetch`](mod@crate::store::prefetch) — the background
+//!   prefetcher behind [`StoreReader::prefetch_plan`]: the scheduler
+//!   hands the reader its upcoming rounds and a dedicated thread warms
+//!   a separately budgeted chunk pool ahead of the compute wave, so
+//!   disk I/O overlaps co-clustering instead of serializing against it.
 //! * [`repack`](mod@crate::store::repack) — store-to-store re-chunking
 //!   (row-band ↔ tiled, new band/tile extents) that streams one band at
 //!   a time and preserves the content fingerprint, so a repacked store
@@ -40,11 +45,13 @@
 
 pub mod chunk;
 pub mod format;
+pub mod prefetch;
 pub mod repack;
 pub mod view;
 
 pub use chunk::{
-    pack_matrix, pack_matrix_tiled, ChunkWriter, StoreReader, StoreSummary, DEFAULT_CACHE_BYTES,
+    pack_matrix, pack_matrix_tiled, ChunkWriter, IoCounters, StoreReader, StoreSummary,
+    DEFAULT_CACHE_BYTES, DEFAULT_PREFETCH_BYTES,
 };
 pub use format::{checksum_bytes, Layout, StoreError, StoreHeader, DEFAULT_CHUNK_ROWS};
 pub use repack::{repack, repack_reader, RepackOptions};

@@ -1,0 +1,334 @@
+//! Background chunk prefetcher: overlap store I/O with compute.
+//!
+//! `coordinator::run_rounds` knows the full (round, grid) job list —
+//! and therefore the exact set of row/column bands every job will touch
+//! — before any worker runs (paper §IV-B/C: the partition grid is fixed
+//! at sampling time). This module turns that knowledge into overlap:
+//! `plan_chunks` maps upcoming [`SamplingRound`]s to the ordered,
+//! deduplicated chunk ids they will read, and `Prefetcher` is the
+//! lazily spawned thread that streams those chunks into the reader's
+//! **separately budgeted** prefetch cache while the current round's
+//! blocks are still co-clustering (both are crate-internal — the
+//! public surface is [`StoreReader::prefetch_plan`]).
+//!
+//! Design rules, each load-bearing:
+//!
+//! * **Advisory only.** The prefetcher never surfaces errors and never
+//!   changes `tile` semantics — a missing, corrupt or slow prefetch
+//!   just leaves the demand path to do what it always did. Labels are
+//!   byte-identical with prefetch on, off, or starved.
+//! * **Own file handle.** Prefetch reads never contend the gathers'
+//!   file mutex; the kernel interleaves the two read streams.
+//! * **Separate budget.** Prefetched chunks live in their own
+//!   [`ByteLru`](crate::cache::ByteLru) pool, so warming round `r+1`
+//!   can never evict round `r`'s hot chunks.
+//! * **Throttled, not greedy.** When the prefetch pool is full the
+//!   thread waits for consumption (promotion frees room) instead of
+//!   churning its own earlier work; only after a patience window does
+//!   it conclude the plan has diverged from actual access and push out
+//!   stale entries — counted as `prefetch_wasted_bytes`.
+//! * **Single-flight.** A shared in-flight registry keeps the
+//!   prefetcher and a concurrent gather from decoding the same chunk
+//!   twice; whoever registers first decodes, the other waits or skips.
+
+use std::fs::File;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::partition::SamplingRound;
+
+use super::chunk::{read_verified_payload, ReaderShared, StoreReader};
+use super::format::{ChunkMeta, Layout, StoreHeader};
+
+/// How long a throttled prefetch waits for consumption before deciding
+/// the plan is stale and evicting never-consumed entries to progress.
+const STALE_PATIENCE: Duration = Duration::from_millis(250);
+
+/// One timed slice of the throttle wait (re-checks the stop flag).
+const THROTTLE_SLICE: Duration = Duration::from_millis(5);
+
+/// Map upcoming sampling rounds to the ordered list of chunk ids their
+/// block gathers will touch — job order, first occurrence wins, every
+/// id unique. This is the *plan* the prefetcher executes; it is derived
+/// purely from the store geometry and the jobs' global row/column ids,
+/// the same arithmetic [`StoreReader::tile`] uses to pick chunks.
+pub(crate) fn plan_chunks(header: &StoreHeader, rounds: &[SamplingRound]) -> Vec<usize> {
+    let h = header.chunk_rows.max(1);
+    let w = header.chunk_cols.max(1);
+    let n_col_bands = header.n_col_bands();
+    let mut seen = vec![false; header.n_chunks];
+    let mut out = Vec::new();
+    for round in rounds {
+        for job in &round.jobs {
+            // Sorted, deduplicated band lists (a job's rows are a
+            // permutation slice — many rows share a band).
+            let mut row_bands: Vec<usize> = job.rows.iter().map(|&r| r / h).collect();
+            row_bands.sort_unstable();
+            row_bands.dedup();
+            let mut col_bands: Vec<usize> = job.cols.iter().map(|&c| c / w).collect();
+            col_bands.sort_unstable();
+            col_bands.dedup();
+            for &rb in &row_bands {
+                for &cb in &col_bands {
+                    let idx = rb * n_col_bands + cb;
+                    if let Some(slot) = seen.get_mut(idx) {
+                        if !*slot {
+                            *slot = true;
+                            out.push(idx);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Handle to the background prefetch thread. Owned by the
+/// [`StoreReader`], spawned on the first non-empty plan; dropping it
+/// (with the reader) stops the thread promptly.
+pub(crate) struct Prefetcher {
+    tx: Option<mpsc::Sender<Vec<usize>>>,
+    handle: Option<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+    /// Planned chunks not yet processed (fetched or skipped) — the
+    /// `prefetch_idle` signal tests synchronize on.
+    queued: Arc<AtomicU64>,
+}
+
+impl Prefetcher {
+    pub(crate) fn spawn(
+        path: PathBuf,
+        layout: Layout,
+        index: Arc<Vec<ChunkMeta>>,
+        shared: Arc<ReaderShared>,
+    ) -> Self {
+        let (tx, rx) = mpsc::channel::<Vec<usize>>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let queued = Arc::new(AtomicU64::new(0));
+        let t_stop = Arc::clone(&stop);
+        let t_queued = Arc::clone(&queued);
+        let handle = std::thread::Builder::new()
+            .name("lamc-prefetch".into())
+            .spawn(move || {
+                // Own handle: prefetch I/O never contends the reader's
+                // file mutex. If the file can't be reopened the thread
+                // just drains plans — prefetch is advisory.
+                let mut file = File::open(&path).ok();
+                while let Ok(plan) = rx.recv() {
+                    for idx in plan {
+                        if t_stop.load(Ordering::Relaxed) {
+                            return;
+                        }
+                        if let Some(f) = file.as_mut() {
+                            fetch_one(f, &path, layout, &index, &shared, idx, &t_stop);
+                        }
+                        t_queued.fetch_sub(1, Ordering::Relaxed);
+                    }
+                }
+            })
+            .expect("spawn store prefetcher");
+        Self { tx: Some(tx), handle: Some(handle), stop, queued }
+    }
+
+    /// Queue a plan (ordered chunk ids). Never blocks.
+    pub(crate) fn send(&self, chunks: Vec<usize>) {
+        if let Some(tx) = &self.tx {
+            self.queued.fetch_add(chunks.len() as u64, Ordering::Relaxed);
+            if tx.send(chunks).is_err() {
+                self.queued.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// True when every queued chunk has been fetched or skipped.
+    pub(crate) fn idle(&self) -> bool {
+        self.queued.load(Ordering::Relaxed) == 0
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Closing the channel ends a blocked `recv`; the stop flag ends
+        // an in-plan loop within one throttle slice.
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Fetch one planned chunk into the prefetch cache. Skips chunks that
+/// are already resident or in flight; throttles while the pool is full;
+/// swallows every error (the demand path owns error reporting).
+fn fetch_one(
+    file: &mut File,
+    path: &Path,
+    layout: Layout,
+    index: &[ChunkMeta],
+    shared: &ReaderShared,
+    idx: usize,
+    stop: &AtomicBool,
+) {
+    let Some(&meta) = index.get(idx) else { return };
+    let est = meta.len as usize;
+    if est > shared.prefetch_budget {
+        return; // could never be held — don't waste the read
+    }
+    // Already in the hot cache? `peek` so prefetch never ages it.
+    if shared.hot_budget > 0 && shared.hot.lock().unwrap().peek(&idx).is_some() {
+        return;
+    }
+    // Throttle: hold the fetch until the pool has room. Decoded size
+    // equals payload size for both layouts, so `est` is exact.
+    {
+        let mut pool = shared.prefetched.lock().unwrap();
+        if pool.peek(&idx).is_some() {
+            return; // an earlier plan already fetched it
+        }
+        // Patience is wall-clock, not wake-count: consumption notifies
+        // wake this loop early, and counting those wakes as full slices
+        // would burn the window in far less than STALE_PATIENCE. And it
+        // restarts whenever a consumption lands — a slow-but-advancing
+        // compute wave is a live plan, not a diverged one; only a full
+        // window with *zero* consumption triggers stale eviction.
+        let mut waiting_since = std::time::Instant::now();
+        let mut hits_seen = shared.prefetch_hits.load(Ordering::Relaxed);
+        while pool.bytes() + est > shared.prefetch_budget {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let hits_now = shared.prefetch_hits.load(Ordering::Relaxed);
+            if hits_now != hits_seen {
+                hits_seen = hits_now;
+                waiting_since = std::time::Instant::now();
+            }
+            if waiting_since.elapsed() >= STALE_PATIENCE {
+                // The plan has diverged from actual access: reclaim
+                // room from never-consumed entries, oldest first.
+                while pool.bytes() + est > shared.prefetch_budget {
+                    let Some((_, chunk)) = pool.pop_lru() else { return };
+                    shared
+                        .prefetch_wasted_bytes
+                        .fetch_add(chunk.resident_bytes() as u64, Ordering::Relaxed);
+                }
+                break;
+            }
+            let (guard, _) = shared.prefetch_room.wait_timeout(pool, THROTTLE_SLICE).unwrap();
+            pool = guard;
+        }
+    }
+    // A throttle wait is long enough for a gather to have demand-loaded
+    // this chunk — re-check the hot cache before spending the read.
+    if shared.hot_budget > 0 && shared.hot.lock().unwrap().peek(&idx).is_some() {
+        return;
+    }
+    // Single-flight: if a gather is decoding this chunk right now, it
+    // will land in the hot cache — fetching it again is pure waste.
+    {
+        let mut inflight = shared.inflight.lock().unwrap();
+        if !inflight.insert(idx) {
+            return;
+        }
+    }
+    // Publish into the pool BEFORE clearing the in-flight entry: a
+    // gather waiting on this chunk must find it resident when it wakes,
+    // or it would re-register and decode the same payload again.
+    let chunk = read_and_decode(file, path, layout, idx, &meta, shared);
+    let displaced = chunk.map(|chunk| {
+        let bytes = chunk.resident_bytes();
+        shared.prefetched.lock().unwrap().insert(idx, chunk, bytes)
+    });
+    shared.inflight.lock().unwrap().remove(&idx);
+    shared.inflight_done.notify_all();
+    let Some(displaced) = displaced else { return };
+
+    for (_, evicted) in displaced.evicted {
+        shared.prefetch_wasted_bytes.fetch_add(evicted.resident_bytes() as u64, Ordering::Relaxed);
+    }
+    if let Some(rejected) = displaced.rejected {
+        shared.prefetch_wasted_bytes.fetch_add(rejected.resident_bytes() as u64, Ordering::Relaxed);
+    }
+    shared.prefetch_issued.fetch_add(1, Ordering::Relaxed);
+}
+
+/// The prefetcher's read path: the shared read-verify helper plus
+/// decode, with every failure a silent skip instead of an error (the
+/// demand path owns error reporting).
+fn read_and_decode(
+    file: &mut File,
+    path: &Path,
+    layout: Layout,
+    idx: usize,
+    meta: &ChunkMeta,
+    shared: &ReaderShared,
+) -> Option<Arc<super::chunk::DecodedChunk>> {
+    let payload = read_verified_payload(file, path, idx, meta, shared).ok()?;
+    let chunk = StoreReader::decode_chunk_payload(path, layout, idx, meta, &payload).ok()?;
+    Some(Arc::new(chunk))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::BlockJob;
+
+    fn header(rows: usize, cols: usize, chunk_rows: usize, chunk_cols: usize) -> StoreHeader {
+        let n_row_bands = rows.div_ceil(chunk_rows);
+        let n_col_bands = cols.div_ceil(chunk_cols);
+        StoreHeader {
+            version: super::super::format::VERSION_TILED,
+            layout: Layout::Dense,
+            rows,
+            cols,
+            nnz: (rows * cols) as u64,
+            chunk_rows,
+            chunk_cols,
+            n_chunks: n_row_bands * n_col_bands,
+            fingerprint: 0,
+        }
+    }
+
+    fn job(round: usize, rows: Vec<usize>, cols: Vec<usize>) -> SamplingRound {
+        SamplingRound { round, jobs: vec![BlockJob { round, grid: (0, 0), rows, cols }] }
+    }
+
+    #[test]
+    fn plan_covers_exactly_the_touched_chunks() {
+        // 4 row bands x 3 col bands of a 40x30 store in 10x10 tiles.
+        let h = header(40, 30, 10, 10);
+        // Rows 5, 25 -> bands 0, 2; cols 12, 14 -> band 1.
+        let plan = plan_chunks(&h, &[job(0, vec![5, 25], vec![12, 14])]);
+        assert_eq!(plan, vec![1, 7], "row bands {{0,2}} x col band {{1}}");
+    }
+
+    #[test]
+    fn plan_deduplicates_across_jobs_and_rounds() {
+        let h = header(40, 30, 10, 10);
+        let rounds = [job(0, vec![0, 1], vec![0]), job(1, vec![2, 11], vec![1, 29])];
+        // Round 0: chunk 0. Round 1: row bands {0,1} x col bands {0,2}
+        // = chunks {0,2,3,5}; 0 is already planned.
+        let plan = plan_chunks(&h, &rounds);
+        assert_eq!(plan, vec![0, 2, 3, 5]);
+    }
+
+    #[test]
+    fn plan_preserves_job_order() {
+        let h = header(40, 30, 10, 10);
+        let rounds = [job(0, vec![35], vec![25]), job(1, vec![0], vec![0])];
+        let plan = plan_chunks(&h, &rounds);
+        assert_eq!(plan, vec![11, 0], "later rounds fetch after earlier ones");
+    }
+
+    #[test]
+    fn plan_on_row_band_store_ignores_column_split() {
+        // LAMC2 geometry: chunk_cols == cols, one col band.
+        let h = header(40, 30, 10, 30);
+        let plan = plan_chunks(&h, &[job(0, vec![0, 39], vec![3, 29])]);
+        assert_eq!(plan, vec![0, 3]);
+    }
+}

@@ -21,8 +21,9 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::matrix::{DenseMatrix, Matrix};
+use crate::partition::SamplingRound;
 
-use super::chunk::StoreReader;
+use super::chunk::{IoCounters, StoreReader};
 
 /// Owning handle to a matrix, wherever it lives.
 #[derive(Clone, Debug)]
@@ -164,6 +165,46 @@ impl<'a> MatrixView<'a> {
         match *self {
             MatrixView::Mem(m) => Ok(Cow::Borrowed(m)),
             MatrixView::Stored(r) => Ok(Cow::Owned(r.read_all()?)),
+        }
+    }
+
+    /// Ask the backing store to warm its caches for these upcoming
+    /// sampling rounds (see [`StoreReader::prefetch_plan`]). A no-op
+    /// for in-memory matrices — there is nothing to fetch ahead — and
+    /// always advisory: results never depend on it.
+    pub fn prefetch_plan(&self, rounds: &[SamplingRound]) {
+        if let MatrixView::Stored(r) = self {
+            r.prefetch_plan(rounds);
+        }
+    }
+
+    /// Would [`MatrixView::prefetch_plan`] ever do anything? False for
+    /// in-memory matrices and for readers with prefetch disabled — the
+    /// scheduler uses this to keep its flat (barrier-free) dispatch
+    /// when there is no prefetch to overlap with.
+    pub fn prefetch_enabled(&self) -> bool {
+        match self {
+            MatrixView::Mem(_) => false,
+            MatrixView::Stored(r) => r.prefetch_enabled(),
+        }
+    }
+
+    /// Point-in-time I/O + prefetch counters of the backing store (all
+    /// zeros for in-memory matrices).
+    pub fn io_counters(&self) -> IoCounters {
+        match self {
+            MatrixView::Mem(_) => IoCounters::default(),
+            MatrixView::Stored(r) => r.io_counters(),
+        }
+    }
+
+    /// Claim the backing store's unclaimed counter increments (see
+    /// [`StoreReader::take_io_delta`]); zeros for in-memory matrices.
+    /// `run_rounds`/`run_baseline` fold this into the run's `Stats`.
+    pub fn take_io_delta(&self) -> IoCounters {
+        match self {
+            MatrixView::Mem(_) => IoCounters::default(),
+            MatrixView::Stored(r) => r.take_io_delta(),
         }
     }
 }

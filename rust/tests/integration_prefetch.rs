@@ -1,0 +1,167 @@
+//! Prefetch determinism + safety (ISSUE 5 satellite).
+//!
+//! The background prefetcher is *advisory*: it may only change
+//! wall-clock time, never results, errors, or the hot cache's
+//! effectiveness. These tests pin that contract:
+//!
+//! * labels are byte-identical with prefetch off, on, and starved down
+//!   to a one-chunk budget;
+//! * `prefetch_wasted_bytes` stays 0 when the plan matches actual
+//!   access (every prefetched chunk is consumed, nothing is churned);
+//! * prefetch never evicts chunks the current round re-reads — the hot
+//!   cache's hit counter does not regress versus a prefetch-free run.
+
+use lamc::data::synthetic::{planted_dense, PlantedConfig};
+use lamc::partition::{sample_partition, CoclusterPrior, PartitionPlan, PlannerConfig};
+use lamc::rng::Xoshiro256;
+use lamc::store::{pack_matrix, pack_matrix_tiled, StoreReader, DEFAULT_CACHE_BYTES};
+use lamc::{Lamc, LamcConfig};
+
+fn store_dir() -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("lamc_prefetch_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn fast_config(k: usize) -> LamcConfig {
+    LamcConfig {
+        k,
+        planner: PlannerConfig {
+            candidate_sizes: vec![128],
+            prior: CoclusterPrior { row_fraction: 0.2, col_fraction: 0.2, t_m: 6, t_n: 6 },
+            max_samplings: 4,
+            ..Default::default()
+        },
+        workers: 2,
+        seed: 0xFE7C,
+        ..Default::default()
+    }
+}
+
+fn wait_prefetch_idle(r: &StoreReader) {
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    while !r.prefetch_idle() {
+        assert!(std::time::Instant::now() < deadline, "prefetch never drained");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+}
+
+/// Labels must be byte-identical across: in-memory, store without
+/// prefetch, store with the default prefetch budget, and store with a
+/// budget of exactly one chunk (maximum starvation — the prefetcher
+/// can hold a single tile and must wait for consumption).
+#[test]
+fn labels_identical_with_prefetch_off_on_and_one_chunk_budget() {
+    let ds = planted_dense(&PlantedConfig {
+        rows: 300,
+        cols: 240,
+        row_clusters: 3,
+        col_clusters: 3,
+        noise: 0.12,
+        signal: 1.5,
+        seed: 0x5A11,
+        ..Default::default()
+    });
+    let path = store_dir().join("equiv.lamc3");
+    pack_matrix_tiled(&ds.matrix, &path, 64, 64).unwrap();
+    let one_chunk_bytes = 64 * 64 * 4;
+
+    let lamc = Lamc::new(fast_config(3));
+    let want = lamc.run(&ds.matrix).unwrap();
+
+    for (name, prefetch_budget) in
+        [("off", 0usize), ("default", 32 << 20), ("one-chunk", one_chunk_bytes)]
+    {
+        let reader = StoreReader::open_with_budgets(&path, DEFAULT_CACHE_BYTES, prefetch_budget).unwrap();
+        let got = lamc.run(&reader).unwrap();
+        assert_eq!(got.row_labels, want.row_labels, "row labels differ (prefetch={name})");
+        assert_eq!(got.col_labels, want.col_labels, "col labels differ (prefetch={name})");
+        assert_eq!(got.k, want.k, "k differs (prefetch={name})");
+        if prefetch_budget == 0 {
+            assert_eq!(reader.prefetch_issued(), 0, "budget 0 must disable prefetch");
+        }
+    }
+}
+
+/// A plan that exactly matches the upcoming access pattern wastes
+/// nothing: every prefetched chunk is consumed (promoted into the hot
+/// cache), none is ever evicted unconsumed, and the demand path never
+/// touches the disk at all.
+#[test]
+fn matching_plan_wastes_zero_bytes() {
+    let ds = planted_dense(&PlantedConfig { rows: 200, cols: 100, seed: 0x5A12, ..Default::default() });
+    let path = store_dir().join("matching.lamc2");
+    pack_matrix(&ds.matrix, &path, 32).unwrap(); // 7 row bands
+    let reader = StoreReader::open_with_budgets(&path, DEFAULT_CACHE_BYTES, 32 << 20).unwrap();
+
+    let plan = PartitionPlan {
+        phi: 64,
+        psi: 50,
+        m: 4,
+        n: 2,
+        t_p: 2,
+        certified_probability: 1.0,
+        estimated_cost: 0.0,
+    };
+    let mut rng = Xoshiro256::seed_from(77);
+    let rounds = sample_partition(200, 100, &plan, &mut rng);
+
+    // Warm everything the rounds will touch, then access in plan order.
+    reader.prefetch_plan(&rounds);
+    wait_prefetch_idle(&reader);
+    assert_eq!(reader.prefetch_issued(), 7, "every row band fetched exactly once");
+    for round in &rounds {
+        for job in &round.jobs {
+            reader.tile(&job.rows, &job.cols).unwrap();
+        }
+    }
+    assert_eq!(reader.prefetch_wasted_bytes(), 0, "matching plan must waste nothing");
+    assert_eq!(reader.prefetch_hits(), 7, "each prefetched band consumed once");
+    assert_eq!(reader.chunks_read(), 7, "the demand path never read the disk");
+    assert!(reader.cache_hits() > 0, "re-reads served by the hot cache");
+}
+
+/// Prefetch must never evict a chunk the current round re-reads: with
+/// the same hot-cache budget and the same access sequence, the hot
+/// cache hits at least as often with prefetch on as with it off.
+#[test]
+fn prefetch_never_regresses_hot_cache_hits() {
+    let ds = planted_dense(&PlantedConfig { rows: 160, cols: 120, seed: 0x5A13, ..Default::default() });
+    let path = store_dir().join("no_regress.lamc3");
+    pack_matrix_tiled(&ds.matrix, &path, 32, 40).unwrap();
+
+    let plan = PartitionPlan {
+        phi: 80,
+        psi: 60,
+        m: 2,
+        n: 2,
+        t_p: 2,
+        certified_probability: 1.0,
+        estimated_cost: 0.0,
+    };
+    let hot_budget = 1 << 20;
+
+    let run = |prefetch_budget: usize| -> (u64, u64) {
+        let reader = StoreReader::open_with_budgets(&path, hot_budget, prefetch_budget).unwrap();
+        let mut rng = Xoshiro256::seed_from(88);
+        let rounds = sample_partition(160, 120, &plan, &mut rng);
+        if prefetch_budget > 0 {
+            reader.prefetch_plan(&rounds);
+            wait_prefetch_idle(&reader);
+        }
+        for round in &rounds {
+            for job in &round.jobs {
+                reader.tile(&job.rows, &job.cols).unwrap();
+            }
+        }
+        (reader.cache_hits(), reader.prefetch_wasted_bytes())
+    };
+
+    let (hits_off, _) = run(0);
+    let (hits_on, wasted_on) = run(8 << 20);
+    assert!(
+        hits_on >= hits_off,
+        "prefetch regressed hot-cache hits: {hits_on} < {hits_off}"
+    );
+    assert_eq!(wasted_on, 0, "ample budget + matching plan wastes nothing");
+}
