@@ -15,5 +15,5 @@ pub mod stats;
 #[cfg(feature = "pjrt")]
 pub use router::PjrtExecutor;
 pub use router::{BlockExecutor, NativeExecutor, Route, Router};
-pub use scheduler::{run_rounds, SchedulerConfig};
+pub use scheduler::{band_of, plan_jobs_by_band, run_rounds, BandSpan, JobBandPlan, SchedulerConfig};
 pub use stats::{Stats, StatsSnapshot};

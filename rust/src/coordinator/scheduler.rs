@@ -204,6 +204,73 @@ pub fn leader_rng(seed: u64) -> Xoshiro256 {
     Xoshiro256::seed_from(seed ^ 0x1EADE12)
 }
 
+/// One contiguous row band of a sharded matrix, as owned by shard
+/// workers (`[row_lo, row_hi)` in parent coordinates).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BandSpan {
+    pub row_lo: usize,
+    pub row_hi: usize,
+}
+
+/// Index of the band containing `row`, for `bands` sorted by `row_lo`
+/// and contiguous. `None` when `row` falls outside every band.
+pub fn band_of(bands: &[BandSpan], row: usize) -> Option<usize> {
+    let i = bands.partition_point(|b| b.row_hi <= row);
+    (i < bands.len() && bands[i].row_lo <= row && row < bands[i].row_hi).then_some(i)
+}
+
+/// Where one block job's rows live: which bands it touches, at which
+/// positions in the job's row list, and which band dominates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobBandPlan {
+    /// Index into the flat (rounds → jobs) job sequence.
+    pub job: usize,
+    /// Band contributing the most rows (ties → lowest band index): the
+    /// router executes the job on an owner of this band so the largest
+    /// row share is gathered locally instead of shipped.
+    pub primary: usize,
+    /// Per touched band (ascending band index): the positions into the
+    /// job's row list whose rows live in that band.
+    pub per_band: Vec<(usize, Vec<usize>)>,
+}
+
+/// Key each job of the flat job sequence by band ownership — the shard
+/// router's round plan. Sampling is dims-only, so the router derives
+/// `jobs` from the manifest alone and this plan never sees matrix data.
+/// Errors if any sampled row falls outside every band (a topology that
+/// does not cover the matrix).
+pub fn plan_jobs_by_band(jobs: &[&BlockJob], bands: &[BandSpan]) -> Result<Vec<JobBandPlan>> {
+    let mut out = Vec::with_capacity(jobs.len());
+    for (j, job) in jobs.iter().enumerate() {
+        let mut per_band: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (pos, &row) in job.rows.iter().enumerate() {
+            let band = band_of(bands, row).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "row {row} of job {j} (round {}, grid {:?}) is outside every shard band",
+                    job.round,
+                    job.grid
+                )
+            })?;
+            match per_band.binary_search_by_key(&band, |&(b, _)| b) {
+                Ok(i) => per_band[i].1.push(pos),
+                Err(i) => per_band.insert(i, (band, vec![pos])),
+            }
+        }
+        // Largest row share wins; per_band is in ascending band order,
+        // so a strict `>` makes ties fall to the lowest band index.
+        let mut primary = 0;
+        let mut best = 0;
+        for (band, positions) in &per_band {
+            if positions.len() > best {
+                best = positions.len();
+                primary = *band;
+            }
+        }
+        out.push(JobBandPlan { job: j, primary, per_band });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -285,6 +352,47 @@ mod tests {
             assert_eq!(x.0.grid, y.0.grid);
             assert_eq!(x.0.round, y.0.round);
         }
+    }
+
+    #[test]
+    fn band_lookup_and_job_plans() {
+        let bands = [
+            BandSpan { row_lo: 0, row_hi: 4 },
+            BandSpan { row_lo: 4, row_hi: 10 },
+            BandSpan { row_lo: 10, row_hi: 12 },
+        ];
+        assert_eq!(band_of(&bands, 0), Some(0));
+        assert_eq!(band_of(&bands, 3), Some(0));
+        assert_eq!(band_of(&bands, 4), Some(1));
+        assert_eq!(band_of(&bands, 11), Some(2));
+        assert_eq!(band_of(&bands, 12), None);
+
+        // Sampled (permuted) rows: positions must index the job's row
+        // list, not the parent rows.
+        let job = BlockJob { round: 0, grid: (0, 0), rows: vec![11, 2, 5, 7, 0], cols: vec![0] };
+        let plans = plan_jobs_by_band(&[&job], &bands).unwrap();
+        assert_eq!(plans.len(), 1);
+        let plan = &plans[0];
+        assert_eq!(plan.job, 0);
+        assert_eq!(plan.primary, 0, "bands 0 and 1 hold two rows each; ties go low");
+        assert_eq!(
+            plan.per_band,
+            vec![(0, vec![1, 4]), (1, vec![2, 3]), (2, vec![0])],
+            "ascending band order, positions into the job row list"
+        );
+
+        let tie = BlockJob { round: 0, grid: (0, 1), rows: vec![5, 1, 11, 7], cols: vec![0] };
+        let plans = plan_jobs_by_band(&[&tie], &bands).unwrap();
+        assert_eq!(plans[0].primary, 1, "two rows in band 1 beat one row each elsewhere");
+        let even = BlockJob { round: 0, grid: (1, 0), rows: vec![5, 1], cols: vec![0] };
+        let plans = plan_jobs_by_band(&[&even, &tie], &bands).unwrap();
+        assert_eq!(plans[0].primary, 0, "1-vs-1 tie resolves to the lowest band index");
+        assert_eq!(plans[1].job, 1);
+
+        // A row outside every band is a typed error, not a silent skip.
+        let stray = BlockJob { round: 2, grid: (0, 0), rows: vec![2, 99], cols: vec![0] };
+        let err = plan_jobs_by_band(&[&stray], &bands).unwrap_err().to_string();
+        assert!(err.contains("outside every shard band"), "{err}");
     }
 
     #[test]

@@ -97,6 +97,36 @@ pub struct StatsSnapshot {
     pub prefetch_wasted_bytes: u64,
 }
 
+impl StatsSnapshot {
+    /// Field-wise sum of two snapshots — the shard router's aggregation
+    /// over per-worker `STATS` replies.
+    ///
+    /// PR 5's per-run I/O watermarking (`take_io_delta` folded into one
+    /// process's `Stats`) assumes a single process; in a routed run
+    /// each worker holds its own counters and the per-run claim only
+    /// holds for the *sum*. Time accumulators sum too: the result reads
+    /// as total worker-seconds, not elapsed wall clock.
+    pub fn merged(&self, other: &StatsSnapshot) -> StatsSnapshot {
+        StatsSnapshot {
+            blocks_total: self.blocks_total + other.blocks_total,
+            blocks_native: self.blocks_native + other.blocks_native,
+            blocks_pjrt: self.blocks_pjrt + other.blocks_pjrt,
+            pjrt_fallbacks: self.pjrt_fallbacks + other.pjrt_fallbacks,
+            gather_s: self.gather_s + other.gather_s,
+            exec_s: self.exec_s + other.exec_s,
+            merge_s: self.merge_s + other.merge_s,
+            cache_hits: self.cache_hits + other.cache_hits,
+            cache_misses: self.cache_misses + other.cache_misses,
+            store_chunks_read: self.store_chunks_read + other.store_chunks_read,
+            store_bytes_read: self.store_bytes_read + other.store_bytes_read,
+            store_cache_hits: self.store_cache_hits + other.store_cache_hits,
+            prefetch_issued: self.prefetch_issued + other.prefetch_issued,
+            prefetch_hits: self.prefetch_hits + other.prefetch_hits,
+            prefetch_wasted_bytes: self.prefetch_wasted_bytes + other.prefetch_wasted_bytes,
+        }
+    }
+}
+
 impl std::fmt::Display for StatsSnapshot {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
@@ -170,6 +200,65 @@ mod tests {
         let text = format!("{snap}");
         assert!(text.contains("io=4c/1024B(7h)"), "{text}");
         assert!(text.contains("prefetch=3i/2h/256wB"), "{text}");
+    }
+
+    #[test]
+    fn merged_sums_every_field() {
+        // Distinct primes per field on both sides: a field that is
+        // dropped, duplicated, or cross-wired in `merged` breaks an
+        // equality below.
+        let a = StatsSnapshot {
+            blocks_total: 2,
+            blocks_native: 3,
+            blocks_pjrt: 5,
+            pjrt_fallbacks: 7,
+            gather_s: 0.25,
+            exec_s: 0.5,
+            merge_s: 0.125,
+            cache_hits: 11,
+            cache_misses: 13,
+            store_chunks_read: 17,
+            store_bytes_read: 19,
+            store_cache_hits: 23,
+            prefetch_issued: 29,
+            prefetch_hits: 31,
+            prefetch_wasted_bytes: 37,
+        };
+        let b = StatsSnapshot {
+            blocks_total: 41,
+            blocks_native: 43,
+            blocks_pjrt: 47,
+            pjrt_fallbacks: 53,
+            gather_s: 1.0,
+            exec_s: 2.0,
+            merge_s: 4.0,
+            cache_hits: 59,
+            cache_misses: 61,
+            store_chunks_read: 67,
+            store_bytes_read: 71,
+            store_cache_hits: 73,
+            prefetch_issued: 79,
+            prefetch_hits: 83,
+            prefetch_wasted_bytes: 89,
+        };
+        let m = a.merged(&b);
+        assert_eq!(m.blocks_total, 43);
+        assert_eq!(m.blocks_native, 46);
+        assert_eq!(m.blocks_pjrt, 52);
+        assert_eq!(m.pjrt_fallbacks, 60);
+        assert!((m.gather_s - 1.25).abs() < 1e-12);
+        assert!((m.exec_s - 2.5).abs() < 1e-12);
+        assert!((m.merge_s - 4.125).abs() < 1e-12);
+        assert_eq!(m.cache_hits, 70);
+        assert_eq!(m.cache_misses, 74);
+        assert_eq!(m.store_chunks_read, 84);
+        assert_eq!(m.store_bytes_read, 90);
+        assert_eq!(m.store_cache_hits, 96);
+        assert_eq!(m.prefetch_issued, 108);
+        assert_eq!(m.prefetch_hits, 114);
+        assert_eq!(m.prefetch_wasted_bytes, 126);
+        // Identity on the zero snapshot.
+        assert_eq!(a.merged(&StatsSnapshot::default()), a);
     }
 
     #[test]

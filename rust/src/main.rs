@@ -13,8 +13,12 @@
 //!                materializing the matrix.
 //! * `inspect`  — print (and optionally checksum-verify) a store's
 //!                self-description.
-//! * `serve`    — run the long-lived co-clustering service (TCP).
-//! * `submit`   — submit a job to a running service.
+//! * `shard`    — split a store into contiguous row-band shard stores
+//!                plus a band-ownership manifest (LAMCM1).
+//! * `serve`    — run the long-lived co-clustering service (TCP);
+//!                `--shards` registers shard bands for routed runs.
+//! * `route`    — run a shard router fronting multiple worker nodes.
+//! * `submit`   — submit a job to a running service (or router).
 //! * `status`   — query a job's state (or server-wide stats) on a
 //!                running service.
 //! * `load`     — load a dataset, matrix file or store on a running
@@ -74,11 +78,16 @@ USAGE:
   lamc repack   --store FILE --output FILE [--chunk-rows N]
                 [--chunk-cols N|0|auto (0 = row-band)] [--cache-mb N]
   lamc inspect  --store FILE [--verify]
+  lamc shard    --store FILE --output-dir DIR --shards N [--stem NAME]
   lamc serve    [--addr HOST:PORT] [--runners N] [--queue N] [--cache-mb N]
                 [--store-root DIR] [--cache-disk-mb N] [--stores name=file.lamc2,...]
+                [--shards name=manifest.lamcm[:IDX:IDX...],...]
                 [--datasets a,b] [--seed N] [--job-ttl SECS|0=keep] [--verbose]
+  lamc route    [--addr HOST:PORT] --workers HOST:PORT,HOST:PORT,...
+                [--retries N] [--io-timeout SECS] [--job-timeout SECS]
   lamc submit   [--addr HOST:PORT] --matrix NAME [--method M] [--k N] [--seed N]
                 [--p-thresh F] [--tau F] [--workers N] [--wait] [--timeout SECS]
+                [--labels-out FILE (with --wait)]
   lamc status   [--addr HOST:PORT] [--id N]
   lamc load     [--addr HOST:PORT] --name NAME
                 (--dataset D [--rows N] [--seed N] | --path FILE | --store FILE.lamc2)
@@ -117,7 +126,9 @@ fn run() -> Result<()> {
         "ingest" => cmd_ingest(&args),
         "repack" => cmd_repack(&args),
         "inspect" => cmd_inspect(&args),
+        "shard" => cmd_shard(&args),
         "serve" => cmd_serve(&args),
+        "route" => cmd_route(&args),
         "submit" => cmd_submit(&args),
         "status" => cmd_status(&args),
         "load" => cmd_load(&args),
@@ -366,6 +377,68 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Split a store into contiguous, chunk-aligned row-band shard stores
+/// plus a band-ownership manifest — the unit `lamc serve --shards`
+/// workers register and `lamc route` scatters over.
+fn cmd_shard(args: &Args) -> Result<()> {
+    args.expect_flags(&["store", "output-dir", "shards", "stem"])?;
+    let store = PathBuf::from(args.get("store").context("--store required")?);
+    let out_dir = PathBuf::from(args.get("output-dir").context("--output-dir required")?);
+    let n = args.get_usize("shards", 0)?;
+    anyhow::ensure!(n > 0, "--shards required (how many row bands)");
+    let default_stem =
+        store.file_stem().and_then(|s| s.to_str()).unwrap_or("matrix").to_string();
+    let stem = args.get_or("stem", &default_stem);
+    let reader = StoreReader::open(&store)?;
+    let (manifest_path, manifest) = lamc::store::shard_store(&reader, &out_dir, stem, n)?;
+    println!("sharded {:?} into {} band(s):", store, manifest.entries.len());
+    for e in &manifest.entries {
+        println!("  shard {} : rows {}..{} -> {:?}", e.index, e.row_lo, e.row_hi, manifest.shard_path(e));
+    }
+    println!("manifest    : {manifest_path:?}");
+    println!("fingerprint : {:016x}", manifest.fingerprint);
+    Ok(())
+}
+
+/// Front a fleet of `lamc serve --shards` workers with a shard router:
+/// discovers band ownership over the wire, then serves the standard
+/// submit/status/result protocol with routed, byte-identical runs.
+fn cmd_route(args: &Args) -> Result<()> {
+    args.expect_flags(&["addr", "workers", "retries", "io-timeout", "job-timeout"])?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let workers: Vec<String> = args
+        .get("workers")
+        .context("--workers required (host:port,host:port,...)")?
+        .split(',')
+        .filter(|w| !w.is_empty())
+        .map(str::to_string)
+        .collect();
+    let defaults = lamc::service::ShardRouterConfig::default();
+    let cfg = lamc::service::ShardRouterConfig {
+        retries: args.get_usize("retries", defaults.retries)?,
+        io_timeout: std::time::Duration::from_secs(
+            args.get_u64("io-timeout", defaults.io_timeout.as_secs())?,
+        ),
+        job_timeout: std::time::Duration::from_secs(
+            args.get_u64("job-timeout", defaults.job_timeout.as_secs())?,
+        ),
+    };
+    let router = lamc::service::ShardRouter::connect(&workers, cfg)?;
+    let mut names: Vec<&String> = router.topology().keys().collect();
+    names.sort();
+    for name in names {
+        let t = &router.topology()[name];
+        println!("matrix {name}: {} x {}, {} band(s)", t.rows, t.cols, t.bands.len());
+    }
+    let server = lamc::service::ShardServer::spawn(addr, router)?;
+    println!("lamc shard router listening on {}", server.addr());
+    println!("submit with: lamc submit --addr {} --matrix <name>", server.addr());
+    // Blocks until a SHUTDOWN request stops the accept loop.
+    server.join();
+    println!("shutdown requested; router stopped");
+    Ok(())
+}
+
 fn cmd_load(args: &Args) -> Result<()> {
     args.expect_flags(&["addr", "name", "dataset", "path", "store", "rows", "seed"])?;
     let addr = args.get_or("addr", DEFAULT_ADDR);
@@ -407,7 +480,7 @@ fn cmd_version(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_flags(&[
         "addr", "runners", "queue", "cache-mb", "cache-disk-mb", "datasets", "seed",
-        "store-root", "stores", "job-ttl",
+        "store-root", "stores", "shards", "job-ttl",
     ])?;
     let addr = args.get_or("addr", DEFAULT_ADDR);
     let defaults = ServiceConfig::default();
@@ -447,6 +520,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
             println!("registered store {name}: {r} x {c} (disk-resident)");
         }
     }
+    // `name=manifest.lamcm` registers every band of the manifest on
+    // this worker (full replication); `name=manifest.lamcm:0:2` only
+    // the listed band indices (disjoint ownership across a fleet).
+    if let Some(shards) = args.get("shards") {
+        for binding in shards.split(',').filter(|b| !b.is_empty()) {
+            let (name, rest) = binding.split_once('=').with_context(|| {
+                format!("--shards wants name=manifest.lamcm[:idx...], got '{binding}'")
+            })?;
+            let mut parts = rest.split(':');
+            let manifest = parts.next().context("missing manifest path")?;
+            let indices: Vec<usize> = parts
+                .map(|p| {
+                    p.parse::<usize>()
+                        .with_context(|| format!("bad shard index '{p}' in '{binding}'"))
+                })
+                .collect::<Result<_>>()?;
+            let set = manager.register_shards(
+                name,
+                Path::new(manifest),
+                if indices.is_empty() { None } else { Some(&indices) },
+            )?;
+            println!(
+                "registered shards {name}: {} x {}, {} band(s) owned",
+                set.rows,
+                set.cols,
+                set.bands.len()
+            );
+        }
+    }
     let server = ServiceServer::spawn(addr, manager)?;
     println!("lamc service listening on {}", server.addr());
     println!("submit with: lamc submit --addr {} --matrix <name>", server.addr());
@@ -471,8 +573,11 @@ fn job_spec_from_args(args: &Args) -> Result<JobSpec> {
 }
 
 fn cmd_submit(args: &Args) -> Result<()> {
-    args.expect_flags(&["addr", "matrix", "method", "k", "seed", "p-thresh", "tau", "workers", "timeout"])?;
+    args.expect_flags(&["addr", "matrix", "method", "k", "seed", "p-thresh", "tau", "workers", "timeout", "labels-out"])?;
     let addr = args.get_or("addr", DEFAULT_ADDR);
+    if args.get("labels-out").is_some() && !args.has("wait") {
+        bail!("--labels-out requires --wait (labels are fetched when the job finishes)");
+    }
     let spec = job_spec_from_args(args)?;
     let mut client = ServiceClient::connect(addr)?;
     let id = client.submit(&spec)?;
@@ -481,6 +586,18 @@ fn cmd_submit(args: &Args) -> Result<()> {
         let timeout = std::time::Duration::from_secs(args.get_u64("timeout", 600)?);
         let out = client.wait(id, timeout)?;
         println!("job {id} done: k={} rows={} cols={} cached={}", out.k, out.row_labels.len(), out.col_labels.len(), out.cached);
+        // Byte-stable label dump — the single-node vs routed runs of the
+        // CI shard smoke are compared with `cmp` on exactly this text.
+        if let Some(path) = args.get("labels-out") {
+            let text = format!(
+                "k {}\nrows {}\ncols {}\n",
+                out.k,
+                lamc::service::protocol::encode_labels(&out.row_labels),
+                lamc::service::protocol::encode_labels(&out.col_labels),
+            );
+            std::fs::write(path, text).with_context(|| format!("write labels to {path}"))?;
+            println!("labels written to {path}");
+        }
     } else {
         println!("poll with: lamc status --addr {addr} --id {id}");
     }

@@ -3,6 +3,24 @@
 //! scored in Table III).
 
 use super::cocluster_set::Cocluster;
+use super::hierarchical::{merge_coclusters, MergeConfig};
+
+/// Cross-node reduce over partial co-cluster sets: the shard router's
+/// aggregation step.
+///
+/// Each worker returns the atom co-clusters of the block jobs it
+/// executed; the router concatenates those partial sets **in flat job
+/// order** (rounds, then grid order within a round — the same order
+/// `pipeline::Lamc::run` flat-maps its in-process results) and runs the
+/// one global hierarchical merge. Because the merge consumes exactly
+/// the sequence the single-node run would have built, the merged set —
+/// and therefore `extract_labels` output — is byte-identical to the
+/// single-node run. That equality is the distributed determinism
+/// guarantee, and `tests/property_store_layouts.rs` proves it per
+/// seeded configuration rather than asserting it in prose.
+pub fn reduce_partial_sets(partials: Vec<Vec<Cocluster>>, cfg: &MergeConfig) -> Vec<Cocluster> {
+    merge_coclusters(partials.into_iter().flatten().collect(), cfg)
+}
 
 /// Assign every row/column id a final cluster label by maximum vote.
 ///
@@ -112,6 +130,35 @@ mod tests {
         assert_eq!(k, 1);
         assert_eq!(r, vec![0, 0, 0]);
         assert_eq!(c, vec![0, 0]);
+    }
+
+    #[test]
+    fn partial_set_reduce_equals_single_concatenated_merge() {
+        // Twelve atoms split across "workers" at several different job
+        // boundaries must merge to the identical sequence — the router
+        // only controls the split, never the flat order.
+        let atoms: Vec<Cocluster> = (0..12u32)
+            .map(|i| {
+                let base = (i % 4) * 10;
+                Cocluster::atom(
+                    vec![base, base + 1, base + i % 3],
+                    vec![base + 2, base + 3],
+                    -(i as f64),
+                )
+            })
+            .collect();
+        let cfg = MergeConfig::default();
+        let whole = merge_coclusters(atoms.clone(), &cfg);
+        for split in [1usize, 3, 5, 12] {
+            let partials: Vec<Vec<Cocluster>> =
+                atoms.chunks(split).map(|c| c.to_vec()).collect();
+            let reduced = reduce_partial_sets(partials, &cfg);
+            assert_eq!(reduced, whole, "split={split} changed the merge");
+        }
+        // Empty partial sets (a worker whose jobs all produced no
+        // atoms) are transparent.
+        let padded = vec![vec![], atoms.clone(), vec![]];
+        assert_eq!(reduce_partial_sets(padded, &cfg), whole);
     }
 
     #[test]

@@ -21,6 +21,6 @@ pub mod similarity;
 pub mod consensus;
 
 pub use cocluster_set::Cocluster;
-pub use consensus::extract_labels;
+pub use consensus::{extract_labels, reduce_partial_sets};
 pub use hierarchical::{merge_coclusters, MergeConfig};
 pub use similarity::{jaccard, pair_similarity};

@@ -10,10 +10,12 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::merge::Cocluster;
 
 use super::manager::{JobSpec, JobState};
-use super::protocol;
+use super::protocol::{self, ShardSetInfo, PROTO_VERSION};
 
 /// A job's status as reported by `STATUS`.
 #[derive(Clone, Debug)]
@@ -222,5 +224,98 @@ impl ServiceClient {
     pub fn shutdown(&mut self) -> Result<()> {
         self.roundtrip("SHUTDOWN")?;
         Ok(())
+    }
+
+    /// Apply a read+write timeout to this connection (None = blocking).
+    ///
+    /// `SO_RCVTIMEO`/`SO_SNDTIMEO` are socket-level options, so setting
+    /// them on the writer half also covers the `try_clone`d reader.
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.writer.set_read_timeout(timeout).context("set read timeout")?;
+        self.writer.set_write_timeout(timeout).context("set write timeout")?;
+        Ok(())
+    }
+
+    /// Protocol handshake: returns the peer's `(proto, version)`.
+    pub fn hello(&mut self) -> Result<(u64, String)> {
+        let map = self.kv_reply(&format!(
+            "HELLO proto={PROTO_VERSION} version={}",
+            env!("CARGO_PKG_VERSION")
+        ))?;
+        let proto: u64 = map.get("proto").context("missing proto")?.parse()?;
+        let version = map.get("version").context("missing version")?.clone();
+        Ok((proto, version))
+    }
+
+    /// Discover the shard sets a worker node owns (`SHARDS`).
+    pub fn shard_sets(&mut self) -> Result<Vec<ShardSetInfo>> {
+        let rest = self.roundtrip("SHARDS")?;
+        let tokens: Vec<&str> = rest.split_whitespace().collect();
+        let map = protocol::kv_pairs(&tokens)?;
+        let n: usize = map.get("sets").context("missing sets count")?.parse()?;
+        let mut sets = Vec::with_capacity(n);
+        for _ in 0..n {
+            let line = self.read_line()?;
+            sets.push(protocol::parse_shard_set(&line)?);
+        }
+        let end = self.read_line()?;
+        ensure!(end.trim() == "END", "expected END terminator, got '{}'", end.trim());
+        Ok(sets)
+    }
+
+    /// Fetch the listed global rows × cols of shard set `name` from a
+    /// worker (`GATHERB`): returns row-major f32 values.
+    pub fn gather_block(&mut self, name: &str, rows: &[usize], cols: &[usize]) -> Result<Vec<f32>> {
+        protocol::ensure_token("name", name)?;
+        let ids = protocol::encode_labels_binary(rows, cols)?;
+        self.send_line(&format!("GATHERB name={name} rows={} cols={}", rows.len(), cols.len()))?;
+        self.writer.write_all(&ids)?;
+        self.writer.flush()?;
+        let header = self.read_line()?;
+        let map = Self::header_map(&header)?;
+        let bytes: usize = map.get("bytes").context("missing bytes")?.parse()?;
+        let mut payload = vec![0u8; bytes];
+        self.reader.read_exact(&mut payload).context("read gathered block payload")?;
+        protocol::decode_block(&payload, rows.len() * cols.len())
+    }
+
+    /// Run one block job on a worker (`EXECB`): the worker assembles the
+    /// block from its own bands plus the `inline` rows (positions into
+    /// `rows` it does not own), runs the atom co-clustering, and returns
+    /// the resulting atoms over global ids.
+    pub fn exec_block(
+        &mut self,
+        name: &str,
+        method: &str,
+        k: usize,
+        seed: u64,
+        rows: &[usize],
+        cols: &[usize],
+        inline: &[(u32, Vec<f32>)],
+    ) -> Result<Vec<Cocluster>> {
+        protocol::ensure_token("name", name)?;
+        protocol::ensure_token("method", method)?;
+        let payload = protocol::encode_exec_payload(rows, cols, inline)?;
+        self.send_line(&format!(
+            "EXECB name={name} method={method} k={k} seed={seed} rows={} cols={} inline={}",
+            rows.len(),
+            cols.len(),
+            inline.len()
+        ))?;
+        self.writer.write_all(&payload)?;
+        self.writer.flush()?;
+        let header = self.read_line()?;
+        let map = Self::header_map(&header)?;
+        let clusters: usize = map.get("clusters").context("missing clusters")?.parse()?;
+        let bytes: usize = map.get("bytes").context("missing bytes")?.parse()?;
+        let mut body = vec![0u8; bytes];
+        self.reader.read_exact(&mut body).context("read exec atoms payload")?;
+        protocol::decode_atoms(&body, clusters)
+    }
+
+    /// Ask a shard router about its topology (`ROUTE`); a worker node
+    /// answers this with a typed error.
+    pub fn route(&mut self) -> Result<BTreeMap<String, String>> {
+        self.kv_reply("ROUTE")
     }
 }

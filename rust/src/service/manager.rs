@@ -19,10 +19,10 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::Stats;
-use crate::matrix::Matrix;
+use crate::matrix::{DenseMatrix, Matrix};
 use crate::pipeline::{AtomKind, Lamc, LamcConfig};
 use crate::rng::{mix64 as mix, mix64_str as mix_str};
-use crate::store::MatrixRef;
+use crate::store::{IoCounters, MatrixRef, ShardManifest, StoreReader};
 
 use super::cache::{CacheKey, JobOutput, ResultCache};
 
@@ -308,8 +308,126 @@ struct MatrixEntry {
     fingerprint: u64,
 }
 
+/// One row band this worker owns, with its open store reader.
+pub struct ShardBand {
+    pub row_lo: usize,
+    pub row_hi: usize,
+    pub reader: Arc<StoreReader>,
+}
+
+/// The bands of one sharded matrix registered on this worker (`lamc
+/// serve --shards`). A worker may own any subset of a matrix's bands;
+/// the same band on several workers is replication, which is what lets
+/// the router's retry-once policy succeed after a node loss.
+pub struct ShardSet {
+    /// Parent matrix shape — not the sum of owned bands.
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: u64,
+    pub sparse: bool,
+    /// Parent store content fingerprint; the router refuses topologies
+    /// whose workers disagree on it.
+    pub fingerprint: u64,
+    /// Owned bands, sorted by `row_lo`, pairwise disjoint.
+    pub bands: Vec<ShardBand>,
+}
+
+impl ShardSet {
+    /// `(row_lo, row_hi)` per owned band, ascending.
+    pub fn band_spans(&self) -> Vec<(usize, usize)> {
+        self.bands.iter().map(|b| (b.row_lo, b.row_hi)).collect()
+    }
+
+    /// Index of the owned band containing `row`, if any.
+    pub fn owning_band(&self, row: usize) -> Option<usize> {
+        let i = self.bands.partition_point(|b| b.row_hi <= row);
+        (i < self.bands.len() && self.bands[i].row_lo <= row && row < self.bands[i].row_hi)
+            .then_some(i)
+    }
+
+    /// Gather a dense block of owned rows (`GATHERB`): every requested
+    /// row must live in one of this worker's bands.
+    pub fn gather(&self, rows: &[usize], cols: &[usize]) -> Result<DenseMatrix> {
+        self.assemble_block(rows, cols, &[])
+    }
+
+    /// Assemble an execution block (`EXECB`): owned rows are gathered
+    /// from the local shard stores, non-owned rows must arrive inline as
+    /// `(position-in-rows, values)`. Rows stay in the job's sampled
+    /// order — the exact block the single-node gather would produce.
+    pub fn assemble_block(
+        &self,
+        rows: &[usize],
+        cols: &[usize],
+        inline: &[(u32, Vec<f32>)],
+    ) -> Result<DenseMatrix> {
+        let (nr, nc) = (rows.len(), cols.len());
+        anyhow::ensure!(nr > 0 && nc > 0, "empty block");
+        if let Some(&c) = cols.iter().find(|&&c| c >= self.cols) {
+            bail!("column {c} out of range (matrix has {} columns)", self.cols);
+        }
+        let mut data = vec![0.0f32; nr * nc];
+        let mut covered = vec![false; nr];
+        for (pos, values) in inline {
+            let p = *pos as usize;
+            anyhow::ensure!(p < nr, "inline position {p} out of range");
+            anyhow::ensure!(!covered[p], "duplicate inline position {p}");
+            anyhow::ensure!(
+                values.len() == nc,
+                "inline row has {} values, block has {nc} columns",
+                values.len()
+            );
+            data[p * nc..(p + 1) * nc].copy_from_slice(values);
+            covered[p] = true;
+        }
+        // Group the remaining positions per owned band so each band
+        // answers with one `tile` call (chunk decode amortized across
+        // every row the job takes from that band).
+        let mut per_band: Vec<Vec<usize>> = vec![Vec::new(); self.bands.len()];
+        for (p, &row) in rows.iter().enumerate() {
+            if covered[p] {
+                continue;
+            }
+            let b = self.owning_band(row).with_context(|| {
+                format!("row {row} is not owned by this worker and was not shipped inline")
+            })?;
+            per_band[b].push(p);
+        }
+        for (b, positions) in per_band.iter().enumerate() {
+            if positions.is_empty() {
+                continue;
+            }
+            let band = &self.bands[b];
+            let local: Vec<usize> = positions.iter().map(|&p| rows[p] - band.row_lo).collect();
+            let tile = band.reader.tile(&local, cols)?;
+            for (i, &p) in positions.iter().enumerate() {
+                data[p * nc..(p + 1) * nc].copy_from_slice(&tile.data()[i * nc..(i + 1) * nc]);
+            }
+        }
+        Ok(DenseMatrix::from_vec(nr, nc, data))
+    }
+
+    /// Claim the I/O delta across every owned band's reader (for the
+    /// per-node stats fold — see `StatsSnapshot::merged`).
+    pub fn take_io_delta(&self) -> IoCounters {
+        let mut total = IoCounters::default();
+        for band in &self.bands {
+            let d = band.reader.take_io_delta();
+            total.chunks_read += d.chunks_read;
+            total.bytes_read += d.bytes_read;
+            total.cache_hits += d.cache_hits;
+            total.prefetch_issued += d.prefetch_issued;
+            total.prefetch_hits += d.prefetch_hits;
+            total.prefetch_wasted_bytes += d.prefetch_wasted_bytes;
+        }
+        total
+    }
+}
+
 struct Inner {
     matrices: RwLock<HashMap<String, MatrixEntry>>,
+    /// Sharded matrices this worker holds bands of (`serve --shards`).
+    shard_sets: RwLock<HashMap<String, Arc<ShardSet>>>,
     jobs: RwLock<HashMap<u64, JobRecord>>,
     queue: BoundedQueue<u64>,
     cache: ResultCache,
@@ -340,6 +458,7 @@ impl ServiceManager {
         };
         let inner = Arc::new(Inner {
             matrices: RwLock::new(HashMap::new()),
+            shard_sets: RwLock::new(HashMap::new()),
             jobs: RwLock::new(HashMap::new()),
             queue: BoundedQueue::new(config.queue_capacity),
             cache,
@@ -419,6 +538,89 @@ impl ServiceManager {
                 Ok(shape)
             }
         }
+    }
+
+    /// Register this worker's bands of a sharded matrix from its
+    /// manifest. `indices` picks which bands (default: all of them —
+    /// full replication). Duplicate indices are a typed error: silently
+    /// opening the same band twice would double its I/O accounting and
+    /// mask a mis-written `--shards` flag.
+    pub fn register_shards(
+        &self,
+        name: &str,
+        manifest_path: &Path,
+        indices: Option<&[usize]>,
+    ) -> Result<Arc<ShardSet>> {
+        let manifest = ShardManifest::load(manifest_path)?;
+        let selected: Vec<usize> = match indices {
+            Some(list) => list.to_vec(),
+            None => (0..manifest.entries.len()).collect(),
+        };
+        anyhow::ensure!(!selected.is_empty(), "no shard indices selected for '{name}'");
+        let mut seen = std::collections::HashSet::new();
+        let mut bands = Vec::with_capacity(selected.len());
+        for &i in &selected {
+            anyhow::ensure!(
+                seen.insert(i),
+                "duplicate band ownership: shard index {i} of '{name}' registered twice"
+            );
+            let entry = manifest.entries.get(i).with_context(|| {
+                format!("shard index {i} out of range ('{name}' has {} shards)", manifest.entries.len())
+            })?;
+            let path = manifest.shard_path(entry);
+            let reader = StoreReader::open(&path)
+                .with_context(|| format!("open shard {i} of '{name}'"))?;
+            anyhow::ensure!(
+                reader.rows() == entry.row_hi - entry.row_lo && reader.cols() == manifest.cols,
+                "shard {i} of '{name}' is {}x{}, manifest says {}x{}",
+                reader.rows(),
+                reader.cols(),
+                entry.row_hi - entry.row_lo,
+                manifest.cols
+            );
+            bands.push(ShardBand {
+                row_lo: entry.row_lo,
+                row_hi: entry.row_hi,
+                reader: Arc::new(reader),
+            });
+        }
+        bands.sort_by_key(|b| b.row_lo);
+        let set = Arc::new(ShardSet {
+            rows: manifest.rows,
+            cols: manifest.cols,
+            nnz: manifest.nnz,
+            sparse: manifest.sparse,
+            fingerprint: manifest.fingerprint,
+            bands,
+        });
+        crate::log_info!(
+            "registered shard set '{name}': {} x {}, {} band(s) of {}",
+            set.rows,
+            set.cols,
+            set.bands.len(),
+            manifest.entries.len()
+        );
+        self.inner.shard_sets.write().unwrap().insert(name.to_string(), Arc::clone(&set));
+        Ok(set)
+    }
+
+    /// The shard set registered under `name`, if any.
+    pub fn shard_set(&self, name: &str) -> Option<Arc<ShardSet>> {
+        self.inner.shard_sets.read().unwrap().get(name).cloned()
+    }
+
+    /// Every registered shard set, sorted by name.
+    pub fn shard_sets(&self) -> Vec<(String, Arc<ShardSet>)> {
+        let mut sets: Vec<(String, Arc<ShardSet>)> = self
+            .inner
+            .shard_sets
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(n, s)| (n.clone(), Arc::clone(s)))
+            .collect();
+        sets.sort_by(|a, b| a.0.cmp(&b.0));
+        sets
     }
 
     /// Names of registered matrices (sorted).
@@ -827,6 +1029,77 @@ mod tests {
         mgr.wait(id, Duration::from_secs(120)).unwrap();
         assert_eq!(mgr.sweep_jobs(), 0);
         assert!(mgr.job(id).is_some());
+        mgr.shutdown();
+    }
+
+    fn sharded_fixture(name: &str, rows: usize, cols: usize, n: usize) -> (PathBuf, Matrix) {
+        let dir = std::env::temp_dir().join(format!("lamc_mgr_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let matrix = small_matrix(77);
+        let matrix = match (rows, cols) {
+            (60, 50) => matrix,
+            _ => {
+                let mut rng = crate::rng::Xoshiro256::seed_from(rows as u64 ^ cols as u64);
+                let data: Vec<f32> = (0..rows * cols).map(|_| rng.next_f32()).collect();
+                Matrix::Dense(DenseMatrix::from_vec(rows, cols, data))
+            }
+        };
+        let store = dir.join("m.lamc3");
+        crate::store::chunk::pack_matrix_tiled(&matrix, &store, 16, 16).unwrap();
+        let reader = StoreReader::open(&store).unwrap();
+        let (manifest_path, _) =
+            crate::store::shard_store(&reader, &dir.join("shards"), "m", n).unwrap();
+        (manifest_path, matrix)
+    }
+
+    #[test]
+    fn register_shards_rejects_duplicate_band_ownership() {
+        let (manifest_path, _) = sharded_fixture("dup", 60, 50, 2);
+        let mgr = ServiceManager::new(ServiceConfig { runners: 0, ..Default::default() });
+        let err = mgr.register_shards("m", &manifest_path, Some(&[0, 0])).unwrap_err();
+        assert!(err.to_string().contains("duplicate band ownership"), "{err}");
+        let err = mgr.register_shards("m", &manifest_path, Some(&[7])).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        assert!(mgr.shard_set("m").is_none(), "failed registration left no set behind");
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn shard_set_assembles_blocks_with_inline_rows() {
+        let (manifest_path, matrix) = sharded_fixture("assemble", 60, 50, 3);
+        let mgr = ServiceManager::new(ServiceConfig { runners: 0, ..Default::default() });
+        // Own only the middle band; other rows must arrive inline.
+        let set = mgr.register_shards("m", &manifest_path, Some(&[1])).unwrap();
+        assert_eq!(set.rows, 60);
+        assert_eq!(set.cols, 50);
+        let (lo, hi) = set.band_spans()[0];
+
+        let dense = match &matrix {
+            Matrix::Dense(d) => d,
+            _ => unreachable!(),
+        };
+        let cols: Vec<usize> = vec![3, 7, 11, 40];
+        let rows: Vec<usize> = vec![lo + 1, 2, lo, 59];
+        let inline: Vec<(u32, Vec<f32>)> = rows
+            .iter()
+            .enumerate()
+            .filter(|(_, &r)| r < lo || r >= hi)
+            .map(|(p, &r)| (p as u32, cols.iter().map(|&c| dense.get(r, c)).collect()))
+            .collect();
+        let block = set.assemble_block(&rows, &cols, &inline).unwrap();
+        for (p, &r) in rows.iter().enumerate() {
+            for (q, &c) in cols.iter().enumerate() {
+                assert_eq!(block.get(p, q), dense.get(r, c), "({r},{c})");
+            }
+        }
+        // I/O from the owned-band tile read is observable and consumed.
+        let io = set.take_io_delta();
+        assert!(io.chunks_read > 0 || io.cache_hits > 0, "owned rows came off the store");
+
+        // A non-owned row that is not shipped inline is a typed error.
+        let err = set.assemble_block(&rows, &cols, &[]).unwrap_err();
+        assert!(err.to_string().contains("not owned by this worker"), "{err}");
         mgr.shutdown();
     }
 

@@ -31,9 +31,18 @@
 //!   clients fall back to text `RESULT` against older servers; `LOAD`
 //!   accepts `dataset=`, `path=` or `store=` sources.
 //!
+//! * [`shard`] — a shard router fronting multiple worker nodes: each
+//!   worker serves row bands of a sharded store (`lamc serve --shards`,
+//!   advertised over `HELLO`/`SHARDS`), and a [`ShardRouter`] scatters
+//!   block jobs by band ownership (`GATHERB`/`EXECB`), reduces partial
+//!   co-cluster sets through one global consensus merge, and retries
+//!   jobs lost to dead workers — with labels byte-identical to a
+//!   single-node run.
+//!
 //! Wire format and operational knobs are documented in
 //! `docs/SERVICE.md`; the `lamc serve` / `lamc submit` / `lamc status`
-//! CLI commands are thin wrappers over these types.
+//! / `lamc shard` / `lamc route` CLI commands are thin wrappers over
+//! these types.
 
 pub mod cache;
 pub mod client;
@@ -41,9 +50,14 @@ pub mod manager;
 pub mod pool;
 pub mod protocol;
 pub mod server;
+pub mod shard;
 
 pub use cache::{CacheKey, JobOutput, ResultCache};
 pub use client::{ResultReply, ServiceClient, StatusReply};
-pub use manager::{BoundedQueue, JobRecord, JobSpec, JobState, QueueRejection, ServiceConfig, ServiceManager};
+pub use manager::{
+    BoundedQueue, JobRecord, JobSpec, JobState, QueueRejection, ServiceConfig, ServiceManager,
+    ShardBand, ShardSet,
+};
 pub use pool::WorkerPool;
 pub use server::ServiceServer;
+pub use shard::{RoutedRun, ShardError, ShardRouter, ShardRouterConfig, ShardServer};

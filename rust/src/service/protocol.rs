@@ -28,9 +28,20 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use super::manager::JobSpec;
+use crate::merge::Cocluster;
+
+/// Wire protocol revision. Bumped on any framing change; `HELLO`
+/// exchanges it so a shard router refuses to scatter work to a worker
+/// speaking a different revision instead of desyncing mid-round.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Hard ceiling on any binary request payload (ids + inline rows). A
+/// router-to-worker block at this size would already be mis-planned, so
+/// anything larger is treated as a framing error, not an allocation.
+pub const MAX_BINARY_PAYLOAD_BYTES: usize = 1 << 30;
 
 /// A parsed client request.
 #[derive(Clone, Debug, PartialEq)]
@@ -58,6 +69,79 @@ pub enum Request {
         seed: u64,
     },
     Shutdown,
+    /// Version handshake (`HELLO proto=1 version=0.6.0`). Workers
+    /// reject a different `proto`; the shard router additionally
+    /// requires an identical crate `version` before trusting
+    /// byte-identity across nodes.
+    Hello { proto: u64, version: String },
+    /// List the shard sets registered on this worker (one `SET` line
+    /// per matrix, then `END`).
+    Shards,
+    /// Shard-router introspection (`OK workers=… live=…`). A plain
+    /// worker answers a typed error.
+    Route,
+    /// Fetch a dense sub-block of a shard set. The request line is
+    /// followed by a binary payload of `rows` + `cols` global ids
+    /// (see [`encode_labels_binary`] — u32 LE each, u64 checksum);
+    /// the response is an `OK rows=… cols=… bytes=…` header plus an
+    /// [`encode_block`] payload.
+    GatherBinary { name: String, rows: usize, cols: usize },
+    /// Execute one block job on the worker: the request line is
+    /// followed by an [`encode_exec_payload`] binary payload (global
+    /// row/col ids plus `inline` rows the worker does not own); the
+    /// response is `OK clusters=… bytes=…` plus an [`encode_atoms`]
+    /// payload of the resulting atom co-clusters.
+    ExecBinary {
+        name: String,
+        method: String,
+        k: usize,
+        seed: u64,
+        rows: usize,
+        cols: usize,
+        inline: usize,
+    },
+}
+
+impl Request {
+    /// Byte length of the binary payload that follows the request line,
+    /// if this verb carries one. Checked arithmetic plus the
+    /// [`MAX_BINARY_PAYLOAD_BYTES`] cap: a corrupt header must fail
+    /// here, not inside a giant allocation.
+    pub fn binary_payload_len(&self) -> Result<Option<usize>> {
+        let len = match self {
+            Request::GatherBinary { rows, cols, .. } => id_payload_len(*rows, *cols)?,
+            Request::ExecBinary { rows, cols, inline, .. } => {
+                exec_payload_len(*rows, *cols, *inline)?
+            }
+            _ => return Ok(None),
+        };
+        Ok(Some(len))
+    }
+}
+
+fn id_payload_len(rows: usize, cols: usize) -> Result<usize> {
+    let len = rows
+        .checked_add(cols)
+        .and_then(|n| n.checked_mul(4))
+        .and_then(|n| n.checked_add(8))
+        .context("id payload length overflows")?;
+    ensure!(len <= MAX_BINARY_PAYLOAD_BYTES, "id payload of {len} bytes exceeds the cap");
+    Ok(len)
+}
+
+fn exec_payload_len(rows: usize, cols: usize, inline: usize) -> Result<usize> {
+    let per_inline = cols
+        .checked_mul(4)
+        .and_then(|n| n.checked_add(4))
+        .context("inline row length overflows")?;
+    let len = id_payload_len(rows, cols)?
+        .checked_sub(8)
+        .unwrap()
+        .checked_add(inline.checked_mul(per_inline).context("inline payload overflows")?)
+        .and_then(|n| n.checked_add(8))
+        .context("exec payload length overflows")?;
+    ensure!(len <= MAX_BINARY_PAYLOAD_BYTES, "exec payload of {len} bytes exceeds the cap");
+    Ok(len)
 }
 
 /// Split `k=v` tokens into a map, rejecting malformed tokens.
@@ -175,7 +259,65 @@ pub fn parse_request(line: &str) -> Result<Request> {
             }
             Ok(Request::Shutdown)
         }
-        other => bail!("unknown verb '{other}' (want SUBMIT|STATUS|RESULT|RESULTB|STATS|LOAD|SHUTDOWN)"),
+        "HELLO" => {
+            let map = kv_pairs(&rest)?;
+            check_known(&map, &["proto", "version"])?;
+            Ok(Request::Hello {
+                proto: get_u64(&map, "proto")?.context("missing proto=")?,
+                version: map.get("version").context("missing version=")?.clone(),
+            })
+        }
+        "SHARDS" => {
+            if !rest.is_empty() {
+                bail!("SHARDS takes no fields");
+            }
+            Ok(Request::Shards)
+        }
+        "ROUTE" => {
+            if !rest.is_empty() {
+                bail!("ROUTE takes no fields");
+            }
+            Ok(Request::Route)
+        }
+        "GATHERB" => {
+            let map = kv_pairs(&rest)?;
+            check_known(&map, &["name", "rows", "cols"])?;
+            let rows = get_usize(&map, "rows")?.context("missing rows=")?;
+            let cols = get_usize(&map, "cols")?.context("missing cols=")?;
+            if rows == 0 || cols == 0 {
+                bail!("GATHERB needs rows>=1 and cols>=1");
+            }
+            Ok(Request::GatherBinary {
+                name: map.get("name").context("missing name=")?.clone(),
+                rows,
+                cols,
+            })
+        }
+        "EXECB" => {
+            let map = kv_pairs(&rest)?;
+            check_known(&map, &["name", "method", "k", "seed", "rows", "cols", "inline"])?;
+            let rows = get_usize(&map, "rows")?.context("missing rows=")?;
+            let cols = get_usize(&map, "cols")?.context("missing cols=")?;
+            let inline = get_usize(&map, "inline")?.unwrap_or(0);
+            if rows == 0 || cols == 0 {
+                bail!("EXECB needs rows>=1 and cols>=1");
+            }
+            if inline > rows {
+                bail!("EXECB inline={inline} exceeds rows={rows}");
+            }
+            Ok(Request::ExecBinary {
+                name: map.get("name").context("missing name=")?.clone(),
+                method: map.get("method").context("missing method=")?.clone(),
+                k: get_usize(&map, "k")?.context("missing k=")?,
+                seed: get_u64(&map, "seed")?.context("missing seed=")?,
+                rows,
+                cols,
+                inline,
+            })
+        }
+        other => bail!(
+            "unknown verb '{other}' (want SUBMIT|STATUS|RESULT|RESULTB|STATS|LOAD|HELLO|SHARDS|GATHERB|EXECB|ROUTE|SHUTDOWN)"
+        ),
     }
 }
 
@@ -261,6 +403,233 @@ pub fn decode_labels(s: &str) -> Result<Vec<usize>> {
     s.split(',')
         .map(|t| t.parse::<usize>().with_context(|| format!("bad label '{t}'")))
         .collect()
+}
+
+/// One shard set as advertised by a worker's `SHARDS` reply: parent
+/// matrix identity plus the row bands this worker owns.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSetInfo {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: u64,
+    pub sparse: bool,
+    /// Parent store content fingerprint — all workers sharding the
+    /// same matrix must agree on it.
+    pub fingerprint: u64,
+    /// Owned bands as `(row_lo, row_hi)`, sorted by `row_lo`.
+    pub bands: Vec<(usize, usize)>,
+}
+
+/// Encode one `SET` line of a `SHARDS` reply.
+pub fn encode_shard_set(info: &ShardSetInfo) -> Result<String> {
+    ensure_token("name", &info.name)?;
+    ensure!(!info.bands.is_empty(), "shard set '{}' has no bands", info.name);
+    let bands: Vec<String> =
+        info.bands.iter().map(|&(lo, hi)| format!("{lo}-{hi}")).collect();
+    Ok(format!(
+        "SET name={} rows={} cols={} nnz={} sparse={} fingerprint={:016x} bands={}",
+        info.name,
+        info.rows,
+        info.cols,
+        info.nnz,
+        u64::from(info.sparse),
+        info.fingerprint,
+        bands.join(";")
+    ))
+}
+
+/// Parse one `SET` line (the worker-registration/discovery framing the
+/// router trusts for topology building — malformed lines are typed
+/// errors, never silently-skipped bands).
+pub fn parse_shard_set(line: &str) -> Result<ShardSetInfo> {
+    let mut tokens = line.trim().split_whitespace();
+    ensure!(tokens.next() == Some("SET"), "expected a SET line, got '{}'", line.trim());
+    let rest: Vec<&str> = tokens.collect();
+    let map = kv_pairs(&rest)?;
+    check_known(&map, &["name", "rows", "cols", "nnz", "sparse", "fingerprint", "bands"])?;
+    let mut bands = Vec::new();
+    for span in map.get("bands").context("missing bands=")?.split(';') {
+        let (lo, hi) = span
+            .split_once('-')
+            .with_context(|| format!("malformed band '{span}' (want lo-hi)"))?;
+        let lo: usize = lo.parse().with_context(|| format!("bad band start '{lo}'"))?;
+        let hi: usize = hi.parse().with_context(|| format!("bad band end '{hi}'"))?;
+        ensure!(lo < hi, "band {lo}-{hi} is empty");
+        bands.push((lo, hi));
+    }
+    ensure!(!bands.is_empty(), "missing bands=");
+    ensure!(
+        bands.windows(2).all(|w| w[0].1 <= w[1].0),
+        "bands are not sorted and disjoint"
+    );
+    let fingerprint = map.get("fingerprint").context("missing fingerprint=")?;
+    Ok(ShardSetInfo {
+        name: map.get("name").context("missing name=")?.clone(),
+        rows: get_usize(&map, "rows")?.context("missing rows=")?,
+        cols: get_usize(&map, "cols")?.context("missing cols=")?,
+        nnz: get_u64(&map, "nnz")?.context("missing nnz=")?,
+        sparse: get_u64(&map, "sparse")?.context("missing sparse=")? != 0,
+        fingerprint: u64::from_str_radix(fingerprint, 16)
+            .with_context(|| format!("fingerprint '{fingerprint}' is not hex"))?,
+        bands,
+    })
+}
+
+/// Encode a dense block as a `GATHERB` response payload: f32 LE values
+/// in row-major order, then a trailing u64 LE checksum.
+pub fn encode_block(values: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(values.len() * 4 + 8);
+    for &v in values {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let ck = crate::store::checksum_bytes(&out);
+    out.extend_from_slice(&ck.to_le_bytes());
+    out
+}
+
+/// Decode a `GATHERB` response payload (`values` = rows·cols from the
+/// header line).
+pub fn decode_block(bytes: &[u8], values: usize) -> Result<Vec<f32>> {
+    let want = values * 4 + 8;
+    ensure!(bytes.len() == want, "block payload has {} bytes, want {want}", bytes.len());
+    let (data, ck) = bytes.split_at(bytes.len() - 8);
+    ensure!(
+        crate::store::checksum_bytes(data) == u64::from_le_bytes(ck.try_into().unwrap()),
+        "block payload failed its checksum"
+    );
+    Ok(data
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+/// Encode an `EXECB` request payload: `rows` global row ids then `cols`
+/// global col ids (u32 LE each), then `inline.len()` inline rows — each
+/// a u32 LE *position into the job's row list* followed by `cols` f32
+/// LE values — then a trailing u64 LE checksum.
+pub fn encode_exec_payload(
+    rows: &[usize],
+    cols: &[usize],
+    inline: &[(u32, Vec<f32>)],
+) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(exec_payload_len(rows.len(), cols.len(), inline.len())?);
+    for &id in rows.iter().chain(cols) {
+        let id32 = u32::try_from(id).map_err(|_| anyhow::anyhow!("id {id} exceeds u32 range"))?;
+        out.extend_from_slice(&id32.to_le_bytes());
+    }
+    for (pos, values) in inline {
+        ensure!(
+            (*pos as usize) < rows.len(),
+            "inline position {pos} out of range (job has {} rows)",
+            rows.len()
+        );
+        ensure!(
+            values.len() == cols.len(),
+            "inline row has {} values, job has {} columns",
+            values.len(),
+            cols.len()
+        );
+        out.extend_from_slice(&pos.to_le_bytes());
+        for &v in values {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let ck = crate::store::checksum_bytes(&out);
+    out.extend_from_slice(&ck.to_le_bytes());
+    Ok(out)
+}
+
+/// Decode an `EXECB` request payload against its header counts.
+/// Returns `(row_ids, col_ids, inline_rows)`.
+#[allow(clippy::type_complexity)]
+pub fn decode_exec_payload(
+    bytes: &[u8],
+    rows: usize,
+    cols: usize,
+    inline: usize,
+) -> Result<(Vec<usize>, Vec<usize>, Vec<(u32, Vec<f32>)>)> {
+    let want = exec_payload_len(rows, cols, inline)?;
+    ensure!(bytes.len() == want, "exec payload has {} bytes, want {want}", bytes.len());
+    let (body, ck) = bytes.split_at(bytes.len() - 8);
+    ensure!(
+        crate::store::checksum_bytes(body) == u64::from_le_bytes(ck.try_into().unwrap()),
+        "exec payload failed its checksum"
+    );
+    fn take_u32(body: &[u8], cur: &mut usize) -> u32 {
+        let v = u32::from_le_bytes(body[*cur..*cur + 4].try_into().unwrap());
+        *cur += 4;
+        v
+    }
+    let mut cur = 0usize;
+    let row_ids: Vec<usize> = (0..rows).map(|_| take_u32(body, &mut cur) as usize).collect();
+    let col_ids: Vec<usize> = (0..cols).map(|_| take_u32(body, &mut cur) as usize).collect();
+    let mut inline_rows = Vec::with_capacity(inline);
+    let mut seen = vec![false; rows];
+    for _ in 0..inline {
+        let pos = take_u32(body, &mut cur);
+        ensure!((pos as usize) < rows, "inline position {pos} out of range");
+        ensure!(!seen[pos as usize], "duplicate inline position {pos}");
+        seen[pos as usize] = true;
+        let values: Vec<f32> = (0..cols)
+            .map(|_| f32::from_bits(take_u32(body, &mut cur)))
+            .collect();
+        inline_rows.push((pos, values));
+    }
+    ensure!(cur == body.len(), "exec payload has {} trailing bytes", body.len() - cur);
+    Ok((row_ids, col_ids, inline_rows))
+}
+
+/// Encode atom co-clusters as an `EXECB` response payload. Per cluster:
+/// u32 LE row count, u32 LE col count, the sorted row ids then col ids
+/// (u32 LE each), and the f64 LE objective; then a trailing u64 LE
+/// checksum. Only fresh atoms ship (vote 1.0 everywhere, weight 1.0),
+/// so [`decode_atoms`] rebuilds them through [`Cocluster::atom`] and
+/// the wire hop is byte-lossless.
+pub fn encode_atoms(atoms: &[Cocluster]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for atom in atoms {
+        out.extend_from_slice(&(atom.rows.len() as u32).to_le_bytes());
+        out.extend_from_slice(&(atom.cols.len() as u32).to_le_bytes());
+        for &id in atom.rows.iter().chain(&atom.cols) {
+            out.extend_from_slice(&id.to_le_bytes());
+        }
+        out.extend_from_slice(&atom.quality.to_le_bytes());
+    }
+    let ck = crate::store::checksum_bytes(&out);
+    out.extend_from_slice(&ck.to_le_bytes());
+    out
+}
+
+/// Decode an `EXECB` response payload (`clusters` from the header).
+pub fn decode_atoms(bytes: &[u8], clusters: usize) -> Result<Vec<Cocluster>> {
+    ensure!(bytes.len() >= 8, "atom payload truncated");
+    let (body, ck) = bytes.split_at(bytes.len() - 8);
+    ensure!(
+        crate::store::checksum_bytes(body) == u64::from_le_bytes(ck.try_into().unwrap()),
+        "atom payload failed its checksum"
+    );
+    let mut cur = 0usize;
+    let mut atoms = Vec::with_capacity(clusters);
+    for _ in 0..clusters {
+        ensure!(cur + 8 <= body.len(), "atom payload truncated");
+        let n_rows = u32::from_le_bytes(body[cur..cur + 4].try_into().unwrap()) as usize;
+        let n_cols = u32::from_le_bytes(body[cur + 4..cur + 8].try_into().unwrap()) as usize;
+        cur += 8;
+        let need = (n_rows + n_cols) * 4 + 8;
+        ensure!(cur + need <= body.len(), "atom payload truncated");
+        let mut ids = body[cur..cur + (n_rows + n_cols) * 4]
+            .chunks_exact(4)
+            .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+        let rows: Vec<u32> = ids.by_ref().take(n_rows).collect();
+        let cols: Vec<u32> = ids.collect();
+        cur += (n_rows + n_cols) * 4;
+        let quality = f64::from_le_bytes(body[cur..cur + 8].try_into().unwrap());
+        cur += 8;
+        atoms.push(Cocluster::atom(rows, cols, quality));
+    }
+    ensure!(cur == body.len(), "atom payload has {} trailing bytes", body.len() - cur);
+    Ok(atoms)
 }
 
 /// First line of an error response.
@@ -396,5 +765,146 @@ mod tests {
         assert!(check_ok("ERR boom").is_err());
         assert!(check_ok("??").is_err());
         assert!(!err_line("a\nb").contains('\n'));
+    }
+
+    #[test]
+    fn shard_verbs_parse() {
+        assert_eq!(
+            parse_request("HELLO proto=1 version=0.1.0").unwrap(),
+            Request::Hello { proto: 1, version: "0.1.0".into() }
+        );
+        assert_eq!(parse_request("SHARDS").unwrap(), Request::Shards);
+        assert_eq!(parse_request("ROUTE").unwrap(), Request::Route);
+        assert_eq!(
+            parse_request("GATHERB name=m rows=3 cols=2").unwrap(),
+            Request::GatherBinary { name: "m".into(), rows: 3, cols: 2 }
+        );
+        assert_eq!(
+            parse_request("EXECB name=m method=scc k=3 seed=9 rows=4 cols=2 inline=1").unwrap(),
+            Request::ExecBinary {
+                name: "m".into(),
+                method: "scc".into(),
+                k: 3,
+                seed: 9,
+                rows: 4,
+                cols: 2,
+                inline: 1,
+            }
+        );
+    }
+
+    #[test]
+    fn malformed_shard_verbs_error() {
+        // ROUTE/SHARDS are field-free; trailing junk is a typed error.
+        assert!(parse_request("ROUTE workers=2").is_err());
+        assert!(parse_request("SHARDS all=1").is_err());
+        assert!(parse_request("HELLO").is_err(), "proto required");
+        assert!(parse_request("HELLO proto=x version=1").is_err());
+        assert!(parse_request("GATHERB name=m rows=0 cols=2").is_err(), "empty block");
+        assert!(parse_request("GATHERB rows=1 cols=1").is_err(), "name required");
+        assert!(parse_request("EXECB name=m method=scc k=3 seed=9 rows=2 cols=2 inline=5").is_err());
+        assert!(parse_request("EXECB name=m method=scc seed=9 rows=2 cols=2").is_err(), "k required");
+        assert!(parse_request("EXECB name=m method=scc k=3 seed=9 rows=2 cols=2 bogus=1").is_err());
+    }
+
+    #[test]
+    fn binary_payload_lengths_are_checked() {
+        let gather = parse_request("GATHERB name=m rows=3 cols=2").unwrap();
+        assert_eq!(gather.binary_payload_len().unwrap(), Some(5 * 4 + 8));
+        let exec = parse_request("EXECB name=m method=scc k=2 seed=1 rows=4 cols=3 inline=2").unwrap();
+        assert_eq!(exec.binary_payload_len().unwrap(), Some(7 * 4 + 2 * (4 + 12) + 8));
+        assert_eq!(parse_request("STATS").unwrap().binary_payload_len().unwrap(), None);
+        // A corrupt header asking for an absurd payload fails the cap
+        // instead of reaching an allocation.
+        let huge = Request::GatherBinary { name: "m".into(), rows: usize::MAX / 8, cols: 1 };
+        assert!(huge.binary_payload_len().is_err());
+    }
+
+    #[test]
+    fn shard_set_line_round_trip() {
+        let info = ShardSetInfo {
+            name: "cc".into(),
+            rows: 300,
+            cols: 1000,
+            nnz: 37_000,
+            sparse: true,
+            fingerprint: 0x00a1_b2c3_d4e5_f607,
+            bands: vec![(0, 128), (256, 300)],
+        };
+        let line = encode_shard_set(&info).unwrap();
+        assert_eq!(parse_shard_set(&line).unwrap(), info);
+    }
+
+    #[test]
+    fn malformed_shard_set_lines_error() {
+        assert!(parse_shard_set("OK nope").is_err(), "not a SET line");
+        assert!(parse_shard_set("SET name=m rows=4 cols=4 nnz=16 sparse=0 fingerprint=ff").is_err(), "bands required");
+        let base = "SET name=m rows=4 cols=4 nnz=16 sparse=0 fingerprint=ff";
+        assert!(parse_shard_set(&format!("{base} bands=5")).is_err(), "band needs lo-hi");
+        assert!(parse_shard_set(&format!("{base} bands=3-3")).is_err(), "empty band");
+        assert!(parse_shard_set(&format!("{base} bands=2-4;0-2")).is_err(), "unsorted bands");
+        assert!(parse_shard_set(&format!("{base} bands=0-3;2-4")).is_err(), "overlapping bands");
+        assert!(
+            parse_shard_set("SET name=m rows=4 cols=4 nnz=16 sparse=0 fingerprint=zz bands=0-4").is_err(),
+            "fingerprint must be hex"
+        );
+    }
+
+    #[test]
+    fn block_codec_round_trip_and_damage() {
+        let values = vec![1.5f32, -2.25, 0.0, 3.125, f32::MIN_POSITIVE, -0.0];
+        let bytes = encode_block(&values);
+        let back = decode_block(&bytes, values.len()).unwrap();
+        // Byte-exact, not just approximately equal: -0.0 keeps its sign bit.
+        assert_eq!(
+            back.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            values.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert!(decode_block(&bytes, values.len() + 1).is_err(), "length mismatch");
+        let mut bad = bytes.clone();
+        bad[2] ^= 0x40;
+        assert!(decode_block(&bad, values.len()).is_err(), "checksum catches bit flips");
+    }
+
+    #[test]
+    fn exec_payload_round_trip_and_damage() {
+        let rows = vec![10usize, 40, 41, 99];
+        let cols = vec![3usize, 7];
+        let inline = vec![(1u32, vec![0.5f32, -1.5]), (3u32, vec![2.0, 4.0])];
+        let bytes = encode_exec_payload(&rows, &cols, &inline).unwrap();
+        let (r2, c2, i2) = decode_exec_payload(&bytes, 4, 2, 2).unwrap();
+        assert_eq!(r2, rows);
+        assert_eq!(c2, cols);
+        assert_eq!(i2, inline);
+
+        // Duplicate inline position is rejected at decode.
+        let dup = vec![(1u32, vec![0.5f32, -1.5]), (1u32, vec![2.0, 4.0])];
+        let bytes = encode_exec_payload(&rows, &cols, &dup).unwrap();
+        assert!(decode_exec_payload(&bytes, 4, 2, 2).is_err());
+
+        // Out-of-range position is rejected at encode.
+        assert!(encode_exec_payload(&rows, &cols, &[(9, vec![0.0, 0.0])]).is_err());
+        // Width mismatch too.
+        assert!(encode_exec_payload(&rows, &cols, &[(0, vec![0.0])]).is_err());
+    }
+
+    #[test]
+    fn atom_codec_round_trip_and_damage() {
+        let atoms = vec![
+            Cocluster::atom(vec![4, 1, 9], vec![0, 2], -3.5),
+            Cocluster::atom(vec![7], vec![5, 6, 8], 0.25),
+        ];
+        let bytes = encode_atoms(&atoms);
+        let back = decode_atoms(&bytes, atoms.len()).unwrap();
+        assert_eq!(back, atoms, "atoms survive the hop byte-identically");
+
+        assert!(decode_atoms(&bytes, atoms.len() + 1).is_err(), "count mismatch");
+        assert!(decode_atoms(&bytes, atoms.len() - 1).is_err(), "trailing bytes rejected");
+        let mut bad = bytes.clone();
+        bad[4] ^= 0x01;
+        assert!(decode_atoms(&bad, atoms.len()).is_err(), "checksum catches bit flips");
+        assert!(decode_atoms(&[], 0).is_err(), "missing checksum is typed");
+        let empty = encode_atoms(&[]);
+        assert_eq!(decode_atoms(&empty, 0).unwrap(), vec![]);
     }
 }

@@ -7,6 +7,11 @@
 //! PJRT executions, and compiled unconditionally). `SHUTDOWN` stops the
 //! accept loop; in-flight jobs are drained by
 //! [`ServiceManager::shutdown`], which the binary calls after `join`.
+//!
+//! The accept/read/dispatch machinery is generic over a request
+//! handler ([`spawn_accept_loop`]): a worker node and the shard router
+//! ([`super::shard::ShardServer`]) speak the same line protocol through
+//! the same loop and differ only in which verbs they answer.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
@@ -14,11 +19,16 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::coordinator::Router;
+use crate::partition::BlockJob;
+use crate::pipeline::{AtomKind, Lamc};
+
 use super::manager::{JobState, ServiceManager};
-use super::protocol::{self, Request};
+use super::protocol::{self, Request, PROTO_VERSION};
 
 /// A running TCP server bound to a local address.
 pub struct ServiceServer {
@@ -33,31 +43,12 @@ impl ServiceServer {
     /// ephemeral port; the bound address is available via
     /// [`ServiceServer::addr`].
     pub fn spawn(addr: impl ToSocketAddrs, manager: ServiceManager) -> Result<Self> {
-        let listener = TcpListener::bind(addr).context("bind service listener")?;
-        let addr = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let accept_stop = Arc::clone(&stop);
-        let accept_manager = manager.clone();
-        let accept_thread = std::thread::Builder::new()
-            .name("lamc-accept".into())
-            .spawn(move || {
-                for conn in listener.incoming() {
-                    if accept_stop.load(Ordering::SeqCst) {
-                        break;
-                    }
-                    let Ok(stream) = conn else { continue };
-                    let manager = accept_manager.clone();
-                    let stop = Arc::clone(&accept_stop);
-                    // Handler threads are detached: they end when the
-                    // client hangs up, and hold only Arc'd state.
-                    let _ = std::thread::Builder::new()
-                        .name("lamc-conn".into())
-                        .spawn(move || handle_connection(stream, manager, stop, addr));
-                }
-            })
-            .context("spawn accept thread")?;
+        let handler_manager = manager.clone();
+        let handler: RequestHandler =
+            Arc::new(move |req, payload| respond(&handler_manager, req, payload));
+        let AcceptLoop { addr, stop, thread } = spawn_accept_loop(addr, handler)?;
         crate::log_info!("service listening on {addr}");
-        Ok(Self { addr, manager, stop, accept_thread: Some(accept_thread) })
+        Ok(Self { addr, manager, stop, accept_thread: Some(thread) })
     }
 
     /// The bound socket address (useful with an ephemeral port).
@@ -97,7 +88,7 @@ impl Drop for ServiceServer {
 
 /// Flag the accept loop to stop and poke it awake with a throwaway
 /// connection (accept() has no timeout in std).
-fn request_stop(stop: &AtomicBool, addr: SocketAddr) {
+pub(crate) fn request_stop(stop: &AtomicBool, addr: SocketAddr) {
     if stop.swap(true, Ordering::SeqCst) {
         return; // already stopping
     }
@@ -107,9 +98,50 @@ fn request_stop(stop: &AtomicBool, addr: SocketAddr) {
 /// Longest accepted request line. Requests are a verb plus a handful of
 /// short fields; the cap exists so a peer streaming bytes without a
 /// newline cannot grow the buffer without bound.
-const MAX_REQUEST_LINE_BYTES: u64 = 64 * 1024;
+pub(crate) const MAX_REQUEST_LINE_BYTES: u64 = 64 * 1024;
 
-fn handle_connection(stream: TcpStream, manager: ServiceManager, stop: Arc<AtomicBool>, addr: SocketAddr) {
+/// Answers one parsed request (plus its binary request payload, when
+/// the verb carries one) with a full response frame.
+pub(crate) type RequestHandler = Arc<dyn Fn(Request, Option<Vec<u8>>) -> Reply + Send + Sync>;
+
+/// A bound, running accept loop dispatching to a [`RequestHandler`].
+pub(crate) struct AcceptLoop {
+    pub(crate) addr: SocketAddr,
+    pub(crate) stop: Arc<AtomicBool>,
+    pub(crate) thread: JoinHandle<()>,
+}
+
+/// Bind `addr` and serve connections on background threads, parsing the
+/// line protocol and reading declared binary request payloads before
+/// handing each request to `handler`. `SHUTDOWN` is answered by the
+/// handler like any verb, then stops the loop.
+pub(crate) fn spawn_accept_loop(addr: impl ToSocketAddrs, handler: RequestHandler) -> Result<AcceptLoop> {
+    let listener = TcpListener::bind(addr).context("bind service listener")?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept_stop = Arc::clone(&stop);
+    let thread = std::thread::Builder::new()
+        .name("lamc-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if accept_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                let stop = Arc::clone(&accept_stop);
+                let handler = Arc::clone(&handler);
+                // Handler threads are detached: they end when the
+                // client hangs up, and hold only Arc'd state.
+                let _ = std::thread::Builder::new()
+                    .name("lamc-conn".into())
+                    .spawn(move || handle_connection(stream, stop, addr, handler));
+            }
+        })
+        .context("spawn accept thread")?;
+    Ok(AcceptLoop { addr, stop, thread })
+}
+
+fn handle_connection(stream: TcpStream, stop: Arc<AtomicBool>, addr: SocketAddr, handler: RequestHandler) {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
     let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
@@ -136,8 +168,26 @@ fn handle_connection(stream: TcpStream, manager: ServiceManager, stop: Arc<Atomi
         }
         let reply = match protocol::parse_request(&line) {
             Ok(req) => {
+                let payload = match req.binary_payload_len() {
+                    Ok(None) => None,
+                    Ok(Some(len)) => {
+                        let mut buf = vec![0u8; len];
+                        if reader.read_exact(&mut buf).is_err() {
+                            return;
+                        }
+                        Some(buf)
+                    }
+                    Err(e) => {
+                        // The declared payload length is unusable, so
+                        // the stream cannot be resynchronized: answer
+                        // with the error and drop the connection.
+                        let _ = Reply::err(&e).write_to(&mut writer);
+                        let _ = writer.flush();
+                        return;
+                    }
+                };
                 let is_shutdown = matches!(req, Request::Shutdown);
-                let reply = respond(&manager, req);
+                let reply = handler(req, payload);
                 if is_shutdown {
                     let _ = reply.write_to(&mut writer);
                     let _ = writer.flush();
@@ -156,14 +206,15 @@ fn handle_connection(stream: TcpStream, manager: ServiceManager, stop: Arc<Atomi
 }
 
 /// A response frame: text lines, optionally followed by a binary block
-/// (the `RESULTB` payload — its length prefix lives in the header line).
-enum Reply {
+/// (the `RESULTB`/`GATHERB`/`EXECB` payload — its length prefix lives
+/// in the header line).
+pub(crate) enum Reply {
     Text(String),
     Binary { header: String, payload: Vec<u8> },
 }
 
 impl Reply {
-    fn err(e: &anyhow::Error) -> Reply {
+    pub(crate) fn err(e: &anyhow::Error) -> Reply {
         Reply::Text(format!("{}\n", protocol::err_line(&format!("{e:#}"))))
     }
 
@@ -179,8 +230,8 @@ impl Reply {
 }
 
 /// Execute one request against the manager; returns the full response.
-fn respond(manager: &ServiceManager, req: Request) -> Reply {
-    match handle(manager, req) {
+fn respond(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> Reply {
+    match handle(manager, req, payload) {
         Ok(reply) => reply,
         Err(e) => Reply::err(&e),
     }
@@ -199,7 +250,7 @@ fn finished_job(manager: &ServiceManager, id: u64) -> Result<super::manager::Job
     }
 }
 
-fn handle(manager: &ServiceManager, req: Request) -> Result<Reply> {
+fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> Result<Reply> {
     match req {
         Request::Submit(spec) => {
             let id = manager.submit(spec)?;
@@ -251,7 +302,8 @@ fn handle(manager: &ServiceManager, req: Request) -> Result<Reply> {
                  cache_hits={} cache_misses={} cache_entries={} cache_bytes={} cache_capacity_bytes={} \
                  cache_disk_hits={} blocks_total={} blocks_native={} blocks_pjrt={} matrices={} \
                  store_chunks_read={} store_bytes_read={} store_cache_hits={} \
-                 prefetch_issued={} prefetch_hits={} prefetch_wasted_bytes={}\n",
+                 prefetch_issued={} prefetch_hits={} prefetch_wasted_bytes={} \
+                 gather_s={:.6} exec_s={:.6} merge_s={:.6}\n",
                 snap.cache_hits,
                 snap.cache_misses,
                 cache.len(),
@@ -268,6 +320,9 @@ fn handle(manager: &ServiceManager, req: Request) -> Result<Reply> {
                 snap.prefetch_issued,
                 snap.prefetch_hits,
                 snap.prefetch_wasted_bytes,
+                snap.gather_s,
+                snap.exec_s,
+                snap.merge_s,
             )))
         }
         Request::Load { name, dataset, path, store, rows, seed } => {
@@ -278,6 +333,82 @@ fn handle(manager: &ServiceManager, req: Request) -> Result<Reply> {
                 _ => unreachable!("parser enforces exactly one source"),
             };
             Ok(Reply::Text(format!("OK name={name} rows={r} cols={c}\n")))
+        }
+        Request::Hello { proto, version: _ } => {
+            anyhow::ensure!(
+                proto == PROTO_VERSION,
+                "protocol version mismatch: peer speaks proto {proto}, this node speaks proto {PROTO_VERSION}"
+            );
+            Ok(Reply::Text(format!(
+                "OK proto={PROTO_VERSION} version={}\n",
+                env!("CARGO_PKG_VERSION")
+            )))
+        }
+        Request::Shards => {
+            let sets = manager.shard_sets();
+            let mut out = format!("OK sets={}\n", sets.len());
+            for (name, set) in sets {
+                let info = protocol::ShardSetInfo {
+                    name,
+                    rows: set.rows,
+                    cols: set.cols,
+                    nnz: set.nnz,
+                    sparse: set.sparse,
+                    fingerprint: set.fingerprint,
+                    bands: set.band_spans(),
+                };
+                out.push_str(&protocol::encode_shard_set(&info)?);
+                out.push('\n');
+            }
+            out.push_str("END\n");
+            Ok(Reply::Text(out))
+        }
+        Request::Route => {
+            anyhow::bail!("ROUTE is answered by a shard router; this is a worker node")
+        }
+        Request::GatherBinary { name, rows, cols } => {
+            let payload = payload.context("GATHERB payload missing")?;
+            let set = manager
+                .shard_set(&name)
+                .with_context(|| format!("no shard set named '{name}'"))?;
+            let (row_ids, col_ids) = protocol::decode_labels_binary(&payload, rows, cols)?;
+            let t0 = Instant::now();
+            let block = set.gather(&row_ids, &col_ids)?;
+            let stats = manager.stats();
+            stats.add_gather(t0.elapsed().as_nanos() as u64);
+            stats.add_io(&set.take_io_delta());
+            let body = protocol::encode_block(block.data());
+            Ok(Reply::Binary {
+                header: format!("OK rows={rows} cols={cols} bytes={}\n", body.len()),
+                payload: body,
+            })
+        }
+        Request::ExecBinary { name, method, k, seed, rows, cols, inline } => {
+            let payload = payload.context("EXECB payload missing")?;
+            let set = manager
+                .shard_set(&name)
+                .with_context(|| format!("no shard set named '{name}'"))?;
+            let (row_ids, col_ids, inline_rows) =
+                protocol::decode_exec_payload(&payload, rows, cols, inline)?;
+            let atom: AtomKind = method.parse()?;
+            let stats = manager.stats();
+            let t0 = Instant::now();
+            let block = set.assemble_block(&row_ids, &col_ids, &inline_rows)?;
+            stats.add_gather(t0.elapsed().as_nanos() as u64);
+            let t1 = Instant::now();
+            let result = Router::native_only(atom.build()).execute(&block, k, seed, stats)?;
+            stats.add_exec(t1.elapsed().as_nanos() as u64);
+            // `Router::execute` counts the native route; the per-job
+            // total is the scheduler's job in-process and ours here.
+            stats.blocks_total.fetch_add(1, Ordering::Relaxed);
+            stats.add_io(&set.take_io_delta());
+            let job = BlockJob { round: 0, grid: (0, 0), rows: row_ids, cols: col_ids };
+            let atoms = Lamc::block_to_atoms(&job, &result);
+            let body = protocol::encode_atoms(&atoms);
+            Ok(Reply::Binary {
+                header: format!("OK clusters={} bytes={}\n", atoms.len(), body.len()),
+                payload: body,
+            })
         }
         Request::Shutdown => Ok(Reply::Text("OK shutting-down\n".to_string())),
     }

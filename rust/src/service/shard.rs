@@ -1,0 +1,892 @@
+//! Shard router: one logical co-clustering service over multiple
+//! `lamc serve` worker nodes (distributed leader of the paper's
+//! leader/worker design, §IV-C).
+//!
+//! A matrix is split into contiguous row bands (`store::shard_store`);
+//! each worker registers the bands it owns and advertises them over
+//! `SHARDS`. The router replicates the single-node pipeline exactly —
+//! partition planning and sampling are dims-only, so they run locally
+//! from the manifest dimensions — then scatters each block job to a
+//! worker owning the job's *primary* band (`plan_jobs_by_band`), ships
+//! the remaining rows inline (`GATHERB` → `EXECB`), gathers the per-job
+//! atom co-clusters, and runs one global `merge::consensus` reduce.
+//!
+//! **Determinism guarantee**: for the same matrix content, seed and
+//! config, a routed run yields labels *byte-identical* to
+//! `pipeline::Lamc::run` on one node — same leader RNG, same per-job
+//! seeds (`job_seed`), same flat job order into the same single merge.
+//! `tests/property_store_layouts.rs` proves this over seeded random
+//! configs; `tests/integration_shard.rs` adds fault injection.
+//!
+//! **Failure semantics**: every wire operation carries an I/O timeout
+//! and every job a wall-clock budget. A connection that breaks or times
+//! out marks its worker dead ([`ShardError::WorkerLost`]); lost jobs
+//! are retried (default: once) against surviving owners. When no live
+//! worker owns a needed band the job fails typed
+//! ([`ShardError::BandLost`]) — never a hang, never a partial label
+//! set.
+
+use std::collections::HashMap;
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::coordinator::scheduler::{job_seed, leader_rng};
+use crate::coordinator::{plan_jobs_by_band, BandSpan, JobBandPlan, SchedulerConfig, StatsSnapshot};
+use crate::merge::{extract_labels, reduce_partial_sets, Cocluster};
+use crate::partition::{plan, sample_partition, BlockJob};
+use crate::pipeline::{AtomKind, LamcConfig};
+
+use super::client::ServiceClient;
+use super::manager::{JobSpec, JobState};
+use super::protocol::{self, Request, ShardSetInfo, PROTO_VERSION};
+use super::server::{request_stop, spawn_accept_loop, AcceptLoop, Reply, RequestHandler};
+
+/// Typed routing failures — the error contract of the fault-injection
+/// harness. Stringified via `Display`, each carries a stable
+/// `shard …` tag so callers (and the CLI smoke test) can classify
+/// failures without downcasting.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ShardError {
+    /// A worker connection broke or timed out mid-exchange. Retryable:
+    /// surviving owners of the same bands can re-run the job.
+    WorkerLost { addr: String, detail: String },
+    /// No live worker owns a band a job needs. Terminal.
+    BandLost { name: String, row_lo: usize, row_hi: usize },
+    /// A job exceeded its wall-clock budget. Terminal.
+    JobTimeout { budget_s: u64 },
+    /// A worker speaks a different protocol or binary version.
+    VersionMismatch { addr: String, got: String, want: String },
+}
+
+impl std::fmt::Display for ShardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardError::WorkerLost { addr, detail } => {
+                write!(f, "shard worker lost: {addr}: {detail}")
+            }
+            ShardError::BandLost { name, row_lo, row_hi } => {
+                write!(f, "shard band lost: no live worker owns rows {row_lo}..{row_hi} of '{name}'")
+            }
+            ShardError::JobTimeout { budget_s } => {
+                write!(f, "shard job timeout: job not finished within {budget_s}s")
+            }
+            ShardError::VersionMismatch { addr, got, want } => {
+                write!(f, "shard worker version mismatch: {addr} runs {got}, router wants {want}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+/// Router knobs: bounded retries and the two timeout layers.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardRouterConfig {
+    /// How many times a job lost to a dead worker is re-run (against
+    /// surviving owners) before its error propagates. The issue's
+    /// retry-once-then-fail policy is the default.
+    pub retries: usize,
+    /// Per-exchange socket timeout: a worker that neither answers nor
+    /// hangs up within this window is declared lost.
+    pub io_timeout: Duration,
+    /// Wall-clock budget for one block job across all its exchanges
+    /// and retries.
+    pub job_timeout: Duration,
+}
+
+impl Default for ShardRouterConfig {
+    fn default() -> Self {
+        Self {
+            retries: 1,
+            io_timeout: Duration::from_secs(30),
+            job_timeout: Duration::from_secs(600),
+        }
+    }
+}
+
+/// One worker connection plus its liveness flag. The connection is
+/// request–response serialized under the mutex; a transport error
+/// poisons the stream framing, so the link is dropped and the worker
+/// marked dead rather than resynchronized.
+struct WorkerLink {
+    addr: String,
+    alive: AtomicBool,
+    conn: Mutex<Option<ServiceClient>>,
+}
+
+impl WorkerLink {
+    fn alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+}
+
+/// Band layout and ownership of one sharded matrix across the fleet.
+#[derive(Clone, Debug)]
+pub struct MatrixTopology {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: u64,
+    pub sparse: bool,
+    pub fingerprint: u64,
+    /// Contiguous bands covering `0..rows`, sorted by `row_lo`.
+    pub bands: Vec<BandSpan>,
+    /// Per band: worker indices owning it, ascending. Identical spans
+    /// on several workers are replicas.
+    pub owners: Vec<Vec<usize>>,
+}
+
+/// A completed routed run — the distributed analogue of `LamcResult`.
+#[derive(Clone, Debug)]
+pub struct RoutedRun {
+    pub row_labels: Vec<usize>,
+    pub col_labels: Vec<usize>,
+    pub k: usize,
+    pub coclusters: Vec<Cocluster>,
+}
+
+/// The shard router: owns one connection per worker and the merged
+/// band topology, and runs routed co-clustering jobs against them.
+pub struct ShardRouter {
+    workers: Vec<Arc<WorkerLink>>,
+    topo: HashMap<String, MatrixTopology>,
+    cfg: ShardRouterConfig,
+}
+
+impl ShardRouter {
+    /// Connect to every worker, handshake versions, and merge their
+    /// advertised shard sets into one validated topology.
+    pub fn connect(addrs: &[String], cfg: ShardRouterConfig) -> Result<Self> {
+        ensure!(!addrs.is_empty(), "shard router needs at least one worker address");
+        let want = format!("proto {PROTO_VERSION} version {}", env!("CARGO_PKG_VERSION"));
+        let mut workers = Vec::with_capacity(addrs.len());
+        let mut advertised = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            let mut client = ServiceClient::connect(addr.as_str())
+                .with_context(|| format!("connect to shard worker {addr}"))?;
+            client.set_io_timeout(Some(cfg.io_timeout))?;
+            let (proto, version) =
+                client.hello().with_context(|| format!("handshake with shard worker {addr}"))?;
+            if proto != PROTO_VERSION || version != env!("CARGO_PKG_VERSION") {
+                return Err(anyhow::Error::new(ShardError::VersionMismatch {
+                    addr: addr.clone(),
+                    got: format!("proto {proto} version {version}"),
+                    want,
+                }));
+            }
+            let sets = client
+                .shard_sets()
+                .with_context(|| format!("discover shard sets on {addr}"))?;
+            advertised.push(sets);
+            workers.push(Arc::new(WorkerLink {
+                addr: addr.clone(),
+                alive: AtomicBool::new(true),
+                conn: Mutex::new(Some(client)),
+            }));
+        }
+        let topo = build_topology(&advertised)?;
+        ensure!(!topo.is_empty(), "no shard sets advertised by any worker");
+        crate::log_info!(
+            "shard router: {} worker(s), {} matrix topolog{}",
+            workers.len(),
+            topo.len(),
+            if topo.len() == 1 { "y" } else { "ies" }
+        );
+        Ok(Self { workers, topo, cfg })
+    }
+
+    /// The merged topology (matrix name → bands and owners).
+    pub fn topology(&self) -> &HashMap<String, MatrixTopology> {
+        &self.topo
+    }
+
+    /// Worker addresses and their current liveness.
+    pub fn worker_health(&self) -> Vec<(String, bool)> {
+        self.workers.iter().map(|w| (w.addr.clone(), w.alive())).collect()
+    }
+
+    /// Route one service job spec. Baseline (whole-matrix) methods need
+    /// the full matrix on one node and are rejected typed.
+    pub fn run_spec(&self, spec: &JobSpec) -> Result<RoutedRun> {
+        ensure!(
+            spec.partitioned()?,
+            "whole-matrix baseline method '{}' cannot be routed across shards",
+            spec.method
+        );
+        self.run_config(&spec.matrix, &spec.lamc_config()?)
+    }
+
+    /// Run the partitioned pipeline on sharded matrix `name`,
+    /// byte-identical to `Lamc::run` with the same config on one node.
+    pub fn run_config(&self, name: &str, cfg: &LamcConfig) -> Result<RoutedRun> {
+        let topo = self
+            .topo
+            .get(name)
+            .with_context(|| format!("no shard topology for matrix '{name}'"))?;
+        let (rows, cols) = (topo.rows, topo.cols);
+        ensure!(rows > 0 && cols > 0, "empty matrix");
+
+        // 1+2. Plan and sample locally — both are dims-only, so this is
+        // the exact leader sequence of `Lamc::run` without any data.
+        let mut planner = cfg.planner.clone();
+        if planner.workers == 0 {
+            planner.workers =
+                SchedulerConfig { workers: cfg.workers, ..Default::default() }.effective_workers();
+        }
+        let partition_plan = plan(rows, cols, &planner);
+        let mut rng = leader_rng(cfg.seed);
+        let rounds = sample_partition(rows, cols, &partition_plan, &mut rng);
+        let jobs: Vec<&BlockJob> = rounds.iter().flat_map(|r| r.jobs.iter()).collect();
+        let band_plans = plan_jobs_by_band(&jobs, &topo.bands)?;
+        crate::log_info!(
+            "routing {} block jobs over {} worker(s) ({} bands)",
+            jobs.len(),
+            self.workers.len(),
+            topo.bands.len()
+        );
+        let method = match cfg.atom {
+            AtomKind::Scc => "scc",
+            AtomKind::Pnmtf => "pnmtf",
+        };
+
+        // 3. Scatter: claim-loop threads pull the next unclaimed job.
+        // Per-job deadlines start at scatter time, so a stalled worker
+        // bounds the whole round.
+        let deadline = Instant::now() + self.cfg.job_timeout;
+        let slots: Vec<Mutex<Option<Result<Vec<Cocluster>>>>> =
+            (0..band_plans.len()).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let n_threads = self.workers.len().min(band_plans.len()).max(1);
+        std::thread::scope(|scope| {
+            for _ in 0..n_threads {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= band_plans.len() {
+                        break;
+                    }
+                    let res =
+                        self.run_block(name, topo, method, cfg, &band_plans[i], &jobs, deadline);
+                    *slots[i].lock().unwrap() = Some(res);
+                });
+            }
+        });
+
+        // 3b. Bounded retry pass: only worker-lost jobs re-run, against
+        // whatever owners survive.
+        let mut partials = Vec::with_capacity(band_plans.len());
+        for (i, slot) in slots.into_iter().enumerate() {
+            let mut res = slot.into_inner().unwrap().expect("scatter visited every job");
+            let mut attempts = 0;
+            while attempts < self.cfg.retries
+                && matches!(
+                    res.as_ref().err().and_then(|e| e.downcast_ref::<ShardError>()),
+                    Some(ShardError::WorkerLost { .. })
+                )
+            {
+                attempts += 1;
+                crate::log_info!("retrying routed job {i} (attempt {attempts})");
+                res = self.run_block(name, topo, method, cfg, &band_plans[i], &jobs, deadline);
+            }
+            partials.push(res.with_context(|| format!("routed block job {i} failed"))?);
+        }
+
+        // 4. Cross-node reduce: concatenate partial atom sets in flat
+        // job order — the order `Lamc::run` merges in — then one global
+        // consensus merge.
+        let merged = reduce_partial_sets(partials, &cfg.merge);
+        let (row_labels, col_labels, k) = extract_labels(&merged, rows, cols);
+        Ok(RoutedRun { row_labels, col_labels, k, coclusters: merged })
+    }
+
+    /// Execute one block job: pick an owner of the job's primary band,
+    /// ship the rows it does not own inline, run the atom remotely.
+    fn run_block(
+        &self,
+        name: &str,
+        topo: &MatrixTopology,
+        method: &str,
+        cfg: &LamcConfig,
+        plan: &JobBandPlan,
+        jobs: &[&BlockJob],
+        deadline: Instant,
+    ) -> Result<Vec<Cocluster>> {
+        let job = jobs[plan.job];
+        let executor = self.live_owner(&topo.owners[plan.primary]).or_else(|| {
+            // Any live worker can execute with every row shipped inline.
+            (0..self.workers.len()).find(|&w| self.workers[w].alive())
+        });
+        let Some(executor) = executor else {
+            let band = topo.bands[plan.primary];
+            return Err(anyhow::Error::new(ShardError::BandLost {
+                name: name.to_string(),
+                row_lo: band.row_lo,
+                row_hi: band.row_hi,
+            }));
+        };
+
+        let mut inline: Vec<(u32, Vec<f32>)> = Vec::new();
+        for (band, positions) in &plan.per_band {
+            if topo.owners[*band].contains(&executor) {
+                continue;
+            }
+            let Some(owner) = self.live_owner(&topo.owners[*band]) else {
+                let span = topo.bands[*band];
+                return Err(anyhow::Error::new(ShardError::BandLost {
+                    name: name.to_string(),
+                    row_lo: span.row_lo,
+                    row_hi: span.row_hi,
+                }));
+            };
+            let needed: Vec<usize> = positions.iter().map(|&p| job.rows[p]).collect();
+            let values =
+                self.with_conn(owner, deadline, |c| c.gather_block(name, &needed, &job.cols))?;
+            for (slot, &p) in positions.iter().enumerate() {
+                inline.push((
+                    p as u32,
+                    values[slot * job.cols.len()..(slot + 1) * job.cols.len()].to_vec(),
+                ));
+            }
+        }
+
+        let seed = job_seed(cfg.seed, job);
+        self.with_conn(executor, deadline, |c| {
+            c.exec_block(name, method, cfg.k, seed, &job.rows, &job.cols, &inline)
+        })
+    }
+
+    fn live_owner(&self, owners: &[usize]) -> Option<usize> {
+        owners.iter().copied().find(|&w| self.workers[w].alive())
+    }
+
+    /// One serialized exchange on worker `w`'s connection, under both
+    /// timeout layers. Transport errors drop the connection (the
+    /// request–response framing is desynchronized) and mark the worker
+    /// dead; application errors (`server error: …` replies) leave it
+    /// alive and are not retryable.
+    fn with_conn<T>(
+        &self,
+        w: usize,
+        deadline: Instant,
+        f: impl FnOnce(&mut ServiceClient) -> Result<T>,
+    ) -> Result<T> {
+        let link = &self.workers[w];
+        let timeout_err =
+            || anyhow::Error::new(ShardError::JobTimeout { budget_s: self.cfg.job_timeout.as_secs() });
+        if Instant::now() >= deadline {
+            return Err(timeout_err());
+        }
+        let mut guard = link.conn.lock().unwrap();
+        // Re-check after the lock wait: exchanges are serialized per
+        // worker, so another job may have consumed the budget while
+        // holding this connection.
+        let now = Instant::now();
+        if now >= deadline {
+            return Err(timeout_err());
+        }
+        // Cap the socket timeout by the job budget; sub-millisecond
+        // values could round to zero, which std treats as "no timeout".
+        let io = self.cfg.io_timeout.min(deadline - now).max(Duration::from_millis(1));
+        let Some(conn) = guard.as_mut() else {
+            return Err(anyhow::Error::new(ShardError::WorkerLost {
+                addr: link.addr.clone(),
+                detail: "connection already closed".to_string(),
+            }));
+        };
+        conn.set_io_timeout(Some(io))?;
+        match f(conn) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                let detail = format!("{e:#}");
+                if detail.contains("server error:") {
+                    // The worker answered; the stream is still in sync.
+                    return Err(e);
+                }
+                *guard = None;
+                link.alive.store(false, Ordering::SeqCst);
+                if Instant::now() >= deadline {
+                    Err(timeout_err())
+                } else {
+                    Err(anyhow::Error::new(ShardError::WorkerLost { addr: link.addr.clone(), detail }))
+                }
+            }
+        }
+    }
+
+    /// Aggregate `STATS` across the router and every live worker:
+    /// coordinator counters sum via [`StatsSnapshot::merged`]-style
+    /// field addition (each worker holds only its own I/O and block
+    /// counters — see PR 5's single-process assumption), cache and
+    /// registry gauges sum numerically.
+    fn aggregate_stats(&self) -> (usize, usize, StatsSnapshot, HashMap<String, f64>) {
+        let far = Instant::now() + self.cfg.io_timeout;
+        let mut agg = StatsSnapshot::default();
+        let mut gauges: HashMap<String, f64> = HashMap::new();
+        let mut live = 0usize;
+        for w in 0..self.workers.len() {
+            if !self.workers[w].alive() {
+                continue;
+            }
+            let Ok(map) = self.with_conn(w, far, |c| c.stats()) else { continue };
+            live += 1;
+            agg = agg.merged(&parse_stats_snapshot(&map));
+            for key in ["cache_entries", "cache_bytes", "cache_capacity_bytes", "cache_disk_hits", "matrices"] {
+                if let Some(v) = map.get(key).and_then(|v| v.parse::<f64>().ok()) {
+                    *gauges.entry(key.to_string()).or_insert(0.0) += v;
+                }
+            }
+        }
+        (self.workers.len(), live, agg, gauges)
+    }
+}
+
+/// Rebuild the coordinator-counter part of a worker's `STATS` reply.
+/// Keys a worker does not report stay zero.
+fn parse_stats_snapshot(map: &std::collections::BTreeMap<String, String>) -> StatsSnapshot {
+    let u = |k: &str| map.get(k).and_then(|v| v.parse::<u64>().ok()).unwrap_or(0);
+    let f = |k: &str| map.get(k).and_then(|v| v.parse::<f64>().ok()).unwrap_or(0.0);
+    StatsSnapshot {
+        blocks_total: u("blocks_total"),
+        blocks_native: u("blocks_native"),
+        blocks_pjrt: u("blocks_pjrt"),
+        pjrt_fallbacks: u("pjrt_fallbacks"),
+        gather_s: f("gather_s"),
+        exec_s: f("exec_s"),
+        merge_s: f("merge_s"),
+        cache_hits: u("cache_hits"),
+        cache_misses: u("cache_misses"),
+        store_chunks_read: u("store_chunks_read"),
+        store_bytes_read: u("store_bytes_read"),
+        store_cache_hits: u("store_cache_hits"),
+        prefetch_issued: u("prefetch_issued"),
+        prefetch_hits: u("prefetch_hits"),
+        prefetch_wasted_bytes: u("prefetch_wasted_bytes"),
+    }
+}
+
+/// Merge every worker's advertised shard sets into per-matrix
+/// topologies, rejecting disagreeing identities, overlapping bands and
+/// gaps. Identical spans from several workers are replicas.
+fn build_topology(advertised: &[Vec<ShardSetInfo>]) -> Result<HashMap<String, MatrixTopology>> {
+    // name → (identity, span → owner list)
+    let mut acc: HashMap<String, (ShardSetInfo, HashMap<(usize, usize), Vec<usize>>)> =
+        HashMap::new();
+    for (w, sets) in advertised.iter().enumerate() {
+        for info in sets {
+            let entry = acc
+                .entry(info.name.clone())
+                .or_insert_with(|| (info.clone(), HashMap::new()));
+            let first = &entry.0;
+            ensure!(
+                first.rows == info.rows
+                    && first.cols == info.cols
+                    && first.fingerprint == info.fingerprint,
+                "workers disagree on matrix '{}': {}x{} fp {:016x} vs {}x{} fp {:016x}",
+                info.name,
+                first.rows,
+                first.cols,
+                first.fingerprint,
+                info.rows,
+                info.cols,
+                info.fingerprint
+            );
+            for &span in &info.bands {
+                entry.1.entry(span).or_default().push(w);
+            }
+        }
+    }
+    let mut topo = HashMap::new();
+    for (name, (id, span_owners)) in acc {
+        let mut spans: Vec<(usize, usize)> = span_owners.keys().copied().collect();
+        spans.sort_unstable();
+        for pair in spans.windows(2) {
+            ensure!(
+                pair[0].1 <= pair[1].0,
+                "overlapping shard bands {}-{} and {}-{} for matrix '{name}'",
+                pair[0].0,
+                pair[0].1,
+                pair[1].0,
+                pair[1].1
+            );
+        }
+        let covered = spans.first().map(|s| s.0) == Some(0)
+            && spans.last().map(|s| s.1) == Some(id.rows)
+            && spans.windows(2).all(|p| p[0].1 == p[1].0);
+        ensure!(
+            covered,
+            "shard bands of matrix '{name}' do not cover rows 0..{} contiguously",
+            id.rows
+        );
+        let mut owners = Vec::with_capacity(spans.len());
+        let mut bands = Vec::with_capacity(spans.len());
+        for &(lo, hi) in &spans {
+            let mut list = span_owners[&(lo, hi)].clone();
+            list.sort_unstable();
+            list.dedup();
+            owners.push(list);
+            bands.push(BandSpan { row_lo: lo, row_hi: hi });
+        }
+        topo.insert(
+            name,
+            MatrixTopology {
+                rows: id.rows,
+                cols: id.cols,
+                nnz: id.nnz,
+                sparse: id.sparse,
+                fingerprint: id.fingerprint,
+                bands,
+                owners,
+            },
+        );
+    }
+    Ok(topo)
+}
+
+/// One routed job's lifecycle on the router front end.
+struct RouteJob {
+    state: JobState,
+    result: Option<Arc<RoutedRun>>,
+    error: Option<String>,
+}
+
+struct RouterState {
+    router: ShardRouter,
+    jobs: Mutex<HashMap<u64, RouteJob>>,
+    next_id: AtomicU64,
+}
+
+/// TCP front end for a [`ShardRouter`]: speaks the same line protocol
+/// as a worker (`SUBMIT`/`STATUS`/`RESULT`/`RESULTB`/`STATS`/
+/// `SHUTDOWN`), answers `ROUTE` with the topology summary, and rejects
+/// worker-only verbs typed. Existing clients need no changes to talk
+/// to a router instead of a single node.
+pub struct ShardServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl ShardServer {
+    pub fn spawn(addr: impl std::net::ToSocketAddrs, router: ShardRouter) -> Result<Self> {
+        let state = Arc::new(RouterState {
+            router,
+            jobs: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+        });
+        let handler: RequestHandler = Arc::new(move |req, _payload| route_respond(&state, req));
+        let AcceptLoop { addr, stop, thread } = spawn_accept_loop(addr, handler)?;
+        crate::log_info!("shard router listening on {addr}");
+        Ok(Self { addr, stop, accept_thread: Some(thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until the accept loop exits (`SHUTDOWN` or
+    /// [`ShardServer::shutdown`]).
+    pub fn join(mut self) {
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+
+    pub fn shutdown(&self) {
+        request_stop(&self.stop, self.addr);
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        request_stop(&self.stop, self.addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn route_respond(state: &Arc<RouterState>, req: Request) -> Reply {
+    match route_handle(state, req) {
+        Ok(reply) => reply,
+        Err(e) => Reply::err(&e),
+    }
+}
+
+fn finished_route_job(state: &RouterState, id: u64) -> Result<Arc<RoutedRun>> {
+    let jobs = state.jobs.lock().unwrap();
+    let job = jobs.get(&id).with_context(|| format!("no job with id {id}"))?;
+    match job.state {
+        JobState::Done => job.result.clone().context("done job missing result"),
+        JobState::Failed => {
+            bail!("job {id} failed: {}", job.error.as_deref().unwrap_or("unknown error"))
+        }
+        other => bail!("job {id} is still {}", other.as_str()),
+    }
+}
+
+fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
+    match req {
+        Request::Submit(spec) => {
+            // Fail fast on specs the router can never run, so the error
+            // reaches the submitter instead of a job record.
+            ensure!(
+                spec.partitioned()?,
+                "whole-matrix baseline method '{}' cannot be routed across shards",
+                spec.method
+            );
+            ensure!(
+                state.router.topo.contains_key(&spec.matrix),
+                "no shard topology for matrix '{}'",
+                spec.matrix
+            );
+            let id = state.next_id.fetch_add(1, Ordering::Relaxed);
+            state
+                .jobs
+                .lock()
+                .unwrap()
+                .insert(id, RouteJob { state: JobState::Running, result: None, error: None });
+            let worker_state = Arc::clone(state);
+            std::thread::Builder::new()
+                .name("lamc-route-job".into())
+                .spawn(move || {
+                    let outcome = worker_state.router.run_spec(&spec);
+                    let mut jobs = worker_state.jobs.lock().unwrap();
+                    let Some(job) = jobs.get_mut(&id) else { return };
+                    match outcome {
+                        Ok(run) => {
+                            job.state = JobState::Done;
+                            job.result = Some(Arc::new(run));
+                        }
+                        Err(e) => {
+                            job.state = JobState::Failed;
+                            job.error = Some(format!("{e:#}"));
+                        }
+                    }
+                })
+                .context("spawn route job thread")?;
+            Ok(Reply::Text(format!("OK id={id}\n")))
+        }
+        Request::Status { id } => {
+            let jobs = state.jobs.lock().unwrap();
+            let job = jobs.get(&id).with_context(|| format!("no job with id {id}"))?;
+            let mut line = format!("OK id={id} state={} cached=false", job.state.as_str());
+            if let Some(e) = &job.error {
+                line.push_str(&format!(" error={}", e.replace([' ', '\n'], "_")));
+            }
+            line.push('\n');
+            Ok(Reply::Text(line))
+        }
+        Request::Result { id } => {
+            let run = finished_route_job(state, id)?;
+            Ok(Reply::Text(format!(
+                "OK id={id} k={} rows={} cols={} cached=false\nROWS {}\nCOLS {}\nEND\n",
+                run.k,
+                run.row_labels.len(),
+                run.col_labels.len(),
+                protocol::encode_labels(&run.row_labels),
+                protocol::encode_labels(&run.col_labels),
+            )))
+        }
+        Request::ResultBinary { id } => {
+            let run = finished_route_job(state, id)?;
+            let payload = protocol::encode_labels_binary(&run.row_labels, &run.col_labels)?;
+            Ok(Reply::Binary {
+                header: format!(
+                    "OK id={id} k={} rows={} cols={} cached=false\n",
+                    run.k,
+                    run.row_labels.len(),
+                    run.col_labels.len(),
+                ),
+                payload,
+            })
+        }
+        Request::Stats => {
+            let (queued, running, done, failed) = {
+                let jobs = state.jobs.lock().unwrap();
+                let count = |s: JobState| jobs.values().filter(|j| j.state == s).count();
+                (count(JobState::Queued), count(JobState::Running), count(JobState::Done), count(JobState::Failed))
+            };
+            let (total, live, snap, gauges) = state.router.aggregate_stats();
+            let gauge = |k: &str| gauges.get(k).copied().unwrap_or(0.0) as u64;
+            Ok(Reply::Text(format!(
+                "OK jobs_queued={queued} jobs_running={running} jobs_done={done} jobs_failed={failed} \
+                 cache_hits={} cache_misses={} cache_entries={} cache_bytes={} cache_capacity_bytes={} \
+                 cache_disk_hits={} blocks_total={} blocks_native={} blocks_pjrt={} matrices={} \
+                 store_chunks_read={} store_bytes_read={} store_cache_hits={} \
+                 prefetch_issued={} prefetch_hits={} prefetch_wasted_bytes={} \
+                 gather_s={:.6} exec_s={:.6} merge_s={:.6} workers={total} workers_live={live}\n",
+                snap.cache_hits,
+                snap.cache_misses,
+                gauge("cache_entries"),
+                gauge("cache_bytes"),
+                gauge("cache_capacity_bytes"),
+                gauge("cache_disk_hits"),
+                snap.blocks_total,
+                snap.blocks_native,
+                snap.blocks_pjrt,
+                state.router.topo.len(),
+                snap.store_chunks_read,
+                snap.store_bytes_read,
+                snap.store_cache_hits,
+                snap.prefetch_issued,
+                snap.prefetch_hits,
+                snap.prefetch_wasted_bytes,
+                snap.gather_s,
+                snap.exec_s,
+                snap.merge_s,
+            )))
+        }
+        Request::Route => {
+            let bands: usize = state.router.topo.values().map(|t| t.bands.len()).sum();
+            let live = state.router.worker_health().iter().filter(|(_, a)| *a).count();
+            Ok(Reply::Text(format!(
+                "OK workers={} live={live} matrices={} bands={bands}\n",
+                state.router.workers.len(),
+                state.router.topo.len(),
+            )))
+        }
+        Request::Hello { proto, version: _ } => {
+            ensure!(
+                proto == PROTO_VERSION,
+                "protocol version mismatch: peer speaks proto {proto}, this node speaks proto {PROTO_VERSION}"
+            );
+            Ok(Reply::Text(format!(
+                "OK proto={PROTO_VERSION} version={}\n",
+                env!("CARGO_PKG_VERSION")
+            )))
+        }
+        Request::Shards => {
+            // The router's aggregate view: every band, owner-agnostic.
+            let mut names: Vec<&String> = state.router.topo.keys().collect();
+            names.sort();
+            let mut out = format!("OK sets={}\n", names.len());
+            for name in names {
+                let t = &state.router.topo[name];
+                let info = ShardSetInfo {
+                    name: name.clone(),
+                    rows: t.rows,
+                    cols: t.cols,
+                    nnz: t.nnz,
+                    sparse: t.sparse,
+                    fingerprint: t.fingerprint,
+                    bands: t.bands.iter().map(|b| (b.row_lo, b.row_hi)).collect(),
+                };
+                out.push_str(&protocol::encode_shard_set(&info)?);
+                out.push('\n');
+            }
+            out.push_str("END\n");
+            Ok(Reply::Text(out))
+        }
+        Request::Load { .. } => {
+            bail!("LOAD is answered by a worker node; register shards with `lamc serve --shards`")
+        }
+        Request::GatherBinary { .. } | Request::ExecBinary { .. } => {
+            bail!("GATHERB/EXECB are answered by a worker node; this is a shard router")
+        }
+        Request::Shutdown => Ok(Reply::Text("OK shutting-down\n".to_string())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpListener;
+
+    fn set(name: &str, rows: usize, bands: &[(usize, usize)]) -> ShardSetInfo {
+        ShardSetInfo {
+            name: name.to_string(),
+            rows,
+            cols: 10,
+            nnz: 0,
+            sparse: false,
+            fingerprint: 0xabc,
+            bands: bands.to_vec(),
+        }
+    }
+
+    #[test]
+    fn topology_merges_replicas_and_rejects_bad_layouts() {
+        // Two workers: disjoint bands plus one replicated band.
+        let topo = build_topology(&[
+            vec![set("m", 30, &[(0, 10), (10, 20)])],
+            vec![set("m", 30, &[(10, 20), (20, 30)])],
+        ])
+        .unwrap();
+        let t = &topo["m"];
+        assert_eq!(t.bands.len(), 3);
+        assert_eq!(t.owners[0], vec![0]);
+        assert_eq!(t.owners[1], vec![0, 1], "replicated band has both owners");
+        assert_eq!(t.owners[2], vec![1]);
+
+        // Overlapping-but-different spans are rejected.
+        let err = build_topology(&[
+            vec![set("m", 30, &[(0, 15)])],
+            vec![set("m", 30, &[(10, 30)])],
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("overlapping shard bands"), "{err}");
+
+        // A gap is rejected.
+        let err = build_topology(&[
+            vec![set("m", 30, &[(0, 10)])],
+            vec![set("m", 30, &[(20, 30)])],
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("do not cover rows"), "{err}");
+
+        // Fingerprint disagreement is rejected.
+        let mut other = set("m", 30, &[(10, 30)]);
+        other.fingerprint = 0xdef;
+        let err = build_topology(&[vec![set("m", 30, &[(0, 10)])], vec![other]]).unwrap_err();
+        assert!(err.to_string().contains("disagree on matrix"), "{err}");
+    }
+
+    #[test]
+    fn connect_rejects_version_mismatch() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let fake = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.starts_with("HELLO"), "router leads with HELLO, got '{line}'");
+            let mut w = stream;
+            w.write_all(b"OK proto=1 version=0.0.0-fake\n").unwrap();
+            w.flush().unwrap();
+        });
+        let err = ShardRouter::connect(&[addr.to_string()], ShardRouterConfig::default())
+            .unwrap_err();
+        let err = format!("{err:#}");
+        assert!(err.contains("shard worker version mismatch"), "{err}");
+        assert!(err.contains("0.0.0-fake"), "{err}");
+        fake.join().unwrap();
+    }
+
+    #[test]
+    fn shard_error_display_is_tagged() {
+        let cases: Vec<(ShardError, &str)> = vec![
+            (
+                ShardError::WorkerLost { addr: "h:1".into(), detail: "broken pipe".into() },
+                "shard worker lost",
+            ),
+            (
+                ShardError::BandLost { name: "m".into(), row_lo: 0, row_hi: 10 },
+                "shard band lost",
+            ),
+            (ShardError::JobTimeout { budget_s: 5 }, "shard job timeout"),
+            (
+                ShardError::VersionMismatch { addr: "h:1".into(), got: "a".into(), want: "b".into() },
+                "shard worker version mismatch",
+            ),
+        ];
+        for (err, tag) in cases {
+            let text = anyhow::Error::new(err).to_string();
+            assert!(text.contains(tag), "'{text}' missing '{tag}'");
+        }
+    }
+}

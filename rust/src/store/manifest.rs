@@ -1,0 +1,450 @@
+//! Band-ownership manifest for sharded stores (`LAMCM1`).
+//!
+//! A shard manifest describes one logical matrix split into contiguous
+//! **row bands**, each band living in its own LAMC2/LAMC3 store file.
+//! Band boundaries are aligned to the parent store's chunk height, so a
+//! band never splits a tile row — the tile grid produced by `repack`
+//! is the shard unit, exactly as the router's scatter logic assumes.
+//!
+//! The manifest is a small text file next to the shard stores:
+//!
+//! ```text
+//! LAMCM1
+//! matrix rows=300 cols=1000 nnz=37000 sparse=1 fingerprint=00a1b2c3d4e5f607 layout=csr chunk_rows=64 chunk_cols=128
+//! shard index=0 row_lo=0 row_hi=128 file=cc.s0.lamc3
+//! shard index=1 row_lo=128 row_hi=300 file=cc.s1.lamc3
+//! checksum=8f1d2c3b4a596877
+//! ```
+//!
+//! `fingerprint` is the parent store's content fingerprint: every
+//! worker holding a band of the "same" matrix must agree on it, which
+//! is how the router rejects topologies assembled from different
+//! ingests of a dataset. The trailing `checksum` line covers every
+//! preceding byte (via [`checksum_bytes`]) so a truncated or edited
+//! manifest is rejected at load time.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::store::chunk::{ChunkWriter, StoreReader};
+use crate::store::format::{checksum_bytes, Layout};
+
+const MAGIC_LINE: &str = "LAMCM1";
+
+/// One row band of a sharded matrix.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardEntry {
+    /// Position in the band order (0-based, contiguous).
+    pub index: usize,
+    /// First parent row in the band (inclusive).
+    pub row_lo: usize,
+    /// One past the last parent row (exclusive).
+    pub row_hi: usize,
+    /// Store file holding the band, relative to the manifest.
+    pub file: String,
+}
+
+/// Parsed + validated shard manifest.
+#[derive(Clone, Debug)]
+pub struct ShardManifest {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: u64,
+    pub sparse: bool,
+    /// Parent store content fingerprint (shared by every band).
+    pub fingerprint: u64,
+    pub layout: Layout,
+    pub chunk_rows: usize,
+    /// 0 for row-band (LAMC2) shards.
+    pub chunk_cols: usize,
+    pub entries: Vec<ShardEntry>,
+    /// Directory shard paths are resolved against (the manifest's own).
+    dir: PathBuf,
+}
+
+impl ShardManifest {
+    /// Load and validate a manifest file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("read shard manifest {path:?}"))?;
+        let dir = path.parent().unwrap_or_else(|| Path::new(".")).to_path_buf();
+        Self::parse(&text, dir).with_context(|| format!("shard manifest {path:?}"))
+    }
+
+    fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let Some((body, tail)) = text.rsplit_once("checksum=") else {
+            bail!("missing trailing checksum line");
+        };
+        let want: u64 = u64::from_str_radix(tail.trim(), 16)
+            .context("malformed checksum value")?;
+        let got = checksum_bytes(body.as_bytes());
+        ensure!(got == want, "manifest checksum mismatch (corrupt or edited)");
+
+        let mut lines = body.lines();
+        ensure!(
+            lines.next() == Some(MAGIC_LINE),
+            "not a shard manifest (missing {MAGIC_LINE} magic)"
+        );
+        let header = lines.next().context("missing matrix header line")?;
+        let mut fields = parse_fields("matrix", header)?;
+        let rows = take_usize(&mut fields, "rows")?;
+        let cols = take_usize(&mut fields, "cols")?;
+        let nnz = take_u64(&mut fields, "nnz")?;
+        let sparse = take_u64(&mut fields, "sparse")? != 0;
+        let fingerprint = take_hex(&mut fields, "fingerprint")?;
+        let layout = match fields.remove("layout").context("missing field 'layout'")?.as_str() {
+            "dense" => Layout::Dense,
+            "csr" => Layout::Csr,
+            other => bail!("unknown layout '{other}' (want dense|csr)"),
+        };
+        let chunk_rows = take_usize(&mut fields, "chunk_rows")?;
+        let chunk_cols = take_usize(&mut fields, "chunk_cols")?;
+
+        let mut entries = Vec::new();
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut fields = parse_fields("shard", line)?;
+            entries.push(ShardEntry {
+                index: take_usize(&mut fields, "index")?,
+                row_lo: take_usize(&mut fields, "row_lo")?,
+                row_hi: take_usize(&mut fields, "row_hi")?,
+                file: fields.remove("file").context("missing field 'file'")?,
+            });
+        }
+
+        let manifest = Self {
+            rows,
+            cols,
+            nnz,
+            sparse,
+            fingerprint,
+            layout,
+            chunk_rows,
+            chunk_cols,
+            entries,
+            dir,
+        };
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    /// Structural invariants: non-empty, indices 0..n in order, bands
+    /// non-empty and contiguously covering `0..rows`.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.rows > 0 && self.cols > 0, "empty parent matrix");
+        ensure!(!self.entries.is_empty(), "manifest lists no shards");
+        let mut expect_lo = 0;
+        for (i, e) in self.entries.iter().enumerate() {
+            ensure!(e.index == i, "shard indices out of order (found {} at position {i})", e.index);
+            ensure!(e.row_lo < e.row_hi, "shard {i} band {}..{} is empty", e.row_lo, e.row_hi);
+            ensure!(
+                e.row_lo == expect_lo,
+                "shard bands are not contiguous: shard {i} starts at row {} (expected {})",
+                e.row_lo,
+                expect_lo
+            );
+            ensure!(!e.file.is_empty(), "shard {i} has no file");
+            expect_lo = e.row_hi;
+        }
+        ensure!(
+            expect_lo == self.rows,
+            "shard bands cover rows 0..{expect_lo} but the matrix has {} rows",
+            self.rows
+        );
+        Ok(())
+    }
+
+    /// Absolute path of a shard's store file.
+    pub fn shard_path(&self, entry: &ShardEntry) -> PathBuf {
+        self.dir.join(&entry.file)
+    }
+
+    /// `(row_lo, row_hi)` per band, in band order.
+    pub fn band_spans(&self) -> Vec<(usize, usize)> {
+        self.entries.iter().map(|e| (e.row_lo, e.row_hi)).collect()
+    }
+
+    /// Serialize to `path` (checksum stamped last).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.validate()?;
+        let mut body = format!("{MAGIC_LINE}\n");
+        body.push_str(&format!(
+            "matrix rows={} cols={} nnz={} sparse={} fingerprint={:016x} layout={} chunk_rows={} chunk_cols={}\n",
+            self.rows,
+            self.cols,
+            self.nnz,
+            u64::from(self.sparse),
+            self.fingerprint,
+            self.layout.as_str(),
+            self.chunk_rows,
+            self.chunk_cols,
+        ));
+        for e in &self.entries {
+            body.push_str(&format!(
+                "shard index={} row_lo={} row_hi={} file={}\n",
+                e.index, e.row_lo, e.row_hi, e.file
+            ));
+        }
+        let sum = checksum_bytes(body.as_bytes());
+        body.push_str(&format!("checksum={sum:016x}\n"));
+        fs::write(path, body).with_context(|| format!("write shard manifest {path:?}"))
+    }
+}
+
+fn parse_fields(
+    tag: &str,
+    line: &str,
+) -> Result<std::collections::BTreeMap<String, String>> {
+    let mut tokens = line.split_whitespace();
+    ensure!(
+        tokens.next() == Some(tag),
+        "expected a '{tag}' line, got: {line}"
+    );
+    let mut map = std::collections::BTreeMap::new();
+    for token in tokens {
+        let (k, v) = token
+            .split_once('=')
+            .with_context(|| format!("malformed field '{token}' (want key=value)"))?;
+        ensure!(
+            map.insert(k.to_string(), v.to_string()).is_none(),
+            "duplicate field '{k}'"
+        );
+    }
+    Ok(map)
+}
+
+fn take_usize(map: &mut std::collections::BTreeMap<String, String>, key: &str) -> Result<usize> {
+    map.remove(key)
+        .with_context(|| format!("missing field '{key}'"))?
+        .parse()
+        .with_context(|| format!("field '{key}' is not an integer"))
+}
+
+fn take_u64(map: &mut std::collections::BTreeMap<String, String>, key: &str) -> Result<u64> {
+    map.remove(key)
+        .with_context(|| format!("missing field '{key}'"))?
+        .parse()
+        .with_context(|| format!("field '{key}' is not an integer"))
+}
+
+fn take_hex(map: &mut std::collections::BTreeMap<String, String>, key: &str) -> Result<u64> {
+    let text = map.remove(key).with_context(|| format!("missing field '{key}'"))?;
+    u64::from_str_radix(&text, 16).with_context(|| format!("field '{key}' is not hex"))
+}
+
+/// Split an existing store into `n_shards` row bands under `out_dir`,
+/// writing one store file per band plus a `<stem>.lamcm` manifest.
+///
+/// Band boundaries are rounded up to a multiple of the source chunk
+/// height so bands never split a chunk band — every shard store keeps
+/// the parent's layout, chunk geometry and exact f32 payloads, which is
+/// what makes a routed run gather byte-identical blocks. When rounding
+/// leaves fewer than `n_shards` non-empty bands, the actual count wins.
+///
+/// Returns the manifest path and the parsed manifest.
+pub fn shard_store(
+    reader: &StoreReader,
+    out_dir: &Path,
+    stem: &str,
+    n_shards: usize,
+) -> Result<(PathBuf, ShardManifest)> {
+    ensure!(n_shards > 0, "need at least one shard");
+    let header = reader.header().clone();
+    let rows = header.rows;
+    let cols = header.cols;
+    ensure!(rows > 0 && cols > 0, "cannot shard an empty store");
+
+    // chunk-aligned band height, then the resulting band spans.
+    let raw = rows.div_ceil(n_shards);
+    let band_rows = raw.div_ceil(header.chunk_rows) * header.chunk_rows;
+    let mut spans = Vec::new();
+    let mut lo = 0;
+    while lo < rows {
+        let hi = (lo + band_rows).min(rows);
+        spans.push((lo, hi));
+        lo = hi;
+    }
+
+    fs::create_dir_all(out_dir).with_context(|| format!("create shard dir {out_dir:?}"))?;
+    let ext = if header.is_tiled() { "lamc3" } else { "lamc2" };
+    let all_cols: Vec<usize> = (0..cols).collect();
+    let mut entries = Vec::new();
+    for (index, &(row_lo, row_hi)) in spans.iter().enumerate() {
+        let file = format!("{stem}.s{index}.{ext}");
+        let path = out_dir.join(&file);
+        let mut writer = if header.is_tiled() {
+            ChunkWriter::create_tiled(&path, header.layout, cols, header.chunk_rows, header.chunk_cols)?
+        } else {
+            ChunkWriter::create(&path, header.layout, cols, header.chunk_rows)?
+        };
+        // Stream the band one chunk-height slab at a time: peak memory
+        // is one slab, same as repack.
+        let mut r = row_lo;
+        while r < row_hi {
+            let stop = (r + header.chunk_rows).min(row_hi);
+            let slab_rows: Vec<usize> = (r..stop).collect();
+            let slab = reader.tile(&slab_rows, &all_cols)?;
+            for i in 0..slab.rows() {
+                let row = &slab.data()[i * cols..(i + 1) * cols];
+                match header.layout {
+                    Layout::Dense => writer.append_dense_row(row)?,
+                    // Re-derive CSR entries from the dense slab. Explicit
+                    // zeros are dropped; `tile` yields 0.0 for absent
+                    // entries either way, so gathers are unchanged.
+                    Layout::Csr => {
+                        let entries: Vec<(u32, f32)> = row
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, &v)| v != 0.0)
+                            .map(|(j, &v)| (j as u32, v))
+                            .collect();
+                        writer.append_sparse_row(&entries)?;
+                    }
+                }
+            }
+            r = stop;
+        }
+        let summary = writer.finish()?;
+        ensure!(
+            summary.rows == row_hi - row_lo,
+            "shard {index} wrote {} rows, expected {}",
+            summary.rows,
+            row_hi - row_lo
+        );
+        entries.push(ShardEntry { index, row_lo, row_hi, file });
+    }
+
+    let manifest = ShardManifest {
+        rows,
+        cols,
+        nnz: header.nnz,
+        sparse: header.layout == Layout::Csr,
+        fingerprint: header.fingerprint,
+        layout: header.layout,
+        chunk_rows: header.chunk_rows,
+        chunk_cols: header.chunk_cols,
+        entries,
+        dir: out_dir.to_path_buf(),
+    };
+    let manifest_path = out_dir.join(format!("{stem}.lamcm"));
+    manifest.save(&manifest_path)?;
+    Ok((manifest_path, manifest))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{DenseMatrix, Matrix};
+    use crate::rng::Xoshiro256;
+    use crate::store::chunk::pack_matrix_tiled;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lamc_manifest_{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::seed_from(seed);
+        let data: Vec<f32> = (0..rows * cols).map(|_| rng.next_f32()).collect();
+        Matrix::Dense(DenseMatrix::from_vec(rows, cols, data))
+    }
+
+    #[test]
+    fn shard_store_round_trips_every_value() {
+        let dir = tmp_dir("roundtrip");
+        let matrix = sample_matrix(70, 40, 9);
+        let store = dir.join("m.lamc3");
+        pack_matrix_tiled(&matrix, &store, 16, 16).unwrap();
+        let reader = StoreReader::open(&store).unwrap();
+        let (path, manifest) = shard_store(&reader, &dir.join("shards"), "m", 3).unwrap();
+
+        // Bands are chunk-aligned, contiguous, and cover all rows.
+        let loaded = ShardManifest::load(&path).unwrap();
+        assert_eq!(loaded.rows, 70);
+        assert_eq!(loaded.cols, 40);
+        assert_eq!(loaded.fingerprint, reader.fingerprint());
+        assert_eq!(loaded.band_spans(), manifest.band_spans());
+        for (lo, _) in loaded.band_spans() {
+            assert_eq!(lo % 16, 0, "band start {lo} not chunk-aligned");
+        }
+
+        // Every value survives the split exactly.
+        let all_cols: Vec<usize> = (0..40).collect();
+        for entry in &loaded.entries {
+            let shard = StoreReader::open(&loaded.shard_path(entry)).unwrap();
+            assert_eq!(shard.rows(), entry.row_hi - entry.row_lo);
+            assert_eq!(shard.cols(), 40);
+            let local: Vec<usize> = (0..shard.rows()).collect();
+            let got = shard.tile(&local, &all_cols).unwrap();
+            let parent_rows: Vec<usize> = (entry.row_lo..entry.row_hi).collect();
+            let want = reader.tile(&parent_rows, &all_cols).unwrap();
+            assert_eq!(got.data(), want.data(), "shard {} content", entry.index);
+        }
+    }
+
+    #[test]
+    fn sparse_shards_gather_identically() {
+        let dir = tmp_dir("sparse");
+        let mut rng = Xoshiro256::seed_from(41);
+        let (rows, cols) = (50, 30);
+        let mut triplets = Vec::new();
+        for i in 0..rows {
+            for j in 0..cols {
+                if rng.next_f32() < 0.15 {
+                    triplets.push((i, j, rng.next_f32() + 0.01));
+                }
+            }
+        }
+        let matrix = Matrix::Sparse(crate::matrix::CsrMatrix::from_triplets(rows, cols, triplets));
+        let store = dir.join("s.lamc2");
+        crate::store::chunk::pack_matrix(&matrix, &store, 8).unwrap();
+        let reader = StoreReader::open(&store).unwrap();
+        let (path, _) = shard_store(&reader, &dir.join("shards"), "s", 2).unwrap();
+        let loaded = ShardManifest::load(&path).unwrap();
+        assert!(loaded.sparse);
+        let all_cols: Vec<usize> = (0..cols).collect();
+        for entry in &loaded.entries {
+            let shard = StoreReader::open(&loaded.shard_path(entry)).unwrap();
+            let local: Vec<usize> = (0..shard.rows()).collect();
+            let got = shard.tile(&local, &all_cols).unwrap();
+            let parent_rows: Vec<usize> = (entry.row_lo..entry.row_hi).collect();
+            let want = reader.tile(&parent_rows, &all_cols).unwrap();
+            assert_eq!(got.data(), want.data());
+        }
+    }
+
+    #[test]
+    fn corrupt_or_gappy_manifests_are_rejected() {
+        let dir = tmp_dir("validate");
+        let matrix = sample_matrix(32, 10, 3);
+        let store = dir.join("m.lamc2");
+        crate::store::chunk::pack_matrix(&matrix, &store, 8).unwrap();
+        let reader = StoreReader::open(&store).unwrap();
+        let (path, manifest) = shard_store(&reader, &dir, "m", 2).unwrap();
+
+        // Flip a digit inside the body: checksum must catch it.
+        let text = fs::read_to_string(&path).unwrap();
+        let bad = text.replacen("row_lo=0", "row_lo=1", 1);
+        fs::write(&path, bad).unwrap();
+        let err = ShardManifest::load(&path).unwrap_err().to_string();
+        let err = format!("{err:#}");
+        assert!(err.contains("manifest"), "{err}");
+
+        // A band gap fails structural validation even with a good sum.
+        let mut gappy = manifest.clone();
+        gappy.entries[1].row_lo += 8;
+        let err = format!("{:#}", gappy.validate().unwrap_err());
+        assert!(err.contains("not contiguous"), "{err}");
+
+        // Truncation (no checksum line) is typed too.
+        fs::write(&path, "LAMCM1\nmatrix rows=4\n").unwrap();
+        let err = format!("{:#}", ShardManifest::load(&path).unwrap_err());
+        assert!(err.contains("checksum"), "{err}");
+    }
+}

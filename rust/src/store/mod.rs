@@ -32,6 +32,10 @@
 //!   (row-band ↔ tiled, new band/tile extents) that streams one band at
 //!   a time and preserves the content fingerprint, so a repacked store
 //!   keeps its result-cache identity.
+//! * [`manifest`](mod@crate::store::manifest) — the `LAMCM1`
+//!   band-ownership manifest behind `lamc shard` and the shard router:
+//!   one logical matrix split into chunk-aligned row-band store files,
+//!   each band registrable on a different `lamc serve` node.
 //! * [`view`] — [`MatrixRef`] / [`MatrixView`]: location-transparent
 //!   handles adopted by `pipeline::run`, `coordinator::run_rounds` and
 //!   the partition planner/sampler, so the same co-clustering code
@@ -45,6 +49,7 @@
 
 pub mod chunk;
 pub mod format;
+pub mod manifest;
 pub mod prefetch;
 pub mod repack;
 pub mod view;
@@ -54,5 +59,6 @@ pub use chunk::{
     DEFAULT_CACHE_BYTES, DEFAULT_PREFETCH_BYTES,
 };
 pub use format::{checksum_bytes, Layout, StoreError, StoreHeader, DEFAULT_CHUNK_ROWS};
+pub use manifest::{shard_store, ShardEntry, ShardManifest};
 pub use repack::{repack, repack_reader, RepackOptions};
 pub use view::{MatrixRef, MatrixView};

@@ -1,0 +1,321 @@
+//! Fault-injection + protocol integration tests for the shard router.
+//!
+//! Workers here are real `lamc serve --shards` subprocesses (so
+//! `kill()` genuinely severs their TCP connections mid-round) or
+//! in-process servers where the scenario only needs wire behaviour.
+//! The contract under test, from docs/SERVICE.md:
+//!
+//! * a worker lost mid-round is retried on surviving owners, and the
+//!   retried run stays **byte-identical** to a single-node run;
+//! * losing the only owner of a band is a typed `shard band lost`
+//!   error — never a hang, never partial labels;
+//! * a worker that accepts jobs but never answers trips the job-level
+//!   wall-clock timeout (`shard job timeout`), not an infinite wait;
+//! * the router front end answers `SUBMIT`/`STATUS`/`RESULTB`/`STATS`
+//!   itself, with per-node store/cache counters summed across workers;
+//! * a proto-mismatched `HELLO` is rejected with a typed error line.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use lamc::data::synthetic::{planted_dense, PlantedConfig};
+use lamc::matrix::Matrix;
+use lamc::pipeline::{Lamc, LamcConfig};
+use lamc::service::protocol::{self, ShardSetInfo};
+use lamc::service::{
+    JobSpec, ServiceClient, ServiceConfig, ServiceManager, ServiceServer, ShardRouter,
+    ShardRouterConfig, ShardServer,
+};
+use lamc::store::{pack_matrix_tiled, shard_store, ShardManifest, StoreReader};
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("lamc_integration_shard")
+        .join(format!("{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A packed + sharded matrix plus the config both sides of an
+/// equivalence check run with.
+struct Fixture {
+    matrix: Matrix,
+    manifest_path: PathBuf,
+    manifest: ShardManifest,
+    config: LamcConfig,
+}
+
+fn fixture(name: &str, n_shards: usize) -> Fixture {
+    let dir = tmp_dir(name);
+    let matrix = planted_dense(&PlantedConfig {
+        rows: 120,
+        cols: 90,
+        row_clusters: 3,
+        col_clusters: 3,
+        noise: 0.1,
+        signal: 1.5,
+        density: 0.08,
+        seed: 0x5A4D,
+    })
+    .matrix;
+    let store_path = dir.join("m.lamc3");
+    pack_matrix_tiled(&matrix, &store_path, 16, 16).unwrap();
+    let reader = StoreReader::open(&store_path).unwrap();
+    let (manifest_path, manifest) = shard_store(&reader, &dir, "m", n_shards).unwrap();
+    assert_eq!(manifest.entries.len(), n_shards, "fixture shards");
+
+    // Workers pinned: the routed plan must match the reference plan.
+    let mut config = LamcConfig { k: 3, seed: 0x5A4D, workers: 2, ..Default::default() };
+    config.planner.candidate_sizes = vec![32, 48];
+    config.planner.max_samplings = 4;
+    Fixture { matrix, manifest_path, manifest, config }
+}
+
+/// Spawn a `lamc serve` subprocess and return it with its announced
+/// address. Stdout keeps draining on a background thread so the child
+/// never blocks on a full pipe.
+fn spawn_worker(shards_binding: &str) -> (Child, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_lamc"))
+        .args(["serve", "--addr", "127.0.0.1:0", "--runners", "1", "--shards", shards_binding])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn lamc serve");
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = BufReader::new(stdout);
+    let addr = loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).expect("read worker stdout");
+        assert!(n > 0, "worker exited before announcing its address");
+        if let Some(rest) = line.strip_prefix("lamc service listening on ") {
+            break rest.trim().to_string();
+        }
+    };
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        while matches!(reader.read_line(&mut sink), Ok(n) if n > 0) {
+            sink.clear();
+        }
+    });
+    (child, addr)
+}
+
+fn kill(mut child: Child) {
+    let _ = child.kill();
+    let _ = child.wait();
+}
+
+#[test]
+fn killed_worker_jobs_are_retried_byte_identically() {
+    let fx = fixture("retry_equiv", 2);
+    let local = Lamc::new(fx.config.clone()).run(&fx.matrix).unwrap();
+
+    // Two fully-replicated workers: either one can run any job.
+    let binding = format!("m={}", fx.manifest_path.display());
+    let (w0, a0) = spawn_worker(&binding);
+    let (w1, a1) = spawn_worker(&binding);
+    let router =
+        ShardRouter::connect(&[a0.clone(), a1.clone()], ShardRouterConfig::default()).unwrap();
+
+    // Healthy cluster first: the routed run matches the reference.
+    let routed = router.run_config("m", &fx.config).unwrap();
+    assert_eq!(routed.row_labels, local.row_labels, "healthy: row labels");
+    assert_eq!(routed.col_labels, local.col_labels, "healthy: col labels");
+
+    // Kill worker 0. Its connection is already established and was
+    // used for the run above, so the next round hits a dead socket
+    // mid-scatter: those jobs must take the retry path onto worker 1.
+    kill(w0);
+    let routed = router.run_config("m", &fx.config).unwrap();
+    assert_eq!(routed.row_labels, local.row_labels, "retried: row labels");
+    assert_eq!(routed.col_labels, local.col_labels, "retried: col labels");
+    assert_eq!(routed.k, local.k, "retried: k");
+    assert_eq!(routed.coclusters, local.coclusters, "retried: consensus ordering");
+
+    let health = router.worker_health();
+    let dead: Vec<String> =
+        health.iter().filter(|(_, alive)| !alive).map(|(a, _)| a.clone()).collect();
+    assert_eq!(dead, [a0], "exactly the killed worker is marked dead: {health:?}");
+
+    kill(w1);
+}
+
+#[test]
+fn losing_the_only_owner_of_a_band_is_a_typed_error() {
+    let fx = fixture("band_lost", 2);
+
+    // Disjoint ownership: worker 0 is the only owner of band 0.
+    let (w0, a0) = spawn_worker(&format!("m={}:0", fx.manifest_path.display()));
+    let (w1, a1) = spawn_worker(&format!("m={}:1", fx.manifest_path.display()));
+    let router = ShardRouter::connect(&[a0, a1], ShardRouterConfig::default()).unwrap();
+    kill(w0);
+
+    let started = Instant::now();
+    let err = router.run_config("m", &fx.config).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard"), "typed shard error, got: {msg}");
+    assert!(
+        msg.contains("shard band lost") || msg.contains("shard worker lost"),
+        "tagged variant, got: {msg}"
+    );
+    // Fail-fast, not a hang: one dead-socket detection + one retry.
+    assert!(started.elapsed() < Duration::from_secs(60), "took {:?}", started.elapsed());
+
+    kill(w1);
+}
+
+/// A worker that joins the cluster correctly (`HELLO` + `SHARDS`
+/// claiming every band) and then reads job verbs without ever
+/// answering them — the pathological peer the io/job timeouts exist
+/// for.
+fn spawn_hung_worker(name: &str, manifest: &ShardManifest) -> String {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let info = ShardSetInfo {
+        name: name.to_string(),
+        rows: manifest.rows,
+        cols: manifest.cols,
+        nnz: manifest.nnz,
+        sparse: manifest.sparse,
+        fingerprint: manifest.fingerprint,
+        bands: manifest.band_spans(),
+    };
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(mut stream) = conn else { break };
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            loop {
+                let mut line = String::new();
+                match reader.read_line(&mut line) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {}
+                }
+                let reply = match line.split_whitespace().next().unwrap_or("") {
+                    "HELLO" => format!(
+                        "OK proto={} version={}\n",
+                        protocol::PROTO_VERSION,
+                        env!("CARGO_PKG_VERSION")
+                    ),
+                    "SHARDS" => format!(
+                        "OK sets=1\n{}\nEND\n",
+                        protocol::encode_shard_set(&info).unwrap()
+                    ),
+                    // A job verb: go silent. The connection stays open
+                    // so only a timeout can unblock the router.
+                    _ => {
+                        std::thread::sleep(Duration::from_secs(30));
+                        break;
+                    }
+                };
+                if stream.write_all(reply.as_bytes()).is_err() || stream.flush().is_err() {
+                    break;
+                }
+            }
+        }
+    });
+    addr
+}
+
+#[test]
+fn hung_worker_trips_the_job_timeout() {
+    let fx = fixture("job_timeout", 2);
+    // One hung worker, no retries, and a per-exchange io timeout wider
+    // than the job budget: the only thing that can unblock the first
+    // job is the wall-clock deadline, so the surfaced error must be
+    // the job-timeout variant.
+    let a0 = spawn_hung_worker("m", &fx.manifest);
+    let cfg = ShardRouterConfig {
+        retries: 0,
+        io_timeout: Duration::from_secs(10),
+        job_timeout: Duration::from_secs(2),
+    };
+    let router = ShardRouter::connect(&[a0], cfg).unwrap();
+
+    let started = Instant::now();
+    let err = router.run_config("m", &fx.config).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("shard job timeout"), "typed timeout, got: {msg}");
+    assert!(started.elapsed() < Duration::from_secs(30), "took {:?}", started.elapsed());
+}
+
+/// Spawn an in-process worker owning the given shard indices.
+fn in_process_worker(fx: &Fixture, indices: &[usize]) -> ServiceServer {
+    let manager = ServiceManager::new(ServiceConfig { runners: 0, ..Default::default() });
+    manager.register_shards("m", &fx.manifest_path, Some(indices)).unwrap();
+    ServiceServer::spawn("127.0.0.1:0", manager).unwrap()
+}
+
+#[test]
+fn router_front_end_serves_results_and_aggregated_stats() {
+    let fx = fixture("front_end", 2);
+    let w0 = in_process_worker(&fx, &[0]);
+    let w1 = in_process_worker(&fx, &[1]);
+    let worker_addrs = [w0.addr().to_string(), w1.addr().to_string()];
+    let router = ShardRouter::connect(&worker_addrs, ShardRouterConfig::default()).unwrap();
+    let front = ShardServer::spawn("127.0.0.1:0", router).unwrap();
+
+    // SUBMIT + wait (RESULTB framing) through the router front end.
+    let spec = JobSpec { matrix: "m".into(), k: 3, seed: 0x5A4D, workers: 2, ..Default::default() };
+    let mut client = ServiceClient::connect(front.addr()).unwrap();
+    let id = client.submit(&spec).unwrap();
+    let reply = client.wait(id, Duration::from_secs(120)).unwrap();
+
+    // Byte-identical to running the same spec's config in process.
+    let local = Lamc::new(spec.lamc_config().unwrap()).run(&fx.matrix).unwrap();
+    assert_eq!(reply.row_labels, local.row_labels, "front-end row labels");
+    assert_eq!(reply.col_labels, local.col_labels, "front-end col labels");
+    assert_eq!(reply.k, local.k, "front-end k");
+
+    // ROUTE introspection.
+    let route = client.route().unwrap();
+    assert_eq!(route.get("workers").map(String::as_str), Some("2"));
+    assert_eq!(route.get("live").map(String::as_str), Some("2"));
+
+    // STATS: the router's store/cache counters are the sum of the
+    // per-node counters (the aggregation-bug regression check).
+    let routed_stats = client.stats().unwrap();
+    let mut chunk_sum = 0u64;
+    let mut bytes_sum = 0u64;
+    for addr in &worker_addrs {
+        let stats = ServiceClient::connect(addr.as_str()).unwrap().stats().unwrap();
+        chunk_sum += stats["store_chunks_read"].parse::<u64>().unwrap();
+        bytes_sum += stats["store_bytes_read"].parse::<u64>().unwrap();
+    }
+    assert!(chunk_sum > 0, "workers actually streamed shard chunks");
+    assert_eq!(routed_stats["store_chunks_read"].parse::<u64>().unwrap(), chunk_sum);
+    assert_eq!(routed_stats["store_bytes_read"].parse::<u64>().unwrap(), bytes_sum);
+    assert_eq!(routed_stats.get("workers").map(String::as_str), Some("2"));
+    assert_eq!(routed_stats.get("workers_live").map(String::as_str), Some("2"));
+    for key in ["gather_s", "exec_s", "merge_s", "jobs_done"] {
+        assert!(routed_stats.contains_key(key), "router STATS carries {key}");
+    }
+    assert_eq!(routed_stats.get("jobs_done").map(String::as_str), Some("1"));
+
+    drop(client);
+    drop(front);
+    for server in [w0, w1] {
+        server.shutdown();
+        server.join().shutdown();
+    }
+}
+
+#[test]
+fn proto_mismatched_hello_is_rejected() {
+    let fx = fixture("hello_mismatch", 2);
+    let worker = in_process_worker(&fx, &[0, 1]);
+
+    let mut stream = TcpStream::connect(worker.addr()).unwrap();
+    stream.write_all(b"HELLO proto=99 version=0.0.0\n").unwrap();
+    stream.flush().unwrap();
+    let mut line = String::new();
+    BufReader::new(&stream).read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR "), "rejected, got: {line}");
+    assert!(line.contains("protocol version mismatch"), "typed message, got: {line}");
+
+    worker.shutdown();
+    worker.join().shutdown();
+}

@@ -1,4 +1,5 @@
-//! Layout-equivalence property harness + corruption-injection sweep.
+//! Layout-equivalence property harness + corruption-injection sweep
+//! + 1-node-vs-N-node shard-routing equivalence harness.
 //!
 //! The contract every store layout — current and future — must keep:
 //!
@@ -11,10 +12,18 @@
 //! 3. **Typed failure, never a panic.** Damage to any structural region
 //!    of either format surfaces as the right `StoreError` variant, and
 //!    `lamc inspect --verify` exits non-zero on a damaged store.
+//! 4. **Byte-identical routing.** A `ShardRouter` scattering the same
+//!    run across 2–3 worker nodes over loopback TCP yields the same
+//!    labels, the same `k`, and the same consensus co-cluster ordering
+//!    as the in-process single-node run — including when a flaky
+//!    worker drops its connection mid-round and jobs take the
+//!    retry path.
 //!
 //! Seeded and reproducible via `testkit` (`LAMC_PROP_SEED` /
 //! `LAMC_PROP_CASES` env overrides).
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpListener;
 use std::path::{Path, PathBuf};
 use std::process::Command;
 
@@ -22,8 +31,13 @@ use lamc::data::synthetic::{planted_dense, planted_sparse, PlantedConfig};
 use lamc::matrix::{CsrMatrix, DenseMatrix, Matrix};
 use lamc::pipeline::{Lamc, LamcConfig};
 use lamc::rng::Xoshiro256;
+use lamc::service::protocol::{self, ShardSetInfo};
+use lamc::service::{
+    ServiceConfig, ServiceManager, ServiceServer, ShardRouter, ShardRouterConfig,
+};
 use lamc::store::{
-    pack_matrix, pack_matrix_tiled, MatrixRef, StoreError, StoreReader,
+    pack_matrix, pack_matrix_tiled, shard_store, MatrixRef, ShardManifest, StoreError,
+    StoreReader,
 };
 use lamc::testkit;
 
@@ -45,21 +59,17 @@ struct LayoutCase {
     chunk_cols: usize,
 }
 
-fn build_matrix(case: &LayoutCase) -> Matrix {
-    let mut rng = Xoshiro256::seed_from(case.seed);
-    if case.sparse {
-        let nnz = (case.rows * case.cols / 3).max(1);
+fn build_matrix(seed: u64, rows: usize, cols: usize, sparse: bool) -> Matrix {
+    let mut rng = Xoshiro256::seed_from(seed);
+    if sparse {
+        let nnz = (rows * cols / 3).max(1);
         let mut trip = Vec::with_capacity(nnz);
         for _ in 0..nnz {
-            trip.push((
-                rng.next_below(case.rows),
-                rng.next_below(case.cols),
-                rng.next_f32() + 0.01,
-            ));
+            trip.push((rng.next_below(rows), rng.next_below(cols), rng.next_f32() + 0.01));
         }
-        Matrix::Sparse(CsrMatrix::from_triplets(case.rows, case.cols, trip))
+        Matrix::Sparse(CsrMatrix::from_triplets(rows, cols, trip))
     } else {
-        Matrix::Dense(DenseMatrix::randn(case.rows, case.cols, &mut rng))
+        Matrix::Dense(DenseMatrix::randn(rows, cols, &mut rng))
     }
 }
 
@@ -80,7 +90,7 @@ fn any_tile_query_is_byte_identical_across_layouts() {
             chunk_cols: 1 + rng.next_below(16),
         },
         |case| {
-            let matrix = build_matrix(case);
+            let matrix = build_matrix(case.seed, case.rows, case.cols, case.sparse);
             pack_matrix(&matrix, &band_path, case.chunk_rows)
                 .map_err(|e| format!("pack lamc2: {e:#}"))?;
             pack_matrix_tiled(&matrix, &tiled_path, case.chunk_rows, case.chunk_cols)
@@ -323,4 +333,199 @@ fn corruption_in_any_region_is_a_typed_error_never_a_panic() {
         assert_eq!(probe(&p), Err("Corrupt"), "{fmt}: cross-version trailer magic");
         assert!(!run_inspect_verify(&p).success(), "{fmt}: inspect fails on trailer swap");
     }
+}
+
+// ---- 1-node-vs-N-node shard-routing equivalence -----------------------
+
+/// One generated routing case: matrix content, shard count, worker
+/// count, and whether a flaky worker joins the cluster.
+#[derive(Debug)]
+struct ShardCase {
+    idx: usize,
+    seed: u64,
+    rows: usize,
+    cols: usize,
+    sparse: bool,
+    k: usize,
+    n_shards: usize,
+    n_workers: usize,
+    flaky: bool,
+}
+
+/// A worker that joins the cluster correctly — it answers `HELLO` with
+/// the real proto/version and `SHARDS` claiming *every* band of the
+/// manifest, exactly like a fully-replicated node — and then hangs up
+/// on any job verb. Because it advertises ownership of all bands and
+/// registers first (worker index 0), the router's deterministic
+/// owner-selection sends the first round of jobs straight at it,
+/// forcing the `WorkerLost` → retry path before the cluster settles on
+/// the live workers.
+fn spawn_flaky_worker(name: &str, manifest: &ShardManifest) -> std::net::SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let info = ShardSetInfo {
+        name: name.to_string(),
+        rows: manifest.rows,
+        cols: manifest.cols,
+        nnz: manifest.nnz,
+        sparse: manifest.sparse,
+        fingerprint: manifest.fingerprint,
+        bands: manifest.band_spans(),
+    };
+    std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(mut stream) = conn else { break };
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            loop {
+                let mut line = String::new();
+                match reader.read_line(&mut line) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {}
+                }
+                let reply = match line.split_whitespace().next().unwrap_or("") {
+                    "HELLO" => format!(
+                        "OK proto={} version={}\n",
+                        protocol::PROTO_VERSION,
+                        env!("CARGO_PKG_VERSION")
+                    ),
+                    "SHARDS" => format!(
+                        "OK sets=1\n{}\nEND\n",
+                        protocol::encode_shard_set(&info).unwrap()
+                    ),
+                    // Any job verb: drop the connection mid-round.
+                    _ => break,
+                };
+                if stream.write_all(reply.as_bytes()).is_err() || stream.flush().is_err() {
+                    break;
+                }
+            }
+        }
+    });
+    addr
+}
+
+#[test]
+fn routed_run_is_byte_identical_to_single_node() {
+    // The acceptance floor is 20 seeded configs; clamp the env override
+    // so a low LAMC_PROP_CASES cannot drop below it.
+    let cases = testkit::default_cases().clamp(20, 24);
+    let counter = std::cell::Cell::new(0usize);
+    testkit::check(
+        "2-/3-worker routed run == single-node run (labels, k, consensus order)",
+        cases,
+        |rng| {
+            let idx = counter.get();
+            counter.set(idx + 1);
+            ShardCase {
+                idx,
+                seed: rng.next_u64(),
+                rows: 64 + rng.next_below(48),
+                cols: 48 + rng.next_below(48),
+                sparse: rng.next_below(2) == 1,
+                k: 2 + rng.next_below(3),
+                n_shards: 2 + rng.next_below(3),
+                n_workers: 2 + rng.next_below(2),
+                // Every 4th case exercises the fault-injection retry
+                // path (deterministic, so the floor always includes it).
+                flaky: idx % 4 == 3,
+            }
+        },
+        |case| {
+            let dir = tmp_dir(&format!("shard_equiv_{}", case.idx));
+            let matrix = build_matrix(case.seed, case.rows, case.cols, case.sparse);
+
+            // Pack, then split into row-band shard stores + manifest.
+            let store_path = dir.join("m.lamc3");
+            pack_matrix_tiled(&matrix, &store_path, 16, 16)
+                .map_err(|e| format!("pack: {e:#}"))?;
+            let reader = StoreReader::open(&store_path).map_err(|e| format!("open: {e:#}"))?;
+            let (manifest_path, manifest) = shard_store(&reader, &dir, "m", case.n_shards)
+                .map_err(|e| format!("shard: {e:#}"))?;
+            // Band rounding can coalesce shards; ownership is over what
+            // actually exists.
+            let n_bands = manifest.entries.len();
+
+            // Identical config on both sides. Workers pinned: byte
+            // identity requires the same round plan, and plan geometry
+            // depends on the resolved worker count.
+            let mut config =
+                LamcConfig { k: case.k, seed: 0x1A3C ^ case.seed, workers: 2, ..Default::default() };
+            config.planner.candidate_sizes = vec![32, 48];
+            config.planner.max_samplings = 6;
+
+            // Reference: in-process single-node run.
+            let local = Lamc::new(config.clone())
+                .run(&matrix)
+                .map_err(|e| format!("single-node run: {e:#}"))?;
+
+            // Cluster: N in-process workers over loopback TCP with
+            // disjoint band ownership (band i -> worker i mod N), plus
+            // — in flaky cases — a fake worker claiming every band that
+            // dies on first contact with a job.
+            let mut addrs = Vec::new();
+            let mut flaky_addr = String::new();
+            if case.flaky {
+                flaky_addr = spawn_flaky_worker("m", &manifest).to_string();
+                addrs.push(flaky_addr.clone());
+            }
+            let mut servers = Vec::new();
+            for w in 0..case.n_workers {
+                let owned: Vec<usize> =
+                    (0..n_bands).filter(|i| i % case.n_workers == w).collect();
+                if owned.is_empty() {
+                    continue;
+                }
+                let manager = ServiceManager::new(ServiceConfig { runners: 0, ..Default::default() });
+                manager
+                    .register_shards("m", &manifest_path, Some(&owned))
+                    .map_err(|e| format!("register worker {w}: {e:#}"))?;
+                let server = ServiceServer::spawn("127.0.0.1:0", manager)
+                    .map_err(|e| format!("spawn worker {w}: {e:#}"))?;
+                addrs.push(server.addr().to_string());
+                servers.push(server);
+            }
+
+            let router = ShardRouter::connect(&addrs, ShardRouterConfig::default())
+                .map_err(|e| format!("router connect: {e:#}"))?;
+            let routed = router
+                .run_config("m", &config)
+                .map_err(|e| format!("routed run: {e:#}"))?;
+
+            if case.flaky {
+                // The retry path must actually have fired: the flaky
+                // worker took the first jobs, dropped them, and was
+                // marked dead; the run still completed.
+                let health = router.worker_health();
+                let dead: Vec<String> =
+                    health.iter().filter(|(_, alive)| !alive).map(|(a, _)| a.clone()).collect();
+                if dead != [flaky_addr.clone()] {
+                    return Err(format!(
+                        "expected exactly the flaky worker {flaky_addr} dead, health: {health:?}"
+                    ));
+                }
+            }
+
+            if routed.row_labels != local.row_labels {
+                return Err("row labels differ from single-node run".into());
+            }
+            if routed.col_labels != local.col_labels {
+                return Err("col labels differ from single-node run".into());
+            }
+            if routed.k != local.k {
+                return Err(format!("k differs: routed {} vs local {}", routed.k, local.k));
+            }
+            // Consensus ordering: the merged co-cluster sequence itself
+            // must match, not just the labels extracted from it.
+            if routed.coclusters != local.coclusters {
+                return Err("consensus co-cluster set/order differs from single-node run".into());
+            }
+
+            drop(router);
+            for server in servers {
+                server.shutdown();
+                server.join().shutdown();
+            }
+            Ok(())
+        },
+    );
 }
