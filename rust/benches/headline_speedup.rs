@@ -4,7 +4,13 @@
 //! Dense: LAMC-SCC vs classical SCC (exact SVD) on the Amazon-1000
 //! shape. Sparse: LAMC-PNMTF vs PNMTF on the CLASSIC4 shape.
 //! Reports the measured reduction next to the paper's number.
+//!
+//! Run: `cargo bench --bench headline_speedup [-- --json OUT.json]` —
+//! the JSON mode is what CI's perf-smoke job folds into `BENCH_7.json`
+//! and feeds to `scripts/bench_compare.py` for the perf-trajectory
+//! regression gate (tolerance policy in docs/BENCHMARKS.md).
 
+use lamc::bench_util::json_arg_path;
 use lamc::data::datasets;
 use lamc::harness::{run_method, Method};
 
@@ -44,4 +50,18 @@ fn main() {
     println!("  PNMTF      : {t_p:>9.3} s  (NMI {})", pnmtf.nmi_cell());
     println!("  LAMC-PNMTF : {t_lp:>9.3} s  (NMI {})", lamc_pnmtf.nmi_cell());
     println!("  reduction  : {:.1}%   (paper: up to 30%)", reduction(t_p, t_lp));
+
+    if let Some(json_out) = json_arg_path() {
+        let json = format!(
+            "{{\n  \"bench\": \"headline_speedup\",\n  \"scale\": {scale},\n  \
+             \"t_scc_dense_s\": {t_scc:.6},\n  \"t_lamc_scc_dense_s\": {t_lamc:.6},\n  \
+             \"reduction_dense_pct\": {:.4},\n  \
+             \"t_pnmtf_sparse_s\": {t_p:.6},\n  \"t_lamc_pnmtf_sparse_s\": {t_lp:.6},\n  \
+             \"reduction_sparse_pct\": {:.4}\n}}\n",
+            reduction(t_scc, t_lamc),
+            reduction(t_p, t_lp),
+        );
+        std::fs::write(&json_out, json).unwrap();
+        println!("wrote {json_out:?}");
+    }
 }

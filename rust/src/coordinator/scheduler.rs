@@ -16,7 +16,7 @@
 //! stay deterministic and (round, grid)-ordered regardless of pool size
 //! or interleaving with concurrent service requests.
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -25,7 +25,8 @@ use anyhow::Result;
 use crate::partition::{BlockJob, SamplingRound};
 use crate::rng::{SplitMix64, Xoshiro256};
 use crate::service::WorkerPool;
-use crate::store::MatrixView;
+use crate::store::{IoCounters, MatrixView};
+use crate::trace::{Event, Trace};
 
 use super::router::Router;
 use super::stats::Stats;
@@ -42,11 +43,15 @@ pub struct SchedulerConfig {
     /// and the job's (round, grid) coordinates, so results do not depend
     /// on worker interleaving.
     pub seed: u64,
+    /// Job-lifecycle event sink ([`Event::RoundStarted`],
+    /// [`Event::RoundCompleted`], [`Event::PrefetchWave`]). Advisory:
+    /// disabled by default and never affects results, only visibility.
+    pub trace: Trace,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        Self { workers: 0, k: 4, seed: 0x5EED }
+        Self { workers: 0, k: 4, seed: 0x5EED, trace: Trace::default() }
     }
 }
 
@@ -101,19 +106,35 @@ pub fn run_rounds<'a>(
     let slots: Mutex<Vec<Option<Result<crate::cocluster::CoclusterResult>>>> =
         Mutex::new((0..jobs.len()).map(|_| None).collect());
 
+    let trace = &cfg.trace;
+    // Per-round (gather_ns, exec_ns) accumulation feeding the
+    // `RoundCompleted` events; `round_of` maps a flat job index back to
+    // its round.
+    let round_of: Vec<usize> = rounds
+        .iter()
+        .enumerate()
+        .flat_map(|(r, round)| std::iter::repeat_n(r, round.jobs.len()))
+        .collect();
+    let round_ns: Vec<(AtomicU64, AtomicU64)> =
+        (0..rounds.len()).map(|_| (AtomicU64::new(0), AtomicU64::new(0))).collect();
+
     // One claim-loop body shared by both dispatch shapes below.
     let run_one = |idx: usize| {
         let job = jobs[idx];
         let t0 = Instant::now();
         let block = matrix.gather_block(&job.rows, &job.cols);
-        stats.add_gather(t0.elapsed().as_nanos() as u64);
+        let gather_ns = t0.elapsed().as_nanos() as u64;
+        stats.add_gather(gather_ns);
+        round_ns[round_of[idx]].0.fetch_add(gather_ns, Ordering::Relaxed);
 
         let result = match block {
             Ok(block) => {
                 let seed = job_seed(cfg.seed, job);
                 let t1 = Instant::now();
                 let result = router.execute(&block, cfg.k, seed, stats);
-                stats.add_exec(t1.elapsed().as_nanos() as u64);
+                let exec_ns = t1.elapsed().as_nanos() as u64;
+                stats.add_exec(exec_ns);
+                round_ns[round_of[idx]].1.fetch_add(exec_ns, Ordering::Relaxed);
                 stats.blocks_total.fetch_add(1, Ordering::Relaxed);
                 result
             }
@@ -126,38 +147,82 @@ pub fn run_rounds<'a>(
         slots.lock().unwrap()[idx] = Some(result);
     };
 
+    let round_completed = |r: usize, io: &IoCounters| Event::RoundCompleted {
+        round: r as u64,
+        jobs: rounds[r].jobs.len() as u64,
+        gather_s: round_ns[r].0.load(Ordering::Relaxed) as f64 / 1e9,
+        exec_s: round_ns[r].1.load(Ordering::Relaxed) as f64 / 1e9,
+        io_chunks: io.chunks_read,
+        io_bytes: io.bytes_read,
+        io_cache_hits: io.cache_hits,
+        prefetch_issued: io.prefetch_issued,
+        prefetch_hits: io.prefetch_hits,
+        prefetch_wasted_bytes: io.prefetch_wasted_bytes,
+    };
+
     if !matrix.prefetch_enabled() {
         // Nothing to prefetch (in-memory matrix, or a reader with
         // prefetch disabled): keep the flat single-wave dispatch —
         // workers stay busy across round boundaries instead of idling
         // behind each round's straggler.
+        for (r, round) in rounds.iter().enumerate() {
+            if !round.jobs.is_empty() {
+                trace.emit(Event::RoundStarted { round: r as u64, jobs: round.jobs.len() as u64 });
+            }
+        }
         let concurrency = cfg.effective_workers().min(jobs.len());
         WorkerPool::global().run_jobs(concurrency, jobs.len(), &run_one);
+        // Fold the store I/O this reader accumulated (watermarked claim,
+        // so concurrent runs sharing the reader never double-count).
+        // Flat dispatch has no per-round I/O boundary: the run's whole
+        // delta rides on the last round's event.
+        let io = matrix.take_io_delta();
+        stats.add_io(&io);
+        if trace.enabled() {
+            let last = rounds.iter().rposition(|round| !round.jobs.is_empty());
+            for (r, round) in rounds.iter().enumerate() {
+                if round.jobs.is_empty() {
+                    continue;
+                }
+                let io_r = if Some(r) == last { io } else { IoCounters::default() };
+                trace.emit(round_completed(r, &io_r));
+            }
+        }
     } else {
         // Store-backed with a live prefetcher: rounds execute as waves
         // so the leader can hand the prefetcher round r+1's plan before
         // dispatching round r. Warm round 0 while its own wave spins up
         // (intra-round overlap)…
         matrix.prefetch_plan(&rounds[..1]);
+        trace.emit(Event::PrefetchWave { round: 0 });
         let mut base = 0usize;
         for (r, round) in rounds.iter().enumerate() {
             // …then stream round r+1's chunks while round r computes.
             if r + 1 < rounds.len() {
                 matrix.prefetch_plan(&rounds[r + 1..r + 2]);
+                trace.emit(Event::PrefetchWave { round: (r + 1) as u64 });
             }
             if round.jobs.is_empty() {
                 continue;
             }
+            trace.emit(Event::RoundStarted { round: r as u64, jobs: round.jobs.len() as u64 });
             let concurrency = cfg.effective_workers().min(round.jobs.len());
             let offset = base;
             WorkerPool::global().run_jobs(concurrency, round.jobs.len(), |i| run_one(offset + i));
             base += round.jobs.len();
+            if trace.enabled() {
+                // Claim this wave's I/O delta so the event carries it;
+                // the claim still reaches `stats` right here, and the
+                // final claim below scoops any late prefetch residue.
+                let io = matrix.take_io_delta();
+                stats.add_io(&io);
+                trace.emit(round_completed(r, &io));
+            }
         }
+        // Fold the store I/O this reader accumulated (watermarked claim,
+        // so concurrent runs sharing the reader never double-count).
+        stats.add_io(&matrix.take_io_delta());
     }
-
-    // Fold the store I/O this reader accumulated (watermarked claim, so
-    // concurrent runs sharing the reader never double-count).
-    stats.add_io(&matrix.take_io_delta());
 
     let mut out = Vec::with_capacity(jobs.len());
     let mut first_err: Option<anyhow::Error> = None;
@@ -393,6 +458,38 @@ mod tests {
         let stray = BlockJob { round: 2, grid: (0, 0), rows: vec![2, 99], cols: vec![0] };
         let err = plan_jobs_by_band(&[&stray], &bands).unwrap_err().to_string();
         assert!(err.contains("outside every shard band"), "{err}");
+    }
+
+    #[test]
+    fn trace_emits_round_events_without_changing_results() {
+        let (matrix, rounds) = setup();
+        let router = Router::native_only(Arc::new(SpectralCocluster::default()));
+        let journal = Arc::new(crate::trace::Journal::new(64));
+        let cfg = SchedulerConfig {
+            trace: Trace::to_journal(Arc::clone(&journal)),
+            ..Default::default()
+        };
+        let traced = run_rounds(&matrix, &rounds, &router, &cfg, &Stats::default()).unwrap();
+        let plain =
+            run_rounds(&matrix, &rounds, &router, &SchedulerConfig::default(), &Stats::default())
+                .unwrap();
+        assert_eq!(traced, plain, "tracing is advisory: results identical");
+
+        let recs = journal.events_after(None, usize::MAX);
+        let starts = recs
+            .iter()
+            .filter(|r| matches!(r.event, Event::RoundStarted { .. }))
+            .count();
+        let completed: Vec<(u64, u64)> = recs
+            .iter()
+            .filter_map(|r| match r.event {
+                Event::RoundCompleted { round, jobs, .. } => Some((round, jobs)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(starts, completed.len(), "every started round completes");
+        assert_eq!(completed.len(), 2, "setup() samples two rounds");
+        assert_eq!(completed.iter().map(|&(_, j)| j).sum::<u64>(), 8, "all 8 jobs accounted");
     }
 
     #[test]

@@ -93,5 +93,6 @@ pub mod runtime;
 pub mod service;
 pub mod store;
 pub mod testkit;
+pub mod trace;
 
 pub use pipeline::{Lamc, LamcConfig, LamcResult};

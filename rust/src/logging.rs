@@ -4,6 +4,7 @@
 //! Timestamps are monotonic seconds since process start — enough for
 //! correlating scheduler events without pulling in a clock/tz stack.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
@@ -20,11 +21,23 @@ pub enum Level {
 impl Level {
     fn from_env() -> Level {
         match std::env::var("LAMC_LOG").unwrap_or_default().to_lowercase().as_str() {
+            "" | "info" => Level::Info,
             "error" => Level::Error,
             "warn" => Level::Warn,
             "debug" => Level::Debug,
             "trace" => Level::Trace,
-            _ => Level::Info,
+            other => {
+                // A typo'd LAMC_LOG (e.g. "inof") must not silently read
+                // as a deliberate Info — warn once, then default.
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "lamc: unrecognized LAMC_LOG='{other}' \
+                         (want error|warn|info|debug|trace); defaulting to info"
+                    );
+                });
+                Level::Info
+            }
         }
     }
 
@@ -69,9 +82,38 @@ pub fn uptime() -> f64 {
     START.get_or_init(Instant::now).elapsed().as_secs_f64()
 }
 
+thread_local! {
+    static JOB_SCOPE: Cell<Option<u64>> = const { Cell::new(None) };
+}
+
+/// RAII guard: while alive, every log line emitted from this thread is
+/// tagged `[job N]`, so interleaved multi-job serve logs correlate.
+/// Restores the previous scope on drop, so nested scopes compose.
+pub struct JobScope(Option<u64>);
+
+/// Enter job `id`'s log scope on the current thread.
+pub fn job_scope(id: u64) -> JobScope {
+    JobScope(JOB_SCOPE.with(|s| s.replace(Some(id))))
+}
+
+/// The job id tagging this thread's log lines, if any.
+pub fn current_job() -> Option<u64> {
+    JOB_SCOPE.with(|s| s.get())
+}
+
+impl Drop for JobScope {
+    fn drop(&mut self) {
+        let prev = self.0;
+        JOB_SCOPE.with(|s| s.set(prev));
+    }
+}
+
 pub fn log(l: Level, module: &str, msg: std::fmt::Arguments<'_>) {
     if l <= level() {
-        eprintln!("[{:>9.3}] {} {}: {}", uptime(), l.tag(), module, msg);
+        match current_job() {
+            Some(id) => eprintln!("[{:>9.3}] {} {} [job {id}]: {}", uptime(), l.tag(), module, msg),
+            None => eprintln!("[{:>9.3}] {} {}: {}", uptime(), l.tag(), module, msg),
+        }
     }
 }
 
@@ -118,5 +160,20 @@ mod tests {
         let a = uptime();
         let b = uptime();
         assert!(b >= a);
+    }
+
+    #[test]
+    fn job_scope_nests_and_restores() {
+        assert_eq!(current_job(), None);
+        {
+            let _outer = job_scope(7);
+            assert_eq!(current_job(), Some(7));
+            {
+                let _inner = job_scope(9);
+                assert_eq!(current_job(), Some(9));
+            }
+            assert_eq!(current_job(), Some(7), "inner scope restores the outer one");
+        }
+        assert_eq!(current_job(), None);
     }
 }

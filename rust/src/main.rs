@@ -21,6 +21,10 @@
 //! * `submit`   — submit a job to a running service (or router).
 //! * `status`   — query a job's state (or server-wide stats) on a
 //!                running service.
+//! * `watch`    — stream a job's lifecycle events (EVENTS cursor
+//!                protocol) until it finishes.
+//! * `metrics`  — print a running service's Prometheus-style metrics
+//!                exposition (METRICS verb).
 //! * `load`     — load a dataset, matrix file or store on a running
 //!                service.
 //! * `shutdown` — ask a running service to stop accepting connections.
@@ -89,6 +93,8 @@ USAGE:
                 [--p-thresh F] [--tau F] [--workers N] [--wait] [--timeout SECS]
                 [--labels-out FILE (with --wait)]
   lamc status   [--addr HOST:PORT] [--id N]
+  lamc watch    [--addr HOST:PORT] --id N [--timeout SECS]
+  lamc metrics  [--addr HOST:PORT]
   lamc load     [--addr HOST:PORT] --name NAME
                 (--dataset D [--rows N] [--seed N] | --path FILE | --store FILE.lamc2)
   lamc shutdown [--addr HOST:PORT]
@@ -131,6 +137,8 @@ fn run() -> Result<()> {
         "route" => cmd_route(&args),
         "submit" => cmd_submit(&args),
         "status" => cmd_status(&args),
+        "watch" => cmd_watch(&args),
+        "metrics" => cmd_metrics(&args),
         "load" => cmd_load(&args),
         "shutdown" => cmd_shutdown(&args),
         "datasets" => cmd_datasets(&args),
@@ -627,6 +635,55 @@ fn cmd_status(args: &Args) -> Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+/// Tail a job's lifecycle event journal until a terminal event lands.
+/// Polls the `EVENTS` cursor protocol (so restarts/reconnects resume at
+/// the last seen sequence number) and prints one event per line — the
+/// CI shard smoke greps this transcript for `RoundCompleted`.
+fn cmd_watch(args: &Args) -> Result<()> {
+    args.expect_flags(&["addr", "id", "timeout"])?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    anyhow::ensure!(args.get("id").is_some(), "--id required (job to watch)");
+    let id = args.get_u64("id", 0)?;
+    let timeout = std::time::Duration::from_secs(args.get_u64("timeout", 600)?);
+    let deadline = std::time::Instant::now() + timeout;
+    let mut client = ServiceClient::connect(addr)?;
+    let mut cursor: Option<u64> = None;
+    loop {
+        let (lines, next) = client.events(id, cursor)?;
+        for line in &lines {
+            println!("{line}");
+            if let Some(kind) = line.split_whitespace().find_map(|t| t.strip_prefix("kind=")) {
+                match kind {
+                    "JobDone" => return Ok(()),
+                    "JobFailed" => bail!("job {id} failed (see event stream above)"),
+                    _ => {}
+                }
+            }
+        }
+        if let Some(n) = next {
+            cursor = Some(n);
+        }
+        // An empty page leaves the cursor where it was; back off briefly
+        // before asking again so an idle job doesn't spin the server.
+        if lines.is_empty() {
+            anyhow::ensure!(
+                std::time::Instant::now() < deadline,
+                "timed out after {}s waiting for job {id} to finish",
+                timeout.as_secs()
+            );
+            std::thread::sleep(std::time::Duration::from_millis(200));
+        }
+    }
+}
+
+fn cmd_metrics(args: &Args) -> Result<()> {
+    args.expect_flags(&["addr"])?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let mut client = ServiceClient::connect(addr)?;
+    print!("{}", client.metrics()?);
     Ok(())
 }
 

@@ -16,6 +16,7 @@ use crate::partition::{plan_view, sample_partition_view, BlockJob, PartitionPlan
 #[cfg(feature = "pjrt")]
 use crate::runtime::RuntimePool;
 use crate::store::MatrixView;
+use crate::trace::{Event, Trace};
 
 /// Which atom algorithm runs inside each block.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -67,6 +68,10 @@ pub struct LamcConfig {
     /// Worker threads (0 = auto).
     pub workers: usize,
     pub seed: u64,
+    /// Job-lifecycle event sink threaded down into the scheduler
+    /// (rounds, prefetch waves) and the merge stage. Advisory and
+    /// disabled by default: labels are byte-identical either way.
+    pub trace: Trace,
     /// Optional PJRT runtime; when set, blocks whose shape matches a
     /// compiled artifact run on the XLA route. Only available with the
     /// `pjrt` cargo feature — the default build always routes native.
@@ -84,6 +89,7 @@ impl Default for LamcConfig {
             merge: MergeConfig::default(),
             workers: 0,
             seed: 0x1A3C,
+            trace: Trace::default(),
             #[cfg(feature = "pjrt")]
             runtime: None,
         }
@@ -189,7 +195,12 @@ impl Lamc {
         };
         #[cfg(not(feature = "pjrt"))]
         let router = Router::native_only(atom);
-        let sched_cfg = SchedulerConfig { workers: cfg.workers, k: cfg.k, seed: cfg.seed };
+        let sched_cfg = SchedulerConfig {
+            workers: cfg.workers,
+            k: cfg.k,
+            seed: cfg.seed,
+            trace: cfg.trace.clone(),
+        };
         let stats = Stats::default();
         let results = run_rounds(matrix, &rounds, &router, &sched_cfg, &stats)?;
 
@@ -200,9 +211,12 @@ impl Lamc {
             .flat_map(|(job, res)| Self::block_to_atoms(job, res))
             .collect();
         crate::log_info!("merging {} atom co-clusters", atoms.len());
+        cfg.trace.emit(Event::MergeStarted { blocks: atoms.len() as u64 });
         let merged = merge_coclusters(atoms, &cfg.merge);
         let (row_labels, col_labels, k) = extract_labels(&merged, rows, cols);
-        stats.merge_ns.store(t_merge.elapsed().as_nanos() as u64, std::sync::atomic::Ordering::Relaxed);
+        let merge_ns = t_merge.elapsed().as_nanos() as u64;
+        stats.merge_ns.store(merge_ns, std::sync::atomic::Ordering::Relaxed);
+        cfg.trace.emit(Event::MergeCompleted { k: k as u64, merge_s: merge_ns as f64 / 1e9 });
 
         let snapshot = stats.snapshot();
         crate::log_info!("done: k={k}, {snapshot}");

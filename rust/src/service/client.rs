@@ -43,13 +43,15 @@ pub struct ServiceClient {
     /// `RESULTB`); a server that answers "unknown verb" downgrades this
     /// connection to the text `RESULT` path permanently.
     binary_results: bool,
+    /// Same negotiation for event pages (`EVENTSB` vs `EVENTS`).
+    binary_events: bool,
 }
 
 impl ServiceClient {
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
         let stream = TcpStream::connect(addr).context("connect to lamc service")?;
         let reader = BufReader::new(stream.try_clone().context("clone stream")?);
-        Ok(Self { reader, writer: stream, binary_results: true })
+        Ok(Self { reader, writer: stream, binary_results: true, binary_events: true })
     }
 
     fn send_line(&mut self, line: &str) -> Result<()> {
@@ -317,5 +319,85 @@ impl ServiceClient {
     /// answers this with a typed error.
     pub fn route(&mut self) -> Result<BTreeMap<String, String>> {
         self.kv_reply("ROUTE")
+    }
+
+    /// Page through a job's lifecycle events: `EVENT` line bodies with
+    /// `seq > after`, plus the cursor to pass on the next poll (`None`
+    /// when the page is empty — keep the previous cursor and poll
+    /// again). Tries the binary `EVENTSB` framing first and falls back
+    /// to text `EVENTS` against servers that predate it.
+    pub fn events(&mut self, id: u64, after: Option<u64>) -> Result<(Vec<String>, Option<u64>)> {
+        if self.binary_events {
+            match self.events_binary(id, after) {
+                Ok(page) => return Ok(page),
+                Err(e) if e.to_string().contains("unknown verb") => {
+                    self.binary_events = false;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        self.events_text(id, after)
+    }
+
+    fn events_request(id: u64, after: Option<u64>, verb: &str) -> String {
+        match after {
+            Some(a) => format!("{verb} id={id} after={a}"),
+            None => format!("{verb} id={id}"),
+        }
+    }
+
+    /// Parse the shared `EVENTS`/`EVENTSB` header: `(count, next)`.
+    fn events_header(map: &BTreeMap<String, String>) -> Result<(usize, Option<u64>)> {
+        let count: usize = map.get("count").context("missing count")?.parse()?;
+        let next = match map.get("next") {
+            Some(v) => Some(v.parse::<u64>().context("bad next cursor")?),
+            None => None,
+        };
+        ensure!(next.is_some() || count == 0, "non-empty event page without a next cursor");
+        Ok((count, next))
+    }
+
+    fn events_binary(&mut self, id: u64, after: Option<u64>) -> Result<(Vec<String>, Option<u64>)> {
+        self.send_line(&Self::events_request(id, after, "EVENTSB"))?;
+        let header = self.read_line()?;
+        let map = Self::header_map(&header)?;
+        let (count, next) = Self::events_header(&map)?;
+        let bytes: usize = map.get("bytes").context("missing bytes")?.parse()?;
+        let mut payload = vec![0u8; bytes + 8];
+        self.reader.read_exact(&mut payload).context("read binary event payload")?;
+        Ok((protocol::decode_events_binary(&payload, count)?, next))
+    }
+
+    fn events_text(&mut self, id: u64, after: Option<u64>) -> Result<(Vec<String>, Option<u64>)> {
+        self.send_line(&Self::events_request(id, after, "EVENTS"))?;
+        let header = self.read_line()?;
+        let map = Self::header_map(&header)?;
+        let (count, next) = Self::events_header(&map)?;
+        let mut lines = Vec::with_capacity(count);
+        for _ in 0..count {
+            let line = self.read_line()?;
+            lines.push(
+                line.strip_prefix("EVENT ").context("expected EVENT line")?.trim_end().to_string(),
+            );
+        }
+        let end = self.read_line()?;
+        ensure!(end.trim() == "END", "expected END terminator, got '{}'", end.trim());
+        Ok((lines, next))
+    }
+
+    /// Fetch the server's Prometheus-style metrics exposition
+    /// (`METRICS`): the body text, one sample or declaration per line.
+    pub fn metrics(&mut self) -> Result<String> {
+        self.send_line("METRICS")?;
+        let header = self.read_line()?;
+        let map = Self::header_map(&header)?;
+        let lines: usize = map.get("lines").context("missing lines")?.parse()?;
+        let mut body = String::new();
+        for _ in 0..lines {
+            body.push_str(&self.read_line()?);
+        }
+        let end = self.read_line()?;
+        ensure!(end.trim() == "END", "expected END terminator, got '{}'", end.trim());
+        Ok(body)
     }
 }

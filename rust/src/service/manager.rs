@@ -23,6 +23,7 @@ use crate::matrix::{DenseMatrix, Matrix};
 use crate::pipeline::{AtomKind, Lamc, LamcConfig};
 use crate::rng::{mix64 as mix, mix64_str as mix_str};
 use crate::store::{IoCounters, MatrixRef, ShardManifest, StoreReader};
+use crate::trace::{Event, EventRecord, Journal, Trace, DEFAULT_RING_CAPACITY};
 
 use super::cache::{CacheKey, JobOutput, ResultCache};
 
@@ -156,6 +157,9 @@ pub struct JobRecord {
     pub result: Option<Arc<JobOutput>>,
     /// When the job reached `Done`/`Failed` — the TTL sweep's clock.
     pub finished_at: Option<Instant>,
+    /// Per-job lifecycle event journal (`EVENTS` verb, `lamc watch`).
+    /// Shared with the pipeline's [`Trace`] while the job runs.
+    pub journal: Arc<Journal>,
 }
 
 /// Bounded MPMC queue (Mutex + Condvar): the service's backpressure
@@ -436,6 +440,9 @@ struct Inner {
     stats: Stats,
     next_id: AtomicU64,
     job_ttl: Option<Duration>,
+    /// Where per-job event journals spill as JSONL (`<store_root>/events`).
+    /// `None` keeps journals memory-only (bounded ring, no post-mortems).
+    events_root: Option<PathBuf>,
 }
 
 /// Handle to the service core. Cloning shares the same service; the
@@ -465,6 +472,7 @@ impl ServiceManager {
             stats: Stats::default(),
             next_id: AtomicU64::new(1),
             job_ttl: config.job_ttl,
+            events_root: config.store_root.as_ref().map(|r| r.join("events")),
         });
         let mut handles = Vec::with_capacity(config.runners);
         for i in 0..config.runners {
@@ -658,6 +666,18 @@ impl ServiceManager {
         anyhow::ensure!(spec.k >= 1, "k must be ≥ 1");
         self.lookup_matrix(&spec.matrix)?; // validate (and auto-load) matrix
         let id = self.inner.next_id.fetch_add(1, Ordering::Relaxed);
+        let journal = Arc::new(match &self.inner.events_root {
+            // Spill failures degrade to a memory-only journal: events are
+            // advisory, so a read-only events dir must not fail the job.
+            Some(root) => {
+                Journal::with_spill(DEFAULT_RING_CAPACITY, &root.join(format!("job-{id}.jsonl")))
+                    .unwrap_or_else(|e| {
+                        crate::log_warn!("job {id}: event spill unavailable ({e:#})");
+                        Journal::new(DEFAULT_RING_CAPACITY)
+                    })
+            }
+            None => Journal::new(DEFAULT_RING_CAPACITY),
+        });
         let record = JobRecord {
             id,
             spec,
@@ -666,8 +686,13 @@ impl ServiceManager {
             error: None,
             result: None,
             finished_at: None,
+            journal: Arc::clone(&journal),
         };
         self.inner.jobs.write().unwrap().insert(id, record);
+        // Before the queue push: a runner can pop the id the instant it
+        // lands, and JobStarted must not beat JobQueued into the journal.
+        // A rejected push discards the whole journal with the record.
+        journal.emit(Event::JobQueued);
         if let Err((_, why)) = self.inner.queue.try_push(id) {
             self.inner.jobs.write().unwrap().remove(&id);
             match why {
@@ -684,6 +709,17 @@ impl ServiceManager {
     /// Snapshot one job's record.
     pub fn job(&self, id: u64) -> Option<JobRecord> {
         self.inner.jobs.read().unwrap().get(&id).cloned()
+    }
+
+    /// Page through a job's lifecycle events: records with `seq > after`
+    /// (all retained records when `after` is `None`), at most `max`.
+    /// `None` for an unknown job id.
+    pub fn job_events(&self, id: u64, after: Option<u64>, max: usize) -> Option<Vec<EventRecord>> {
+        let journal = {
+            let jobs = self.inner.jobs.read().unwrap();
+            Arc::clone(&jobs.get(&id)?.journal)
+        };
+        Some(journal.events_after(after, max))
     }
 
     /// Counts of jobs per state: (queued, running, done, failed).
@@ -779,26 +815,40 @@ fn run_job(inner: &Inner, id: u64) {
     let Some(record) = inner.jobs.read().unwrap().get(&id).cloned() else {
         return;
     };
+    // Tag every log line from this runner thread (and the emitted
+    // events' journal) with the job id until the job finishes.
+    let _scope = crate::logging::job_scope(id);
     set_state(inner, id, |r| r.state = JobState::Running);
+    record.journal.emit(Event::JobStarted);
 
-    let outcome = execute_spec(inner, &record.spec);
+    let trace = Trace::to_journal(Arc::clone(&record.journal));
+    let outcome = execute_spec(inner, &record.spec, trace);
     match outcome {
-        Ok((output, cached)) => set_state(inner, id, |r| {
-            r.state = JobState::Done;
-            r.cached = cached;
-            r.result = Some(output);
-            r.finished_at = Some(Instant::now());
-        }),
-        Err(e) => set_state(inner, id, |r| {
-            r.state = JobState::Failed;
-            r.error = Some(format!("{e:#}"));
-            r.finished_at = Some(Instant::now());
-        }),
+        // The terminal event lands before the state flips: a client
+        // whose `wait` just returned must find it in the journal.
+        Ok((output, cached)) => {
+            record.journal.emit(Event::JobDone);
+            set_state(inner, id, |r| {
+                r.state = JobState::Done;
+                r.cached = cached;
+                r.result = Some(output);
+                r.finished_at = Some(Instant::now());
+            });
+        }
+        Err(e) => {
+            let error = format!("{e:#}");
+            record.journal.emit(Event::JobFailed { error: error.clone() });
+            set_state(inner, id, |r| {
+                r.state = JobState::Failed;
+                r.error = Some(error);
+                r.finished_at = Some(Instant::now());
+            });
+        }
     }
 }
 
 /// Returns the job output and whether it came from the cache.
-fn execute_spec(inner: &Inner, spec: &JobSpec) -> Result<(Arc<JobOutput>, bool)> {
+fn execute_spec(inner: &Inner, spec: &JobSpec, trace: Trace) -> Result<(Arc<JobOutput>, bool)> {
     let (matrix, fingerprint) = {
         let matrices = inner.matrices.read().unwrap();
         let e = matrices
@@ -813,7 +863,9 @@ fn execute_spec(inner: &Inner, spec: &JobSpec) -> Result<(Arc<JobOutput>, bool)>
     }
     inner.stats.cache_misses.fetch_add(1, Ordering::Relaxed);
 
-    let lamc = Lamc::new(spec.lamc_config()?);
+    let mut cfg = spec.lamc_config()?;
+    cfg.trace = trace;
+    let lamc = Lamc::new(cfg);
     let result = if spec.partitioned()? { lamc.run(&matrix)? } else { lamc.run_baseline(&matrix)? };
 
     // Fold the run's telemetry into the service-wide counters.
@@ -950,6 +1002,48 @@ mod tests {
         let snap = mgr.stats().snapshot();
         assert_eq!(snap.cache_hits, 1);
         assert_eq!(snap.cache_misses, 1);
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn job_lifecycle_events_arrive_in_order() {
+        let mgr = ServiceManager::new(ServiceConfig {
+            runners: 1,
+            queue_capacity: 8,
+            cache_capacity_bytes: 8 << 20,
+            ..Default::default()
+        });
+        mgr.register("m", small_matrix(11));
+        let spec = JobSpec { matrix: "m".into(), k: 3, seed: 4, ..Default::default() };
+        let id = mgr.submit(spec.clone()).unwrap();
+        assert_eq!(mgr.wait(id, Duration::from_secs(120)).unwrap().state, JobState::Done);
+        let events = mgr.job_events(id, None, 4096).expect("job exists");
+        let kinds: Vec<&str> = events.iter().map(|r| r.event.kind()).collect();
+        // Lifecycle markers in order, with the pipeline's events between.
+        let pos = |k: &str| {
+            kinds.iter().position(|&x| x == k).unwrap_or_else(|| panic!("no {k} in {kinds:?}"))
+        };
+        assert_eq!(pos("JobQueued"), 0);
+        assert!(pos("JobStarted") < pos("RoundStarted"));
+        assert!(pos("RoundCompleted") < pos("MergeStarted"));
+        assert!(pos("MergeCompleted") < pos("JobDone"));
+        assert_eq!(kinds.last(), Some(&"JobDone"));
+        assert!(events.windows(2).all(|w| w[1].seq > w[0].seq), "seqs monotonic");
+        // A cache-hit resubmission still gets the full queued→done arc
+        // (its journal just has no pipeline rounds).
+        let hit = mgr.submit(spec).unwrap();
+        mgr.wait(hit, Duration::from_secs(120)).unwrap();
+        let kinds: Vec<String> = mgr
+            .job_events(hit, None, 64)
+            .unwrap()
+            .iter()
+            .map(|r| r.event.kind().to_string())
+            .collect();
+        assert_eq!(kinds, ["JobQueued", "JobStarted", "JobDone"]);
+        // The cursor pages past what the first call already saw.
+        let tail = mgr.job_events(id, Some(0), 4096).unwrap();
+        assert_eq!(tail.first().map(|r| r.seq), Some(1));
+        assert!(matches!(events.last().unwrap().event, Event::JobDone));
         mgr.shutdown();
     }
 

@@ -31,6 +31,13 @@
 //!   clients fall back to text `RESULT` against older servers; `LOAD`
 //!   accepts `dataset=`, `path=` or `store=` sources.
 //!
+//! * Observability (`docs/OBSERVABILITY.md`) — every job owns a
+//!   [`trace::Journal`](crate::trace::Journal) of typed lifecycle
+//!   events, paged over the wire with the cursor verbs
+//!   `EVENTS`/`EVENTSB` (`lamc watch`), and the `METRICS` verb renders
+//!   the `STATS` counters as Prometheus-style text exposition
+//!   (`lamc metrics`).
+//!
 //! * [`shard`] — a shard router fronting multiple worker nodes: each
 //!   worker serves row bands of a sharded store (`lamc serve --shards`,
 //!   advertised over `HELLO`/`SHARDS`), and a [`ShardRouter`] scatters

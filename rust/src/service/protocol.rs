@@ -100,6 +100,21 @@ pub enum Request {
         cols: usize,
         inline: usize,
     },
+    /// Cursor-paged job-lifecycle events (`EVENTS id=3 after=17`): the
+    /// success response is an `OK id=… count=… next=…` header, one
+    /// `EVENT <record>` line per retained event with `seq > after`
+    /// (`after` omitted ⇒ from the beginning), then `END`. `next=` is
+    /// the cursor to pass on the next poll.
+    Events { id: u64, after: Option<u64> },
+    /// Binary event framing (`EVENTSB`): same cursor semantics, but the
+    /// `EVENT` line bodies ship as one length-prefixed, checksummed
+    /// payload (see [`encode_events_binary`]) after the `OK` header —
+    /// mirrors the `RESULT`/`RESULTB` negotiation, so clients fall back
+    /// to `EVENTS` against an old server.
+    EventsBinary { id: u64, after: Option<u64> },
+    /// Prometheus-style text exposition of the service counters: an
+    /// `OK lines=…` header, `lines` body lines, then `END`.
+    Metrics,
 }
 
 impl Request {
@@ -315,8 +330,24 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 inline,
             })
         }
+        "EVENTS" => {
+            let map = kv_pairs(&rest)?;
+            check_known(&map, &["id", "after"])?;
+            Ok(Request::Events { id: require_id(&map)?, after: get_u64(&map, "after")? })
+        }
+        "EVENTSB" => {
+            let map = kv_pairs(&rest)?;
+            check_known(&map, &["id", "after"])?;
+            Ok(Request::EventsBinary { id: require_id(&map)?, after: get_u64(&map, "after")? })
+        }
+        "METRICS" => {
+            if !rest.is_empty() {
+                bail!("METRICS takes no fields");
+            }
+            Ok(Request::Metrics)
+        }
         other => bail!(
-            "unknown verb '{other}' (want SUBMIT|STATUS|RESULT|RESULTB|STATS|LOAD|HELLO|SHARDS|GATHERB|EXECB|ROUTE|SHUTDOWN)"
+            "unknown verb '{other}' (want SUBMIT|STATUS|RESULT|RESULTB|STATS|LOAD|HELLO|SHARDS|GATHERB|EXECB|ROUTE|EVENTS|EVENTSB|METRICS|SHUTDOWN)"
         ),
     }
 }
@@ -632,6 +663,81 @@ pub fn decode_atoms(bytes: &[u8], clusters: usize) -> Result<Vec<Cocluster>> {
     Ok(atoms)
 }
 
+/// Encode `EVENT` line bodies as an `EVENTSB` response payload: the
+/// UTF-8 wire lines joined by `\n` (no trailing newline), then a
+/// trailing u64 LE checksum. The header's `bytes=` field is the text
+/// length, so the full payload is `bytes + 8`.
+pub fn encode_events_binary(records: &[crate::trace::EventRecord]) -> Vec<u8> {
+    let text = records.iter().map(|r| r.to_wire()).collect::<Vec<_>>().join("\n");
+    let mut out = text.into_bytes();
+    let ck = crate::store::checksum_bytes(&out);
+    out.extend_from_slice(&ck.to_le_bytes());
+    out
+}
+
+/// Decode an `EVENTSB` payload back into `EVENT` line bodies (`count`
+/// from the header line).
+pub fn decode_events_binary(bytes: &[u8], count: usize) -> Result<Vec<String>> {
+    ensure!(bytes.len() >= 8, "event payload truncated ({} bytes)", bytes.len());
+    let (body, ck) = bytes.split_at(bytes.len() - 8);
+    ensure!(
+        crate::store::checksum_bytes(body) == u64::from_le_bytes(ck.try_into().unwrap()),
+        "event payload failed its checksum"
+    );
+    let text = std::str::from_utf8(body).context("event payload is not UTF-8")?;
+    let lines: Vec<String> =
+        if text.is_empty() { vec![] } else { text.lines().map(str::to_string).collect() };
+    ensure!(lines.len() == count, "event payload has {} lines, header says {count}", lines.len());
+    Ok(lines)
+}
+
+/// Builder for the `METRICS` reply body: Prometheus-style text
+/// exposition (`# TYPE` declarations + `name{labels} value` samples).
+/// The reply header's `lines=` count frames the body and an `END` line
+/// terminates it — see `docs/OBSERVABILITY.md` for the exact shape.
+#[derive(Debug, Default)]
+pub struct MetricsText {
+    body: String,
+    lines: usize,
+}
+
+impl MetricsText {
+    pub fn new() -> MetricsText {
+        MetricsText::default()
+    }
+
+    /// Declare a metric: `# TYPE <name> <gauge|counter>`.
+    pub fn declare(&mut self, name: &str, mtype: &str) -> &mut Self {
+        self.body.push_str(&format!("# TYPE {name} {mtype}\n"));
+        self.lines += 1;
+        self
+    }
+
+    /// Append one sample; `series` carries any labels verbatim (e.g.
+    /// `lamc_jobs{state="queued"}`).
+    pub fn sample(&mut self, series: &str, value: impl std::fmt::Display) -> &mut Self {
+        self.body.push_str(&format!("{series} {value}\n"));
+        self.lines += 1;
+        self
+    }
+
+    /// Declaration plus single unlabelled sample, counter-typed.
+    pub fn counter(&mut self, name: &str, value: impl std::fmt::Display) -> &mut Self {
+        self.declare(name, "counter").sample(name, value)
+    }
+
+    /// Declaration plus single unlabelled sample, gauge-typed.
+    pub fn gauge(&mut self, name: &str, value: impl std::fmt::Display) -> &mut Self {
+        self.declare(name, "gauge").sample(name, value)
+    }
+
+    /// `(body, line_count)`; the body carries one trailing `\n` per
+    /// line, so it can be written verbatim before the `END` line.
+    pub fn finish(self) -> (String, usize) {
+        (self.body, self.lines)
+    }
+}
+
 /// First line of an error response.
 pub fn err_line(msg: &str) -> String {
     // Newlines would break framing; flatten them.
@@ -886,6 +992,80 @@ mod tests {
         assert!(encode_exec_payload(&rows, &cols, &[(9, vec![0.0, 0.0])]).is_err());
         // Width mismatch too.
         assert!(encode_exec_payload(&rows, &cols, &[(0, vec![0.0])]).is_err());
+    }
+
+    #[test]
+    fn observability_verbs_parse() {
+        assert_eq!(parse_request("EVENTS id=4").unwrap(), Request::Events { id: 4, after: None });
+        assert_eq!(
+            parse_request("EVENTS id=4 after=17").unwrap(),
+            Request::Events { id: 4, after: Some(17) }
+        );
+        assert_eq!(
+            parse_request("EVENTSB id=9 after=0").unwrap(),
+            Request::EventsBinary { id: 9, after: Some(0) }
+        );
+        assert_eq!(parse_request("METRICS").unwrap(), Request::Metrics);
+        // None of the three carries a request payload.
+        for line in ["EVENTS id=1", "EVENTSB id=1", "METRICS"] {
+            assert_eq!(parse_request(line).unwrap().binary_payload_len().unwrap(), None);
+        }
+    }
+
+    #[test]
+    fn malformed_observability_verbs_error() {
+        assert!(parse_request("EVENTS").is_err(), "id required");
+        assert!(parse_request("EVENTS id=1 cursor=2").is_err(), "unknown field");
+        assert!(parse_request("EVENTS id=1 after=x").is_err(), "cursor must be an integer");
+        assert!(parse_request("EVENTSB after=1").is_err(), "id required");
+        assert!(parse_request("METRICS all=1").is_err(), "field-free verb");
+    }
+
+    #[test]
+    fn events_binary_codec_round_trip_and_damage() {
+        use crate::trace::{Event, EventRecord};
+        let records = vec![
+            EventRecord { seq: 0, t_ms: 1, event: Event::JobQueued },
+            EventRecord { seq: 1, t_ms: 2, event: Event::RoundStarted { round: 0, jobs: 4 } },
+            EventRecord {
+                seq: 2,
+                t_ms: 9,
+                event: Event::JobFailed { error: "worker lost".into() },
+            },
+        ];
+        let bytes = encode_events_binary(&records);
+        let lines = decode_events_binary(&bytes, records.len()).unwrap();
+        assert_eq!(lines.len(), 3);
+        for (line, rec) in lines.iter().zip(&records) {
+            assert_eq!(line, &rec.to_wire());
+        }
+
+        assert!(decode_events_binary(&bytes, 2).is_err(), "count mismatch");
+        let mut bad = bytes.clone();
+        bad[3] ^= 0x20;
+        assert!(decode_events_binary(&bad, 3).is_err(), "checksum catches bit flips");
+        assert!(decode_events_binary(&[], 0).is_err(), "missing checksum is typed");
+
+        let empty = encode_events_binary(&[]);
+        assert_eq!(empty.len(), 8, "empty page is just the checksum");
+        assert_eq!(decode_events_binary(&empty, 0).unwrap(), Vec::<String>::new());
+    }
+
+    #[test]
+    fn metrics_text_builder_frames_lines() {
+        let mut m = MetricsText::new();
+        m.counter("lamc_cache_hits_total", 3u64)
+            .declare("lamc_jobs", "gauge")
+            .sample("lamc_jobs{state=\"queued\"}", 1u64)
+            .sample("lamc_jobs{state=\"running\"}", 0u64)
+            .gauge("lamc_gather_seconds", 0.25f64);
+        let (body, lines) = m.finish();
+        assert_eq!(lines, 7, "2 counter + 3 jobs + 2 gauge lines");
+        assert_eq!(body.lines().count(), lines);
+        assert!(body.contains("# TYPE lamc_cache_hits_total counter\n"));
+        assert!(body.contains("lamc_jobs{state=\"queued\"} 1\n"));
+        assert!(body.contains("lamc_gather_seconds 0.25\n"));
+        assert!(body.ends_with('\n'));
     }
 
     #[test]

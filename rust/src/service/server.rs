@@ -410,6 +410,81 @@ fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> R
                 payload: body,
             })
         }
+        Request::Events { id, after } => {
+            let records = manager
+                .job_events(id, after, EVENTS_PAGE_MAX)
+                .with_context(|| format!("no job with id {id}"))?;
+            let mut out = events_header(id, &records);
+            for rec in &records {
+                out.push_str("EVENT ");
+                out.push_str(&rec.to_wire());
+                out.push('\n');
+            }
+            out.push_str("END\n");
+            Ok(Reply::Text(out))
+        }
+        Request::EventsBinary { id, after } => {
+            let records = manager
+                .job_events(id, after, EVENTS_PAGE_MAX)
+                .with_context(|| format!("no job with id {id}"))?;
+            let payload = protocol::encode_events_binary(&records);
+            let mut header = events_header(id, &records);
+            header.insert_str(header.len() - 1, &format!(" bytes={}", payload.len() - 8));
+            Ok(Reply::Binary { header, payload })
+        }
+        Request::Metrics => {
+            let (body, lines) = worker_metrics(manager).finish();
+            Ok(Reply::Text(format!("OK lines={lines}\n{body}END\n")))
+        }
         Request::Shutdown => Ok(Reply::Text("OK shutting-down\n".to_string())),
     }
+}
+
+/// Most event records one `EVENTS` page returns; the client keeps
+/// polling with the advanced cursor until it drains the journal.
+pub(crate) const EVENTS_PAGE_MAX: usize = 512;
+
+/// The shared `EVENTS`/`EVENTSB` header line. `next=` (the cursor for
+/// the following poll) is present only when the page is non-empty;
+/// an empty page means "keep your cursor and poll again".
+pub(crate) fn events_header(id: u64, records: &[crate::trace::EventRecord]) -> String {
+    match records.last() {
+        Some(last) => format!("OK id={id} count={} next={}\n", records.len(), last.seq),
+        None => format!("OK id={id} count=0\n"),
+    }
+}
+
+/// Render this worker's counters — the same numbers `STATS` reports —
+/// as Prometheus-style text exposition.
+fn worker_metrics(manager: &ServiceManager) -> protocol::MetricsText {
+    let (queued, running, done, failed) = manager.job_counts();
+    let snap = manager.stats().snapshot();
+    let cache = manager.cache();
+    let mut m = protocol::MetricsText::new();
+    m.declare("lamc_jobs", "gauge")
+        .sample("lamc_jobs{state=\"queued\"}", queued)
+        .sample("lamc_jobs{state=\"running\"}", running)
+        .sample("lamc_jobs{state=\"done\"}", done)
+        .sample("lamc_jobs{state=\"failed\"}", failed)
+        .counter("lamc_cache_hits_total", snap.cache_hits)
+        .counter("lamc_cache_misses_total", snap.cache_misses)
+        .counter("lamc_cache_disk_hits_total", cache.disk_hits())
+        .gauge("lamc_cache_entries", cache.len())
+        .gauge("lamc_cache_bytes", cache.bytes())
+        .gauge("lamc_cache_capacity_bytes", cache.capacity_bytes())
+        .gauge("lamc_matrices", manager.matrix_names().len())
+        .counter("lamc_blocks_total", snap.blocks_total)
+        .counter("lamc_blocks_native_total", snap.blocks_native)
+        .counter("lamc_blocks_pjrt_total", snap.blocks_pjrt)
+        .counter("lamc_pjrt_fallbacks_total", snap.pjrt_fallbacks)
+        .counter("lamc_store_chunks_read_total", snap.store_chunks_read)
+        .counter("lamc_store_bytes_read_total", snap.store_bytes_read)
+        .counter("lamc_store_cache_hits_total", snap.store_cache_hits)
+        .counter("lamc_prefetch_issued_total", snap.prefetch_issued)
+        .counter("lamc_prefetch_hits_total", snap.prefetch_hits)
+        .counter("lamc_prefetch_wasted_bytes_total", snap.prefetch_wasted_bytes)
+        .counter("lamc_gather_seconds_total", format!("{:.6}", snap.gather_s))
+        .counter("lamc_exec_seconds_total", format!("{:.6}", snap.exec_s))
+        .counter("lamc_merge_seconds_total", format!("{:.6}", snap.merge_s));
+    m
 }

@@ -40,11 +40,15 @@ use crate::coordinator::{plan_jobs_by_band, BandSpan, JobBandPlan, SchedulerConf
 use crate::merge::{extract_labels, reduce_partial_sets, Cocluster};
 use crate::partition::{plan, sample_partition, BlockJob};
 use crate::pipeline::{AtomKind, LamcConfig};
+use crate::trace::{Event, Journal, Trace, DEFAULT_RING_CAPACITY};
 
 use super::client::ServiceClient;
 use super::manager::{JobSpec, JobState};
 use super::protocol::{self, Request, ShardSetInfo, PROTO_VERSION};
-use super::server::{request_stop, spawn_accept_loop, AcceptLoop, Reply, RequestHandler};
+use super::server::{
+    events_header, request_stop, spawn_accept_loop, AcceptLoop, Reply, RequestHandler,
+    EVENTS_PAGE_MAX,
+};
 
 /// Typed routing failures — the error contract of the fault-injection
 /// harness. Stringified via `Display`, each carries a stable
@@ -105,6 +109,57 @@ impl Default for ShardRouterConfig {
             retries: 1,
             io_timeout: Duration::from_secs(30),
             job_timeout: Duration::from_secs(600),
+        }
+    }
+}
+
+/// Per-round scatter bookkeeping for event emission. `RoundStarted`
+/// fires when the round's first job is claimed; `RoundCompleted` when
+/// its last job *succeeds* (a retried job counts on the retry that
+/// lands, and a round whose job fails terminally never completes).
+/// Store I/O happens on the workers, so router-side `RoundCompleted`
+/// events carry zero I/O fields — worker `METRICS` has the real totals.
+struct RoundProgress {
+    jobs: u64,
+    started: AtomicBool,
+    remaining: AtomicU64,
+    gather_ns: AtomicU64,
+    exec_ns: AtomicU64,
+}
+
+impl RoundProgress {
+    fn new(jobs: u64) -> RoundProgress {
+        RoundProgress {
+            jobs,
+            started: AtomicBool::new(false),
+            remaining: AtomicU64::new(jobs),
+            gather_ns: AtomicU64::new(0),
+            exec_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Emit `RoundStarted` exactly once, on the first claimed job.
+    fn mark_started(&self, trace: &Trace, round: usize) {
+        if !self.started.swap(true, Ordering::SeqCst) {
+            trace.emit(Event::RoundStarted { round: round as u64, jobs: self.jobs });
+        }
+    }
+
+    /// Count one job success; the last one emits `RoundCompleted`.
+    fn mark_done(&self, trace: &Trace, round: usize) {
+        if self.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            trace.emit(Event::RoundCompleted {
+                round: round as u64,
+                jobs: self.jobs,
+                gather_s: self.gather_ns.load(Ordering::Relaxed) as f64 / 1e9,
+                exec_s: self.exec_ns.load(Ordering::Relaxed) as f64 / 1e9,
+                io_chunks: 0,
+                io_bytes: 0,
+                io_cache_hits: 0,
+                prefetch_issued: 0,
+                prefetch_hits: 0,
+                prefetch_wasted_bytes: 0,
+            });
         }
     }
 }
@@ -212,17 +267,29 @@ impl ShardRouter {
     /// Route one service job spec. Baseline (whole-matrix) methods need
     /// the full matrix on one node and are rejected typed.
     pub fn run_spec(&self, spec: &JobSpec) -> Result<RoutedRun> {
+        self.run_spec_traced(spec, &Trace::disabled())
+    }
+
+    /// [`ShardRouter::run_spec`] with lifecycle events emitted into
+    /// `trace` (advisory: labels are identical with tracing off).
+    pub fn run_spec_traced(&self, spec: &JobSpec, trace: &Trace) -> Result<RoutedRun> {
         ensure!(
             spec.partitioned()?,
             "whole-matrix baseline method '{}' cannot be routed across shards",
             spec.method
         );
-        self.run_config(&spec.matrix, &spec.lamc_config()?)
+        self.run_config_traced(&spec.matrix, &spec.lamc_config()?, trace)
     }
 
     /// Run the partitioned pipeline on sharded matrix `name`,
     /// byte-identical to `Lamc::run` with the same config on one node.
     pub fn run_config(&self, name: &str, cfg: &LamcConfig) -> Result<RoutedRun> {
+        self.run_config_traced(name, cfg, &Trace::disabled())
+    }
+
+    /// [`ShardRouter::run_config`] with lifecycle events emitted into
+    /// `trace`.
+    pub fn run_config_traced(&self, name: &str, cfg: &LamcConfig, trace: &Trace) -> Result<RoutedRun> {
         let topo = self
             .topo
             .get(name)
@@ -253,6 +320,15 @@ impl ShardRouter {
             AtomKind::Pnmtf => "pnmtf",
         };
 
+        // Per-round event bookkeeping (flat job index → round).
+        let round_of: Vec<usize> = rounds
+            .iter()
+            .enumerate()
+            .flat_map(|(r, round)| std::iter::repeat_n(r, round.jobs.len()))
+            .collect();
+        let progress: Vec<RoundProgress> =
+            rounds.iter().map(|round| RoundProgress::new(round.jobs.len() as u64)).collect();
+
         // 3. Scatter: claim-loop threads pull the next unclaimed job.
         // Per-job deadlines start at scatter time, so a stalled worker
         // bounds the whole round.
@@ -268,8 +344,13 @@ impl ShardRouter {
                     if i >= band_plans.len() {
                         break;
                     }
-                    let res =
-                        self.run_block(name, topo, method, cfg, &band_plans[i], &jobs, deadline);
+                    let r = round_of[band_plans[i].job];
+                    progress[r].mark_started(trace, r);
+                    let res = self
+                        .run_block(name, topo, method, cfg, &band_plans[i], &jobs, deadline, trace, &progress[r]);
+                    if res.is_ok() {
+                        progress[r].mark_done(trace, r);
+                    }
                     *slots[i].lock().unwrap() = Some(res);
                 });
             }
@@ -288,8 +369,17 @@ impl ShardRouter {
                 )
             {
                 attempts += 1;
+                trace.emit(Event::WorkerRetry {
+                    job: band_plans[i].job as u64,
+                    attempt: attempts as u64,
+                });
                 crate::log_info!("retrying routed job {i} (attempt {attempts})");
-                res = self.run_block(name, topo, method, cfg, &band_plans[i], &jobs, deadline);
+                let r = round_of[band_plans[i].job];
+                res = self
+                    .run_block(name, topo, method, cfg, &band_plans[i], &jobs, deadline, trace, &progress[r]);
+                if res.is_ok() {
+                    progress[r].mark_done(trace, r);
+                }
             }
             partials.push(res.with_context(|| format!("routed block job {i} failed"))?);
         }
@@ -297,8 +387,16 @@ impl ShardRouter {
         // 4. Cross-node reduce: concatenate partial atom sets in flat
         // job order — the order `Lamc::run` merges in — then one global
         // consensus merge.
+        trace.emit(Event::MergeStarted {
+            blocks: partials.iter().map(|p| p.len() as u64).sum(),
+        });
+        let t_merge = Instant::now();
         let merged = reduce_partial_sets(partials, &cfg.merge);
         let (row_labels, col_labels, k) = extract_labels(&merged, rows, cols);
+        trace.emit(Event::MergeCompleted {
+            k: k as u64,
+            merge_s: t_merge.elapsed().as_secs_f64(),
+        });
         Ok(RoutedRun { row_labels, col_labels, k, coclusters: merged })
     }
 
@@ -313,6 +411,8 @@ impl ShardRouter {
         plan: &JobBandPlan,
         jobs: &[&BlockJob],
         deadline: Instant,
+        trace: &Trace,
+        progress: &RoundProgress,
     ) -> Result<Vec<Cocluster>> {
         let job = jobs[plan.job];
         let executor = self.live_owner(&topo.owners[plan.primary]).or_else(|| {
@@ -327,7 +427,13 @@ impl ShardRouter {
                 row_hi: band.row_hi,
             }));
         };
+        trace.emit(Event::BlockScattered {
+            job: plan.job as u64,
+            worker: executor as u64,
+            band: plan.primary as u64,
+        });
 
+        let t_gather = Instant::now();
         let mut inline: Vec<(u32, Vec<f32>)> = Vec::new();
         for (band, positions) in &plan.per_band {
             if topo.owners[*band].contains(&executor) {
@@ -342,8 +448,8 @@ impl ShardRouter {
                 }));
             };
             let needed: Vec<usize> = positions.iter().map(|&p| job.rows[p]).collect();
-            let values =
-                self.with_conn(owner, deadline, |c| c.gather_block(name, &needed, &job.cols))?;
+            let values = self
+                .with_conn(owner, deadline, trace, |c| c.gather_block(name, &needed, &job.cols))?;
             for (slot, &p) in positions.iter().enumerate() {
                 inline.push((
                     p as u32,
@@ -351,11 +457,15 @@ impl ShardRouter {
                 ));
             }
         }
+        progress.gather_ns.fetch_add(t_gather.elapsed().as_nanos() as u64, Ordering::Relaxed);
 
         let seed = job_seed(cfg.seed, job);
-        self.with_conn(executor, deadline, |c| {
+        let t_exec = Instant::now();
+        let res = self.with_conn(executor, deadline, trace, |c| {
             c.exec_block(name, method, cfg.k, seed, &job.rows, &job.cols, &inline)
-        })
+        });
+        progress.exec_ns.fetch_add(t_exec.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        res
     }
 
     fn live_owner(&self, owners: &[usize]) -> Option<usize> {
@@ -371,6 +481,7 @@ impl ShardRouter {
         &self,
         w: usize,
         deadline: Instant,
+        trace: &Trace,
         f: impl FnOnce(&mut ServiceClient) -> Result<T>,
     ) -> Result<T> {
         let link = &self.workers[w];
@@ -407,6 +518,7 @@ impl ShardRouter {
                 }
                 *guard = None;
                 link.alive.store(false, Ordering::SeqCst);
+                trace.emit(Event::WorkerLost { worker: w as u64 });
                 if Instant::now() >= deadline {
                     Err(timeout_err())
                 } else {
@@ -423,6 +535,7 @@ impl ShardRouter {
     /// registry gauges sum numerically.
     fn aggregate_stats(&self) -> (usize, usize, StatsSnapshot, HashMap<String, f64>) {
         let far = Instant::now() + self.cfg.io_timeout;
+        let no_trace = Trace::disabled();
         let mut agg = StatsSnapshot::default();
         let mut gauges: HashMap<String, f64> = HashMap::new();
         let mut live = 0usize;
@@ -430,7 +543,7 @@ impl ShardRouter {
             if !self.workers[w].alive() {
                 continue;
             }
-            let Ok(map) = self.with_conn(w, far, |c| c.stats()) else { continue };
+            let Ok(map) = self.with_conn(w, far, &no_trace, |c| c.stats()) else { continue };
             live += 1;
             agg = agg.merged(&parse_stats_snapshot(&map));
             for key in ["cache_entries", "cache_bytes", "cache_capacity_bytes", "cache_disk_hits", "matrices"] {
@@ -550,6 +663,9 @@ struct RouteJob {
     state: JobState,
     result: Option<Arc<RoutedRun>>,
     error: Option<String>,
+    /// Lifecycle event journal (`EVENTS` verb). Memory-only: the
+    /// router has no `--store-root`, so nothing spills to disk.
+    journal: Arc<Journal>,
 }
 
 struct RouterState {
@@ -643,26 +759,38 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
                 spec.matrix
             );
             let id = state.next_id.fetch_add(1, Ordering::Relaxed);
-            state
-                .jobs
-                .lock()
-                .unwrap()
-                .insert(id, RouteJob { state: JobState::Running, result: None, error: None });
+            let journal = Arc::new(Journal::new(DEFAULT_RING_CAPACITY));
+            state.jobs.lock().unwrap().insert(
+                id,
+                RouteJob {
+                    state: JobState::Running,
+                    result: None,
+                    error: None,
+                    journal: Arc::clone(&journal),
+                },
+            );
+            journal.emit(Event::JobQueued);
             let worker_state = Arc::clone(state);
             std::thread::Builder::new()
                 .name("lamc-route-job".into())
                 .spawn(move || {
-                    let outcome = worker_state.router.run_spec(&spec);
+                    let _scope = crate::logging::job_scope(id);
+                    journal.emit(Event::JobStarted);
+                    let trace = Trace::to_journal(Arc::clone(&journal));
+                    let outcome = worker_state.router.run_spec_traced(&spec, &trace);
                     let mut jobs = worker_state.jobs.lock().unwrap();
                     let Some(job) = jobs.get_mut(&id) else { return };
                     match outcome {
                         Ok(run) => {
                             job.state = JobState::Done;
                             job.result = Some(Arc::new(run));
+                            journal.emit(Event::JobDone);
                         }
                         Err(e) => {
+                            let error = format!("{e:#}");
                             job.state = JobState::Failed;
-                            job.error = Some(format!("{e:#}"));
+                            job.error = Some(error.clone());
+                            journal.emit(Event::JobFailed { error });
                         }
                     }
                 })
@@ -786,8 +914,81 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
         Request::GatherBinary { .. } | Request::ExecBinary { .. } => {
             bail!("GATHERB/EXECB are answered by a worker node; this is a shard router")
         }
+        Request::Events { id, after } => {
+            let records = route_job_events(state, id, after)?;
+            let mut out = events_header(id, &records);
+            for rec in &records {
+                out.push_str("EVENT ");
+                out.push_str(&rec.to_wire());
+                out.push('\n');
+            }
+            out.push_str("END\n");
+            Ok(Reply::Text(out))
+        }
+        Request::EventsBinary { id, after } => {
+            let records = route_job_events(state, id, after)?;
+            let payload = protocol::encode_events_binary(&records);
+            let mut header = events_header(id, &records);
+            header.insert_str(header.len() - 1, &format!(" bytes={}", payload.len() - 8));
+            Ok(Reply::Binary { header, payload })
+        }
+        Request::Metrics => {
+            let (body, lines) = router_metrics(state).finish();
+            Ok(Reply::Text(format!("OK lines={lines}\n{body}END\n")))
+        }
         Request::Shutdown => Ok(Reply::Text("OK shutting-down\n".to_string())),
     }
+}
+
+fn route_job_events(
+    state: &RouterState,
+    id: u64,
+    after: Option<u64>,
+) -> Result<Vec<crate::trace::EventRecord>> {
+    let journal = {
+        let jobs = state.jobs.lock().unwrap();
+        Arc::clone(&jobs.get(&id).with_context(|| format!("no job with id {id}"))?.journal)
+    };
+    Ok(journal.events_after(after, EVENTS_PAGE_MAX))
+}
+
+/// Render the router's fleet-wide counters — the same aggregation the
+/// `STATS` verb reports — as Prometheus-style text exposition.
+fn router_metrics(state: &RouterState) -> protocol::MetricsText {
+    let (queued, running, done, failed) = {
+        let jobs = state.jobs.lock().unwrap();
+        let count = |s: JobState| jobs.values().filter(|j| j.state == s).count();
+        (count(JobState::Queued), count(JobState::Running), count(JobState::Done), count(JobState::Failed))
+    };
+    let (total, live, snap, gauges) = state.router.aggregate_stats();
+    let gauge = |k: &str| gauges.get(k).copied().unwrap_or(0.0) as u64;
+    let mut m = protocol::MetricsText::new();
+    m.declare("lamc_jobs", "gauge")
+        .sample("lamc_jobs{state=\"queued\"}", queued)
+        .sample("lamc_jobs{state=\"running\"}", running)
+        .sample("lamc_jobs{state=\"done\"}", done)
+        .sample("lamc_jobs{state=\"failed\"}", failed)
+        .gauge("lamc_workers", total)
+        .gauge("lamc_workers_live", live)
+        .gauge("lamc_matrices", state.router.topo.len())
+        .counter("lamc_cache_hits_total", snap.cache_hits)
+        .counter("lamc_cache_misses_total", snap.cache_misses)
+        .counter("lamc_cache_disk_hits_total", gauge("cache_disk_hits"))
+        .gauge("lamc_cache_entries", gauge("cache_entries"))
+        .gauge("lamc_cache_bytes", gauge("cache_bytes"))
+        .counter("lamc_blocks_total", snap.blocks_total)
+        .counter("lamc_blocks_native_total", snap.blocks_native)
+        .counter("lamc_blocks_pjrt_total", snap.blocks_pjrt)
+        .counter("lamc_store_chunks_read_total", snap.store_chunks_read)
+        .counter("lamc_store_bytes_read_total", snap.store_bytes_read)
+        .counter("lamc_store_cache_hits_total", snap.store_cache_hits)
+        .counter("lamc_prefetch_issued_total", snap.prefetch_issued)
+        .counter("lamc_prefetch_hits_total", snap.prefetch_hits)
+        .counter("lamc_prefetch_wasted_bytes_total", snap.prefetch_wasted_bytes)
+        .counter("lamc_gather_seconds_total", format!("{:.6}", snap.gather_s))
+        .counter("lamc_exec_seconds_total", format!("{:.6}", snap.exec_s))
+        .counter("lamc_merge_seconds_total", format!("{:.6}", snap.merge_s));
+    m
 }
 
 #[cfg(test)]

@@ -1,0 +1,707 @@
+//! Job-lifecycle event journal: the service's observability backbone.
+//!
+//! Every job owns a [`Journal`] — a bounded in-memory ring of typed
+//! [`Event`]s plus an optional JSONL spill file for post-mortems — and
+//! hands [`Trace`] handles (cheap clones) down through the pipeline,
+//! scheduler and shard router. Emission is **advisory**: a disabled
+//! `Trace` is a no-op and an enabled one only appends to the journal,
+//! so labels are byte-identical with tracing on or off (asserted by the
+//! property harness).
+//!
+//! Readers page through a journal with a cursor ([`Journal::events_after`]):
+//! `after=<seq>` returns every retained record with a larger sequence
+//! number. Sequence numbers are monotonic per journal; when the ring
+//! overflows, the oldest records are evicted and a reader whose cursor
+//! has fallen behind receives a synthetic [`Event::Dropped`] record
+//! covering the gap — consumers always know when they missed events.
+//!
+//! The wire shape (the `EVENTS`/`EVENTSB` protocol verbs, see
+//! `docs/OBSERVABILITY.md`) and the JSONL spill both serialize through
+//! the same flat field list, so a journal line round-trips losslessly.
+
+use std::collections::VecDeque;
+use std::fs::File;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+/// Default bounded-ring capacity per job journal. Small jobs emit a
+/// handful of events; a long routed run emits a few per round — 1024
+/// keeps hours of history without letting a runaway job grow memory.
+pub const DEFAULT_RING_CAPACITY: usize = 1024;
+
+/// One typed lifecycle event. The field lists here are the wire
+/// contract (`docs/OBSERVABILITY.md`): every future subsystem reports
+/// through this enum rather than ad-hoc log lines.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// Accepted into the service queue.
+    JobQueued,
+    /// A runner picked the job up.
+    JobStarted,
+    /// A sampling round began dispatching `jobs` block jobs.
+    RoundStarted { round: u64, jobs: u64 },
+    /// A sampling round finished: per-round time split and store-I/O
+    /// delta (`IoCounters` flattened; zeros for in-memory inputs and
+    /// for router-side rounds, where I/O happens on the workers).
+    RoundCompleted {
+        round: u64,
+        jobs: u64,
+        gather_s: f64,
+        exec_s: f64,
+        io_chunks: u64,
+        io_bytes: u64,
+        io_cache_hits: u64,
+        prefetch_issued: u64,
+        prefetch_hits: u64,
+        prefetch_wasted_bytes: u64,
+    },
+    /// The scheduler asked the store to warm round `round`'s chunks.
+    PrefetchWave { round: u64 },
+    /// Hierarchical merge over `blocks` block results began.
+    MergeStarted { blocks: u64 },
+    /// Merge finished with `k` co-clusters after `merge_s` seconds.
+    MergeCompleted { k: u64, merge_s: f64 },
+    /// Terminal: result available.
+    JobDone,
+    /// Terminal: job failed with `error`.
+    JobFailed { error: String },
+    /// Router scattered block job `job` to worker `worker` (index into
+    /// the router's worker list) owning row band `band`.
+    BlockScattered { job: u64, worker: u64, band: u64 },
+    /// Router is re-running block job `job` after losing its worker.
+    WorkerRetry { job: u64, attempt: u64 },
+    /// Worker `worker` stopped answering; its connection was dropped.
+    WorkerLost { worker: u64 },
+    /// Synthetic: `n` records were evicted from the bounded ring before
+    /// the reader's cursor reached them.
+    Dropped { n: u64 },
+}
+
+/// Flat field value — the single representation behind both the
+/// `key=value` wire lines and the JSONL spill.
+#[derive(Clone, Debug, PartialEq)]
+enum Field {
+    U(u64),
+    F(f64),
+    S(String),
+}
+
+impl Event {
+    /// Stable kind tag (the `kind=` field on the wire).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::JobQueued => "JobQueued",
+            Event::JobStarted => "JobStarted",
+            Event::RoundStarted { .. } => "RoundStarted",
+            Event::RoundCompleted { .. } => "RoundCompleted",
+            Event::PrefetchWave { .. } => "PrefetchWave",
+            Event::MergeStarted { .. } => "MergeStarted",
+            Event::MergeCompleted { .. } => "MergeCompleted",
+            Event::JobDone => "JobDone",
+            Event::JobFailed { .. } => "JobFailed",
+            Event::BlockScattered { .. } => "BlockScattered",
+            Event::WorkerRetry { .. } => "WorkerRetry",
+            Event::WorkerLost { .. } => "WorkerLost",
+            Event::Dropped { .. } => "Dropped",
+        }
+    }
+
+    /// True for the two terminal states a watcher stops on.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, Event::JobDone | Event::JobFailed { .. })
+    }
+
+    fn fields(&self) -> Vec<(&'static str, Field)> {
+        match self {
+            Event::JobQueued | Event::JobStarted | Event::JobDone => vec![],
+            Event::RoundStarted { round, jobs } => {
+                vec![("round", Field::U(*round)), ("jobs", Field::U(*jobs))]
+            }
+            Event::RoundCompleted {
+                round,
+                jobs,
+                gather_s,
+                exec_s,
+                io_chunks,
+                io_bytes,
+                io_cache_hits,
+                prefetch_issued,
+                prefetch_hits,
+                prefetch_wasted_bytes,
+            } => vec![
+                ("round", Field::U(*round)),
+                ("jobs", Field::U(*jobs)),
+                ("gather_s", Field::F(*gather_s)),
+                ("exec_s", Field::F(*exec_s)),
+                ("io_chunks", Field::U(*io_chunks)),
+                ("io_bytes", Field::U(*io_bytes)),
+                ("io_cache_hits", Field::U(*io_cache_hits)),
+                ("prefetch_issued", Field::U(*prefetch_issued)),
+                ("prefetch_hits", Field::U(*prefetch_hits)),
+                ("prefetch_wasted_bytes", Field::U(*prefetch_wasted_bytes)),
+            ],
+            Event::PrefetchWave { round } => vec![("round", Field::U(*round))],
+            Event::MergeStarted { blocks } => vec![("blocks", Field::U(*blocks))],
+            Event::MergeCompleted { k, merge_s } => {
+                vec![("k", Field::U(*k)), ("merge_s", Field::F(*merge_s))]
+            }
+            Event::JobFailed { error } => vec![("error", Field::S(error.clone()))],
+            Event::BlockScattered { job, worker, band } => vec![
+                ("job", Field::U(*job)),
+                ("worker", Field::U(*worker)),
+                ("band", Field::U(*band)),
+            ],
+            Event::WorkerRetry { job, attempt } => {
+                vec![("job", Field::U(*job)), ("attempt", Field::U(*attempt))]
+            }
+            Event::WorkerLost { worker } => vec![("worker", Field::U(*worker))],
+            Event::Dropped { n } => vec![("n", Field::U(*n))],
+        }
+    }
+
+    fn from_fields(kind: &str, get: &dyn Fn(&str) -> Result<Field>) -> Result<Event> {
+        let u = |k: &str| -> Result<u64> {
+            match get(k)? {
+                Field::U(v) => Ok(v),
+                Field::F(v) if v >= 0.0 && v.fract() == 0.0 => Ok(v as u64),
+                other => bail!("event field '{k}': expected integer, got {other:?}"),
+            }
+        };
+        let f = |k: &str| -> Result<f64> {
+            match get(k)? {
+                Field::F(v) => Ok(v),
+                Field::U(v) => Ok(v as f64),
+                other => bail!("event field '{k}': expected number, got {other:?}"),
+            }
+        };
+        let s = |k: &str| -> Result<String> {
+            match get(k)? {
+                Field::S(v) => Ok(v),
+                other => bail!("event field '{k}': expected string, got {other:?}"),
+            }
+        };
+        Ok(match kind {
+            "JobQueued" => Event::JobQueued,
+            "JobStarted" => Event::JobStarted,
+            "RoundStarted" => Event::RoundStarted { round: u("round")?, jobs: u("jobs")? },
+            "RoundCompleted" => Event::RoundCompleted {
+                round: u("round")?,
+                jobs: u("jobs")?,
+                gather_s: f("gather_s")?,
+                exec_s: f("exec_s")?,
+                io_chunks: u("io_chunks")?,
+                io_bytes: u("io_bytes")?,
+                io_cache_hits: u("io_cache_hits")?,
+                prefetch_issued: u("prefetch_issued")?,
+                prefetch_hits: u("prefetch_hits")?,
+                prefetch_wasted_bytes: u("prefetch_wasted_bytes")?,
+            },
+            "PrefetchWave" => Event::PrefetchWave { round: u("round")? },
+            "MergeStarted" => Event::MergeStarted { blocks: u("blocks")? },
+            "MergeCompleted" => Event::MergeCompleted { k: u("k")?, merge_s: f("merge_s")? },
+            "JobDone" => Event::JobDone,
+            "JobFailed" => Event::JobFailed { error: s("error")? },
+            "BlockScattered" => {
+                Event::BlockScattered { job: u("job")?, worker: u("worker")?, band: u("band")? }
+            }
+            "WorkerRetry" => Event::WorkerRetry { job: u("job")?, attempt: u("attempt")? },
+            "WorkerLost" => Event::WorkerLost { worker: u("worker")? },
+            "Dropped" => Event::Dropped { n: u("n")? },
+            other => bail!("unknown event kind '{other}'"),
+        })
+    }
+}
+
+/// A sequenced, timestamped event as stored in the journal.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EventRecord {
+    /// Monotonic per-journal sequence number, from 0.
+    pub seq: u64,
+    /// Milliseconds since the journal was created.
+    pub t_ms: u64,
+    pub event: Event,
+}
+
+/// A single-line token: whitespace collapsed so the value survives the
+/// space-separated `key=value` wire format. Only `JobFailed.error`
+/// carries free text; the JSONL spill keeps the original string.
+fn tokenize(s: &str) -> String {
+    s.chars().map(|c| if c.is_whitespace() { '_' } else { c }).collect()
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+impl EventRecord {
+    /// Space-separated `key=value` form — the body of an `EVENT` line
+    /// on the `EVENTS` protocol verb.
+    pub fn to_wire(&self) -> String {
+        let mut out = format!("seq={} t_ms={} kind={}", self.seq, self.t_ms, self.event.kind());
+        for (k, v) in self.event.fields() {
+            match v {
+                Field::U(n) => out.push_str(&format!(" {k}={n}")),
+                Field::F(x) => out.push_str(&format!(" {k}={x:?}")),
+                Field::S(s) => out.push_str(&format!(" {k}={}", tokenize(&s))),
+            }
+        }
+        out
+    }
+
+    /// One flat JSON object — a line of the JSONL spill.
+    pub fn to_json(&self) -> String {
+        let mut out =
+            format!("{{\"seq\":{},\"t_ms\":{},\"kind\":\"{}\"", self.seq, self.t_ms, self.event.kind());
+        for (k, v) in self.event.fields() {
+            match v {
+                Field::U(n) => out.push_str(&format!(",\"{k}\":{n}")),
+                Field::F(x) => out.push_str(&format!(",\"{k}\":{x:?}")),
+                Field::S(s) => out.push_str(&format!(",\"{k}\":\"{}\"", json_escape(&s))),
+            }
+        }
+        out.push('}');
+        out
+    }
+
+    /// Parse one JSONL spill line back into a record.
+    pub fn from_json(line: &str) -> Result<EventRecord> {
+        let fields = parse_flat_json(line)?;
+        let get = |k: &str| -> Result<Field> {
+            fields
+                .iter()
+                .find(|(key, _)| key == k)
+                .map(|(_, v)| v.clone())
+                .with_context(|| format!("event line missing field '{k}'"))
+        };
+        let seq = match get("seq")? {
+            Field::U(v) => v,
+            other => bail!("seq: expected integer, got {other:?}"),
+        };
+        let t_ms = match get("t_ms")? {
+            Field::U(v) => v,
+            other => bail!("t_ms: expected integer, got {other:?}"),
+        };
+        let kind = match get("kind")? {
+            Field::S(v) => v,
+            other => bail!("kind: expected string, got {other:?}"),
+        };
+        Ok(EventRecord { seq, t_ms, event: Event::from_fields(&kind, &get)? })
+    }
+}
+
+/// Minimal flat-JSON-object parser (string / unsigned-int / float
+/// values only) — enough for the journal's own output; not a general
+/// JSON reader. The crate is dependency-free by design, so no serde.
+fn parse_flat_json(s: &str) -> Result<Vec<(String, Field)>> {
+    let mut chars = s.trim().chars().peekable();
+    let mut out = Vec::new();
+    let expect = |chars: &mut std::iter::Peekable<std::str::Chars>, want: char| -> Result<()> {
+        while chars.peek().is_some_and(|c| c.is_whitespace()) {
+            chars.next();
+        }
+        match chars.next() {
+            Some(c) if c == want => Ok(()),
+            other => bail!("expected '{want}', got {other:?}"),
+        }
+    };
+    let parse_string = |chars: &mut std::iter::Peekable<std::str::Chars>| -> Result<String> {
+        let mut v = String::new();
+        loop {
+            match chars.next() {
+                Some('"') => return Ok(v),
+                Some('\\') => match chars.next() {
+                    Some('"') => v.push('"'),
+                    Some('\\') => v.push('\\'),
+                    Some('n') => v.push('\n'),
+                    Some('r') => v.push('\r'),
+                    Some('t') => v.push('\t'),
+                    Some('u') => {
+                        let hex: String = (0..4).filter_map(|_| chars.next()).collect();
+                        let code = u32::from_str_radix(&hex, 16)
+                            .with_context(|| format!("bad \\u escape '{hex}'"))?;
+                        v.push(char::from_u32(code).context("bad \\u code point")?);
+                    }
+                    other => bail!("bad escape {other:?}"),
+                },
+                Some(c) => v.push(c),
+                None => bail!("unterminated string"),
+            }
+        }
+    };
+    expect(&mut chars, '{')?;
+    loop {
+        while chars.peek().is_some_and(|c| c.is_whitespace()) {
+            chars.next();
+        }
+        match chars.peek() {
+            Some('}') => {
+                chars.next();
+                break;
+            }
+            Some(',') => {
+                chars.next();
+                continue;
+            }
+            Some('"') => {}
+            other => bail!("expected key, got {other:?}"),
+        }
+        chars.next(); // opening quote
+        let key = parse_string(&mut chars)?;
+        expect(&mut chars, ':')?;
+        while chars.peek().is_some_and(|c| c.is_whitespace()) {
+            chars.next();
+        }
+        let value = match chars.peek() {
+            Some('"') => {
+                chars.next();
+                Field::S(parse_string(&mut chars)?)
+            }
+            Some(c) if c.is_ascii_digit() || *c == '-' => {
+                let mut lex = String::new();
+                while chars
+                    .peek()
+                    .is_some_and(|c| c.is_ascii_digit() || matches!(c, '-' | '+' | '.' | 'e' | 'E'))
+                {
+                    lex.push(chars.next().unwrap());
+                }
+                if lex.contains(['.', 'e', 'E']) {
+                    Field::F(lex.parse().with_context(|| format!("bad number '{lex}'"))?)
+                } else {
+                    Field::U(lex.parse().with_context(|| format!("bad integer '{lex}'"))?)
+                }
+            }
+            other => bail!("unsupported value start {other:?}"),
+        };
+        out.push((key, value));
+    }
+    Ok(out)
+}
+
+#[derive(Debug)]
+struct Ring {
+    records: VecDeque<EventRecord>,
+    /// Next sequence number to assign.
+    next_seq: u64,
+    /// Total records evicted from the front of the ring.
+    dropped: u64,
+}
+
+/// Per-job event journal: bounded ring + optional JSONL spill.
+#[derive(Debug)]
+pub struct Journal {
+    ring: Mutex<Ring>,
+    capacity: usize,
+    start: Instant,
+    spill: Option<Mutex<File>>,
+    spill_path: Option<PathBuf>,
+}
+
+impl Journal {
+    pub fn new(capacity: usize) -> Journal {
+        Journal {
+            ring: Mutex::new(Ring { records: VecDeque::new(), next_seq: 0, dropped: 0 }),
+            capacity: capacity.max(1),
+            start: Instant::now(),
+            spill: None,
+            spill_path: None,
+        }
+    }
+
+    /// A journal that also appends every record to `path` as JSONL
+    /// (creating parent directories), for post-mortems of dead jobs.
+    pub fn with_spill(capacity: usize, path: &Path) -> Result<Journal> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create journal dir {parent:?}"))?;
+        }
+        let file = File::options()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("open journal spill {path:?}"))?;
+        let mut j = Journal::new(capacity);
+        j.spill = Some(Mutex::new(file));
+        j.spill_path = Some(path.to_path_buf());
+        Ok(j)
+    }
+
+    /// Where this journal spills JSONL, if anywhere.
+    pub fn spill_path(&self) -> Option<&Path> {
+        self.spill_path.as_deref()
+    }
+
+    /// Append an event; returns its sequence number.
+    pub fn emit(&self, event: Event) -> u64 {
+        let t_ms = self.start.elapsed().as_millis() as u64;
+        let mut ring = self.ring.lock().unwrap();
+        let seq = ring.next_seq;
+        ring.next_seq += 1;
+        let rec = EventRecord { seq, t_ms, event };
+        if let Some(spill) = &self.spill {
+            // Spill failures are swallowed: the journal is advisory and
+            // must never fail a job over a full disk.
+            let mut f = spill.lock().unwrap();
+            let _ = writeln!(f, "{}", rec.to_json());
+        }
+        if ring.records.len() == self.capacity {
+            ring.records.pop_front();
+            ring.dropped += 1;
+        }
+        ring.records.push_back(rec);
+        seq
+    }
+
+    /// Records with `seq > after`, capped at `max`. If the cursor has
+    /// fallen behind the ring (records it never saw were evicted), the
+    /// first returned record is a synthetic [`Event::Dropped`] covering
+    /// the gap, sequenced just before the first retained record.
+    pub fn events_after(&self, after: Option<u64>, max: usize) -> Vec<EventRecord> {
+        let ring = self.ring.lock().unwrap();
+        let cursor = after.map(|a| a + 1).unwrap_or(0);
+        let mut out = Vec::new();
+        if let Some(front) = ring.records.front() {
+            if cursor < front.seq {
+                out.push(EventRecord {
+                    seq: front.seq - 1,
+                    t_ms: front.t_ms,
+                    event: Event::Dropped { n: front.seq - cursor },
+                });
+            }
+        }
+        for rec in ring.records.iter() {
+            if out.len() >= max.max(1) {
+                break;
+            }
+            if rec.seq >= cursor {
+                out.push(rec.clone());
+            }
+        }
+        out
+    }
+
+    /// Total records ever evicted from the ring.
+    pub fn dropped(&self) -> u64 {
+        self.ring.lock().unwrap().dropped
+    }
+
+    /// The highest sequence number assigned so far, if any.
+    pub fn last_seq(&self) -> Option<u64> {
+        let ring = self.ring.lock().unwrap();
+        ring.next_seq.checked_sub(1)
+    }
+}
+
+/// Read a JSONL journal spill back into records (post-mortem path).
+pub fn read_jsonl(path: &Path) -> Result<Vec<EventRecord>> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read journal {path:?}"))?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(EventRecord::from_json)
+        .collect()
+}
+
+/// Cheap cloneable emission handle threaded through configs. Disabled
+/// by default ([`Trace::default`]) — every emission site stays a no-op
+/// unless a journal was attached.
+#[derive(Clone, Debug, Default)]
+pub struct Trace(Option<Arc<Journal>>);
+
+impl Trace {
+    /// A trace writing into `journal`.
+    pub fn to_journal(journal: Arc<Journal>) -> Trace {
+        Trace(Some(journal))
+    }
+
+    /// The disabled (no-op) trace — same as `Trace::default()`.
+    pub fn disabled() -> Trace {
+        Trace(None)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Emit `event` if enabled; otherwise a no-op.
+    pub fn emit(&self, event: Event) {
+        if let Some(j) = &self.0 {
+            j.emit(event);
+        }
+    }
+
+    /// The backing journal, if enabled.
+    pub fn journal(&self) -> Option<&Arc<Journal>> {
+        self.0.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("lamc-trace-{}-{name}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("journal.jsonl")
+    }
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::JobQueued,
+            Event::JobStarted,
+            Event::RoundStarted { round: 0, jobs: 4 },
+            Event::PrefetchWave { round: 1 },
+            Event::RoundCompleted {
+                round: 0,
+                jobs: 4,
+                gather_s: 0.125,
+                exec_s: 1.5,
+                io_chunks: 7,
+                io_bytes: 4096,
+                io_cache_hits: 3,
+                prefetch_issued: 2,
+                prefetch_hits: 1,
+                prefetch_wasted_bytes: 64,
+            },
+            Event::MergeStarted { blocks: 8 },
+            Event::MergeCompleted { k: 3, merge_s: 0.001 },
+            Event::BlockScattered { job: 2, worker: 1, band: 0 },
+            Event::WorkerLost { worker: 1 },
+            Event::WorkerRetry { job: 2, attempt: 1 },
+            Event::JobFailed { error: "worker 1 lost: connection reset".into() },
+            Event::JobDone,
+        ]
+    }
+
+    #[test]
+    fn seqs_are_monotonic_and_ordered() {
+        let j = Journal::new(64);
+        for e in sample_events() {
+            j.emit(e);
+        }
+        let recs = j.events_after(None, usize::MAX);
+        assert_eq!(recs.len(), sample_events().len());
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.seq, i as u64, "dense monotonic seq");
+        }
+        for w in recs.windows(2) {
+            assert!(w[0].t_ms <= w[1].t_ms, "timestamps never go backwards");
+        }
+        assert_eq!(j.last_seq(), Some(sample_events().len() as u64 - 1));
+    }
+
+    #[test]
+    fn cursor_pages_without_overlap() {
+        let j = Journal::new(64);
+        for i in 0..10 {
+            j.emit(Event::RoundStarted { round: i, jobs: 1 });
+        }
+        let first = j.events_after(None, 4);
+        assert_eq!(first.len(), 4);
+        let rest = j.events_after(Some(first.last().unwrap().seq), usize::MAX);
+        assert_eq!(rest.len(), 6);
+        assert_eq!(rest[0].seq, 4);
+        assert!(j.events_after(Some(9), usize::MAX).is_empty(), "cursor at tail sees nothing");
+    }
+
+    #[test]
+    fn overflow_marks_dropped_gap() {
+        let j = Journal::new(4);
+        for i in 0..10 {
+            j.emit(Event::RoundStarted { round: i, jobs: 1 });
+        }
+        assert_eq!(j.dropped(), 6);
+        let recs = j.events_after(None, usize::MAX);
+        // Synthetic gap marker first, then the retained tail.
+        assert_eq!(recs[0].event, Event::Dropped { n: 6 });
+        assert_eq!(recs[0].seq, 5, "gap marker sequenced just before the first retained record");
+        assert_eq!(recs[1].seq, 6);
+        assert_eq!(recs.len(), 5);
+        // A reader that already saw seq 7 gets no gap marker.
+        let tail = j.events_after(Some(7), usize::MAX);
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail[0].seq, 8);
+    }
+
+    #[test]
+    fn wire_and_json_forms_cover_every_field() {
+        let rec = EventRecord {
+            seq: 3,
+            t_ms: 12,
+            event: Event::JobFailed { error: "boom with spaces".into() },
+        };
+        let wire = rec.to_wire();
+        assert!(wire.starts_with("seq=3 t_ms=12 kind=JobFailed"), "{wire}");
+        assert!(wire.contains("error=boom_with_spaces"), "wire values stay single tokens: {wire}");
+        assert!(rec.to_json().contains("\"error\":\"boom with spaces\""));
+    }
+
+    #[test]
+    fn json_round_trips_every_event_kind() {
+        for (i, e) in sample_events().into_iter().enumerate() {
+            let rec = EventRecord { seq: i as u64, t_ms: 10 * i as u64, event: e };
+            let back = EventRecord::from_json(&rec.to_json()).unwrap();
+            assert_eq!(back, rec, "round-trip of {}", rec.to_json());
+        }
+    }
+
+    #[test]
+    fn json_rejects_damage() {
+        assert!(EventRecord::from_json("{\"seq\":1}").is_err(), "missing fields");
+        assert!(EventRecord::from_json("{\"seq\":1,\"t_ms\":2,\"kind\":\"NoSuchKind\"}").is_err());
+        assert!(EventRecord::from_json("not json at all").is_err());
+        assert!(
+            EventRecord::from_json("{\"seq\":1,\"t_ms\":2,\"kind\":\"Dropped\"}").is_err(),
+            "kind-specific field missing"
+        );
+    }
+
+    #[test]
+    fn jsonl_spill_round_trips() {
+        let path = tmp("roundtrip");
+        let _ = std::fs::remove_file(&path);
+        let j = Journal::with_spill(4, &path).unwrap();
+        let events = sample_events();
+        for e in &events {
+            j.emit(e.clone());
+        }
+        assert_eq!(j.spill_path(), Some(path.as_path()));
+        // The spill keeps *everything*, even records the ring evicted.
+        let recs = read_jsonl(&path).unwrap();
+        assert_eq!(recs.len(), events.len());
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.seq, i as u64);
+            assert_eq!(&r.event, &events[i]);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn disabled_trace_is_a_no_op() {
+        let t = Trace::default();
+        assert!(!t.enabled());
+        t.emit(Event::JobDone); // must not panic
+        assert!(t.journal().is_none());
+
+        let j = Arc::new(Journal::new(8));
+        let t = Trace::to_journal(Arc::clone(&j));
+        assert!(t.enabled());
+        t.emit(Event::JobDone);
+        assert_eq!(j.events_after(None, 10).len(), 1);
+    }
+}

@@ -144,6 +144,91 @@ fn killed_worker_jobs_are_retried_byte_identically() {
     kill(w1);
 }
 
+/// Drain a job's full event journal through the wire cursor protocol
+/// (EVENTSB with text fallback — whatever the client negotiated).
+fn drain_events(client: &mut ServiceClient, id: u64) -> Vec<String> {
+    let mut lines = Vec::new();
+    let mut cursor = None;
+    loop {
+        let (page, next) = client.events(id, cursor).unwrap();
+        if page.is_empty() {
+            break;
+        }
+        lines.extend(page);
+        cursor = next;
+    }
+    lines
+}
+
+fn kind_of(line: &str) -> &str {
+    line.split_whitespace().find_map(|t| t.strip_prefix("kind=")).unwrap_or("")
+}
+
+#[test]
+fn killed_worker_event_stream_narrates_lost_retry_done_in_order() {
+    let fx = fixture("retry_events", 2);
+    let spec = JobSpec { matrix: "m".into(), k: 3, seed: 0x5A4D, workers: 2, ..Default::default() };
+    // Byte-identity reference: the same spec's config run in process.
+    let local = Lamc::new(spec.lamc_config().unwrap()).run(&fx.matrix).unwrap();
+
+    // Two fully-replicated subprocess workers behind a router front
+    // end, so the event stream is read over the real EVENTS protocol.
+    let binding = format!("m={}", fx.manifest_path.display());
+    let (w0, a0) = spawn_worker(&binding);
+    let (w1, a1) = spawn_worker(&binding);
+    let router = ShardRouter::connect(&[a0, a1], ShardRouterConfig::default()).unwrap();
+    let front = ShardServer::spawn("127.0.0.1:0", router).unwrap();
+    let mut client = ServiceClient::connect(front.addr()).unwrap();
+
+    // Healthy run first: establishes the connections the kill severs,
+    // and its journal must narrate a clean arc (no loss, no retry).
+    let id = client.submit(&spec).unwrap();
+    let healthy = client.wait(id, Duration::from_secs(120)).unwrap();
+    assert_eq!(healthy.row_labels, local.row_labels, "healthy: row labels");
+    let lines = drain_events(&mut client, id);
+    let kinds: Vec<&str> = lines.iter().map(|l| kind_of(l)).collect();
+    assert!(kinds.contains(&"RoundCompleted"), "healthy stream: {kinds:?}");
+    assert!(kinds.contains(&"BlockScattered"), "healthy stream: {kinds:?}");
+    assert!(!kinds.contains(&"WorkerLost"), "healthy stream: {kinds:?}");
+    assert_eq!(kinds.last(), Some(&"JobDone"), "healthy stream: {kinds:?}");
+
+    // Kill worker 0 and resubmit: the scatter hits a dead socket, the
+    // jobs retry onto worker 1, and the journal must narrate exactly
+    // that — WorkerLost, then WorkerRetry, then JobDone — while the
+    // labels stay byte-identical to the single-node reference.
+    kill(w0);
+    let id = client.submit(&spec).unwrap();
+    let retried = client.wait(id, Duration::from_secs(120)).unwrap();
+    assert_eq!(retried.row_labels, local.row_labels, "retried: row labels");
+    assert_eq!(retried.col_labels, local.col_labels, "retried: col labels");
+
+    let lines = drain_events(&mut client, id);
+    let kinds: Vec<&str> = lines.iter().map(|l| kind_of(l)).collect();
+    let pos = |k: &str| {
+        kinds.iter().position(|x| *x == k).unwrap_or_else(|| panic!("no {k} in {kinds:?}"))
+    };
+    assert_eq!(pos("JobQueued"), 0, "stream starts at the queue: {kinds:?}");
+    assert!(pos("WorkerLost") < pos("WorkerRetry"), "loss precedes retry: {kinds:?}");
+    assert!(pos("WorkerRetry") < pos("JobDone"), "retry precedes done: {kinds:?}");
+    assert!(pos("MergeCompleted") < pos("JobDone"), "merge inside the job: {kinds:?}");
+    assert_eq!(kinds.last(), Some(&"JobDone"), "terminal event: {kinds:?}");
+
+    // Cursor seqs are strictly increasing across the whole drain.
+    let seqs: Vec<u64> = lines
+        .iter()
+        .map(|l| {
+            l.split_whitespace()
+                .find_map(|t| t.strip_prefix("seq="))
+                .and_then(|s| s.parse().ok())
+                .unwrap_or_else(|| panic!("no seq in '{l}'"))
+        })
+        .collect();
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "monotonic seqs: {seqs:?}");
+
+    drop(front);
+    kill(w1);
+}
+
 #[test]
 fn losing_the_only_owner_of_a_band_is_a_typed_error() {
     let fx = fixture("band_lost", 2);

@@ -18,6 +18,9 @@
 //!    as the in-process single-node run — including when a flaky
 //!    worker drops its connection mid-round and jobs take the
 //!    retry path.
+//! 5. **Advisory observability.** Attaching a lifecycle-event journal
+//!    to a run — even one small enough to overflow and drop events —
+//!    changes nothing about the labels, `k`, or consensus ordering.
 //!
 //! Seeded and reproducible via `testkit` (`LAMC_PROP_SEED` /
 //! `LAMC_PROP_CASES` env overrides).
@@ -178,6 +181,56 @@ fn coclustering_labels_are_byte_identical_across_backings() {
             MatrixRef::InMem(_) => unreachable!(),
         }
     }
+}
+
+/// Event emission is advisory: running the exact same config with a
+/// trace journal attached — one so small the ring is forced to drop
+/// events mid-run — must not perturb the labels, `k`, or consensus
+/// ordering by a single byte (docs/OBSERVABILITY.md § Guarantees).
+#[test]
+fn event_emission_is_advisory_labels_byte_identical() {
+    use lamc::trace::{Event, Journal, Trace};
+    use std::sync::Arc;
+
+    let cfg = PlantedConfig {
+        rows: 160,
+        cols: 120,
+        row_clusters: 3,
+        col_clusters: 3,
+        noise: 0.1,
+        signal: 1.5,
+        density: 0.08,
+        seed: 0xADB1,
+    };
+    let matrix = planted_dense(&cfg).matrix;
+    let mut config = LamcConfig { k: 3, seed: 0x1A3C, ..Default::default() };
+    config.planner.candidate_sizes = vec![48, 64];
+    config.planner.max_samplings = 6;
+
+    let silent = Lamc::new(config.clone()).run(&matrix).unwrap();
+
+    // Capacity 2 cannot hold even one round's start/complete pair plus
+    // the merge events — the ring must wrap and drop.
+    let journal = Arc::new(Journal::new(2));
+    let mut traced_cfg = config;
+    traced_cfg.trace = Trace::to_journal(Arc::clone(&journal));
+    let traced = Lamc::new(traced_cfg).run(&matrix).unwrap();
+
+    assert_eq!(silent.row_labels, traced.row_labels, "traced: row labels");
+    assert_eq!(silent.col_labels, traced.col_labels, "traced: col labels");
+    assert_eq!(silent.k, traced.k, "traced: k");
+    assert_eq!(silent.coclusters, traced.coclusters, "traced: consensus ordering");
+
+    // The journal really was active and really did overflow: the read
+    // side must surface the truncation as a synthetic Dropped marker.
+    assert!(journal.last_seq().unwrap_or(0) > 2, "pipeline emitted through the trace");
+    assert!(journal.dropped() > 0, "tiny ring forced drops");
+    let events = journal.events_after(None, 64);
+    assert!(
+        matches!(events.first().map(|r| &r.event), Some(Event::Dropped { .. })),
+        "gap marker first, got {:?}",
+        events.first()
+    );
 }
 
 #[test]

@@ -1,0 +1,166 @@
+#!/usr/bin/env python3
+"""Perf-trajectory regression gate for the CI bench artifacts.
+
+Compares the current run's ``BENCH_N.json`` against the previous run's
+artifact (downloaded from the last successful workflow run on the same
+branch) and fails when any wall-clock metric regressed beyond the
+tolerance. Policy, metric naming, and the rationale for the default
+tolerance live in ``docs/BENCHMARKS.md``.
+
+Rules (deliberately few — shared CI runners are noisy):
+
+* Only keys that name a duration are compared (``*_s``, ``*_seconds``,
+  ``median_s``/``min_s`` leaves). Everything else (counts, reductions,
+  speedups, strings) is trajectory data, not a gate.
+* Lower is better. ``current > previous * (1 + tolerance/100)`` on any
+  compared key fails the gate; improvements never fail it.
+* Baselines under ``--min-seconds`` (default 5 ms) are skipped — at
+  that scale runner jitter swamps the signal.
+* A missing/unreadable previous artifact passes with a note: the first
+  run on a branch seeds the trajectory instead of failing it.
+
+Usage:
+  bench_compare.py --current BENCH_7.json [--previous PREV.json]
+                   [--tolerance PCT] [--min-seconds S]
+  bench_compare.py --self-test
+
+``--self-test`` builds a synthetic previous/current pair with one
+injected regression and asserts the gate fails on it (and passes once
+the regression is removed) — CI runs this first so a silently broken
+comparator can never wave a real regression through.
+"""
+
+import argparse
+import json
+import sys
+
+
+def flatten(obj, prefix=""):
+    """Flatten nested dicts to {dotted.path: leaf} (lists are opaque)."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            path = f"{prefix}.{k}" if prefix else str(k)
+            out.update(flatten(v, path))
+    else:
+        out[prefix] = obj
+    return out
+
+
+def is_duration_key(path):
+    leaf = path.rsplit(".", 1)[-1]
+    return leaf.endswith("_s") or leaf.endswith("_seconds")
+
+
+def compare(previous, current, tolerance_pct, min_seconds):
+    """Return (failures, checked) comparing duration keys of two dicts.
+
+    ``failures`` is a list of human-readable regression lines; ``checked``
+    counts the keys actually gated.
+    """
+    prev = flatten(previous)
+    curr = flatten(current)
+    failures = []
+    checked = 0
+    for path in sorted(curr):
+        if not is_duration_key(path) or path not in prev:
+            continue
+        p, c = prev[path], curr[path]
+        if not isinstance(p, (int, float)) or not isinstance(c, (int, float)):
+            continue
+        if p < min_seconds:
+            print(f"  skip  {path}: baseline {p:.6f}s < {min_seconds}s floor")
+            continue
+        checked += 1
+        limit = p * (1.0 + tolerance_pct / 100.0)
+        verdict = "FAIL" if c > limit else "ok"
+        print(f"  {verdict:<5} {path}: {p:.4f}s -> {c:.4f}s (limit {limit:.4f}s)")
+        if c > limit:
+            failures.append(
+                f"{path}: {c:.4f}s vs previous {p:.4f}s "
+                f"(+{100.0 * (c / p - 1.0):.1f}%, tolerance {tolerance_pct:.0f}%)"
+            )
+    return failures, checked
+
+
+def self_test(tolerance_pct, min_seconds):
+    previous = {
+        "bench_id": 7,
+        "headline": {"t_scc_dense_s": 2.0, "t_lamc_scc_dense_s": 0.40},
+        "prefetch": {"prefetch_on": {"median_s": 0.100, "runs": 5}},
+        "tiny": {"noise_s": 0.0001},
+    }
+    # Injected regression: t_lamc_scc_dense_s 0.40 -> 1.20 (+200%).
+    current = json.loads(json.dumps(previous))
+    current["headline"]["t_lamc_scc_dense_s"] = 1.20
+    current["tiny"]["noise_s"] = 0.0009  # 9x, but under the floor: ignored
+
+    print("self-test: injected regression must fail the gate")
+    failures, checked = compare(previous, current, tolerance_pct, min_seconds)
+    assert checked >= 3, f"expected >=3 gated keys, got {checked}"
+    assert len(failures) == 1, f"expected exactly 1 failure, got {failures}"
+    assert "t_lamc_scc_dense_s" in failures[0], failures[0]
+
+    print("self-test: identical runs must pass the gate")
+    failures, _ = compare(previous, previous, tolerance_pct, min_seconds)
+    assert not failures, f"identical runs flagged: {failures}"
+
+    print("self-test: missing previous artifact must pass (trajectory seed)")
+    rc = run_gate(None, current, tolerance_pct, min_seconds)
+    assert rc == 0, "missing previous artifact should not fail the gate"
+
+    print("self-test OK")
+    return 0
+
+
+def run_gate(previous, current, tolerance_pct, min_seconds):
+    if previous is None:
+        print("no previous bench artifact — seeding the trajectory, gate passes")
+        return 0
+    failures, checked = compare(previous, current, tolerance_pct, min_seconds)
+    if failures:
+        print(f"\nperf regression gate FAILED ({len(failures)} metric(s)):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print(f"\nperf regression gate passed ({checked} metric(s) within tolerance)")
+    return 0
+
+
+def load_optional(path):
+    """Previous artifact: tolerate absence and damage (first run, expired
+    artifact, truncated download) — those seed the trajectory."""
+    if path is None:
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"previous artifact unusable ({e}) — treating as missing")
+        return None
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", help="this run's BENCH_N.json")
+    ap.add_argument("--previous", help="previous run's artifact (may be absent)")
+    ap.add_argument("--tolerance", type=float, default=40.0,
+                    help="allowed slowdown in percent (default 40; docs/BENCHMARKS.md)")
+    ap.add_argument("--min-seconds", type=float, default=0.005,
+                    help="skip metrics whose baseline is below this (default 5 ms)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate fails on an injected regression")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return self_test(args.tolerance, args.min_seconds)
+    if not args.current:
+        ap.error("--current is required (or use --self-test)")
+    with open(args.current) as f:
+        current = json.load(f)
+    return run_gate(load_optional(args.previous), current, args.tolerance,
+                    args.min_seconds)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
