@@ -16,4 +16,4 @@ pub mod stats;
 pub use router::PjrtExecutor;
 pub use router::{BlockExecutor, NativeExecutor, Route, Router};
 pub use scheduler::{band_of, plan_jobs_by_band, run_rounds, BandSpan, JobBandPlan, SchedulerConfig};
-pub use stats::{Stats, StatsSnapshot};
+pub use stats::{Histogram, HistogramSnapshot, Stats, StatsSnapshot, HIST_BOUNDS, HIST_BUCKETS};

@@ -117,25 +117,49 @@ pub fn run_rounds<'a>(
         .collect();
     let round_ns: Vec<(AtomicU64, AtomicU64)> =
         (0..rounds.len()).map(|_| (AtomicU64::new(0), AtomicU64::new(0))).collect();
+    // Span tree: one `round-<r>` span per round (reserved up front so
+    // worker threads can parent their per-block spans under it before
+    // the round's duration is known), parented under the caller's span
+    // (the manager's job span through `Trace::child_of`; the tree root
+    // for a bare pipeline run).
+    let round_span: Vec<u64> = (0..rounds.len()).map(|_| trace.reserve_span()).collect();
 
     // One claim-loop body shared by both dispatch shapes below.
     let run_one = |idx: usize| {
         let job = jobs[idx];
+        let gather_start_us = trace.now_us();
         let t0 = Instant::now();
         let block = matrix.gather_block(&job.rows, &job.cols);
         let gather_ns = t0.elapsed().as_nanos() as u64;
         stats.add_gather(gather_ns);
         round_ns[round_of[idx]].0.fetch_add(gather_ns, Ordering::Relaxed);
+        trace.record_span(
+            trace.reserve_span(),
+            round_span[round_of[idx]],
+            "gather",
+            0,
+            gather_start_us,
+            gather_ns / 1_000,
+        );
 
         let result = match block {
             Ok(block) => {
                 let seed = job_seed(cfg.seed, job);
+                let exec_start_us = trace.now_us();
                 let t1 = Instant::now();
                 let result = router.execute(&block, cfg.k, seed, stats);
                 let exec_ns = t1.elapsed().as_nanos() as u64;
                 stats.add_exec(exec_ns);
                 round_ns[round_of[idx]].1.fetch_add(exec_ns, Ordering::Relaxed);
                 stats.blocks_total.fetch_add(1, Ordering::Relaxed);
+                trace.record_span(
+                    trace.reserve_span(),
+                    round_span[round_of[idx]],
+                    "exec",
+                    0,
+                    exec_start_us,
+                    exec_ns / 1_000,
+                );
                 result
             }
             // Gather failure (store I/O or checksum): the job carries
@@ -145,6 +169,14 @@ pub fn run_rounds<'a>(
 
         // Per-job lock is negligible next to gather + co-clustering.
         slots.lock().unwrap()[idx] = Some(result);
+    };
+
+    // Per-round latency distributions, observed once per round when its
+    // accumulators are final (the wire/export unit is the round here;
+    // shard workers observe per block).
+    let observe_round_hists = |r: usize| {
+        stats.hist_gather.observe_ns(round_ns[r].0.load(Ordering::Relaxed));
+        stats.hist_exec.observe_ns(round_ns[r].1.load(Ordering::Relaxed));
     };
 
     let round_completed = |r: usize, io: &IoCounters| Event::RoundCompleted {
@@ -165,6 +197,7 @@ pub fn run_rounds<'a>(
         // prefetch disabled): keep the flat single-wave dispatch —
         // workers stay busy across round boundaries instead of idling
         // behind each round's straggler.
+        let flat_start_us = trace.now_us();
         for (r, round) in rounds.iter().enumerate() {
             if !round.jobs.is_empty() {
                 trace.emit(Event::RoundStarted { round: r as u64, jobs: round.jobs.len() as u64 });
@@ -178,12 +211,24 @@ pub fn run_rounds<'a>(
         // delta rides on the last round's event.
         let io = matrix.take_io_delta();
         stats.add_io(&io);
-        if trace.enabled() {
-            let last = rounds.iter().rposition(|round| !round.jobs.is_empty());
-            for (r, round) in rounds.iter().enumerate() {
-                if round.jobs.is_empty() {
-                    continue;
-                }
+        // Likewise no per-round wall-clock boundary: every round span
+        // covers the single wave the rounds actually ran in.
+        let flat_dur_us = trace.now_us().saturating_sub(flat_start_us);
+        let last = rounds.iter().rposition(|round| !round.jobs.is_empty());
+        for (r, round) in rounds.iter().enumerate() {
+            if round.jobs.is_empty() {
+                continue;
+            }
+            observe_round_hists(r);
+            trace.record_span(
+                round_span[r],
+                trace.parent(),
+                &format!("round-{r}"),
+                0,
+                flat_start_us,
+                flat_dur_us,
+            );
+            if trace.enabled() {
                 let io_r = if Some(r) == last { io } else { IoCounters::default() };
                 trace.emit(round_completed(r, &io_r));
             }
@@ -206,10 +251,20 @@ pub fn run_rounds<'a>(
                 continue;
             }
             trace.emit(Event::RoundStarted { round: r as u64, jobs: round.jobs.len() as u64 });
+            let round_start_us = trace.now_us();
             let concurrency = cfg.effective_workers().min(round.jobs.len());
             let offset = base;
             WorkerPool::global().run_jobs(concurrency, round.jobs.len(), |i| run_one(offset + i));
             base += round.jobs.len();
+            observe_round_hists(r);
+            trace.record_span(
+                round_span[r],
+                trace.parent(),
+                &format!("round-{r}"),
+                0,
+                round_start_us,
+                trace.now_us().saturating_sub(round_start_us),
+            );
             if trace.enabled() {
                 // Claim this wave's I/O delta so the event carries it;
                 // the claim still reaches `stats` right here, and the

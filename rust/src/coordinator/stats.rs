@@ -4,6 +4,134 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use anyhow::{bail, Context, Result};
+
+/// Fixed histogram bucket upper bounds, in seconds. Shared by every
+/// latency histogram (`gather`/`exec`/`merge` round phases and queue
+/// wait) so that bucket-wise aggregation across workers in the shard
+/// router is exact — merging histograms with different bounds would
+/// require re-binning. Spans 1 ms block gathers to 30 s stalled queue
+/// waits; an implicit `+Inf` bucket terminates the series.
+pub const HIST_BOUNDS: [f64; 12] =
+    [0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 5.0, 30.0];
+
+/// Bucket count including the `+Inf` overflow bucket.
+pub const HIST_BUCKETS: usize = HIST_BOUNDS.len() + 1;
+
+/// Lock-free fixed-bucket latency histogram. Buckets are stored
+/// **non-cumulative** (each counts only its own bin) so concurrent
+/// `observe_ns` calls touch one counter; the Prometheus cumulative
+/// `le` form is produced at render time from a snapshot.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub fn observe_ns(&self, ns: u64) {
+        let secs = ns as f64 / 1e9;
+        let idx = HIST_BOUNDS.iter().position(|&b| secs <= b).unwrap_or(HIST_BOUNDS.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (out, b) in buckets.iter_mut().zip(&self.buckets) {
+            *out = b.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot {
+            buckets,
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Fold a snapshot's counts into this live histogram — the service
+    /// manager accumulating a pipeline run's local histograms.
+    pub fn fold(&self, snap: &HistogramSnapshot) {
+        for (b, n) in self.buckets.iter().zip(&snap.buckets) {
+            if *n > 0 {
+                b.fetch_add(*n, Ordering::Relaxed);
+            }
+        }
+        self.sum_ns.fetch_add(snap.sum_ns, Ordering::Relaxed);
+        self.count.fetch_add(snap.count, Ordering::Relaxed);
+    }
+}
+
+/// Point-in-time histogram copy: the unit of wire transfer (`STATS`
+/// `hist_*=` tokens) and of router-side aggregation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bin (non-cumulative) counts; the last bin is `+Inf`.
+    pub buckets: [u64; HIST_BUCKETS],
+    pub sum_ns: u64,
+    pub count: u64,
+}
+
+impl HistogramSnapshot {
+    /// Bucket-wise sum — associative and commutative with identity
+    /// `HistogramSnapshot::default()`, so the router may fold worker
+    /// histograms in any order.
+    pub fn merged(&self, other: &HistogramSnapshot) -> HistogramSnapshot {
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (out, (a, b)) in buckets.iter_mut().zip(self.buckets.iter().zip(&other.buckets)) {
+            *out = a + b;
+        }
+        HistogramSnapshot {
+            buckets,
+            sum_ns: self.sum_ns + other.sum_ns,
+            count: self.count + other.count,
+        }
+    }
+
+    /// Cumulative counts in Prometheus `le` order; the final entry
+    /// (`+Inf`) equals `count`.
+    pub fn cumulative(&self) -> [u64; HIST_BUCKETS] {
+        let mut out = self.buckets;
+        for i in 1..HIST_BUCKETS {
+            out[i] += out[i - 1];
+        }
+        out
+    }
+
+    /// Single-token wire form for the `STATS` kv line:
+    /// `b0,..,b12,sum_ns,count` (comma-joined, no spaces).
+    pub fn to_wire(&self) -> String {
+        let mut parts: Vec<String> = self.buckets.iter().map(|b| b.to_string()).collect();
+        parts.push(self.sum_ns.to_string());
+        parts.push(self.count.to_string());
+        parts.join(",")
+    }
+
+    /// Parse the [`Self::to_wire`] form.
+    pub fn from_wire(token: &str) -> Result<HistogramSnapshot> {
+        let fields: Vec<&str> = token.split(',').collect();
+        if fields.len() != HIST_BUCKETS + 2 {
+            bail!(
+                "histogram token has {} fields, expected {}",
+                fields.len(),
+                HIST_BUCKETS + 2
+            );
+        }
+        let parse =
+            |s: &str| s.parse::<u64>().with_context(|| format!("bad histogram field '{s}'"));
+        let mut buckets = [0u64; HIST_BUCKETS];
+        for (out, s) in buckets.iter_mut().zip(&fields) {
+            *out = parse(s)?;
+        }
+        Ok(HistogramSnapshot {
+            buckets,
+            sum_ns: parse(fields[HIST_BUCKETS])?,
+            count: parse(fields[HIST_BUCKETS + 1])?,
+        })
+    }
+}
+
 /// Live counters shared across workers.
 #[derive(Debug, Default)]
 pub struct Stats {
@@ -34,6 +162,15 @@ pub struct Stats {
     pub prefetch_issued: AtomicU64,
     pub prefetch_hits: AtomicU64,
     pub prefetch_wasted_bytes: AtomicU64,
+    /// Latency distributions behind the `_seconds_total` sums above:
+    /// per-round (single-node) or per-block (worker) phase durations,
+    /// plus queue wait (submit → a runner picks the job up). The shard
+    /// router does not observe into these locally — it aggregates its
+    /// workers' histograms bucket-wise at scrape time.
+    pub hist_gather: Histogram,
+    pub hist_exec: Histogram,
+    pub hist_merge: Histogram,
+    pub hist_queue_wait: Histogram,
 }
 
 impl Stats {
@@ -73,6 +210,10 @@ impl Stats {
             prefetch_issued: self.prefetch_issued.load(Ordering::Relaxed),
             prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
             prefetch_wasted_bytes: self.prefetch_wasted_bytes.load(Ordering::Relaxed),
+            hist_gather: self.hist_gather.snapshot(),
+            hist_exec: self.hist_exec.snapshot(),
+            hist_merge: self.hist_merge.snapshot(),
+            hist_queue_wait: self.hist_queue_wait.snapshot(),
         }
     }
 }
@@ -95,6 +236,10 @@ pub struct StatsSnapshot {
     pub prefetch_issued: u64,
     pub prefetch_hits: u64,
     pub prefetch_wasted_bytes: u64,
+    pub hist_gather: HistogramSnapshot,
+    pub hist_exec: HistogramSnapshot,
+    pub hist_merge: HistogramSnapshot,
+    pub hist_queue_wait: HistogramSnapshot,
 }
 
 impl StatsSnapshot {
@@ -123,6 +268,10 @@ impl StatsSnapshot {
             prefetch_issued: self.prefetch_issued + other.prefetch_issued,
             prefetch_hits: self.prefetch_hits + other.prefetch_hits,
             prefetch_wasted_bytes: self.prefetch_wasted_bytes + other.prefetch_wasted_bytes,
+            hist_gather: self.hist_gather.merged(&other.hist_gather),
+            hist_exec: self.hist_exec.merged(&other.hist_exec),
+            hist_merge: self.hist_merge.merged(&other.hist_merge),
+            hist_queue_wait: self.hist_queue_wait.merged(&other.hist_queue_wait),
         }
     }
 }
@@ -223,6 +372,7 @@ mod tests {
             prefetch_issued: 29,
             prefetch_hits: 31,
             prefetch_wasted_bytes: 37,
+            ..StatsSnapshot::default()
         };
         let b = StatsSnapshot {
             blocks_total: 41,
@@ -240,6 +390,7 @@ mod tests {
             prefetch_issued: 79,
             prefetch_hits: 83,
             prefetch_wasted_bytes: 89,
+            ..StatsSnapshot::default()
         };
         let m = a.merged(&b);
         assert_eq!(m.blocks_total, 43);
@@ -269,5 +420,68 @@ mod tests {
         let snap = s.snapshot();
         assert_eq!(snap.cache_hits, 2);
         assert_eq!(snap.cache_misses, 1);
+    }
+
+    #[test]
+    fn histogram_buckets_observations_by_bound() {
+        let h = Histogram::default();
+        h.observe_ns(500_000); // 0.5 ms -> first bucket (le 0.001)
+        h.observe_ns(1_000_000); // exactly 1 ms -> still le 0.001 (inclusive)
+        h.observe_ns(30_000_000); // 30 ms -> le 0.05
+        h.observe_ns(120_000_000_000); // 120 s -> +Inf
+        let snap = h.snapshot();
+        assert_eq!(snap.buckets[0], 2);
+        assert_eq!(snap.buckets[5], 1);
+        assert_eq!(snap.buckets[HIST_BUCKETS - 1], 1);
+        assert_eq!(snap.count, 4);
+        assert_eq!(snap.sum_ns, 500_000 + 1_000_000 + 30_000_000 + 120_000_000_000);
+        let cum = snap.cumulative();
+        assert_eq!(cum[HIST_BUCKETS - 1], snap.count, "+Inf bucket equals count");
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]), "cumulative is monotone");
+    }
+
+    #[test]
+    fn histogram_wire_round_trips() {
+        let h = Histogram::default();
+        h.observe_ns(3_000_000);
+        h.observe_ns(700_000_000);
+        let snap = h.snapshot();
+        let token = snap.to_wire();
+        assert!(!token.contains(' '), "wire form must be a single token");
+        assert_eq!(HistogramSnapshot::from_wire(&token).unwrap(), snap);
+        assert!(HistogramSnapshot::from_wire("1,2,3").is_err(), "wrong arity");
+        assert!(HistogramSnapshot::from_wire(&token.replace('0', "x")).is_err());
+    }
+
+    #[test]
+    fn histogram_merge_is_associative_and_commutative() {
+        let mk = |seed: u64| {
+            let h = Histogram::default();
+            // Spread observations across bins deterministically.
+            for i in 0..seed {
+                h.observe_ns((i + 1) * seed * 900_000);
+            }
+            h.snapshot()
+        };
+        let (a, b, c) = (mk(3), mk(7), mk(13));
+        assert_eq!(a.merged(&b).merged(&c), a.merged(&b.merged(&c)), "associative");
+        assert_eq!(a.merged(&b), b.merged(&a), "commutative");
+        assert_eq!(a.merged(&HistogramSnapshot::default()), a, "identity");
+        let all = a.merged(&b).merged(&c);
+        assert_eq!(all.count, a.count + b.count + c.count);
+        assert_eq!(all.cumulative()[HIST_BUCKETS - 1], all.count);
+    }
+
+    #[test]
+    fn snapshot_merge_folds_histograms() {
+        let s1 = Stats::default();
+        s1.hist_gather.observe_ns(2_000_000);
+        let s2 = Stats::default();
+        s2.hist_gather.observe_ns(400_000_000);
+        s2.hist_queue_wait.observe_ns(1_000);
+        let m = s1.snapshot().merged(&s2.snapshot());
+        assert_eq!(m.hist_gather.count, 2);
+        assert_eq!(m.hist_queue_wait.count, 1);
+        assert_eq!(m.hist_exec.count, 0);
     }
 }

@@ -23,6 +23,10 @@
 //!                running service.
 //! * `watch`    — stream a job's lifecycle events (EVENTS cursor
 //!                protocol) until it finishes.
+//! * `profile`  — print a job's span tree with critical-path analysis
+//!                (SPANS verb).
+//! * `trace-export` — dump a job's span tree as Chrome trace-event
+//!                JSON (load in Perfetto or chrome://tracing).
 //! * `metrics`  — print a running service's Prometheus-style metrics
 //!                exposition (METRICS verb).
 //! * `load`     — load a dataset, matrix file or store on a running
@@ -94,6 +98,8 @@ USAGE:
                 [--labels-out FILE (with --wait)]
   lamc status   [--addr HOST:PORT] [--id N]
   lamc watch    [--addr HOST:PORT] --id N [--timeout SECS]
+  lamc profile  [--addr HOST:PORT] --id N
+  lamc trace-export [--addr HOST:PORT] --id N [--format chrome] [--out FILE]
   lamc metrics  [--addr HOST:PORT]
   lamc load     [--addr HOST:PORT] --name NAME
                 (--dataset D [--rows N] [--seed N] | --path FILE | --store FILE.lamc2)
@@ -138,6 +144,8 @@ fn run() -> Result<()> {
         "submit" => cmd_submit(&args),
         "status" => cmd_status(&args),
         "watch" => cmd_watch(&args),
+        "profile" => cmd_profile(&args),
+        "trace-export" => cmd_trace_export(&args),
         "metrics" => cmd_metrics(&args),
         "load" => cmd_load(&args),
         "shutdown" => cmd_shutdown(&args),
@@ -651,6 +659,12 @@ fn cmd_watch(args: &Args) -> Result<()> {
     let deadline = std::time::Instant::now() + timeout;
     let mut client = ServiceClient::connect(addr)?;
     let mut cursor: Option<u64> = None;
+    // Exponential poll backoff: a busy job is re-polled almost
+    // immediately, an idle one settles to one request per second
+    // instead of hammering the server at a fixed rate.
+    const BACKOFF_FLOOR: std::time::Duration = std::time::Duration::from_millis(25);
+    const BACKOFF_CAP: std::time::Duration = std::time::Duration::from_millis(1000);
+    let mut backoff = BACKOFF_FLOOR;
     loop {
         let (lines, next) = client.events(id, cursor)?;
         for line in &lines {
@@ -658,6 +672,7 @@ fn cmd_watch(args: &Args) -> Result<()> {
             if let Some(kind) = line.split_whitespace().find_map(|t| t.strip_prefix("kind=")) {
                 match kind {
                     "JobDone" => return Ok(()),
+                    // Non-zero exit: `run()` bubbles this into exit(1).
                     "JobFailed" => bail!("job {id} failed (see event stream above)"),
                     _ => {}
                 }
@@ -666,17 +681,80 @@ fn cmd_watch(args: &Args) -> Result<()> {
         if let Some(n) = next {
             cursor = Some(n);
         }
-        // An empty page leaves the cursor where it was; back off briefly
-        // before asking again so an idle job doesn't spin the server.
+        // An empty page leaves the cursor where it was; double the wait
+        // before asking again. Any progress resets the backoff.
         if lines.is_empty() {
             anyhow::ensure!(
                 std::time::Instant::now() < deadline,
                 "timed out after {}s waiting for job {id} to finish",
                 timeout.as_secs()
             );
-            std::thread::sleep(std::time::Duration::from_millis(200));
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(BACKOFF_CAP);
+        } else {
+            backoff = BACKOFF_FLOOR;
         }
     }
+}
+
+/// Print a job's stitched span tree plus critical-path analysis: per
+/// round, the slowest child span (on a router that is the straggling
+/// worker's scatter) and its share of the round's wall-clock, then the
+/// prefetch-overlap ratio from the server's `STATS` counters.
+fn cmd_profile(args: &Args) -> Result<()> {
+    args.expect_flags(&["addr", "id"])?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    anyhow::ensure!(args.get("id").is_some(), "--id required (job to profile)");
+    let id = args.get_u64("id", 0)?;
+    let mut client = ServiceClient::connect(addr)?;
+    let spans = client.spans(id)?;
+    anyhow::ensure!(
+        !spans.is_empty(),
+        "job {id} has no recorded spans yet (still queued, or submitted to an older server?)"
+    );
+    println!("job {id}: {} span(s)", spans.len());
+    print!("{}", lamc::trace::export::render_tree(&spans));
+    println!();
+    print!("{}", lamc::trace::export::critical_path_report(&spans));
+    let stats = client.stats()?;
+    let stat = |k: &str| stats.get(k).and_then(|v| v.parse::<u64>().ok()).unwrap_or(0);
+    println!(
+        "{}",
+        lamc::trace::export::prefetch_overlap_line(
+            stat("prefetch_hits"),
+            stat("store_chunks_read")
+        )
+    );
+    Ok(())
+}
+
+/// Dump a job's span tree as Chrome trace-event JSON — one track per
+/// worker — to stdout or `--out FILE`.
+fn cmd_trace_export(args: &Args) -> Result<()> {
+    args.expect_flags(&["addr", "id", "format", "out"])?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    anyhow::ensure!(args.get("id").is_some(), "--id required (job to export)");
+    let id = args.get_u64("id", 0)?;
+    let format = args.get_or("format", "chrome");
+    anyhow::ensure!(format == "chrome", "unknown --format '{format}' (want chrome)");
+    let mut client = ServiceClient::connect(addr)?;
+    let spans = client.spans(id)?;
+    anyhow::ensure!(
+        !spans.is_empty(),
+        "job {id} has no recorded spans yet (still queued, or submitted to an older server?)"
+    );
+    let json = lamc::trace::export::chrome_trace_json(&spans);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &json).with_context(|| format!("write trace to {path}"))?;
+            println!(
+                "wrote {} span(s) to {path} (load in Perfetto or chrome://tracing)",
+                spans.len()
+            );
+        }
+        None => println!("{json}"),
+    }
+    Ok(())
 }
 
 fn cmd_metrics(args: &Args) -> Result<()> {

@@ -205,6 +205,7 @@ impl Lamc {
         let results = run_rounds(matrix, &rounds, &router, &sched_cfg, &stats)?;
 
         // 4. Hierarchical merge.
+        let merge_start_us = cfg.trace.now_us();
         let t_merge = Instant::now();
         let atoms: Vec<Cocluster> = results
             .iter()
@@ -216,6 +217,8 @@ impl Lamc {
         let (row_labels, col_labels, k) = extract_labels(&merged, rows, cols);
         let merge_ns = t_merge.elapsed().as_nanos() as u64;
         stats.merge_ns.store(merge_ns, std::sync::atomic::Ordering::Relaxed);
+        stats.hist_merge.observe_ns(merge_ns);
+        cfg.trace.add_span("merge", 0, merge_start_us, merge_ns / 1_000);
         cfg.trace.emit(Event::MergeCompleted { k: k as u64, merge_s: merge_ns as f64 / 1e9 });
 
         let snapshot = stats.snapshot();

@@ -13,6 +13,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::merge::Cocluster;
+use crate::trace::SpanRecord;
 
 use super::manager::{JobSpec, JobState};
 use super::protocol::{self, ShardSetInfo, PROTO_VERSION};
@@ -268,9 +269,29 @@ impl ServiceClient {
     /// Fetch the listed global rows × cols of shard set `name` from a
     /// worker (`GATHERB`): returns row-major f32 values.
     pub fn gather_block(&mut self, name: &str, rows: &[usize], cols: &[usize]) -> Result<Vec<f32>> {
+        Ok(self.gather_block_traced(name, rows, cols, None, None)?.0)
+    }
+
+    /// [`ServiceClient::gather_block`] with optional trace context. When
+    /// both `trace_id` and `parent_span` are given, the worker times the
+    /// gather and ships its span sheet back alongside the block (empty
+    /// sheet against servers that predate span framing or when the
+    /// context is absent).
+    pub fn gather_block_traced(
+        &mut self,
+        name: &str,
+        rows: &[usize],
+        cols: &[usize],
+        trace_id: Option<u64>,
+        parent_span: Option<u64>,
+    ) -> Result<(Vec<f32>, Vec<SpanRecord>)> {
         protocol::ensure_token("name", name)?;
         let ids = protocol::encode_labels_binary(rows, cols)?;
-        self.send_line(&format!("GATHERB name={name} rows={} cols={}", rows.len(), cols.len()))?;
+        let mut line = format!("GATHERB name={name} rows={} cols={}", rows.len(), cols.len());
+        if let (Some(t), Some(p)) = (trace_id, parent_span) {
+            line.push_str(&format!(" trace_id={t} parent_span={p}"));
+        }
+        self.send_line(&line)?;
         self.writer.write_all(&ids)?;
         self.writer.flush()?;
         let header = self.read_line()?;
@@ -278,7 +299,8 @@ impl ServiceClient {
         let bytes: usize = map.get("bytes").context("missing bytes")?.parse()?;
         let mut payload = vec![0u8; bytes];
         self.reader.read_exact(&mut payload).context("read gathered block payload")?;
-        protocol::decode_block(&payload, rows.len() * cols.len())
+        let spans = self.read_span_block(&map)?;
+        Ok((protocol::decode_block(&payload, rows.len() * cols.len())?, spans))
     }
 
     /// Run one block job on a worker (`EXECB`): the worker assembles the
@@ -295,15 +317,39 @@ impl ServiceClient {
         cols: &[usize],
         inline: &[(u32, Vec<f32>)],
     ) -> Result<Vec<Cocluster>> {
+        Ok(self.exec_block_traced(name, method, k, seed, rows, cols, inline, None, None)?.0)
+    }
+
+    /// [`ServiceClient::exec_block`] with optional trace context: when
+    /// both `trace_id` and `parent_span` are present the worker returns
+    /// its gather/exec span sheet (ids local to the request, times
+    /// relative to request receipt) for the router to stitch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn exec_block_traced(
+        &mut self,
+        name: &str,
+        method: &str,
+        k: usize,
+        seed: u64,
+        rows: &[usize],
+        cols: &[usize],
+        inline: &[(u32, Vec<f32>)],
+        trace_id: Option<u64>,
+        parent_span: Option<u64>,
+    ) -> Result<(Vec<Cocluster>, Vec<SpanRecord>)> {
         protocol::ensure_token("name", name)?;
         protocol::ensure_token("method", method)?;
         let payload = protocol::encode_exec_payload(rows, cols, inline)?;
-        self.send_line(&format!(
+        let mut line = format!(
             "EXECB name={name} method={method} k={k} seed={seed} rows={} cols={} inline={}",
             rows.len(),
             cols.len(),
             inline.len()
-        ))?;
+        );
+        if let (Some(t), Some(p)) = (trace_id, parent_span) {
+            line.push_str(&format!(" trace_id={t} parent_span={p}"));
+        }
+        self.send_line(&line)?;
         self.writer.write_all(&payload)?;
         self.writer.flush()?;
         let header = self.read_line()?;
@@ -312,7 +358,38 @@ impl ServiceClient {
         let bytes: usize = map.get("bytes").context("missing bytes")?.parse()?;
         let mut body = vec![0u8; bytes];
         self.reader.read_exact(&mut body).context("read exec atoms payload")?;
-        protocol::decode_atoms(&body, clusters)
+        let spans = self.read_span_block(&map)?;
+        Ok((protocol::decode_atoms(&body, clusters)?, spans))
+    }
+
+    /// Read the optional span block a worker appends after a binary
+    /// payload when the request carried trace context (`span_bytes=` in
+    /// the reply header names the text length; a mix64 checksum trails).
+    fn read_span_block(&mut self, map: &BTreeMap<String, String>) -> Result<Vec<SpanRecord>> {
+        let Some(len) = map.get("span_bytes") else {
+            return Ok(Vec::new());
+        };
+        let len: usize = len.parse().context("bad span_bytes")?;
+        let mut block = vec![0u8; len + 8];
+        self.reader.read_exact(&mut block).context("read span block")?;
+        protocol::decode_spans_binary(&block)
+    }
+
+    /// Fetch a job's recorded span tree (`SPANS`) — empty until the job
+    /// starts running; errors on unknown ids.
+    pub fn spans(&mut self, id: u64) -> Result<Vec<SpanRecord>> {
+        let rest = self.roundtrip(&format!("SPANS id={id}"))?;
+        let tokens: Vec<&str> = rest.split_whitespace().collect();
+        let map = protocol::kv_pairs(&tokens)?;
+        let count: usize = map.get("count").context("missing count")?.parse()?;
+        let mut spans = Vec::with_capacity(count);
+        for _ in 0..count {
+            let line = self.read_line()?;
+            spans.push(SpanRecord::from_wire(&line)?);
+        }
+        let end = self.read_line()?;
+        ensure!(end.trim() == "END", "expected END terminator, got '{}'", end.trim());
+        Ok(spans)
     }
 
     /// Ask a shard router about its topology (`ROUTE`); a worker node

@@ -722,6 +722,16 @@ impl ServiceManager {
         Some(journal.events_after(after, max))
     }
 
+    /// A job's recorded span tree, sorted by `(start_us, id)`. `None`
+    /// for an unknown job id; empty until the job starts running.
+    pub fn job_spans(&self, id: u64) -> Option<Vec<crate::trace::SpanRecord>> {
+        let journal = {
+            let jobs = self.inner.jobs.read().unwrap();
+            Arc::clone(&jobs.get(&id)?.journal)
+        };
+        Some(journal.spans())
+    }
+
     /// Counts of jobs per state: (queued, running, done, failed).
     pub fn job_counts(&self) -> (usize, usize, usize, usize) {
         let jobs = self.inner.jobs.read().unwrap();
@@ -822,7 +832,18 @@ fn run_job(inner: &Inner, id: u64) {
     record.journal.emit(Event::JobStarted);
 
     let trace = Trace::to_journal(Arc::clone(&record.journal));
-    let outcome = execute_spec(inner, &record.spec, trace);
+    // Root of the job's span tree. The journal epoch is submit time, so
+    // "now" is exactly how long the job sat queued — recorded both as a
+    // `queue` span and into the queue-wait histogram.
+    let queue_us = trace.now_us();
+    let job_span = trace.reserve_span();
+    trace.record_span(trace.reserve_span(), job_span, "queue", 0, 0, queue_us);
+    inner.stats.hist_queue_wait.observe_ns(queue_us.saturating_mul(1_000));
+
+    let outcome = execute_spec(inner, &record.spec, trace.child_of(job_span));
+    // The job span covers submit → terminal state (queue wait included),
+    // so every child — queue, rounds, merge — nests inside it.
+    trace.record_span(job_span, crate::trace::ROOT_SPAN, "job", 0, 0, trace.now_us());
     match outcome {
         // The terminal event lands before the state flips: a client
         // whose `wait` just returned must find it in the journal.
@@ -877,6 +898,9 @@ fn execute_spec(inner: &Inner, spec: &JobSpec, trace: Trace) -> Result<(Arc<JobO
     inner.stats.add_gather((s.gather_s * 1e9) as u64);
     inner.stats.add_exec((s.exec_s * 1e9) as u64);
     inner.stats.merge_ns.fetch_add((s.merge_s * 1e9) as u64, Ordering::Relaxed);
+    inner.stats.hist_gather.fold(&s.hist_gather);
+    inner.stats.hist_exec.fold(&s.hist_exec);
+    inner.stats.hist_merge.fold(&s.hist_merge);
     // Store I/O + prefetch telemetry (zero for in-memory matrices):
     // without this fold the reader counters were invisible through the
     // service — STATS reported cache hit/miss but no real disk I/O.

@@ -85,12 +85,25 @@ pub enum Request {
     /// (see [`encode_labels_binary`] — u32 LE each, u64 checksum);
     /// the response is an `OK rows=… cols=… bytes=…` header plus an
     /// [`encode_block`] payload.
-    GatherBinary { name: String, rows: usize, cols: usize },
+    ///
+    /// Optional trace context (`trace_id=` / `parent_span=`): when both
+    /// are present the worker times the request as spans and appends a
+    /// span block to the reply (header gains `span_bytes=`; see
+    /// [`encode_spans_binary`]). Absent context leaves the reply
+    /// byte-identical to the pre-span protocol.
+    GatherBinary {
+        name: String,
+        rows: usize,
+        cols: usize,
+        trace_id: Option<u64>,
+        parent_span: Option<u64>,
+    },
     /// Execute one block job on the worker: the request line is
     /// followed by an [`encode_exec_payload`] binary payload (global
     /// row/col ids plus `inline` rows the worker does not own); the
     /// response is `OK clusters=… bytes=…` plus an [`encode_atoms`]
-    /// payload of the resulting atom co-clusters.
+    /// payload of the resulting atom co-clusters. Carries the same
+    /// optional trace context as [`Request::GatherBinary`].
     ExecBinary {
         name: String,
         method: String,
@@ -99,6 +112,8 @@ pub enum Request {
         rows: usize,
         cols: usize,
         inline: usize,
+        trace_id: Option<u64>,
+        parent_span: Option<u64>,
     },
     /// Cursor-paged job-lifecycle events (`EVENTS id=3 after=17`): the
     /// success response is an `OK id=… count=… next=…` header, one
@@ -115,6 +130,11 @@ pub enum Request {
     /// Prometheus-style text exposition of the service counters: an
     /// `OK lines=…` header, `lines` body lines, then `END`.
     Metrics,
+    /// Fetch a job's recorded span tree (`SPANS id=3`): an
+    /// `OK id=… count=…` header, one `SPAN <record>` line per span in
+    /// `(start_us, id)` order, then `END`. On a router the tree is the
+    /// stitched cross-node tree.
+    Spans { id: u64 },
 }
 
 impl Request {
@@ -296,7 +316,7 @@ pub fn parse_request(line: &str) -> Result<Request> {
         }
         "GATHERB" => {
             let map = kv_pairs(&rest)?;
-            check_known(&map, &["name", "rows", "cols"])?;
+            check_known(&map, &["name", "rows", "cols", "trace_id", "parent_span"])?;
             let rows = get_usize(&map, "rows")?.context("missing rows=")?;
             let cols = get_usize(&map, "cols")?.context("missing cols=")?;
             if rows == 0 || cols == 0 {
@@ -306,11 +326,16 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 name: map.get("name").context("missing name=")?.clone(),
                 rows,
                 cols,
+                trace_id: get_u64(&map, "trace_id")?,
+                parent_span: get_u64(&map, "parent_span")?,
             })
         }
         "EXECB" => {
             let map = kv_pairs(&rest)?;
-            check_known(&map, &["name", "method", "k", "seed", "rows", "cols", "inline"])?;
+            check_known(
+                &map,
+                &["name", "method", "k", "seed", "rows", "cols", "inline", "trace_id", "parent_span"],
+            )?;
             let rows = get_usize(&map, "rows")?.context("missing rows=")?;
             let cols = get_usize(&map, "cols")?.context("missing cols=")?;
             let inline = get_usize(&map, "inline")?.unwrap_or(0);
@@ -328,6 +353,8 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 rows,
                 cols,
                 inline,
+                trace_id: get_u64(&map, "trace_id")?,
+                parent_span: get_u64(&map, "parent_span")?,
             })
         }
         "EVENTS" => {
@@ -346,8 +373,13 @@ pub fn parse_request(line: &str) -> Result<Request> {
             }
             Ok(Request::Metrics)
         }
+        "SPANS" => {
+            let map = kv_pairs(&rest)?;
+            check_known(&map, &["id"])?;
+            Ok(Request::Spans { id: require_id(&map)? })
+        }
         other => bail!(
-            "unknown verb '{other}' (want SUBMIT|STATUS|RESULT|RESULTB|STATS|LOAD|HELLO|SHARDS|GATHERB|EXECB|ROUTE|EVENTS|EVENTSB|METRICS|SHUTDOWN)"
+            "unknown verb '{other}' (want SUBMIT|STATUS|RESULT|RESULTB|STATS|LOAD|HELLO|SHARDS|GATHERB|EXECB|ROUTE|EVENTS|EVENTSB|METRICS|SPANS|SHUTDOWN)"
         ),
     }
 }
@@ -691,10 +723,39 @@ pub fn decode_events_binary(bytes: &[u8], count: usize) -> Result<Vec<String>> {
     Ok(lines)
 }
 
+/// Encode a span sheet as the trailing span block of a traced
+/// `EXECB`/`GATHERB` reply (and the payload shape behind `span_bytes=`):
+/// the `SPAN` line bodies joined by `\n` (no trailing newline), then a
+/// trailing u64 LE checksum. The header's `span_bytes=` field is the
+/// text length, so the full block is `span_bytes + 8`.
+pub fn encode_spans_binary(spans: &[crate::trace::SpanRecord]) -> Vec<u8> {
+    let text = spans.iter().map(|s| s.to_wire()).collect::<Vec<_>>().join("\n");
+    let mut out = text.into_bytes();
+    let ck = crate::store::checksum_bytes(&out);
+    out.extend_from_slice(&ck.to_le_bytes());
+    out
+}
+
+/// Decode a span block (`span_bytes + 8` bytes) back into records.
+pub fn decode_spans_binary(bytes: &[u8]) -> Result<Vec<crate::trace::SpanRecord>> {
+    ensure!(bytes.len() >= 8, "span block truncated ({} bytes)", bytes.len());
+    let (body, ck) = bytes.split_at(bytes.len() - 8);
+    ensure!(
+        crate::store::checksum_bytes(body) == u64::from_le_bytes(ck.try_into().unwrap()),
+        "span block failed its checksum"
+    );
+    let text = std::str::from_utf8(body).context("span block is not UTF-8")?;
+    text.lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(crate::trace::SpanRecord::from_wire)
+        .collect()
+}
+
 /// Builder for the `METRICS` reply body: Prometheus-style text
-/// exposition (`# TYPE` declarations + `name{labels} value` samples).
-/// The reply header's `lines=` count frames the body and an `END` line
-/// terminates it — see `docs/OBSERVABILITY.md` for the exact shape.
+/// exposition (`# HELP`/`# TYPE` declarations + `name{labels} value`
+/// samples). The reply header's `lines=` count frames the body and an
+/// `END` line terminates it — see `docs/OBSERVABILITY.md` for the exact
+/// shape.
 #[derive(Debug, Default)]
 pub struct MetricsText {
     body: String,
@@ -706,10 +767,12 @@ impl MetricsText {
         MetricsText::default()
     }
 
-    /// Declare a metric: `# TYPE <name> <gauge|counter>`.
-    pub fn declare(&mut self, name: &str, mtype: &str) -> &mut Self {
-        self.body.push_str(&format!("# TYPE {name} {mtype}\n"));
-        self.lines += 1;
+    /// Declare a metric: `# HELP <name> <help>` + `# TYPE <name>
+    /// <gauge|counter|histogram>`. Every family gets both lines —
+    /// `scripts/metrics_lint.py` enforces the pairing.
+    pub fn declare(&mut self, name: &str, mtype: &str, help: &str) -> &mut Self {
+        self.body.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {mtype}\n"));
+        self.lines += 2;
         self
     }
 
@@ -722,13 +785,45 @@ impl MetricsText {
     }
 
     /// Declaration plus single unlabelled sample, counter-typed.
-    pub fn counter(&mut self, name: &str, value: impl std::fmt::Display) -> &mut Self {
-        self.declare(name, "counter").sample(name, value)
+    pub fn counter(&mut self, name: &str, value: impl std::fmt::Display, help: &str) -> &mut Self {
+        self.declare(name, "counter", help).sample(name, value)
     }
 
     /// Declaration plus single unlabelled sample, gauge-typed.
-    pub fn gauge(&mut self, name: &str, value: impl std::fmt::Display) -> &mut Self {
-        self.declare(name, "gauge").sample(name, value)
+    pub fn gauge(&mut self, name: &str, value: impl std::fmt::Display, help: &str) -> &mut Self {
+        self.declare(name, "gauge", help).sample(name, value)
+    }
+
+    /// Append one labelled series of a histogram family: cumulative
+    /// `_bucket` samples in `le` order terminated by `le="+Inf"`
+    /// (whose count equals `_count`), then `_sum` (seconds) and
+    /// `_count`. `labels` is the extra label list without braces
+    /// (`phase="gather"`, or `""` for none). Declare the family once
+    /// with `declare(name, "histogram", …)` before the first series.
+    pub fn histogram_series(
+        &mut self,
+        name: &str,
+        labels: &str,
+        snap: &crate::coordinator::stats::HistogramSnapshot,
+    ) -> &mut Self {
+        use crate::coordinator::stats::HIST_BOUNDS;
+        let sep = if labels.is_empty() { "" } else { "," };
+        for (i, cum) in snap.cumulative().iter().enumerate() {
+            let le = match HIST_BOUNDS.get(i) {
+                Some(b) => b.to_string(),
+                None => "+Inf".to_string(),
+            };
+            self.sample(&format!("{name}_bucket{{{labels}{sep}le=\"{le}\"}}"), cum);
+        }
+        let braces = |suffix: &str| {
+            if labels.is_empty() {
+                format!("{name}_{suffix}")
+            } else {
+                format!("{name}_{suffix}{{{labels}}}")
+            }
+        };
+        self.sample(&braces("sum"), format!("{:.9}", snap.sum_ns as f64 / 1e9));
+        self.sample(&braces("count"), snap.count)
     }
 
     /// `(body, line_count)`; the body carries one trailing `\n` per
@@ -883,7 +978,13 @@ mod tests {
         assert_eq!(parse_request("ROUTE").unwrap(), Request::Route);
         assert_eq!(
             parse_request("GATHERB name=m rows=3 cols=2").unwrap(),
-            Request::GatherBinary { name: "m".into(), rows: 3, cols: 2 }
+            Request::GatherBinary {
+                name: "m".into(),
+                rows: 3,
+                cols: 2,
+                trace_id: None,
+                parent_span: None,
+            }
         );
         assert_eq!(
             parse_request("EXECB name=m method=scc k=3 seed=9 rows=4 cols=2 inline=1").unwrap(),
@@ -895,8 +996,34 @@ mod tests {
                 rows: 4,
                 cols: 2,
                 inline: 1,
+                trace_id: None,
+                parent_span: None,
             }
         );
+    }
+
+    #[test]
+    fn trace_context_rides_the_block_verbs() {
+        // The wire round-trip of (trace_id, parent_span) through EXECB:
+        // both optional, parsed when present, None when absent.
+        match parse_request("EXECB name=m method=scc k=3 seed=9 rows=4 cols=2 inline=0 trace_id=12 parent_span=34")
+            .unwrap()
+        {
+            Request::ExecBinary { trace_id, parent_span, rows, .. } => {
+                assert_eq!(trace_id, Some(12));
+                assert_eq!(parent_span, Some(34));
+                assert_eq!(rows, 4, "payload counts are unaffected by trace context");
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+        match parse_request("GATHERB name=m rows=3 cols=2 trace_id=5 parent_span=6").unwrap() {
+            Request::GatherBinary { trace_id, parent_span, .. } => {
+                assert_eq!(trace_id, Some(5));
+                assert_eq!(parent_span, Some(6));
+            }
+            other => panic!("wrong parse: {other:?}"),
+        }
+        assert!(parse_request("EXECB name=m method=scc k=3 seed=9 rows=4 cols=2 trace_id=x").is_err());
     }
 
     #[test]
@@ -922,7 +1049,13 @@ mod tests {
         assert_eq!(parse_request("STATS").unwrap().binary_payload_len().unwrap(), None);
         // A corrupt header asking for an absurd payload fails the cap
         // instead of reaching an allocation.
-        let huge = Request::GatherBinary { name: "m".into(), rows: usize::MAX / 8, cols: 1 };
+        let huge = Request::GatherBinary {
+            name: "m".into(),
+            rows: usize::MAX / 8,
+            cols: 1,
+            trace_id: None,
+            parent_span: None,
+        };
         assert!(huge.binary_payload_len().is_err());
     }
 
@@ -1054,18 +1187,80 @@ mod tests {
     #[test]
     fn metrics_text_builder_frames_lines() {
         let mut m = MetricsText::new();
-        m.counter("lamc_cache_hits_total", 3u64)
-            .declare("lamc_jobs", "gauge")
+        m.counter("lamc_cache_hits_total", 3u64, "Result-cache hits.")
+            .declare("lamc_jobs", "gauge", "Jobs by state.")
             .sample("lamc_jobs{state=\"queued\"}", 1u64)
             .sample("lamc_jobs{state=\"running\"}", 0u64)
-            .gauge("lamc_gather_seconds", 0.25f64);
+            .gauge("lamc_gather_seconds", 0.25f64, "Gather time.");
         let (body, lines) = m.finish();
-        assert_eq!(lines, 7, "2 counter + 3 jobs + 2 gauge lines");
+        assert_eq!(lines, 10, "3 counter + 4 jobs + 3 gauge lines");
         assert_eq!(body.lines().count(), lines);
+        assert!(body.contains("# HELP lamc_cache_hits_total Result-cache hits.\n"));
         assert!(body.contains("# TYPE lamc_cache_hits_total counter\n"));
         assert!(body.contains("lamc_jobs{state=\"queued\"} 1\n"));
         assert!(body.contains("lamc_gather_seconds 0.25\n"));
         assert!(body.ends_with('\n'));
+    }
+
+    #[test]
+    fn metrics_histograms_render_cumulative_le_series() {
+        use crate::coordinator::stats::{Histogram, HIST_BUCKETS};
+        let h = Histogram::default();
+        h.observe_ns(500_000); // le 0.001
+        h.observe_ns(40_000_000_000); // +Inf
+        let snap = h.snapshot();
+        let mut m = MetricsText::new();
+        m.declare("lamc_round_seconds", "histogram", "Round phase latency.")
+            .histogram_series("lamc_round_seconds", "phase=\"gather\"", &snap)
+            .histogram_series("lamc_round_seconds", "phase=\"exec\"", &Default::default());
+        let (body, lines) = m.finish();
+        assert_eq!(lines, 2 + 2 * (HIST_BUCKETS + 2));
+        assert!(body.contains("# TYPE lamc_round_seconds histogram\n"));
+        assert!(body.contains("lamc_round_seconds_bucket{phase=\"gather\",le=\"0.001\"} 1\n"));
+        assert!(body.contains("lamc_round_seconds_bucket{phase=\"gather\",le=\"+Inf\"} 2\n"));
+        assert!(body.contains("lamc_round_seconds_sum{phase=\"gather\"} 40.000500000\n"));
+        assert!(body.contains("lamc_round_seconds_count{phase=\"gather\"} 2\n"));
+        assert!(body.contains("lamc_round_seconds_bucket{phase=\"exec\",le=\"+Inf\"} 0\n"));
+        // Cumulative within a series: every gather bucket after 0.001
+        // also reports the first observation.
+        assert!(body.contains("lamc_round_seconds_bucket{phase=\"gather\",le=\"0.5\"} 1\n"));
+    }
+
+    #[test]
+    fn unlabelled_histogram_series_render_bare_sum_and_count() {
+        let mut m = MetricsText::new();
+        m.declare("lamc_queue_wait_seconds", "histogram", "Queue wait.")
+            .histogram_series("lamc_queue_wait_seconds", "", &Default::default());
+        let (body, _) = m.finish();
+        assert!(body.contains("lamc_queue_wait_seconds_bucket{le=\"+Inf\"} 0\n"));
+        assert!(body.contains("lamc_queue_wait_seconds_sum 0.000000000\n"));
+        assert!(body.contains("lamc_queue_wait_seconds_count 0\n"));
+    }
+
+    #[test]
+    fn spans_verb_parses() {
+        assert_eq!(parse_request("SPANS id=6").unwrap(), Request::Spans { id: 6 });
+        assert!(parse_request("SPANS").is_err(), "id required");
+        assert!(parse_request("SPANS id=1 after=2").is_err(), "no cursor on SPANS");
+        assert_eq!(parse_request("SPANS id=1").unwrap().binary_payload_len().unwrap(), None);
+    }
+
+    #[test]
+    fn span_block_codec_round_trip_and_damage() {
+        use crate::trace::SpanRecord;
+        let spans = vec![
+            SpanRecord { id: 1, parent: 0, name: "gather".into(), worker: 0, start_us: 3, dur_us: 40 },
+            SpanRecord { id: 2, parent: 1, name: "exec".into(), worker: 0, start_us: 43, dur_us: 900 },
+        ];
+        let bytes = encode_spans_binary(&spans);
+        assert_eq!(decode_spans_binary(&bytes).unwrap(), spans);
+        let mut bad = bytes.clone();
+        bad[1] ^= 0x08;
+        assert!(decode_spans_binary(&bad).is_err(), "checksum catches bit flips");
+        assert!(decode_spans_binary(&[]).is_err(), "missing checksum is typed");
+        let empty = encode_spans_binary(&[]);
+        assert_eq!(empty.len(), 8, "empty sheet is just the checksum");
+        assert!(decode_spans_binary(&empty).unwrap().is_empty());
     }
 
     #[test]

@@ -303,7 +303,8 @@ fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> R
                  cache_disk_hits={} blocks_total={} blocks_native={} blocks_pjrt={} matrices={} \
                  store_chunks_read={} store_bytes_read={} store_cache_hits={} \
                  prefetch_issued={} prefetch_hits={} prefetch_wasted_bytes={} \
-                 gather_s={:.6} exec_s={:.6} merge_s={:.6}\n",
+                 gather_s={:.6} exec_s={:.6} merge_s={:.6} \
+                 hist_gather={} hist_exec={} hist_merge={} hist_queue_wait={}\n",
                 snap.cache_hits,
                 snap.cache_misses,
                 cache.len(),
@@ -323,6 +324,10 @@ fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> R
                 snap.gather_s,
                 snap.exec_s,
                 snap.merge_s,
+                snap.hist_gather.to_wire(),
+                snap.hist_exec.to_wire(),
+                snap.hist_merge.to_wire(),
+                snap.hist_queue_wait.to_wire(),
             )))
         }
         Request::Load { name, dataset, path, store, rows, seed } => {
@@ -366,25 +371,47 @@ fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> R
         Request::Route => {
             anyhow::bail!("ROUTE is answered by a shard router; this is a worker node")
         }
-        Request::GatherBinary { name, rows, cols } => {
+        Request::GatherBinary { name, rows, cols, trace_id, parent_span } => {
             let payload = payload.context("GATHERB payload missing")?;
+            let traced = trace_id.is_some() && parent_span.is_some();
+            let req_start = Instant::now();
             let set = manager
                 .shard_set(&name)
                 .with_context(|| format!("no shard set named '{name}'"))?;
             let (row_ids, col_ids) = protocol::decode_labels_binary(&payload, rows, cols)?;
+            let gather_start_us = req_start.elapsed().as_micros() as u64;
             let t0 = Instant::now();
             let block = set.gather(&row_ids, &col_ids)?;
+            let gather_ns = t0.elapsed().as_nanos() as u64;
             let stats = manager.stats();
-            stats.add_gather(t0.elapsed().as_nanos() as u64);
+            stats.add_gather(gather_ns);
+            stats.hist_gather.observe_ns(gather_ns);
             stats.add_io(&set.take_io_delta());
-            let body = protocol::encode_block(block.data());
-            Ok(Reply::Binary {
-                header: format!("OK rows={rows} cols={cols} bytes={}\n", body.len()),
-                payload: body,
-            })
+            let mut body = protocol::encode_block(block.data());
+            let mut header = format!("OK rows={rows} cols={cols} bytes={}", body.len());
+            if traced {
+                // Local ids from 1, parent 0 = "attach at the exchange
+                // boundary", times relative to request receipt — the
+                // router re-ids and re-anchors (`trace::span::anchor_spans`).
+                let sheet = vec![crate::trace::SpanRecord {
+                    id: 1,
+                    parent: crate::trace::ROOT_SPAN,
+                    name: "gather".into(),
+                    worker: 0,
+                    start_us: gather_start_us,
+                    dur_us: gather_ns / 1_000,
+                }];
+                let block = protocol::encode_spans_binary(&sheet);
+                header.push_str(&format!(" span_bytes={}", block.len() - 8));
+                body.extend_from_slice(&block);
+            }
+            header.push('\n');
+            Ok(Reply::Binary { header, payload: body })
         }
-        Request::ExecBinary { name, method, k, seed, rows, cols, inline } => {
+        Request::ExecBinary { name, method, k, seed, rows, cols, inline, trace_id, parent_span } => {
             let payload = payload.context("EXECB payload missing")?;
+            let traced = trace_id.is_some() && parent_span.is_some();
+            let req_start = Instant::now();
             let set = manager
                 .shard_set(&name)
                 .with_context(|| format!("no shard set named '{name}'"))?;
@@ -392,23 +419,54 @@ fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> R
                 protocol::decode_exec_payload(&payload, rows, cols, inline)?;
             let atom: AtomKind = method.parse()?;
             let stats = manager.stats();
+            let gather_start_us = req_start.elapsed().as_micros() as u64;
             let t0 = Instant::now();
             let block = set.assemble_block(&row_ids, &col_ids, &inline_rows)?;
-            stats.add_gather(t0.elapsed().as_nanos() as u64);
+            let gather_ns = t0.elapsed().as_nanos() as u64;
+            stats.add_gather(gather_ns);
+            stats.hist_gather.observe_ns(gather_ns);
+            let exec_start_us = req_start.elapsed().as_micros() as u64;
             let t1 = Instant::now();
             let result = Router::native_only(atom.build()).execute(&block, k, seed, stats)?;
-            stats.add_exec(t1.elapsed().as_nanos() as u64);
+            let exec_ns = t1.elapsed().as_nanos() as u64;
+            stats.add_exec(exec_ns);
+            stats.hist_exec.observe_ns(exec_ns);
             // `Router::execute` counts the native route; the per-job
             // total is the scheduler's job in-process and ours here.
             stats.blocks_total.fetch_add(1, Ordering::Relaxed);
             stats.add_io(&set.take_io_delta());
             let job = BlockJob { round: 0, grid: (0, 0), rows: row_ids, cols: col_ids };
             let atoms = Lamc::block_to_atoms(&job, &result);
-            let body = protocol::encode_atoms(&atoms);
-            Ok(Reply::Binary {
-                header: format!("OK clusters={} bytes={}\n", atoms.len(), body.len()),
-                payload: body,
-            })
+            let mut body = protocol::encode_atoms(&atoms);
+            let mut header = format!("OK clusters={} bytes={}", atoms.len(), body.len());
+            if traced {
+                // Worker-local sheet, anchored at the exchange boundary
+                // (parent 0, ids from 1, request-relative times). An
+                // untraced request leaves the reply byte-identical.
+                let sheet = vec![
+                    crate::trace::SpanRecord {
+                        id: 1,
+                        parent: crate::trace::ROOT_SPAN,
+                        name: "gather".into(),
+                        worker: 0,
+                        start_us: gather_start_us,
+                        dur_us: gather_ns / 1_000,
+                    },
+                    crate::trace::SpanRecord {
+                        id: 2,
+                        parent: crate::trace::ROOT_SPAN,
+                        name: "exec".into(),
+                        worker: 0,
+                        start_us: exec_start_us,
+                        dur_us: exec_ns / 1_000,
+                    },
+                ];
+                let block = protocol::encode_spans_binary(&sheet);
+                header.push_str(&format!(" span_bytes={}", block.len() - 8));
+                body.extend_from_slice(&block);
+            }
+            header.push('\n');
+            Ok(Reply::Binary { header, payload: body })
         }
         Request::Events { id, after } => {
             let records = manager
@@ -436,6 +494,18 @@ fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> R
             let (body, lines) = worker_metrics(manager).finish();
             Ok(Reply::Text(format!("OK lines={lines}\n{body}END\n")))
         }
+        Request::Spans { id } => {
+            let spans =
+                manager.job_spans(id).with_context(|| format!("no job with id {id}"))?;
+            let mut out = format!("OK id={id} count={}\n", spans.len());
+            for s in &spans {
+                out.push_str("SPAN ");
+                out.push_str(&s.to_wire());
+                out.push('\n');
+            }
+            out.push_str("END\n");
+            Ok(Reply::Text(out))
+        }
         Request::Shutdown => Ok(Reply::Text("OK shutting-down\n".to_string())),
     }
 }
@@ -461,30 +531,44 @@ fn worker_metrics(manager: &ServiceManager) -> protocol::MetricsText {
     let snap = manager.stats().snapshot();
     let cache = manager.cache();
     let mut m = protocol::MetricsText::new();
-    m.declare("lamc_jobs", "gauge")
+    m.declare("lamc_jobs", "gauge", "Jobs on this node, by lifecycle state.")
         .sample("lamc_jobs{state=\"queued\"}", queued)
         .sample("lamc_jobs{state=\"running\"}", running)
         .sample("lamc_jobs{state=\"done\"}", done)
         .sample("lamc_jobs{state=\"failed\"}", failed)
-        .counter("lamc_cache_hits_total", snap.cache_hits)
-        .counter("lamc_cache_misses_total", snap.cache_misses)
-        .counter("lamc_cache_disk_hits_total", cache.disk_hits())
-        .gauge("lamc_cache_entries", cache.len())
-        .gauge("lamc_cache_bytes", cache.bytes())
-        .gauge("lamc_cache_capacity_bytes", cache.capacity_bytes())
-        .gauge("lamc_matrices", manager.matrix_names().len())
-        .counter("lamc_blocks_total", snap.blocks_total)
-        .counter("lamc_blocks_native_total", snap.blocks_native)
-        .counter("lamc_blocks_pjrt_total", snap.blocks_pjrt)
-        .counter("lamc_pjrt_fallbacks_total", snap.pjrt_fallbacks)
-        .counter("lamc_store_chunks_read_total", snap.store_chunks_read)
-        .counter("lamc_store_bytes_read_total", snap.store_bytes_read)
-        .counter("lamc_store_cache_hits_total", snap.store_cache_hits)
-        .counter("lamc_prefetch_issued_total", snap.prefetch_issued)
-        .counter("lamc_prefetch_hits_total", snap.prefetch_hits)
-        .counter("lamc_prefetch_wasted_bytes_total", snap.prefetch_wasted_bytes)
-        .counter("lamc_gather_seconds_total", format!("{:.6}", snap.gather_s))
-        .counter("lamc_exec_seconds_total", format!("{:.6}", snap.exec_s))
-        .counter("lamc_merge_seconds_total", format!("{:.6}", snap.merge_s));
+        .counter("lamc_cache_hits_total", snap.cache_hits, "Result-cache hits (jobs answered without running).")
+        .counter("lamc_cache_misses_total", snap.cache_misses, "Result-cache misses (jobs that ran the pipeline).")
+        .counter("lamc_cache_disk_hits_total", cache.disk_hits(), "Result-cache hits served from the disk tier.")
+        .gauge("lamc_cache_entries", cache.len(), "Result-cache entries resident in memory.")
+        .gauge("lamc_cache_bytes", cache.bytes(), "Result-cache bytes resident in memory.")
+        .gauge("lamc_cache_capacity_bytes", cache.capacity_bytes(), "Result-cache memory capacity.")
+        .gauge("lamc_matrices", manager.matrix_names().len(), "Matrices registered on this node.")
+        .counter("lamc_blocks_total", snap.blocks_total, "Block jobs executed.")
+        .counter("lamc_blocks_native_total", snap.blocks_native, "Block jobs executed on the native route.")
+        .counter("lamc_blocks_pjrt_total", snap.blocks_pjrt, "Block jobs executed on the PJRT route.")
+        .counter("lamc_pjrt_fallbacks_total", snap.pjrt_fallbacks, "PJRT failures that fell back to the native route.")
+        .counter("lamc_store_chunks_read_total", snap.store_chunks_read, "Store chunks decoded off disk.")
+        .counter("lamc_store_bytes_read_total", snap.store_bytes_read, "Store payload bytes read off disk.")
+        .counter("lamc_store_cache_hits_total", snap.store_cache_hits, "Decoded-chunk cache hits.")
+        .counter("lamc_prefetch_issued_total", snap.prefetch_issued, "Chunks pulled ahead of the compute wave.")
+        .counter("lamc_prefetch_hits_total", snap.prefetch_hits, "Chunk reads answered by a prefetched chunk.")
+        .counter("lamc_prefetch_wasted_bytes_total", snap.prefetch_wasted_bytes, "Prefetched bytes evicted unconsumed.")
+        .counter("lamc_gather_seconds_total", format!("{:.6}", snap.gather_s), "Cumulative gather-phase seconds.")
+        .counter("lamc_exec_seconds_total", format!("{:.6}", snap.exec_s), "Cumulative execute-phase seconds.")
+        .counter("lamc_merge_seconds_total", format!("{:.6}", snap.merge_s), "Cumulative merge-phase seconds.")
+        .declare(
+            "lamc_round_seconds",
+            "histogram",
+            "Phase latency distribution (per round single-node, per block on a worker), by phase.",
+        )
+        .histogram_series("lamc_round_seconds", "phase=\"gather\"", &snap.hist_gather)
+        .histogram_series("lamc_round_seconds", "phase=\"exec\"", &snap.hist_exec)
+        .histogram_series("lamc_round_seconds", "phase=\"merge\"", &snap.hist_merge)
+        .declare(
+            "lamc_queue_wait_seconds",
+            "histogram",
+            "Seconds jobs waited in the queue before a runner picked them up.",
+        )
+        .histogram_series("lamc_queue_wait_seconds", "", &snap.hist_queue_wait);
     m
 }

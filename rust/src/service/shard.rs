@@ -40,7 +40,7 @@ use crate::coordinator::{plan_jobs_by_band, BandSpan, JobBandPlan, SchedulerConf
 use crate::merge::{extract_labels, reduce_partial_sets, Cocluster};
 use crate::partition::{plan, sample_partition, BlockJob};
 use crate::pipeline::{AtomKind, LamcConfig};
-use crate::trace::{Event, Journal, Trace, DEFAULT_RING_CAPACITY};
+use crate::trace::{Event, Journal, SpanRecord, Trace, DEFAULT_RING_CAPACITY};
 
 use super::client::ServiceClient;
 use super::manager::{JobSpec, JobState};
@@ -125,29 +125,48 @@ struct RoundProgress {
     remaining: AtomicU64,
     gather_ns: AtomicU64,
     exec_ns: AtomicU64,
+    /// The round's span id, reserved up front on the leader thread so
+    /// every scatter span (and retry) can parent under it race-free;
+    /// `0` when tracing is off. Recorded when the round completes.
+    span: u64,
+    start_us: AtomicU64,
 }
 
 impl RoundProgress {
-    fn new(jobs: u64) -> RoundProgress {
+    fn new(jobs: u64, span: u64) -> RoundProgress {
         RoundProgress {
             jobs,
             started: AtomicBool::new(false),
             remaining: AtomicU64::new(jobs),
             gather_ns: AtomicU64::new(0),
             exec_ns: AtomicU64::new(0),
+            span,
+            start_us: AtomicU64::new(0),
         }
     }
 
     /// Emit `RoundStarted` exactly once, on the first claimed job.
     fn mark_started(&self, trace: &Trace, round: usize) {
         if !self.started.swap(true, Ordering::SeqCst) {
+            self.start_us.store(trace.now_us(), Ordering::SeqCst);
             trace.emit(Event::RoundStarted { round: round as u64, jobs: self.jobs });
         }
     }
 
-    /// Count one job success; the last one emits `RoundCompleted`.
+    /// Count one job success; the last one emits `RoundCompleted` and
+    /// records the round's span (a round whose job fails terminally
+    /// never completes, so its span is never recorded).
     fn mark_done(&self, trace: &Trace, round: usize) {
         if self.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let start = self.start_us.load(Ordering::SeqCst);
+            trace.record_span(
+                self.span,
+                trace.parent(),
+                &format!("round-{round}"),
+                0,
+                start,
+                trace.now_us().saturating_sub(start),
+            );
             trace.emit(Event::RoundCompleted {
                 round: round as u64,
                 jobs: self.jobs,
@@ -326,8 +345,10 @@ impl ShardRouter {
             .enumerate()
             .flat_map(|(r, round)| std::iter::repeat_n(r, round.jobs.len()))
             .collect();
-        let progress: Vec<RoundProgress> =
-            rounds.iter().map(|round| RoundProgress::new(round.jobs.len() as u64)).collect();
+        let progress: Vec<RoundProgress> = rounds
+            .iter()
+            .map(|round| RoundProgress::new(round.jobs.len() as u64, trace.reserve_span()))
+            .collect();
 
         // 3. Scatter: claim-loop threads pull the next unclaimed job.
         // Per-job deadlines start at scatter time, so a stalled worker
@@ -390,9 +411,16 @@ impl ShardRouter {
         trace.emit(Event::MergeStarted {
             blocks: partials.iter().map(|p| p.len() as u64).sum(),
         });
+        let merge_start_us = trace.now_us();
         let t_merge = Instant::now();
         let merged = reduce_partial_sets(partials, &cfg.merge);
         let (row_labels, col_labels, k) = extract_labels(&merged, rows, cols);
+        trace.add_span(
+            "merge",
+            0,
+            merge_start_us,
+            trace.now_us().saturating_sub(merge_start_us),
+        );
         trace.emit(Event::MergeCompleted {
             k: k as u64,
             merge_s: t_merge.elapsed().as_secs_f64(),
@@ -433,6 +461,18 @@ impl ShardRouter {
             band: plan.primary as u64,
         });
 
+        // One scatter span per dispatch (a retry gets a fresh one under
+        // the same round span). Worker sheets returned by traced
+        // exchanges are stitched under it, anchored at each exchange's
+        // router-side window so worker clock skew cannot escape it.
+        let scatter_span = trace.reserve_span();
+        let scatter_start_us = trace.now_us();
+        let (trace_id, parent_span) = if scatter_span == 0 {
+            (None, None)
+        } else {
+            (Some(plan.job as u64), Some(scatter_span))
+        };
+
         let t_gather = Instant::now();
         let mut inline: Vec<(u32, Vec<f32>)> = Vec::new();
         for (band, positions) in &plan.per_band {
@@ -448,8 +488,11 @@ impl ShardRouter {
                 }));
             };
             let needed: Vec<usize> = positions.iter().map(|&p| job.rows[p]).collect();
-            let values = self
-                .with_conn(owner, deadline, trace, |c| c.gather_block(name, &needed, &job.cols))?;
+            let exchange_start_us = trace.now_us();
+            let (values, sheet) = self.with_conn(owner, deadline, trace, |c| {
+                c.gather_block_traced(name, &needed, &job.cols, trace_id, parent_span)
+            })?;
+            stitch_worker_spans(trace, scatter_span, exchange_start_us, owner, &sheet);
             for (slot, &p) in positions.iter().enumerate() {
                 inline.push((
                     p as u32,
@@ -461,10 +504,23 @@ impl ShardRouter {
 
         let seed = job_seed(cfg.seed, job);
         let t_exec = Instant::now();
+        let exchange_start_us = trace.now_us();
         let res = self.with_conn(executor, deadline, trace, |c| {
-            c.exec_block(name, method, cfg.k, seed, &job.rows, &job.cols, &inline)
+            c.exec_block_traced(name, method, cfg.k, seed, &job.rows, &job.cols, &inline, trace_id, parent_span)
         });
         progress.exec_ns.fetch_add(t_exec.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let res = res.map(|(atoms, sheet)| {
+            stitch_worker_spans(trace, scatter_span, exchange_start_us, executor, &sheet);
+            atoms
+        });
+        trace.record_span(
+            scatter_span,
+            progress.span,
+            &format!("scatter-{}", plan.job),
+            executor as u64,
+            scatter_start_us,
+            trace.now_us().saturating_sub(scatter_start_us),
+        );
         res
     }
 
@@ -556,11 +612,47 @@ impl ShardRouter {
     }
 }
 
+/// Stitch a worker's span sheet into the router journal: re-id the
+/// sheet with fresh router ids, hang its roots under `scatter_span`,
+/// and re-base its request-relative times onto the router-side exchange
+/// window `[exchange_start_us, now]` — the clock-skew anchoring rule
+/// (worker clocks never reorder the stitched tree). No-op with tracing
+/// off (`scatter_span == 0`) or against span-less workers.
+fn stitch_worker_spans(
+    trace: &Trace,
+    scatter_span: u64,
+    exchange_start_us: u64,
+    worker: usize,
+    sheet: &[SpanRecord],
+) {
+    if scatter_span == 0 || sheet.is_empty() {
+        return;
+    }
+    let anchor = SpanRecord {
+        id: scatter_span,
+        parent: crate::trace::ROOT_SPAN,
+        name: "exchange".to_string(),
+        worker: worker as u64,
+        start_us: exchange_start_us,
+        dur_us: trace.now_us().saturating_sub(exchange_start_us),
+    };
+    let anchored =
+        crate::trace::span::anchor_spans(sheet, &anchor, worker as u64, || trace.reserve_span());
+    for s in anchored {
+        trace.record_span(s.id, s.parent, &s.name, s.worker, s.start_us, s.dur_us);
+    }
+}
+
 /// Rebuild the coordinator-counter part of a worker's `STATS` reply.
 /// Keys a worker does not report stay zero.
 fn parse_stats_snapshot(map: &std::collections::BTreeMap<String, String>) -> StatsSnapshot {
     let u = |k: &str| map.get(k).and_then(|v| v.parse::<u64>().ok()).unwrap_or(0);
     let f = |k: &str| map.get(k).and_then(|v| v.parse::<f64>().ok()).unwrap_or(0.0);
+    let h = |k: &str| {
+        map.get(k)
+            .and_then(|v| crate::coordinator::stats::HistogramSnapshot::from_wire(v).ok())
+            .unwrap_or_default()
+    };
     StatsSnapshot {
         blocks_total: u("blocks_total"),
         blocks_native: u("blocks_native"),
@@ -577,6 +669,10 @@ fn parse_stats_snapshot(map: &std::collections::BTreeMap<String, String>) -> Sta
         prefetch_issued: u("prefetch_issued"),
         prefetch_hits: u("prefetch_hits"),
         prefetch_wasted_bytes: u("prefetch_wasted_bytes"),
+        hist_gather: h("hist_gather"),
+        hist_exec: h("hist_exec"),
+        hist_merge: h("hist_merge"),
+        hist_queue_wait: h("hist_queue_wait"),
     }
 }
 
@@ -777,7 +873,16 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
                     let _scope = crate::logging::job_scope(id);
                     journal.emit(Event::JobStarted);
                     let trace = Trace::to_journal(Arc::clone(&journal));
-                    let outcome = worker_state.router.run_spec_traced(&spec, &trace);
+                    // Root of the routed job's span tree: the journal
+                    // epoch is submit time, so "now" is the queue wait.
+                    let queue_us = trace.now_us();
+                    let job_span = trace.reserve_span();
+                    trace.record_span(trace.reserve_span(), job_span, "queue", 0, 0, queue_us);
+                    let outcome =
+                        worker_state.router.run_spec_traced(&spec, &trace.child_of(job_span));
+                    // The job span covers submit → terminal state so
+                    // every child (queue, rounds, scatters) nests in it.
+                    trace.record_span(job_span, crate::trace::ROOT_SPAN, "job", 0, 0, trace.now_us());
                     let mut jobs = worker_state.jobs.lock().unwrap();
                     let Some(job) = jobs.get_mut(&id) else { return };
                     match outcome {
@@ -845,7 +950,9 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
                  cache_disk_hits={} blocks_total={} blocks_native={} blocks_pjrt={} matrices={} \
                  store_chunks_read={} store_bytes_read={} store_cache_hits={} \
                  prefetch_issued={} prefetch_hits={} prefetch_wasted_bytes={} \
-                 gather_s={:.6} exec_s={:.6} merge_s={:.6} workers={total} workers_live={live}\n",
+                 gather_s={:.6} exec_s={:.6} merge_s={:.6} \
+                 hist_gather={} hist_exec={} hist_merge={} hist_queue_wait={} \
+                 workers={total} workers_live={live}\n",
                 snap.cache_hits,
                 snap.cache_misses,
                 gauge("cache_entries"),
@@ -865,6 +972,10 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
                 snap.gather_s,
                 snap.exec_s,
                 snap.merge_s,
+                snap.hist_gather.to_wire(),
+                snap.hist_exec.to_wire(),
+                snap.hist_merge.to_wire(),
+                snap.hist_queue_wait.to_wire(),
             )))
         }
         Request::Route => {
@@ -932,6 +1043,23 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
             header.insert_str(header.len() - 1, &format!(" bytes={}", payload.len() - 8));
             Ok(Reply::Binary { header, payload })
         }
+        Request::Spans { id } => {
+            // The stitched tree: router-side job/round/scatter spans
+            // plus every worker sheet anchored at its exchange.
+            let journal = {
+                let jobs = state.jobs.lock().unwrap();
+                Arc::clone(&jobs.get(&id).with_context(|| format!("no job with id {id}"))?.journal)
+            };
+            let spans = journal.spans();
+            let mut out = format!("OK id={id} count={}\n", spans.len());
+            for s in &spans {
+                out.push_str("SPAN ");
+                out.push_str(&s.to_wire());
+                out.push('\n');
+            }
+            out.push_str("END\n");
+            Ok(Reply::Text(out))
+        }
         Request::Metrics => {
             let (body, lines) = router_metrics(state).finish();
             Ok(Reply::Text(format!("OK lines={lines}\n{body}END\n")))
@@ -963,31 +1091,65 @@ fn router_metrics(state: &RouterState) -> protocol::MetricsText {
     let (total, live, snap, gauges) = state.router.aggregate_stats();
     let gauge = |k: &str| gauges.get(k).copied().unwrap_or(0.0) as u64;
     let mut m = protocol::MetricsText::new();
-    m.declare("lamc_jobs", "gauge")
+    m.declare("lamc_jobs", "gauge", "Routed jobs on this router, by lifecycle state.")
         .sample("lamc_jobs{state=\"queued\"}", queued)
         .sample("lamc_jobs{state=\"running\"}", running)
         .sample("lamc_jobs{state=\"done\"}", done)
         .sample("lamc_jobs{state=\"failed\"}", failed)
-        .gauge("lamc_workers", total)
-        .gauge("lamc_workers_live", live)
-        .gauge("lamc_matrices", state.router.topo.len())
-        .counter("lamc_cache_hits_total", snap.cache_hits)
-        .counter("lamc_cache_misses_total", snap.cache_misses)
-        .counter("lamc_cache_disk_hits_total", gauge("cache_disk_hits"))
-        .gauge("lamc_cache_entries", gauge("cache_entries"))
-        .gauge("lamc_cache_bytes", gauge("cache_bytes"))
-        .counter("lamc_blocks_total", snap.blocks_total)
-        .counter("lamc_blocks_native_total", snap.blocks_native)
-        .counter("lamc_blocks_pjrt_total", snap.blocks_pjrt)
-        .counter("lamc_store_chunks_read_total", snap.store_chunks_read)
-        .counter("lamc_store_bytes_read_total", snap.store_bytes_read)
-        .counter("lamc_store_cache_hits_total", snap.store_cache_hits)
-        .counter("lamc_prefetch_issued_total", snap.prefetch_issued)
-        .counter("lamc_prefetch_hits_total", snap.prefetch_hits)
-        .counter("lamc_prefetch_wasted_bytes_total", snap.prefetch_wasted_bytes)
-        .counter("lamc_gather_seconds_total", format!("{:.6}", snap.gather_s))
-        .counter("lamc_exec_seconds_total", format!("{:.6}", snap.exec_s))
-        .counter("lamc_merge_seconds_total", format!("{:.6}", snap.merge_s));
+        .gauge("lamc_workers", total, "Worker nodes this router connected to.")
+        .gauge("lamc_workers_live", live, "Worker nodes currently believed alive.")
+        .gauge("lamc_matrices", state.router.topo.len(), "Sharded matrices in the merged topology.")
+        .counter("lamc_cache_hits_total", snap.cache_hits, "Result-cache hits across the fleet.")
+        .counter("lamc_cache_misses_total", snap.cache_misses, "Result-cache misses across the fleet.")
+        .counter(
+            "lamc_cache_disk_hits_total",
+            gauge("cache_disk_hits"),
+            "Result-cache hits served from the disk tier across the fleet.",
+        )
+        .gauge("lamc_cache_entries", gauge("cache_entries"), "Resident result-cache entries across the fleet.")
+        .gauge("lamc_cache_bytes", gauge("cache_bytes"), "Resident result-cache bytes across the fleet.")
+        .counter("lamc_blocks_total", snap.blocks_total, "Block jobs executed across the fleet.")
+        .counter("lamc_blocks_native_total", snap.blocks_native, "Block jobs run on the native backend.")
+        .counter("lamc_blocks_pjrt_total", snap.blocks_pjrt, "Block jobs run on the PJRT backend.")
+        .counter("lamc_store_chunks_read_total", snap.store_chunks_read, "Store chunks read across the fleet.")
+        .counter("lamc_store_bytes_read_total", snap.store_bytes_read, "Store bytes read across the fleet.")
+        .counter(
+            "lamc_store_cache_hits_total",
+            snap.store_cache_hits,
+            "Chunk reads served by worker chunk caches.",
+        )
+        .counter("lamc_prefetch_issued_total", snap.prefetch_issued, "Chunk prefetches issued across the fleet.")
+        .counter(
+            "lamc_prefetch_hits_total",
+            snap.prefetch_hits,
+            "Chunk reads answered by a prefetched chunk across the fleet.",
+        )
+        .counter(
+            "lamc_prefetch_wasted_bytes_total",
+            snap.prefetch_wasted_bytes,
+            "Prefetched bytes evicted unread across the fleet.",
+        )
+        .counter("lamc_gather_seconds_total", format!("{:.6}", snap.gather_s), "Seconds spent gathering blocks.")
+        .counter("lamc_exec_seconds_total", format!("{:.6}", snap.exec_s), "Seconds spent co-clustering blocks.")
+        .counter("lamc_merge_seconds_total", format!("{:.6}", snap.merge_s), "Seconds spent merging atom sets.")
+        // Bucket-wise aggregation across workers: each worker ships its
+        // raw bucket counts over `STATS` and the router sums them
+        // (`HistogramSnapshot::merged`), so fleet `_bucket` counts are
+        // exact, not re-binned.
+        .declare(
+            "lamc_round_seconds",
+            "histogram",
+            "Phase latency distribution aggregated across workers, by phase.",
+        )
+        .histogram_series("lamc_round_seconds", "phase=\"gather\"", &snap.hist_gather)
+        .histogram_series("lamc_round_seconds", "phase=\"exec\"", &snap.hist_exec)
+        .histogram_series("lamc_round_seconds", "phase=\"merge\"", &snap.hist_merge)
+        .declare(
+            "lamc_queue_wait_seconds",
+            "histogram",
+            "Seconds jobs waited in worker queues before a runner picked them up.",
+        )
+        .histogram_series("lamc_queue_wait_seconds", "", &snap.hist_queue_wait);
     m
 }
 

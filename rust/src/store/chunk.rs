@@ -827,6 +827,31 @@ impl StoreReader {
             .send(chunks);
     }
 
+    /// Queue every chunk of the store, in file order, for background
+    /// prefetch — the sequential-scan analogue of
+    /// [`StoreReader::prefetch_plan`], for whole-store sweeps
+    /// (`read_all`, `store::repack_reader`) that consume chunks in
+    /// index order: the prefetcher's file handle streams chunk `i+1`
+    /// while the consumer decodes chunk `i`. Advisory like every
+    /// prefetch path, and a no-op with prefetch disabled.
+    pub fn prefetch_scan(&self) {
+        if !self.prefetch_enabled() {
+            return;
+        }
+        let chunks: Vec<usize> = (0..self.index.len()).collect();
+        let mut guard = self.prefetcher.lock().unwrap();
+        guard
+            .get_or_insert_with(|| {
+                Prefetcher::spawn(
+                    self.path.clone(),
+                    self.header.layout,
+                    Arc::clone(&self.index),
+                    Arc::clone(&self.shared),
+                )
+            })
+            .send(chunks);
+    }
+
     /// True when no queued prefetch work remains (every planned chunk
     /// has been fetched or skipped). Trivially true before the first
     /// [`StoreReader::prefetch_plan`] call.
@@ -1084,6 +1109,9 @@ impl StoreReader {
     /// Materialize the whole matrix (baselines and `lamc inspect
     /// --verify` use this; the partitioned pipeline never does).
     pub fn read_all(&self) -> Result<Matrix> {
+        // Whole-store sweep in index order: warm the scan so disk I/O
+        // overlaps the per-chunk decode below.
+        self.prefetch_scan();
         match self.header.layout {
             Layout::Dense => {
                 let (rows, cols) = (self.header.rows, self.header.cols);

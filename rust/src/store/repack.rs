@@ -66,6 +66,11 @@ pub fn repack_reader(
     // instead of recomputing over the new chunk checksums.
     writer.set_fingerprint(header.fingerprint);
 
+    // The band sweep below reads every source chunk exactly once, in
+    // index order — feed the prefetcher the linear plan so the next
+    // band streams in while this one re-chunks.
+    reader.prefetch_scan();
+
     let n_row_bands = header.n_row_bands();
     let layout = header.layout;
     let mut dense_row: Vec<f32> = Vec::with_capacity(header.cols);

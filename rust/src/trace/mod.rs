@@ -23,15 +23,27 @@ use std::collections::VecDeque;
 use std::fs::File;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+pub mod export;
+pub mod span;
+
+pub use span::{SpanRecord, ROOT_SPAN};
+
 /// Default bounded-ring capacity per job journal. Small jobs emit a
 /// handful of events; a long routed run emits a few per round — 1024
 /// keeps hours of history without letting a runaway job grow memory.
 pub const DEFAULT_RING_CAPACITY: usize = 1024;
+
+/// Upper bound on spans retained per journal. Spans are per-block, so a
+/// huge routed job could otherwise grow the sheet without limit; past
+/// the cap new spans are silently dropped (spans are advisory, like
+/// events — the tree just loses its deepest leaves).
+pub const SPAN_CAPACITY: usize = 1 << 16;
 
 /// One typed lifecycle event. The field lists here are the wire
 /// contract (`docs/OBSERVABILITY.md`): every future subsystem reports
@@ -402,7 +414,10 @@ struct Ring {
     dropped: u64,
 }
 
-/// Per-job event journal: bounded ring + optional JSONL spill.
+/// Per-job event journal: bounded ring + optional JSONL spill, plus the
+/// job's hierarchical span sheet (see [`span::SpanRecord`]). The
+/// journal's creation instant is the epoch every span's `start_us` is
+/// measured from, so one clock anchors the whole tree.
 #[derive(Debug)]
 pub struct Journal {
     ring: Mutex<Ring>,
@@ -410,6 +425,11 @@ pub struct Journal {
     start: Instant,
     spill: Option<Mutex<File>>,
     spill_path: Option<PathBuf>,
+    /// Completed spans, recorded in completion order (children usually
+    /// land before their parents — readers sort by `start_us`).
+    spans: Mutex<Vec<SpanRecord>>,
+    /// Next span id to hand out; 0 is reserved as the no-parent root.
+    next_span: AtomicU64,
 }
 
 impl Journal {
@@ -420,6 +440,8 @@ impl Journal {
             start: Instant::now(),
             spill: None,
             spill_path: None,
+            spans: Mutex::new(Vec::new()),
+            next_span: AtomicU64::new(1),
         }
     }
 
@@ -505,6 +527,46 @@ impl Journal {
         let ring = self.ring.lock().unwrap();
         ring.next_seq.checked_sub(1)
     }
+
+    /// Microseconds since the journal was created — the span clock.
+    pub fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    /// Allocate a span id without recording anything yet. Parents use
+    /// this so children can reference them before the parent's duration
+    /// is known.
+    pub fn reserve_span(&self) -> u64 {
+        self.next_span.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Record one completed span. Ids from [`Journal::reserve_span`] or
+    /// re-assigned worker-local ids (see the shard router's stitcher).
+    pub fn record_span(&self, record: SpanRecord) {
+        let mut spans = self.spans.lock().unwrap();
+        if spans.len() < SPAN_CAPACITY {
+            spans.push(record);
+        }
+    }
+
+    /// Bulk-record spans (the router's stitch path).
+    pub fn record_spans(&self, records: impl IntoIterator<Item = SpanRecord>) {
+        let mut spans = self.spans.lock().unwrap();
+        for record in records {
+            if spans.len() >= SPAN_CAPACITY {
+                break;
+            }
+            spans.push(record);
+        }
+    }
+
+    /// Snapshot of every recorded span, sorted by start time (ties by
+    /// id, which allocation order makes monotonic per emitter).
+    pub fn spans(&self) -> Vec<SpanRecord> {
+        let mut out = self.spans.lock().unwrap().clone();
+        out.sort_by_key(|s| (s.start_us, s.id));
+        out
+    }
 }
 
 /// Read a JSONL journal spill back into records (post-mortem path).
@@ -518,35 +580,89 @@ pub fn read_jsonl(path: &Path) -> Result<Vec<EventRecord>> {
 
 /// Cheap cloneable emission handle threaded through configs. Disabled
 /// by default ([`Trace::default`]) — every emission site stays a no-op
-/// unless a journal was attached.
+/// unless a journal was attached. Besides events, a trace carries the
+/// current *parent span id* ([`Trace::parent`]): a layer that opens a
+/// span hands its children a [`Trace::child_of`] clone, so the span
+/// tree nests without threading ids through every signature.
 #[derive(Clone, Debug, Default)]
-pub struct Trace(Option<Arc<Journal>>);
+pub struct Trace {
+    journal: Option<Arc<Journal>>,
+    parent: u64,
+}
 
 impl Trace {
     /// A trace writing into `journal`.
     pub fn to_journal(journal: Arc<Journal>) -> Trace {
-        Trace(Some(journal))
+        Trace { journal: Some(journal), parent: ROOT_SPAN }
     }
 
     /// The disabled (no-op) trace — same as `Trace::default()`.
     pub fn disabled() -> Trace {
-        Trace(None)
+        Trace { journal: None, parent: ROOT_SPAN }
     }
 
     pub fn enabled(&self) -> bool {
-        self.0.is_some()
+        self.journal.is_some()
     }
 
     /// Emit `event` if enabled; otherwise a no-op.
     pub fn emit(&self, event: Event) {
-        if let Some(j) = &self.0 {
+        if let Some(j) = &self.journal {
             j.emit(event);
         }
     }
 
     /// The backing journal, if enabled.
     pub fn journal(&self) -> Option<&Arc<Journal>> {
-        self.0.as_ref()
+        self.journal.as_ref()
+    }
+
+    /// The span id new spans should parent under (0 = tree root).
+    pub fn parent(&self) -> u64 {
+        self.parent
+    }
+
+    /// A clone whose spans nest under `span` instead of this trace's
+    /// current parent.
+    pub fn child_of(&self, span: u64) -> Trace {
+        Trace { journal: self.journal.clone(), parent: span }
+    }
+
+    /// Microseconds since the journal epoch (0 when disabled).
+    pub fn now_us(&self) -> u64 {
+        self.journal.as_ref().map_or(0, |j| j.now_us())
+    }
+
+    /// Allocate a span id (0 when disabled — every span op treats id 0
+    /// as "tracing off" and becomes a no-op).
+    pub fn reserve_span(&self) -> u64 {
+        self.journal.as_ref().map_or(0, |j| j.reserve_span())
+    }
+
+    /// Record a completed span under a pre-reserved id. No-op when
+    /// disabled or when `id` is 0 (a reservation made while disabled).
+    pub fn record_span(&self, id: u64, parent: u64, name: &str, worker: u64, start_us: u64, dur_us: u64) {
+        if id == 0 {
+            return;
+        }
+        if let Some(j) = &self.journal {
+            j.record_span(SpanRecord {
+                id,
+                parent,
+                name: name.to_string(),
+                worker,
+                start_us,
+                dur_us,
+            });
+        }
+    }
+
+    /// Reserve + record in one step, parented under [`Trace::parent`].
+    /// Returns the new span's id (0 when disabled).
+    pub fn add_span(&self, name: &str, worker: u64, start_us: u64, dur_us: u64) -> u64 {
+        let id = self.reserve_span();
+        self.record_span(id, self.parent, name, worker, start_us, dur_us);
+        id
     }
 }
 

@@ -1,0 +1,256 @@
+//! Hierarchical spans: the timing tree recorded alongside the event
+//! journal.
+//!
+//! A span is one timed region of a job — the job itself, a sampling
+//! round, a phase (`gather`/`exec`/`merge`), one scattered block on a
+//! remote worker — with an id, a parent id and `(start_us, dur_us)`
+//! measured on the owning journal's monotonic clock. Together a job's
+//! spans form one tree rooted at the `job` span (parent
+//! [`ROOT_SPAN`] = 0).
+//!
+//! **Cross-node anchoring.** Workers measure their spans on their *own*
+//! clock, relative to the instant they received the request (`start_us`
+//! from 0). The router re-anchors each returned sheet at the exchange
+//! boundary: every worker span is re-timed as
+//! `scatter.start_us + worker_relative_start`, clamped so it nests
+//! inside the router-side scatter span. Clock skew between nodes can
+//! therefore never reorder the tree — worker spans inherit the router's
+//! timeline, keeping only their internal offsets.
+//!
+//! The wire form is one text line per span (the `SPANS` verb and the
+//! span block piggybacked on `EXECB`/`GATHERB` replies):
+//!
+//! ```text
+//! SPAN id=7 parent=3 name=exec worker=1 start_us=4100 dur_us=91000
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+/// The parent id of a tree root (no parent).
+pub const ROOT_SPAN: u64 = 0;
+
+/// One completed span.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Journal-unique id, from 1 (0 is [`ROOT_SPAN`], never an id).
+    pub id: u64,
+    /// Enclosing span's id, or [`ROOT_SPAN`] for a tree root.
+    pub parent: u64,
+    /// Span name: `job`, `queue`, `round-<r>`, `gather`, `exec`,
+    /// `merge`, `scatter-<job>` — a single token (no whitespace).
+    pub name: String,
+    /// Worker attribution: the router's worker index for remote spans,
+    /// 0 for local/single-node spans.
+    pub worker: u64,
+    /// Microseconds since the owning journal's epoch.
+    pub start_us: u64,
+    /// Span duration in microseconds.
+    pub dur_us: u64,
+}
+
+impl SpanRecord {
+    /// Span end, saturating.
+    pub fn end_us(&self) -> u64 {
+        self.start_us.saturating_add(self.dur_us)
+    }
+
+    /// The body of a `SPAN` wire line (without the `SPAN ` prefix).
+    pub fn to_wire(&self) -> String {
+        format!(
+            "id={} parent={} name={} worker={} start_us={} dur_us={}",
+            self.id,
+            self.parent,
+            tokenize_name(&self.name),
+            self.worker,
+            self.start_us,
+            self.dur_us
+        )
+    }
+
+    /// Parse a wire line body (accepts an optional `SPAN ` prefix).
+    pub fn from_wire(line: &str) -> Result<SpanRecord> {
+        let body = line.trim().strip_prefix("SPAN ").unwrap_or(line.trim());
+        let mut id = None;
+        let mut parent = None;
+        let mut name = None;
+        let mut worker = None;
+        let mut start_us = None;
+        let mut dur_us = None;
+        for token in body.split_whitespace() {
+            let (k, v) = token
+                .split_once('=')
+                .with_context(|| format!("span field '{token}' is not key=value"))?;
+            match k {
+                "id" => id = Some(v.parse().with_context(|| format!("bad span id '{v}'"))?),
+                "parent" => parent = Some(v.parse().with_context(|| format!("bad span parent '{v}'"))?),
+                "name" => name = Some(v.to_string()),
+                "worker" => worker = Some(v.parse().with_context(|| format!("bad span worker '{v}'"))?),
+                "start_us" => start_us = Some(v.parse().with_context(|| format!("bad span start '{v}'"))?),
+                "dur_us" => dur_us = Some(v.parse().with_context(|| format!("bad span dur '{v}'"))?),
+                other => bail!("unknown span field '{other}'"),
+            }
+        }
+        Ok(SpanRecord {
+            id: id.context("span line missing id")?,
+            parent: parent.context("span line missing parent")?,
+            name: name.context("span line missing name")?,
+            worker: worker.context("span line missing worker")?,
+            start_us: start_us.context("span line missing start_us")?,
+            dur_us: dur_us.context("span line missing dur_us")?,
+        })
+    }
+}
+
+/// Span names must survive the space-separated wire line.
+fn tokenize_name(s: &str) -> String {
+    s.chars().map(|c| if c.is_whitespace() { '_' } else { c }).collect()
+}
+
+/// Encode a sheet as the text payload of a span block: one `SPAN` line
+/// per record, `\n`-joined with a trailing newline (empty for an empty
+/// sheet).
+pub fn encode_spans(spans: &[SpanRecord]) -> String {
+    let mut out = String::new();
+    for s in spans {
+        out.push_str("SPAN ");
+        out.push_str(&s.to_wire());
+        out.push('\n');
+    }
+    out
+}
+
+/// Decode a span block produced by [`encode_spans`].
+pub fn decode_spans(text: &str) -> Result<Vec<SpanRecord>> {
+    text.lines().filter(|l| !l.trim().is_empty()).map(SpanRecord::from_wire).collect()
+}
+
+/// Re-anchor a worker-local span sheet under a router-side anchor span.
+///
+/// `sheet` is the worker's reply: local ids from 1, times relative to
+/// the worker's receipt of the request, parent [`ROOT_SPAN`] marking
+/// "attach at the exchange boundary". Each span gets a fresh globally
+/// unique id from `fresh` (so worker-local ids can never collide with
+/// router ids), its root parents become `anchor.id`, its `worker` field
+/// is overwritten with `worker` (the router's index for the executing
+/// node), and its times are re-based onto the router clock:
+/// `anchor.start_us + relative start`, clamped so the span never
+/// extends past `anchor`'s end. This is the clock-skew rule — the
+/// worker's clock contributes only *offsets within the exchange*, never
+/// absolute positions.
+pub fn anchor_spans(
+    sheet: &[SpanRecord],
+    anchor: &SpanRecord,
+    worker: u64,
+    mut fresh: impl FnMut() -> u64,
+) -> Vec<SpanRecord> {
+    let mut remap = std::collections::HashMap::with_capacity(sheet.len());
+    for s in sheet {
+        remap.insert(s.id, fresh());
+    }
+    sheet
+        .iter()
+        .map(|s| {
+            let start_us = anchor.start_us.saturating_add(s.start_us).min(anchor.end_us());
+            let dur_us = s.dur_us.min(anchor.end_us().saturating_sub(start_us));
+            SpanRecord {
+                id: remap[&s.id],
+                parent: match s.parent {
+                    ROOT_SPAN => anchor.id,
+                    p => remap.get(&p).copied().unwrap_or(anchor.id),
+                },
+                name: s.name.clone(),
+                worker,
+                start_us,
+                dur_us,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(id: u64, parent: u64, name: &str, start_us: u64, dur_us: u64) -> SpanRecord {
+        SpanRecord { id, parent, name: name.into(), worker: 0, start_us, dur_us }
+    }
+
+    #[test]
+    fn wire_round_trips() {
+        let s = SpanRecord {
+            id: 7,
+            parent: 3,
+            name: "exec".into(),
+            worker: 2,
+            start_us: 4100,
+            dur_us: 91000,
+        };
+        assert_eq!(SpanRecord::from_wire(&s.to_wire()).unwrap(), s);
+        assert_eq!(SpanRecord::from_wire(&format!("SPAN {}", s.to_wire())).unwrap(), s);
+        let block = encode_spans(&[s.clone()]);
+        assert_eq!(decode_spans(&block).unwrap(), vec![s]);
+        assert!(decode_spans("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn wire_rejects_damage() {
+        assert!(SpanRecord::from_wire("id=1 parent=0").is_err(), "missing fields");
+        assert!(SpanRecord::from_wire("id=x parent=0 name=a worker=0 start_us=0 dur_us=0").is_err());
+        assert!(
+            SpanRecord::from_wire("id=1 parent=0 name=a worker=0 start_us=0 dur_us=0 evil=1")
+                .is_err(),
+            "unknown field"
+        );
+    }
+
+    #[test]
+    fn names_stay_single_tokens() {
+        let s = SpanRecord {
+            id: 1,
+            parent: 0,
+            name: "two words".into(),
+            worker: 0,
+            start_us: 0,
+            dur_us: 1,
+        };
+        let back = SpanRecord::from_wire(&s.to_wire()).unwrap();
+        assert_eq!(back.name, "two_words");
+    }
+
+    #[test]
+    fn anchoring_rebases_reids_and_clamps() {
+        // Worker sheet: a 2-span tree, ids 1..2, times relative to the
+        // exchange, parent 0 at the boundary.
+        let sheet =
+            vec![span(1, ROOT_SPAN, "gather", 0, 400), span(2, 1, "exec", 400, 10_000)];
+        let anchor = span(30, 20, "scatter-5", 1000, 5000); // ends at 6000
+        let mut next = 100;
+        let got = anchor_spans(&sheet, &anchor, 2, || {
+            next += 1;
+            next
+        });
+        assert_eq!(got.len(), 2);
+        // Fresh ids, structure preserved, boundary parent = anchor id.
+        assert_eq!(got[0].parent, 30);
+        assert_eq!(got[1].parent, got[0].id);
+        assert!(got.iter().all(|s| s.worker == 2), "worker overwritten by router index");
+        // Times re-based onto the anchor's clock…
+        assert_eq!(got[0].start_us, 1400);
+        assert_eq!(got[0].dur_us, 400);
+        // …and clamped inside it: 1000+400=1400 start, wanted end
+        // 1400+10000 > 6000 so duration is cut to fit.
+        assert_eq!(got[1].start_us, 2400);
+        assert_eq!(got[1].end_us(), 6000, "span clamped to the anchor window");
+    }
+
+    #[test]
+    fn anchoring_with_skewed_worker_clock_never_escapes_the_window() {
+        // A worker claiming an absurd relative start (clock skew /
+        // bogus sheet) still lands inside the anchor.
+        let sheet = vec![span(1, ROOT_SPAN, "exec", 9_999_999, 77)];
+        let anchor = span(8, 0, "scatter-0", 500, 100);
+        let got = anchor_spans(&sheet, &anchor, 1, || 50);
+        assert_eq!(got[0].start_us, 600, "clamped to the anchor end");
+        assert_eq!(got[0].dur_us, 0);
+    }
+}

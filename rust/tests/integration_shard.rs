@@ -15,11 +15,14 @@
 //!   itself, with per-node store/cache counters summed across workers;
 //! * a proto-mismatched `HELLO` is rejected with a typed error line.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
+
+use lamc::trace::{SpanRecord, ROOT_SPAN};
 
 use lamc::data::synthetic::{planted_dense, PlantedConfig};
 use lamc::matrix::Matrix;
@@ -213,6 +216,33 @@ fn killed_worker_event_stream_narrates_lost_retry_done_in_order() {
     assert!(pos("MergeCompleted") < pos("JobDone"), "merge inside the job: {kinds:?}");
     assert_eq!(kinds.last(), Some(&"JobDone"), "terminal event: {kinds:?}");
 
+    // Stitched span tree under retry: the dispatch that died on worker
+    // 0 and the retry that landed on worker 1 are *both* scatter spans
+    // under the SAME round span — a retry never grows a second round.
+    let spans = client.spans(id).unwrap();
+    let by_id: HashMap<u64, &SpanRecord> = spans.iter().map(|s| (s.id, s)).collect();
+    let scatters: Vec<&SpanRecord> =
+        spans.iter().filter(|s| s.name.starts_with("scatter-")).collect();
+    assert!(!scatters.is_empty(), "retried run records scatter spans");
+    for s in &scatters {
+        assert!(
+            by_id[&s.parent].name.starts_with("round-"),
+            "scatter parents under a round span: {s:?}"
+        );
+    }
+    let mut by_name: HashMap<&str, Vec<&SpanRecord>> = HashMap::new();
+    for s in &scatters {
+        by_name.entry(s.name.as_str()).or_default().push(s);
+    }
+    let retried_job = by_name
+        .values()
+        .find(|group| group.len() >= 2)
+        .unwrap_or_else(|| panic!("some job scattered twice (dead dispatch + retry): {scatters:?}"));
+    assert!(
+        retried_job.iter().all(|s| s.parent == retried_job[0].parent),
+        "both dispatches hang off the same round span: {retried_job:?}"
+    );
+
     // Cursor seqs are strictly increasing across the whole drain.
     let seqs: Vec<u64> = lines
         .iter()
@@ -379,6 +409,83 @@ fn router_front_end_serves_results_and_aggregated_stats() {
         assert!(routed_stats.contains_key(key), "router STATS carries {key}");
     }
     assert_eq!(routed_stats.get("jobs_done").map(String::as_str), Some("1"));
+
+    drop(client);
+    drop(front);
+    for server in [w0, w1] {
+        server.shutdown();
+        server.join().shutdown();
+    }
+}
+
+#[test]
+fn routed_span_tree_stitches_worker_spans_under_router_rounds() {
+    let fx = fixture("span_tree", 2);
+    // Disjoint ownership forces cross-worker gathers, so the tree
+    // carries worker sheets from both `GATHERB` and `EXECB` exchanges.
+    let w0 = in_process_worker(&fx, &[0]);
+    let w1 = in_process_worker(&fx, &[1]);
+    let worker_addrs = [w0.addr().to_string(), w1.addr().to_string()];
+    let router = ShardRouter::connect(&worker_addrs, ShardRouterConfig::default()).unwrap();
+    let front = ShardServer::spawn("127.0.0.1:0", router).unwrap();
+    let spec = JobSpec { matrix: "m".into(), k: 3, seed: 0x5A4D, workers: 2, ..Default::default() };
+    let mut client = ServiceClient::connect(front.addr()).unwrap();
+    let id = client.submit(&spec).unwrap();
+    client.wait(id, Duration::from_secs(120)).unwrap();
+
+    let spans = client.spans(id).unwrap();
+    assert!(!spans.is_empty(), "routed job records a span tree");
+    let by_id: HashMap<u64, &SpanRecord> = spans.iter().map(|s| (s.id, s)).collect();
+    assert_eq!(by_id.len(), spans.len(), "span ids are unique after stitching");
+
+    // Exactly one root, the job span; every other span reaches it.
+    let roots: Vec<&SpanRecord> = spans.iter().filter(|s| s.parent == ROOT_SPAN).collect();
+    assert_eq!(roots.len(), 1, "one stitched tree: {roots:?}");
+    assert_eq!(roots[0].name, "job", "anchored at the job span");
+    for s in &spans {
+        let mut cur: &SpanRecord = s;
+        let mut hops = 0;
+        while cur.parent != ROOT_SPAN {
+            cur = by_id
+                .get(&cur.parent)
+                .copied()
+                .unwrap_or_else(|| panic!("dangling parent: {s:?}"));
+            hops += 1;
+            assert!(hops <= spans.len(), "parent cycle at {s:?}");
+        }
+        assert_eq!(cur.id, roots[0].id, "every span reaches the job root: {s:?}");
+    }
+
+    // Every worker-emitted span sits under a scatter span, which sits
+    // under a router round span — the cross-node acceptance invariant —
+    // and the anchoring rule keeps it inside its parent's window even
+    // though worker clocks never agreed with the router's.
+    let mut worker_spans = 0;
+    for s in &spans {
+        if s.name != "gather" && s.name != "exec" {
+            continue;
+        }
+        worker_spans += 1;
+        assert!(s.worker < 2, "worker track id: {s:?}");
+        let scatter = by_id[&s.parent];
+        assert!(scatter.name.starts_with("scatter-"), "worker span under a scatter: {s:?}");
+        let round = by_id[&scatter.parent];
+        assert!(round.name.starts_with("round-"), "scatter under a router round: {scatter:?}");
+        assert!(
+            s.start_us >= scatter.start_us && s.end_us() <= scatter.end_us(),
+            "anchored span escapes its exchange window: {s:?} vs {scatter:?}"
+        );
+    }
+    assert!(worker_spans >= 2, "worker sheets were stitched in: {spans:?}");
+
+    // Rounds parent directly under the job span, and the merge rides
+    // with them.
+    for s in &spans {
+        if s.name.starts_with("round-") || s.name == "merge" || s.name == "queue" {
+            assert_eq!(by_id[&s.parent].name, "job", "direct child of the job: {s:?}");
+        }
+    }
+    assert!(spans.iter().any(|s| s.name == "merge"), "merge span recorded: {spans:?}");
 
     drop(client);
     drop(front);

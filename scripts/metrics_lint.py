@@ -1,0 +1,309 @@
+#!/usr/bin/env python3
+"""Well-formedness linter for the METRICS Prometheus-text exposition.
+
+CI scrapes a live ``lamc serve`` worker and a ``lamc route`` router and
+pipes the exposition through this linter. It enforces the contract
+documented in ``docs/OBSERVABILITY.md`` § Metrics exposition:
+
+* Every sampled family carries a ``# HELP`` and a ``# TYPE`` line, and
+  the declared type is one of ``counter``/``gauge``/``histogram``.
+* No family is declared twice, and no declaration is left dangling
+  (HELP without TYPE or vice versa).
+* Histogram series are complete and ordered: within one label set the
+  ``le`` bounds are strictly increasing and terminated by ``+Inf``,
+  bucket counts are non-decreasing (cumulative), and the ``_count``
+  sample equals the ``+Inf`` bucket. ``_sum`` and ``_count`` exist for
+  every bucketed label set.
+* Sample values parse as finite numbers.
+
+The linter is schema-driven, not name-driven: it knows nothing about
+which families lamc exposes, so new metrics are covered the moment they
+are sampled.
+
+Usage:
+  metrics_lint.py FILE [FILE...]   # lint exposition file(s); '-' = stdin
+  metrics_lint.py --self-test
+
+``--self-test`` lints a known-good synthetic exposition and then four
+deliberately malformed variants (missing HELP, unordered ``le``,
+missing ``+Inf``, ``_count`` disagreeing with the terminal bucket),
+asserting the linter rejects each — CI runs this first so a silently
+broken linter can never wave a malformed exposition through.
+"""
+
+import argparse
+import math
+import re
+import sys
+
+TYPES = {"counter", "gauge", "histogram"}
+
+SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r"\s+(?P<value>\S+)\s*$"
+)
+LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def parse_labels(raw):
+    """'a="x",le="0.5"' -> ({'a': 'x'}, problems). Order-insensitive."""
+    problems = []
+    labels = {}
+    if raw is None or raw.strip() == "":
+        return labels, problems
+    matched = LABEL_RE.findall(raw)
+    # Reconstruct to catch garbage the regex skipped over (bare words,
+    # missing quotes): the matches must tile the whole label body.
+    rebuilt = ",".join(f'{k}="{v}"' for k, v in matched)
+    if rebuilt != raw.strip().rstrip(","):
+        problems.append(f"unparseable label body {{{raw}}}")
+    for k, v in matched:
+        if k in labels:
+            problems.append(f"duplicate label {k!r} in {{{raw}}}")
+        labels[k] = v
+    return labels, problems
+
+
+def base_family(name, typed):
+    """Map a sample name to its declared family: histogram samples
+    (``_bucket``/``_sum``/``_count``) belong to the stripped name when
+    that name is declared as a histogram."""
+    for suffix in ("_bucket", "_sum", "_count"):
+        if name.endswith(suffix):
+            stem = name[: -len(suffix)]
+            if typed.get(stem) == "histogram":
+                return stem
+    return name
+
+
+def lint_text(text, source="<exposition>"):
+    """Return a list of problem strings (empty = well-formed)."""
+    problems = []
+    helped, typed = {}, {}
+    samples = []  # (lineno, name, labels_dict, value)
+
+    for lineno, line in enumerate(text.splitlines(), 1):
+        where = f"{source}:{lineno}"
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            parts = line.split(None, 3)
+            if len(parts) < 4 or not parts[3].strip():
+                problems.append(f"{where}: HELP without help text: {line!r}")
+                continue
+            name = parts[2]
+            if name in helped:
+                problems.append(f"{where}: duplicate HELP for {name}")
+            helped[name] = parts[3]
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4 or parts[3] not in TYPES:
+                problems.append(f"{where}: malformed TYPE line: {line!r}")
+                continue
+            name = parts[2]
+            if name in typed:
+                problems.append(f"{where}: duplicate TYPE for {name}")
+            typed[name] = parts[3]
+            continue
+        if line.startswith("#"):
+            continue  # free-form comment: legal, ignored
+        m = SAMPLE_RE.match(line)
+        if not m:
+            problems.append(f"{where}: unparseable sample line: {line!r}")
+            continue
+        labels, label_problems = parse_labels(m.group("labels"))
+        problems.extend(f"{where}: {p}" for p in label_problems)
+        try:
+            value = float(m.group("value"))
+        except ValueError:
+            problems.append(f"{where}: non-numeric value: {line!r}")
+            continue
+        if math.isnan(value) or math.isinf(value):
+            problems.append(f"{where}: non-finite value: {line!r}")
+            continue
+        samples.append((lineno, m.group("name"), labels, value))
+
+    # Declarations must pair up, families must be declared before use.
+    for name in sorted(set(helped) | set(typed)):
+        if name not in helped:
+            problems.append(f"{source}: {name} has TYPE but no HELP")
+        if name not in typed:
+            problems.append(f"{source}: {name} has HELP but no TYPE")
+
+    sampled_families = set()
+    for lineno, name, labels, value in samples:
+        fam = base_family(name, typed)
+        sampled_families.add(fam)
+        if fam not in typed:
+            problems.append(
+                f"{source}:{lineno}: sample {name} belongs to undeclared "
+                f"family {fam} (no # TYPE)"
+            )
+        if fam not in helped:
+            problems.append(
+                f"{source}:{lineno}: sample {name} belongs to family "
+                f"{fam} with no # HELP"
+            )
+    for name in sorted(set(typed)):
+        if name not in sampled_families:
+            problems.append(f"{source}: {name} declared but never sampled")
+
+    problems.extend(lint_histograms(samples, typed, source))
+    return problems
+
+
+def hist_key(labels):
+    """Label identity of one histogram series, ``le`` excluded."""
+    return tuple(sorted((k, v) for k, v in labels.items() if k != "le"))
+
+
+def lint_histograms(samples, typed, source):
+    problems = []
+    hist_fams = {n for n, t in typed.items() if t == "histogram"}
+    # family -> series key -> {"buckets": [(le, value)], "sum": v, "count": v}
+    series = {}
+    for lineno, name, labels, value in samples:
+        for suffix in ("_bucket", "_sum", "_count"):
+            if name.endswith(suffix) and name[: -len(suffix)] in hist_fams:
+                fam = name[: -len(suffix)]
+                rec = series.setdefault(fam, {}).setdefault(
+                    hist_key(labels), {"buckets": [], "sum": None, "count": None}
+                )
+                if suffix == "_bucket":
+                    if "le" not in labels:
+                        problems.append(
+                            f"{source}:{lineno}: {name} bucket without an "
+                            f"le label"
+                        )
+                        break
+                    le = labels["le"]
+                    bound = math.inf if le == "+Inf" else None
+                    if bound is None:
+                        try:
+                            bound = float(le)
+                        except ValueError:
+                            problems.append(
+                                f"{source}:{lineno}: unparseable le={le!r} "
+                                f"on {name}"
+                            )
+                            break
+                    rec["buckets"].append((bound, value, lineno))
+                else:
+                    rec[suffix[1:]] = value
+                break
+        else:
+            if name in hist_fams:
+                problems.append(
+                    f"{source}:{lineno}: {name} is declared a histogram but "
+                    f"sampled bare (expected _bucket/_sum/_count series)"
+                )
+
+    for fam in sorted(series):
+        for key, rec in sorted(series[fam].items()):
+            tag = f"{fam}{{{', '.join(f'{k}={v!r}' for k, v in key)}}}"
+            buckets = rec["buckets"]  # exposition order
+            if not buckets:
+                problems.append(f"{source}: {tag} has _sum/_count but no buckets")
+                continue
+            bounds = [b for b, _, _ in buckets]
+            if any(b2 <= b1 for b1, b2 in zip(bounds, bounds[1:])):
+                problems.append(f"{source}: {tag} le bounds not strictly increasing")
+            counts = [v for _, v, _ in buckets]
+            if any(c2 < c1 for c1, c2 in zip(counts, counts[1:])):
+                problems.append(f"{source}: {tag} bucket counts not cumulative")
+            if bounds[-1] != math.inf:
+                problems.append(f"{source}: {tag} missing terminal le=\"+Inf\" bucket")
+            elif rec["count"] is not None and rec["count"] != counts[-1]:
+                problems.append(
+                    f"{source}: {tag} _count={rec['count']:g} disagrees with "
+                    f"+Inf bucket {counts[-1]:g}"
+                )
+            if rec["sum"] is None:
+                problems.append(f"{source}: {tag} missing _sum")
+            if rec["count"] is None:
+                problems.append(f"{source}: {tag} missing _count")
+    return problems
+
+
+GOOD = """\
+# HELP lamc_jobs Jobs on this node, by lifecycle state.
+# TYPE lamc_jobs gauge
+lamc_jobs{state="queued"} 0
+lamc_jobs{state="done"} 7
+# HELP lamc_store_chunks_read_total Chunks decoded from disk.
+# TYPE lamc_store_chunks_read_total counter
+lamc_store_chunks_read_total 96
+# HELP lamc_round_seconds Phase latency distribution, by phase.
+# TYPE lamc_round_seconds histogram
+lamc_round_seconds_bucket{phase="gather",le="0.001"} 2
+lamc_round_seconds_bucket{phase="gather",le="0.005"} 5
+lamc_round_seconds_bucket{phase="gather",le="+Inf"} 9
+lamc_round_seconds_sum{phase="gather"} 0.412331000
+lamc_round_seconds_count{phase="gather"} 9
+# HELP lamc_queue_wait_seconds Seconds jobs waited in queue.
+# TYPE lamc_queue_wait_seconds histogram
+lamc_queue_wait_seconds_bucket{le="0.001"} 1
+lamc_queue_wait_seconds_bucket{le="+Inf"} 1
+lamc_queue_wait_seconds_sum 0.000412000
+lamc_queue_wait_seconds_count 1
+"""
+
+
+def self_test():
+    problems = lint_text(GOOD, "good")
+    assert not problems, f"well-formed exposition flagged: {problems}"
+    print("self-test: well-formed exposition passes")
+
+    broken = {
+        "missing HELP": GOOD.replace(
+            "# HELP lamc_store_chunks_read_total Chunks decoded from disk.\n", ""
+        ),
+        "unordered le": GOOD.replace('le="0.005"', 'le="0.0005"'),
+        "missing +Inf": GOOD.replace(
+            'lamc_round_seconds_bucket{phase="gather",le="+Inf"} 9\n', ""
+        ),
+        "_count vs +Inf": GOOD.replace(
+            'lamc_round_seconds_count{phase="gather"} 9',
+            'lamc_round_seconds_count{phase="gather"} 12',
+        ),
+    }
+    for label, text in broken.items():
+        problems = lint_text(text, label)
+        assert problems, f"linter passed a malformed exposition ({label})"
+        print(f"self-test: {label} rejected — {problems[0]}")
+    print("self-test OK")
+    return 0
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", help="exposition file(s); '-' = stdin")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the linter rejects malformed expositions")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return self_test()
+    if not args.files:
+        ap.error("at least one FILE is required (or use --self-test)")
+
+    rc = 0
+    for path in args.files:
+        text = sys.stdin.read() if path == "-" else open(path).read()
+        source = "<stdin>" if path == "-" else path
+        problems = lint_text(text, source)
+        if problems:
+            rc = 1
+            print(f"{source}: {len(problems)} problem(s):")
+            for p in problems:
+                print(f"  {p}")
+        else:
+            lines = sum(1 for l in text.splitlines() if l.strip())
+            print(f"{source}: well-formed ({lines} non-blank lines)")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
