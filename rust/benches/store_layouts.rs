@@ -1,17 +1,20 @@
 //! Row-band (LAMC2) vs tiled (LAMC3) store layouts under the three
 //! access shapes the pipeline generates: row-heavy blocks, column-heavy
-//! blocks, and square planner tiles. Reports wall time per gather and —
-//! the number the layout actually controls — payload bytes off disk.
+//! blocks, and square planner tiles — with the tiled store additionally
+//! packed under `--codec shuffle-lz` to measure what compression does
+//! to bytes off disk and decode time. Reports wall time per gather and
+//! the two byte counters the layout/codec actually control: stored
+//! bytes read and uncompressed bytes decoded.
 //!
 //! Run: `cargo bench --bench store_layouts [-- --json OUT.json]`
 //! (plain `main()`, prints a table; `--json` additionally writes the
-//! machine-readable form CI's perf-smoke job folds into `BENCH_5.json`
+//! machine-readable form CI's perf-smoke job folds into `BENCH_9.json`
 //! — schema in docs/BENCHMARKS.md).
 
 use lamc::bench_util::{bench, json_arg_path, Table};
 use lamc::matrix::{DenseMatrix, Matrix};
 use lamc::rng::Xoshiro256;
-use lamc::store::{pack_matrix, pack_matrix_tiled, StoreReader};
+use lamc::store::{pack_matrix, pack_matrix_tiled, pack_matrix_tiled_with_codec, Codec, StoreReader};
 
 fn main() {
     let rows = 2048usize;
@@ -24,8 +27,43 @@ fn main() {
     std::fs::create_dir_all(&dir).unwrap();
     let band_path = dir.join("m.lamc2");
     let tiled_path = dir.join("m.lamc3");
-    pack_matrix(&matrix, &band_path, 256).unwrap();
-    pack_matrix_tiled(&matrix, &tiled_path, 256, 128).unwrap();
+    let tiled_lz_path = dir.join("m_lz.lamc3");
+    let band_summary = pack_matrix(&matrix, &band_path, 256).unwrap();
+    let tiled_summary = pack_matrix_tiled(&matrix, &tiled_path, 256, 128).unwrap();
+    let lz_summary =
+        pack_matrix_tiled_with_codec(&matrix, &tiled_lz_path, 256, 128, Codec::ShuffleLz).unwrap();
+
+    // On-disk compression: randn f32 payloads compress on the exponent
+    // byte plane alone, so the shuffle-lz store must be strictly smaller.
+    let mut store_records: Vec<String> = Vec::new();
+    println!("on-disk payload bytes (raw -> stored):");
+    for (name, s) in
+        [("lamc2", &band_summary), ("lamc3", &tiled_summary), ("lamc3+lz", &lz_summary)]
+    {
+        let ratio = s.stored_payload_bytes as f64 / s.raw_payload_bytes.max(1) as f64;
+        println!(
+            "  {name:9} codec={:10} {} -> {} bytes ({:.1}%)",
+            s.codec.as_str(),
+            s.raw_payload_bytes,
+            s.stored_payload_bytes,
+            ratio * 100.0
+        );
+        store_records.push(format!(
+            "    {{\"store\": \"{name}\", \"codec\": \"{}\", \"raw_payload_bytes\": {}, \"stored_payload_bytes\": {}, \"on_disk_ratio\": {ratio:.4}}}",
+            s.codec.as_str(),
+            s.raw_payload_bytes,
+            s.stored_payload_bytes
+        ));
+    }
+    assert!(
+        lz_summary.stored_payload_bytes < tiled_summary.stored_payload_bytes,
+        "shuffle-lz stores fewer payload bytes than raw tiles"
+    );
+    assert_eq!(
+        lz_summary.fingerprint, tiled_summary.fingerprint,
+        "content fingerprint is codec-invariant"
+    );
+    println!();
 
     // Caches off: the point is bytes touched, not cache residency.
     let shapes: [(&str, usize, usize); 3] = [
@@ -34,37 +72,72 @@ fn main() {
         ("col-heavy (1024 x 32)", 1024, 32),
     ];
 
-    let mut table = Table::new(&["access shape", "layout", "median", "payload bytes/gather"]);
+    let mut table = Table::new(&[
+        "access shape",
+        "layout",
+        "median",
+        "stored bytes/gather",
+        "decoded bytes/gather",
+    ]);
     let mut records: Vec<String> = Vec::new();
+    // (stored bytes/gather, gathered bytes) per layout on the col-heavy
+    // shape, for the compression acceptance check below.
+    let mut col_heavy: Vec<(&str, u64, u64)> = Vec::new();
     for (name, nr, nc) in shapes {
-        for (layout, path) in [("lamc2", &band_path), ("lamc3", &tiled_path)] {
+        for (layout, path) in
+            [("lamc2", &band_path), ("lamc3", &tiled_path), ("lamc3+lz", &tiled_lz_path)]
+        {
             let reader = StoreReader::open_with_cache(path, 0).unwrap();
             let mut qrng = Xoshiro256::seed_from(7);
+            let mut gathered = 0u64;
             let t = bench(1, 5, || {
                 let r = qrng.sample_indices(rows, nr);
                 let c = qrng.sample_indices(cols, nc);
-                std::hint::black_box(reader.tile(&r, &c).unwrap());
+                let tile = reader.tile(&r, &c).unwrap();
+                gathered = gathered.wrapping_add(tile.data().len() as u64 * 4);
+                std::hint::black_box(tile);
             });
-            let per_gather = reader.bytes_read() / reader.tiles_served().max(1);
+            let gathers = reader.tiles_served().max(1);
+            let per_gather = reader.bytes_read() / gathers;
+            let decoded_per_gather = reader.bytes_decoded() / gathers;
+            if name.starts_with("col-heavy") {
+                col_heavy.push((layout, per_gather, gathered));
+            }
             table.row(&[
                 name.to_string(),
                 layout.to_string(),
                 t.format(),
                 format!("{per_gather}"),
+                format!("{decoded_per_gather}"),
             ]);
             records.push(format!(
-                "    {{\"shape\": \"{name}\", \"layout\": \"{layout}\", \"median_s\": {:.6}, \"payload_bytes_per_gather\": {per_gather}}}",
+                "    {{\"shape\": \"{name}\", \"layout\": \"{layout}\", \"median_s\": {:.6}, \"payload_bytes_per_gather\": {per_gather}, \"decoded_bytes_per_gather\": {decoded_per_gather}}}",
                 t.median_s
             ));
         }
     }
     println!("{}", table.render());
-    println!("(lamc3 wins where the access is narrower than the matrix; lamc2 wins\n row-heavy shapes by avoiding per-tile seek/decode overhead)");
+    println!("(lamc3 wins where the access is narrower than the matrix; lamc2 wins\n row-heavy shapes by avoiding per-tile seek/decode overhead; shuffle-lz\n trades decode CPU for strictly fewer stored bytes off disk)");
+
+    // Acceptance: on the col-heavy shape the compressed tiled store
+    // reads strictly fewer stored bytes than its codec=none twin while
+    // gathering the exact same bytes (same seeded query stream).
+    let none = col_heavy.iter().find(|(l, _, _)| *l == "lamc3").unwrap();
+    let lz = col_heavy.iter().find(|(l, _, _)| *l == "lamc3+lz").unwrap();
+    assert!(
+        lz.1 < none.1,
+        "col-heavy: shuffle-lz reads {} B/gather, codec=none {} B/gather",
+        lz.1,
+        none.1
+    );
+    assert_eq!(lz.2, none.2, "col-heavy: identical bytes gathered across codecs");
 
     if let Some(json_out) = json_arg_path() {
         let json = format!(
             "{{\n  \"bench\": \"store_layouts\",\n  \"rows\": {rows},\n  \"cols\": {cols},\n  \
-             \"band_store\": \"256-row bands\",\n  \"tiled_store\": \"256x128 tiles\",\n  \"gathers\": [\n{}\n  ]\n}}\n",
+             \"band_store\": \"256-row bands\",\n  \"tiled_store\": \"256x128 tiles\",\n  \
+             \"stores\": [\n{}\n  ],\n  \"gathers\": [\n{}\n  ]\n}}\n",
+            store_records.join(",\n"),
             records.join(",\n")
         );
         std::fs::write(&json_out, json).unwrap();

@@ -155,6 +155,10 @@ pub struct Stats {
     /// only on the `StoreReader` itself, invisible through the service.
     pub store_chunks_read: AtomicU64,
     pub store_bytes_read: AtomicU64,
+    /// Uncompressed bytes produced by chunk decodes. Equals
+    /// `store_bytes_read` on uncompressed stores; the gap is the I/O
+    /// the payload codec saved.
+    pub store_bytes_decoded: AtomicU64,
     pub store_cache_hits: AtomicU64,
     /// Background-prefetch telemetry (see `store::prefetch`): chunks
     /// pulled ahead of the compute wave, chunk requests answered by a
@@ -187,6 +191,7 @@ impl Stats {
     pub fn add_io(&self, io: &crate::store::IoCounters) {
         self.store_chunks_read.fetch_add(io.chunks_read, Ordering::Relaxed);
         self.store_bytes_read.fetch_add(io.bytes_read, Ordering::Relaxed);
+        self.store_bytes_decoded.fetch_add(io.bytes_decoded, Ordering::Relaxed);
         self.store_cache_hits.fetch_add(io.cache_hits, Ordering::Relaxed);
         self.prefetch_issued.fetch_add(io.prefetch_issued, Ordering::Relaxed);
         self.prefetch_hits.fetch_add(io.prefetch_hits, Ordering::Relaxed);
@@ -206,6 +211,7 @@ impl Stats {
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             store_chunks_read: self.store_chunks_read.load(Ordering::Relaxed),
             store_bytes_read: self.store_bytes_read.load(Ordering::Relaxed),
+            store_bytes_decoded: self.store_bytes_decoded.load(Ordering::Relaxed),
             store_cache_hits: self.store_cache_hits.load(Ordering::Relaxed),
             prefetch_issued: self.prefetch_issued.load(Ordering::Relaxed),
             prefetch_hits: self.prefetch_hits.load(Ordering::Relaxed),
@@ -232,6 +238,7 @@ pub struct StatsSnapshot {
     pub cache_misses: u64,
     pub store_chunks_read: u64,
     pub store_bytes_read: u64,
+    pub store_bytes_decoded: u64,
     pub store_cache_hits: u64,
     pub prefetch_issued: u64,
     pub prefetch_hits: u64,
@@ -264,6 +271,7 @@ impl StatsSnapshot {
             cache_misses: self.cache_misses + other.cache_misses,
             store_chunks_read: self.store_chunks_read + other.store_chunks_read,
             store_bytes_read: self.store_bytes_read + other.store_bytes_read,
+            store_bytes_decoded: self.store_bytes_decoded + other.store_bytes_decoded,
             store_cache_hits: self.store_cache_hits + other.store_cache_hits,
             prefetch_issued: self.prefetch_issued + other.prefetch_issued,
             prefetch_hits: self.prefetch_hits + other.prefetch_hits,
@@ -334,6 +342,7 @@ mod tests {
         s.add_io(&crate::store::IoCounters {
             chunks_read: 4,
             bytes_read: 1024,
+            bytes_decoded: 2048,
             cache_hits: 7,
             prefetch_issued: 3,
             prefetch_hits: 2,
@@ -342,6 +351,7 @@ mod tests {
         let snap = s.snapshot();
         assert_eq!(snap.store_chunks_read, 4);
         assert_eq!(snap.store_bytes_read, 1024);
+        assert_eq!(snap.store_bytes_decoded, 2048);
         assert_eq!(snap.store_cache_hits, 7);
         assert_eq!(snap.prefetch_issued, 3);
         assert_eq!(snap.prefetch_hits, 2);
@@ -368,6 +378,7 @@ mod tests {
             cache_misses: 13,
             store_chunks_read: 17,
             store_bytes_read: 19,
+            store_bytes_decoded: 97,
             store_cache_hits: 23,
             prefetch_issued: 29,
             prefetch_hits: 31,
@@ -386,6 +397,7 @@ mod tests {
             cache_misses: 61,
             store_chunks_read: 67,
             store_bytes_read: 71,
+            store_bytes_decoded: 101,
             store_cache_hits: 73,
             prefetch_issued: 79,
             prefetch_hits: 83,
@@ -404,6 +416,7 @@ mod tests {
         assert_eq!(m.cache_misses, 74);
         assert_eq!(m.store_chunks_read, 84);
         assert_eq!(m.store_bytes_read, 90);
+        assert_eq!(m.store_bytes_decoded, 198);
         assert_eq!(m.store_cache_hits, 96);
         assert_eq!(m.prefetch_issued, 108);
         assert_eq!(m.prefetch_hits, 114);

@@ -11,16 +11,35 @@ use crate::matrix::DenseMatrix;
 /// disjoint slices of C without synchronization.
 const BAND: usize = 64;
 
+/// Parse a `LAMC_THREADS` value: a positive integer (0 clamps to 1),
+/// `None` for anything unparsable.
+fn parse_threads(raw: &str) -> Option<usize> {
+    raw.trim().parse::<usize>().ok().map(|n| n.max(1))
+}
+
 /// Number of worker threads for the linalg layer. Defaults to available
 /// parallelism, clamped to 8 (diminishing returns on this memory-bound
 /// kernel beyond that), overridable via `LAMC_THREADS`.
+///
+/// Resolved **once** per process: this sits on the per-GEMM hot path,
+/// where re-reading and re-parsing the environment on every call was
+/// measurable overhead — and an unparsable value was silently ignored.
+/// Now it warns once (same pattern as `LAMC_LOG`) and falls back to
+/// auto.
 pub fn matmul_threads() -> usize {
-    if let Ok(s) = std::env::var("LAMC_THREADS") {
-        if let Ok(n) = s.parse::<usize>() {
-            return n.max(1);
+    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THREADS.get_or_init(|| {
+        if let Ok(s) = std::env::var("LAMC_THREADS") {
+            if let Some(n) = parse_threads(&s) {
+                return n;
+            }
+            // Init runs once, so this warning cannot repeat.
+            eprintln!(
+                "lamc: unrecognized LAMC_THREADS='{s}' (want a positive integer); using auto"
+            );
         }
-    }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+    })
 }
 
 /// Single-band kernel: C[band] += A[band] · B with a K-blocked i-k-j
@@ -91,9 +110,12 @@ pub fn matmul(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
 
 /// `C = Aᵀ · B` without materializing Aᵀ (A is m×k ⇒ C is k×n, B m×n).
 pub fn matmul_at_b(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
+    matmul_at_b_with_threads(a, b, matmul_threads())
+}
+
+fn matmul_at_b_with_threads(a: &DenseMatrix, b: &DenseMatrix, threads: usize) -> DenseMatrix {
     assert_eq!(a.rows(), b.rows(), "matmul_at_b shape mismatch");
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
-    let threads = matmul_threads();
     if m * k * n < 64 * 64 * 64 || threads == 1 {
         let mut c = DenseMatrix::zeros(k, n);
         for i in 0..m {
@@ -119,12 +141,12 @@ pub fn matmul_at_b(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
         .map(|lo| (lo, (lo + BAND * 4).min(m)))
         .collect();
     let next = std::sync::atomic::AtomicUsize::new(0);
-    let partials = std::sync::Mutex::new(DenseMatrix::zeros(k, n));
+    let locals = std::sync::Mutex::new(Vec::with_capacity(threads));
     std::thread::scope(|scope| {
         for _ in 0..threads.min(bands.len()) {
             let bands = &bands;
             let next = &next;
-            let partials = &partials;
+            let locals = &locals;
             scope.spawn(move || {
                 let mut local = DenseMatrix::zeros(k, n);
                 loop {
@@ -147,14 +169,44 @@ pub fn matmul_at_b(a: &DenseMatrix, b: &DenseMatrix) -> DenseMatrix {
                         }
                     }
                 }
-                let mut guard = partials.lock().unwrap();
-                for (dst, src) in guard.data_mut().iter_mut().zip(local.data()) {
-                    *dst += src;
+                // One push per thread — the lock is held for a Vec
+                // append, never for a k×n add.
+                locals.lock().unwrap().push(local);
+            });
+        }
+    });
+    // Reduce the per-thread partials over disjoint row stripes of C in
+    // parallel, instead of the old serial element-wise adds under one
+    // mutex (each thread blocked on the lock while another added its
+    // whole k×n accumulator).
+    let locals = locals.into_inner().unwrap();
+    let mut c = DenseMatrix::zeros(k, n);
+    let reducers = threads.min(locals.len().max(1)).min(k.max(1));
+    let stripe = k.div_ceil(reducers.max(1));
+    let c_ptr = SendPtr(c.data_mut().as_mut_ptr());
+    std::thread::scope(|scope| {
+        for t in 0..reducers {
+            let locals = &locals;
+            let c_ptr = &c_ptr;
+            scope.spawn(move || {
+                let lo = t * stripe;
+                let hi = ((t + 1) * stripe).min(k);
+                if lo >= hi {
+                    return;
+                }
+                // SAFETY: stripes are disjoint row ranges of C.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut(c_ptr.0.add(lo * n), (hi - lo) * n)
+                };
+                for local in locals {
+                    for (d, s) in dst.iter_mut().zip(&local.data()[lo * n..hi * n]) {
+                        *d += s;
+                    }
                 }
             });
         }
     });
-    partials.into_inner().unwrap()
+    c
 }
 
 /// Raw mutable pointer wrapper that is Sync for scoped disjoint writes.
@@ -222,6 +274,42 @@ mod tests {
         let fast = matmul_at_b(&a, &b);
         let slow = matmul(&a.transpose(), &b);
         assert!(fast.max_abs_diff(&slow) < 1e-2);
+    }
+
+    #[test]
+    fn at_b_striped_reduction_matches_oracle_at_every_thread_count() {
+        // The parallel stripe reduction must agree with the transpose-
+        // then-mul oracle whatever the pool size — including counts
+        // that leave reducer stripes empty (threads > k).
+        let mut rng = Xoshiro256::seed_from(46);
+        let a = DenseMatrix::randn(700, 21, &mut rng);
+        let b = DenseMatrix::randn(700, 17, &mut rng);
+        let slow = matmul(&a.transpose(), &b);
+        for threads in [1, 4, 8] {
+            let fast = matmul_at_b_with_threads(&a, &b, threads);
+            assert!(
+                fast.max_abs_diff(&slow) < 1e-2,
+                "threads={threads} diverged from the oracle"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_threads_accepts_integers_and_rejects_junk() {
+        assert_eq!(parse_threads("4"), Some(4));
+        assert_eq!(parse_threads(" 6 "), Some(6), "surrounding whitespace is fine");
+        assert_eq!(parse_threads("0"), Some(1), "zero clamps to one thread");
+        assert_eq!(parse_threads("banana"), None);
+        assert_eq!(parse_threads("-2"), None);
+        assert_eq!(parse_threads(""), None);
+    }
+
+    #[test]
+    fn matmul_threads_is_cached_and_positive() {
+        let first = matmul_threads();
+        assert!(first >= 1);
+        // OnceLock: the resolved count never changes within a process.
+        assert_eq!(matmul_threads(), first);
     }
 
     #[test]

@@ -78,13 +78,14 @@ USAGE:
                 [--tau F] [--no-runtime] [--verbose]
   lamc plan     --rows N --cols N [--p-thresh F] [--row-frac F] [--col-frac F]
   lamc pack     (--dataset NAME [--rows N] [--seed N] | --input FILE.lamc|.mtx)
-                --output FILE [--chunk-rows N]
+                --output FILE [--chunk-rows N] [--codec none|shuffle-lz]
                 [--chunk-cols N|auto (tiled LAMC3; auto = planner dry-run psi)]
   lamc ingest   --output FILE --cols N [--format dense|sparse] [--chunk-rows N]
                 [--chunk-cols N|auto] [--rows-hint N (required by auto)]
-                (rows on stdin; see docs/STORE.md)
+                [--codec none|shuffle-lz] (rows on stdin; see docs/STORE.md)
   lamc repack   --store FILE --output FILE [--chunk-rows N]
                 [--chunk-cols N|0|auto (0 = row-band)] [--cache-mb N]
+                [--codec none|shuffle-lz (recompress or decompress)]
   lamc inspect  --store FILE [--verify]
   lamc shard    --store FILE --output-dir DIR --shards N [--stem NAME]
   lamc serve    [--addr HOST:PORT] [--runners N] [--queue N] [--cache-mb N]
@@ -185,6 +186,15 @@ fn print_summary(s: &StoreSummary) {
     print_store_description(
         s.tiled, s.layout, s.rows, s.cols, s.nnz, s.chunks, s.chunk_rows, s.chunk_cols,
     );
+    println!("codec       : {}", s.codec.as_str());
+    if s.codec != lamc::store::Codec::None && s.raw_payload_bytes > 0 {
+        println!(
+            "payload     : {} -> {} bytes stored ({:.1}% of raw)",
+            s.raw_payload_bytes,
+            s.stored_payload_bytes,
+            100.0 * s.stored_payload_bytes as f64 / s.raw_payload_bytes as f64
+        );
+    }
     println!("fingerprint : {:016x}", s.fingerprint);
     println!("file size   : {} bytes", s.file_bytes);
 }
@@ -211,8 +221,27 @@ fn resolve_chunk_cols(args: &Args, rows: usize, cols: usize) -> Result<usize> {
     }
 }
 
+/// Resolve a `--codec` value (absent = uncompressed payloads).
+fn resolve_codec(args: &Args) -> Result<lamc::store::Codec> {
+    match args.get("codec") {
+        None => Ok(lamc::store::Codec::None),
+        Some(s) => lamc::store::Codec::parse(s).ok_or_else(|| {
+            lamc::cli::UsageError(format!("unknown --codec '{s}' (want none|shuffle-lz)")).into()
+        }),
+    }
+}
+
 fn cmd_pack(args: &Args) -> Result<()> {
-    args.expect_flags(&["dataset", "input", "output", "rows", "seed", "chunk-rows", "chunk-cols"])?;
+    args.expect_flags(&[
+        "dataset",
+        "input",
+        "output",
+        "rows",
+        "seed",
+        "chunk-rows",
+        "chunk-cols",
+        "codec",
+    ])?;
     let output = PathBuf::from(args.get("output").context("--output required")?);
     let chunk_rows = args.get_usize("chunk-rows", DEFAULT_CHUNK_ROWS)?;
     let matrix = match (args.get("dataset"), args.get("input")) {
@@ -239,10 +268,11 @@ fn cmd_pack(args: &Args) -> Result<()> {
         }
     };
     let chunk_cols = resolve_chunk_cols(args, matrix.rows(), matrix.cols())?;
+    let codec = resolve_codec(args)?;
     let summary = if chunk_cols > 0 {
-        lamc::store::pack_matrix_tiled(&matrix, &output, chunk_rows, chunk_cols)?
+        lamc::store::pack_matrix_tiled_with_codec(&matrix, &output, chunk_rows, chunk_cols, codec)?
     } else {
-        lamc::store::pack_matrix(&matrix, &output, chunk_rows)?
+        lamc::store::pack_matrix_with_codec(&matrix, &output, chunk_rows, codec)?
     };
     print_summary(&summary);
     Ok(())
@@ -253,7 +283,7 @@ fn cmd_pack(args: &Args) -> Result<()> {
 /// when the source is row-band) a row-band one. Band/tile extents
 /// default to the source's.
 fn cmd_repack(args: &Args) -> Result<()> {
-    args.expect_flags(&["store", "output", "chunk-rows", "chunk-cols", "cache-mb"])?;
+    args.expect_flags(&["store", "output", "chunk-rows", "chunk-cols", "cache-mb", "codec"])?;
     let store = PathBuf::from(args.get("store").context("--store required")?);
     let output = PathBuf::from(args.get("output").context("--output required")?);
     let cache_budget = args.get_usize("cache-mb", 0)? << 20;
@@ -274,7 +304,12 @@ fn cmd_repack(args: &Args) -> Result<()> {
         None if h.is_tiled() => Some(h.chunk_cols),
         None => None,
     };
-    let summary = lamc::store::repack_reader(&reader, &output, chunk_rows, chunk_cols)?;
+    // Like the geometry flags, --codec defaults to the source's.
+    let codec = match args.get("codec") {
+        None => h.codec,
+        Some(_) => resolve_codec(args)?,
+    };
+    let summary = lamc::store::repack_reader(&reader, &output, chunk_rows, chunk_cols, codec)?;
     print_summary(&summary);
     println!(
         "source      : {} chunks read, {} payload bytes streamed",
@@ -290,7 +325,7 @@ fn cmd_repack(args: &Args) -> Result<()> {
 /// skipped. This is the out-of-core ingest path: the matrix is never
 /// resident — only the current row band is.
 fn cmd_ingest(args: &Args) -> Result<()> {
-    args.expect_flags(&["output", "cols", "format", "chunk-rows", "chunk-cols", "rows-hint"])?;
+    args.expect_flags(&["output", "cols", "format", "chunk-rows", "chunk-cols", "rows-hint", "codec"])?;
     let output = PathBuf::from(args.get("output").context("--output required")?);
     let cols = args.get_usize("cols", 0)?;
     anyhow::ensure!(cols > 0, "--cols required (row width is fixed up front)");
@@ -320,6 +355,7 @@ fn cmd_ingest(args: &Args) -> Result<()> {
     } else {
         ChunkWriter::create(&output, layout, cols, chunk_rows)?
     };
+    writer.set_codec(resolve_codec(args)?);
     let stdin = std::io::stdin();
     let mut dense_row: Vec<f32> = Vec::with_capacity(cols);
     let mut sparse_row: Vec<(u32, f32)> = Vec::new();
@@ -367,6 +403,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     if h.is_tiled() {
         println!("grid        : {} x {} tile grid", h.n_row_bands(), h.n_col_bands());
     }
+    println!("codec       : {}", h.codec.as_str());
     println!("fingerprint : {:016x}", h.fingerprint);
     // What `--chunk-cols auto` would pick for these dims, and whether
     // this store's tiles already align with the planner's column spans.
@@ -382,8 +419,8 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         reader.verify()?;
         let io = reader.io_counters();
         println!(
-            "verify      : OK ({} chunks, {} payload bytes checksummed)",
-            io.chunks_read, io.bytes_read
+            "verify      : OK ({} chunks, {} payload bytes checksummed, {} bytes decoded)",
+            io.chunks_read, io.bytes_read, io.bytes_decoded
         );
         println!(
             "io counters : cache_hits={} prefetch_issued={} prefetch_hits={} prefetch_wasted_bytes={}",

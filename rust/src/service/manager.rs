@@ -419,6 +419,7 @@ impl ShardSet {
             let d = band.reader.take_io_delta();
             total.chunks_read += d.chunks_read;
             total.bytes_read += d.bytes_read;
+            total.bytes_decoded += d.bytes_decoded;
             total.cache_hits += d.cache_hits;
             total.prefetch_issued += d.prefetch_issued;
             total.prefetch_hits += d.prefetch_hits;
@@ -907,6 +908,7 @@ fn execute_spec(inner: &Inner, spec: &JobSpec, trace: Trace) -> Result<(Arc<JobO
     inner.stats.add_io(&crate::store::IoCounters {
         chunks_read: s.store_chunks_read,
         bytes_read: s.store_bytes_read,
+        bytes_decoded: s.store_bytes_decoded,
         cache_hits: s.store_cache_hits,
         prefetch_issued: s.prefetch_issued,
         prefetch_hits: s.prefetch_hits,

@@ -301,7 +301,7 @@ fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> R
                 "OK jobs_queued={queued} jobs_running={running} jobs_done={done} jobs_failed={failed} \
                  cache_hits={} cache_misses={} cache_entries={} cache_bytes={} cache_capacity_bytes={} \
                  cache_disk_hits={} blocks_total={} blocks_native={} blocks_pjrt={} matrices={} \
-                 store_chunks_read={} store_bytes_read={} store_cache_hits={} \
+                 store_chunks_read={} store_bytes_read={} store_bytes_decoded={} store_cache_hits={} \
                  prefetch_issued={} prefetch_hits={} prefetch_wasted_bytes={} \
                  gather_s={:.6} exec_s={:.6} merge_s={:.6} \
                  hist_gather={} hist_exec={} hist_merge={} hist_queue_wait={}\n",
@@ -317,6 +317,7 @@ fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> R
                 manager.matrix_names().len(),
                 snap.store_chunks_read,
                 snap.store_bytes_read,
+                snap.store_bytes_decoded,
                 snap.store_cache_hits,
                 snap.prefetch_issued,
                 snap.prefetch_hits,
@@ -548,7 +549,8 @@ fn worker_metrics(manager: &ServiceManager) -> protocol::MetricsText {
         .counter("lamc_blocks_pjrt_total", snap.blocks_pjrt, "Block jobs executed on the PJRT route.")
         .counter("lamc_pjrt_fallbacks_total", snap.pjrt_fallbacks, "PJRT failures that fell back to the native route.")
         .counter("lamc_store_chunks_read_total", snap.store_chunks_read, "Store chunks decoded off disk.")
-        .counter("lamc_store_bytes_read_total", snap.store_bytes_read, "Store payload bytes read off disk.")
+        .counter("lamc_store_bytes_read_total", snap.store_bytes_read, "Store payload bytes read off disk (stored, post-codec).")
+        .counter("lamc_store_bytes_decoded_total", snap.store_bytes_decoded, "Uncompressed payload bytes produced by chunk decodes.")
         .counter("lamc_store_cache_hits_total", snap.store_cache_hits, "Decoded-chunk cache hits.")
         .counter("lamc_prefetch_issued_total", snap.prefetch_issued, "Chunks pulled ahead of the compute wave.")
         .counter("lamc_prefetch_hits_total", snap.prefetch_hits, "Chunk reads answered by a prefetched chunk.")

@@ -665,6 +665,7 @@ fn parse_stats_snapshot(map: &std::collections::BTreeMap<String, String>) -> Sta
         cache_misses: u("cache_misses"),
         store_chunks_read: u("store_chunks_read"),
         store_bytes_read: u("store_bytes_read"),
+        store_bytes_decoded: u("store_bytes_decoded"),
         store_cache_hits: u("store_cache_hits"),
         prefetch_issued: u("prefetch_issued"),
         prefetch_hits: u("prefetch_hits"),
@@ -948,7 +949,7 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
                 "OK jobs_queued={queued} jobs_running={running} jobs_done={done} jobs_failed={failed} \
                  cache_hits={} cache_misses={} cache_entries={} cache_bytes={} cache_capacity_bytes={} \
                  cache_disk_hits={} blocks_total={} blocks_native={} blocks_pjrt={} matrices={} \
-                 store_chunks_read={} store_bytes_read={} store_cache_hits={} \
+                 store_chunks_read={} store_bytes_read={} store_bytes_decoded={} store_cache_hits={} \
                  prefetch_issued={} prefetch_hits={} prefetch_wasted_bytes={} \
                  gather_s={:.6} exec_s={:.6} merge_s={:.6} \
                  hist_gather={} hist_exec={} hist_merge={} hist_queue_wait={} \
@@ -965,6 +966,7 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
                 state.router.topo.len(),
                 snap.store_chunks_read,
                 snap.store_bytes_read,
+                snap.store_bytes_decoded,
                 snap.store_cache_hits,
                 snap.prefetch_issued,
                 snap.prefetch_hits,
@@ -1113,6 +1115,11 @@ fn router_metrics(state: &RouterState) -> protocol::MetricsText {
         .counter("lamc_blocks_pjrt_total", snap.blocks_pjrt, "Block jobs run on the PJRT backend.")
         .counter("lamc_store_chunks_read_total", snap.store_chunks_read, "Store chunks read across the fleet.")
         .counter("lamc_store_bytes_read_total", snap.store_bytes_read, "Store bytes read across the fleet.")
+        .counter(
+            "lamc_store_bytes_decoded_total",
+            snap.store_bytes_decoded,
+            "Uncompressed bytes decoded from store chunks across the fleet.",
+        )
         .counter(
             "lamc_store_cache_hits_total",
             snap.store_cache_hits,

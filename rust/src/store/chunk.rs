@@ -44,11 +44,13 @@ use crate::cache::ByteLru;
 use crate::matrix::{CsrMatrix, DenseMatrix, Matrix};
 use crate::partition::SamplingRound;
 
+use super::codec::{self, Codec};
 use super::format::{
     checksum_bytes, decode_footer, encode_footer, store_fingerprint, ChunkMeta, Layout,
     StoreError, StoreHeader, DEFAULT_CHUNK_ROWS, FOOTER_MAGIC, FOOTER_MAGIC_TILED, MAGIC,
-    MAGIC_TILED, TRAILER_BYTES, VERSION, VERSION_TILED,
+    MAGIC_TILED, TRAILER_BYTES, VERSION, VERSION_CODEC, VERSION_TILED, VERSION_TILED_CODEC,
 };
+use super::mmap::Mmap;
 use super::prefetch::{plan_chunks, Prefetcher};
 
 /// Default byte budget for the decoded-chunk cache of [`StoreReader::open`].
@@ -77,6 +79,14 @@ pub struct StoreSummary {
     pub fingerprint: u64,
     /// Total file size, footer included.
     pub file_bytes: u64,
+    /// Payload codec the writer was configured with.
+    pub codec: Codec,
+    /// Uncompressed payload bytes across all chunks (equals the stored
+    /// payload bytes when `codec` is [`Codec::None`]) — the numerator
+    /// of the on-disk compression ratio.
+    pub raw_payload_bytes: u64,
+    /// Stored (possibly compressed) payload bytes across all chunks.
+    pub stored_payload_bytes: u64,
 }
 
 /// Streaming row-append writer. See the module docs for the protocol.
@@ -102,6 +112,16 @@ pub struct ChunkWriter {
     /// `repack` carries the source fingerprint forward so re-chunking
     /// the same content never changes its identity.
     fingerprint_override: Option<u64>,
+    /// Payload codec. [`Codec::None`] writes the pre-codec version-1/2
+    /// footer byte-for-byte; anything else writes revision 3/4.
+    codec: Codec,
+    /// Checksums of the **uncompressed** payloads, in chunk order — the
+    /// fingerprint chain, kept separate from the per-entry checksums
+    /// (which cover the stored bytes) so the fingerprint is identical
+    /// under every codec.
+    raw_checksums: Vec<u64>,
+    /// Uncompressed payload bytes sealed so far.
+    raw_payload_bytes: u64,
 }
 
 impl ChunkWriter {
@@ -155,7 +175,21 @@ impl ChunkWriter {
             total_rows: 0,
             total_nnz: 0,
             fingerprint_override: None,
+            codec: Codec::None,
+            raw_checksums: Vec::new(),
+            raw_payload_bytes: 0,
         })
+    }
+
+    /// Compress chunk payloads with `codec` from here on. Call before
+    /// the first row; per chunk, the smaller of the raw and encoded
+    /// forms is stored (an incompressible chunk stays raw and is tagged
+    /// [`Codec::None`] individually). The content fingerprint is always
+    /// computed over uncompressed payloads, so the codec choice never
+    /// changes a store's identity.
+    pub fn set_codec(&mut self, codec: Codec) {
+        debug_assert!(self.index.is_empty(), "set_codec before sealing any band");
+        self.codec = codec;
     }
 
     /// Create with the default band height (row-band layout).
@@ -306,17 +340,42 @@ impl ChunkWriter {
             Layout::Csr => self.encode_csr_tiles(tile_width),
         };
         for (col_lo, tile_cols, payload, chunk_nnz) in tiles {
+            // Fingerprint chain: always over the uncompressed payload.
+            let raw_checksum = checksum_bytes(&payload);
+            let raw_len = payload.len() as u64;
+            self.raw_checksums.push(raw_checksum);
+            self.raw_payload_bytes += raw_len;
+            // Store-smaller-of: keep the encoded form only when it is
+            // strictly smaller, else store raw and tag the chunk None.
+            let (stored, chunk_codec) = if self.codec == Codec::None {
+                (payload, Codec::None)
+            } else {
+                let encoded = codec::encode(self.codec, &payload);
+                if encoded.len() < payload.len() {
+                    (encoded, self.codec)
+                } else {
+                    (payload, Codec::None)
+                }
+            };
             let meta = ChunkMeta {
                 offset: self.offset,
-                len: payload.len() as u64,
+                len: stored.len() as u64,
                 row_lo,
                 rows: self.rows_in_chunk,
                 col_lo,
                 cols: tile_cols,
                 nnz: chunk_nnz,
-                checksum: checksum_bytes(&payload),
+                // Entry checksum covers the stored bytes — what the
+                // read path actually verifies off disk.
+                checksum: if chunk_codec == Codec::None {
+                    raw_checksum
+                } else {
+                    checksum_bytes(&stored)
+                },
+                codec: chunk_codec,
+                raw_len,
             };
-            self.file.write_all(&payload)?;
+            self.file.write_all(&stored)?;
             self.offset += meta.len;
             self.index.push(meta);
         }
@@ -338,18 +397,28 @@ impl ChunkWriter {
     /// Seal any partial band, write the footer, and fsync the file.
     pub fn finish(mut self) -> Result<StoreSummary> {
         self.seal_band()?;
+        // Fingerprint over the *uncompressed* chunk checksums: the same
+        // matrix fingerprints identically under every codec, so a
+        // recompressed store keeps hitting the same result-cache
+        // entries (with codec=none the two checksum chains coincide).
         let fingerprint = self.fingerprint_override.unwrap_or_else(|| {
             store_fingerprint(
                 self.layout,
                 self.total_rows,
                 self.cols,
                 self.total_nnz,
-                self.index.iter().map(|e| e.checksum),
+                self.raw_checksums.iter().copied(),
             )
         });
         let tiled = self.chunk_cols.is_some();
+        let version = match (tiled, self.codec) {
+            (false, Codec::None) => VERSION,
+            (true, Codec::None) => VERSION_TILED,
+            (false, _) => VERSION_CODEC,
+            (true, _) => VERSION_TILED_CODEC,
+        };
         let header = StoreHeader {
-            version: if tiled { VERSION_TILED } else { VERSION },
+            version,
             layout: self.layout,
             rows: self.total_rows,
             cols: self.cols,
@@ -358,6 +427,7 @@ impl ChunkWriter {
             chunk_cols: self.chunk_cols.unwrap_or(self.cols),
             n_chunks: self.index.len(),
             fingerprint,
+            codec: self.codec,
         };
         let footer = encode_footer(&header, &self.index);
         self.file.write_all(&footer)?;
@@ -378,6 +448,9 @@ impl ChunkWriter {
             tiled,
             fingerprint,
             file_bytes: self.offset + footer.len() as u64 + TRAILER_BYTES,
+            codec: self.codec,
+            raw_payload_bytes: self.raw_payload_bytes,
+            stored_payload_bytes: self.offset - MAGIC.len() as u64,
         })
     }
 }
@@ -385,7 +458,18 @@ impl ChunkWriter {
 /// Pack an in-memory matrix into a row-band store file (the `lamc pack`
 /// core).
 pub fn pack_matrix(matrix: &Matrix, path: &Path, chunk_rows: usize) -> Result<StoreSummary> {
-    let writer = ChunkWriter::create(path, layout_of(matrix), matrix.cols(), chunk_rows)?;
+    pack_matrix_with_codec(matrix, path, chunk_rows, Codec::None)
+}
+
+/// [`pack_matrix`] with an explicit payload codec.
+pub fn pack_matrix_with_codec(
+    matrix: &Matrix,
+    path: &Path,
+    chunk_rows: usize,
+    codec: Codec,
+) -> Result<StoreSummary> {
+    let mut writer = ChunkWriter::create(path, layout_of(matrix), matrix.cols(), chunk_rows)?;
+    writer.set_codec(codec);
     pack_into(matrix, writer)
 }
 
@@ -396,8 +480,20 @@ pub fn pack_matrix_tiled(
     chunk_rows: usize,
     chunk_cols: usize,
 ) -> Result<StoreSummary> {
-    let writer =
+    pack_matrix_tiled_with_codec(matrix, path, chunk_rows, chunk_cols, Codec::None)
+}
+
+/// [`pack_matrix_tiled`] with an explicit payload codec.
+pub fn pack_matrix_tiled_with_codec(
+    matrix: &Matrix,
+    path: &Path,
+    chunk_rows: usize,
+    chunk_cols: usize,
+    codec: Codec,
+) -> Result<StoreSummary> {
+    let mut writer =
         ChunkWriter::create_tiled(path, layout_of(matrix), matrix.cols(), chunk_rows, chunk_cols)?;
+    writer.set_codec(codec);
     pack_into(matrix, writer)
 }
 
@@ -429,14 +525,49 @@ fn pack_into(matrix: &Matrix, mut w: ChunkWriter) -> Result<StoreSummary> {
 
 /// One decoded chunk (a row band or a tile).
 pub(crate) enum DecodedChunk {
-    Dense { values: Vec<f32> },
-    Csr { indptr: Vec<u64>, indices: Vec<u32>, values: Vec<f32> },
+    Dense {
+        values: Vec<f32>,
+    },
+    /// Zero-copy dense chunk: a view straight into the reader's file
+    /// mapping. Only constructed for uncompressed dense payloads on
+    /// little-endian targets when the mapped bytes are 4-byte aligned
+    /// (the `f32` reinterpretation below needs both); the checksum was
+    /// verified against the mapped bytes before construction.
+    DenseMapped {
+        map: Arc<Mmap>,
+        byte_offset: usize,
+        n_values: usize,
+    },
+    Csr {
+        indptr: Vec<u64>,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    },
 }
 
 impl DecodedChunk {
+    /// The dense value slice, whichever variant backs it.
+    pub(crate) fn dense_values(&self) -> Option<&[f32]> {
+        match self {
+            DecodedChunk::Dense { values } => Some(values),
+            DecodedChunk::DenseMapped { map, byte_offset, n_values } => {
+                let bytes = &map.as_slice()[*byte_offset..*byte_offset + *n_values * 4];
+                debug_assert_eq!(bytes.as_ptr() as usize % 4, 0);
+                // Alignment and length were checked at construction;
+                // f32 LE == native layout (little-endian gate).
+                Some(unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const f32, *n_values) })
+            }
+            DecodedChunk::Csr { .. } => None,
+        }
+    }
+
+    /// Bytes the cache accounts this chunk at — the *logical* decoded
+    /// size, also for mapped chunks (residency there is the kernel's
+    /// page cache, but the budget must stay workload-proportional).
     pub(crate) fn resident_bytes(&self) -> usize {
         match self {
             DecodedChunk::Dense { values } => values.len() * 4,
+            DecodedChunk::DenseMapped { n_values, .. } => n_values * 4,
             DecodedChunk::Csr { indptr, indices, values } => {
                 indptr.len() * 8 + indices.len() * 4 + values.len() * 4
             }
@@ -455,8 +586,13 @@ impl DecodedChunk {
 pub struct IoCounters {
     /// Chunks read + decoded from disk (checksum-verified).
     pub chunks_read: u64,
-    /// Payload bytes read from disk.
+    /// **Stored** payload bytes read from disk — compressed size for
+    /// compressed chunks, so this is the number the codec shrinks.
     pub bytes_read: u64,
+    /// Uncompressed payload bytes those reads decoded into. Equal to
+    /// `bytes_read` on a codec=none store; the gap is the I/O the codec
+    /// saved.
+    pub bytes_decoded: u64,
     /// Chunk requests answered from the hot decoded-chunk cache.
     pub cache_hits: u64,
     /// Chunks the background prefetcher pulled into the prefetch cache.
@@ -475,6 +611,7 @@ impl IoCounters {
         IoCounters {
             chunks_read: self.chunks_read.saturating_sub(before.chunks_read),
             bytes_read: self.bytes_read.saturating_sub(before.bytes_read),
+            bytes_decoded: self.bytes_decoded.saturating_sub(before.bytes_decoded),
             cache_hits: self.cache_hits.saturating_sub(before.cache_hits),
             prefetch_issued: self.prefetch_issued.saturating_sub(before.prefetch_issued),
             prefetch_hits: self.prefetch_hits.saturating_sub(before.prefetch_hits),
@@ -511,9 +648,14 @@ pub(crate) struct ReaderShared {
     /// this reader partition the counter stream instead of each
     /// claiming the other's reads (aggregates stay exact).
     io_reported: Mutex<IoCounters>,
+    /// Whole-file read-only mapping, when the platform granted one.
+    /// `None` falls back to pread-into-buffers on the shared handle —
+    /// behaviorally identical, just with a copy.
+    pub(crate) mmap: Option<Arc<Mmap>>,
     // Telemetry: how much of the file the workload actually touched.
     pub(crate) chunks_read: AtomicU64,
     pub(crate) bytes_read: AtomicU64,
+    pub(crate) bytes_decoded: AtomicU64,
     pub(crate) cache_hits: AtomicU64,
     pub(crate) prefetch_issued: AtomicU64,
     pub(crate) prefetch_hits: AtomicU64,
@@ -521,7 +663,7 @@ pub(crate) struct ReaderShared {
 }
 
 impl ReaderShared {
-    fn new(hot_budget: usize, prefetch_budget: usize) -> Self {
+    fn new(hot_budget: usize, prefetch_budget: usize, mmap: Option<Arc<Mmap>>) -> Self {
         Self {
             hot: Mutex::new(ByteLru::new(hot_budget)),
             hot_budget,
@@ -531,8 +673,10 @@ impl ReaderShared {
             inflight: Mutex::new(HashSet::new()),
             inflight_done: Condvar::new(),
             io_reported: Mutex::new(IoCounters::default()),
+            mmap,
             chunks_read: AtomicU64::new(0),
             bytes_read: AtomicU64::new(0),
+            bytes_decoded: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             prefetch_issued: AtomicU64::new(0),
             prefetch_hits: AtomicU64::new(0),
@@ -589,10 +733,13 @@ impl StoreReader {
         }
         let mut magic = [0u8; 8];
         file.read_exact(&mut magic)?;
-        let magic_version = if &magic == MAGIC {
-            VERSION
+        // The leading magic pins the *geometry*, not the exact footer
+        // revision: LAMC2 covers versions 1 and 3 (row bands, without /
+        // with per-chunk codecs), LAMC3 covers 2 and 4 (tiled).
+        let magic_tiled = if &magic == MAGIC {
+            false
         } else if &magic == MAGIC_TILED {
-            VERSION_TILED
+            true
         } else {
             return Err(StoreError::NotAStore(path.to_path_buf()).into());
         };
@@ -618,8 +765,7 @@ impl StoreReader {
         // magic must be checked against the leading magic explicitly — a
         // LAMC2 file ending in the LAMC3 trailer (or vice versa) is
         // damage, not a valid store.
-        let want_footer_magic =
-            if magic_version == VERSION { FOOTER_MAGIC } else { FOOTER_MAGIC_TILED };
+        let want_footer_magic = if magic_tiled { FOOTER_MAGIC_TILED } else { FOOTER_MAGIC };
         if &trailer[16..24] != want_footer_magic {
             return Err(StoreError::Corrupt {
                 path: path.to_path_buf(),
@@ -650,23 +796,29 @@ impl StoreReader {
             .into());
         }
         let (header, index) = decode_footer(&footer, payload_end, path)?;
-        if header.version != magic_version {
+        if header.is_tiled() != magic_tiled {
             return Err(StoreError::Corrupt {
                 path: path.to_path_buf(),
                 detail: format!(
-                    "leading magic says version {magic_version}, footer says {}",
+                    "leading magic says {} geometry, footer version {} disagrees",
+                    if magic_tiled { "tiled" } else { "row-band" },
                     header.version
                 ),
             }
             .into());
         }
 
+        // Map the whole (now footer-validated) file once; chunk fetches
+        // slice it instead of seeking the shared handle. `None` (non-
+        // unix, mapping failure, LAMC_NO_MMAP=1) keeps the pread path.
+        let mmap = Mmap::map(&file, file_len as usize).map(Arc::new);
+
         Ok(Self {
             path: path.to_path_buf(),
             header,
             index: Arc::new(index),
             file: Mutex::new(file),
-            shared: Arc::new(ReaderShared::new(cache_budget, prefetch_budget)),
+            shared: Arc::new(ReaderShared::new(cache_budget, prefetch_budget, mmap)),
             prefetcher: Mutex::new(None),
             tiles_served: AtomicU64::new(0),
         })
@@ -731,9 +883,18 @@ impl StoreReader {
         self.shared.chunks_read.load(Ordering::Relaxed)
     }
 
-    /// Payload bytes read from disk so far.
+    /// *Stored* payload bytes read from disk so far — compressed chunks
+    /// count their on-disk (post-codec) size, which is the point: a
+    /// compressed store doing the same work reads fewer bytes.
     pub fn bytes_read(&self) -> u64 {
         self.shared.bytes_read.load(Ordering::Relaxed)
+    }
+
+    /// *Uncompressed* payload bytes produced by chunk decodes so far.
+    /// Equal to [`StoreReader::bytes_read`] on a `codec=none` store;
+    /// the gap between the two is the I/O the codec saved.
+    pub fn bytes_decoded(&self) -> u64 {
+        self.shared.bytes_decoded.load(Ordering::Relaxed)
     }
 
     /// Chunk requests answered from the hot decoded-chunk cache.
@@ -762,6 +923,7 @@ impl StoreReader {
         IoCounters {
             chunks_read: self.chunks_read(),
             bytes_read: self.bytes_read(),
+            bytes_decoded: self.bytes_decoded(),
             cache_hits: self.cache_hits(),
             prefetch_issued: self.prefetch_issued(),
             prefetch_hits: self.prefetch_hits(),
@@ -947,15 +1109,20 @@ impl StoreReader {
         result
     }
 
-    /// The demand-load path: read chunk `idx` off the shared file
-    /// handle, verify its checksum, and decode it.
+    /// The demand-load path: fetch chunk `idx`'s stored bytes (a slice
+    /// of the shared mapping when one exists, else a pread off the
+    /// shared file handle — the lock covers only the read, decode runs
+    /// in parallel), verify its checksum, and decode it.
     fn read_and_decode(&self, idx: usize) -> Result<DecodedChunk> {
         let meta = self.index[idx];
-        let payload = {
+        if let Some(map) = &self.shared.mmap {
+            return fetch_chunk_mapped(map, &self.path, self.header.layout, idx, &meta, &self.shared);
+        }
+        let stored = {
             let mut file = self.file.lock().unwrap();
             read_verified_payload(&mut file, &self.path, idx, &meta, &self.shared)?
         };
-        Self::decode_chunk_payload(&self.path, self.header.layout, idx, &meta, &payload)
+        decode_stored_payload(&self.path, self.header.layout, idx, &meta, &stored, &self.shared)
     }
 
     /// Decode one verified chunk payload into its in-memory form.
@@ -1077,26 +1244,27 @@ impl StoreReader {
                 let cidx = rb * n_col_bands + cb;
                 let meta = self.index[cidx];
                 let chunk = self.load_chunk(cidx)?;
-                match &*chunk {
-                    DecodedChunk::Dense { values } => {
-                        let tw = meta.cols;
-                        for &(bi, local) in row_picks {
-                            let src = &values[local * tw..(local + 1) * tw];
-                            let dst = out.row_mut(bi);
-                            for &(bj, j) in col_picks {
-                                dst[bj] = src[j - meta.col_lo];
+                if let DecodedChunk::Csr { indptr, indices, values } = &*chunk {
+                    for &(bi, local) in row_picks {
+                        let dst = out.row_mut(bi);
+                        for t in indptr[local] as usize..indptr[local + 1] as usize {
+                            let bj = col_pos[meta.col_lo + indices[t] as usize];
+                            if bj >= 0 {
+                                dst[bj as usize] = values[t];
                             }
                         }
                     }
-                    DecodedChunk::Csr { indptr, indices, values } => {
-                        for &(bi, local) in row_picks {
-                            let dst = out.row_mut(bi);
-                            for t in indptr[local] as usize..indptr[local + 1] as usize {
-                                let bj = col_pos[meta.col_lo + indices[t] as usize];
-                                if bj >= 0 {
-                                    dst[bj as usize] = values[t];
-                                }
-                            }
+                } else {
+                    // Heap-decoded and mmap-borrowed dense chunks gather
+                    // through the same slice view.
+                    let values =
+                        chunk.dense_values().expect("non-CSR chunks expose dense values");
+                    let tw = meta.cols;
+                    for &(bi, local) in row_picks {
+                        let src = &values[local * tw..(local + 1) * tw];
+                        let dst = out.row_mut(bi);
+                        for &(bj, j) in col_picks {
+                            dst[bj] = src[j - meta.col_lo];
                         }
                     }
                 }
@@ -1124,15 +1292,13 @@ impl StoreReader {
                 for idx in 0..self.index.len() {
                     let meta = self.index[idx];
                     let chunk = self.load_chunk(idx)?;
-                    match &*chunk {
-                        DecodedChunk::Dense { values } => {
-                            for lr in 0..meta.rows {
-                                let dst = (meta.row_lo + lr) * cols + meta.col_lo;
-                                data[dst..dst + meta.cols]
-                                    .copy_from_slice(&values[lr * meta.cols..(lr + 1) * meta.cols]);
-                            }
-                        }
-                        DecodedChunk::Csr { .. } => bail!("dense store decoded a csr chunk"),
+                    let Some(values) = chunk.dense_values() else {
+                        bail!("dense store decoded a csr chunk")
+                    };
+                    for lr in 0..meta.rows {
+                        let dst = (meta.row_lo + lr) * cols + meta.col_lo;
+                        data[dst..dst + meta.cols]
+                            .copy_from_slice(&values[lr * meta.cols..(lr + 1) * meta.cols]);
                     }
                 }
                 Ok(Matrix::Dense(DenseMatrix::from_vec(rows, cols, data)))
@@ -1215,6 +1381,80 @@ pub(crate) fn read_verified_payload(
         .into());
     }
     Ok(payload)
+}
+
+/// Decompress (when the chunk carries a codec) and decode one
+/// checksum-verified *stored* payload — the post-read half shared by
+/// the demand path, the mapped path, and the prefetcher.
+pub(crate) fn decode_stored_payload(
+    path: &Path,
+    layout: Layout,
+    idx: usize,
+    meta: &ChunkMeta,
+    stored: &[u8],
+    shared: &ReaderShared,
+) -> Result<DecodedChunk> {
+    shared.bytes_decoded.fetch_add(meta.raw_len, Ordering::Relaxed);
+    if meta.codec == Codec::None {
+        StoreReader::decode_chunk_payload(path, layout, idx, meta, stored)
+    } else {
+        let raw = codec::decode(meta.codec, stored, meta.raw_len as usize, path)?;
+        StoreReader::decode_chunk_payload(path, layout, idx, meta, &raw)
+    }
+}
+
+/// Fetch chunk `idx` through the shared file mapping: slice the stored
+/// bytes out of the map (no syscall, no copy), verify the stored
+/// checksum, then decode — uncompressed dense payloads on
+/// little-endian targets come back as a borrowed [`DecodedChunk::
+/// DenseMapped`] view, everything else decodes through the usual
+/// (decompress +) parse path.
+pub(crate) fn fetch_chunk_mapped(
+    map: &Arc<Mmap>,
+    path: &Path,
+    layout: Layout,
+    idx: usize,
+    meta: &ChunkMeta,
+    shared: &ReaderShared,
+) -> Result<DecodedChunk> {
+    let lo = meta.offset as usize;
+    // decode_footer bounds every extent against the payload region, so
+    // this only fires if the file shrank after open.
+    let stored = meta
+        .offset
+        .checked_add(meta.len)
+        .and_then(|hi| map.as_slice().get(lo..hi as usize))
+        .ok_or_else(|| StoreError::Truncated {
+            path: path.to_path_buf(),
+            detail: format!("chunk {idx} extends past the mapped file"),
+        })?;
+    shared.chunks_read.fetch_add(1, Ordering::Relaxed);
+    shared.bytes_read.fetch_add(meta.len, Ordering::Relaxed);
+    if checksum_bytes(stored) != meta.checksum {
+        return Err(StoreError::Corrupt {
+            path: path.to_path_buf(),
+            detail: format!("chunk {idx} checksum mismatch"),
+        }
+        .into());
+    }
+    // Zero-copy fast path. Alignment always holds for real stores
+    // (payloads start at offset 8 and every chunk length is a multiple
+    // of 4), but it is checked, not assumed: a misaligned slice just
+    // takes the copying decode below.
+    #[cfg(target_endian = "little")]
+    if meta.codec == Codec::None
+        && layout == Layout::Dense
+        && stored.as_ptr() as usize % 4 == 0
+        && meta.rows.checked_mul(meta.cols).and_then(|v| v.checked_mul(4)) == Some(stored.len())
+    {
+        shared.bytes_decoded.fetch_add(meta.raw_len, Ordering::Relaxed);
+        return Ok(DecodedChunk::DenseMapped {
+            map: Arc::clone(map),
+            byte_offset: lo,
+            n_values: meta.rows * meta.cols,
+        });
+    }
+    decode_stored_payload(path, layout, idx, meta, stored, shared)
 }
 
 impl std::fmt::Debug for StoreReader {

@@ -1,0 +1,343 @@
+//! Chunk payload compression (pure Rust, no deps).
+//!
+//! One codec beyond "store the bytes": **shuffle-lz**. It exploits the
+//! two regularities LAMC payloads actually have:
+//!
+//! 1. **Byte-plane shuffle.** Payloads are streams of 4-byte machine
+//!    words — `f32` values, `u32` CSR column indices, and (for the CSR
+//!    row-pointer prefix) `u64`s, which are just two 4-byte words. The
+//!    high bytes of neighboring words are strongly correlated (sign +
+//!    exponent for floats, high index bits for columns), while the low
+//!    bytes look like noise. Transposing the stream into four byte
+//!    planes (all byte-0s, then all byte-1s, …) turns that vertical
+//!    correlation into horizontal runs an LZ pass can see. Lengths not
+//!    divisible by 4 keep their tail verbatim after the planes.
+//!
+//! 2. **LZSS back-references.** A greedy single-pass encoder over the
+//!    shuffled stream: a control byte `< 0x80` introduces a literal run
+//!    of `ctrl + 1` bytes (1..=128); a control byte `>= 0x80` is a
+//!    match of `(ctrl & 0x7f) + MIN_MATCH` bytes (4..=131) at a 2-byte
+//!    little-endian backward offset (1..=65535). Matches may overlap
+//!    their own output (the RLE case: offset 1 repeats one byte), so
+//!    decode copies byte-by-byte.
+//!
+//! The writer stores whichever is smaller, per chunk: if the encoded
+//! form is not strictly smaller than the raw payload, the chunk is
+//! stored raw and tagged [`Codec::None`] (see `store::chunk`). Decoding
+//! is exact — `decode(encode(x)) == x` for every byte string — which
+//! the round-trip property tests below and the store-level harness both
+//! lock down.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::format::StoreError;
+
+/// Shortest back-reference worth a 3-byte token.
+const MIN_MATCH: usize = 4;
+/// Longest match a control byte can express: `0x7f + MIN_MATCH`.
+const MAX_MATCH: usize = 0x7f + MIN_MATCH;
+/// Longest literal run a control byte can express.
+const MAX_LITERAL: usize = 128;
+/// Back-reference window (2-byte offset, 0 reserved as invalid).
+const MAX_OFFSET: usize = u16::MAX as usize;
+/// Hash-table slots for the 4-byte-prefix match finder.
+const HASH_BITS: u32 = 15;
+
+/// Per-chunk payload codec. The tag is what the footer stores; `None`
+/// must stay tag 0 so a zeroed field reads as "raw bytes".
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Codec {
+    /// Payload stored verbatim.
+    #[default]
+    None,
+    /// Byte-plane shuffle + LZSS (see module docs).
+    ShuffleLz,
+}
+
+impl Codec {
+    /// Footer encoding of this codec.
+    pub fn tag(self) -> u64 {
+        match self {
+            Codec::None => 0,
+            Codec::ShuffleLz => 1,
+        }
+    }
+
+    /// Decode a footer tag; `None` for tags this build doesn't know.
+    pub fn from_tag(tag: u64) -> Option<Codec> {
+        match tag {
+            0 => Some(Codec::None),
+            1 => Some(Codec::ShuffleLz),
+            _ => None,
+        }
+    }
+
+    /// CLI / display name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Codec::None => "none",
+            Codec::ShuffleLz => "shuffle-lz",
+        }
+    }
+
+    /// Parse a `--codec` argument.
+    pub fn parse(s: &str) -> Option<Codec> {
+        match s {
+            "none" => Some(Codec::None),
+            "shuffle-lz" => Some(Codec::ShuffleLz),
+            _ => None,
+        }
+    }
+}
+
+/// Transpose `bytes` into four byte planes (stride-4 shuffle); the
+/// `len % 4` tail is appended verbatim.
+fn shuffle(bytes: &[u8]) -> Vec<u8> {
+    let words = bytes.len() / 4;
+    let mut out = Vec::with_capacity(bytes.len());
+    for plane in 0..4 {
+        out.extend((0..words).map(|w| bytes[w * 4 + plane]));
+    }
+    out.extend_from_slice(&bytes[words * 4..]);
+    out
+}
+
+/// Inverse of [`shuffle`].
+fn unshuffle(bytes: &[u8]) -> Vec<u8> {
+    let words = bytes.len() / 4;
+    let mut out = vec![0u8; bytes.len()];
+    for plane in 0..4 {
+        for w in 0..words {
+            out[w * 4 + plane] = bytes[plane * words + w];
+        }
+    }
+    out[words * 4..].copy_from_slice(&bytes[words * 4..]);
+    out
+}
+
+fn hash4(b: &[u8]) -> usize {
+    // Multiplicative hash of the 4-byte prefix; the constant is the
+    // 32-bit golden-ratio multiplier.
+    let v = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Greedy LZSS over `src`. Always produces a valid token stream; the
+/// caller compares lengths and keeps the raw bytes if this is not a win.
+fn lz_compress(src: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(src.len() / 2 + 16);
+    // Last position that started each 4-byte-prefix hash bucket.
+    let mut table = vec![usize::MAX; 1 << HASH_BITS];
+    let mut literal_start = 0usize;
+    let mut i = 0usize;
+
+    let flush_literals = |out: &mut Vec<u8>, lo: usize, hi: usize| {
+        let mut p = lo;
+        while p < hi {
+            let run = (hi - p).min(MAX_LITERAL);
+            out.push((run - 1) as u8);
+            out.extend_from_slice(&src[p..p + run]);
+            p += run;
+        }
+    };
+
+    while i + MIN_MATCH <= src.len() {
+        let h = hash4(&src[i..]);
+        let cand = table[h];
+        table[h] = i;
+        let mut match_len = 0usize;
+        if cand != usize::MAX && i - cand <= MAX_OFFSET {
+            let limit = (src.len() - i).min(MAX_MATCH);
+            while match_len < limit && src[cand + match_len] == src[i + match_len] {
+                match_len += 1;
+            }
+        }
+        if match_len >= MIN_MATCH {
+            flush_literals(&mut out, literal_start, i);
+            out.push(0x80 | (match_len - MIN_MATCH) as u8);
+            out.extend_from_slice(&((i - cand) as u16).to_le_bytes());
+            // Seed the table inside the match so the next search can
+            // land mid-run (cheap approximation of a full hash chain).
+            let end = i + match_len;
+            i += 1;
+            while i < end && i + MIN_MATCH <= src.len() {
+                table[hash4(&src[i..])] = i;
+                i += 1;
+            }
+            i = end;
+            literal_start = i;
+        } else {
+            i += 1;
+        }
+    }
+    flush_literals(&mut out, literal_start, src.len());
+    out
+}
+
+/// Decode an LZSS token stream into exactly `raw_len` bytes. Malformed
+/// streams (truncated tokens, out-of-window offsets, wrong total) are
+/// reported, never panicked on — the input is untrusted disk bytes.
+fn lz_decompress(src: &[u8], raw_len: usize) -> Result<Vec<u8>, String> {
+    let mut out = Vec::with_capacity(raw_len);
+    let mut i = 0usize;
+    while i < src.len() {
+        let ctrl = src[i];
+        i += 1;
+        if ctrl < 0x80 {
+            let run = ctrl as usize + 1;
+            let Some(lit) = src.get(i..i + run) else {
+                return Err(format!("literal run of {run} bytes truncated at {i}"));
+            };
+            out.extend_from_slice(lit);
+            i += run;
+        } else {
+            let len = (ctrl & 0x7f) as usize + MIN_MATCH;
+            let Some(ob) = src.get(i..i + 2) else {
+                return Err(format!("match offset truncated at {i}"));
+            };
+            let offset = u16::from_le_bytes([ob[0], ob[1]]) as usize;
+            i += 2;
+            if offset == 0 || offset > out.len() {
+                return Err(format!("match offset {offset} outside {} decoded bytes", out.len()));
+            }
+            // Byte-by-byte: matches may overlap their own output.
+            let start = out.len() - offset;
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+        if out.len() > raw_len {
+            return Err(format!("stream decodes past declared {raw_len} bytes"));
+        }
+    }
+    if out.len() != raw_len {
+        return Err(format!("stream decoded {} bytes, expected {raw_len}", out.len()));
+    }
+    Ok(out)
+}
+
+/// Encode `raw` with `codec`. For [`Codec::None`] this is a plain copy
+/// (callers avoid it on that path); the result is *not* guaranteed to
+/// be smaller — the writer stores whichever of raw/encoded wins.
+pub fn encode(codec: Codec, raw: &[u8]) -> Vec<u8> {
+    match codec {
+        Codec::None => raw.to_vec(),
+        Codec::ShuffleLz => lz_compress(&shuffle(raw)),
+    }
+}
+
+/// Decode `stored` back into exactly `raw_len` bytes. Failures are
+/// typed [`StoreError::Corrupt`] — a damaged compressed payload whose
+/// stored-byte checksum still matched can only mean disk corruption
+/// plus a checksum collision, and is reported like any other damage.
+pub fn decode(codec: Codec, stored: &[u8], raw_len: usize, path: &Path) -> Result<Vec<u8>> {
+    match codec {
+        Codec::None => {
+            if stored.len() != raw_len {
+                return Err(StoreError::Corrupt {
+                    path: path.to_path_buf(),
+                    detail: format!(
+                        "raw chunk stores {} bytes but declares {raw_len}",
+                        stored.len()
+                    ),
+                }
+                .into());
+            }
+            Ok(stored.to_vec())
+        }
+        Codec::ShuffleLz => match lz_decompress(stored, raw_len) {
+            Ok(shuffled) => Ok(unshuffle(&shuffled)),
+            Err(detail) => Err(StoreError::Corrupt {
+                path: path.to_path_buf(),
+                detail: format!("shuffle-lz payload: {detail}"),
+            }
+            .into()),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn round_trip(bytes: &[u8]) {
+        let enc = encode(Codec::ShuffleLz, bytes);
+        let dec = decode(Codec::ShuffleLz, &enc, bytes.len(), Path::new("/t")).unwrap();
+        assert_eq!(dec, bytes, "round trip of {} bytes", bytes.len());
+    }
+
+    #[test]
+    fn round_trips_every_tail_length() {
+        // Cover len % 4 ∈ {0,1,2,3} and tiny inputs below MIN_MATCH.
+        for n in 0..64usize {
+            let bytes: Vec<u8> = (0..n).map(|i| (i * 37 % 251) as u8).collect();
+            round_trip(&bytes);
+        }
+    }
+
+    #[test]
+    fn round_trips_random_and_structured_payloads() {
+        let mut rng = Xoshiro256::seed_from(0x90DEC);
+        // Random f32 bit patterns (the dense-payload case).
+        let floats: Vec<u8> =
+            (0..4096).flat_map(|_| rng.next_f32().to_le_bytes()).collect();
+        round_trip(&floats);
+        // Monotone u32 indices (the CSR-column case) — highly compressible.
+        let indices: Vec<u8> = (0u32..8192).flat_map(|i| (i * 3).to_le_bytes()).collect();
+        let enc = encode(Codec::ShuffleLz, &indices);
+        assert!(enc.len() < indices.len() / 2, "monotone indices compress well: {}", enc.len());
+        round_trip(&indices);
+        // Constant runs (explicit zeros / padding).
+        round_trip(&vec![0u8; 10_000]);
+        let enc = encode(Codec::ShuffleLz, &vec![0u8; 10_000]);
+        assert!(enc.len() < 200, "RLE case collapses: {}", enc.len());
+    }
+
+    #[test]
+    fn empty_payload() {
+        round_trip(&[]);
+        assert!(encode(Codec::ShuffleLz, &[]).is_empty());
+    }
+
+    #[test]
+    fn incompressible_input_still_round_trips() {
+        // A keyed byte mix with no 4-byte repeats to speak of: encoded
+        // form is larger (literal-run overhead) but must still decode.
+        let mut rng = Xoshiro256::seed_from(7);
+        let noise: Vec<u8> = (0..5000).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+        let enc = encode(Codec::ShuffleLz, &noise);
+        assert!(enc.len() >= noise.len(), "noise does not compress");
+        round_trip(&noise);
+    }
+
+    #[test]
+    fn malformed_streams_are_typed_errors() {
+        let raw: Vec<u8> = (0..256u32).flat_map(|i| i.to_le_bytes()).collect();
+        let enc = encode(Codec::ShuffleLz, &raw);
+        // Truncated stream.
+        let err = decode(Codec::ShuffleLz, &enc[..enc.len() - 1], raw.len(), Path::new("/t"))
+            .unwrap_err();
+        assert!(err.downcast_ref::<StoreError>().is_some(), "{err}");
+        // Wrong declared length.
+        let err = decode(Codec::ShuffleLz, &enc, raw.len() + 1, Path::new("/t")).unwrap_err();
+        assert!(err.downcast_ref::<StoreError>().is_some(), "{err}");
+        // Out-of-window offset right at the start.
+        let bogus = [0x80u8, 0xff, 0xff];
+        let err = decode(Codec::ShuffleLz, &bogus, 4, Path::new("/t")).unwrap_err();
+        assert!(err.downcast_ref::<StoreError>().is_some(), "{err}");
+    }
+
+    #[test]
+    fn codec_tags_round_trip() {
+        for c in [Codec::None, Codec::ShuffleLz] {
+            assert_eq!(Codec::from_tag(c.tag()), Some(c));
+            assert_eq!(Codec::parse(c.as_str()), Some(c));
+        }
+        assert_eq!(Codec::from_tag(99), None);
+        assert_eq!(Codec::parse("zstd"), None);
+    }
+}

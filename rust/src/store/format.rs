@@ -36,6 +36,19 @@
 //! the same primitive behind `Matrix::fingerprint`, so the whole stack
 //! shares one hashing scheme.
 //!
+//! **Footer revisions 3 and 4** add per-chunk payload compression to
+//! the row-band and tiled geometries respectively: the header gains the
+//! writer's [`Codec`](super::codec::Codec), and every index entry gains
+//! a codec tag plus the uncompressed (`raw_len`) payload length. The
+//! file magics stay per-geometry (`LAMC2*` for versions 1/3, `LAMC3*`
+//! for 2/4), and a writer configured with `codec=none` emits exactly
+//! the version-1/2 bytes — pre-codec files are byte-stable and every
+//! pre-codec reader field keeps its meaning. Entry `checksum` always
+//! covers the **stored** bytes (what is read off disk); the content
+//! fingerprint chains the checksums of the **uncompressed** payloads,
+//! so the same matrix has the same fingerprint under every codec and
+//! recompression never invalidates service result-cache entries.
+//!
 //! Failure taxonomy is typed ([`StoreError`]): a reader distinguishes
 //! "not a store at all", "store cut short" (e.g. an ingest that died
 //! before `finish`), and "store damaged" (checksum/structure mismatch),
@@ -43,6 +56,7 @@
 
 use std::path::{Path, PathBuf};
 
+use super::codec::Codec;
 use crate::rng::mix64 as mix;
 
 /// Leading file magic of a row-band (version 1) store.
@@ -57,6 +71,10 @@ pub const FOOTER_MAGIC_TILED: &[u8; 8] = b"LAMC3FTR";
 pub const VERSION: u64 = 1;
 /// Format version of the tiled layout.
 pub const VERSION_TILED: u64 = 2;
+/// Format version of the row-band layout with codec fields.
+pub const VERSION_CODEC: u64 = 3;
+/// Format version of the tiled layout with codec fields.
+pub const VERSION_TILED_CODEC: u64 = 4;
 /// Default row-band height for writers that don't specify one. (There
 /// is deliberately no tiled counterpart: a useful tile width tracks the
 /// planner's block width ψ, so every tiled writer must choose one.)
@@ -72,6 +90,31 @@ const HEADER_WORDS_V2: usize = 9;
 const ENTRY_WORDS_V1: usize = 6;
 /// Words of a version-2 index entry (adds `col_lo`, `cols`).
 const ENTRY_WORDS_V2: usize = 8;
+/// Extra header words in a codec revision (the writer codec).
+const HEADER_CODEC_WORDS: usize = 1;
+/// Extra entry words in a codec revision (`codec` tag, `raw_len`).
+const ENTRY_CODEC_WORDS: usize = 2;
+
+/// Per-version footer geometry: `(tiled, has_codec, header_words, entry_words)`.
+fn version_shape(version: u64) -> Option<(bool, bool, usize, usize)> {
+    match version {
+        VERSION => Some((false, false, HEADER_WORDS_V1, ENTRY_WORDS_V1)),
+        VERSION_TILED => Some((true, false, HEADER_WORDS_V2, ENTRY_WORDS_V2)),
+        VERSION_CODEC => Some((
+            false,
+            true,
+            HEADER_WORDS_V1 + HEADER_CODEC_WORDS,
+            ENTRY_WORDS_V1 + ENTRY_CODEC_WORDS,
+        )),
+        VERSION_TILED_CODEC => Some((
+            true,
+            true,
+            HEADER_WORDS_V2 + HEADER_CODEC_WORDS,
+            ENTRY_WORDS_V2 + ENTRY_CODEC_WORDS,
+        )),
+        _ => None,
+    }
+}
 
 /// Storage layout of the chunk payloads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -126,18 +169,23 @@ pub struct StoreHeader {
     /// on version.
     pub chunk_cols: usize,
     pub n_chunks: usize,
-    /// Content fingerprint over (layout, dims, nnz, per-chunk checksums)
-    /// — or, for a repacked store, the source store's fingerprint
-    /// carried over verbatim (same content, different chunking).
-    /// O(1) to read back — registering a store-backed matrix never
-    /// re-scans the data (unlike `Matrix::fingerprint`).
+    /// Content fingerprint over (layout, dims, nnz, per-chunk checksums
+    /// of the **uncompressed** payloads) — or, for a repacked store,
+    /// the source store's fingerprint carried over verbatim (same
+    /// content, different chunking or codec). O(1) to read back —
+    /// registering a store-backed matrix never re-scans the data
+    /// (unlike `Matrix::fingerprint`).
     pub fingerprint: u64,
+    /// Codec the writer was configured with. Individual chunks may
+    /// still be [`Codec::None`] (incompressible payloads are stored
+    /// raw); versions 1/2 are always `Codec::None`.
+    pub codec: Codec,
 }
 
 impl StoreHeader {
     /// Is this the tiled (LAMC3) geometry?
     pub fn is_tiled(&self) -> bool {
-        self.version == VERSION_TILED
+        self.version == VERSION_TILED || self.version == VERSION_TILED_CODEC
     }
 
     /// Row bands in the chunk grid.
@@ -164,7 +212,8 @@ impl StoreHeader {
 pub struct ChunkMeta {
     /// Byte offset of the payload from the start of the file.
     pub offset: u64,
-    /// Payload length in bytes.
+    /// **Stored** payload length in bytes (compressed size when
+    /// `codec != None`).
     pub len: u64,
     /// First global row covered by this chunk.
     pub row_lo: usize,
@@ -176,8 +225,12 @@ pub struct ChunkMeta {
     pub cols: usize,
     /// Stored entries in this chunk.
     pub nnz: u64,
-    /// `checksum_bytes` of the payload.
+    /// `checksum_bytes` of the **stored** payload bytes.
     pub checksum: u64,
+    /// How this chunk's payload is encoded on disk.
+    pub codec: Codec,
+    /// Uncompressed payload length; equals `len` when `codec == None`.
+    pub raw_len: u64,
 }
 
 /// Typed store failures. Returned inside `anyhow::Error` so callers can
@@ -269,16 +322,21 @@ fn word(bytes: &[u8], i: usize) -> u64 {
 
 /// Encode the footer body (header words then index entries). Version 1
 /// emits the exact LAMC2 byte layout (row-band fields only); version 2
-/// adds `chunk_cols` to the header and `col_lo`/`cols` to each entry.
+/// adds `chunk_cols` to the header and `col_lo`/`cols` to each entry;
+/// versions 3/4 append the writer codec to the header and
+/// `codec`/`raw_len` to each entry. A `codec=none` writer uses
+/// version 1/2, so pre-codec files stay byte-stable.
 pub fn encode_footer(header: &StoreHeader, index: &[ChunkMeta]) -> Vec<u8> {
     debug_assert_eq!(header.n_chunks, index.len());
-    debug_assert!(header.version == VERSION || header.version == VERSION_TILED);
-    let tiled = header.version == VERSION_TILED;
-    let (header_words, entry_words) = if tiled {
-        (HEADER_WORDS_V2, ENTRY_WORDS_V2)
-    } else {
-        (HEADER_WORDS_V1, ENTRY_WORDS_V1)
-    };
+    let (tiled, has_codec, header_words, entry_words) =
+        version_shape(header.version).expect("writer uses a known footer version");
+    let _ = tiled;
+    debug_assert!(
+        has_codec
+            || (header.codec == Codec::None
+                && index.iter().all(|e| e.codec == Codec::None && e.raw_len == e.len)),
+        "codec fields require a codec footer revision"
+    );
     let mut out = Vec::with_capacity((header_words + entry_words * index.len()) * 8);
     push_u64(&mut out, header.version);
     push_u64(&mut out, header.layout.tag());
@@ -291,6 +349,9 @@ pub fn encode_footer(header: &StoreHeader, index: &[ChunkMeta]) -> Vec<u8> {
     push_u64(&mut out, header.nnz);
     push_u64(&mut out, index.len() as u64);
     push_u64(&mut out, header.fingerprint);
+    if has_codec {
+        push_u64(&mut out, header.codec.tag());
+    }
     for e in index {
         push_u64(&mut out, e.offset);
         push_u64(&mut out, e.len);
@@ -302,6 +363,10 @@ pub fn encode_footer(header: &StoreHeader, index: &[ChunkMeta]) -> Vec<u8> {
         }
         push_u64(&mut out, e.nnz);
         push_u64(&mut out, e.checksum);
+        if has_codec {
+            push_u64(&mut out, e.codec.tag());
+            push_u64(&mut out, e.raw_len);
+        }
     }
     out
 }
@@ -320,14 +385,8 @@ pub fn decode_footer(
         return Err(corrupt(format!("footer body has {} bytes", bytes.len())));
     }
     let version = word(bytes, 0);
-    if version != VERSION && version != VERSION_TILED {
+    let Some((tiled, has_codec, header_words, entry_words)) = version_shape(version) else {
         return Err(StoreError::UnsupportedVersion { path: path.to_path_buf(), version });
-    }
-    let tiled = version == VERSION_TILED;
-    let (header_words, entry_words) = if tiled {
-        (HEADER_WORDS_V2, ENTRY_WORDS_V2)
-    } else {
-        (HEADER_WORDS_V1, ENTRY_WORDS_V1)
     };
     if bytes.len() < header_words * 8 {
         return Err(corrupt(format!("footer body has {} bytes", bytes.len())));
@@ -347,6 +406,12 @@ pub fn decode_footer(
     let nnz = word(bytes, w);
     let n_chunks = word(bytes, w + 1) as usize;
     let fingerprint = word(bytes, w + 2);
+    let codec = if has_codec {
+        Codec::from_tag(word(bytes, w + 3))
+            .ok_or_else(|| corrupt(format!("unknown codec tag {}", word(bytes, w + 3))))?
+    } else {
+        Codec::None
+    };
 
     // Bound n_chunks by what the body could possibly hold before doing
     // size arithmetic with it (a crafted count must not overflow).
@@ -372,6 +437,7 @@ pub fn decode_footer(
         chunk_cols,
         n_chunks,
         fingerprint,
+        codec,
     };
     let n_col_bands = header.n_col_bands();
     // checked_mul: crafted dims must not overflow the grid arithmetic.
@@ -388,7 +454,7 @@ pub fn decode_footer(
     let mut covered_nnz = 0u64;
     for i in 0..n_chunks {
         let base = header_words + entry_words * i;
-        let e = if tiled {
+        let mut e = if tiled {
             ChunkMeta {
                 offset: word(bytes, base),
                 len: word(bytes, base + 1),
@@ -398,6 +464,8 @@ pub fn decode_footer(
                 cols: word(bytes, base + 5) as usize,
                 nnz: word(bytes, base + 6),
                 checksum: word(bytes, base + 7),
+                codec: Codec::None,
+                raw_len: 0,
             }
         } else {
             ChunkMeta {
@@ -409,8 +477,33 @@ pub fn decode_footer(
                 cols,
                 nnz: word(bytes, base + 4),
                 checksum: word(bytes, base + 5),
+                codec: Codec::None,
+                raw_len: 0,
             }
         };
+        if has_codec {
+            let cbase = base + entry_words - ENTRY_CODEC_WORDS;
+            e.codec = Codec::from_tag(word(bytes, cbase))
+                .ok_or_else(|| corrupt(format!("chunk {i}: unknown codec tag {}", word(bytes, cbase))))?;
+            e.raw_len = word(bytes, cbase + 1);
+        } else {
+            e.raw_len = e.len;
+        }
+        if e.codec == Codec::None && e.raw_len != e.len {
+            return Err(corrupt(format!(
+                "chunk {i} stored raw but declares raw_len {} != len {}",
+                e.raw_len, e.len
+            )));
+        }
+        if e.codec != Codec::None && e.len >= e.raw_len {
+            // The writer only keeps a compressed form when it is
+            // strictly smaller; an inflating "compressed" chunk is
+            // either damage or a crafted decompression bomb setup.
+            return Err(corrupt(format!(
+                "chunk {i} compressed to {} bytes, not smaller than raw {}",
+                e.len, e.raw_len
+            )));
+        }
         if e.offset < MAGIC.len() as u64 || e.offset.saturating_add(e.len) > payload_end {
             return Err(corrupt(format!(
                 "chunk {i} extent [{}, {}) escapes payload region [8, {payload_end})",
@@ -468,6 +561,25 @@ pub fn decode_footer(
         return Err(corrupt(format!("chunks hold {covered_nnz} entries, header says {nnz}")));
     }
 
+    // Chunk extents must be pairwise disjoint, not just inside the
+    // payload region: a crafted footer aliasing two index entries onto
+    // one extent (or overlapping extents) would otherwise decode
+    // cleanly and silently serve the wrong bytes for one of them.
+    // Sort a shadow of (offset, len, i) and check adjacent pairs.
+    let mut extents: Vec<(u64, u64, usize)> =
+        index.iter().enumerate().map(|(i, e)| (e.offset, e.len, i)).collect();
+    extents.sort_unstable();
+    for pair in extents.windows(2) {
+        let (a_off, a_len, a_i) = pair[0];
+        let (b_off, _, b_i) = pair[1];
+        if a_off.saturating_add(a_len) > b_off {
+            return Err(corrupt(format!(
+                "chunk {a_i} extent [{a_off}, {}) overlaps chunk {b_i} at offset {b_off}",
+                a_off.saturating_add(a_len)
+            )));
+        }
+    }
+
     Ok((header, index))
 }
 
@@ -488,6 +600,8 @@ mod tests {
                 cols: 7,
                 nnz: 10,
                 checksum: 0xABC0 + i as u64,
+                codec: Codec::None,
+                raw_len: 40,
             });
             offset += 40;
         }
@@ -507,6 +621,7 @@ mod tests {
                 10 * n_chunks as u64,
                 index.iter().map(|e| e.checksum),
             ),
+            codec: Codec::None,
         };
         (h, index)
     }
@@ -532,6 +647,8 @@ mod tests {
                 cols,
                 nnz,
                 checksum: 0xF00 + i as u64,
+                codec: Codec::None,
+                raw_len: nnz * 4,
             });
             offset += nnz * 4;
         }
@@ -551,6 +668,7 @@ mod tests {
                 25,
                 index.iter().map(|e| e.checksum),
             ),
+            codec: Codec::None,
         };
         (h, index)
     }
@@ -646,6 +764,84 @@ mod tests {
         assert_eq!(bytes.len(), (8 + 6 * 2) * 8);
         let (h2, _) = decode_footer(&bytes, 8 + 2 * 40, Path::new("/t")).unwrap();
         assert_eq!(h2.version, VERSION);
+    }
+
+    /// Rewrite a v1/v2 header+index into its codec revision with
+    /// chunk 1 stored shuffle-lz-compressed.
+    fn with_codec(mut h: StoreHeader, mut index: Vec<ChunkMeta>) -> (StoreHeader, Vec<ChunkMeta>) {
+        h.version = if h.is_tiled() { VERSION_TILED_CODEC } else { VERSION_CODEC };
+        h.codec = Codec::ShuffleLz;
+        // Compress chunk 1 to half its raw bytes and shift the later
+        // extents down so the payload region stays contiguous.
+        let shrink = index[1].len / 2;
+        index[1].codec = Codec::ShuffleLz;
+        index[1].len -= shrink;
+        for e in index.iter_mut().skip(2) {
+            e.offset -= shrink;
+        }
+        (h, index)
+    }
+
+    #[test]
+    fn codec_footer_round_trips_both_geometries() {
+        for (h0, i0) in [header(3), tiled_header()] {
+            let (h, index) = with_codec(h0, i0);
+            let bytes = encode_footer(&h, &index);
+            let (h2, index2) = decode_footer(&bytes, payload_end(&index), Path::new("/t")).unwrap();
+            assert_eq!(h, h2);
+            assert_eq!(index, index2);
+            assert_eq!(h2.codec, Codec::ShuffleLz);
+            assert_eq!(index2[1].codec, Codec::ShuffleLz);
+            assert!(index2[1].raw_len > index2[1].len);
+            assert_eq!(index2[0].codec, Codec::None, "per-chunk raw fallback survives");
+        }
+        let (h, _) = with_codec(tiled_header().0, tiled_header().1);
+        assert!(h.is_tiled(), "version 4 is still the tiled geometry");
+    }
+
+    #[test]
+    fn codec_footer_rejects_unknown_codec_tag() {
+        let (h, index) = with_codec(header(3).0, header(3).1);
+        let mut bytes = encode_footer(&h, &index);
+        // Header codec word is word 8 in a v3 footer (after fingerprint).
+        bytes[8 * 8..9 * 8].copy_from_slice(&77u64.to_le_bytes());
+        let err = decode_footer(&bytes, payload_end(&index), Path::new("/t")).unwrap_err();
+        assert!(matches!(err, StoreError::Corrupt { .. }), "{err}");
+    }
+
+    #[test]
+    fn codec_footer_rejects_inflating_compressed_chunk() {
+        let (h, mut index) = with_codec(header(3).0, header(3).1);
+        index[1].raw_len = index[1].len; // "compressed" but not smaller
+        let bytes = encode_footer(&h, &index);
+        let err = decode_footer(&bytes, payload_end(&index), Path::new("/t")).unwrap_err();
+        assert!(matches!(err, StoreError::Corrupt { .. }), "{err}");
+    }
+
+    #[test]
+    fn decode_rejects_overlapping_extents() {
+        // Chunk 1 shifted to overlap chunk 0's tail byte: both extents
+        // are individually inside the payload region, so only the
+        // pairwise-disjointness check can catch this.
+        let (h, mut index) = header(3);
+        index[1].offset -= 1;
+        let bytes = encode_footer(&h, &index);
+        let err = decode_footer(&bytes, payload_end(&index), Path::new("/t")).unwrap_err();
+        assert!(matches!(err, StoreError::Corrupt { .. }), "{err}");
+        let msg = format!("{err}");
+        assert!(msg.contains("overlaps"), "{msg}");
+    }
+
+    #[test]
+    fn decode_rejects_aliased_extents() {
+        // Two index entries pointing at the same payload extent — reads
+        // of chunk 2 would silently serve chunk 0's bytes.
+        let (h, mut index) = header(3);
+        index[2].offset = index[0].offset;
+        index[2].len = index[0].len;
+        let bytes = encode_footer(&h, &index);
+        let err = decode_footer(&bytes, 8 + 3 * 40, Path::new("/t")).unwrap_err();
+        assert!(matches!(err, StoreError::Corrupt { .. }), "{err}");
     }
 
     #[test]

@@ -281,6 +281,8 @@ pub fn shard_store(
         } else {
             ChunkWriter::create(&path, header.layout, cols, header.chunk_rows)?
         };
+        // Shards keep the source's payload codec along with its geometry.
+        writer.set_codec(header.codec);
         // Stream the band one chunk-height slab at a time: peak memory
         // is one slab, same as repack.
         let mut r = row_lo;

@@ -1,0 +1,135 @@
+//! Minimal read-only memory map (no new dependencies).
+//!
+//! The store read path maps a finished store file once and serves chunk
+//! payloads as borrowed slices: uncompressed dense chunks decode with
+//! **zero copies** (the cache holds a view into the map), and
+//! compressed chunks decompress straight from the mapped bytes into the
+//! pooled buffers — no intermediate read buffer either way.
+//!
+//! This wrapper declares `mmap`/`munmap` directly (libc is already
+//! linked into every std binary on unix), keeps all the `unsafe` in one
+//! ~60-line file, and degrades gracefully: [`Mmap::map`] returns `None`
+//! on non-unix targets, on any mapping failure, on empty files, or when
+//! `LAMC_NO_MMAP=1` — callers then use the pread-into-buffer fallback,
+//! which is behaviorally identical (the property harness runs both).
+//!
+//! Safety model: LAMC store files are immutable once `finish()` has
+//! fsynced them, and the reader maps a file only after validating its
+//! footer. Truncating a mapped file out from under a running reader is
+//! outside the contract (as it is for every mmap consumer).
+
+#[cfg(unix)]
+mod sys {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    use core::ffi::c_void;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    /// A whole-file read-only private mapping.
+    pub struct Mmap {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // The mapping is read-only and owned until Drop; sharing immutable
+    // bytes across threads is safe.
+    unsafe impl Send for Mmap {}
+    unsafe impl Sync for Mmap {}
+
+    impl Mmap {
+        /// Map `len` bytes of `file` read-only. `None` on failure (the
+        /// caller falls back to pread), on empty files, or when
+        /// `LAMC_NO_MMAP=1` forces the fallback path.
+        pub fn map(file: &File, len: usize) -> Option<Mmap> {
+            if len == 0 || std::env::var_os("LAMC_NO_MMAP").is_some_and(|v| v == "1") {
+                return None;
+            }
+            let ptr = unsafe {
+                mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+            };
+            // MAP_FAILED is (void*)-1.
+            if ptr as usize == usize::MAX || ptr.is_null() {
+                None
+            } else {
+                Some(Mmap { ptr, len })
+            }
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            // Valid for `len` bytes for the lifetime of the mapping.
+            unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+        }
+    }
+
+    impl Drop for Mmap {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    use std::fs::File;
+
+    /// Non-unix stub: mapping never succeeds, the reader uses pread.
+    pub struct Mmap {
+        never: core::convert::Infallible,
+    }
+
+    impl Mmap {
+        pub fn map(_file: &File, _len: usize) -> Option<Mmap> {
+            None
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            match self.never {}
+        }
+    }
+}
+
+pub(crate) use sys::Mmap;
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_and_reads_back() {
+        let dir = std::env::temp_dir().join("lamc_mmap_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.bin");
+        let bytes: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&path, &bytes).unwrap();
+        let file = std::fs::File::open(&path).unwrap();
+        let map = Mmap::map(&file, bytes.len()).expect("mapping a real file succeeds");
+        assert_eq!(map.as_slice(), &bytes[..]);
+    }
+
+    #[test]
+    fn empty_file_declines() {
+        let dir = std::env::temp_dir().join("lamc_mmap_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let file = std::fs::File::open(&path).unwrap();
+        assert!(Mmap::map(&file, 0).is_none());
+    }
+}

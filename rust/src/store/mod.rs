@@ -16,7 +16,13 @@
 //!   the envelope: leading magic, dense or CSR chunk payloads, and a
 //!   trailing footer with dims, per-chunk checksums (`rng::mix64`
 //!   chains) and an O(1) content fingerprint. Failures are typed
-//!   ([`StoreError`]): not-a-store vs truncated vs corrupt.
+//!   ([`StoreError`]): not-a-store vs truncated vs corrupt. Footer
+//!   revisions 3/4 add per-chunk payload compression.
+//! * [`codec`](mod@crate::store::codec) — the pure-Rust `shuffle-lz`
+//!   payload codec (byte-plane shuffle + LZSS) behind
+//!   `lamc pack/ingest/repack --codec`; the content fingerprint is
+//!   computed over uncompressed payloads, so recompression preserves
+//!   result-cache identity.
 //! * [`chunk`] — [`ChunkWriter`], a streaming row-append ingester
 //!   (bands sealed + fsynced as they fill — split into column tiles on
 //!   the fly in tiled mode; row count unknown until `finish`), and
@@ -48,16 +54,20 @@
 //! and the RSS expectations.
 
 pub mod chunk;
+pub mod codec;
 pub mod format;
 pub mod manifest;
+mod mmap;
 pub mod prefetch;
 pub mod repack;
 pub mod view;
 
 pub use chunk::{
-    pack_matrix, pack_matrix_tiled, ChunkWriter, IoCounters, StoreReader, StoreSummary,
-    DEFAULT_CACHE_BYTES, DEFAULT_PREFETCH_BYTES,
+    pack_matrix, pack_matrix_tiled, pack_matrix_tiled_with_codec, pack_matrix_with_codec,
+    ChunkWriter, IoCounters, StoreReader, StoreSummary, DEFAULT_CACHE_BYTES,
+    DEFAULT_PREFETCH_BYTES,
 };
+pub use codec::Codec;
 pub use format::{checksum_bytes, Layout, StoreError, StoreHeader, DEFAULT_CHUNK_ROWS};
 pub use manifest::{shard_store, ShardEntry, ShardManifest};
 pub use repack::{repack, repack_reader, RepackOptions};

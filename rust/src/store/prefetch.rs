@@ -11,6 +11,8 @@
 //! blocks are still co-clustering (both are crate-internal — the
 //! public surface is [`StoreReader::prefetch_plan`]).
 //!
+//! [`StoreReader::prefetch_plan`]: crate::store::StoreReader::prefetch_plan
+//!
 //! Design rules, each load-bearing:
 //!
 //! * **Advisory only.** The prefetcher never surfaces errors and never
@@ -40,7 +42,9 @@ use std::time::Duration;
 
 use crate::partition::SamplingRound;
 
-use super::chunk::{read_verified_payload, ReaderShared, StoreReader};
+use super::chunk::{
+    decode_stored_payload, fetch_chunk_mapped, read_verified_payload, ReaderShared,
+};
 use super::format::{ChunkMeta, Layout, StoreHeader};
 
 /// How long a throttled prefetch waits for consumption before deciding
@@ -54,7 +58,8 @@ const THROTTLE_SLICE: Duration = Duration::from_millis(5);
 /// block gathers will touch — job order, first occurrence wins, every
 /// id unique. This is the *plan* the prefetcher executes; it is derived
 /// purely from the store geometry and the jobs' global row/column ids,
-/// the same arithmetic [`StoreReader::tile`] uses to pick chunks.
+/// the same arithmetic [`tile`](crate::store::StoreReader::tile) uses
+/// to pick chunks.
 pub(crate) fn plan_chunks(header: &StoreHeader, rounds: &[SamplingRound]) -> Vec<usize> {
     let h = header.chunk_rows.max(1);
     let w = header.chunk_cols.max(1);
@@ -88,8 +93,9 @@ pub(crate) fn plan_chunks(header: &StoreHeader, rounds: &[SamplingRound]) -> Vec
 }
 
 /// Handle to the background prefetch thread. Owned by the
-/// [`StoreReader`], spawned on the first non-empty plan; dropping it
-/// (with the reader) stops the thread promptly.
+/// [`StoreReader`](crate::store::StoreReader), spawned on the first
+/// non-empty plan; dropping it (with the reader) stops the thread
+/// promptly.
 pub(crate) struct Prefetcher {
     tx: Option<mpsc::Sender<Vec<usize>>>,
     handle: Option<JoinHandle<()>>,
@@ -175,7 +181,9 @@ fn fetch_one(
     stop: &AtomicBool,
 ) {
     let Some(&meta) = index.get(idx) else { return };
-    let est = meta.len as usize;
+    // Budget against the *decoded* (uncompressed) size — that is what
+    // the pool will hold resident, whatever the chunk's on-disk codec.
+    let est = meta.raw_len as usize;
     if est > shared.prefetch_budget {
         return; // could never be held — don't waste the read
     }
@@ -184,7 +192,7 @@ fn fetch_one(
         return;
     }
     // Throttle: hold the fetch until the pool has room. Decoded size
-    // equals payload size for both layouts, so `est` is exact.
+    // equals `raw_len` for both layouts, so `est` is exact.
     {
         let mut pool = shared.prefetched.lock().unwrap();
         if pool.peek(&idx).is_some() {
@@ -256,9 +264,10 @@ fn fetch_one(
     shared.prefetch_issued.fetch_add(1, Ordering::Relaxed);
 }
 
-/// The prefetcher's read path: the shared read-verify helper plus
-/// decode, with every failure a silent skip instead of an error (the
-/// demand path owns error reporting).
+/// The prefetcher's read path: the reader's shared fetch-verify-decode
+/// helpers (the mapped path when a mapping exists, else a pread off the
+/// prefetcher's own handle), with every failure a silent skip instead
+/// of an error (the demand path owns error reporting).
 fn read_and_decode(
     file: &mut File,
     path: &Path,
@@ -267,8 +276,12 @@ fn read_and_decode(
     meta: &ChunkMeta,
     shared: &ReaderShared,
 ) -> Option<Arc<super::chunk::DecodedChunk>> {
-    let payload = read_verified_payload(file, path, idx, meta, shared).ok()?;
-    let chunk = StoreReader::decode_chunk_payload(path, layout, idx, meta, &payload).ok()?;
+    let chunk = if let Some(map) = &shared.mmap {
+        fetch_chunk_mapped(map, path, layout, idx, meta, shared).ok()?
+    } else {
+        let stored = read_verified_payload(file, path, idx, meta, shared).ok()?;
+        decode_stored_payload(path, layout, idx, meta, &stored, shared).ok()?
+    };
     Some(Arc::new(chunk))
 }
 
@@ -290,6 +303,7 @@ mod tests {
             chunk_cols,
             n_chunks: n_row_bands * n_col_bands,
             fingerprint: 0,
+            codec: crate::store::Codec::None,
         }
     }
 

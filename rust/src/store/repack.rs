@@ -20,6 +20,7 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use super::chunk::{ChunkWriter, DecodedChunk, StoreReader, StoreSummary};
+use super::codec::Codec;
 use super::format::{Layout, DEFAULT_CHUNK_ROWS};
 
 /// How to re-chunk. `chunk_cols: None` produces a row-band (LAMC2)
@@ -34,11 +35,21 @@ pub struct RepackOptions {
     /// sweep reads every chunk exactly once, so 0 (no cache) is the
     /// tightest-memory choice and costs no extra I/O.
     pub cache_budget: usize,
+    /// Payload codec for the *output* chunks — repacking is also how a
+    /// store gets compressed or decompressed in place, independent of
+    /// the source's codec (the fingerprint covers uncompressed content,
+    /// so it survives either direction).
+    pub codec: Codec,
 }
 
 impl Default for RepackOptions {
     fn default() -> Self {
-        RepackOptions { chunk_rows: DEFAULT_CHUNK_ROWS, chunk_cols: None, cache_budget: 0 }
+        RepackOptions {
+            chunk_rows: DEFAULT_CHUNK_ROWS,
+            chunk_cols: None,
+            cache_budget: 0,
+            codec: Codec::None,
+        }
     }
 }
 
@@ -46,7 +57,7 @@ impl Default for RepackOptions {
 /// Streaming both ways; fingerprint preserved. See the module docs.
 pub fn repack(src: &Path, dst: &Path, opts: &RepackOptions) -> Result<StoreSummary> {
     let reader = StoreReader::open_with_cache(src, opts.cache_budget)?;
-    repack_reader(&reader, dst, opts.chunk_rows, opts.chunk_cols)
+    repack_reader(&reader, dst, opts.chunk_rows, opts.chunk_cols, opts.codec)
 }
 
 /// Repack through an already-open reader (the reader's cache budget is
@@ -56,12 +67,14 @@ pub fn repack_reader(
     dst: &Path,
     chunk_rows: usize,
     chunk_cols: Option<usize>,
+    codec: Codec,
 ) -> Result<StoreSummary> {
     let header = reader.header();
     let mut writer = match chunk_cols {
         Some(w) => ChunkWriter::create_tiled(dst, header.layout, header.cols, chunk_rows, w)?,
         None => ChunkWriter::create(dst, header.layout, header.cols, chunk_rows)?,
     };
+    writer.set_codec(codec);
     // Same content, same identity: carry the source fingerprint forward
     // instead of recomputing over the new chunk checksums.
     writer.set_fingerprint(header.fingerprint);
@@ -85,7 +98,7 @@ pub fn repack_reader(
                 Layout::Dense => {
                     dense_row.clear();
                     for (meta, chunk) in &tiles {
-                        let DecodedChunk::Dense { values } = &**chunk else {
+                        let Some(values) = chunk.dense_values() else {
                             bail!("dense store decoded a csr chunk")
                         };
                         dense_row.extend_from_slice(&values[lr * meta.cols..(lr + 1) * meta.cols]);
@@ -163,7 +176,7 @@ mod tests {
             let s1 = repack(
                 &a,
                 &b,
-                &RepackOptions { chunk_rows: 5, chunk_cols: Some(4), cache_budget: 0 },
+                &RepackOptions { chunk_rows: 5, chunk_cols: Some(4), cache_budget: 0, codec: Codec::None },
             )
             .unwrap();
             assert!(s1.tiled);
@@ -172,12 +185,52 @@ mod tests {
             let s2 = repack(
                 &b,
                 &c,
-                &RepackOptions { chunk_rows: 16, chunk_cols: None, cache_budget: 0 },
+                &RepackOptions { chunk_rows: 16, chunk_cols: None, cache_budget: 0, codec: Codec::None },
             )
             .unwrap();
             assert!(!s2.tiled);
             assert_eq!(s2.fingerprint, s0.fingerprint);
             assert_same(&matrix, &read_back(&a));
+            assert_same(&matrix, &read_back(&b));
+            assert_same(&matrix, &read_back(&c));
+        }
+    }
+
+    #[test]
+    fn codec_round_trip_preserves_content_and_fingerprint() {
+        // none -> shuffle-lz -> none, re-chunking along the way: the
+        // fingerprint covers uncompressed content, so compressing and
+        // decompressing a store must both keep its identity.
+        for (name, matrix) in [("dense", dense(21)), ("sparse", sparse(22))] {
+            let a = tmp(&format!("{name}_codec_a.lamc2"));
+            let b = tmp(&format!("{name}_codec_b.lamc3"));
+            let c = tmp(&format!("{name}_codec_c.lamc2"));
+            let s0 = pack_matrix(&matrix, &a, 8).unwrap();
+            let s1 = repack(
+                &a,
+                &b,
+                &RepackOptions {
+                    chunk_rows: 5,
+                    chunk_cols: Some(4),
+                    cache_budget: 0,
+                    codec: Codec::ShuffleLz,
+                },
+            )
+            .unwrap();
+            assert_eq!(s1.codec, Codec::ShuffleLz);
+            assert_eq!(s1.fingerprint, s0.fingerprint, "{name}: identity survives compression");
+            let s2 = repack(
+                &b,
+                &c,
+                &RepackOptions {
+                    chunk_rows: 16,
+                    chunk_cols: None,
+                    cache_budget: 0,
+                    codec: Codec::None,
+                },
+            )
+            .unwrap();
+            assert_eq!(s2.fingerprint, s0.fingerprint, "{name}: identity survives decompression");
             assert_same(&matrix, &read_back(&b));
             assert_same(&matrix, &read_back(&c));
         }
@@ -190,7 +243,7 @@ mod tests {
         let b = tmp("rechunk_b.lamc2");
         pack_matrix(&matrix, &a, 4).unwrap();
         let reader = StoreReader::open_with_cache(&a, 0).unwrap();
-        repack_reader(&reader, &b, 32, None).unwrap();
+        repack_reader(&reader, &b, 32, None, Codec::None).unwrap();
         assert_eq!(
             reader.chunks_read() as usize,
             reader.n_chunks(),
@@ -208,7 +261,7 @@ mod tests {
         let s = repack(
             &a,
             &b,
-            &RepackOptions { chunk_rows: 9, chunk_cols: Some(7), cache_budget: 0 },
+            &RepackOptions { chunk_rows: 9, chunk_cols: Some(7), cache_budget: 0, codec: Codec::None },
         )
         .unwrap();
         assert_eq!((s.chunk_rows, s.chunk_cols), (9, 7));
@@ -229,7 +282,7 @@ mod tests {
         let s = repack(
             &path_a,
             &path_b,
-            &RepackOptions { chunk_rows: 1, chunk_cols: Some(2), cache_budget: 0 },
+            &RepackOptions { chunk_rows: 1, chunk_cols: Some(2), cache_budget: 0, codec: Codec::None },
         )
         .unwrap();
         assert_eq!(s.nnz, 3, "explicit zero kept");

@@ -223,7 +223,7 @@ fn repacked_store_serves_identical_labels_and_hits_the_same_cache() {
     let tiled_summary = repack(
         &band_path,
         &tiled_path,
-        &RepackOptions { chunk_rows: 48, chunk_cols: Some(80), cache_budget: 0 },
+        &RepackOptions { chunk_rows: 48, chunk_cols: Some(80), ..Default::default() },
     )
     .unwrap();
     assert!(tiled_summary.tiled);
@@ -271,7 +271,7 @@ fn repack_respects_the_reader_cache_byte_bound() {
     pack_matrix(&matrix, &band_path, 32).unwrap(); // one band = 30 KB
     let budget = 64 << 10; // 64 KB ≪ matrix size
     let reader = StoreReader::open_with_cache(&band_path, budget).unwrap();
-    lamc::store::repack_reader(&reader, &tiled_path, 32, Some(60)).unwrap();
+    lamc::store::repack_reader(&reader, &tiled_path, 32, Some(60), lamc::store::Codec::None).unwrap();
     // The teeth of this guard: every source chunk hit disk exactly once
     // (the sweep streams, it never re-reads around a thrashing cache)…
     assert_eq!(

@@ -6,9 +6,11 @@
 //! 1. **Byte-identical reads.** For any matrix content and any
 //!    `tile(rows, cols)` query, the in-memory `Matrix`, the row-band
 //!    LAMC2 reader and the tiled LAMC3 reader return the same bytes
-//!    (and `read_all` reconstructs the exact matrix).
+//!    (and `read_all` reconstructs the exact matrix) — under every
+//!    payload codec, with the content fingerprint codec-invariant.
 //! 2. **Byte-identical co-clustering.** `Lamc::run` produces the same
-//!    labels whichever backing the pipeline streams from.
+//!    labels whichever backing the pipeline streams from, compressed
+//!    or not.
 //! 3. **Typed failure, never a panic.** Damage to any structural region
 //!    of either format surfaces as the right `StoreError` variant, and
 //!    `lamc inspect --verify` exits non-zero on a damaged store.
@@ -39,8 +41,8 @@ use lamc::service::{
     ServiceConfig, ServiceManager, ServiceServer, ShardRouter, ShardRouterConfig,
 };
 use lamc::store::{
-    pack_matrix, pack_matrix_tiled, shard_store, MatrixRef, ShardManifest, StoreError,
-    StoreReader,
+    pack_matrix, pack_matrix_tiled, pack_matrix_tiled_with_codec, pack_matrix_with_codec,
+    shard_store, Codec, MatrixRef, ShardManifest, StoreError, StoreReader,
 };
 use lamc::testkit;
 
@@ -135,6 +137,95 @@ fn any_tile_query_is_byte_identical_across_layouts() {
 }
 
 #[test]
+fn tile_queries_and_fingerprints_are_codec_invariant() {
+    // Same contract as the layout sweep, one axis up: for each geometry,
+    // a shuffle-lz store must serve the exact bytes of its codec=none
+    // twin, carry the same content fingerprint (it chains *uncompressed*
+    // payload checksums), and never store more payload than raw.
+    let dir = tmp_dir("codec_equiv");
+    testkit::check(
+        "tile(rows, cols) + fingerprint equal across codec {none, shuffle-lz}",
+        testkit::default_cases(),
+        |rng| LayoutCase {
+            seed: rng.next_u64(),
+            rows: 1 + rng.next_below(60),
+            cols: 1 + rng.next_below(40),
+            sparse: rng.next_below(2) == 1,
+            chunk_rows: 1 + rng.next_below(16),
+            chunk_cols: 1 + rng.next_below(16),
+        },
+        |case| {
+            let matrix = build_matrix(case.seed, case.rows, case.cols, case.sparse);
+            let mut stores = Vec::new();
+            for codec in [Codec::None, Codec::ShuffleLz] {
+                let tag = codec.as_str();
+                let band_path = dir.join(format!("m_{tag}.lamc2"));
+                let tiled_path = dir.join(format!("m_{tag}.lamc3"));
+                let s2 = pack_matrix_with_codec(&matrix, &band_path, case.chunk_rows, codec)
+                    .map_err(|e| format!("pack lamc2 {tag}: {e:#}"))?;
+                let s3 = pack_matrix_tiled_with_codec(
+                    &matrix,
+                    &tiled_path,
+                    case.chunk_rows,
+                    case.chunk_cols,
+                    codec,
+                )
+                .map_err(|e| format!("pack lamc3 {tag}: {e:#}"))?;
+                for s in [&s2, &s3] {
+                    if s.stored_payload_bytes > s.raw_payload_bytes {
+                        return Err(format!(
+                            "{tag}: stored {} > raw {} payload bytes (store-smaller-of broken)",
+                            s.stored_payload_bytes, s.raw_payload_bytes
+                        ));
+                    }
+                }
+                stores.push((band_path, tiled_path, s2, s3));
+            }
+            let (_, _, none2, none3) = &stores[0];
+            let (band_lz, tiled_lz, lz2, lz3) = &stores[1];
+            if none2.fingerprint != lz2.fingerprint {
+                return Err("lamc2 fingerprint changed under shuffle-lz".into());
+            }
+            if none3.fingerprint != lz3.fingerprint {
+                return Err("lamc3 fingerprint changed under shuffle-lz".into());
+            }
+
+            let band = StoreReader::open(band_lz).map_err(|e| format!("open lamc2 lz: {e:#}"))?;
+            let tiled = StoreReader::open(tiled_lz).map_err(|e| format!("open lamc3 lz: {e:#}"))?;
+            let mut rng = Xoshiro256::seed_from(case.seed ^ 0xC0DEC);
+            for q in 0..4 {
+                let nr = 1 + rng.next_below(case.rows.min(20));
+                let nc = 1 + rng.next_below(case.cols.min(20));
+                let rows = rng.sample_indices(case.rows, nr);
+                let cols = rng.sample_indices(case.cols, nc);
+                let want = matrix.gather_block(&rows, &cols);
+                if band.tile(&rows, &cols).map_err(|e| format!("{e:#}"))?.data() != want.data() {
+                    return Err(format!("query {q}: lamc2 shuffle-lz differs"));
+                }
+                if tiled.tile(&rows, &cols).map_err(|e| format!("{e:#}"))?.data() != want.data() {
+                    return Err(format!("query {q}: lamc3 shuffle-lz differs"));
+                }
+            }
+            for (which, reader) in [("lamc2", &band), ("lamc3", &tiled)] {
+                let got = reader.read_all().map_err(|e| format!("{which} read_all: {e:#}"))?;
+                match (&matrix, &got) {
+                    (Matrix::Dense(a), Matrix::Dense(b)) if a == b => {}
+                    (Matrix::Sparse(a), Matrix::Sparse(b))
+                        if a.nnz() == b.nnz()
+                            && a.to_dense().data() == b.to_dense().data() => {}
+                    _ => {
+                        return Err(format!(
+                            "{which}: read_all does not reconstruct under shuffle-lz"
+                        ))
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn coclustering_labels_are_byte_identical_across_backings() {
     for (name, sparse) in [("dense", false), ("sparse", true)] {
         let dir = tmp_dir(&format!("e2e_{name}"));
@@ -152,10 +243,13 @@ fn coclustering_labels_are_byte_identical_across_backings() {
 
         let band_path = dir.join("m.lamc2");
         let tiled_path = dir.join("m.lamc3");
+        let lz_path = dir.join("m_lz.lamc3");
         pack_matrix(&matrix, &band_path, 48).unwrap();
         pack_matrix_tiled(&matrix, &tiled_path, 48, 40).unwrap();
+        pack_matrix_tiled_with_codec(&matrix, &lz_path, 48, 40, Codec::ShuffleLz).unwrap();
         let band = MatrixRef::open_store(&band_path).unwrap();
         let tiled = MatrixRef::open_store(&tiled_path).unwrap();
+        let lz = MatrixRef::open_store(&lz_path).unwrap();
 
         let mut config = LamcConfig { k: 3, seed: 0x1A3C, ..Default::default() };
         config.planner.candidate_sizes = vec![48, 64];
@@ -165,13 +259,17 @@ fn coclustering_labels_are_byte_identical_across_backings() {
         let in_mem = lamc.run(&matrix).unwrap();
         let from_band = lamc.run(&band).unwrap();
         let from_tiled = lamc.run(&tiled).unwrap();
+        let from_lz = lamc.run(&lz).unwrap();
 
         assert_eq!(in_mem.row_labels, from_band.row_labels, "{name}: lamc2 row labels");
         assert_eq!(in_mem.col_labels, from_band.col_labels, "{name}: lamc2 col labels");
         assert_eq!(in_mem.row_labels, from_tiled.row_labels, "{name}: lamc3 row labels");
         assert_eq!(in_mem.col_labels, from_tiled.col_labels, "{name}: lamc3 col labels");
+        assert_eq!(in_mem.row_labels, from_lz.row_labels, "{name}: shuffle-lz row labels");
+        assert_eq!(in_mem.col_labels, from_lz.col_labels, "{name}: shuffle-lz col labels");
         assert_eq!(in_mem.k, from_band.k, "{name}: k");
         assert_eq!(in_mem.k, from_tiled.k, "{name}: k");
+        assert_eq!(in_mem.k, from_lz.k, "{name}: shuffle-lz k");
 
         // The tiled run streamed strictly fewer payload bytes per tile
         // gather than full-band decoding would cost; at minimum it
@@ -304,8 +402,31 @@ fn footer_bounds(bytes: &[u8]) -> (usize, usize) {
     (start, footer_len)
 }
 
+/// Rewrite footer-body word `word_idx` through `f`, then recompute the
+/// trailer's footer checksum so only deeper validation can object.
+fn patch_footer_word(b: &mut [u8], word_idx: usize, f: impl FnOnce(u64) -> u64) {
+    let (start, len) = footer_bounds(b);
+    let at = start + word_idx * 8;
+    let v = u64::from_le_bytes(b[at..at + 8].try_into().unwrap());
+    b[at..at + 8].copy_from_slice(&f(v).to_le_bytes());
+    let ck = lamc::store::checksum_bytes(&b[start..start + len]);
+    let n = b.len();
+    b[n - 16..n - 8].copy_from_slice(&ck.to_le_bytes());
+}
+
 fn run_inspect_verify(store: &Path) -> std::process::ExitStatus {
     Command::new(env!("CARGO_BIN_EXE_lamc"))
+        .args(["inspect", "--store", store.to_str().unwrap(), "--verify"])
+        .output()
+        .expect("spawn lamc")
+        .status
+}
+
+/// `lamc inspect --verify` with the mmap read path disabled, so the
+/// pread fallback gets the same end-to-end coverage.
+fn run_inspect_verify_no_mmap(store: &Path) -> std::process::ExitStatus {
+    Command::new(env!("CARGO_BIN_EXE_lamc"))
+        .env("LAMC_NO_MMAP", "1")
         .args(["inspect", "--store", store.to_str().unwrap(), "--verify"])
         .output()
         .expect("spawn lamc")
@@ -386,6 +507,90 @@ fn corruption_in_any_region_is_a_typed_error_never_a_panic() {
         assert_eq!(probe(&p), Err("Corrupt"), "{fmt}: cross-version trailer magic");
         assert!(!run_inspect_verify(&p).success(), "{fmt}: inspect fails on trailer swap");
     }
+}
+
+#[test]
+fn compressed_payload_corruption_is_typed_and_fails_inspect() {
+    // Mostly-zero dense content so shuffle-lz genuinely engages: every
+    // chunk stores compressed, and the sweep exercises the codec decode
+    // path, not the raw fallback.
+    let dir = tmp_dir("codec_corruption");
+    let mut rng = Xoshiro256::seed_from(5);
+    let mut m = DenseMatrix::randn(48, 16, &mut rng);
+    for (i, v) in m.data_mut().iter_mut().enumerate() {
+        if i % 8 != 0 {
+            *v = 0.0;
+        }
+    }
+    let matrix = Matrix::Dense(m);
+
+    for fmt in ["lamc2", "lamc3"] {
+        let clean = dir.join(format!("clean.{fmt}"));
+        let summary = if fmt == "lamc2" {
+            pack_matrix_with_codec(&matrix, &clean, 8, Codec::ShuffleLz).unwrap()
+        } else {
+            pack_matrix_tiled_with_codec(&matrix, &clean, 8, 8, Codec::ShuffleLz).unwrap()
+        };
+        assert!(
+            summary.stored_payload_bytes < summary.raw_payload_bytes,
+            "{fmt}: sparse-ish payload compresses ({} vs {} bytes)",
+            summary.stored_payload_bytes,
+            summary.raw_payload_bytes
+        );
+        assert!(probe(&clean).is_ok(), "{fmt}: clean compressed store verifies");
+        assert!(run_inspect_verify(&clean).success(), "{fmt}: inspect passes clean");
+        assert!(
+            run_inspect_verify_no_mmap(&clean).success(),
+            "{fmt}: inspect passes clean via the pread fallback"
+        );
+
+        // A flipped byte inside a compressed payload: the stored-byte
+        // checksum catches it before any decompression runs.
+        let p = damaged(&clean, &format!("payload.{fmt}"), |b| b[10] ^= 0xFF);
+        assert_eq!(probe(&p), Err("Corrupt"), "{fmt}: compressed payload flip");
+        assert!(!run_inspect_verify(&p).success(), "{fmt}: inspect fails on payload flip");
+
+        // Inflate chunk 0's declared raw_len (footer checksum patched to
+        // match): the stream then decodes to fewer bytes than declared,
+        // which must surface as Corrupt from the codec layer itself.
+        // Footer geometry: v3 = 9 header words + 8/entry (raw_len is
+        // entry word 7); v4 = 10 header words + 10/entry (word 9).
+        let raw_len_word = if fmt == "lamc2" { 9 + 7 } else { 10 + 9 };
+        let p = damaged(&clean, &format!("rawlen.{fmt}"), |b| {
+            patch_footer_word(b, raw_len_word, |raw_len| raw_len + 1);
+        });
+        assert_eq!(probe(&p), Err("Corrupt"), "{fmt}: raw_len lie");
+        assert!(!run_inspect_verify(&p).success(), "{fmt}: inspect fails on raw_len lie");
+    }
+}
+
+#[test]
+fn crafted_overlapping_extents_are_rejected_at_open() {
+    // Both extents stay inside the payload region and the footer
+    // checksum is made consistent, so only decode_footer's pairwise
+    // disjointness check stands between a reader and silently serving
+    // chunk 0's bytes for part of chunk 1.
+    let dir = tmp_dir("overlap");
+    let mut rng = Xoshiro256::seed_from(13);
+    let matrix = Matrix::Dense(DenseMatrix::randn(40, 12, &mut rng));
+    let clean = dir.join("clean.lamc2");
+    pack_matrix(&matrix, &clean, 8).unwrap(); // 5 equal 8-row bands
+
+    // v1 footer: 8 header words + 6 words per entry; entry 1's offset
+    // is word 14. Pull it back one byte -> overlap with chunk 0.
+    let p = damaged(&clean, "overlap.lamc2", |b| {
+        patch_footer_word(b, 8 + 6, |off| off - 1);
+    });
+    assert_eq!(probe(&p), Err("Corrupt"), "overlapping extents");
+    assert!(!run_inspect_verify(&p).success(), "inspect fails on overlap");
+
+    // Alias entry 1 onto entry 0's extent exactly (equal band shapes,
+    // so the lengths already match).
+    let p = damaged(&clean, "alias.lamc2", |b| {
+        patch_footer_word(b, 8 + 6, |_| 8);
+    });
+    assert_eq!(probe(&p), Err("Corrupt"), "aliased extents");
+    assert!(!run_inspect_verify(&p).success(), "inspect fails on alias");
 }
 
 // ---- 1-node-vs-N-node shard-routing equivalence -----------------------

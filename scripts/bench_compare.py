@@ -20,7 +20,7 @@ Rules (deliberately few — shared CI runners are noisy):
   run on a branch seeds the trajectory instead of failing it.
 
 Usage:
-  bench_compare.py --current BENCH_7.json [--previous PREV.json]
+  bench_compare.py --current BENCH_9.json [--previous PREV.json]
                    [--tolerance PCT] [--min-seconds S]
   bench_compare.py --self-test
 
