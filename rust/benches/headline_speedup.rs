@@ -6,7 +6,7 @@
 //! Reports the measured reduction next to the paper's number.
 //!
 //! Run: `cargo bench --bench headline_speedup [-- --json OUT.json]` —
-//! the JSON mode is what CI's perf-smoke job folds into `BENCH_9.json`
+//! the JSON mode is what CI's perf-smoke job folds into `BENCH_10.json`
 //! and feeds to `scripts/bench_compare.py` for the perf-trajectory
 //! regression gate (tolerance policy in docs/BENCHMARKS.md).
 

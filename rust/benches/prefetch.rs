@@ -17,7 +17,7 @@
 //! is overlap vs no-overlap, not core-count noise.
 //!
 //! Run: `cargo bench --bench prefetch [-- --json OUT.json]` — the JSON
-//! mode is what CI's perf-smoke job records as `BENCH_9.json` (schema
+//! mode is what CI's perf-smoke job records as `BENCH_10.json` (schema
 //! in docs/BENCHMARKS.md).
 
 use std::sync::Arc;

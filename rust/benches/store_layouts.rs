@@ -8,7 +8,7 @@
 //!
 //! Run: `cargo bench --bench store_layouts [-- --json OUT.json]`
 //! (plain `main()`, prints a table; `--json` additionally writes the
-//! machine-readable form CI's perf-smoke job folds into `BENCH_9.json`
+//! machine-readable form CI's perf-smoke job folds into `BENCH_10.json`
 //! — schema in docs/BENCHMARKS.md).
 
 use lamc::bench_util::{bench, json_arg_path, Table};

@@ -15,5 +15,8 @@ pub mod stats;
 #[cfg(feature = "pjrt")]
 pub use router::PjrtExecutor;
 pub use router::{BlockExecutor, NativeExecutor, Route, Router};
-pub use scheduler::{band_of, plan_jobs_by_band, run_rounds, BandSpan, JobBandPlan, SchedulerConfig};
+pub use scheduler::{
+    band_of, plan_jobs_by_band, run_rounds, run_rounds_with, BandSpan, JobBandPlan, RunOptions,
+    SchedulerConfig,
+};
 pub use stats::{Histogram, HistogramSnapshot, Stats, StatsSnapshot, HIST_BOUNDS, HIST_BUCKETS};

@@ -65,6 +65,106 @@ impl SchedulerConfig {
     }
 }
 
+/// Named options for [`run_rounds_with`] and the pipeline entry points
+/// ([`crate::pipeline::Lamc::run_with`] and friends), replacing the
+/// accreted positional knobs of the older signatures. Every field has
+/// the same default the positional forms used; construct with
+/// `RunOptions::default()` and chain the builder methods:
+///
+/// ```
+/// use lamc::coordinator::RunOptions;
+/// let opts = RunOptions::default().workers(4).seed(7).prefetch(false);
+/// assert_eq!(opts.workers, 4);
+/// assert!(opts.base_generation.is_none());
+/// ```
+#[derive(Clone, Debug)]
+pub struct RunOptions {
+    /// Concurrency cap (0 = available parallelism). Never affects
+    /// results, only speed.
+    pub workers: usize,
+    /// Co-cluster count requested from each block.
+    pub k: usize,
+    /// Base seed for leader sampling and per-job seeds.
+    pub seed: u64,
+    /// Job-lifecycle event sink. Advisory: results never depend on it.
+    pub trace: Trace,
+    /// Let a store-backed matrix overlap next-round chunk I/O with the
+    /// current round's compute (default on). Advisory: turning it off
+    /// only changes wall-clock, never results.
+    pub prefetch: bool,
+    /// Incremental mode (pipeline only): the store append generation a
+    /// previous run's [`crate::pipeline::RunBasis`] was computed
+    /// against. `None` means "the basis's own recorded generation".
+    /// The raw scheduler ignores this field.
+    pub base_generation: Option<u64>,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            k: 4,
+            seed: 0x5EED,
+            trace: Trace::default(),
+            prefetch: true,
+            base_generation: None,
+        }
+    }
+}
+
+impl RunOptions {
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = workers;
+        self
+    }
+
+    pub fn k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn trace(mut self, trace: Trace) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.prefetch = on;
+        self
+    }
+
+    pub fn base_generation(mut self, generation: u64) -> Self {
+        self.base_generation = Some(generation);
+        self
+    }
+
+    pub fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        }
+    }
+}
+
+impl From<&SchedulerConfig> for RunOptions {
+    fn from(cfg: &SchedulerConfig) -> Self {
+        Self {
+            workers: cfg.workers,
+            k: cfg.k,
+            seed: cfg.seed,
+            trace: cfg.trace.clone(),
+            prefetch: true,
+            base_generation: None,
+        }
+    }
+}
+
 /// Deterministic per-job seed: independent of scheduling order.
 pub fn job_seed(base: u64, job: &BlockJob) -> u64 {
     let mut sm = SplitMix64::new(
@@ -98,6 +198,22 @@ pub fn run_rounds<'a>(
     cfg: &SchedulerConfig,
     stats: &Stats,
 ) -> Result<Vec<(BlockJob, crate::cocluster::CoclusterResult)>> {
+    // Deprecated positional form, kept so existing call sites compile
+    // unchanged: forwards to [`run_rounds_with`]. New code should build
+    // a [`RunOptions`] instead.
+    run_rounds_with(matrix, rounds, router, &RunOptions::from(cfg), stats)
+}
+
+/// [`run_rounds`] with named options: same execution, but the knobs
+/// (workers, k, seed, trace, prefetch) arrive as a [`RunOptions`]
+/// builder instead of a positional config.
+pub fn run_rounds_with<'a>(
+    matrix: impl Into<MatrixView<'a>>,
+    rounds: &[SamplingRound],
+    router: &Router,
+    opts: &RunOptions,
+    stats: &Stats,
+) -> Result<Vec<(BlockJob, crate::cocluster::CoclusterResult)>> {
     let matrix: MatrixView<'a> = matrix.into();
     let jobs: Vec<&BlockJob> = rounds.iter().flat_map(|r| r.jobs.iter()).collect();
     if jobs.is_empty() {
@@ -106,7 +222,7 @@ pub fn run_rounds<'a>(
     let slots: Mutex<Vec<Option<Result<crate::cocluster::CoclusterResult>>>> =
         Mutex::new((0..jobs.len()).map(|_| None).collect());
 
-    let trace = &cfg.trace;
+    let trace = &opts.trace;
     // Per-round (gather_ns, exec_ns) accumulation feeding the
     // `RoundCompleted` events; `round_of` maps a flat job index back to
     // its round.
@@ -144,10 +260,10 @@ pub fn run_rounds<'a>(
 
         let result = match block {
             Ok(block) => {
-                let seed = job_seed(cfg.seed, job);
+                let seed = job_seed(opts.seed, job);
                 let exec_start_us = trace.now_us();
                 let t1 = Instant::now();
-                let result = router.execute(&block, cfg.k, seed, stats);
+                let result = router.execute(&block, opts.k, seed, stats);
                 let exec_ns = t1.elapsed().as_nanos() as u64;
                 stats.add_exec(exec_ns);
                 round_ns[round_of[idx]].1.fetch_add(exec_ns, Ordering::Relaxed);
@@ -192,9 +308,9 @@ pub fn run_rounds<'a>(
         prefetch_wasted_bytes: io.prefetch_wasted_bytes,
     };
 
-    if !matrix.prefetch_enabled() {
-        // Nothing to prefetch (in-memory matrix, or a reader with
-        // prefetch disabled): keep the flat single-wave dispatch —
+    if !opts.prefetch || !matrix.prefetch_enabled() {
+        // Nothing to prefetch (in-memory matrix, a reader with prefetch
+        // disabled, or prefetch opted out): keep the flat single-wave dispatch —
         // workers stay busy across round boundaries instead of idling
         // behind each round's straggler.
         let flat_start_us = trace.now_us();
@@ -203,7 +319,7 @@ pub fn run_rounds<'a>(
                 trace.emit(Event::RoundStarted { round: r as u64, jobs: round.jobs.len() as u64 });
             }
         }
-        let concurrency = cfg.effective_workers().min(jobs.len());
+        let concurrency = opts.effective_workers().min(jobs.len());
         WorkerPool::global().run_jobs(concurrency, jobs.len(), &run_one);
         // Fold the store I/O this reader accumulated (watermarked claim,
         // so concurrent runs sharing the reader never double-count).
@@ -252,7 +368,7 @@ pub fn run_rounds<'a>(
             }
             trace.emit(Event::RoundStarted { round: r as u64, jobs: round.jobs.len() as u64 });
             let round_start_us = trace.now_us();
-            let concurrency = cfg.effective_workers().min(round.jobs.len());
+            let concurrency = opts.effective_workers().min(round.jobs.len());
             let offset = base;
             WorkerPool::global().run_jobs(concurrency, round.jobs.len(), |i| run_one(offset + i));
             base += round.jobs.len();
@@ -433,6 +549,18 @@ mod tests {
             assert_eq!(ja.round, jb.round);
             assert_eq!(ra, rb, "job {:?} differs across worker counts", ja.grid);
         }
+    }
+
+    #[test]
+    fn run_options_form_matches_positional_form() {
+        let (matrix, rounds) = setup();
+        let router = Router::native_only(Arc::new(SpectralCocluster::default()));
+        let old = run_rounds(&matrix, &rounds, &router, &SchedulerConfig::default(), &Stats::default()).unwrap();
+        let new = run_rounds_with(&matrix, &rounds, &router, &RunOptions::default(), &Stats::default()).unwrap();
+        assert_eq!(old, new, "RunOptions defaults mirror SchedulerConfig defaults");
+        let opts = RunOptions::default().prefetch(false);
+        let flat = run_rounds_with(&matrix, &rounds, &router, &opts, &Stats::default()).unwrap();
+        assert_eq!(old, flat, "prefetch is advisory: results identical");
     }
 
     #[test]

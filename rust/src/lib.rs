@@ -95,4 +95,5 @@ pub mod store;
 pub mod testkit;
 pub mod trace;
 
-pub use pipeline::{Lamc, LamcConfig, LamcResult};
+pub use coordinator::RunOptions;
+pub use pipeline::{Lamc, LamcConfig, LamcResult, RunBasis};

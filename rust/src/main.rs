@@ -21,8 +21,12 @@
 //! * `submit`   — submit a job to a running service (or router).
 //! * `status`   — query a job's state (or server-wide stats) on a
 //!                running service.
+//! * `append`   — append rows (stdin) to a store-backed matrix on a
+//!                running service; the server seals them as new row
+//!                bands and queues an incremental re-clustering.
 //! * `watch`    — stream a job's lifecycle events (EVENTS cursor
-//!                protocol) until it finishes.
+//!                protocol) until it finishes, or follow a matrix's
+//!                append/label-update feed (`--follow`, SUBSCRIBE verb).
 //! * `profile`  — print a job's span tree with critical-path analysis
 //!                (SPANS verb).
 //! * `trace-export` — dump a job's span tree as Chrome trace-event
@@ -98,7 +102,10 @@ USAGE:
                 [--p-thresh F] [--tau F] [--workers N] [--wait] [--timeout SECS]
                 [--labels-out FILE (with --wait)]
   lamc status   [--addr HOST:PORT] [--id N]
-  lamc watch    [--addr HOST:PORT] --id N [--timeout SECS]
+  lamc append   [--addr HOST:PORT] --name NAME --cols N [--format dense|sparse]
+                (rows on stdin, ingest formats; see docs/STORE.md)
+  lamc watch    [--addr HOST:PORT] (--id N | --name NAME --follow [--once])
+                [--timeout SECS]
   lamc profile  [--addr HOST:PORT] --id N
   lamc trace-export [--addr HOST:PORT] --id N [--format chrome] [--out FILE]
   lamc metrics  [--addr HOST:PORT]
@@ -124,7 +131,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["verbose", "no-runtime", "help", "wait", "verify"])?;
+    let args = Args::from_env(&["verbose", "no-runtime", "help", "wait", "verify", "follow", "once"])?;
     if args.has("verbose") {
         lamc::logging::set_level(lamc::logging::Level::Debug);
     }
@@ -144,6 +151,7 @@ fn run() -> Result<()> {
         "route" => cmd_route(&args),
         "submit" => cmd_submit(&args),
         "status" => cmd_status(&args),
+        "append" => cmd_append(&args),
         "watch" => cmd_watch(&args),
         "profile" => cmd_profile(&args),
         "trace-export" => cmd_trace_export(&args),
@@ -683,12 +691,128 @@ fn cmd_status(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Append rows (stdin, the `lamc ingest` line formats) to a
+/// store-backed matrix on a running service. The server seals them as
+/// new row bands with a bumped footer generation and — when an earlier
+/// job left a run basis — queues an incremental re-clustering whose id
+/// is printed for `lamc watch`.
+fn cmd_append(args: &Args) -> Result<()> {
+    args.expect_flags(&["addr", "name", "cols", "format"])?;
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let name = args.get("name").context("--name required (target matrix)")?;
+    let cols = args.get_usize("cols", 0)?;
+    anyhow::ensure!(cols > 0, "--cols required (row width of the target store)");
+    let sparse = match args.get_or("format", "dense") {
+        "dense" => false,
+        "sparse" => true,
+        other => bail!("unknown --format '{other}' (want dense|sparse)"),
+    };
+    let stdin = std::io::stdin();
+    let mut values: Vec<f32> = Vec::new();
+    let mut rows = 0usize;
+    for (lineno, line) in stdin.lock().lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parse = || -> Result<()> {
+            let at = values.len();
+            if sparse {
+                values.resize(at + cols, 0.0);
+                for tok in line.split_whitespace() {
+                    let (j, v) = tok.split_once(':').context("want col:value")?;
+                    let j: usize = j.parse()?;
+                    anyhow::ensure!(j < cols, "column {j} out of range (--cols {cols})");
+                    values[at + j] = v.parse::<f32>()?;
+                }
+            } else {
+                for tok in line.split_whitespace() {
+                    values.push(tok.parse::<f32>()?);
+                }
+                anyhow::ensure!(
+                    values.len() - at == cols,
+                    "row has {} values, want {cols}",
+                    values.len() - at
+                );
+            }
+            Ok(())
+        };
+        parse().with_context(|| format!("stdin line {}", lineno + 1))?;
+        rows += 1;
+    }
+    anyhow::ensure!(rows > 0, "no rows on stdin to append");
+    let mut client = ServiceClient::connect(addr)?;
+    let reply = client.append(name, rows, cols, &values)?;
+    println!(
+        "appended {rows} row(s) to '{name}': now {} rows, generation {}",
+        reply.total_rows, reply.generation
+    );
+    match reply.job {
+        Some(id) => println!("incremental re-clustering queued as job {id} (lamc watch --id {id})"),
+        None => println!("no incremental job queued (no prior run to extend — submit one)"),
+    }
+    Ok(())
+}
+
+/// Follow a matrix's feed journal (`SUBSCRIBE` cursor protocol): print
+/// `MatrixAppended` / `LabelsUpdated` events as they land. `--once`
+/// exits after the first page carrying a label update — the CI stream
+/// smoke waits on exactly that. Requires the unified binary framing, so
+/// servers that predate `HELLO framing=binary` answer with a typed
+/// error.
+fn cmd_watch_follow(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", DEFAULT_ADDR);
+    let name = args.get("name").context("--name required with --follow")?;
+    let timeout = std::time::Duration::from_secs(args.get_u64("timeout", 600)?);
+    let deadline = std::time::Instant::now() + timeout;
+    let mut client = ServiceClient::connect(addr)?;
+    client.hello()?;
+    let mut cursor: Option<u64> = None;
+    const BACKOFF_FLOOR: std::time::Duration = std::time::Duration::from_millis(25);
+    const BACKOFF_CAP: std::time::Duration = std::time::Duration::from_millis(1000);
+    let mut backoff = BACKOFF_FLOOR;
+    loop {
+        let (lines, next) = client.subscribe(name, cursor)?;
+        let mut label_update = false;
+        for line in &lines {
+            println!("{line}");
+            label_update |= line.split_whitespace().any(|t| t == "kind=LabelsUpdated");
+        }
+        // `--once` returns after the *page* that carried a label update,
+        // so every event already in the feed (e.g. the MatrixAppended
+        // preceding it) is printed before exit.
+        if args.has("once") && label_update {
+            return Ok(());
+        }
+        if let Some(n) = next {
+            cursor = Some(n);
+        }
+        if lines.is_empty() {
+            anyhow::ensure!(
+                std::time::Instant::now() < deadline,
+                "timed out after {}s following '{name}'",
+                timeout.as_secs()
+            );
+            std::thread::sleep(backoff);
+            backoff = (backoff * 2).min(BACKOFF_CAP);
+        } else {
+            backoff = BACKOFF_FLOOR;
+        }
+    }
+}
+
 /// Tail a job's lifecycle event journal until a terminal event lands.
 /// Polls the `EVENTS` cursor protocol (so restarts/reconnects resume at
 /// the last seen sequence number) and prints one event per line — the
-/// CI shard smoke greps this transcript for `RoundCompleted`.
+/// CI shard smoke greps this transcript for `RoundCompleted`. With
+/// `--follow --name`, tails a matrix feed instead (see
+/// [`cmd_watch_follow`]).
 fn cmd_watch(args: &Args) -> Result<()> {
-    args.expect_flags(&["addr", "id", "timeout"])?;
+    args.expect_flags(&["addr", "id", "timeout", "name"])?;
+    if args.has("follow") || args.get("name").is_some() {
+        return cmd_watch_follow(args);
+    }
     let addr = args.get_or("addr", DEFAULT_ADDR);
     anyhow::ensure!(args.get("id").is_some(), "--id required (job to watch)");
     let id = args.get_u64("id", 0)?;

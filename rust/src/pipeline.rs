@@ -4,15 +4,18 @@
 //! of the `lamc` binary and the benches): everything from §IV of the
 //! paper composed behind one `run` method.
 
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::cocluster::{AtomCocluster, Pnmtf, SpectralCocluster};
-use crate::coordinator::{run_rounds, Router, SchedulerConfig, Stats, StatsSnapshot};
-use crate::merge::{extract_labels, merge_coclusters, Cocluster, MergeConfig};
-use crate::partition::{plan_view, sample_partition_view, BlockJob, PartitionPlan, PlannerConfig};
+use crate::coordinator::{run_rounds_with, Router, RunOptions, Stats, StatsSnapshot};
+use crate::merge::{extract_labels, reduce_partial_sets, Cocluster, MergeConfig};
+use crate::partition::{
+    plan_view, sample_partition_view, BlockJob, PartitionPlan, PlannerConfig, SamplingRound,
+};
 #[cfg(feature = "pjrt")]
 use crate::runtime::RuntimePool;
 use crate::store::MatrixView;
@@ -110,6 +113,88 @@ pub struct LamcResult {
     pub elapsed_s: f64,
 }
 
+/// Per-job atom co-clusters retained from a run, enabling incremental
+/// re-clustering after a store append ([`Lamc::run_incremental`]).
+///
+/// The basis pins the exact inputs its atoms were computed from: matrix
+/// dims, content fingerprint and store append generation at run time,
+/// plus — in flat (round, grid) job order — every block job and the
+/// atom co-clusters it produced. An incremental run replays the plan
+/// and sampling on the final data, reuses retained atoms for jobs that
+/// match the basis exactly and touch no dirty rows, recomputes the
+/// rest, and re-merges everything in the same flat order through
+/// [`reduce_partial_sets`] — so its labels are byte-identical to a
+/// from-scratch run on the same final matrix.
+#[derive(Clone, Debug)]
+pub struct RunBasis {
+    pub rows: usize,
+    pub cols: usize,
+    /// Content fingerprint of the matrix the basis was computed from.
+    pub fingerprint: u64,
+    /// Store append generation at run time (0 for in-memory inputs and
+    /// never-appended stores).
+    pub generation: u64,
+    /// `(job, atoms)` per block job, in flat (round, grid) order.
+    pub partials: Vec<(BlockJob, Vec<Cocluster>)>,
+}
+
+/// Dirty row ranges of `matrix` relative to `basis`, or `None` when the
+/// change cannot be attributed and every block must recompute:
+///
+/// * fingerprint and dims unchanged → nothing dirty (full reuse);
+/// * column count changed or rows shrank → `None` (every block shifts);
+/// * store-backed with append generations past the basis → the store's
+///   per-band generation tags ([`MatrixView::dirty_rows_since`]), plus
+///   any rows past the basis snapshot;
+/// * otherwise (mutated in-memory matrix, replaced store file) → `None`.
+fn dirty_rows_against(
+    matrix: MatrixView<'_>,
+    basis: &RunBasis,
+    base_generation: Option<u64>,
+) -> Option<Vec<(usize, usize)>> {
+    if matrix.fingerprint() == basis.fingerprint
+        && matrix.rows() == basis.rows
+        && matrix.cols() == basis.cols
+    {
+        return Some(Vec::new());
+    }
+    if matrix.cols() != basis.cols || matrix.rows() < basis.rows {
+        return None;
+    }
+    let gen = base_generation.unwrap_or(basis.generation);
+    if matrix.generation() <= gen {
+        // Different fingerprint but no newer append generation: the
+        // backing data changed out from under us in a way generation
+        // tags cannot localize.
+        return None;
+    }
+    let mut ranges = matrix.dirty_rows_since(gen);
+    if matrix.rows() > basis.rows {
+        ranges.push((basis.rows, matrix.rows()));
+    }
+    Some(normalize_ranges(ranges))
+}
+
+/// Sort + coalesce half-open `[lo, hi)` ranges (adjacent ranges merge).
+fn normalize_ranges(mut ranges: Vec<(usize, usize)>) -> Vec<(usize, usize)> {
+    ranges.retain(|&(lo, hi)| hi > lo);
+    ranges.sort_unstable();
+    let mut out: Vec<(usize, usize)> = Vec::with_capacity(ranges.len());
+    for (lo, hi) in ranges {
+        match out.last_mut() {
+            Some(last) if lo <= last.1 => last.1 = last.1.max(hi),
+            _ => out.push((lo, hi)),
+        }
+    }
+    out
+}
+
+/// Membership test against sorted, disjoint half-open ranges.
+fn row_in_ranges(ranges: &[(usize, usize)], row: usize) -> bool {
+    let i = ranges.partition_point(|&(_, hi)| hi <= row);
+    i < ranges.len() && ranges[i].0 <= row
+}
+
 /// The LAMC driver.
 pub struct Lamc {
     pub config: LamcConfig,
@@ -147,13 +232,78 @@ impl Lamc {
         atoms
     }
 
+    /// [`RunOptions`] seeded from this driver's config (workers, k,
+    /// seed, trace) — the starting point for [`Lamc::run_with`] callers
+    /// that want to override a field or two.
+    pub fn options(&self) -> RunOptions {
+        RunOptions::default()
+            .workers(self.config.workers)
+            .k(self.config.k)
+            .seed(self.config.seed)
+            .trace(self.config.trace.clone())
+    }
+
     /// Run the full pipeline on a matrix — in-memory (`&Matrix`, as
     /// before) or store-backed (`&MatrixRef` / `&StoreReader`): block
     /// gathers then stream row-band tiles from disk instead of copying
     /// from RAM, with byte-identical labels for equal content, seed and
     /// config (asserted by `tests/integration_store.rs`).
+    ///
+    /// Positional form kept for compatibility: forwards to
+    /// [`Lamc::run_with`] with [`Lamc::options`].
     pub fn run<'a>(&self, matrix: impl Into<MatrixView<'a>>) -> Result<LamcResult> {
-        let matrix: MatrixView<'a> = matrix.into();
+        self.run_with(matrix, &self.options())
+    }
+
+    /// [`Lamc::run`] with named options: `opts` supplies the workers /
+    /// k / seed / trace / prefetch knobs (overriding the corresponding
+    /// config fields), so call sites name what they change instead of
+    /// threading positional parameters.
+    pub fn run_with<'a>(
+        &self,
+        matrix: impl Into<MatrixView<'a>>,
+        opts: &RunOptions,
+    ) -> Result<LamcResult> {
+        Ok(self.run_inner(matrix.into(), opts, None, false)?.0)
+    }
+
+    /// [`Lamc::run_with`], additionally retaining the per-job atom sets
+    /// as a [`RunBasis`] so a later [`Lamc::run_incremental`] can reuse
+    /// them after the matrix grows.
+    pub fn run_tracked<'a>(
+        &self,
+        matrix: impl Into<MatrixView<'a>>,
+        opts: &RunOptions,
+    ) -> Result<(LamcResult, RunBasis)> {
+        let (result, basis) = self.run_inner(matrix.into(), opts, None, true)?;
+        Ok((result, basis.expect("basis requested")))
+    }
+
+    /// Incremental re-clustering against a previous run's [`RunBasis`]:
+    /// replays the plan and sampling on the final matrix, re-runs only
+    /// the block jobs that intersect rows dirtied since the basis (or
+    /// since `opts.base_generation` when set), reuses the retained
+    /// atoms everywhere else, and re-merges the full flat sequence via
+    /// [`reduce_partial_sets`]. Labels are byte-identical to
+    /// [`Lamc::run`] on the same final matrix; the returned basis
+    /// supersedes the one passed in.
+    pub fn run_incremental<'a>(
+        &self,
+        matrix: impl Into<MatrixView<'a>>,
+        opts: &RunOptions,
+        basis: &RunBasis,
+    ) -> Result<(LamcResult, RunBasis)> {
+        let (result, next) = self.run_inner(matrix.into(), opts, Some(basis), true)?;
+        Ok((result, next.expect("basis requested")))
+    }
+
+    fn run_inner(
+        &self,
+        matrix: MatrixView<'_>,
+        opts: &RunOptions,
+        basis: Option<&RunBasis>,
+        want_basis: bool,
+    ) -> Result<(LamcResult, Option<RunBasis>)> {
         let t0 = Instant::now();
         let cfg = &self.config;
         let (rows, cols) = (matrix.rows(), matrix.cols());
@@ -172,7 +322,7 @@ impl Lamc {
             }
         }
         if planner.workers == 0 {
-            planner.workers = SchedulerConfig { workers: cfg.workers, ..Default::default() }.effective_workers();
+            planner.workers = opts.effective_workers();
         }
         let partition_plan = plan_view(matrix, &planner);
         crate::log_info!(
@@ -183,10 +333,59 @@ impl Lamc {
 
         // 2. Sample shuffled partitions (index permutations only — no
         //    data is read here, wherever the matrix lives).
-        let mut rng = crate::coordinator::scheduler::leader_rng(cfg.seed);
+        let mut rng = crate::coordinator::scheduler::leader_rng(opts.seed);
         let rounds = sample_partition_view(matrix, &partition_plan, &mut rng);
+        let flat: Vec<&BlockJob> = rounds.iter().flat_map(|r| r.jobs.iter()).collect();
 
-        // 3. Schedule block jobs.
+        // 2b. Incremental: decide which retained atom sets still stand.
+        //     A retained set is reused only when the replayed job has
+        //     exactly the basis job's row/col ids and touches no dirty
+        //     rows — so the merge input below cannot differ from a
+        //     from-scratch run's.
+        let dirty = basis.and_then(|b| dirty_rows_against(matrix, b, opts.base_generation));
+        let mut atom_sets: Vec<Option<Vec<Cocluster>>> = vec![None; flat.len()];
+        if let (Some(b), Some(dirty)) = (basis, dirty.as_ref()) {
+            let index: HashMap<(usize, (usize, usize)), &(BlockJob, Vec<Cocluster>)> =
+                b.partials.iter().map(|p| ((p.0.round, p.0.grid), p)).collect();
+            let mut reused = 0usize;
+            for (i, job) in flat.iter().enumerate() {
+                if let Some((bjob, atoms)) = index.get(&(job.round, job.grid)).map(|p| (&p.0, &p.1))
+                {
+                    if bjob.rows == job.rows
+                        && bjob.cols == job.cols
+                        && !job.rows.iter().any(|&r| row_in_ranges(dirty, r))
+                    {
+                        atom_sets[i] = Some(atoms.clone());
+                        reused += 1;
+                    }
+                }
+            }
+            crate::log_info!(
+                "incremental: reusing {reused}/{} block jobs ({} dirty row ranges)",
+                flat.len(),
+                dirty.len()
+            );
+        }
+
+        // 3. Schedule the jobs that still need compute (all of them on
+        //    a fresh run), preserving round numbers so per-job seeds
+        //    match a from-scratch run exactly.
+        let mut pending: Vec<SamplingRound> = Vec::new();
+        {
+            let mut i = 0usize;
+            for round in &rounds {
+                let mut jobs = Vec::new();
+                for job in &round.jobs {
+                    if atom_sets[i].is_none() {
+                        jobs.push(job.clone());
+                    }
+                    i += 1;
+                }
+                if !jobs.is_empty() {
+                    pending.push(SamplingRound { round: round.round, jobs });
+                }
+            }
+        }
         let atom = cfg.atom_override.clone().unwrap_or_else(|| cfg.atom.build());
         #[cfg(feature = "pjrt")]
         let router = match &cfg.runtime {
@@ -195,43 +394,63 @@ impl Lamc {
         };
         #[cfg(not(feature = "pjrt"))]
         let router = Router::native_only(atom);
-        let sched_cfg = SchedulerConfig {
-            workers: cfg.workers,
-            k: cfg.k,
-            seed: cfg.seed,
-            trace: cfg.trace.clone(),
-        };
         let stats = Stats::default();
-        let results = run_rounds(matrix, &rounds, &router, &sched_cfg, &stats)?;
+        let results = run_rounds_with(matrix, &pending, &router, opts, &stats)?;
 
-        // 4. Hierarchical merge.
-        let merge_start_us = cfg.trace.now_us();
+        // Slot freshly computed atoms into the flat job order (the
+        // scheduler returns pending jobs in exactly that order).
+        let mut computed = results.into_iter();
+        for slot in atom_sets.iter_mut() {
+            if slot.is_none() {
+                let (job, res) = computed.next().expect("scheduler returns every pending job");
+                *slot = Some(Self::block_to_atoms(&job, &res));
+            }
+        }
+        debug_assert!(computed.next().is_none(), "scheduler returned surplus jobs");
+
+        // 4. Hierarchical merge — always over the full flat job
+        //    sequence, so incremental and from-scratch runs feed the
+        //    merge byte-identical input.
+        let merge_start_us = opts.trace.now_us();
         let t_merge = Instant::now();
-        let atoms: Vec<Cocluster> = results
-            .iter()
-            .flat_map(|(job, res)| Self::block_to_atoms(job, res))
-            .collect();
-        crate::log_info!("merging {} atom co-clusters", atoms.len());
-        cfg.trace.emit(Event::MergeStarted { blocks: atoms.len() as u64 });
-        let merged = merge_coclusters(atoms, &cfg.merge);
+        let partial_sets: Vec<Vec<Cocluster>> =
+            atom_sets.into_iter().map(|a| a.expect("every job resolved")).collect();
+        let out_basis = want_basis.then(|| RunBasis {
+            rows,
+            cols,
+            fingerprint: matrix.fingerprint(),
+            generation: matrix.generation(),
+            partials: flat
+                .iter()
+                .zip(partial_sets.iter())
+                .map(|(job, atoms)| ((**job).clone(), atoms.clone()))
+                .collect(),
+        });
+        let n_atoms: usize = partial_sets.iter().map(|s| s.len()).sum();
+        crate::log_info!("merging {n_atoms} atom co-clusters");
+        opts.trace.emit(Event::MergeStarted { blocks: n_atoms as u64 });
+        let merged = reduce_partial_sets(partial_sets, &cfg.merge);
         let (row_labels, col_labels, k) = extract_labels(&merged, rows, cols);
         let merge_ns = t_merge.elapsed().as_nanos() as u64;
         stats.merge_ns.store(merge_ns, std::sync::atomic::Ordering::Relaxed);
         stats.hist_merge.observe_ns(merge_ns);
-        cfg.trace.add_span("merge", 0, merge_start_us, merge_ns / 1_000);
-        cfg.trace.emit(Event::MergeCompleted { k: k as u64, merge_s: merge_ns as f64 / 1e9 });
+        opts.trace.add_span("merge", 0, merge_start_us, merge_ns / 1_000);
+        opts.trace.emit(Event::MergeCompleted { k: k as u64, merge_s: merge_ns as f64 / 1e9 });
 
         let snapshot = stats.snapshot();
         crate::log_info!("done: k={k}, {snapshot}");
-        Ok(LamcResult {
-            row_labels,
-            col_labels,
-            k,
-            coclusters: merged,
-            plan: partition_plan,
-            stats: snapshot,
-            elapsed_s: t0.elapsed().as_secs_f64(),
-        })
+        Ok((
+            LamcResult {
+                row_labels,
+                col_labels,
+                k,
+                coclusters: merged,
+                plan: partition_plan,
+                stats: snapshot,
+                elapsed_s: t0.elapsed().as_secs_f64(),
+            },
+            out_basis,
+        ))
     }
 
     /// Run the *baseline* (no partitioning): the atom directly on the
@@ -246,19 +465,30 @@ impl Lamc {
     /// at once: a store-backed input is materialized into RAM first
     /// (this is exactly the memory wall the partitioned path avoids).
     pub fn run_baseline<'a>(&self, matrix: impl Into<MatrixView<'a>>) -> Result<LamcResult> {
+        self.run_baseline_with(matrix, &self.options())
+    }
+
+    /// [`Lamc::run_baseline`] with named options. Only `k` and `seed`
+    /// participate — the baseline has no scheduler, prefetcher or
+    /// incremental mode, so the other fields are ignored.
+    pub fn run_baseline_with<'a>(
+        &self,
+        matrix: impl Into<MatrixView<'a>>,
+        opts: &RunOptions,
+    ) -> Result<LamcResult> {
         let matrix: MatrixView<'a> = matrix.into();
         let t0 = Instant::now();
         let cfg = &self.config;
         let atom = cfg.atom_override.clone().unwrap_or_else(|| cfg.atom.build());
         let stats = Stats::default();
-        let mut rng = crate::rng::Xoshiro256::seed_from(cfg.seed);
+        let mut rng = crate::rng::Xoshiro256::seed_from(opts.seed);
         let whole = matrix.materialize()?;
         // Materializing a stored matrix is real I/O — surface it like
         // the partitioned path does (watermarked claim, never
         // double-counted across concurrent runs on a shared reader).
         stats.add_io(&matrix.take_io_delta());
         let t_exec = Instant::now();
-        let res = atom.cocluster(&whole, cfg.k, &mut rng);
+        let res = atom.cocluster(&whole, opts.k, &mut rng);
         stats.add_exec(t_exec.elapsed().as_nanos() as u64);
         stats.blocks_total.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         stats.blocks_native.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
@@ -360,6 +590,67 @@ mod tests {
         assert_eq!(out.stats.blocks_total, 1);
         assert_eq!(out.stats.blocks_native, 1);
         assert!(out.stats.exec_s > 0.0);
+    }
+
+    #[test]
+    fn range_helpers_normalize_and_probe() {
+        assert_eq!(
+            normalize_ranges(vec![(5, 7), (0, 2), (6, 9), (2, 3), (4, 4)]),
+            vec![(0, 3), (5, 9)]
+        );
+        let r = [(0usize, 3usize), (5, 9)];
+        assert!(row_in_ranges(&r, 0));
+        assert!(row_in_ranges(&r, 2));
+        assert!(!row_in_ranges(&r, 3));
+        assert!(!row_in_ranges(&r, 4));
+        assert!(row_in_ranges(&r, 5));
+        assert!(row_in_ranges(&r, 8));
+        assert!(!row_in_ranges(&r, 9));
+        assert!(!row_in_ranges(&[], 0));
+    }
+
+    #[test]
+    fn run_with_options_matches_positional_run() {
+        let ds = planted_dense(&PlantedConfig { rows: 150, cols: 120, seed: 806, ..Default::default() });
+        let lamc = Lamc::new(fast_config(4));
+        let a = lamc.run(&ds.matrix).unwrap();
+        let b = lamc.run_with(&ds.matrix, &lamc.options()).unwrap();
+        assert_eq!(a.row_labels, b.row_labels);
+        assert_eq!(a.col_labels, b.col_labels);
+        assert_eq!(a.k, b.k);
+    }
+
+    #[test]
+    fn incremental_reuses_everything_when_content_unchanged() {
+        let ds = planted_dense(&PlantedConfig { rows: 150, cols: 120, seed: 807, ..Default::default() });
+        let lamc = Lamc::new(fast_config(4));
+        let (fresh, basis) = lamc.run_tracked(&ds.matrix, &lamc.options()).unwrap();
+        assert_eq!(basis.rows, 150);
+        assert_eq!(basis.cols, 120);
+        assert!(!basis.partials.is_empty());
+        let (incr, next) = lamc.run_incremental(&ds.matrix, &lamc.options(), &basis).unwrap();
+        assert_eq!(incr.row_labels, fresh.row_labels);
+        assert_eq!(incr.col_labels, fresh.col_labels);
+        assert_eq!(incr.k, fresh.k);
+        assert_eq!(incr.stats.blocks_total, 0, "unchanged content: every job reused");
+        assert_eq!(next.fingerprint, basis.fingerprint);
+        assert_eq!(next.partials.len(), basis.partials.len());
+    }
+
+    #[test]
+    fn incremental_on_changed_in_memory_matrix_recomputes_and_matches_fresh() {
+        // An in-memory matrix has no append generations, so any content
+        // change is unattributable → full recompute, but still through
+        // the incremental path, and still byte-identical to `run`.
+        let a = planted_dense(&PlantedConfig { rows: 150, cols: 120, seed: 808, ..Default::default() });
+        let b = planted_dense(&PlantedConfig { rows: 150, cols: 120, seed: 809, ..Default::default() });
+        let lamc = Lamc::new(fast_config(4));
+        let (_, basis) = lamc.run_tracked(&a.matrix, &lamc.options()).unwrap();
+        let (incr, _) = lamc.run_incremental(&b.matrix, &lamc.options(), &basis).unwrap();
+        let fresh = lamc.run(&b.matrix).unwrap();
+        assert_eq!(incr.row_labels, fresh.row_labels);
+        assert_eq!(incr.col_labels, fresh.col_labels);
+        assert!(incr.stats.blocks_total > 0, "unattributable change recomputes blocks");
     }
 
     #[test]

@@ -37,14 +37,30 @@ pub struct ResultReply {
     pub cached: bool,
 }
 
+/// Outcome of an `APPEND`, as reported by the server.
+#[derive(Clone, Copy, Debug)]
+pub struct AppendReply {
+    /// Row count of the grown matrix.
+    pub total_rows: usize,
+    /// Store generation after the append.
+    pub generation: u64,
+    /// Incremental re-clustering job the append queued, if any.
+    pub job: Option<u64>,
+}
+
 pub struct ServiceClient {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
-    /// Auto-negotiated result framing: starts optimistic (binary
-    /// `RESULTB`); a server that answers "unknown verb" downgrades this
-    /// connection to the text `RESULT` path permanently.
+    /// Unified framing, negotiated once by [`ServiceClient::hello`]
+    /// with `framing=binary`: when set, `RESULT`/`EVENTS`/`SPANS`
+    /// answer in binary directly and `SUBSCRIBE` is available.
+    binary: bool,
+    /// Pre-handshake fallback for result framing: starts optimistic
+    /// (binary `RESULTB`); a server that answers "unknown verb"
+    /// downgrades this connection to the text `RESULT` path
+    /// permanently. Only consulted when `binary` is off.
     binary_results: bool,
-    /// Same negotiation for event pages (`EVENTSB` vs `EVENTS`).
+    /// Same per-verb fallback for event pages (`EVENTSB` vs `EVENTS`).
     binary_events: bool,
 }
 
@@ -52,7 +68,7 @@ impl ServiceClient {
     pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
         let stream = TcpStream::connect(addr).context("connect to lamc service")?;
         let reader = BufReader::new(stream.try_clone().context("clone stream")?);
-        Ok(Self { reader, writer: stream, binary_results: true, binary_events: true })
+        Ok(Self { reader, writer: stream, binary: false, binary_results: true, binary_events: true })
     }
 
     fn send_line(&mut self, line: &str) -> Result<()> {
@@ -104,12 +120,17 @@ impl ServiceClient {
     /// Fetch a finished job's labels (errors while the job is queued or
     /// running — use [`ServiceClient::wait`] to block until done).
     ///
-    /// Tries the binary `RESULTB` framing first — length-prefixed `u32`
-    /// labels with a checksum, no line-length ceiling — and falls back
-    /// to the text `RESULT` protocol against servers that predate it.
+    /// On the unified framing (negotiated by [`ServiceClient::hello`])
+    /// `RESULT` itself answers in binary. Otherwise tries the binary
+    /// `RESULTB` compat verb first — length-prefixed `u32` labels with
+    /// a checksum, no line-length ceiling — and falls back to the text
+    /// `RESULT` protocol against servers that predate it.
     pub fn result(&mut self, id: u64) -> Result<ResultReply> {
+        if self.binary {
+            return self.result_framed("RESULT", id);
+        }
         if self.binary_results {
-            match self.result_binary(id) {
+            match self.result_framed("RESULTB", id) {
                 Ok(reply) => return Ok(reply),
                 Err(e) if e.to_string().contains("unknown verb") => {
                     // Legacy server: downgrade once, then use text.
@@ -122,8 +143,8 @@ impl ServiceClient {
     }
 
     /// One header line, then `4·(rows+cols)+8` bytes of labels+checksum.
-    fn result_binary(&mut self, id: u64) -> Result<ResultReply> {
-        self.send_line(&format!("RESULTB id={id}"))?;
+    fn result_framed(&mut self, verb: &str, id: u64) -> Result<ResultReply> {
+        self.send_line(&format!("{verb} id={id}"))?;
         let header = self.read_line()?;
         let map = Self::header_map(&header)?;
         let k: usize = map.get("k").context("missing k")?.parse()?;
@@ -240,14 +261,99 @@ impl ServiceClient {
     }
 
     /// Protocol handshake: returns the peer's `(proto, version)`.
+    ///
+    /// Negotiates the unified binary framing in the same exchange
+    /// (`framing=binary`): a peer that acknowledges it answers
+    /// `RESULT`/`EVENTS`/`SPANS` in binary on this connection and
+    /// accepts `SUBSCRIBE`. A server that predates the field rejects
+    /// the greeting; the client re-greets without it and stays on the
+    /// per-verb `RESULTB`/`EVENTSB` fallbacks.
     pub fn hello(&mut self) -> Result<(u64, String)> {
-        let map = self.kv_reply(&format!(
-            "HELLO proto={PROTO_VERSION} version={}",
+        let map = match self.kv_reply(&format!(
+            "HELLO proto={PROTO_VERSION} version={} framing=binary",
             env!("CARGO_PKG_VERSION")
-        ))?;
+        )) {
+            Ok(map) => {
+                self.binary = map.get("framing").map(|f| f == "binary").unwrap_or(false);
+                map
+            }
+            Err(e) if e.to_string().contains("unknown field") => {
+                self.binary = false;
+                self.kv_reply(&format!(
+                    "HELLO proto={PROTO_VERSION} version={}",
+                    env!("CARGO_PKG_VERSION")
+                ))?
+            }
+            Err(e) => return Err(e),
+        };
         let proto: u64 = map.get("proto").context("missing proto")?.parse()?;
         let version = map.get("version").context("missing version")?.clone();
         Ok((proto, version))
+    }
+
+    /// Did [`ServiceClient::hello`] land the unified binary framing on
+    /// this connection? `SUBSCRIBE` requires it.
+    pub fn is_binary(&self) -> bool {
+        self.binary
+    }
+
+    /// Append dense rows to a store-backed matrix (`APPEND`): ships
+    /// `rows * cols` row-major f32 values in the block codec and
+    /// returns the grown row count, the new store generation, and the
+    /// incremental re-clustering job the server queued (if an earlier
+    /// run left a basis to extend).
+    pub fn append(
+        &mut self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        values: &[f32],
+    ) -> Result<AppendReply> {
+        protocol::ensure_token("name", name)?;
+        ensure!(
+            values.len() == rows * cols,
+            "append payload has {} values, want {rows} x {cols}",
+            values.len()
+        );
+        let payload = protocol::encode_append_rows(values);
+        self.send_line(&format!("APPEND name={name} rows={rows} cols={cols}"))?;
+        self.writer.write_all(&payload)?;
+        self.writer.flush()?;
+        let header = self.read_line()?;
+        let map = Self::header_map(&header)?;
+        let total_rows: usize = map.get("rows").context("missing rows")?.parse()?;
+        let generation: u64 = map.get("generation").context("missing generation")?.parse()?;
+        let job = match map.get("job").map(String::as_str) {
+            Some("none") | None => None,
+            Some(id) => Some(id.parse().context("bad job id in reply")?),
+        };
+        Ok(AppendReply { total_rows, generation, job })
+    }
+
+    /// Page through a matrix's feed journal (`SUBSCRIBE`): append and
+    /// label-update event bodies with `seq > after`, plus the cursor
+    /// for the next poll (`None` when the page is empty — keep the
+    /// previous cursor). Ships only on the unified framing: call
+    /// [`ServiceClient::hello`] first.
+    pub fn subscribe(&mut self, name: &str, after: Option<u64>) -> Result<(Vec<String>, Option<u64>)> {
+        protocol::ensure_token("name", name)?;
+        ensure!(
+            self.binary,
+            "SUBSCRIBE ships only on the unified framing: call hello() first (a server that \
+             predates HELLO framing=binary cannot stream)"
+        );
+        let line = match after {
+            Some(a) => format!("SUBSCRIBE name={name} after={a}"),
+            None => format!("SUBSCRIBE name={name}"),
+        };
+        self.send_line(&line)?;
+        let header = self.read_line()?;
+        let map = Self::header_map(&header)?;
+        let (count, next) = Self::events_header(&map)?;
+        let bytes: usize = map.get("bytes").context("missing bytes")?.parse()?;
+        let mut payload = vec![0u8; bytes + 8];
+        self.reader.read_exact(&mut payload).context("read subscribe payload")?;
+        Ok((protocol::decode_events_binary(&payload, count)?, next))
     }
 
     /// Discover the shard sets a worker node owns (`SHARDS`).
@@ -376,8 +482,18 @@ impl ServiceClient {
     }
 
     /// Fetch a job's recorded span tree (`SPANS`) — empty until the job
-    /// starts running; errors on unknown ids.
+    /// starts running; errors on unknown ids. Binary on the unified
+    /// framing, text lines otherwise.
     pub fn spans(&mut self, id: u64) -> Result<Vec<SpanRecord>> {
+        if self.binary {
+            self.send_line(&format!("SPANS id={id}"))?;
+            let header = self.read_line()?;
+            let map = Self::header_map(&header)?;
+            let bytes: usize = map.get("bytes").context("missing bytes")?.parse()?;
+            let mut payload = vec![0u8; bytes + 8];
+            self.reader.read_exact(&mut payload).context("read binary span payload")?;
+            return protocol::decode_spans_binary(&payload);
+        }
         let rest = self.roundtrip(&format!("SPANS id={id}"))?;
         let tokens: Vec<&str> = rest.split_whitespace().collect();
         let map = protocol::kv_pairs(&tokens)?;
@@ -401,11 +517,15 @@ impl ServiceClient {
     /// Page through a job's lifecycle events: `EVENT` line bodies with
     /// `seq > after`, plus the cursor to pass on the next poll (`None`
     /// when the page is empty — keep the previous cursor and poll
-    /// again). Tries the binary `EVENTSB` framing first and falls back
-    /// to text `EVENTS` against servers that predate it.
+    /// again). On the unified framing `EVENTS` itself answers in
+    /// binary; otherwise tries the `EVENTSB` compat verb first and
+    /// falls back to text `EVENTS` against servers that predate it.
     pub fn events(&mut self, id: u64, after: Option<u64>) -> Result<(Vec<String>, Option<u64>)> {
+        if self.binary {
+            return self.events_framed(id, after, "EVENTS");
+        }
         if self.binary_events {
-            match self.events_binary(id, after) {
+            match self.events_framed(id, after, "EVENTSB") {
                 Ok(page) => return Ok(page),
                 Err(e) if e.to_string().contains("unknown verb") => {
                     self.binary_events = false;
@@ -434,8 +554,8 @@ impl ServiceClient {
         Ok((count, next))
     }
 
-    fn events_binary(&mut self, id: u64, after: Option<u64>) -> Result<(Vec<String>, Option<u64>)> {
-        self.send_line(&Self::events_request(id, after, "EVENTSB"))?;
+    fn events_framed(&mut self, id: u64, after: Option<u64>, verb: &str) -> Result<(Vec<String>, Option<u64>)> {
+        self.send_line(&Self::events_request(id, after, verb))?;
         let header = self.read_line()?;
         let map = Self::header_map(&header)?;
         let (count, next) = Self::events_header(&map)?;

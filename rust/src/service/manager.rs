@@ -20,9 +20,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::Stats;
 use crate::matrix::{DenseMatrix, Matrix};
-use crate::pipeline::{AtomKind, Lamc, LamcConfig};
+use crate::pipeline::{AtomKind, Lamc, LamcConfig, RunBasis};
 use crate::rng::{mix64 as mix, mix64_str as mix_str};
-use crate::store::{IoCounters, MatrixRef, ShardManifest, StoreReader};
+use crate::store::{ChunkWriter, IoCounters, Layout, MatrixRef, ShardManifest, StoreReader};
 use crate::trace::{Event, EventRecord, Journal, Trace, DEFAULT_RING_CAPACITY};
 
 use super::cache::{CacheKey, JobOutput, ResultCache};
@@ -310,6 +310,41 @@ struct MatrixEntry {
     /// Content hash, computed once at registration (O(1) for
     /// store-backed matrices: it comes from the store header).
     fingerprint: u64,
+    /// Backing store file for store-backed registrations — the target
+    /// [`ServiceManager::append_rows`] grows. `None` for in-memory
+    /// matrices, which cannot be appended to through the service.
+    store_path: Option<PathBuf>,
+    /// The matrix's feed journal (`SUBSCRIBE`): `MatrixAppended` and
+    /// `LabelsUpdated` events. Preserved across appends and even
+    /// re-registration so subscriber cursors stay valid while the
+    /// matrix grows.
+    feed: Arc<Journal>,
+    /// The most recent partitioned run retained as a [`RunBasis`], so
+    /// the incremental job an append triggers re-runs only the
+    /// sampling rounds whose row bands changed. Shared via `Arc` so
+    /// runners read/update it without holding the registry lock.
+    basis: Arc<Mutex<Option<RetainedBasis>>>,
+}
+
+/// A completed partitioned run retained for incremental reuse: the
+/// spec that produced it (resubmitted verbatim when an append needs
+/// fresh labels) plus its per-job atom sets.
+struct RetainedBasis {
+    spec: JobSpec,
+    basis: Arc<RunBasis>,
+}
+
+/// Outcome of [`ServiceManager::append_rows`].
+#[derive(Clone, Copy, Debug)]
+pub struct AppendOutcome {
+    /// Row count of the grown matrix.
+    pub total_rows: usize,
+    /// Store generation after the append (monotonic per store).
+    pub generation: u64,
+    /// Incremental re-clustering job queued for the grown matrix, when
+    /// an earlier partitioned run left a basis to extend. `None` until
+    /// a first job has seeded one.
+    pub job: Option<u64>,
 }
 
 /// One row band this worker owns, with its open store reader.
@@ -501,9 +536,27 @@ impl ServiceManager {
     /// name. Store-backed registration is O(1): the fingerprint comes
     /// from the store header, never a payload scan.
     pub fn register_ref(&self, name: &str, matrix: MatrixRef) -> u64 {
+        self.register_entry(name, matrix, None)
+    }
+
+    fn register_entry(&self, name: &str, matrix: MatrixRef, store_path: Option<PathBuf>) -> u64 {
         let fingerprint = matrix.fingerprint();
-        let entry = MatrixEntry { matrix, fingerprint };
-        self.inner.matrices.write().unwrap().insert(name.to_string(), entry);
+        let mut matrices = self.inner.matrices.write().unwrap();
+        // Re-registering keeps the feed journal (subscriber cursors
+        // survive a reload) but drops any retained basis: the new
+        // content has no relation to the old run's partial sets.
+        let feed = match matrices.remove(name) {
+            Some(old) => old.feed,
+            None => Arc::new(Journal::new(DEFAULT_RING_CAPACITY)),
+        };
+        let entry = MatrixEntry {
+            matrix,
+            fingerprint,
+            store_path,
+            feed,
+            basis: Arc::new(Mutex::new(None)),
+        };
+        matrices.insert(name.to_string(), entry);
         fingerprint
     }
 
@@ -513,7 +566,7 @@ impl ServiceManager {
     pub fn register_store(&self, name: &str, path: &Path) -> Result<(usize, usize)> {
         let matrix = MatrixRef::open_store(path)?;
         let shape = (matrix.rows(), matrix.cols());
-        self.register_ref(name, matrix);
+        self.register_entry(name, matrix, Some(path.to_path_buf()));
         crate::log_info!("registered store {path:?} as '{name}' ({} x {})", shape.0, shape.1);
         Ok(shape)
     }
@@ -547,6 +600,112 @@ impl ServiceManager {
                 Ok(shape)
             }
         }
+    }
+
+    /// Append `rows` dense rows (row-major, `rows * cols` values) to a
+    /// store-backed matrix's backing file, sealing them as new row
+    /// bands with a bumped footer generation, and swap the grown
+    /// reader in under the same name. The content fingerprint changes
+    /// with the append, so result-cache entries for the old content
+    /// simply stop matching — stale labels are never served.
+    ///
+    /// Emits [`Event::MatrixAppended`] to the matrix's feed journal
+    /// (`SUBSCRIBE`), and — when an earlier partitioned job left a
+    /// [`RunBasis`] — resubmits that job's spec so an incremental
+    /// re-clustering republishes labels for the grown matrix.
+    pub fn append_rows(
+        &self,
+        name: &str,
+        rows: usize,
+        cols: usize,
+        values: &[f32],
+    ) -> Result<AppendOutcome> {
+        anyhow::ensure!(rows >= 1, "append of zero rows");
+        let want = rows.checked_mul(cols).context("append shape overflows")?;
+        anyhow::ensure!(
+            values.len() == want,
+            "append payload has {} values, want {rows} x {cols}",
+            values.len()
+        );
+        let (path, feed) = {
+            let matrices = self.inner.matrices.read().unwrap();
+            let e = matrices
+                .get(name)
+                .with_context(|| format!("no matrix named '{name}' is loaded"))?;
+            let path = e.store_path.clone().with_context(|| {
+                format!(
+                    "matrix '{name}' is in-memory; APPEND needs a store-backed matrix \
+                     (pack it and re-register via LOAD name={name} store=...)"
+                )
+            })?;
+            (path, Arc::clone(&e.feed))
+        };
+        let mut writer = ChunkWriter::append_to(&path)?;
+        anyhow::ensure!(
+            writer.cols() == cols,
+            "append rows have {cols} columns, store '{name}' has {}",
+            writer.cols()
+        );
+        for r in 0..rows {
+            let row = &values[r * cols..(r + 1) * cols];
+            match writer.layout() {
+                Layout::Dense => writer.append_dense_row(row)?,
+                Layout::Csr => {
+                    let entries: Vec<(u32, f32)> = row
+                        .iter()
+                        .enumerate()
+                        .filter(|&(_, &v)| v != 0.0)
+                        .map(|(j, &v)| (j as u32, v))
+                        .collect();
+                    writer.append_sparse_row(&entries)?;
+                }
+            }
+        }
+        writer.finish()?;
+        let matrix = MatrixRef::open_store(&path)?;
+        let generation = matrix.generation();
+        let total_rows = matrix.rows();
+        let fingerprint = matrix.fingerprint();
+        let retained = {
+            let mut matrices = self.inner.matrices.write().unwrap();
+            let e = matrices
+                .get_mut(name)
+                .with_context(|| format!("matrix '{name}' disappeared during the append"))?;
+            e.matrix = matrix;
+            e.fingerprint = fingerprint;
+            e.basis.lock().unwrap().as_ref().map(|r| r.spec.clone())
+        };
+        feed.emit(Event::MatrixAppended { rows: rows as u64, generation });
+        crate::log_info!(
+            "appended {rows} row(s) to '{name}' (now {total_rows} rows, generation {generation})"
+        );
+        // Re-cluster incrementally: resubmit the retained spec; the
+        // runner finds the basis and re-runs only the sampling rounds
+        // whose row bands grew. A full queue degrades to no job — the
+        // append itself is already durable.
+        let job = match retained {
+            Some(spec) => match self.submit(spec) {
+                Ok(id) => Some(id),
+                Err(e) => {
+                    crate::log_warn!("append to '{name}': incremental resubmit rejected ({e:#})");
+                    None
+                }
+            },
+            None => None,
+        };
+        Ok(AppendOutcome { total_rows, generation, job })
+    }
+
+    /// Page through a matrix's feed journal (`SUBSCRIBE`): append and
+    /// label-update events with `seq > after` (all retained records
+    /// when `after` is `None`), at most `max`. `None` for an unknown
+    /// matrix name.
+    pub fn feed_events(&self, name: &str, after: Option<u64>, max: usize) -> Option<Vec<EventRecord>> {
+        let feed = {
+            let matrices = self.inner.matrices.read().unwrap();
+            Arc::clone(&matrices.get(name)?.feed)
+        };
+        Some(feed.events_after(after, max))
     }
 
     /// Register this worker's bands of a sharded matrix from its
@@ -841,7 +1000,7 @@ fn run_job(inner: &Inner, id: u64) {
     trace.record_span(trace.reserve_span(), job_span, "queue", 0, 0, queue_us);
     inner.stats.hist_queue_wait.observe_ns(queue_us.saturating_mul(1_000));
 
-    let outcome = execute_spec(inner, &record.spec, trace.child_of(job_span));
+    let outcome = execute_spec(inner, id, &record.spec, trace.child_of(job_span));
     // The job span covers submit → terminal state (queue wait included),
     // so every child — queue, rounds, merge — nests inside it.
     trace.record_span(job_span, crate::trace::ROOT_SPAN, "job", 0, 0, trace.now_us());
@@ -870,13 +1029,13 @@ fn run_job(inner: &Inner, id: u64) {
 }
 
 /// Returns the job output and whether it came from the cache.
-fn execute_spec(inner: &Inner, spec: &JobSpec, trace: Trace) -> Result<(Arc<JobOutput>, bool)> {
-    let (matrix, fingerprint) = {
+fn execute_spec(inner: &Inner, job_id: u64, spec: &JobSpec, trace: Trace) -> Result<(Arc<JobOutput>, bool)> {
+    let (matrix, fingerprint, feed, basis_slot) = {
         let matrices = inner.matrices.read().unwrap();
         let e = matrices
             .get(&spec.matrix)
             .with_context(|| format!("matrix '{}' disappeared before the job ran", spec.matrix))?;
-        (e.matrix.clone(), e.fingerprint)
+        (e.matrix.clone(), e.fingerprint, Arc::clone(&e.feed), Arc::clone(&e.basis))
     };
     let key = CacheKey { matrix: fingerprint, config: spec.config_hash() };
     if let Some(hit) = inner.cache.get(&key) {
@@ -888,7 +1047,30 @@ fn execute_spec(inner: &Inner, spec: &JobSpec, trace: Trace) -> Result<(Arc<JobO
     let mut cfg = spec.lamc_config()?;
     cfg.trace = trace;
     let lamc = Lamc::new(cfg);
-    let result = if spec.partitioned()? { lamc.run(&matrix)? } else { lamc.run_baseline(&matrix)? };
+    let result = if spec.partitioned()? {
+        // Partitioned runs are tracked: the per-job atom sets are
+        // retained as a `RunBasis`, and a later run of the same spec
+        // against the grown matrix goes through `run_incremental`,
+        // which re-runs only the sampling rounds whose row bands
+        // changed (labels stay byte-identical to a from-scratch run).
+        let opts = lamc.options();
+        let prior = {
+            let slot = basis_slot.lock().unwrap();
+            match &*slot {
+                Some(r) if r.spec.config_hash() == spec.config_hash() => Some(Arc::clone(&r.basis)),
+                _ => None,
+            }
+        };
+        let (result, next) = match prior {
+            Some(basis) => lamc.run_incremental(&matrix, &opts, &basis)?,
+            None => lamc.run_tracked(&matrix, &opts)?,
+        };
+        *basis_slot.lock().unwrap() =
+            Some(RetainedBasis { spec: spec.clone(), basis: Arc::new(next) });
+        result
+    } else {
+        lamc.run_baseline(&matrix)?
+    };
 
     // Fold the run's telemetry into the service-wide counters.
     let s = &result.stats;
@@ -922,6 +1104,13 @@ fn execute_spec(inner: &Inner, spec: &JobSpec, trace: Trace) -> Result<(Arc<JobO
         elapsed_s: result.elapsed_s,
     });
     inner.cache.put(key, Arc::clone(&output));
+    // Fresh labels landed (this was a cache miss): tell the matrix's
+    // subscribers, tagged with the store generation they describe.
+    feed.emit(Event::LabelsUpdated {
+        job: job_id,
+        k: output.k as u64,
+        generation: matrix.generation(),
+    });
     Ok((output, false))
 }
 

@@ -60,10 +60,10 @@ pub mod server;
 pub mod shard;
 
 pub use cache::{CacheKey, JobOutput, ResultCache};
-pub use client::{ResultReply, ServiceClient, StatusReply};
+pub use client::{AppendReply, ResultReply, ServiceClient, StatusReply};
 pub use manager::{
-    BoundedQueue, JobRecord, JobSpec, JobState, QueueRejection, ServiceConfig, ServiceManager,
-    ShardBand, ShardSet,
+    AppendOutcome, BoundedQueue, JobRecord, JobSpec, JobState, QueueRejection, ServiceConfig,
+    ServiceManager, ShardBand, ShardSet,
 };
 pub use pool::WorkerPool;
 pub use server::ServiceServer;

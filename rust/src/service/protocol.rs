@@ -73,7 +73,18 @@ pub enum Request {
     /// reject a different `proto`; the shard router additionally
     /// requires an identical crate `version` before trusting
     /// byte-identity across nodes.
-    Hello { proto: u64, version: String },
+    ///
+    /// `framing=binary` negotiates the unified binary response framing
+    /// once for the whole connection: every subsequent `RESULT`,
+    /// `EVENTS` and `SUBSCRIBE` reply ships its body as one
+    /// length-prefixed, checksummed payload instead of text lines, with
+    /// no per-verb negotiation. An old server rejects the unknown field
+    /// (`check_known`), which the client treats exactly like the legacy
+    /// `RESULTB`/`EVENTSB` "unknown verb" downgrade — it re-greets
+    /// without `framing=` and falls back to per-verb negotiation. The
+    /// per-verb binary verbs are kept one release behind as compat
+    /// shims.
+    Hello { proto: u64, version: String, framing: Option<String> },
     /// List the shard sets registered on this worker (one `SET` line
     /// per matrix, then `END`).
     Shards,
@@ -135,6 +146,20 @@ pub enum Request {
     /// `(start_us, id)` order, then `END`. On a router the tree is the
     /// stitched cross-node tree.
     Spans { id: u64 },
+    /// Seal `rows` new dense rows (`cols` wide) onto a served store
+    /// (`APPEND name=m rows=2 cols=80`): the request line is followed
+    /// by an [`encode_append_rows`] payload of row-major f32 values.
+    /// The server appends them as a fresh band under a bumped append
+    /// generation, invalidates cached results for the matrix, and (when
+    /// a base run is retained) queues an incremental re-clustering job;
+    /// the reply is `OK name=… rows=… generation=… job=…`.
+    Append { name: String, rows: usize, cols: usize },
+    /// Cursor-paged matrix feed (`SUBSCRIBE name=m after=17`):
+    /// `MatrixAppended` / `LabelsUpdated` lifecycle events for a served
+    /// matrix, with the same cursor semantics as [`Request::Events`].
+    /// Ships only on the unified framing — the server answers a typed
+    /// error unless the connection negotiated `HELLO framing=binary`.
+    Subscribe { name: String, after: Option<u64> },
 }
 
 impl Request {
@@ -148,6 +173,7 @@ impl Request {
             Request::ExecBinary { rows, cols, inline, .. } => {
                 exec_payload_len(*rows, *cols, *inline)?
             }
+            Request::Append { rows, cols, .. } => append_payload_len(*rows, *cols)?,
             _ => return Ok(None),
         };
         Ok(Some(len))
@@ -161,6 +187,16 @@ fn id_payload_len(rows: usize, cols: usize) -> Result<usize> {
         .and_then(|n| n.checked_add(8))
         .context("id payload length overflows")?;
     ensure!(len <= MAX_BINARY_PAYLOAD_BYTES, "id payload of {len} bytes exceeds the cap");
+    Ok(len)
+}
+
+fn append_payload_len(rows: usize, cols: usize) -> Result<usize> {
+    let len = rows
+        .checked_mul(cols)
+        .and_then(|n| n.checked_mul(4))
+        .and_then(|n| n.checked_add(8))
+        .context("append payload length overflows")?;
+    ensure!(len <= MAX_BINARY_PAYLOAD_BYTES, "append payload of {len} bytes exceeds the cap");
     Ok(len)
 }
 
@@ -296,10 +332,17 @@ pub fn parse_request(line: &str) -> Result<Request> {
         }
         "HELLO" => {
             let map = kv_pairs(&rest)?;
-            check_known(&map, &["proto", "version"])?;
+            check_known(&map, &["proto", "version", "framing"])?;
+            let framing = map.get("framing").cloned();
+            if let Some(f) = &framing {
+                if f != "binary" && f != "text" {
+                    bail!("unknown framing '{f}' (want binary|text)");
+                }
+            }
             Ok(Request::Hello {
                 proto: get_u64(&map, "proto")?.context("missing proto=")?,
                 version: map.get("version").context("missing version=")?.clone(),
+                framing,
             })
         }
         "SHARDS" => {
@@ -378,8 +421,30 @@ pub fn parse_request(line: &str) -> Result<Request> {
             check_known(&map, &["id"])?;
             Ok(Request::Spans { id: require_id(&map)? })
         }
+        "APPEND" => {
+            let map = kv_pairs(&rest)?;
+            check_known(&map, &["name", "rows", "cols"])?;
+            let rows = get_usize(&map, "rows")?.context("missing rows=")?;
+            let cols = get_usize(&map, "cols")?.context("missing cols=")?;
+            if rows == 0 || cols == 0 {
+                bail!("APPEND needs rows>=1 and cols>=1");
+            }
+            Ok(Request::Append {
+                name: map.get("name").context("missing name=")?.clone(),
+                rows,
+                cols,
+            })
+        }
+        "SUBSCRIBE" => {
+            let map = kv_pairs(&rest)?;
+            check_known(&map, &["name", "after"])?;
+            Ok(Request::Subscribe {
+                name: map.get("name").context("missing name=")?.clone(),
+                after: get_u64(&map, "after")?,
+            })
+        }
         other => bail!(
-            "unknown verb '{other}' (want SUBMIT|STATUS|RESULT|RESULTB|STATS|LOAD|HELLO|SHARDS|GATHERB|EXECB|ROUTE|EVENTS|EVENTSB|METRICS|SPANS|SHUTDOWN)"
+            "unknown verb '{other}' (want SUBMIT|STATUS|RESULT|RESULTB|STATS|LOAD|HELLO|SHARDS|GATHERB|EXECB|ROUTE|EVENTS|EVENTSB|METRICS|SPANS|APPEND|SUBSCRIBE|SHUTDOWN)"
         ),
     }
 }
@@ -565,6 +630,18 @@ pub fn decode_block(bytes: &[u8], values: usize) -> Result<Vec<f32>> {
         .chunks_exact(4)
         .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
         .collect())
+}
+
+/// Encode dense rows as an `APPEND` request payload: row-major f32 LE
+/// values (`rows × cols` of them), then a trailing u64 LE checksum —
+/// the same shape as a `GATHERB` block reply, so the codec is shared.
+pub fn encode_append_rows(values: &[f32]) -> Vec<u8> {
+    encode_block(values)
+}
+
+/// Decode an `APPEND` payload against its header counts.
+pub fn decode_append_rows(bytes: &[u8], rows: usize, cols: usize) -> Result<Vec<f32>> {
+    decode_block(bytes, rows.checked_mul(cols).context("append shape overflows")?)
 }
 
 /// Encode an `EXECB` request payload: `rows` global row ids then `cols`
@@ -972,8 +1049,13 @@ mod tests {
     fn shard_verbs_parse() {
         assert_eq!(
             parse_request("HELLO proto=1 version=0.1.0").unwrap(),
-            Request::Hello { proto: 1, version: "0.1.0".into() }
+            Request::Hello { proto: 1, version: "0.1.0".into(), framing: None }
         );
+        assert_eq!(
+            parse_request("HELLO proto=1 version=0.1.0 framing=binary").unwrap(),
+            Request::Hello { proto: 1, version: "0.1.0".into(), framing: Some("binary".into()) }
+        );
+        assert!(parse_request("HELLO proto=1 version=0.1.0 framing=gopher").is_err());
         assert_eq!(parse_request("SHARDS").unwrap(), Request::Shards);
         assert_eq!(parse_request("ROUTE").unwrap(), Request::Route);
         assert_eq!(
@@ -1235,6 +1317,48 @@ mod tests {
         assert!(body.contains("lamc_queue_wait_seconds_bucket{le=\"+Inf\"} 0\n"));
         assert!(body.contains("lamc_queue_wait_seconds_sum 0.000000000\n"));
         assert!(body.contains("lamc_queue_wait_seconds_count 0\n"));
+    }
+
+    #[test]
+    fn streaming_verbs_parse() {
+        assert_eq!(
+            parse_request("APPEND name=m rows=2 cols=80").unwrap(),
+            Request::Append { name: "m".into(), rows: 2, cols: 80 }
+        );
+        assert_eq!(
+            parse_request("SUBSCRIBE name=m").unwrap(),
+            Request::Subscribe { name: "m".into(), after: None }
+        );
+        assert_eq!(
+            parse_request("SUBSCRIBE name=m after=9").unwrap(),
+            Request::Subscribe { name: "m".into(), after: Some(9) }
+        );
+        assert!(parse_request("APPEND rows=2 cols=80").is_err(), "name required");
+        assert!(parse_request("APPEND name=m rows=0 cols=80").is_err(), "empty append");
+        assert!(parse_request("APPEND name=m rows=2").is_err(), "cols required");
+        assert!(parse_request("SUBSCRIBE after=1").is_err(), "name required");
+        assert!(parse_request("SUBSCRIBE name=m id=1").is_err(), "unknown field");
+    }
+
+    #[test]
+    fn append_payload_length_and_codec() {
+        let req = parse_request("APPEND name=m rows=2 cols=3").unwrap();
+        assert_eq!(req.binary_payload_len().unwrap(), Some(2 * 3 * 4 + 8));
+        assert_eq!(
+            parse_request("SUBSCRIBE name=m").unwrap().binary_payload_len().unwrap(),
+            None
+        );
+        let values = vec![1.0f32, 2.0, 3.0, -4.0, 0.5, 6.25];
+        let bytes = encode_append_rows(&values);
+        assert_eq!(bytes.len(), 2 * 3 * 4 + 8);
+        assert_eq!(decode_append_rows(&bytes, 2, 3).unwrap(), values);
+        assert!(decode_append_rows(&bytes, 2, 2).is_err(), "shape mismatch");
+        let mut bad = bytes.clone();
+        bad[5] ^= 0x10;
+        assert!(decode_append_rows(&bad, 2, 3).is_err(), "checksum catches bit flips");
+        // A corrupt header asking for an absurd payload fails the cap.
+        let huge = Request::Append { name: "m".into(), rows: usize::MAX / 8, cols: 2 };
+        assert!(huge.binary_payload_len().is_err());
     }
 
     #[test]

@@ -45,7 +45,7 @@ impl ServiceServer {
     pub fn spawn(addr: impl ToSocketAddrs, manager: ServiceManager) -> Result<Self> {
         let handler_manager = manager.clone();
         let handler: RequestHandler =
-            Arc::new(move |req, payload| respond(&handler_manager, req, payload));
+            Arc::new(move |req, payload, conn| respond(&handler_manager, req, payload, conn));
         let AcceptLoop { addr, stop, thread } = spawn_accept_loop(addr, handler)?;
         crate::log_info!("service listening on {addr}");
         Ok(Self { addr, manager, stop, accept_thread: Some(thread) })
@@ -100,9 +100,23 @@ pub(crate) fn request_stop(stop: &AtomicBool, addr: SocketAddr) {
 /// newline cannot grow the buffer without bound.
 pub(crate) const MAX_REQUEST_LINE_BYTES: u64 = 64 * 1024;
 
+/// Per-connection negotiated state, owned by the connection loop and
+/// threaded through every dispatch on that connection. `binary` flips
+/// when a `HELLO … framing=binary` handshake succeeds and stays set for
+/// the connection's lifetime: from then on `RESULT`, `EVENTS`, `SPANS`
+/// and `SUBSCRIBE` replies ship their bodies as one length-prefixed,
+/// checksummed payload with no per-verb negotiation.
+#[derive(Debug, Default)]
+pub(crate) struct ConnState {
+    pub(crate) binary: bool,
+}
+
 /// Answers one parsed request (plus its binary request payload, when
-/// the verb carries one) with a full response frame.
-pub(crate) type RequestHandler = Arc<dyn Fn(Request, Option<Vec<u8>>) -> Reply + Send + Sync>;
+/// the verb carries one) with a full response frame. The [`ConnState`]
+/// is the connection's negotiated framing, mutable so a `HELLO`
+/// handshake can upgrade it mid-connection.
+pub(crate) type RequestHandler =
+    Arc<dyn Fn(Request, Option<Vec<u8>>, &mut ConnState) -> Reply + Send + Sync>;
 
 /// A bound, running accept loop dispatching to a [`RequestHandler`].
 pub(crate) struct AcceptLoop {
@@ -149,6 +163,7 @@ fn handle_connection(stream: TcpStream, stop: Arc<AtomicBool>, addr: SocketAddr,
     });
     let mut writer = stream;
     let mut line = String::new();
+    let mut conn = ConnState::default();
     loop {
         line.clear();
         match (&mut reader).take(MAX_REQUEST_LINE_BYTES).read_line(&mut line) {
@@ -187,7 +202,7 @@ fn handle_connection(stream: TcpStream, stop: Arc<AtomicBool>, addr: SocketAddr,
                     }
                 };
                 let is_shutdown = matches!(req, Request::Shutdown);
-                let reply = handler(req, payload);
+                let reply = handler(req, payload, &mut conn);
                 if is_shutdown {
                     let _ = reply.write_to(&mut writer);
                     let _ = writer.flush();
@@ -230,16 +245,28 @@ impl Reply {
 }
 
 /// Execute one request against the manager; returns the full response.
-fn respond(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> Reply {
-    match handle(manager, req, payload) {
+fn respond(
+    manager: &ServiceManager,
+    req: Request,
+    payload: Option<Vec<u8>>,
+    conn: &mut ConnState,
+) -> Reply {
+    match handle(manager, req, payload, conn) {
         Ok(reply) => reply,
         Err(e) => Reply::err(&e),
     }
 }
 
+/// Typed error message for an unknown job id: the wire line is
+/// `ERR no-such-job id=N`, stable enough for clients to match on
+/// without parsing free text. Shared with the shard router.
+pub(crate) fn no_such_job(id: u64) -> String {
+    format!("no-such-job id={id}")
+}
+
 /// Fetch a finished job's record or explain why it has no result yet.
 fn finished_job(manager: &ServiceManager, id: u64) -> Result<super::manager::JobRecord> {
-    let record = manager.job(id).with_context(|| format!("no job with id {id}"))?;
+    let record = manager.job(id).with_context(|| no_such_job(id))?;
     match record.state {
         JobState::Done => Ok(record),
         JobState::Failed => anyhow::bail!(
@@ -250,14 +277,49 @@ fn finished_job(manager: &ServiceManager, id: u64) -> Result<super::manager::Job
     }
 }
 
-fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> Result<Reply> {
+/// The `RESULTB`-shaped binary result frame — also what a plain
+/// `RESULT` returns once the connection negotiated unified framing.
+fn result_binary_reply(manager: &ServiceManager, id: u64) -> Result<Reply> {
+    let record = finished_job(manager, id)?;
+    let out = record.result.context("done job missing result")?;
+    let payload = protocol::encode_labels_binary(&out.row_labels, &out.col_labels)?;
+    Ok(Reply::Binary {
+        header: format!(
+            "OK id={id} k={} rows={} cols={} cached={}\n",
+            out.k,
+            out.row_labels.len(),
+            out.col_labels.len(),
+            record.cached,
+        ),
+        payload,
+    })
+}
+
+/// The `EVENTSB`-shaped binary events frame — also what a plain
+/// `EVENTS` returns once the connection negotiated unified framing.
+fn events_binary_reply(manager: &ServiceManager, id: u64, after: Option<u64>) -> Result<Reply> {
+    let records = manager
+        .job_events(id, after, EVENTS_PAGE_MAX)
+        .with_context(|| no_such_job(id))?;
+    let payload = protocol::encode_events_binary(&records);
+    let mut header = events_header(id, &records);
+    header.insert_str(header.len() - 1, &format!(" bytes={}", payload.len() - 8));
+    Ok(Reply::Binary { header, payload })
+}
+
+fn handle(
+    manager: &ServiceManager,
+    req: Request,
+    payload: Option<Vec<u8>>,
+    conn: &mut ConnState,
+) -> Result<Reply> {
     match req {
         Request::Submit(spec) => {
             let id = manager.submit(spec)?;
             Ok(Reply::Text(format!("OK id={id}\n")))
         }
         Request::Status { id } => {
-            let record = manager.job(id).with_context(|| format!("no job with id {id}"))?;
+            let record = manager.job(id).with_context(|| no_such_job(id))?;
             let mut line = format!("OK id={id} state={} cached={}", record.state.as_str(), record.cached);
             if let Some(e) = &record.error {
                 line.push_str(&format!(" error={}", e.replace([' ', '\n'], "_")));
@@ -266,6 +328,9 @@ fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> R
             Ok(Reply::Text(line))
         }
         Request::Result { id } => {
+            if conn.binary {
+                return result_binary_reply(manager, id);
+            }
             let record = finished_job(manager, id)?;
             let out = record.result.context("done job missing result")?;
             Ok(Reply::Text(format!(
@@ -278,21 +343,9 @@ fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> R
                 protocol::encode_labels(&out.col_labels),
             )))
         }
-        Request::ResultBinary { id } => {
-            let record = finished_job(manager, id)?;
-            let out = record.result.context("done job missing result")?;
-            let payload = protocol::encode_labels_binary(&out.row_labels, &out.col_labels)?;
-            Ok(Reply::Binary {
-                header: format!(
-                    "OK id={id} k={} rows={} cols={} cached={}\n",
-                    out.k,
-                    out.row_labels.len(),
-                    out.col_labels.len(),
-                    record.cached,
-                ),
-                payload,
-            })
-        }
+        // Compat shim (one release behind the unified framing): old
+        // clients still negotiate binary per verb.
+        Request::ResultBinary { id } => result_binary_reply(manager, id),
         Request::Stats => {
             let (queued, running, done, failed) = manager.job_counts();
             let snap = manager.stats().snapshot();
@@ -340,13 +393,18 @@ fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> R
             };
             Ok(Reply::Text(format!("OK name={name} rows={r} cols={c}\n")))
         }
-        Request::Hello { proto, version: _ } => {
+        Request::Hello { proto, version: _, framing } => {
             anyhow::ensure!(
                 proto == PROTO_VERSION,
                 "protocol version mismatch: peer speaks proto {proto}, this node speaks proto {PROTO_VERSION}"
             );
+            conn.binary = framing.as_deref() == Some("binary");
+            let ack = match &framing {
+                Some(f) => format!(" framing={f}"),
+                None => String::new(),
+            };
             Ok(Reply::Text(format!(
-                "OK proto={PROTO_VERSION} version={}\n",
+                "OK proto={PROTO_VERSION} version={}{ack}\n",
                 env!("CARGO_PKG_VERSION")
             )))
         }
@@ -470,9 +528,12 @@ fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> R
             Ok(Reply::Binary { header, payload: body })
         }
         Request::Events { id, after } => {
+            if conn.binary {
+                return events_binary_reply(manager, id, after);
+            }
             let records = manager
                 .job_events(id, after, EVENTS_PAGE_MAX)
-                .with_context(|| format!("no job with id {id}"))?;
+                .with_context(|| no_such_job(id))?;
             let mut out = events_header(id, &records);
             for rec in &records {
                 out.push_str("EVENT ");
@@ -482,22 +543,20 @@ fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> R
             out.push_str("END\n");
             Ok(Reply::Text(out))
         }
-        Request::EventsBinary { id, after } => {
-            let records = manager
-                .job_events(id, after, EVENTS_PAGE_MAX)
-                .with_context(|| format!("no job with id {id}"))?;
-            let payload = protocol::encode_events_binary(&records);
-            let mut header = events_header(id, &records);
-            header.insert_str(header.len() - 1, &format!(" bytes={}", payload.len() - 8));
-            Ok(Reply::Binary { header, payload })
-        }
+        // Compat shim (one release behind the unified framing).
+        Request::EventsBinary { id, after } => events_binary_reply(manager, id, after),
         Request::Metrics => {
             let (body, lines) = worker_metrics(manager).finish();
             Ok(Reply::Text(format!("OK lines={lines}\n{body}END\n")))
         }
         Request::Spans { id } => {
-            let spans =
-                manager.job_spans(id).with_context(|| format!("no job with id {id}"))?;
+            let spans = manager.job_spans(id).with_context(|| no_such_job(id))?;
+            if conn.binary {
+                let payload = protocol::encode_spans_binary(&spans);
+                let header =
+                    format!("OK id={id} count={} bytes={}\n", spans.len(), payload.len() - 8);
+                return Ok(Reply::Binary { header, payload });
+            }
             let mut out = format!("OK id={id} count={}\n", spans.len());
             for s in &spans {
                 out.push_str("SPAN ");
@@ -506,6 +565,35 @@ fn handle(manager: &ServiceManager, req: Request, payload: Option<Vec<u8>>) -> R
             }
             out.push_str("END\n");
             Ok(Reply::Text(out))
+        }
+        Request::Append { name, rows, cols } => {
+            let payload = payload.context("APPEND payload missing")?;
+            let values = protocol::decode_append_rows(&payload, rows, cols)?;
+            let outcome = manager.append_rows(&name, rows, cols, &values)?;
+            let job = match outcome.job {
+                Some(id) => id.to_string(),
+                None => "none".to_string(),
+            };
+            Ok(Reply::Text(format!(
+                "OK name={name} rows={} generation={} job={job}\n",
+                outcome.total_rows, outcome.generation,
+            )))
+        }
+        Request::Subscribe { name, after } => {
+            anyhow::ensure!(
+                conn.binary,
+                "SUBSCRIBE ships only on the unified framing: greet with HELLO framing=binary first"
+            );
+            let records = manager
+                .feed_events(&name, after, EVENTS_PAGE_MAX)
+                .with_context(|| format!("no matrix named '{name}'"))?;
+            let payload = protocol::encode_events_binary(&records);
+            let mut header = match records.last() {
+                Some(last) => format!("OK name={name} count={} next={}\n", records.len(), last.seq),
+                None => format!("OK name={name} count=0\n"),
+            };
+            header.insert_str(header.len() - 1, &format!(" bytes={}", payload.len() - 8));
+            Ok(Reply::Binary { header, payload })
         }
         Request::Shutdown => Ok(Reply::Text("OK shutting-down\n".to_string())),
     }

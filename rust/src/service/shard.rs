@@ -46,8 +46,8 @@ use super::client::ServiceClient;
 use super::manager::{JobSpec, JobState};
 use super::protocol::{self, Request, ShardSetInfo, PROTO_VERSION};
 use super::server::{
-    events_header, request_stop, spawn_accept_loop, AcceptLoop, Reply, RequestHandler,
-    EVENTS_PAGE_MAX,
+    events_header, no_such_job, request_stop, spawn_accept_loop, AcceptLoop, ConnState, Reply,
+    RequestHandler, EVENTS_PAGE_MAX,
 };
 
 /// Typed routing failures — the error contract of the fault-injection
@@ -789,7 +789,8 @@ impl ShardServer {
             jobs: Mutex::new(HashMap::new()),
             next_id: AtomicU64::new(1),
         });
-        let handler: RequestHandler = Arc::new(move |req, _payload| route_respond(&state, req));
+        let handler: RequestHandler =
+            Arc::new(move |req, _payload, conn| route_respond(&state, req, conn));
         let AcceptLoop { addr, stop, thread } = spawn_accept_loop(addr, handler)?;
         crate::log_info!("shard router listening on {addr}");
         Ok(Self { addr, stop, accept_thread: Some(thread) })
@@ -821,8 +822,8 @@ impl Drop for ShardServer {
     }
 }
 
-fn route_respond(state: &Arc<RouterState>, req: Request) -> Reply {
-    match route_handle(state, req) {
+fn route_respond(state: &Arc<RouterState>, req: Request, conn: &mut ConnState) -> Reply {
+    match route_handle(state, req, conn) {
         Ok(reply) => reply,
         Err(e) => Reply::err(&e),
     }
@@ -830,7 +831,7 @@ fn route_respond(state: &Arc<RouterState>, req: Request) -> Reply {
 
 fn finished_route_job(state: &RouterState, id: u64) -> Result<Arc<RoutedRun>> {
     let jobs = state.jobs.lock().unwrap();
-    let job = jobs.get(&id).with_context(|| format!("no job with id {id}"))?;
+    let job = jobs.get(&id).with_context(|| no_such_job(id))?;
     match job.state {
         JobState::Done => job.result.clone().context("done job missing result"),
         JobState::Failed => {
@@ -840,7 +841,33 @@ fn finished_route_job(state: &RouterState, id: u64) -> Result<Arc<RoutedRun>> {
     }
 }
 
-fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
+/// The binary result frame — answers `RESULTB` and, once the
+/// connection negotiated the unified framing, plain `RESULT` too.
+fn route_result_binary(state: &RouterState, id: u64) -> Result<Reply> {
+    let run = finished_route_job(state, id)?;
+    let payload = protocol::encode_labels_binary(&run.row_labels, &run.col_labels)?;
+    Ok(Reply::Binary {
+        header: format!(
+            "OK id={id} k={} rows={} cols={} cached=false\n",
+            run.k,
+            run.row_labels.len(),
+            run.col_labels.len(),
+        ),
+        payload,
+    })
+}
+
+/// The binary events frame — answers `EVENTSB` and, once the
+/// connection negotiated the unified framing, plain `EVENTS` too.
+fn route_events_binary(state: &RouterState, id: u64, after: Option<u64>) -> Result<Reply> {
+    let records = route_job_events(state, id, after)?;
+    let payload = protocol::encode_events_binary(&records);
+    let mut header = events_header(id, &records);
+    header.insert_str(header.len() - 1, &format!(" bytes={}", payload.len() - 8));
+    Ok(Reply::Binary { header, payload })
+}
+
+fn route_handle(state: &Arc<RouterState>, req: Request, conn: &mut ConnState) -> Result<Reply> {
     match req {
         Request::Submit(spec) => {
             // Fail fast on specs the router can never run, so the error
@@ -905,7 +932,7 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
         }
         Request::Status { id } => {
             let jobs = state.jobs.lock().unwrap();
-            let job = jobs.get(&id).with_context(|| format!("no job with id {id}"))?;
+            let job = jobs.get(&id).with_context(|| no_such_job(id))?;
             let mut line = format!("OK id={id} state={} cached=false", job.state.as_str());
             if let Some(e) = &job.error {
                 line.push_str(&format!(" error={}", e.replace([' ', '\n'], "_")));
@@ -914,6 +941,9 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
             Ok(Reply::Text(line))
         }
         Request::Result { id } => {
+            if conn.binary {
+                return route_result_binary(state, id);
+            }
             let run = finished_route_job(state, id)?;
             Ok(Reply::Text(format!(
                 "OK id={id} k={} rows={} cols={} cached=false\nROWS {}\nCOLS {}\nEND\n",
@@ -924,19 +954,8 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
                 protocol::encode_labels(&run.col_labels),
             )))
         }
-        Request::ResultBinary { id } => {
-            let run = finished_route_job(state, id)?;
-            let payload = protocol::encode_labels_binary(&run.row_labels, &run.col_labels)?;
-            Ok(Reply::Binary {
-                header: format!(
-                    "OK id={id} k={} rows={} cols={} cached=false\n",
-                    run.k,
-                    run.row_labels.len(),
-                    run.col_labels.len(),
-                ),
-                payload,
-            })
-        }
+        // Compat shim (one release behind the unified framing).
+        Request::ResultBinary { id } => route_result_binary(state, id),
         Request::Stats => {
             let (queued, running, done, failed) = {
                 let jobs = state.jobs.lock().unwrap();
@@ -989,13 +1008,18 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
                 state.router.topo.len(),
             )))
         }
-        Request::Hello { proto, version: _ } => {
+        Request::Hello { proto, version: _, framing } => {
             ensure!(
                 proto == PROTO_VERSION,
                 "protocol version mismatch: peer speaks proto {proto}, this node speaks proto {PROTO_VERSION}"
             );
+            conn.binary = framing.as_deref() == Some("binary");
+            let ack = match &framing {
+                Some(f) => format!(" framing={f}"),
+                None => String::new(),
+            };
             Ok(Reply::Text(format!(
-                "OK proto={PROTO_VERSION} version={}\n",
+                "OK proto={PROTO_VERSION} version={}{ack}\n",
                 env!("CARGO_PKG_VERSION")
             )))
         }
@@ -1028,6 +1052,9 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
             bail!("GATHERB/EXECB are answered by a worker node; this is a shard router")
         }
         Request::Events { id, after } => {
+            if conn.binary {
+                return route_events_binary(state, id, after);
+            }
             let records = route_job_events(state, id, after)?;
             let mut out = events_header(id, &records);
             for rec in &records {
@@ -1038,21 +1065,22 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
             out.push_str("END\n");
             Ok(Reply::Text(out))
         }
-        Request::EventsBinary { id, after } => {
-            let records = route_job_events(state, id, after)?;
-            let payload = protocol::encode_events_binary(&records);
-            let mut header = events_header(id, &records);
-            header.insert_str(header.len() - 1, &format!(" bytes={}", payload.len() - 8));
-            Ok(Reply::Binary { header, payload })
-        }
+        // Compat shim (one release behind the unified framing).
+        Request::EventsBinary { id, after } => route_events_binary(state, id, after),
         Request::Spans { id } => {
             // The stitched tree: router-side job/round/scatter spans
             // plus every worker sheet anchored at its exchange.
             let journal = {
                 let jobs = state.jobs.lock().unwrap();
-                Arc::clone(&jobs.get(&id).with_context(|| format!("no job with id {id}"))?.journal)
+                Arc::clone(&jobs.get(&id).with_context(|| no_such_job(id))?.journal)
             };
             let spans = journal.spans();
+            if conn.binary {
+                let payload = protocol::encode_spans_binary(&spans);
+                let header =
+                    format!("OK id={id} count={} bytes={}\n", spans.len(), payload.len() - 8);
+                return Ok(Reply::Binary { header, payload });
+            }
             let mut out = format!("OK id={id} count={}\n", spans.len());
             for s in &spans {
                 out.push_str("SPAN ");
@@ -1066,6 +1094,9 @@ fn route_handle(state: &Arc<RouterState>, req: Request) -> Result<Reply> {
             let (body, lines) = router_metrics(state).finish();
             Ok(Reply::Text(format!("OK lines={lines}\n{body}END\n")))
         }
+        Request::Append { .. } | Request::Subscribe { .. } => {
+            bail!("APPEND/SUBSCRIBE are answered by a worker node hosting the store; this is a shard router")
+        }
         Request::Shutdown => Ok(Reply::Text("OK shutting-down\n".to_string())),
     }
 }
@@ -1077,7 +1108,7 @@ fn route_job_events(
 ) -> Result<Vec<crate::trace::EventRecord>> {
     let journal = {
         let jobs = state.jobs.lock().unwrap();
-        Arc::clone(&jobs.get(&id).with_context(|| format!("no job with id {id}"))?.journal)
+        Arc::clone(&jobs.get(&id).with_context(|| no_such_job(id))?.journal)
     };
     Ok(journal.events_after(after, EVENTS_PAGE_MAX))
 }

@@ -31,7 +31,7 @@
 //! a concurrent gather from ever decoding the same chunk twice.
 
 use std::collections::{BTreeMap, HashSet};
-use std::fs::File;
+use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -48,7 +48,8 @@ use super::codec::{self, Codec};
 use super::format::{
     checksum_bytes, decode_footer, encode_footer, store_fingerprint, ChunkMeta, Layout,
     StoreError, StoreHeader, DEFAULT_CHUNK_ROWS, FOOTER_MAGIC, FOOTER_MAGIC_TILED, MAGIC,
-    MAGIC_TILED, TRAILER_BYTES, VERSION, VERSION_CODEC, VERSION_TILED, VERSION_TILED_CODEC,
+    MAGIC_TILED, TRAILER_BYTES, VERSION, VERSION_CODEC, VERSION_GEN, VERSION_TILED,
+    VERSION_TILED_CODEC, VERSION_TILED_GEN,
 };
 use super::mmap::Mmap;
 use super::prefetch::{plan_chunks, Prefetcher};
@@ -122,6 +123,13 @@ pub struct ChunkWriter {
     raw_checksums: Vec<u64>,
     /// Uncompressed payload bytes sealed so far.
     raw_payload_bytes: u64,
+    /// Append generation stamped on chunks sealed by this session:
+    /// 0 for a fresh ingest, old generation + 1 under `append_to`.
+    generation: u64,
+    /// True under [`ChunkWriter::append_to`]: `finish` writes the
+    /// generation footer revision (5/6) and trims any residue of the
+    /// overwritten old footer.
+    append_mode: bool,
 }
 
 impl ChunkWriter {
@@ -178,6 +186,133 @@ impl ChunkWriter {
             codec: Codec::None,
             raw_checksums: Vec::new(),
             raw_payload_bytes: 0,
+            generation: 0,
+            append_mode: false,
+        })
+    }
+
+    /// Re-open a finished store and resume its ingest: appended rows
+    /// seal onto the existing payload region (a partial last band is
+    /// read back into the band buffer, its chunks dropped, and the file
+    /// position rewound over them, so the final chunk grid is exactly
+    /// what a from-scratch pack of the concatenated matrix would
+    /// produce). `finish` writes a **generation** footer (revision 5/6)
+    /// whose append generation is the old footer's plus one; every
+    /// chunk sealed by this session is stamped with the new generation,
+    /// so readers can ask for the dirty bands since any base
+    /// generation. The content fingerprint is recomputed over the full
+    /// uncompressed-payload checksum chain — O(index) for stores that
+    /// already carry a generation footer; appending to a pre-generation
+    /// store with compressed chunks re-reads those payloads once to
+    /// recover their raw checksums.
+    ///
+    /// Geometry, layout and codec are carried over from the store. A
+    /// crash before `finish` leaves the file without a valid footer:
+    /// readers report it as `Truncated`/`Corrupt` (typed
+    /// [`StoreError`]), the same taxonomy as a fresh ingest that died.
+    pub fn append_to(path: &Path) -> Result<Self> {
+        let reader = StoreReader::open_with_budgets(path, 0, 0)?;
+        let header = reader.header().clone();
+        let mut index = reader.index_entries().to_vec();
+        let layout = header.layout;
+        let tiled = header.is_tiled();
+
+        // Fingerprint chain inputs for the retained chunks. Generation
+        // footers persist them per entry; pre-generation footers only
+        // do for raw chunks (stored checksum == raw checksum), so a
+        // compressed pre-generation chunk is re-read once here.
+        for (i, e) in index.iter_mut().enumerate() {
+            if e.codec != Codec::None && e.raw_checksum == 0 {
+                let mut file = reader.file.lock().unwrap();
+                let stored = read_verified_payload(&mut file, path, i, e, &reader.shared)?;
+                let raw = codec::decode(e.codec, &stored, e.raw_len as usize, path)
+                    .with_context(|| format!("decode chunk {i} of {path:?}"))?;
+                e.raw_checksum = checksum_bytes(&raw);
+            }
+        }
+
+        // Read a partial last band back into the open-band buffers and
+        // drop its chunks: they will be re-sealed (with the appended
+        // rows) at the same offset, keeping the payload contiguous.
+        let chunk_rows = header.chunk_rows;
+        let band_rows = if header.rows > 0 { header.rows % chunk_rows } else { 0 };
+        let n_col_bands = header.n_col_bands();
+        let mut dense_buf = Vec::new();
+        let mut indptr = vec![0u64];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        if band_rows > 0 {
+            let rb = header.n_row_bands() - 1;
+            let tiles = reader.band_tiles(rb)?;
+            match layout {
+                Layout::Dense => {
+                    dense_buf = vec![0.0f32; band_rows * header.cols];
+                    for (meta, chunk) in &tiles {
+                        let vals = chunk.dense_values().expect("dense store yields dense chunks");
+                        for r in 0..band_rows {
+                            let dst = r * header.cols + meta.col_lo;
+                            dense_buf[dst..dst + meta.cols]
+                                .copy_from_slice(&vals[r * meta.cols..(r + 1) * meta.cols]);
+                        }
+                    }
+                }
+                Layout::Csr => {
+                    for r in 0..band_rows {
+                        // Column bands come back in increasing col_lo
+                        // order and tile rows are index-sorted, so the
+                        // concatenation is globally sorted.
+                        for (meta, chunk) in &tiles {
+                            let DecodedChunk::Csr { indptr: p, indices: ix, values: vs } =
+                                chunk.as_ref()
+                            else {
+                                bail!("csr store {path:?} yielded a non-csr chunk");
+                            };
+                            for t in p[r] as usize..p[r + 1] as usize {
+                                indices.push(ix[t] + meta.col_lo as u32);
+                                values.push(vs[t]);
+                            }
+                        }
+                        indptr.push(indices.len() as u64);
+                    }
+                }
+            }
+            index.truncate(index.len() - n_col_bands);
+        }
+        drop(reader);
+
+        let offset = index.iter().map(|e| e.offset + e.len).max().unwrap_or(MAGIC.len() as u64);
+        let raw_checksums: Vec<u64> = index.iter().map(|e| e.raw_checksum).collect();
+        let raw_payload_bytes: u64 = index.iter().map(|e| e.raw_len).sum();
+
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .with_context(|| format!("open store {path:?} for append"))?;
+        file.seek(SeekFrom::Start(offset))?;
+
+        Ok(Self {
+            path: path.to_path_buf(),
+            file: BufWriter::new(file),
+            layout,
+            cols: header.cols,
+            chunk_rows,
+            chunk_cols: if tiled { Some(header.chunk_cols) } else { None },
+            offset,
+            index,
+            dense_buf,
+            indptr,
+            indices,
+            values,
+            rows_in_chunk: band_rows,
+            total_rows: header.rows,
+            total_nnz: header.nnz,
+            fingerprint_override: None,
+            codec: header.codec,
+            raw_checksums,
+            raw_payload_bytes,
+            generation: header.generation + 1,
+            append_mode: true,
         })
     }
 
@@ -374,6 +509,8 @@ impl ChunkWriter {
                 },
                 codec: chunk_codec,
                 raw_len,
+                raw_checksum,
+                gen: self.generation,
             };
             self.file.write_all(&stored)?;
             self.offset += meta.len;
@@ -411,11 +548,18 @@ impl ChunkWriter {
             )
         });
         let tiled = self.chunk_cols.is_some();
-        let version = match (tiled, self.codec) {
-            (false, Codec::None) => VERSION,
-            (true, Codec::None) => VERSION_TILED,
-            (false, _) => VERSION_CODEC,
-            (true, _) => VERSION_TILED_CODEC,
+        // A fresh ingest keeps the smallest revision that can express
+        // its fields (pre-codec files stay byte-stable); an append
+        // always writes the generation revision.
+        let version = if self.append_mode {
+            if tiled { VERSION_TILED_GEN } else { VERSION_GEN }
+        } else {
+            match (tiled, self.codec) {
+                (false, Codec::None) => VERSION,
+                (true, Codec::None) => VERSION_TILED,
+                (false, _) => VERSION_CODEC,
+                (true, _) => VERSION_TILED_CODEC,
+            }
         };
         let header = StoreHeader {
             version,
@@ -428,6 +572,7 @@ impl ChunkWriter {
             n_chunks: self.index.len(),
             fingerprint,
             codec: self.codec,
+            generation: self.generation,
         };
         let footer = encode_footer(&header, &self.index);
         self.file.write_all(&footer)?;
@@ -435,6 +580,13 @@ impl ChunkWriter {
         self.file.write_all(&checksum_bytes(&footer).to_le_bytes())?;
         self.file.write_all(if tiled { FOOTER_MAGIC_TILED } else { FOOTER_MAGIC })?;
         self.file.flush()?;
+        if self.append_mode {
+            // Trim any residue of the overwritten old footer (the new
+            // end can land short of the old one when the re-sealed
+            // partial band stored smaller).
+            let end = self.offset + footer.len() as u64 + TRAILER_BYTES;
+            self.file.get_ref().set_len(end).with_context(|| format!("truncate {:?}", self.path))?;
+        }
         self.file.get_ref().sync_all().with_context(|| format!("fsync {:?}", self.path))?;
         Ok(StoreSummary {
             path: self.path.clone(),
@@ -875,6 +1027,37 @@ impl StoreReader {
     /// [`store_fingerprint`](super::format::store_fingerprint).
     pub fn fingerprint(&self) -> u64 {
         self.header.fingerprint
+    }
+
+    /// Append generation of this store: 0 for a freshly packed file
+    /// (any pre-generation footer revision decodes as 0), bumped once
+    /// per [`ChunkWriter::append_to`] session.
+    pub fn generation(&self) -> u64 {
+        self.header.generation
+    }
+
+    /// The chunk index, in row-band-major order.
+    pub fn index_entries(&self) -> &[ChunkMeta] {
+        &self.index
+    }
+
+    /// Merged, sorted `[lo, hi)` row ranges of the bands containing any
+    /// chunk sealed *after* `generation` — the rows an incremental
+    /// re-cluster based on that generation must treat as changed. Empty
+    /// when the store has not been appended to since (in particular,
+    /// always empty for `generation >= self.generation()`).
+    pub fn dirty_rows_since(&self, generation: u64) -> Vec<(usize, usize)> {
+        let mut out: Vec<(usize, usize)> = Vec::new();
+        for e in self.index.iter() {
+            if e.gen > generation {
+                let (lo, hi) = (e.row_lo, e.row_lo + e.rows);
+                match out.last_mut() {
+                    Some(last) if last.1 >= lo => last.1 = last.1.max(hi),
+                    _ => out.push((lo, hi)),
+                }
+            }
+        }
+        out
     }
 
     /// Chunks read from disk so far (checksum-verified decodes, demand
@@ -1813,6 +1996,114 @@ mod tests {
                 assert_eq!(s.nnz(), 1);
                 assert_eq!(s.to_dense().get(1, 3), 2.5);
             }
+            _ => panic!("layout"),
+        }
+    }
+
+    #[test]
+    fn append_resumes_partial_band_and_matches_fresh_pack() {
+        let d = random_dense(17, 7, 77);
+        let path = tmp("append_rt.lamc2");
+        let mut w = ChunkWriter::create(&path, Layout::Dense, 7, 4).unwrap();
+        for i in 0..10 {
+            w.append_dense_row(d.row(i)).unwrap();
+        }
+        let s0 = w.finish().unwrap();
+        assert_eq!((s0.rows, s0.chunks), (10, 3), "partial 2-row band sealed last");
+        let mut w = ChunkWriter::append_to(&path).unwrap();
+        assert_eq!(w.rows(), 10);
+        for i in 10..17 {
+            w.append_dense_row(d.row(i)).unwrap();
+        }
+        let s1 = w.finish().unwrap();
+        assert_eq!((s1.rows, s1.chunks), (17, 5));
+        // Byte-identical content and identical fingerprint to a
+        // from-scratch pack of the concatenated matrix.
+        let fresh = tmp("append_rt_fresh.lamc2");
+        let sf = pack_matrix(&Matrix::Dense(d.clone()), &fresh, 4).unwrap();
+        assert_eq!(s1.fingerprint, sf.fingerprint);
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.generation(), 1);
+        match r.read_all().unwrap() {
+            Matrix::Dense(got) => assert_eq!(got, d),
+            _ => panic!("layout"),
+        }
+        // The re-sealed partial band (rows 8..10) counts as dirty too.
+        assert_eq!(r.dirty_rows_since(0), vec![(8, 17)]);
+        assert!(r.dirty_rows_since(1).is_empty());
+    }
+
+    #[test]
+    fn tiled_append_with_codec_matches_fresh_pack() {
+        let s = random_sparse(23, 9, 150, 78);
+        let path = tmp("append_rt.lamc3");
+        let mut w = ChunkWriter::create_tiled(&path, Layout::Csr, 9, 5, 4).unwrap();
+        w.set_codec(Codec::ShuffleLz);
+        let mut row: Vec<(u32, f32)> = Vec::new();
+        for i in 0..12 {
+            row.clear();
+            row.extend(s.row_iter(i).map(|(j, v)| (j as u32, v)));
+            w.append_sparse_row(&row).unwrap();
+        }
+        w.finish().unwrap();
+        // Appending to a pre-generation codec store exercises the
+        // raw-checksum recovery path (compressed chunks re-read once).
+        let mut w = ChunkWriter::append_to(&path).unwrap();
+        for i in 12..23 {
+            row.clear();
+            row.extend(s.row_iter(i).map(|(j, v)| (j as u32, v)));
+            w.append_sparse_row(&row).unwrap();
+        }
+        let s1 = w.finish().unwrap();
+        let fresh = tmp("append_rt_fresh.lamc3");
+        let sf = pack_matrix_tiled_with_codec(
+            &Matrix::Sparse(s.clone()),
+            &fresh,
+            5,
+            4,
+            Codec::ShuffleLz,
+        )
+        .unwrap();
+        assert_eq!(s1.fingerprint, sf.fingerprint);
+        let r = StoreReader::open(&path).unwrap();
+        assert!(r.is_tiled());
+        assert_eq!(r.generation(), 1);
+        match r.read_all().unwrap() {
+            Matrix::Sparse(got) => assert_eq!(got, s),
+            _ => panic!("layout"),
+        }
+        assert_eq!(r.dirty_rows_since(0), vec![(10, 23)], "partial band [10,12) re-sealed");
+    }
+
+    #[test]
+    fn second_append_bumps_generation_and_narrows_dirty_bands() {
+        let d = random_dense(16, 5, 79);
+        let path = tmp("append_twice.lamc2");
+        let mut w = ChunkWriter::create(&path, Layout::Dense, 5, 4).unwrap();
+        for i in 0..8 {
+            w.append_dense_row(d.row(i)).unwrap();
+        }
+        w.finish().unwrap();
+        let mut w = ChunkWriter::append_to(&path).unwrap();
+        for i in 8..12 {
+            w.append_dense_row(d.row(i)).unwrap();
+        }
+        assert_eq!(w.finish().unwrap().rows, 12);
+        let mut w = ChunkWriter::append_to(&path).unwrap();
+        for i in 12..16 {
+            w.append_dense_row(d.row(i)).unwrap();
+        }
+        let s2 = w.finish().unwrap();
+        let fresh = tmp("append_twice_fresh.lamc2");
+        let sf = pack_matrix(&Matrix::Dense(d.clone()), &fresh, 4).unwrap();
+        assert_eq!(s2.fingerprint, sf.fingerprint);
+        let r = StoreReader::open(&path).unwrap();
+        assert_eq!(r.generation(), 2);
+        assert_eq!(r.dirty_rows_since(0), vec![(8, 16)]);
+        assert_eq!(r.dirty_rows_since(1), vec![(12, 16)]);
+        assert!(r.dirty_rows_since(2).is_empty());
+        match r.read_all().unwrap() {
+            Matrix::Dense(got) => assert_eq!(got, d),
             _ => panic!("layout"),
         }
     }

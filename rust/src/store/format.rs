@@ -40,14 +40,27 @@
 //! the row-band and tiled geometries respectively: the header gains the
 //! writer's [`Codec`](super::codec::Codec), and every index entry gains
 //! a codec tag plus the uncompressed (`raw_len`) payload length. The
-//! file magics stay per-geometry (`LAMC2*` for versions 1/3, `LAMC3*`
-//! for 2/4), and a writer configured with `codec=none` emits exactly
+//! file magics stay per-geometry (`LAMC2*` for versions 1/3/5, `LAMC3*`
+//! for 2/4/6), and a writer configured with `codec=none` emits exactly
 //! the version-1/2 bytes — pre-codec files are byte-stable and every
 //! pre-codec reader field keeps its meaning. Entry `checksum` always
 //! covers the **stored** bytes (what is read off disk); the content
 //! fingerprint chains the checksums of the **uncompressed** payloads,
 //! so the same matrix has the same fingerprint under every codec and
 //! recompression never invalidates service result-cache entries.
+//!
+//! **Footer revisions 5 and 6** make a store appendable: the header
+//! gains an append `generation` (0 for a freshly packed file, bumped by
+//! every [`ChunkWriter::append_to`](super::ChunkWriter::append_to)
+//! session), and every index entry gains the checksum of its
+//! **uncompressed** payload (`raw_checksum` — the fingerprint chain
+//! input, so an appender can extend the content fingerprint without
+//! re-reading old payloads) plus the generation that sealed it (`gen`).
+//! Readers derive "dirty bands since generation G" straight from the
+//! index. A generation footer always carries the codec fields too, and
+//! pre-generation files decode with `generation = 0` throughout
+//! (`raw_checksum` backfills from `checksum` when the chunk is stored
+//! raw). Old readers see revisions 5/6 as `UnsupportedVersion`.
 //!
 //! Failure taxonomy is typed ([`StoreError`]): a reader distinguishes
 //! "not a store at all", "store cut short" (e.g. an ingest that died
@@ -75,6 +88,10 @@ pub const VERSION_TILED: u64 = 2;
 pub const VERSION_CODEC: u64 = 3;
 /// Format version of the tiled layout with codec fields.
 pub const VERSION_TILED_CODEC: u64 = 4;
+/// Format version of the row-band layout with codec + generation fields.
+pub const VERSION_GEN: u64 = 5;
+/// Format version of the tiled layout with codec + generation fields.
+pub const VERSION_TILED_GEN: u64 = 6;
 /// Default row-band height for writers that don't specify one. (There
 /// is deliberately no tiled counterpart: a useful tile width tracks the
 /// planner's block width ψ, so every tiled writer must choose one.)
@@ -94,23 +111,44 @@ const ENTRY_WORDS_V2: usize = 8;
 const HEADER_CODEC_WORDS: usize = 1;
 /// Extra entry words in a codec revision (`codec` tag, `raw_len`).
 const ENTRY_CODEC_WORDS: usize = 2;
+/// Extra header words in a generation revision (the append generation).
+const HEADER_GEN_WORDS: usize = 1;
+/// Extra entry words in a generation revision (`raw_checksum`, `gen`).
+const ENTRY_GEN_WORDS: usize = 2;
 
-/// Per-version footer geometry: `(tiled, has_codec, header_words, entry_words)`.
-fn version_shape(version: u64) -> Option<(bool, bool, usize, usize)> {
+/// Per-version footer geometry:
+/// `(tiled, has_codec, has_gen, header_words, entry_words)`.
+fn version_shape(version: u64) -> Option<(bool, bool, bool, usize, usize)> {
     match version {
-        VERSION => Some((false, false, HEADER_WORDS_V1, ENTRY_WORDS_V1)),
-        VERSION_TILED => Some((true, false, HEADER_WORDS_V2, ENTRY_WORDS_V2)),
+        VERSION => Some((false, false, false, HEADER_WORDS_V1, ENTRY_WORDS_V1)),
+        VERSION_TILED => Some((true, false, false, HEADER_WORDS_V2, ENTRY_WORDS_V2)),
         VERSION_CODEC => Some((
             false,
             true,
+            false,
             HEADER_WORDS_V1 + HEADER_CODEC_WORDS,
             ENTRY_WORDS_V1 + ENTRY_CODEC_WORDS,
         )),
         VERSION_TILED_CODEC => Some((
             true,
             true,
+            false,
             HEADER_WORDS_V2 + HEADER_CODEC_WORDS,
             ENTRY_WORDS_V2 + ENTRY_CODEC_WORDS,
+        )),
+        VERSION_GEN => Some((
+            false,
+            true,
+            true,
+            HEADER_WORDS_V1 + HEADER_CODEC_WORDS + HEADER_GEN_WORDS,
+            ENTRY_WORDS_V1 + ENTRY_CODEC_WORDS + ENTRY_GEN_WORDS,
+        )),
+        VERSION_TILED_GEN => Some((
+            true,
+            true,
+            true,
+            HEADER_WORDS_V2 + HEADER_CODEC_WORDS + HEADER_GEN_WORDS,
+            ENTRY_WORDS_V2 + ENTRY_CODEC_WORDS + ENTRY_GEN_WORDS,
         )),
         _ => None,
     }
@@ -180,12 +218,15 @@ pub struct StoreHeader {
     /// still be [`Codec::None`] (incompressible payloads are stored
     /// raw); versions 1/2 are always `Codec::None`.
     pub codec: Codec,
+    /// Append generation: 0 for a freshly packed store, bumped by each
+    /// append session. Pre-generation footer revisions decode as 0.
+    pub generation: u64,
 }
 
 impl StoreHeader {
     /// Is this the tiled (LAMC3) geometry?
     pub fn is_tiled(&self) -> bool {
-        self.version == VERSION_TILED || self.version == VERSION_TILED_CODEC
+        matches!(self.version, VERSION_TILED | VERSION_TILED_CODEC | VERSION_TILED_GEN)
     }
 
     /// Row bands in the chunk grid.
@@ -231,6 +272,15 @@ pub struct ChunkMeta {
     pub codec: Codec,
     /// Uncompressed payload length; equals `len` when `codec == None`.
     pub raw_len: u64,
+    /// `checksum_bytes` of the **uncompressed** payload — the
+    /// fingerprint chain input. Equals `checksum` when the chunk is
+    /// stored raw; 0 ("unknown") when decoding a pre-generation footer
+    /// whose chunk is compressed.
+    pub raw_checksum: u64,
+    /// Append generation that sealed this chunk (0 in pre-generation
+    /// footers). A chunk is dirty relative to base generation G when
+    /// `gen > G`.
+    pub gen: u64,
 }
 
 /// Typed store failures. Returned inside `anyhow::Error` so callers can
@@ -324,11 +374,13 @@ fn word(bytes: &[u8], i: usize) -> u64 {
 /// emits the exact LAMC2 byte layout (row-band fields only); version 2
 /// adds `chunk_cols` to the header and `col_lo`/`cols` to each entry;
 /// versions 3/4 append the writer codec to the header and
-/// `codec`/`raw_len` to each entry. A `codec=none` writer uses
-/// version 1/2, so pre-codec files stay byte-stable.
+/// `codec`/`raw_len` to each entry; versions 5/6 additionally append
+/// the append generation to the header and `raw_checksum`/`gen` to
+/// each entry. A `codec=none` writer uses version 1/2, so pre-codec
+/// files stay byte-stable.
 pub fn encode_footer(header: &StoreHeader, index: &[ChunkMeta]) -> Vec<u8> {
     debug_assert_eq!(header.n_chunks, index.len());
-    let (tiled, has_codec, header_words, entry_words) =
+    let (tiled, has_codec, has_gen, header_words, entry_words) =
         version_shape(header.version).expect("writer uses a known footer version");
     let _ = tiled;
     debug_assert!(
@@ -336,6 +388,10 @@ pub fn encode_footer(header: &StoreHeader, index: &[ChunkMeta]) -> Vec<u8> {
             || (header.codec == Codec::None
                 && index.iter().all(|e| e.codec == Codec::None && e.raw_len == e.len)),
         "codec fields require a codec footer revision"
+    );
+    debug_assert!(
+        has_gen || (header.generation == 0 && index.iter().all(|e| e.gen == 0)),
+        "generation fields require a generation footer revision"
     );
     let mut out = Vec::with_capacity((header_words + entry_words * index.len()) * 8);
     push_u64(&mut out, header.version);
@@ -352,6 +408,9 @@ pub fn encode_footer(header: &StoreHeader, index: &[ChunkMeta]) -> Vec<u8> {
     if has_codec {
         push_u64(&mut out, header.codec.tag());
     }
+    if has_gen {
+        push_u64(&mut out, header.generation);
+    }
     for e in index {
         push_u64(&mut out, e.offset);
         push_u64(&mut out, e.len);
@@ -366,6 +425,10 @@ pub fn encode_footer(header: &StoreHeader, index: &[ChunkMeta]) -> Vec<u8> {
         if has_codec {
             push_u64(&mut out, e.codec.tag());
             push_u64(&mut out, e.raw_len);
+        }
+        if has_gen {
+            push_u64(&mut out, e.raw_checksum);
+            push_u64(&mut out, e.gen);
         }
     }
     out
@@ -385,7 +448,8 @@ pub fn decode_footer(
         return Err(corrupt(format!("footer body has {} bytes", bytes.len())));
     }
     let version = word(bytes, 0);
-    let Some((tiled, has_codec, header_words, entry_words)) = version_shape(version) else {
+    let Some((tiled, has_codec, has_gen, header_words, entry_words)) = version_shape(version)
+    else {
         return Err(StoreError::UnsupportedVersion { path: path.to_path_buf(), version });
     };
     if bytes.len() < header_words * 8 {
@@ -412,6 +476,7 @@ pub fn decode_footer(
     } else {
         Codec::None
     };
+    let generation = if has_gen { word(bytes, w + 4) } else { 0 };
 
     // Bound n_chunks by what the body could possibly hold before doing
     // size arithmetic with it (a crafted count must not overflow).
@@ -438,6 +503,7 @@ pub fn decode_footer(
         n_chunks,
         fingerprint,
         codec,
+        generation,
     };
     let n_col_bands = header.n_col_bands();
     // checked_mul: crafted dims must not overflow the grid arithmetic.
@@ -466,6 +532,8 @@ pub fn decode_footer(
                 checksum: word(bytes, base + 7),
                 codec: Codec::None,
                 raw_len: 0,
+                raw_checksum: 0,
+                gen: 0,
             }
         } else {
             ChunkMeta {
@@ -479,15 +547,39 @@ pub fn decode_footer(
                 checksum: word(bytes, base + 5),
                 codec: Codec::None,
                 raw_len: 0,
+                raw_checksum: 0,
+                gen: 0,
             }
         };
+        let gen_words = if has_gen { ENTRY_GEN_WORDS } else { 0 };
         if has_codec {
-            let cbase = base + entry_words - ENTRY_CODEC_WORDS;
+            let cbase = base + entry_words - gen_words - ENTRY_CODEC_WORDS;
             e.codec = Codec::from_tag(word(bytes, cbase))
                 .ok_or_else(|| corrupt(format!("chunk {i}: unknown codec tag {}", word(bytes, cbase))))?;
             e.raw_len = word(bytes, cbase + 1);
         } else {
             e.raw_len = e.len;
+        }
+        if has_gen {
+            let gbase = base + entry_words - ENTRY_GEN_WORDS;
+            e.raw_checksum = word(bytes, gbase);
+            e.gen = word(bytes, gbase + 1);
+            if e.gen > generation {
+                return Err(corrupt(format!(
+                    "chunk {i} sealed at generation {} but header is at {generation}",
+                    e.gen
+                )));
+            }
+            if e.codec == Codec::None && e.raw_checksum != e.checksum {
+                return Err(corrupt(format!(
+                    "chunk {i} stored raw but raw_checksum {:#x} != checksum {:#x}",
+                    e.raw_checksum, e.checksum
+                )));
+            }
+        } else if e.codec == Codec::None {
+            // Raw chunks store exactly their uncompressed bytes, so the
+            // stored checksum doubles as the fingerprint chain input.
+            e.raw_checksum = e.checksum;
         }
         if e.codec == Codec::None && e.raw_len != e.len {
             return Err(corrupt(format!(
@@ -602,6 +694,8 @@ mod tests {
                 checksum: 0xABC0 + i as u64,
                 codec: Codec::None,
                 raw_len: 40,
+                raw_checksum: 0xABC0 + i as u64,
+                gen: 0,
             });
             offset += 40;
         }
@@ -622,6 +716,7 @@ mod tests {
                 index.iter().map(|e| e.checksum),
             ),
             codec: Codec::None,
+            generation: 0,
         };
         (h, index)
     }
@@ -649,6 +744,8 @@ mod tests {
                 checksum: 0xF00 + i as u64,
                 codec: Codec::None,
                 raw_len: nnz * 4,
+                raw_checksum: 0xF00 + i as u64,
+                gen: 0,
             });
             offset += nnz * 4;
         }
@@ -669,6 +766,7 @@ mod tests {
                 index.iter().map(|e| e.checksum),
             ),
             codec: Codec::None,
+            generation: 0,
         };
         (h, index)
     }
@@ -776,8 +874,23 @@ mod tests {
         let shrink = index[1].len / 2;
         index[1].codec = Codec::ShuffleLz;
         index[1].len -= shrink;
+        // Pre-generation footers don't carry raw checksums for
+        // compressed chunks; decode reports "unknown" (0).
+        index[1].raw_checksum = 0;
         for e in index.iter_mut().skip(2) {
             e.offset -= shrink;
+        }
+        (h, index)
+    }
+
+    /// Rewrite a codec-revision header+index into its generation
+    /// revision, as a two-append store (generations 0, 1, 2).
+    fn with_gen(mut h: StoreHeader, mut index: Vec<ChunkMeta>) -> (StoreHeader, Vec<ChunkMeta>) {
+        h.version = if h.is_tiled() { VERSION_TILED_GEN } else { VERSION_GEN };
+        h.generation = 2;
+        for (i, e) in index.iter_mut().enumerate() {
+            e.raw_checksum = if e.codec == Codec::None { e.checksum } else { 0xBEEF + i as u64 };
+            e.gen = (i as u64).min(2);
         }
         (h, index)
     }
@@ -816,6 +929,57 @@ mod tests {
         let bytes = encode_footer(&h, &index);
         let err = decode_footer(&bytes, payload_end(&index), Path::new("/t")).unwrap_err();
         assert!(matches!(err, StoreError::Corrupt { .. }), "{err}");
+    }
+
+    #[test]
+    fn generation_footer_round_trips_both_geometries() {
+        for (h0, i0) in [header(3), tiled_header()] {
+            let (hc, ic) = with_codec(h0, i0);
+            let (h, index) = with_gen(hc, ic);
+            let bytes = encode_footer(&h, &index);
+            let (h2, index2) = decode_footer(&bytes, payload_end(&index), Path::new("/t")).unwrap();
+            assert_eq!(h, h2);
+            assert_eq!(index, index2);
+            assert_eq!(h2.generation, 2);
+            assert_eq!(index2[0].gen, 0);
+            assert_eq!(index2[2].gen, 2);
+            assert_eq!(index2[0].raw_checksum, index2[0].checksum, "raw chunk");
+            assert_eq!(index2[1].raw_checksum, 0xBEEF + 1, "compressed chunk keeps raw checksum");
+        }
+        let (h, _) = with_gen(with_codec(tiled_header().0, tiled_header().1).0, vec![]);
+        assert!(h.is_tiled(), "version 6 is still the tiled geometry");
+    }
+
+    #[test]
+    fn generation_footer_rejects_entry_from_the_future() {
+        let (hc, ic) = with_codec(header(3).0, header(3).1);
+        let (h, mut index) = with_gen(hc, ic);
+        index[0].gen = h.generation + 1;
+        let bytes = encode_footer(&h, &index);
+        let err = decode_footer(&bytes, payload_end(&index), Path::new("/t")).unwrap_err();
+        assert!(matches!(err, StoreError::Corrupt { .. }), "{err}");
+        assert!(format!("{err}").contains("generation"), "{err}");
+    }
+
+    #[test]
+    fn generation_footer_rejects_raw_checksum_mismatch_on_raw_chunk() {
+        let (hc, ic) = with_codec(header(3).0, header(3).1);
+        let (h, mut index) = with_gen(hc, ic);
+        index[0].raw_checksum ^= 1; // raw chunk: must equal stored checksum
+        let bytes = encode_footer(&h, &index);
+        let err = decode_footer(&bytes, payload_end(&index), Path::new("/t")).unwrap_err();
+        assert!(matches!(err, StoreError::Corrupt { .. }), "{err}");
+    }
+
+    #[test]
+    fn pre_generation_footers_decode_with_generation_zero() {
+        let (h, index) = with_codec(header(3).0, header(3).1);
+        let bytes = encode_footer(&h, &index);
+        let (h2, index2) = decode_footer(&bytes, payload_end(&index), Path::new("/t")).unwrap();
+        assert_eq!(h2.generation, 0);
+        assert!(index2.iter().all(|e| e.gen == 0));
+        assert_eq!(index2[0].raw_checksum, index2[0].checksum);
+        assert_eq!(index2[1].raw_checksum, 0, "compressed pre-gen chunk: unknown");
     }
 
     #[test]

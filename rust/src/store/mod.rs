@@ -68,7 +68,9 @@ pub use chunk::{
     DEFAULT_PREFETCH_BYTES,
 };
 pub use codec::Codec;
-pub use format::{checksum_bytes, Layout, StoreError, StoreHeader, DEFAULT_CHUNK_ROWS};
+pub use format::{
+    checksum_bytes, ChunkMeta, Layout, StoreError, StoreHeader, DEFAULT_CHUNK_ROWS,
+};
 pub use manifest::{shard_store, ShardEntry, ShardManifest};
 pub use repack::{repack, repack_reader, RepackOptions};
 pub use view::{MatrixRef, MatrixView};

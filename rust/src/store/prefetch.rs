@@ -304,6 +304,7 @@ mod tests {
             n_chunks: n_row_bands * n_col_bands,
             fingerprint: 0,
             codec: crate::store::Codec::None,
+            generation: 0,
         }
     }
 

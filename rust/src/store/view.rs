@@ -84,6 +84,20 @@ impl MatrixRef {
     pub fn location(&self) -> &'static str {
         self.view().location()
     }
+
+    /// Append generation of the backing store (0 for in-memory
+    /// matrices and never-appended stores).
+    pub fn generation(&self) -> u64 {
+        self.view().generation()
+    }
+
+    /// Row ranges changed since `generation` — see
+    /// [`StoreReader::dirty_rows_since`]. Always empty for in-memory
+    /// matrices (they have no append history; incremental callers fall
+    /// back to fingerprint equality there).
+    pub fn dirty_rows_since(&self, generation: u64) -> Vec<(usize, usize)> {
+        self.view().dirty_rows_since(generation)
+    }
 }
 
 impl From<Matrix> for MatrixRef {
@@ -146,6 +160,24 @@ impl<'a> MatrixView<'a> {
         match self {
             MatrixView::Mem(_) => "memory",
             MatrixView::Stored(_) => "store",
+        }
+    }
+
+    /// Append generation of the backing store (0 for in-memory
+    /// matrices and never-appended stores).
+    pub fn generation(&self) -> u64 {
+        match self {
+            MatrixView::Mem(_) => 0,
+            MatrixView::Stored(r) => r.generation(),
+        }
+    }
+
+    /// Row ranges changed since `generation` — see
+    /// [`StoreReader::dirty_rows_since`]. Empty for in-memory matrices.
+    pub fn dirty_rows_since(&self, generation: u64) -> Vec<(usize, usize)> {
+        match self {
+            MatrixView::Mem(_) => Vec::new(),
+            MatrixView::Stored(r) => r.dirty_rows_since(generation),
         }
     }
 

@@ -91,6 +91,12 @@ pub enum Event {
     /// Synthetic: `n` records were evicted from the bounded ring before
     /// the reader's cursor reached them.
     Dropped { n: u64 },
+    /// `rows` new rows were sealed onto a served store, bumping its
+    /// append generation to `generation` (matrix feed journals only).
+    MatrixAppended { rows: u64, generation: u64 },
+    /// Incremental job `job` published fresh labels (`k` co-clusters)
+    /// covering the matrix at append generation `generation`.
+    LabelsUpdated { job: u64, k: u64, generation: u64 },
 }
 
 /// Flat field value — the single representation behind both the
@@ -119,6 +125,8 @@ impl Event {
             Event::WorkerRetry { .. } => "WorkerRetry",
             Event::WorkerLost { .. } => "WorkerLost",
             Event::Dropped { .. } => "Dropped",
+            Event::MatrixAppended { .. } => "MatrixAppended",
+            Event::LabelsUpdated { .. } => "LabelsUpdated",
         }
     }
 
@@ -172,6 +180,14 @@ impl Event {
             }
             Event::WorkerLost { worker } => vec![("worker", Field::U(*worker))],
             Event::Dropped { n } => vec![("n", Field::U(*n))],
+            Event::MatrixAppended { rows, generation } => {
+                vec![("rows", Field::U(*rows)), ("generation", Field::U(*generation))]
+            }
+            Event::LabelsUpdated { job, k, generation } => vec![
+                ("job", Field::U(*job)),
+                ("k", Field::U(*k)),
+                ("generation", Field::U(*generation)),
+            ],
         }
     }
 
@@ -223,6 +239,14 @@ impl Event {
             "WorkerRetry" => Event::WorkerRetry { job: u("job")?, attempt: u("attempt")? },
             "WorkerLost" => Event::WorkerLost { worker: u("worker")? },
             "Dropped" => Event::Dropped { n: u("n")? },
+            "MatrixAppended" => {
+                Event::MatrixAppended { rows: u("rows")?, generation: u("generation")? }
+            }
+            "LabelsUpdated" => Event::LabelsUpdated {
+                job: u("job")?,
+                k: u("k")?,
+                generation: u("generation")?,
+            },
             other => bail!("unknown event kind '{other}'"),
         })
     }
@@ -699,6 +723,8 @@ mod tests {
             Event::BlockScattered { job: 2, worker: 1, band: 0 },
             Event::WorkerLost { worker: 1 },
             Event::WorkerRetry { job: 2, attempt: 1 },
+            Event::MatrixAppended { rows: 40, generation: 2 },
+            Event::LabelsUpdated { job: 5, k: 3, generation: 2 },
             Event::JobFailed { error: "worker 1 lost: connection reset".into() },
             Event::JobDone,
         ]

@@ -4,13 +4,15 @@
 //! `ServiceClient`s: submission, polling, result retrieval, the result
 //! cache (an identical second submission must be a hit with identical
 //! labels and no extra pipeline work), concurrent clients with
-//! independent seeds, and protocol-level error handling.
+//! independent seeds, protocol-level error handling, and the streaming
+//! append path (`APPEND` → incremental job → `SUBSCRIBE` feed).
 
 use std::time::Duration;
 
 use lamc::data::synthetic::{planted_dense, PlantedConfig};
 use lamc::pipeline::Lamc;
 use lamc::service::{JobSpec, ServiceClient, ServiceConfig, ServiceManager, ServiceServer};
+use lamc::store::MatrixRef;
 
 fn planted(seed: u64) -> lamc::matrix::Matrix {
     planted_dense(&PlantedConfig {
@@ -157,9 +159,14 @@ fn protocol_errors_are_reported_not_fatal() {
         .to_string();
     assert!(err.contains("no matrix named"), "{err}");
 
-    // Unknown job id → ERR.
-    assert!(client.status(999).is_err());
-    assert!(client.result(999).is_err());
+    // Unknown job id → the typed `no-such-job` error, same text from
+    // every job verb, with the offending id embedded.
+    let err = client.status(999).unwrap_err().to_string();
+    assert!(err.contains("no-such-job id=999"), "typed STATUS error: {err}");
+    let err = client.result(999).unwrap_err().to_string();
+    assert!(err.contains("no-such-job id=999"), "typed RESULT error: {err}");
+    let err = client.spans(999).unwrap_err().to_string();
+    assert!(err.contains("no-such-job id=999"), "typed SPANS error: {err}");
 
     // LOAD a small dataset over the wire, then submit against it.
     let (rows, cols) = client.load_dataset("tiny", "classic4", Some(300), 5).unwrap();
@@ -174,4 +181,71 @@ fn protocol_errors_are_reported_not_fatal() {
     client.shutdown().unwrap();
     server.join();
     manager.shutdown();
+}
+
+#[test]
+fn append_triggers_incremental_job_and_feed_events() {
+    let dir = std::env::temp_dir().join("lamc_integration_service").join("append_flow");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let matrix = planted(11);
+    let cols = matrix.cols();
+    let store = dir.join("planted.lamc2");
+    lamc::store::pack_matrix(&matrix, &store, 32).unwrap();
+
+    let manager = ServiceManager::new(ServiceConfig {
+        runners: 1,
+        queue_capacity: 16,
+        cache_capacity_bytes: 16 << 20,
+        ..Default::default()
+    });
+    manager.register_store("grow", &store).unwrap();
+    let server = ServiceServer::spawn("127.0.0.1:0", manager.clone()).expect("bind ephemeral port");
+    let mut client = ServiceClient::connect(server.addr()).unwrap();
+
+    // Negotiate the unified framing; SUBSCRIBE ships only on it.
+    client.hello().unwrap();
+    assert!(client.is_binary(), "unified framing negotiated");
+
+    let spec = JobSpec { matrix: "grow".into(), k: 3, seed: 7, ..Default::default() };
+    let id = client.submit(&spec).unwrap();
+    let first = client.wait(id, WAIT).unwrap();
+    assert_eq!(first.row_labels.len(), 96);
+
+    // The feed so far holds the first job's label update.
+    let (events, cursor) = client.subscribe("grow", None).unwrap();
+    assert!(events.iter().any(|e| e.contains("kind=LabelsUpdated")), "{events:?}");
+    assert!(cursor.is_some(), "non-empty page advances the cursor");
+
+    // Append a batch of fresh rows over the wire; the server grows the
+    // store in place and queues an incremental re-clustering job from
+    // the retained basis.
+    let mut rng = lamc::rng::Xoshiro256::seed_from(0xA11D);
+    let add = 8usize;
+    let fresh: Vec<f32> = (0..add * cols).map(|_| rng.next_f32() - 0.5).collect();
+    let reply = client.append("grow", add, cols, &fresh).unwrap();
+    assert_eq!(reply.total_rows, 96 + add);
+    let job = reply.job.expect("incremental job queued (basis retained)");
+    let inc = client.wait(job, WAIT).unwrap();
+    assert!(!inc.cached, "append invalidates the cache via the fingerprint swap");
+    assert_eq!(inc.row_labels.len(), 96 + add);
+
+    // The feed streamed the append and the fresh labels past our cursor.
+    let (events, _) = client.subscribe("grow", cursor).unwrap();
+    assert!(events.iter().any(|e| e.contains("kind=MatrixAppended")), "{events:?}");
+    assert!(events.iter().any(|e| e.contains("kind=LabelsUpdated")), "{events:?}");
+
+    // Incremental labels are byte-identical to a from-scratch run over
+    // the grown store.
+    let grown = MatrixRef::open_store(&store).unwrap();
+    assert_eq!(grown.rows(), 96 + add);
+    let local = Lamc::new(spec.lamc_config().unwrap()).run(&grown).unwrap();
+    assert_eq!(local.row_labels, inc.row_labels);
+    assert_eq!(local.col_labels, inc.col_labels);
+    assert_eq!(local.k, inc.k);
+
+    client.shutdown().unwrap();
+    server.join();
+    manager.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
 }

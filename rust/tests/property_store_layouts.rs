@@ -23,6 +23,11 @@
 //! 5. **Advisory observability.** Attaching a lifecycle-event journal
 //!    to a run — even one small enough to overflow and drop events —
 //!    changes nothing about the labels, `k`, or consensus ordering.
+//! 6. **Byte-identical incremental re-clustering.** Appending row
+//!    batches to a store and running `Lamc::run_incremental` against
+//!    the retained basis yields the same labels as a from-scratch run
+//!    on the concatenated matrix — both formats, both codecs — and a
+//!    crash-torn append surfaces as a typed `StoreError` at open.
 //!
 //! Seeded and reproducible via `testkit` (`LAMC_PROP_SEED` /
 //! `LAMC_PROP_CASES` env overrides).
@@ -42,7 +47,7 @@ use lamc::service::{
 };
 use lamc::store::{
     pack_matrix, pack_matrix_tiled, pack_matrix_tiled_with_codec, pack_matrix_with_codec,
-    shard_store, Codec, MatrixRef, ShardManifest, StoreError, StoreReader,
+    shard_store, ChunkWriter, Codec, MatrixRef, ShardManifest, StoreError, StoreReader,
 };
 use lamc::testkit;
 
@@ -358,6 +363,195 @@ fn column_heavy_planner_queries_read_fewer_bytes_tiled() {
         tiled.bytes_read(),
         band.bytes_read()
     );
+}
+
+// ---- append + incremental re-clustering equivalence --------------------
+
+/// One generated append case: base shape, store geometry, and how many
+/// row batches get appended.
+#[derive(Debug)]
+struct AppendCase {
+    idx: usize,
+    seed: u64,
+    rows: usize,
+    cols: usize,
+    tiled: bool,
+    codec: Codec,
+    batches: usize,
+}
+
+#[test]
+fn append_then_incremental_recluster_is_byte_identical() {
+    // The sweep must cover every (format, codec) cell at least once;
+    // with 4 cells, 8 cases is the floor.
+    let cases = testkit::default_cases().clamp(8, 12);
+    let counter = std::cell::Cell::new(0usize);
+    testkit::check(
+        "append K batches + run_incremental == from-scratch run on the grown matrix",
+        cases,
+        |rng| {
+            let idx = counter.get();
+            counter.set(idx + 1);
+            AppendCase {
+                idx,
+                seed: rng.next_u64(),
+                rows: 48 + rng.next_below(40),
+                cols: 40 + rng.next_below(24),
+                // Deterministic cell walk: every format x codec pair is
+                // exercised regardless of the seeded RNG stream.
+                tiled: idx % 2 == 1,
+                codec: if (idx / 2) % 2 == 0 { Codec::None } else { Codec::ShuffleLz },
+                batches: 1 + rng.next_below(3),
+            }
+        },
+        |case| {
+            let dir = tmp_dir(&format!("append_equiv_{}", case.idx));
+            let mut rng = Xoshiro256::seed_from(case.seed);
+            let mut data: Vec<f32> =
+                (0..case.rows * case.cols).map(|_| rng.next_f32() - 0.5).collect();
+            let base =
+                Matrix::Dense(DenseMatrix::from_vec(case.rows, case.cols, data.clone()));
+            let path = dir.join(if case.tiled { "m.lamc3" } else { "m.lamc2" });
+            if case.tiled {
+                pack_matrix_tiled_with_codec(&base, &path, 16, 16, case.codec)
+            } else {
+                pack_matrix_with_codec(&base, &path, 16, case.codec)
+            }
+            .map_err(|e| format!("pack: {e:#}"))?;
+
+            let mut config = LamcConfig { k: 3, seed: 0x1A3C ^ case.seed, ..Default::default() };
+            config.planner.candidate_sizes = vec![32, 48];
+            config.planner.max_samplings = 5;
+            let lamc = Lamc::new(config);
+            let opts = lamc.options();
+
+            // Seed the basis with a tracked run on the original store.
+            let stored = MatrixRef::open_store(&path).map_err(|e| format!("open: {e:#}"))?;
+            let base_generation = stored.generation();
+            let (_, mut basis) =
+                lamc.run_tracked(&stored, &opts).map_err(|e| format!("tracked run: {e:#}"))?;
+
+            let mut total_rows = case.rows;
+            for b in 0..case.batches {
+                // Grow the store by one sealed batch of fresh rows.
+                let add = 1 + rng.next_below(12);
+                let fresh: Vec<f32> =
+                    (0..add * case.cols).map(|_| rng.next_f32() - 0.5).collect();
+                let mut w =
+                    ChunkWriter::append_to(&path).map_err(|e| format!("append_to: {e:#}"))?;
+                for r in 0..add {
+                    w.append_dense_row(&fresh[r * case.cols..(r + 1) * case.cols])
+                        .map_err(|e| format!("append row: {e:#}"))?;
+                }
+                w.finish().map_err(|e| format!("finish append: {e:#}"))?;
+                data.extend_from_slice(&fresh);
+                total_rows += add;
+
+                let stored =
+                    MatrixRef::open_store(&path).map_err(|e| format!("reopen: {e:#}"))?;
+                if stored.rows() != total_rows {
+                    return Err(format!(
+                        "batch {b}: store has {} rows, want {total_rows}",
+                        stored.rows()
+                    ));
+                }
+                // Dirty tracking attributes exactly the appended tail,
+                // extended back to the last band boundary when the first
+                // append re-sealed a partial band (chunk_rows is 16).
+                let dirty_lo = case.rows - case.rows % 16;
+                let dirty = stored.dirty_rows_since(base_generation);
+                if dirty != vec![(dirty_lo, total_rows)] {
+                    return Err(format!(
+                        "batch {b}: dirty rows {dirty:?}, want [({dirty_lo}, {total_rows})]"
+                    ));
+                }
+
+                // From-scratch reference on the concatenated matrix.
+                let grown = Matrix::Dense(DenseMatrix::from_vec(
+                    total_rows,
+                    case.cols,
+                    data.clone(),
+                ));
+                let scratch =
+                    lamc.run(&grown).map_err(|e| format!("from-scratch run: {e:#}"))?;
+                let (inc, next) = lamc
+                    .run_incremental(&stored, &opts, &basis)
+                    .map_err(|e| format!("incremental run: {e:#}"))?;
+                basis = next;
+
+                if inc.row_labels != scratch.row_labels {
+                    return Err(format!("batch {b}: row labels diverge from from-scratch run"));
+                }
+                if inc.col_labels != scratch.col_labels {
+                    return Err(format!("batch {b}: col labels diverge from from-scratch run"));
+                }
+                if inc.k != scratch.k {
+                    return Err(format!("batch {b}: k {} vs from-scratch {}", inc.k, scratch.k));
+                }
+                if inc.coclusters != scratch.coclusters {
+                    return Err(format!("batch {b}: consensus co-cluster ordering diverges"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn append_crash_truncation_is_typed_never_a_panic() {
+    let dir = tmp_dir("append_crash");
+    let mut rng = Xoshiro256::seed_from(21);
+    let matrix = Matrix::Dense(DenseMatrix::randn(40, 12, &mut rng));
+
+    for fmt in ["lamc2", "lamc3"] {
+        let clean = dir.join(format!("clean.{fmt}"));
+        if fmt == "lamc2" {
+            pack_matrix(&matrix, &clean, 8).unwrap();
+        } else {
+            pack_matrix_tiled(&matrix, &clean, 8, 5).unwrap();
+        }
+        let clean_gen = StoreReader::open(&clean).unwrap().generation();
+
+        // A completed append: rows visible, generation bumped by one,
+        // dirty tracking pinned to exactly the appended band.
+        let grown = dir.join(format!("grown.{fmt}"));
+        std::fs::copy(&clean, &grown).unwrap();
+        let mut w = ChunkWriter::append_to(&grown).unwrap();
+        for r in 0..10 {
+            let row: Vec<f32> = (0..12).map(|c| (r * 12 + c) as f32 * 0.25).collect();
+            w.append_dense_row(&row).unwrap();
+        }
+        w.finish().unwrap();
+        let reader = StoreReader::open(&grown).unwrap();
+        assert_eq!(reader.rows(), 50, "{fmt}: appended rows visible");
+        assert_eq!(reader.generation(), clean_gen + 1, "{fmt}: generation bumped");
+        assert_eq!(
+            reader.dirty_rows_since(clean_gen),
+            vec![(40, 50)],
+            "{fmt}: dirty rows are exactly the appended tail"
+        );
+        assert!(reader.verify().is_ok(), "{fmt}: grown store verifies");
+        drop(reader);
+
+        // A crash-torn append: the rewritten trailer is cut off at
+        // several depths. Every prefix must fail *typed* at open or
+        // verify — never a panic, never silently serving partial rows.
+        for cut in [1usize, 9, 25, 41] {
+            let p = damaged(&grown, &format!("cut{cut}.{fmt}"), |b| {
+                let keep = b.len() - cut;
+                b.truncate(keep);
+            });
+            match probe(&p) {
+                Ok(()) => panic!("{fmt}: store cut {cut} bytes short still verifies"),
+                Err("untyped") => panic!("{fmt}: cut {cut} produced an untyped error"),
+                Err(_) => {}
+            }
+            assert!(
+                !run_inspect_verify(&p).success(),
+                "{fmt}: inspect --verify passes a store cut {cut} bytes short"
+            );
+        }
+    }
 }
 
 // ---- corruption-injection sweep ---------------------------------------
